@@ -1,0 +1,47 @@
+//! Scalability sweep (paper §IV-E, Fig. 17 in miniature): serve the
+//! RMAT-20K twin with 1–6 homogeneous fog nodes and watch the latency
+//! curve flatten as resources become ample.
+//!
+//!     cargo run --release --example scalability_sweep
+
+use fograph::fog::Cluster;
+use fograph::graph::datasets;
+use fograph::net::NetKind;
+use fograph::profile::PerfModel;
+use fograph::runtime::{Engine, EngineKind};
+use fograph::serving::{serve, Placement, ServeOpts};
+
+fn main() {
+    let data_dir = std::path::Path::new("data");
+    let artifacts = std::path::Path::new("artifacts");
+    println!("== scalability: RMAT-20K across growing type-B clusters ==\n");
+    let g = datasets::load_or_generate(data_dir, "rmat20k");
+    let spec = datasets::spec_by_name("rmat20k").unwrap();
+    let mut engine =
+        Engine::new(EngineKind::Reference, artifacts).unwrap();
+
+    println!("fogs   latency    collect    exec      sync      throughput");
+    let mut one_fog = 0.0;
+    for n in [1usize, 2, 3, 4, 6] {
+        let cluster = Cluster::uniform_b(n, NetKind::Wifi);
+        let placement = if n == 1 {
+            Placement::SingleNode(0)
+        } else {
+            Placement::Iep
+        };
+        let opts = ServeOpts::new("gcn", placement,
+                                  ServeOpts::co_codec(&g));
+        let omegas = vec![PerfModel::uncalibrated(); n];
+        let r = serve(&g, &spec, &cluster, &opts, &omegas, &mut engine)
+            .expect("serve");
+        if n == 1 {
+            one_fog = r.total_s;
+        }
+        println!(
+            "  {n}    {:.4} s   {:.4} s   {:.4} s  {:.4} s   {:.2} inf/s \
+             ({:.2}x vs 1 fog)",
+            r.total_s, r.collection_s, r.execution_s, r.sync_s,
+            r.throughput, one_fog / r.total_s
+        );
+    }
+}

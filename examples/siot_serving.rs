@@ -1,0 +1,91 @@
+//! Cloud vs fog vs Fograph on the SIoT social-IoT twin (the paper's main
+//! comparison, Fig. 11/12 for one cell of the grid), serving a stream of
+//! classification queries and reporting latency, throughput and accuracy.
+//!
+//!     cargo run --release --example siot_serving [-- --net 4g]
+
+use fograph::compress::Codec;
+use fograph::fog::Cluster;
+use fograph::graph::datasets;
+use fograph::net::NetKind;
+use fograph::profile::PerfModel;
+use fograph::runtime::{Engine, EngineKind};
+use fograph::serving::accuracy::accuracy;
+use fograph::serving::{serve, Placement, ServeOpts};
+use fograph::util::cli::Args;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv, &[]);
+    let net = NetKind::parse(args.get_or("net", "4g")).expect("bad --net");
+    let data_dir = std::path::Path::new("data");
+    let artifacts = std::path::Path::new("artifacts");
+
+    println!("== SIoT service classification: cloud vs fog vs Fograph \
+              ({}) ==\n", net.name());
+    let g = datasets::load_or_generate(data_dir, "siot");
+    let spec = datasets::SIOT;
+    let mut engine = Engine::new(EngineKind::Pjrt, artifacts)
+        .unwrap_or_else(|e| {
+            println!("(PJRT unavailable: {e}; using reference engine)");
+            Engine::new(EngineKind::Reference, artifacts).unwrap()
+        });
+
+    let systems: Vec<(&str, Cluster, ServeOpts)> = vec![
+        (
+            "cloud (V100 behind WAN)",
+            Cluster::cloud(net),
+            ServeOpts {
+                wan: true,
+                keep_outputs: true,
+                ..ServeOpts::new("gcn", Placement::SingleNode(0),
+                                 Codec::None)
+            },
+        ),
+        (
+            "straw-man fog (6 nodes)",
+            Cluster::testbed(net),
+            ServeOpts {
+                keep_outputs: true,
+                ..ServeOpts::new("gcn", Placement::MetisRandom(1),
+                                 Codec::None)
+            },
+        ),
+        (
+            "Fograph (IEP + CO)",
+            Cluster::testbed(net),
+            ServeOpts {
+                keep_outputs: true,
+                ..ServeOpts::new("gcn", Placement::Iep,
+                                 ServeOpts::co_codec(&g))
+            },
+        ),
+    ];
+
+    let labels = g.labels.clone().expect("labels");
+    let mut cloud_latency = 0.0;
+    for (name, cluster, opts) in systems {
+        let omegas = vec![PerfModel::uncalibrated(); cluster.len()];
+        let r = serve(&g, &spec, &cluster, &opts, &omegas, &mut engine)
+            .expect("serving failed");
+        if cloud_latency == 0.0 {
+            cloud_latency = r.total_s;
+        }
+        let acc = accuracy(r.outputs.as_ref().unwrap(), r.out_dim, &labels);
+        println!("{name}");
+        println!(
+            "  latency {:.4} s ({:.2}x vs cloud)   throughput {:.2} inf/s   \
+             accuracy {:.2}%",
+            r.total_s,
+            cloud_latency / r.total_s,
+            r.throughput,
+            acc * 100.0
+        );
+        println!(
+            "  breakdown: collect {:.4} | exec {:.4} | sync {:.4} | \
+             wire {:.2} MB\n",
+            r.collection_s, r.execution_s, r.sync_s,
+            r.wire_bytes as f64 / 1e6
+        );
+    }
+}

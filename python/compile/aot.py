@@ -1,0 +1,125 @@
+"""AOT lowering: every (model, dataset, bucket, layer) -> HLO text artifact.
+
+HLO *text* (not `.serialize()`) is the interchange format: the `xla` crate's
+xla_extension 0.5.1 rejects jax>=0.5 protos (64-bit instruction ids); the
+text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Outputs under --out-dir (default ../artifacts):
+    <name>.hlo.txt          per-layer HLO modules
+    manifest.json           index the Rust runtime loads
+
+Input order of every lowered module = params ++ data (see models/common.py).
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+
+from . import specs
+from .models import REGISTRY
+from .models.common import shape_structs
+
+
+def to_hlo_text(lowered) -> str:
+    from jax._src.lib import xla_client as xc
+
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_layer(ld) -> str:
+    args = shape_structs(ld.param_spec) + shape_structs(ld.data_spec)
+    # keep_unused: every module keeps the full calling convention even when
+    # a model ignores an input (e.g. GAT's inv_deg), so the Rust runtime
+    # can feed all artifacts identically.
+    return to_hlo_text(jax.jit(ld.fn, keep_unused=True).lower(*args))
+
+
+def artifact_name(model: str, dataset: str, frac: int, layer: int) -> str:
+    return f"{model}_{dataset}_f{frac}_l{layer}"
+
+
+def build_all(out_dir: str, only: str | None = None,
+              verbose: bool = True) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"artifacts": [], "format": 1}
+    for model_name, ds_name in specs.PAIRS:
+        if only and only not in (model_name, ds_name,
+                                 f"{model_name}:{ds_name}"):
+            continue
+        ds = specs.DATASETS[ds_name]
+        ms = specs.MODELS[model_name]
+        mod = REGISTRY[model_name]
+        f_in = ds.input_dim
+        classes = max(ds.classes, 1)
+        for frac, v_max, e_max, l_max in specs.buckets_for(ds):
+            lds = mod.layers(f_in, ms.hidden, classes, v_max, e_max,
+                             num_layers=ms.layers, use_kernels=True,
+                             l=l_max)
+            for ld in lds:
+                name = artifact_name(model_name, ds_name, frac, ld.index)
+                path = os.path.join(out_dir, name + ".hlo.txt")
+                text = lower_layer(ld)
+                with open(path, "w") as f:
+                    f.write(text)
+                entry = {
+                    "name": name,
+                    "path": name + ".hlo.txt",
+                    "model": model_name,
+                    "dataset": ds_name,
+                    "frac": frac,
+                    "layer": ld.index,
+                    "num_layers": ms.layers,
+                    "v_max": v_max,
+                    "e_max": e_max,
+                    "l_max": l_max,
+                    "out_dim": ld.out_dim,
+                    "params": [[t.name, list(t.shape), t.dtype]
+                               for t in ld.param_spec],
+                    "data": [[t.name, list(t.shape), t.dtype]
+                             for t in ld.data_spec],
+                    "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+                }
+                manifest["artifacts"].append(entry)
+                if verbose:
+                    print(f"  lowered {name}  (V={v_max} E={e_max} "
+                          f"{len(text)//1024} KiB)", flush=True)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join(
+        os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--only", default=None,
+                    help="restrict to a model, dataset, or model:dataset")
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args()
+    manifest = build_all(args.out_dir, args.only, verbose=not args.quiet)
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    # Merge with an existing manifest when --only rebuilt a subset.
+    if args.only and os.path.exists(mpath):
+        with open(mpath) as f:
+            old = json.load(f)
+        keep = [a for a in old.get("artifacts", [])
+                if a["name"] not in {x["name"] for x in manifest["artifacts"]}]
+        manifest["artifacts"] = keep + manifest["artifacts"]
+    manifest["artifacts"].sort(key=lambda a: a["name"])
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(manifest['artifacts'])} artifacts + manifest to "
+          f"{os.path.abspath(args.out_dir)}")
+
+
+if __name__ == "__main__":
+    main()

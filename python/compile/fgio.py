@@ -1,0 +1,177 @@
+"""Binary interchange formats shared with the Rust side.
+
+.fgr — graph container (written by `repro dataset`, read here for training):
+    magic  b"FGR1"
+    u32    num_vertices V
+    u64    num_edges    E           (directed edge count, CSR)
+    u32    feature_dim  F
+    u32    num_classes  C           (0 => regression targets)
+    u32    duration     T           (timesteps per feature; 1 for static)
+    u32    flags        bit0: has labels, bit1: has coords, bit2: has targets
+    u64[V+1]  indptr    (CSR row pointers, out-edges)
+    u32[E]    indices   (CSR column indices)
+    f32[V*F*T] features (vertex-major, then feature, then time)
+    i32[V]    labels    (if flag bit0)
+    f32[V*2]  coords    (if flag bit1)
+    f32[V*T_out]  targets (if flag bit2; T_out stored as u32 before data)
+
+.fgw — named tensor bundle (weights; written here, read by rust/runtime):
+    magic  b"FGW1"
+    u32    n_tensors
+    per tensor:
+      u16   name_len, name (utf-8)
+      u8    dtype (0 = f32, 1 = i32)
+      u8    ndim
+      u64[ndim] dims
+      data  (little-endian, contiguous)
+
+All integers little-endian.
+"""
+
+from __future__ import annotations
+
+import struct
+from dataclasses import dataclass, field
+
+import numpy as np
+
+FGR_MAGIC = b"FGR1"
+FGW_MAGIC = b"FGW1"
+
+
+@dataclass
+class Graph:
+    """A loaded .fgr graph."""
+
+    indptr: np.ndarray  # u64 [V+1]
+    indices: np.ndarray  # u32 [E]
+    features: np.ndarray  # f32 [V, F] or [V, F, T]
+    labels: np.ndarray | None = None  # i32 [V]
+    coords: np.ndarray | None = None  # f32 [V, 2]
+    targets: np.ndarray | None = None  # f32 [V, T_out]
+    num_classes: int = 0
+    duration: int = 1
+
+    @property
+    def num_vertices(self) -> int:
+        return len(self.indptr) - 1
+
+    @property
+    def num_edges(self) -> int:
+        return int(self.indptr[-1])
+
+    @property
+    def feature_dim(self) -> int:
+        return self.features.shape[1]
+
+    def degrees(self) -> np.ndarray:
+        return (self.indptr[1:] - self.indptr[:-1]).astype(np.int64)
+
+    def edge_list(self) -> tuple[np.ndarray, np.ndarray]:
+        """COO (src, dst) arrays from the CSR out-edge structure."""
+        deg = self.degrees()
+        src = np.repeat(np.arange(self.num_vertices, dtype=np.int32), deg)
+        dst = self.indices.astype(np.int32)
+        return src, dst
+
+
+def read_fgr(path: str) -> Graph:
+    with open(path, "rb") as f:
+        buf = f.read()
+    if buf[:4] != FGR_MAGIC:
+        raise ValueError(f"{path}: bad magic {buf[:4]!r}")
+    off = 4
+    v, = struct.unpack_from("<I", buf, off); off += 4
+    e, = struct.unpack_from("<Q", buf, off); off += 8
+    fdim, = struct.unpack_from("<I", buf, off); off += 4
+    classes, = struct.unpack_from("<I", buf, off); off += 4
+    dur, = struct.unpack_from("<I", buf, off); off += 4
+    flags, = struct.unpack_from("<I", buf, off); off += 4
+
+    def take(dtype, count):
+        nonlocal off
+        arr = np.frombuffer(buf, dtype=dtype, count=count, offset=off)
+        off += arr.nbytes
+        return arr.copy()
+
+    indptr = take("<u8", v + 1)
+    indices = take("<u4", e)
+    feats = take("<f4", v * fdim * dur)
+    features = feats.reshape(v, fdim, dur) if dur > 1 else feats.reshape(v, fdim)
+    g = Graph(indptr=indptr, indices=indices, features=features,
+              num_classes=classes, duration=dur)
+    if flags & 1:
+        g.labels = take("<i4", v)
+    if flags & 2:
+        g.coords = take("<f4", v * 2).reshape(v, 2)
+    if flags & 4:
+        t_out, = struct.unpack_from("<I", buf, off); off += 4
+        g.targets = take("<f4", v * t_out).reshape(v, t_out)
+    assert off == len(buf), f"{path}: {len(buf) - off} trailing bytes"
+    return g
+
+
+def write_fgr(path: str, g: Graph) -> None:
+    """Mainly for tests; the Rust generator is the production writer."""
+    v = g.num_vertices
+    dur = g.duration
+    flags = (1 if g.labels is not None else 0) \
+        | (2 if g.coords is not None else 0) \
+        | (4 if g.targets is not None else 0)
+    with open(path, "wb") as f:
+        f.write(FGR_MAGIC)
+        f.write(struct.pack("<IQIIII", v, g.num_edges,
+                            g.feature_dim, g.num_classes, dur, flags))
+        f.write(g.indptr.astype("<u8").tobytes())
+        f.write(g.indices.astype("<u4").tobytes())
+        f.write(g.features.astype("<f4").tobytes())
+        if g.labels is not None:
+            f.write(g.labels.astype("<i4").tobytes())
+        if g.coords is not None:
+            f.write(g.coords.astype("<f4").tobytes())
+        if g.targets is not None:
+            f.write(struct.pack("<I", g.targets.shape[1]))
+            f.write(g.targets.astype("<f4").tobytes())
+
+
+def write_fgw(path: str, tensors: list[tuple[str, np.ndarray]]) -> None:
+    with open(path, "wb") as f:
+        f.write(FGW_MAGIC)
+        f.write(struct.pack("<I", len(tensors)))
+        for name, arr in tensors:
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            if arr.dtype in (np.float32, np.dtype("<f4")):
+                dt = 0
+                data = arr.astype("<f4")
+            elif arr.dtype in (np.int32, np.dtype("<i4")):
+                dt = 1
+                data = arr.astype("<i4")
+            else:
+                raise ValueError(f"unsupported dtype {arr.dtype} for {name}")
+            f.write(struct.pack("<BB", dt, arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<Q", d))
+            f.write(np.ascontiguousarray(data).tobytes())
+
+
+def read_fgw(path: str) -> list[tuple[str, np.ndarray]]:
+    with open(path, "rb") as f:
+        buf = f.read()
+    if buf[:4] != FGW_MAGIC:
+        raise ValueError(f"{path}: bad magic")
+    off = 4
+    n, = struct.unpack_from("<I", buf, off); off += 4
+    out = []
+    for _ in range(n):
+        ln, = struct.unpack_from("<H", buf, off); off += 2
+        name = buf[off:off + ln].decode("utf-8"); off += ln
+        dt, ndim = struct.unpack_from("<BB", buf, off); off += 2
+        dims = struct.unpack_from(f"<{ndim}Q", buf, off); off += 8 * ndim
+        count = int(np.prod(dims)) if ndim else 1
+        dtype = "<f4" if dt == 0 else "<i4"
+        arr = np.frombuffer(buf, dtype=dtype, count=count, offset=off).copy()
+        off += arr.nbytes
+        out.append((name, arr.reshape(dims)))
+    return out

@@ -1,0 +1,147 @@
+"""L1 Pallas kernel: fused dense update  Y = act(X @ W + b).
+
+This is the FLOPs hot spot of every GNN layer in the paper (the *Update*
+step, Table I): for the evaluated graphs V·F·H dominates the E·F aggregation
+cost, and on TPU it is the part that maps onto the MXU systolic array.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the paper runs PyG's fused
+CPU kernels; here the update is expressed as a blocked matmul with
+(BM, BN, BK) tiles (defaults below, chosen by the §Perf tile sweep) —
+an f32 accumulator tile stays resident in VMEM across the K loop and the
+bias add + nonlinearity are fused into the epilogue so the activation
+tile never round-trips to HBM between matmul and activation.
+
+`interpret=True` always: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel is lowered to plain HLO through the pallas
+interpreter.  Real-TPU efficiency is estimated analytically (DESIGN.md
+§Perf): per-step VMEM footprint via `vmem_footprint_bytes` (112 KiB at
+the default tile, ≪16 MiB) and padding efficiency via
+`mxu_utilization_estimate`.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Activation codes shared with the model layer configs.
+ACT_NONE = 0
+ACT_RELU = 1
+ACT_ELU = 2
+ACT_LEAKY_RELU = 3
+
+# Default tile, chosen by the §Perf tile sweep (EXPERIMENTS.md): GNN
+# update shapes have N = hidden = 64 and K = 32..100, so a square 128^3
+# tile would pad N/K heavily (MXU utilization 0.20); (128, 64, 64) hits
+# 0.81 at 112 KiB VMEM per step. Still MXU-aligned (the 128x128 systolic
+# array consumes 64-wide tiles at full rate via double pumping).
+DEFAULT_BM = 128
+DEFAULT_BN = 64
+DEFAULT_BK = 64
+
+
+def _apply_act(y, act: int):
+    if act == ACT_RELU:
+        return jnp.maximum(y, 0.0)
+    if act == ACT_ELU:
+        return jnp.where(y > 0, y, jnp.expm1(y))
+    if act == ACT_LEAKY_RELU:
+        return jnp.where(y > 0, y, 0.2 * y)
+    return y
+
+
+def _matmul_kernel(x_ref, w_ref, b_ref, o_ref, *, act: int, nk: int):
+    """Grid = (M/BM, N/BN, K/BK); K is the innermost (minor) grid axis so
+    the output tile stays resident in VMEM and is revisited across the K
+    loop (the canonical pallas accumulate-in-output matmul pattern)."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        y = o_ref[...] + b_ref[...]
+        o_ref[...] = _apply_act(y, act).astype(o_ref.dtype)
+
+
+def _pad_to(x, mult, axis):
+    size = x.shape[axis]
+    rem = (-size) % mult
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, rem)
+    return jnp.pad(x, pad)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("act", "bm", "bn", "bk", "interpret")
+)
+def fused_linear(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    act: int = ACT_NONE,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    bk: int = DEFAULT_BK,
+    interpret: bool = True,
+) -> jax.Array:
+    """act(x @ w + b) via the blocked Pallas kernel.
+
+    x: [M, K], w: [K, N], b: [N] -> [M, N]. Arbitrary shapes are padded up
+    to tile multiples and the result sliced back, so callers never see the
+    tiling.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    assert b.shape == (n,), (b.shape, n)
+
+    xp = _pad_to(_pad_to(x, bm, 0), bk, 1)
+    wp = _pad_to(_pad_to(w, bk, 0), bn, 1)
+    bp = _pad_to(b.reshape(1, n), bn, 1)
+    mp, kp = xp.shape
+    _, np_ = wp.shape
+    nk = kp // bk
+
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, act=act, nk=nk),
+        grid=(mp // bm, np_ // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        interpret=interpret,
+    )(xp, wp, bp)
+    return out[:m, :n]
+
+
+def vmem_footprint_bytes(bm: int = DEFAULT_BM, bn: int = DEFAULT_BN,
+                         bk: int = DEFAULT_BK, dtype_bytes: int = 4) -> int:
+    """Analytic per-step VMEM footprint for the §Perf estimate."""
+    return dtype_bytes * (bm * bk + bk * bn + 2 * bm * bn + bn)
+
+
+def mxu_utilization_estimate(m: int, n: int, k: int,
+                             bm: int = DEFAULT_BM, bn: int = DEFAULT_BN,
+                             bk: int = DEFAULT_BK) -> float:
+    """Fraction of MXU-issued MACs that are useful (non-padding)."""
+    import math
+
+    mp = math.ceil(m / bm) * bm
+    np_ = math.ceil(n / bn) * bn
+    kp = math.ceil(k / bk) * bk
+    return (m * n * k) / (mp * np_ * kp)

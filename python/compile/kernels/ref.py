@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for the Pallas kernels and the GNN layer math.
+
+These are the correctness ground truth: pytest asserts the Pallas kernels
+(and through them the AOT-lowered HLO the Rust runtime executes) match
+these to float tolerance.  Training (train.py) also uses these — identical
+math, friendlier autodiff than interpreter-mode pallas.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .fused_linear import ACT_ELU, ACT_LEAKY_RELU, ACT_NONE, ACT_RELU
+
+
+def apply_act(y: jax.Array, act: int) -> jax.Array:
+    if act == ACT_RELU:
+        return jnp.maximum(y, 0.0)
+    if act == ACT_ELU:
+        return jnp.where(y > 0, y, jnp.expm1(y))
+    if act == ACT_LEAKY_RELU:
+        return jnp.where(y > 0, y, 0.2 * y)
+    assert act == ACT_NONE
+    return y
+
+
+def fused_linear_ref(x, w, b, act: int = ACT_NONE) -> jax.Array:
+    return apply_act(x @ w + b, act)
+
+
+def scale_combine_ref(agg, h, scale, mode: int = 0) -> jax.Array:
+    if mode == 0:
+        return (agg + h) * scale
+    return agg * scale
+
+
+def segment_aggregate(h, src, dst, ew, num_vertices: int) -> jax.Array:
+    """Sum_{(u,v) in E} ew_e * h_u scattered into row v.
+
+    Padding edges carry ew == 0 (and point at vertex 0), so they contribute
+    nothing — this is the static-shape TPU formulation of neighbor
+    aggregation (DESIGN.md §Hardware-Adaptation).
+    """
+    msgs = h[src] * ew[:, None]
+    return jax.ops.segment_sum(msgs, dst, num_segments=num_vertices)
+
+
+def segment_softmax(logits, dst, ew, num_vertices: int) -> jax.Array:
+    """Numerically-stable per-destination softmax over edges; padding edges
+    (ew == 0) are excluded and receive weight 0."""
+    neg = jnp.asarray(-1e30, logits.dtype)
+    masked = jnp.where(ew > 0, logits, neg)
+    seg_max = jax.ops.segment_max(masked, dst, num_segments=num_vertices)
+    seg_max = jnp.where(seg_max > -1e29, seg_max, 0.0)
+    ex = jnp.where(ew > 0, jnp.exp(masked - seg_max[dst]), 0.0)
+    denom = jax.ops.segment_sum(ex, dst, num_segments=num_vertices)
+    return ex / jnp.maximum(denom[dst], 1e-16)

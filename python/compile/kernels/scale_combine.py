@@ -1,0 +1,70 @@
+"""L1 Pallas kernel: elementwise aggregate/self combine with degree scaling.
+
+GCN's pre-update combine (Table I):   c_v = (a_v + h_v) / (|N_v| + 1)
+GraphSAGE's mean normalization:       c_v = a_v / max(|N_v|, 1)
+
+Both are row-scaled elementwise merges of the aggregation output `agg`
+[V, F] with the residual activations `h` [V, F] by a per-vertex scale
+[V, 1].  On TPU this is VPU work; blocking it (BV, F) keeps each tile in
+VMEM and lets XLA fuse the dequantized input straight into the first
+layer's combine.  interpret=True as everywhere (see fused_linear.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BV = 256
+
+COMBINE_ADD_SELF = 0  # (agg + h) * scale      (GCN)
+COMBINE_AGG_ONLY = 1  # agg * scale            (SAGE mean)
+
+
+def _combine_kernel(agg_ref, h_ref, scale_ref, o_ref, *, mode: int):
+    agg = agg_ref[...]
+    s = scale_ref[...]
+    if mode == COMBINE_ADD_SELF:
+        o_ref[...] = (agg + h_ref[...]) * s
+    else:
+        o_ref[...] = agg * s
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "bv", "interpret"))
+def scale_combine(
+    agg: jax.Array,
+    h: jax.Array,
+    scale: jax.Array,
+    mode: int = COMBINE_ADD_SELF,
+    bv: int = DEFAULT_BV,
+    interpret: bool = True,
+) -> jax.Array:
+    """Blocked (agg [V,F], h [V,F], scale [V,1]) -> [V,F] combine."""
+    v, f = agg.shape
+    assert h.shape == (v, f)
+    assert scale.shape == (v, 1), scale.shape
+
+    rem = (-v) % bv
+    if rem:
+        pad = ((0, rem), (0, 0))
+        agg = jnp.pad(agg, pad)
+        h = jnp.pad(h, pad)
+        scale = jnp.pad(scale, pad)
+    vp = agg.shape[0]
+
+    out = pl.pallas_call(
+        functools.partial(_combine_kernel, mode=mode),
+        grid=(vp // bv,),
+        in_specs=[
+            pl.BlockSpec((bv, f), lambda i: (i, 0)),
+            pl.BlockSpec((bv, f), lambda i: (i, 0)),
+            pl.BlockSpec((bv, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bv, f), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((vp, f), agg.dtype),
+        interpret=interpret,
+    )(agg, h, scale)
+    return out[:v]

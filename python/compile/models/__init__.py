@@ -1,0 +1,14 @@
+"""Model registry: name -> module exposing layers()/init_params()/forward()."""
+
+from . import astgcn, gat, gcn, sage
+
+REGISTRY = {
+    "gcn": gcn,
+    "gat": gat,
+    "sage": sage,
+    "astgcn": astgcn,
+}
+
+
+def get(name: str):
+    return REGISTRY[name]

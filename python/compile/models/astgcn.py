@@ -1,0 +1,97 @@
+"""ASTGCN-lite — attention-based spatial-temporal GCN for traffic
+forecasting (Guo et al., AAAI'19), reduced to one ST block as the paper's
+case-study workload (§IV-C).
+
+Input is a window of T=12 five-minute readings of F=3 channels per sensor,
+flattened to x [V, F·T]; output is the next hour's T_out=12 flow values.
+
+Block structure (dense adjacency — PeMS has 307 sensors, so V² is small):
+
+    S    = row-softmax over N_v of ( (x W1)(x W2)ᵀ / sqrt(d_att) )
+    A_eff= Â ⊙ S                      (Â = D⁻¹(A+I), row-normalized)
+    H    = ReLU( A_eff (x W_gc) + x W_self )
+    y    = H W_out + b_out
+
+The spatial hop is 1 (the attention is masked by Â), so the Rust BSP
+runtime executes it with a single halo exchange (K = 1).
+
+Calling convention:  fn(w1, w2, wgc, wself, wout, bout, x, adj) -> y
+adj is the dense row-normalized [V, V] block of the (halo-augmented)
+partition.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels import ref
+from ..kernels.fused_linear import ACT_NONE, ACT_RELU, fused_linear
+from .common import LayerDef, TensorSpec, glorot
+
+D_ATT = 16
+T_OUT = 12
+
+
+def _block_fn(use_kernels: bool):
+    lin = (lambda x, w, b, act: fused_linear(x, w, b, act=act)) \
+        if use_kernels else \
+        (lambda x, w, b, act: ref.fused_linear_ref(x, w, b, act=act))
+
+    def fn(w1, w2, wgc, wself, wout, bout, x, adj):
+        datt = w1.shape[1]
+        z1 = lin(x, w1, jnp.zeros(w1.shape[1], x.dtype), ACT_NONE)
+        z2 = lin(x, w2, jnp.zeros(w2.shape[1], x.dtype), ACT_NONE)
+        s = (z1 @ z2.T) * (1.0 / np.sqrt(datt))
+        s = jnp.where(adj > 0, s, -1e30)
+        s = s - jnp.max(s, axis=1, keepdims=True)
+        es = jnp.exp(s)
+        s = es / jnp.maximum(es.sum(axis=1, keepdims=True), 1e-16)
+        a_eff = adj * s
+        hg = lin(x, wgc, jnp.zeros(wgc.shape[1], x.dtype), ACT_NONE)
+        hs = lin(x, wself, jnp.zeros(wself.shape[1], x.dtype), ACT_NONE)
+        h = jnp.maximum(a_eff @ hg + hs, 0.0)
+        return lin(h, wout, bout, ACT_NONE)
+
+    return fn
+
+
+def param_spec(ft: int, hidden: int) -> list[TensorSpec]:
+    return [
+        TensorSpec("w1", (ft, D_ATT)),
+        TensorSpec("w2", (ft, D_ATT)),
+        TensorSpec("wgc", (ft, hidden)),
+        TensorSpec("wself", (ft, hidden)),
+        TensorSpec("wout", (hidden, T_OUT)),
+        TensorSpec("bout", (T_OUT,)),
+    ]
+
+
+def layers(f_in: int, hidden: int, classes: int, v: int, e: int,
+           num_layers: int = 1, use_kernels: bool = True,
+           l: int | None = None) -> list[LayerDef]:
+    # dense-adjacency path: attention needs all rows, so l is ignored
+    # f_in here is F·T (36 for PeMS); `e` is unused (dense adjacency).
+    return [LayerDef(
+        index=0,
+        fn=_block_fn(use_kernels),
+        param_spec=param_spec(f_in, hidden),
+        data_spec=[TensorSpec("x", (v, f_in)), TensorSpec("adj", (v, v))],
+        out_dim=T_OUT,
+    )]
+
+
+def init_params(rng: np.random.Generator, f_in: int, hidden: int,
+                classes: int = 0, num_layers: int = 1):
+    return [[
+        glorot(rng, (f_in, D_ATT)),
+        glorot(rng, (f_in, D_ATT)),
+        glorot(rng, (f_in, hidden)),
+        glorot(rng, (f_in, hidden)),
+        glorot(rng, (hidden, T_OUT)),
+        np.zeros(T_OUT, np.float32),
+    ]]
+
+
+def forward(params, x, adj, use_kernels: bool = False):
+    return _block_fn(use_kernels)(*params[0], x, adj)

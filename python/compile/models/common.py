@@ -1,0 +1,73 @@
+"""Shared plumbing for the L2 GNN models.
+
+Every message-passing model is expressed as a stack of *layer functions*
+with static shapes, so each (model, dataset, bucket, layer) lowers to one
+HLO artifact that the Rust BSP runtime executes between halo-exchange
+synchronizations (paper §III-E).
+
+Layer-function calling convention (the Rust runtime mirrors this order):
+
+    fn(*params, h, src, dst, ew, inv_deg) -> h_next
+
+- params: the layer's trained tensors, in the order given by `param_spec`.
+- h [V, F_k]  activations (layer 0: dequantized input features)
+- src, dst [E] int32 COO edge endpoints (dst-owned edges incl. halo srcs)
+- ew [E] f32 edge mask/weight — 0.0 marks padding edges
+- inv_deg [V, 1] f32 per-vertex normalization (model-specific; see each
+  model's `prep` notes)
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import numpy as np
+
+
+@dataclass(frozen=True)
+class TensorSpec:
+    name: str
+    shape: tuple[int, ...]
+    dtype: str = "f32"  # f32 | i32
+
+
+@dataclass(frozen=True)
+class LayerDef:
+    """One BSP-synchronized execution step."""
+
+    index: int
+    fn: Callable  # fn(*params, *data) -> out
+    param_spec: list[TensorSpec]  # shapes independent of bucket
+    data_spec: list[TensorSpec]  # shapes in terms of the bucket (v, e)
+    out_dim: int  # feature dim of the output
+
+
+def shape_structs(specs: list[TensorSpec]):
+    import jax.numpy as jnp
+
+    dt = {"f32": jnp.float32, "i32": jnp.int32}
+    return [jax.ShapeDtypeStruct(s.shape, dt[s.dtype]) for s in specs]
+
+
+def glorot(rng: np.random.Generator, shape) -> np.ndarray:
+    fan_in, fan_out = shape[0], shape[-1]
+    lim = float(np.sqrt(6.0 / (fan_in + fan_out)))
+    return rng.uniform(-lim, lim, size=shape).astype(np.float32)
+
+
+def edge_data_spec(v: int, e: int, f: int, l: int | None = None) \
+        -> list[TensorSpec]:
+    """Data inputs of one message-passing layer. `l` is the owned-row
+    count (inv_deg's leading dim); the layer computes outputs for the
+    first `l` rows only, so halo rows cost no update FLOPs."""
+    if l is None:
+        l = v
+    return [
+        TensorSpec("h", (v, f)),
+        TensorSpec("src", (e,), "i32"),
+        TensorSpec("dst", (e,), "i32"),
+        TensorSpec("ew", (e,)),
+        TensorSpec("inv_deg", (l, 1)),
+    ]

@@ -1,0 +1,86 @@
+"""GAT (Velickovic et al.) — Table I of the paper, single attention head:
+
+    a_v = sum_{u in N_v ∪ {v}} alpha_vu · W h_u
+    h_v = sigma(a_v)
+
+with alpha the learned attention, at inference computed as
+softmax_u( LeakyReLU( a_s · (W h_v) + a_d · (W h_u) ) ) over v's in-edges.
+The edge list is expected to INCLUDE self loops (Rust prep adds them);
+`inv_deg` is unused but kept so every model shares one calling convention.
+Hidden layers use ELU, the output layer is linear.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels import ref
+from ..kernels.fused_linear import (ACT_ELU, ACT_LEAKY_RELU, ACT_NONE,
+                                    fused_linear)
+from .common import LayerDef, TensorSpec, edge_data_spec, glorot
+from .gcn import layer_dims
+
+
+def _layer_fn(act: int, use_kernels: bool):
+    def fn(w, b, a_src, a_dst, h, src, dst, ew, inv_deg):
+        # z covers ALL rows (halo sources feed the attention), but the
+        # softmax-aggregate lands on the owned rows [0, l) only.
+        l = inv_deg.shape[0]
+        if use_kernels:
+            z = fused_linear(h, w, b, act=ACT_NONE)
+        else:
+            z = ref.fused_linear_ref(h, w, b, act=ACT_NONE)
+        es = z @ a_src  # [V]
+        ed = z @ a_dst  # [V]
+        logits = ref.apply_act(es[src] + ed[dst], ACT_LEAKY_RELU)
+        alpha = ref.segment_softmax(logits, dst, ew, l)
+        agg = ref.segment_aggregate(z, src, dst, alpha, l)
+        return ref.apply_act(agg, act)
+
+    return fn
+
+
+def layers(f_in: int, hidden: int, classes: int, v: int, e: int,
+           num_layers: int = 2, use_kernels: bool = True,
+           l: int | None = None) -> list[LayerDef]:
+    out = []
+    dims = layer_dims(f_in, hidden, classes, num_layers)
+    for i, (fi, fo) in enumerate(dims):
+        act = ACT_NONE if i == num_layers - 1 else ACT_ELU
+        out.append(LayerDef(
+            index=i,
+            fn=_layer_fn(act, use_kernels),
+            param_spec=[
+                TensorSpec("w", (fi, fo)),
+                TensorSpec("b", (fo,)),
+                TensorSpec("a_src", (fo,)),
+                TensorSpec("a_dst", (fo,)),
+            ],
+            data_spec=edge_data_spec(v, e, fi, l),
+            out_dim=fo,
+        ))
+    return out
+
+
+def init_params(rng: np.random.Generator, f_in: int, hidden: int,
+                classes: int, num_layers: int = 2):
+    params = []
+    for fi, fo in layer_dims(f_in, hidden, classes, num_layers):
+        params.append([
+            glorot(rng, (fi, fo)),
+            np.zeros(fo, np.float32),
+            (0.1 * glorot(rng, (fo, 1))[:, 0]).astype(np.float32),
+            (0.1 * glorot(rng, (fo, 1))[:, 0]).astype(np.float32),
+        ])
+    return params
+
+
+def forward(params, h, src, dst, ew, inv_deg, use_kernels: bool = False):
+    n = len(params)
+    lds = layers(h.shape[1], params[0][0].shape[1] if n > 1 else 0,
+                 params[-1][0].shape[1], h.shape[0], src.shape[0],
+                 num_layers=n, use_kernels=use_kernels)
+    for ld, p in zip(lds, params):
+        h = ld.fn(*p, h, src, dst, ew, inv_deg)
+    return h

@@ -1,0 +1,84 @@
+"""GCN (Kipf & Welling) — Table I of the paper:
+
+    a_v = sum_{u in N_v} h_u
+    h_v = sigma( W · (a_v + h_v) / (|N_v| + 1) )
+
+`inv_deg` therefore carries 1 / (deg_in + 1); no self loops in the edge
+list (the self contribution is the explicit `+ h_v`).  Hidden layers use
+ReLU, the output layer is linear (logits).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from ..kernels import ref
+from ..kernels.fused_linear import ACT_NONE, ACT_RELU, fused_linear
+from ..kernels.scale_combine import COMBINE_ADD_SELF, scale_combine
+from .common import LayerDef, TensorSpec, edge_data_spec, glorot
+
+
+def layer_dims(f_in: int, hidden: int, classes: int,
+               layers: int = 2) -> list[tuple[int, int]]:
+    dims = []
+    cur = f_in
+    for i in range(layers):
+        out = classes if i == layers - 1 else hidden
+        dims.append((cur, out))
+        cur = out
+    return dims
+
+
+def _layer_fn(act: int, use_kernels: bool):
+    def fn(w, b, h, src, dst, ew, inv_deg):
+        # inv_deg's leading dim l = owned rows; outputs cover rows [0, l)
+        # only, so halo rows cost no update FLOPs (all dst < l).
+        l = inv_deg.shape[0]
+        agg = ref.segment_aggregate(h, src, dst, ew, l)
+        h_loc = h[:l]
+        if use_kernels:
+            comb = scale_combine(agg, h_loc, inv_deg,
+                                 mode=COMBINE_ADD_SELF)
+            return fused_linear(comb, w, b, act=act)
+        comb = ref.scale_combine_ref(agg, h_loc, inv_deg,
+                                     mode=COMBINE_ADD_SELF)
+        return ref.fused_linear_ref(comb, w, b, act=act)
+
+    return fn
+
+
+def layers(f_in: int, hidden: int, classes: int, v: int, e: int,
+           num_layers: int = 2, use_kernels: bool = True,
+           l: int | None = None) -> list[LayerDef]:
+    out = []
+    dims = layer_dims(f_in, hidden, classes, num_layers)
+    for i, (fi, fo) in enumerate(dims):
+        act = ACT_NONE if i == num_layers - 1 else ACT_RELU
+        out.append(LayerDef(
+            index=i,
+            fn=_layer_fn(act, use_kernels),
+            param_spec=[TensorSpec("w", (fi, fo)), TensorSpec("b", (fo,))],
+            data_spec=edge_data_spec(v, e, fi, l),
+            out_dim=fo,
+        ))
+    return out
+
+
+def init_params(rng: np.random.Generator, f_in: int, hidden: int,
+                classes: int, num_layers: int = 2):
+    """Flat param list, layer-major, matching each layer's param_spec."""
+    params = []
+    for fi, fo in layer_dims(f_in, hidden, classes, num_layers):
+        params.append([glorot(rng, (fi, fo)), np.zeros(fo, np.float32)])
+    return params
+
+
+def forward(params, h, src, dst, ew, inv_deg, use_kernels: bool = False):
+    """Full-graph forward (training / parity tests)."""
+    n = len(params)
+    lds = layers(h.shape[1], params[0][0].shape[1] if n > 1 else 0,
+                 params[-1][0].shape[1], h.shape[0], src.shape[0],
+                 num_layers=n, use_kernels=use_kernels)
+    for ld, p in zip(lds, params):
+        h = ld.fn(*p, h, src, dst, ew, inv_deg)
+    return h

@@ -1,0 +1,74 @@
+"""GraphSAGE (Hamilton et al.), mean-aggregate — Table I of the paper:
+
+    a_v = (1/|N_v|) sum_{u in N_v} h_u
+    h_v = sigma( W · concat(a_v, h_v) )
+
+`inv_deg` carries 1 / max(deg_in, 1); no self loops in the edge list.
+Hidden layers use ReLU, the output layer is linear.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels import ref
+from ..kernels.fused_linear import ACT_NONE, ACT_RELU, fused_linear
+from ..kernels.scale_combine import COMBINE_AGG_ONLY, scale_combine
+from .common import LayerDef, TensorSpec, edge_data_spec, glorot
+from .gcn import layer_dims
+
+
+def _layer_fn(act: int, use_kernels: bool):
+    def fn(w, b, h, src, dst, ew, inv_deg):
+        # owned rows only (see gcn.py)
+        l = inv_deg.shape[0]
+        agg = ref.segment_aggregate(h, src, dst, ew, l)
+        h_loc = h[:l]
+        if use_kernels:
+            mean = scale_combine(agg, h_loc, inv_deg,
+                                 mode=COMBINE_AGG_ONLY)
+            comb = jnp.concatenate([mean, h_loc], axis=1)
+            return fused_linear(comb, w, b, act=act)
+        mean = ref.scale_combine_ref(agg, h_loc, inv_deg,
+                                     mode=COMBINE_AGG_ONLY)
+        comb = jnp.concatenate([mean, h_loc], axis=1)
+        return ref.fused_linear_ref(comb, w, b, act=act)
+
+    return fn
+
+
+def layers(f_in: int, hidden: int, classes: int, v: int, e: int,
+           num_layers: int = 2, use_kernels: bool = True,
+           l: int | None = None) -> list[LayerDef]:
+    out = []
+    dims = layer_dims(f_in, hidden, classes, num_layers)
+    for i, (fi, fo) in enumerate(dims):
+        act = ACT_NONE if i == num_layers - 1 else ACT_RELU
+        out.append(LayerDef(
+            index=i,
+            fn=_layer_fn(act, use_kernels),
+            param_spec=[TensorSpec("w", (2 * fi, fo)),
+                        TensorSpec("b", (fo,))],
+            data_spec=edge_data_spec(v, e, fi, l),
+            out_dim=fo,
+        ))
+    return out
+
+
+def init_params(rng: np.random.Generator, f_in: int, hidden: int,
+                classes: int, num_layers: int = 2):
+    params = []
+    for fi, fo in layer_dims(f_in, hidden, classes, num_layers):
+        params.append([glorot(rng, (2 * fi, fo)), np.zeros(fo, np.float32)])
+    return params
+
+
+def forward(params, h, src, dst, ew, inv_deg, use_kernels: bool = False):
+    n = len(params)
+    lds = layers(h.shape[1], params[0][0].shape[1] if n > 1 else 0,
+                 params[-1][0].shape[1], h.shape[0], src.shape[0],
+                 num_layers=n, use_kernels=use_kernels)
+    for ld, p in zip(lds, params):
+        h = ld.fn(*p, h, src, dst, ew, inv_deg)
+    return h

@@ -1,0 +1,79 @@
+"""Graph -> model-input preparation (python twin of rust/src/runtime/pad.rs).
+
+Turns a loaded .fgr Graph into the (h, src, dst, ew, inv_deg) arrays the
+layer functions consume, with the exact model-specific conventions the Rust
+runtime also implements:
+
+- gcn:   no self loops; inv_deg = 1 / (deg_in + 1)
+- sage:  no self loops; inv_deg = 1 / max(deg_in, 1)
+- gat:   self loops appended AFTER the real edges; inv_deg all-ones (unused)
+- astgcn: dense row-normalized D^-1 (A + I) adjacency block
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .fgio import Graph
+
+
+def edge_arrays(g: Graph, model: str):
+    src, dst = g.edge_list()
+    v = g.num_vertices
+    # in-degree (CSR here is symmetric for our datasets, but be exact)
+    deg_in = np.bincount(dst, minlength=v).astype(np.float32)
+    if model == "gat":
+        loops = np.arange(v, dtype=np.int32)
+        src = np.concatenate([src, loops])
+        dst = np.concatenate([dst, loops])
+        ew = np.ones(len(src), np.float32)
+        inv_deg = np.ones((v, 1), np.float32)
+    elif model == "gcn":
+        ew = np.ones(len(src), np.float32)
+        inv_deg = (1.0 / (deg_in + 1.0)).reshape(v, 1)
+    elif model == "sage":
+        ew = np.ones(len(src), np.float32)
+        inv_deg = (1.0 / np.maximum(deg_in, 1.0)).reshape(v, 1)
+    else:
+        raise ValueError(model)
+    return src.astype(np.int32), dst.astype(np.int32), ew, inv_deg
+
+
+def dense_norm_adj(g: Graph) -> np.ndarray:
+    """Row-normalized D^-1 (A + I) as dense f32 (astgcn)."""
+    v = g.num_vertices
+    a = np.zeros((v, v), np.float32)
+    src, dst = g.edge_list()
+    a[dst, src] = 1.0
+    a[np.arange(v), np.arange(v)] = 1.0
+    rowsum = a.sum(axis=1, keepdims=True)
+    return a / np.maximum(rowsum, 1.0)
+
+
+def pems_windows(g: Graph, window: int, horizon: int,
+                 stride: int = 3):
+    """Slide (input-window, target-horizon) pairs over the stored series.
+
+    features [V, F, T]; channel 0 is flow (the forecast target).
+    Returns (xs [N, V, F*window], ys [N, V, horizon], mean, std) with xs
+    standardized per channel and ys in ORIGINAL units.
+    """
+    v, f, t = g.features.shape
+    mean = g.features.mean(axis=(0, 2))  # [F]
+    std = g.features.std(axis=(0, 2)) + 1e-6
+    norm = (g.features - mean[None, :, None]) / std[None, :, None]
+    xs, ys = [], []
+    for s in range(0, t - window - horizon + 1, stride):
+        xw = norm[:, :, s:s + window].reshape(v, f * window)
+        yw = g.features[:, 0, s + window:s + window + horizon]
+        xs.append(xw.astype(np.float32))
+        ys.append(yw.astype(np.float32))
+    return (np.stack(xs), np.stack(ys),
+            mean.astype(np.float32), std.astype(np.float32))
+
+
+def train_test_split(v: int, train_frac: float = 0.7):
+    """Deterministic index split (matches rust serving/accuracy.rs)."""
+    idx = np.arange(v)
+    train = (idx * 2654435761 % 4294967296) % 1000 < int(train_frac * 1000)
+    return idx[train], idx[~train]

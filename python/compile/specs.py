@@ -1,0 +1,126 @@
+"""Dataset + model + artifact-bucket specifications.
+
+These constants are the contract between the Python compile path and the
+Rust runtime: the Rust dataset generators (rust/src/graph/datasets.rs)
+produce graphs with exactly these vertex/edge counts and feature shapes
+(Table III of the paper), and the Rust runtime picks the smallest lowered
+bucket that fits a partition.  Edge counts are *undirected*; the CSR both
+sides use stores each edge in both directions (e_dir = 2·E).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class DatasetSpec:
+    name: str
+    vertices: int
+    edges: int          # undirected edge count (Table III)
+    feature_dim: int
+    classes: int        # 0 => regression (PeMS)
+    duration: int = 1   # timesteps stored in the .fgr feature series
+    window: int = 1     # timesteps per inference input window
+    seed: int = 7
+
+    @property
+    def directed_edges(self) -> int:
+        return 2 * self.edges
+
+    @property
+    def input_dim(self) -> int:
+        """Flattened per-vertex feature dim of one inference input."""
+        return self.feature_dim * self.window
+
+
+# Table III.
+DATASETS: dict[str, DatasetSpec] = {
+    "siot": DatasetSpec("siot", 16216, 146117, 52, 2, seed=11),
+    "yelp": DatasetSpec("yelp", 10000, 15683, 100, 2, seed=13),
+    # 7 days of 5-minute readings stored; each inference consumes a
+    # 12-step window and forecasts the next 12 steps (one hour).
+    "pems": DatasetSpec("pems", 307, 340, 3, 0, duration=2016, window=12,
+                        seed=17),
+    "rmat20k": DatasetSpec("rmat20k", 20_000, 199_000, 32, 8, seed=21),
+    "rmat40k": DatasetSpec("rmat40k", 40_000, 799_000, 32, 8, seed=22),
+    "rmat60k": DatasetSpec("rmat60k", 60_000, 1_790_000, 32, 8, seed=23),
+    "rmat80k": DatasetSpec("rmat80k", 80_000, 3_190_000, 32, 8, seed=24),
+    "rmat100k": DatasetSpec("rmat100k", 100_000, 4_990_000, 32, 8, seed=25),
+}
+
+
+@dataclass(frozen=True)
+class ModelSpec:
+    name: str
+    hidden: int = 64
+    layers: int = 2
+
+
+MODELS: dict[str, ModelSpec] = {
+    "gcn": ModelSpec("gcn"),
+    "gat": ModelSpec("gat"),
+    "sage": ModelSpec("sage"),
+    "astgcn": ModelSpec("astgcn", hidden=64, layers=1),
+}
+
+# Which (model, dataset) pairs get artifacts + trained weights.
+PAIRS: list[tuple[str, str]] = (
+    [(m, d) for m in ("gcn", "gat", "sage") for d in ("siot", "yelp")]
+    + [("gcn", d) for d in ("rmat20k", "rmat40k", "rmat60k",
+                            "rmat80k", "rmat100k")]
+    + [("astgcn", "pems")]
+)
+
+# Partition-size bucket denominators: a `frac=d` bucket is sized for one
+# d-th of the graph plus halo margin.  Rust picks the smallest fitting one.
+BUCKET_FRACS: tuple[int, ...] = (1, 2, 3, 4, 6, 8)
+
+# Halo vertices are numerous on social graphs but cost only zero-padded
+# rows (cheap memcpy); edges drive the XLA scatter cost. So v_max is
+# generous and e_max tight.
+V_HALO_MARGIN = 3.5
+E_MARGIN = 1.25
+V_ROUND = 256
+E_ROUND = 1024
+
+
+def _ceil_mult(x: float, m: int) -> int:
+    from math import ceil
+    return int(ceil(x / m)) * m
+
+
+L_MARGIN = 1.10    # owned rows exceed |V|/frac slightly under imbalance
+
+
+def bucket_dims(ds: DatasetSpec, frac: int,
+                self_loops: bool = True) -> tuple[int, int, int]:
+    """(v_max, e_max, l_max) of the artifact bucket for 1/frac of `ds`.
+
+    v_max covers locals + halo; l_max covers owned (local) rows only —
+    the update matmul runs over l_max rows so distributed execution does
+    not pay for halo rows (DESIGN.md §Hardware-Adaptation).
+    """
+    v_full = _ceil_mult(ds.vertices + 1, V_ROUND)
+    e_full = _ceil_mult(ds.directed_edges + (ds.vertices if self_loops else 0)
+                        + 1, E_ROUND)
+    if frac == 1:
+        return v_full, e_full, v_full
+    v = min(v_full, _ceil_mult(ds.vertices / frac * V_HALO_MARGIN, V_ROUND))
+    e = min(e_full, _ceil_mult((ds.directed_edges / frac * E_MARGIN)
+                               + (v if self_loops else 0), E_ROUND))
+    l = min(v, _ceil_mult(ds.vertices / frac * L_MARGIN, 128))
+    return v, e, l
+
+
+def buckets_for(ds: DatasetSpec) -> list[tuple[int, int, int, int]]:
+    """Deduplicated (frac, v_max, e_max, l_max) list, largest first."""
+    seen: set[tuple[int, int, int]] = set()
+    out = []
+    for frac in BUCKET_FRACS:
+        v, e, l = bucket_dims(ds, frac)
+        if (v, e, l) in seen:
+            continue
+        seen.add((v, e, l))
+        out.append((frac, v, e, l))
+    return out

@@ -1,0 +1,217 @@
+"""Build-time training of every (model, dataset) pair on the Rust-generated
+synthetic twins, emitting .fgw weight bundles the Rust runtime loads.
+
+Training uses the pure-jnp reference math (ref.py) — identical numerics to
+the Pallas kernels (asserted by pytest) with friendlier autodiff.
+
+Usage:  python -m compile.train --data-dir ../data --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import fgio, prep, specs
+from .models import REGISTRY
+
+
+# ----------------------------------------------------------------- Adam ---
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": zeros, "t": 0}
+
+
+def adam_step(params, grads, state, lr=1e-2, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g,
+                               state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g,
+                               state["v"], grads)
+    mh = jax.tree_util.tree_map(lambda m: m / (1 - b1 ** t), m)
+    vh = jax.tree_util.tree_map(lambda v: v / (1 - b2 ** t), v)
+    params = jax.tree_util.tree_map(
+        lambda p, mh, vh: p - lr * mh / (jnp.sqrt(vh) + eps),
+        params, mh, vh)
+    return params, {"m": m, "v": v, "t": t}
+
+
+# ------------------------------------------------- classification models ---
+def train_classifier(model_name: str, g: fgio.Graph, hidden: int,
+                     epochs: int, lr: float, seed: int, log):
+    mod = REGISTRY[model_name]
+    v = g.num_vertices
+    f_in = g.feature_dim
+    classes = g.num_classes
+    rng = np.random.default_rng(seed)
+    params = [ [jnp.asarray(t) for t in layer]
+               for layer in mod.init_params(rng, f_in, hidden, classes) ]
+
+    src, dst, ew, inv_deg = prep.edge_arrays(g, model_name)
+    h0 = jnp.asarray(g.features)
+    src, dst = jnp.asarray(src), jnp.asarray(dst)
+    ew, inv_deg = jnp.asarray(ew), jnp.asarray(inv_deg)
+    labels = jnp.asarray(g.labels)
+    tr, te = prep.train_test_split(v)
+    tr, te = jnp.asarray(tr), jnp.asarray(te)
+
+    def loss_fn(params):
+        logits = mod.forward(params, h0, src, dst, ew, inv_deg)
+        lt = logits[tr]
+        ls = lt - jax.nn.logsumexp(lt, axis=1, keepdims=True)
+        nll = -jnp.take_along_axis(ls, labels[tr][:, None], axis=1).mean()
+        return nll
+
+    @jax.jit
+    def step(params, state):
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, state = adam_step(params, grads, state, lr=lr)
+        return params, state, loss
+
+    @jax.jit
+    def accuracy(params):
+        logits = mod.forward(params, h0, src, dst, ew, inv_deg)
+        pred = jnp.argmax(logits, axis=1)
+        return ((pred[tr] == labels[tr]).mean(),
+                (pred[te] == labels[te]).mean())
+
+    state = adam_init(params)
+    for ep in range(epochs):
+        params, state, loss = step(params, state)
+        if ep % max(1, epochs // 5) == 0 or ep == epochs - 1:
+            atr, ate = accuracy(params)
+            log(f"    ep {ep:3d} loss {float(loss):.4f} "
+                f"acc tr {float(atr):.4f} te {float(ate):.4f}")
+    atr, ate = accuracy(params)
+    return params, float(ate)
+
+
+# -------------------------------------------------------------- astgcn ----
+def train_astgcn(g: fgio.Graph, hidden: int, steps: int, lr: float,
+                 seed: int, log):
+    mod = REGISTRY["astgcn"]
+    ds = specs.DATASETS["pems"]
+    xs, ys, mean, std = prep.pems_windows(g, ds.window, mod_t_out := 12)
+    adj = jnp.asarray(prep.dense_norm_adj(g))
+    rng = np.random.default_rng(seed)
+    f_in = g.feature_dim * ds.window
+    params = [[jnp.asarray(t) for t in mod.init_params(rng, f_in, hidden)[0]]]
+    n = len(xs)
+    split = int(0.8 * n)
+    xs_tr, ys_tr = jnp.asarray(xs[:split]), jnp.asarray(ys[:split])
+    xs_te, ys_te = jnp.asarray(xs[split:]), jnp.asarray(ys[split:])
+    # model predicts NORMALIZED flow; targets normalized with channel 0
+    ys_tr_n = (ys_tr - mean[0]) / std[0]
+
+    fwd = jax.vmap(lambda p, x: mod.forward(p, x, adj), in_axes=(None, 0))
+
+    def loss_fn(params, xb, yb):
+        return jnp.abs(fwd(params, xb) - yb).mean()
+
+    @jax.jit
+    def step(params, state, xb, yb):
+        loss, grads = jax.value_and_grad(loss_fn)(params, xb, yb)
+        params, state = adam_step(params, grads, state, lr=lr)
+        return params, state, loss
+
+    state = adam_init(params)
+    bs = 16
+    key = np.random.default_rng(seed + 1)
+    for it in range(steps):
+        idx = key.integers(0, split, size=bs)
+        params, state, loss = step(params, state, xs_tr[idx], ys_tr_n[idx])
+        if it % max(1, steps // 5) == 0 or it == steps - 1:
+            pred = fwd(params, xs_te) * std[0] + mean[0]
+            mae = float(jnp.abs(pred - ys_te).mean())
+            log(f"    it {it:4d} loss {float(loss):.4f} test MAE {mae:.3f}")
+    pred = fwd(params, xs_te) * std[0] + mean[0]
+    mae = float(jnp.abs(pred - ys_te).mean())
+    return params, mae, mean, std
+
+
+# ---------------------------------------------------------------- driver --
+def flatten_weights(model_name: str, params) -> list[tuple[str, np.ndarray]]:
+    mod = REGISTRY[model_name]
+    # Recover per-layer param names from a dummy layers() call.
+    names = {
+        "gcn": [["w", "b"]],
+        "sage": [["w", "b"]],
+        "gat": [["w", "b", "a_src", "a_dst"]],
+        "astgcn": [["w1", "w2", "wgc", "wself", "wout", "bout"]],
+    }[model_name]
+    out = []
+    for li, layer in enumerate(params):
+        layer_names = names[0]
+        for name, tensor in zip(layer_names, layer):
+            out.append((f"l{li}.{name}", np.asarray(tensor)))
+    return out
+
+
+def weights_key(model: str, dataset: str) -> str:
+    """All RMAT sizes share feature/class dims -> share one weight bundle."""
+    if dataset.startswith("rmat"):
+        dataset = "rmat"
+    return f"weights_{model}_{dataset}"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--data-dir", default=os.path.join(
+        os.path.dirname(__file__), "..", "..", "data"))
+    ap.add_argument("--out-dir", default=os.path.join(
+        os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--epochs", type=int, default=150)
+    ap.add_argument("--astgcn-steps", type=int, default=400)
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    done: set[str] = set()
+    report = []
+    for model_name, ds_name in specs.PAIRS:
+        key = weights_key(model_name, ds_name)
+        if key in done:
+            continue
+        if args.only and args.only not in (model_name, ds_name,
+                                           f"{model_name}:{ds_name}"):
+            continue
+        done.add(key)
+        # rmat weights are trained on the smallest twin
+        train_ds = "rmat20k" if ds_name.startswith("rmat") else ds_name
+        path = os.path.join(args.data_dir, f"{train_ds}.fgr")
+        if not os.path.exists(path):
+            print(f"!! missing {path} (run `repro dataset` first); skipping")
+            continue
+        g = fgio.read_fgr(path)
+        ms = specs.MODELS[model_name]
+        t0 = time.time()
+        print(f"training {model_name} on {train_ds} "
+              f"(V={g.num_vertices} E={g.num_edges})", flush=True)
+        log = lambda s: print(s, flush=True)
+        extra: list[tuple[str, np.ndarray]] = []
+        if model_name == "astgcn":
+            params, metric, mean, std = train_astgcn(
+                g, ms.hidden, args.astgcn_steps, 5e-3, 31, log)
+            extra = [("norm_mean", mean), ("norm_std", std)]
+            report.append((key, f"test MAE {metric:.3f}"))
+        else:
+            lr = 1e-2
+            params, metric = train_classifier(
+                model_name, g, ms.hidden, args.epochs, lr, 31, log)
+            report.append((key, f"test acc {metric:.4f}"))
+        tensors = flatten_weights(model_name, params) + extra
+        out = os.path.join(args.out_dir, key + ".fgw")
+        fgio.write_fgw(out, tensors)
+        print(f"  -> {out}  ({time.time()-t0:.1f}s)", flush=True)
+    print("\nsummary:")
+    for k, m in report:
+        print(f"  {k}: {m}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""AOT pipeline tests: lowering produces parseable HLO text with the right
+entry layout, bucket geometry is sane, and the manifest indexes artifacts
+consistently."""
+
+import re
+
+import pytest
+
+from compile import specs
+from compile.aot import artifact_name, lower_layer
+from compile.models import REGISTRY
+
+
+def test_bucket_dims_monotone_and_capped():
+    ds = specs.DATASETS["siot"]
+    buckets = specs.buckets_for(ds)
+    assert buckets[0][0] == 1
+    v_full, e_full, l_full = buckets[0][1], buckets[0][2], buckets[0][3]
+    assert v_full >= ds.vertices and e_full >= ds.directed_edges
+    assert l_full == v_full
+    vs = [v for _, v, _, _ in buckets]
+    assert vs == sorted(vs, reverse=True)
+    for _, v, e, l in buckets:
+        assert v % specs.V_ROUND == 0
+        assert e % specs.E_ROUND == 0
+        assert v <= v_full and e <= e_full
+        assert l <= v  # owned rows fit within the halo-augmented bucket
+
+
+def test_bucket_covers_partition_with_halo():
+    """A 1/d partition + halo margin must fit its bucket."""
+    ds = specs.DATASETS["yelp"]
+    for frac, v_max, e_max, l_max in specs.buckets_for(ds):
+        if frac == 1:
+            continue
+        assert v_max >= ds.vertices / frac * 1.3
+        assert e_max >= ds.directed_edges / frac
+        assert l_max >= ds.vertices / frac
+
+
+@pytest.mark.parametrize("model", ["gcn", "gat", "sage"])
+def test_lowered_hlo_entry_layout(model):
+    mod = REGISTRY[model]
+    lds = mod.layers(12, 16, 3, 128, 512, use_kernels=True)
+    text = lower_layer(lds[0])
+    assert text.startswith("HloModule")
+    m = re.search(r"entry_computation_layout=\{\(([^)]*)\)", text)
+    assert m, "no entry layout in HLO text"
+    n_inputs = len(lds[0].param_spec) + len(lds[0].data_spec)
+    # count top-level params (f32[...]/s32[...]) in the layout
+    params = re.findall(r"[fs]32\[", m.group(1))
+    assert len(params) == n_inputs
+
+
+def test_lowered_astgcn_is_dense_and_small():
+    mod = REGISTRY["astgcn"]
+    lds = mod.layers(36, 64, 1, 128, 0, num_layers=1, use_kernels=True)
+    text = lower_layer(lds[0])
+    assert "f32[128,128]" in text  # dense adjacency input
+    assert len(text) < 2_000_000
+
+
+def test_artifact_names_unique_across_pairs():
+    names = set()
+    for model, ds_name in specs.PAIRS:
+        for frac, _, _, _ in specs.buckets_for(specs.DATASETS[ds_name]):
+            for layer in range(specs.MODELS[model].layers):
+                n = artifact_name(model, ds_name, frac, layer)
+                assert n not in names
+                names.add(n)
+    assert len(names) > 50  # the artifact set is substantial
+
+
+def test_pairs_reference_known_specs():
+    for model, ds in specs.PAIRS:
+        assert model in specs.MODELS
+        assert ds in specs.DATASETS

@@ -1,0 +1,90 @@
+"""Round-trip tests for the .fgr / .fgw binary interchange formats."""
+
+import numpy as np
+import pytest
+
+from compile import fgio
+
+
+def make_graph(rng, v=20, e=60, f=5, classes=3, dur=1):
+    deg = rng.integers(0, 6, v)
+    indptr = np.zeros(v + 1, np.uint64)
+    indptr[1:] = np.cumsum(deg)
+    e = int(indptr[-1])
+    indices = rng.integers(0, v, e).astype(np.uint32)
+    shape = (v, f, dur) if dur > 1 else (v, f)
+    features = rng.normal(size=shape).astype(np.float32)
+    labels = (rng.integers(0, classes, v).astype(np.int32)
+              if classes > 0 else None)
+    return fgio.Graph(indptr=indptr, indices=indices, features=features,
+                      labels=labels,
+                      coords=rng.normal(size=(v, 2)).astype(np.float32),
+                      num_classes=classes, duration=dur)
+
+
+def test_fgr_roundtrip(tmp_path):
+    rng = np.random.default_rng(0)
+    g = make_graph(rng)
+    p = str(tmp_path / "g.fgr")
+    fgio.write_fgr(p, g)
+    g2 = fgio.read_fgr(p)
+    np.testing.assert_array_equal(g2.indptr, g.indptr)
+    np.testing.assert_array_equal(g2.indices, g.indices)
+    np.testing.assert_array_equal(g2.features, g.features)
+    np.testing.assert_array_equal(g2.labels, g.labels)
+    np.testing.assert_array_equal(g2.coords, g.coords)
+    assert g2.num_classes == 3 and g2.duration == 1
+
+
+def test_fgr_roundtrip_temporal_with_targets(tmp_path):
+    rng = np.random.default_rng(1)
+    g = make_graph(rng, dur=7, classes=0)
+    g.labels = None
+    g.targets = rng.normal(size=(g.num_vertices, 4)).astype(np.float32)
+    p = str(tmp_path / "t.fgr")
+    fgio.write_fgr(p, g)
+    g2 = fgio.read_fgr(p)
+    assert g2.features.shape == g.features.shape
+    assert g2.labels is None
+    np.testing.assert_array_equal(g2.targets, g.targets)
+
+
+def test_fgr_bad_magic(tmp_path):
+    p = tmp_path / "bad.fgr"
+    p.write_bytes(b"NOPE" + b"\0" * 64)
+    with pytest.raises(ValueError, match="bad magic"):
+        fgio.read_fgr(str(p))
+
+
+def test_fgw_roundtrip(tmp_path):
+    rng = np.random.default_rng(2)
+    tensors = [
+        ("l0.w", rng.normal(size=(5, 7)).astype(np.float32)),
+        ("l0.b", rng.normal(size=(7,)).astype(np.float32)),
+        ("ids", rng.integers(0, 100, (3, 2)).astype(np.int32)),
+        ("scalarish", np.array([3.5], np.float32)),
+    ]
+    p = str(tmp_path / "w.fgw")
+    fgio.write_fgw(p, tensors)
+    out = fgio.read_fgw(p)
+    assert [n for n, _ in out] == [n for n, _ in tensors]
+    for (_, a), (_, b) in zip(out, tensors):
+        np.testing.assert_array_equal(a, b)
+        assert a.dtype == b.dtype
+
+
+def test_fgw_rejects_unsupported_dtype(tmp_path):
+    with pytest.raises(ValueError, match="unsupported dtype"):
+        fgio.write_fgw(str(tmp_path / "x.fgw"),
+                       [("bad", np.zeros(3, np.float64))])
+
+
+def test_edge_list_matches_csr():
+    rng = np.random.default_rng(3)
+    g = make_graph(rng)
+    src, dst = g.edge_list()
+    assert len(src) == g.num_edges
+    for v in range(g.num_vertices):
+        lo, hi = int(g.indptr[v]), int(g.indptr[v + 1])
+        assert np.all(src[lo:hi] == v)
+        np.testing.assert_array_equal(dst[lo:hi], g.indices[lo:hi])

@@ -1,0 +1,140 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes/acts/tiles; the oracle is the ground truth the
+whole stack (including the Rust-executed HLO) is anchored to.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.fused_linear import (
+    ACT_ELU, ACT_LEAKY_RELU, ACT_NONE, ACT_RELU, fused_linear,
+    mxu_utilization_estimate, vmem_footprint_bytes)
+from compile.kernels.scale_combine import (
+    COMBINE_ADD_SELF, COMBINE_AGG_ONLY, scale_combine)
+
+ACTS = [ACT_NONE, ACT_RELU, ACT_ELU, ACT_LEAKY_RELU]
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32))
+
+
+@pytest.mark.parametrize("act", ACTS)
+def test_fused_linear_matches_ref_all_acts(act):
+    rng = np.random.default_rng(act)
+    x, w, b = rand(rng, 200, 52), rand(rng, 52, 64), rand(rng, 64)
+    got = fused_linear(x, w, b, act=act)
+    want = ref.fused_linear_ref(x, w, b, act=act)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 300),
+    k=st.integers(1, 140),
+    n=st.integers(1, 140),
+    act=st.sampled_from(ACTS),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_linear_shape_sweep(m, k, n, act, seed):
+    rng = np.random.default_rng(seed)
+    x, w, b = rand(rng, m, k), rand(rng, k, n), rand(rng, n)
+    got = fused_linear(x, w, b, act=act)
+    want = ref.fused_linear_ref(x, w, b, act=act)
+    assert got.shape == (m, n)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("bm,bn,bk", [(64, 64, 64), (128, 128, 128),
+                                      (256, 128, 64), (32, 256, 128)])
+def test_fused_linear_tile_sweep(bm, bn, bk):
+    """Any tile configuration must give the same numbers (perf knob only)."""
+    rng = np.random.default_rng(3)
+    x, w, b = rand(rng, 300, 100), rand(rng, 100, 70), rand(rng, 70)
+    got = fused_linear(x, w, b, act=ACT_RELU, bm=bm, bn=bn, bk=bk)
+    want = ref.fused_linear_ref(x, w, b, act=ACT_RELU)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_fused_linear_exact_tile_no_padding():
+    rng = np.random.default_rng(4)
+    x, w, b = rand(rng, 256, 128), rand(rng, 128, 128), rand(rng, 128)
+    got = fused_linear(x, w, b)
+    want = ref.fused_linear_ref(x, w, b)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("mode", [COMBINE_ADD_SELF, COMBINE_AGG_ONLY])
+def test_scale_combine_modes(mode):
+    rng = np.random.default_rng(5)
+    agg, h = rand(rng, 333, 52), rand(rng, 333, 52)
+    s = jnp.asarray(rng.random((333, 1)).astype(np.float32))
+    got = scale_combine(agg, h, s, mode=mode)
+    want = ref.scale_combine_ref(agg, h, s, mode=mode)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(v=st.integers(1, 600), f=st.integers(1, 128),
+       seed=st.integers(0, 2**31 - 1))
+def test_scale_combine_shape_sweep(v, f, seed):
+    rng = np.random.default_rng(seed)
+    agg, h = rand(rng, v, f), rand(rng, v, f)
+    s = jnp.asarray(rng.random((v, 1)).astype(np.float32))
+    got = scale_combine(agg, h, s)
+    want = ref.scale_combine_ref(agg, h, s)
+    assert got.shape == (v, f)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_segment_aggregate_padding_edges_are_noops():
+    rng = np.random.default_rng(6)
+    h = rand(rng, 10, 4)
+    src = jnp.array([0, 1, 2, 0, 0], jnp.int32)
+    dst = jnp.array([3, 3, 4, 0, 0], jnp.int32)
+    ew = jnp.array([1, 1, 1, 0, 0], jnp.float32)  # last two are padding
+    agg = ref.segment_aggregate(h, src, dst, ew, 10)
+    np.testing.assert_allclose(agg[3], h[0] + h[1], rtol=1e-6)
+    np.testing.assert_allclose(agg[4], h[2], rtol=1e-6)
+    np.testing.assert_allclose(agg[0], jnp.zeros(4), atol=0)
+
+
+def test_segment_softmax_sums_to_one_per_destination():
+    rng = np.random.default_rng(7)
+    e, v = 200, 40
+    src = jnp.asarray(rng.integers(0, v, e).astype(np.int32))
+    dst = jnp.asarray(rng.integers(0, v, e).astype(np.int32))
+    ew = jnp.asarray((rng.random(e) > 0.3).astype(np.float32))
+    logits = rand(rng, e)
+    alpha = ref.segment_softmax(logits, dst, ew, v)
+    sums = np.zeros(v, np.float32)
+    np.add.at(sums, np.asarray(dst), np.asarray(alpha))
+    has_edge = np.zeros(v, bool)
+    np.add.at(has_edge, np.asarray(dst)[np.asarray(ew) > 0], True)
+    np.testing.assert_allclose(sums[has_edge], 1.0, rtol=1e-5)
+    assert np.all(np.asarray(alpha)[np.asarray(ew) == 0] == 0.0)
+
+
+def test_segment_softmax_extreme_logits_stable():
+    src = jnp.array([0, 1], jnp.int32)
+    dst = jnp.array([2, 2], jnp.int32)
+    ew = jnp.ones(2, jnp.float32)
+    alpha = ref.segment_softmax(jnp.array([1e4, -1e4], jnp.float32),
+                                dst, ew, 3)
+    assert np.isfinite(np.asarray(alpha)).all()
+    np.testing.assert_allclose(float(alpha.sum()), 1.0, rtol=1e-5)
+
+
+def test_vmem_footprint_within_budget():
+    # 128^3 tiles must fit comfortably in 16 MiB VMEM.
+    assert vmem_footprint_bytes(128, 128, 128) < 16 * 2**20 // 8
+
+
+def test_mxu_utilization_estimate_bounds():
+    assert mxu_utilization_estimate(128, 128, 128) == 1.0
+    u = mxu_utilization_estimate(129, 1, 1)
+    assert 0 < u < 0.01

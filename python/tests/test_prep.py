@@ -1,0 +1,101 @@
+"""Tests for the graph→model-input preparation (prep.py) — the conventions
+the Rust runtime mirrors (rust/src/runtime/pad.rs)."""
+
+import numpy as np
+import pytest
+
+from compile import fgio, prep
+
+
+def make_graph(rng, v=30, classes=2, f=6, dur=1):
+    deg = rng.integers(1, 5, v)
+    indptr = np.zeros(v + 1, np.uint64)
+    indptr[1:] = np.cumsum(deg)
+    indices = rng.integers(0, v, int(indptr[-1])).astype(np.uint32)
+    shape = (v, f, dur) if dur > 1 else (v, f)
+    return fgio.Graph(
+        indptr=indptr,
+        indices=indices,
+        features=rng.normal(size=shape).astype(np.float32),
+        labels=(rng.integers(0, classes, v).astype(np.int32)
+                if classes > 0 else None),
+        num_classes=classes,
+        duration=dur,
+    )
+
+
+def test_gcn_inv_deg_is_one_over_degree_plus_one():
+    rng = np.random.default_rng(0)
+    g = make_graph(rng)
+    src, dst, ew, inv_deg = prep.edge_arrays(g, "gcn")
+    deg_in = np.bincount(dst, minlength=g.num_vertices)
+    np.testing.assert_allclose(inv_deg[:, 0], 1.0 / (deg_in + 1), rtol=1e-6)
+    assert len(src) == g.num_edges
+    assert np.all(ew == 1.0)
+
+
+def test_gat_appends_self_loops_last():
+    rng = np.random.default_rng(1)
+    g = make_graph(rng)
+    v = g.num_vertices
+    src, dst, ew, inv_deg = prep.edge_arrays(g, "gat")
+    assert len(src) == g.num_edges + v
+    np.testing.assert_array_equal(src[-v:], np.arange(v))
+    np.testing.assert_array_equal(dst[-v:], np.arange(v))
+    assert np.all(inv_deg == 1.0)
+
+
+def test_sage_inv_deg_floors_at_one():
+    rng = np.random.default_rng(2)
+    g = make_graph(rng)
+    # force a vertex with no in-edges
+    g.indices = np.where(g.indices == 0, 1, g.indices).astype(np.uint32)
+    _, dst, _, inv_deg = prep.edge_arrays(g, "sage")
+    assert 0 not in dst
+    assert inv_deg[0, 0] == 1.0
+
+
+def test_dense_norm_adj_rows_sum_to_one():
+    rng = np.random.default_rng(3)
+    g = make_graph(rng)
+    a = prep.dense_norm_adj(g)
+    np.testing.assert_allclose(a.sum(axis=1), 1.0, rtol=1e-5)
+    # self loop present
+    assert np.all(np.diag(a) > 0)
+
+
+def test_pems_windows_alignment_and_units():
+    rng = np.random.default_rng(4)
+    g = make_graph(rng, v=10, classes=0, f=3, dur=80)
+    g.labels = None
+    xs, ys, mean, std = prep.pems_windows(g, window=12, horizon=12,
+                                          stride=4)
+    n, v, d = xs.shape
+    assert (v, d) == (10, 36)
+    assert ys.shape == (n, 10, 12)
+    # targets are in ORIGINAL units: first target of window 0 equals the
+    # series at t = window
+    np.testing.assert_allclose(ys[0, :, 0], g.features[:, 0, 12],
+                               rtol=1e-6)
+    # inputs are standardized per channel
+    assert abs(float(xs.mean())) < 0.5
+    # de-normalizing the input recovers the series
+    x0 = xs[0, 0, :12] * std[0] + mean[0]
+    np.testing.assert_allclose(x0, g.features[0, 0, :12], rtol=1e-4)
+
+
+def test_train_test_split_is_deterministic_and_disjoint():
+    tr1, te1 = prep.train_test_split(1000)
+    tr2, te2 = prep.train_test_split(1000)
+    np.testing.assert_array_equal(tr1, tr2)
+    assert set(tr1).isdisjoint(set(te1))
+    assert len(tr1) + len(te1) == 1000
+    assert 0.6 < len(tr1) / 1000 < 0.8
+
+
+def test_split_matches_rust_hash():
+    """The Rust side (serving/accuracy.rs) re-derives the same split."""
+    _, te = prep.train_test_split(50)
+    expected = [i for i in range(50)
+                if (i * 2654435761 % 2**32) % 1000 >= 700]
+    np.testing.assert_array_equal(te, expected)

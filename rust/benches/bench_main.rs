@@ -1,0 +1,245 @@
+//! `cargo bench` — custom harness (no criterion in the offline registry;
+//! rust/src/util/timer.rs provides the measurement core).
+//!
+//! Two tiers:
+//!  * per-paper-experiment end-to-end benches (one per table/figure; the
+//!    full-size regeneration lives in `repro exp`, these are the
+//!    continuously-runnable scaled versions), and
+//!  * hot-path microbenches for the §Perf optimization loop (partitioner,
+//!    assignment solvers, CO codec stages, BSP step, reference kernels).
+//!
+//! Filter with `cargo bench -- <substring>`.
+
+use fograph::compress::{self, bitshuffle, lz4, Codec};
+use fograph::fog::Cluster;
+use fograph::graph::{datasets, generate, subgraph, DatasetSpec};
+use fograph::net::NetKind;
+use fograph::partition::{self, MultilevelParams};
+use fograph::placement::{hungarian, lbap};
+use fograph::profile::PerfModel;
+use fograph::runtime::{pad, reference, Engine, EngineKind};
+use fograph::serving::{serve, Placement, ServeOpts};
+use fograph::util::rng::Rng;
+use fograph::util::timer::{bench, black_box, BenchResult};
+
+fn siot_like() -> fograph::graph::Graph {
+    // 1/8-scale SIoT twin: keeps bench turnaround snappy
+    let (mut g, _) = generate::sbm(2048, 18_000, 12, 0.82, 11);
+    let mut rng = Rng::new(3);
+    g.feature_dim = 52;
+    g.features = (0..2048 * 52)
+        .map(|_| if rng.bool(0.06) { 1.0 } else { 0.0 })
+        .collect();
+    g.num_classes = 2;
+    g.labels = Some((0..2048).map(|v| (v % 2) as i32).collect());
+    g
+}
+
+fn spec_for(g: &fograph::graph::Graph, name: &'static str) -> DatasetSpec {
+    DatasetSpec {
+        name,
+        vertices: g.num_vertices(),
+        edges: g.undirected_edges(),
+        feature_dim: g.feature_dim,
+        classes: g.num_classes,
+        duration: 1,
+        window: 1,
+        seed: 0,
+    }
+}
+
+fn main() {
+    // cargo passes flags like --bench; the first non-flag arg filters
+    let filter = std::env::args()
+        .skip(1)
+        .find(|a| !a.starts_with('-'))
+        .unwrap_or_default();
+    let mut results: Vec<BenchResult> = Vec::new();
+    let mut run = |name: &str, min_s: f64, f: &mut dyn FnMut()| {
+        if !filter.is_empty() && !name.contains(&filter) {
+            return;
+        }
+        let r = bench(name, min_s, 200, f);
+        println!("{r}");
+        results.push(r);
+    };
+
+    println!("== Fograph bench suite (scaled workloads; see `repro exp` \
+              for full-size regenerations) ==\n");
+    let g = siot_like();
+    let spec = spec_for(&g, "benchsiot");
+
+    // ---- hot paths: partitioning + placement -------------------------------
+    run("partition/multilevel_k6_2k", 1.0, &mut || {
+        black_box(partition::partition(&g, 6,
+                                       &MultilevelParams::default()));
+    });
+    let mut rng = Rng::new(5);
+    let cost: Vec<Vec<f64>> = (0..64)
+        .map(|_| (0..64).map(|_| rng.f64() * 100.0).collect())
+        .collect();
+    run("placement/hungarian_64x64", 0.5, &mut || {
+        black_box(hungarian::min_cost_assignment(&cost));
+    });
+    run("placement/lbap_binary_search_64x64", 0.5, &mut || {
+        black_box(lbap::solve(&cost));
+    });
+    run("placement/lbap_linear_descent_64x64", 0.5, &mut || {
+        black_box(lbap::solve_linear_descent(&cost));
+    });
+
+    // ---- hot paths: communication optimizer --------------------------------
+    let payload: Vec<u8> = {
+        let mut rng = Rng::new(7);
+        let mut v = vec![0u8; 1 << 20];
+        for i in 0..v.len() {
+            if rng.bool(0.08) {
+                v[i] = rng.below(255) as u8;
+            }
+        }
+        v
+    };
+    run("co/lz4_compress_1MiB_sparse", 0.5, &mut || {
+        black_box(lz4::compress(&payload));
+    });
+    let compressed = lz4::compress(&payload);
+    run("co/lz4_decompress_1MiB_sparse", 0.5, &mut || {
+        black_box(lz4::decompress(&compressed).unwrap());
+    });
+    run("co/bitshuffle_1MiB_w4", 0.5, &mut || {
+        black_box(bitshuffle::shuffle(&payload, 4));
+    });
+    let rows: Vec<&[f32]> = g
+        .features
+        .chunks_exact(g.feature_dim)
+        .collect();
+    let degrees: Vec<u64> =
+        g.degrees().iter().map(|&d| d as u64).collect();
+    let daq = ServeOpts::co_codec(&g);
+    run("co/pack_daq_2k_vertices", 0.5, &mut || {
+        black_box(compress::pack(&rows, &degrees, &daq));
+    });
+    let packed = compress::pack(&rows, &degrees, &daq);
+    run("co/unpack_daq_2k_vertices", 0.5, &mut || {
+        let mut out = Vec::new();
+        compress::unpack(&packed, &mut out).unwrap();
+        black_box(out);
+    });
+
+    // ---- hot paths: reference kernels + BSP --------------------------------
+    let assignment: Vec<u32> =
+        (0..g.num_vertices()).map(|v| (v % 4) as u32).collect();
+    let (subs, _) = subgraph::extract(&g, &assignment, 4);
+    let edges = pad::prep_edges("gcn", &subs[0]);
+    let h: Vec<f32> = vec![0.5; subs[0].n_total() * 52];
+    run("kernel/segment_aggregate_512v", 0.5, &mut || {
+        black_box(reference::segment_aggregate(&h, 52, &edges,
+                                               edges.n));
+    });
+    let w = vec![0.01f32; 52 * 64];
+    let b = vec![0f32; 64];
+    run("kernel/matmul_512x52x64", 0.5, &mut || {
+        black_box(reference::matmul_bias(&h, edges.n, 52, &w, 64, &b));
+    });
+
+    let dir = std::env::temp_dir().join("bench_engine");
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut engine = Engine::new(EngineKind::Reference, &dir).unwrap();
+    run("exec/bsp_gcn_2layer_4fogs", 1.0, &mut || {
+        black_box(
+            fograph::exec::run_bsp(&g, &g.features, 52, &assignment, 4,
+                                   "gcn", "benchsiot", 2, &mut engine)
+                .unwrap(),
+        );
+    });
+
+    // ---- per-figure end-to-end benches (scaled) -----------------------------
+    let omegas6 = vec![PerfModel::uncalibrated(); 6];
+    let cases: Vec<(&str, Cluster, ServeOpts)> = vec![
+        (
+            "fig3/cloud_gcn_4g",
+            Cluster::cloud(NetKind::Cell4G),
+            ServeOpts { wan: true,
+                        ..ServeOpts::new("gcn", Placement::SingleNode(0),
+                                         Codec::None) },
+        ),
+        (
+            "fig3/multifog_strawman_4g",
+            Cluster::testbed(NetKind::Cell4G),
+            ServeOpts::new("gcn", Placement::MetisRandom(3), Codec::None),
+        ),
+        (
+            "fig11/fograph_gcn_4g",
+            Cluster::testbed(NetKind::Cell4G),
+            ServeOpts::new("gcn", Placement::Iep, ServeOpts::co_codec(&g)),
+        ),
+        (
+            "fig11/fograph_gat_5g",
+            Cluster::testbed(NetKind::Cell5G),
+            ServeOpts::new("gat", Placement::Iep, ServeOpts::co_codec(&g)),
+        ),
+        (
+            "fig11/fograph_sage_wifi",
+            Cluster::testbed(NetKind::Wifi),
+            ServeOpts::new("sage", Placement::Iep,
+                           ServeOpts::co_codec(&g)),
+        ),
+        (
+            "fig8/iep_e1",
+            Cluster::env("E1").unwrap(),
+            ServeOpts::new("gcn", Placement::Iep, Codec::None),
+        ),
+        (
+            "fig8/greedy_e1",
+            Cluster::env("E1").unwrap(),
+            ServeOpts::new("gcn", Placement::MetisGreedy, Codec::None),
+        ),
+        (
+            "fig15/fograph_wo_co",
+            Cluster::case_study(NetKind::Cell4G),
+            ServeOpts::new("gcn", Placement::Iep, Codec::None),
+        ),
+    ];
+    for (name, cluster, opts) in cases {
+        let om = &omegas6[..cluster.len()];
+        run(name, 1.0, &mut || {
+            black_box(
+                serve(&g, &spec, &cluster, &opts, om, &mut engine)
+                    .unwrap(),
+            );
+        });
+    }
+
+    // pems / astgcn (fig13, table5 path)
+    let pems = datasets::generate("pems");
+    let pspec = datasets::PEMS;
+    let omegas4 = vec![PerfModel::uncalibrated(); 4];
+    let pcluster = Cluster::case_study(NetKind::Cell5G);
+    let popts = ServeOpts::new("astgcn", Placement::Iep,
+                               ServeOpts::co_codec(&pems));
+    run("fig13/fograph_astgcn_5g", 1.0, &mut || {
+        black_box(
+            serve(&pems, &pspec, &pcluster, &popts, &omegas4, &mut engine)
+                .unwrap(),
+        );
+    });
+
+    // scheduler step (fig16 path)
+    let cs = Cluster::case_study(NetKind::Wifi);
+    let sopts = ServeOpts::new("gcn", Placement::Iep, Codec::None);
+    let mut assign2 = fograph::serving::pipeline::place(
+        &g, &cs, &sopts, &omegas6[..4], &spec,
+    );
+    run("fig16/scheduler_step_diffusion", 0.5, &mut || {
+        let mut a = assign2.clone();
+        black_box(fograph::scheduler::schedule(
+            &g, &spec, &cs, &sopts, &mut a,
+            &[0.1, 0.1, 0.1, 0.35],
+            &omegas6[..4],
+            &fograph::scheduler::SchedulerConfig::default(),
+        ));
+    });
+    assign2.clear();
+
+    println!("\n{} benches complete.", results.len());
+}

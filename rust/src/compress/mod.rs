@@ -1,0 +1,12 @@
+//! Communication optimizer substrate (paper §III-D): degree-aware
+//! quantization, byte-plane shuffling, a from-scratch LZ4 block codec, and
+//! the end-to-end pack/unpack pipeline (plus DEFLATE/zstd comparators for
+//! the ablation benches).
+
+pub mod bitshuffle;
+pub mod lz4;
+pub mod pipeline;
+pub mod quantize;
+
+pub use pipeline::{pack, unpack, Codec, Packed};
+pub use quantize::{DaqConfig, IntervalScheme, DEFAULT_BITS};

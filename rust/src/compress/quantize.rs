@@ -1,0 +1,297 @@
+//! Degree-aware quantization (DAQ) — paper §III-D, Fig. 9, Theorem 2.
+//!
+//! Each vertex's feature vector is linearly quantized to a bitwidth chosen
+//! by the vertex's degree: higher-degree vertices assimilate more neighbor
+//! information during aggregation, smoothing their quantization error, so
+//! they tolerate LOWER bitwidths. The degree triplet ⟨D1, D2, D3⟩ splits
+//! vertices into four intervals with bitwidths ⟨q0, q1, q2, q3⟩
+//! (default ⟨64, 32, 16, 8⟩; source features are 64-bit sensor readings).
+
+use crate::util::stats::EmpiricalCdf;
+
+/// Bitwidth assignment configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DaqConfig {
+    /// Degree interval boundaries ⟨D1, D2, D3⟩ (right-open intervals).
+    pub thresholds: [u64; 3],
+    /// Bits for each interval ⟨q0, q1, q2, q3⟩, low-degree first.
+    pub bits: [u8; 4],
+}
+
+/// How interval boundaries are derived from the degree distribution.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IntervalScheme {
+    /// Quartiles of the degree distribution (equal vertex mass — the
+    /// effective default for power-law IoT graphs).
+    EqualMass,
+    /// Equal-width intervals over [0, D_max].
+    EqualWidth,
+}
+
+pub const DEFAULT_BITS: [u8; 4] = [64, 32, 16, 8];
+
+impl DaqConfig {
+    /// Derive ⟨D1,D2,D3⟩ from a graph's degree multiset.
+    pub fn from_degrees(degrees: &[u32], scheme: IntervalScheme,
+                        bits: [u8; 4]) -> DaqConfig {
+        let cdf = EmpiricalCdf::new(
+            degrees.iter().map(|&d| d as u64).collect(),
+        );
+        let thresholds = match scheme {
+            IntervalScheme::EqualMass => [
+                cdf.quantile(0.25).max(1),
+                cdf.quantile(0.50).max(2),
+                cdf.quantile(0.75).max(3),
+            ],
+            IntervalScheme::EqualWidth => {
+                let dmax = cdf.max().max(4);
+                [dmax / 4, dmax / 2, 3 * dmax / 4]
+            }
+        };
+        // enforce strictly increasing thresholds
+        let mut t = thresholds;
+        if t[1] <= t[0] {
+            t[1] = t[0] + 1;
+        }
+        if t[2] <= t[1] {
+            t[2] = t[1] + 1;
+        }
+        DaqConfig { thresholds: t, bits }
+    }
+
+    /// Bitwidth for a vertex of degree `d`.
+    pub fn bits_for_degree(&self, d: u64) -> u8 {
+        let [d1, d2, d3] = self.thresholds;
+        if d < d1 {
+            self.bits[0]
+        } else if d < d2 {
+            self.bits[1]
+        } else if d < d3 {
+            self.bits[2]
+        } else {
+            self.bits[3]
+        }
+    }
+
+    /// Theorem 2: compression ratio
+    /// (1/Q)·[q3 − Σ_i F_D(D_i)(q_i − q_{i−1})], Q = source bitwidth.
+    pub fn theorem2_ratio(&self, degrees: &[u32], source_bits: f64) -> f64 {
+        let cdf = EmpiricalCdf::new(
+            degrees.iter().map(|&d| d as u64).collect(),
+        );
+        let q = [
+            self.bits[0] as f64,
+            self.bits[1] as f64,
+            self.bits[2] as f64,
+            self.bits[3] as f64,
+        ];
+        let mut acc = q[3];
+        for i in 1..=3 {
+            // F_D is P(D <= d); intervals are right-open, so use D_i - 1
+            let f = cdf.at(self.thresholds[i - 1].saturating_sub(1));
+            acc -= f * (q[i] - q[i - 1]);
+        }
+        acc / source_bits
+    }
+}
+
+/// A quantized feature vector: linear quantization over [min, max] with
+/// 2^bits levels (bits in {8, 16}); 32/64-bit vertices keep float payloads.
+#[derive(Clone, Debug)]
+pub struct QuantizedVertex {
+    pub bits: u8,
+    pub min: f32,
+    pub scale: f32,
+    pub payload: Vec<u8>,
+    pub dims: usize,
+}
+
+/// Per-vertex wire size in bytes (payload + 9-byte header: bits + min +
+/// scale; matches the packing deployed on end devices, §III-D).
+pub fn wire_bytes(dims: usize, bits: u8) -> usize {
+    9 + dims * bits as usize / 8
+}
+
+pub fn quantize(features: &[f32], bits: u8) -> QuantizedVertex {
+    let dims = features.len();
+    match bits {
+        64 => {
+            // features originate as f64 readings: ship full doubles
+            let mut payload = Vec::with_capacity(dims * 8);
+            for &x in features {
+                payload.extend_from_slice(&(x as f64).to_le_bytes());
+            }
+            QuantizedVertex { bits, min: 0.0, scale: 1.0, payload, dims }
+        }
+        32 => {
+            let mut payload = Vec::with_capacity(dims * 4);
+            for &x in features {
+                payload.extend_from_slice(&x.to_le_bytes());
+            }
+            QuantizedVertex { bits, min: 0.0, scale: 1.0, payload, dims }
+        }
+        16 | 8 => {
+            let mut lo = f32::INFINITY;
+            let mut hi = f32::NEG_INFINITY;
+            for &x in features {
+                lo = lo.min(x);
+                hi = hi.max(x);
+            }
+            if !lo.is_finite() {
+                lo = 0.0;
+                hi = 0.0;
+            }
+            let levels = ((1u32 << bits) - 1) as f32;
+            let range = (hi - lo).max(1e-12);
+            let scale = range / levels;
+            let mut payload =
+                Vec::with_capacity(dims * bits as usize / 8);
+            for &x in features {
+                let q = ((x - lo) / scale).round().clamp(0.0, levels);
+                if bits == 16 {
+                    payload.extend_from_slice(&(q as u16).to_le_bytes());
+                } else {
+                    payload.push(q as u8);
+                }
+            }
+            QuantizedVertex { bits, min: lo, scale, payload, dims }
+        }
+        other => panic!("unsupported bitwidth {other}"),
+    }
+}
+
+pub fn dequantize(q: &QuantizedVertex) -> Vec<f32> {
+    match q.bits {
+        64 => q
+            .payload
+            .chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().unwrap()) as f32)
+            .collect(),
+        32 => q
+            .payload
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect(),
+        16 => q
+            .payload
+            .chunks_exact(2)
+            .map(|c| {
+                q.min + u16::from_le_bytes(c.try_into().unwrap()) as f32
+                    * q.scale
+            })
+            .collect(),
+        8 => q.payload.iter().map(|&b| q.min + b as f32 * q.scale).collect(),
+        _ => unreachable!(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn bits_for_degree_respects_intervals() {
+        let cfg = DaqConfig { thresholds: [4, 8, 16], bits: DEFAULT_BITS };
+        assert_eq!(cfg.bits_for_degree(0), 64);
+        assert_eq!(cfg.bits_for_degree(3), 64);
+        assert_eq!(cfg.bits_for_degree(4), 32);
+        assert_eq!(cfg.bits_for_degree(7), 32);
+        assert_eq!(cfg.bits_for_degree(8), 16);
+        assert_eq!(cfg.bits_for_degree(16), 8);
+        assert_eq!(cfg.bits_for_degree(1000), 8);
+    }
+
+    #[test]
+    fn equal_mass_thresholds_split_quartiles() {
+        let degrees: Vec<u32> = (1..=100).collect();
+        let cfg = DaqConfig::from_degrees(
+            &degrees,
+            IntervalScheme::EqualMass,
+            DEFAULT_BITS,
+        );
+        // quartiles of 1..=100
+        assert!(cfg.thresholds[0] >= 24 && cfg.thresholds[0] <= 27);
+        assert!(cfg.thresholds[1] >= 49 && cfg.thresholds[1] <= 52);
+        assert!(cfg.thresholds[2] >= 74 && cfg.thresholds[2] <= 77);
+    }
+
+    #[test]
+    fn roundtrip_error_bounds() {
+        let mut rng = Rng::new(3);
+        let feats: Vec<f32> =
+            (0..64).map(|_| rng.normal_f32(0.0, 2.0)).collect();
+        for &bits in &[64u8, 32, 16, 8] {
+            let q = quantize(&feats, bits);
+            let back = dequantize(&q);
+            assert_eq!(back.len(), feats.len());
+            let max_err = feats
+                .iter()
+                .zip(&back)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            let range = 4.0 * 2.0; // ~spread of the samples
+            let bound = match bits {
+                64 | 32 => 1e-6,
+                16 => range / 65535.0 * 1.01,
+                8 => range / 255.0 * 1.01,
+                _ => unreachable!(),
+            };
+            assert!(
+                max_err <= bound,
+                "bits={bits} err={max_err} bound={bound}"
+            );
+        }
+    }
+
+    #[test]
+    fn wire_bytes_shrink_with_bits() {
+        assert!(wire_bytes(52, 8) < wire_bytes(52, 16));
+        assert!(wire_bytes(52, 16) < wire_bytes(52, 32));
+        assert!(wire_bytes(52, 32) < wire_bytes(52, 64));
+        assert_eq!(wire_bytes(52, 8), 9 + 52);
+    }
+
+    #[test]
+    fn theorem2_matches_actual_payload_ratio() {
+        // power-law-ish degrees
+        let mut rng = Rng::new(9);
+        let degrees: Vec<u32> = (0..5000)
+            .map(|_| {
+                let u = rng.f64();
+                ((1.0 / (1.0 - u)).powf(0.7) as u32).min(500)
+            })
+            .collect();
+        let cfg = DaqConfig::from_degrees(
+            &degrees,
+            IntervalScheme::EqualMass,
+            DEFAULT_BITS,
+        );
+        let predicted = cfg.theorem2_ratio(&degrees, 64.0);
+        // actual: average bits over vertices / 64 (payload only)
+        let total_bits: f64 = degrees
+            .iter()
+            .map(|&d| cfg.bits_for_degree(d as u64) as f64)
+            .sum();
+        let actual = total_bits / degrees.len() as f64 / 64.0;
+        assert!(
+            (predicted - actual).abs() < 0.02,
+            "thm2 {predicted} vs actual {actual}"
+        );
+        // meaningful compression on skewed graphs
+        assert!(predicted < 0.75);
+    }
+
+    #[test]
+    fn constant_features_quantize_cleanly() {
+        let q = quantize(&[1.5; 10], 8);
+        let back = dequantize(&q);
+        assert!(back.iter().all(|&x| (x - 1.5).abs() < 1e-6));
+    }
+
+    #[test]
+    #[should_panic(expected = "unsupported bitwidth")]
+    fn rejects_weird_bitwidth() {
+        quantize(&[1.0], 12);
+    }
+}

@@ -1,0 +1,6 @@
+//! Distributed execution runtime (paper §III-E): BSP layer loop with
+//! halo-exchange synchronization between GNN layers.
+
+pub mod bsp;
+
+pub use bsp::{run as run_bsp, BspResult};

@@ -1,0 +1,86 @@
+//! Extension ablation (DESIGN.md §Perf / paper §III-D "tunable
+//! configurations ... left for future work"): the communication
+//! optimizer's design space — codec stages, DAQ interval schemes and
+//! bitwidth ladders — measured on the real dataset twins.
+
+use crate::compress::{self, quantize::IntervalScheme, Codec, DaqConfig,
+                      DEFAULT_BITS};
+use crate::graph::Graph;
+
+use super::context::Ctx;
+use super::tables::{f2, Table};
+
+fn pack_stats(g: &Graph, codec: &Codec) -> (f64, usize) {
+    let rows: Vec<&[f32]> =
+        g.features.chunks_exact(g.feature_dim * g.duration.max(1)).collect();
+    let degrees: Vec<u64> =
+        g.degrees().iter().map(|&d| d as u64).collect();
+    let p = compress::pack(&rows, &degrees, codec);
+    (p.compression_ratio(), p.wire_bytes)
+}
+
+pub fn run(ctx: &mut Ctx) -> String {
+    let mut out = String::from(
+        "## CO ablation — codec stages, interval schemes, bit ladders\n\n\
+         Compression ratio = wire bytes / raw f64 payload (lower is\n\
+         better). The paper fixes ⟨64,32,16,8⟩ with distribution-derived\n\
+         intervals and leaves the configuration space to future work —\n\
+         this table explores it on the twins.\n\n",
+    );
+    let mut t = Table::new(&["dataset", "codec", "ratio", "wire (MB)"]);
+    for ds in ["siot", "yelp"] {
+        let g = ctx.graph(ds).clone();
+        let degrees = g.degrees();
+        let mass = DaqConfig::from_degrees(&degrees,
+                                           IntervalScheme::EqualMass,
+                                           DEFAULT_BITS);
+        let width = DaqConfig::from_degrees(&degrees,
+                                            IntervalScheme::EqualWidth,
+                                            DEFAULT_BITS);
+        let aggressive = DaqConfig::from_degrees(&degrees,
+                                                 IntervalScheme::EqualMass,
+                                                 [32, 16, 8, 8]);
+        let cases: Vec<(String, Codec)> = vec![
+            ("raw f64".into(), Codec::None),
+            ("LZ4 only".into(), Codec::Lz4Only),
+            ("uniform 16-bit + LZ4".into(), Codec::Uniform(16)),
+            ("uniform 8-bit + LZ4".into(), Codec::Uniform(8)),
+            ("DAQ ⟨64,32,16,8⟩ equal-mass (paper)".into(),
+             Codec::Daq(mass)),
+            ("DAQ ⟨64,32,16,8⟩ equal-width".into(), Codec::Daq(width)),
+            ("DAQ ⟨32,16,8,8⟩ equal-mass".into(), Codec::Daq(aggressive)),
+        ];
+        for (name, codec) in cases {
+            let (ratio, wire) = pack_stats(&g, &codec);
+            t.row(vec![
+                ds.into(),
+                name,
+                format!("{ratio:.4}"),
+                f2(wire as f64 / 1e6),
+            ]);
+        }
+        // general-purpose comparators on the raw payload
+        let raw: Vec<u8> = g
+            .features
+            .iter()
+            .flat_map(|&x| (x as f64).to_le_bytes())
+            .collect();
+        let d = compress::pipeline::deflate_size(&raw);
+        let z = compress::pipeline::zstd_size(&raw);
+        t.row(vec![ds.into(), "DEFLATE (whole payload)".into(),
+                   format!("{:.4}", d as f64 / raw.len() as f64),
+                   f2(d as f64 / 1e6)]);
+        t.row(vec![ds.into(), "zstd-1 (whole payload)".into(),
+                   format!("{:.4}", z as f64 / raw.len() as f64),
+                   f2(z as f64 / 1e6)]);
+    }
+    out.push_str(&t.to_markdown());
+    out.push_str(
+        "\nReading: LZ4-only leaves precision on the table; uniform-8\n\
+         compresses hardest but costs accuracy (Table IV/V); the paper's\n\
+         degree-aware ladder sits between, and equal-mass intervals beat\n\
+         equal-width on power-law degree distributions (most vertices\n\
+         would otherwise land in the widest full-precision band).\n",
+    );
+    out
+}

@@ -1,0 +1,183 @@
+//! Shared experiment context: dataset/engine plumbing, per-node offline
+//! calibration (the ω models every planner call needs), and report
+//! collection.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use crate::graph::{datasets, DatasetSpec, Graph};
+use crate::profile::{calibration, PerfModel};
+use crate::runtime::{Engine, EngineKind};
+use crate::serving::metrics::{average, ServingReport};
+use crate::serving::{serve, ServeOpts};
+use crate::fog::Cluster;
+
+pub struct Ctx {
+    pub data_dir: PathBuf,
+    pub artifacts_dir: PathBuf,
+    pub engine_kind: EngineKind,
+    pub repeats: usize,
+    pub results_dir: PathBuf,
+    graphs: HashMap<String, Graph>,
+    engines: HashMap<&'static str, Engine>,
+    /// HOST-time ω per (model, dataset) — node multipliers are applied by
+    /// the cost model / serving pipeline, so one calibration serves all
+    /// node types.
+    omegas: HashMap<(String, String), PerfModel>,
+}
+
+impl Ctx {
+    pub fn new(data_dir: &str, artifacts_dir: &str, engine_kind: EngineKind,
+               repeats: usize) -> Ctx {
+        Ctx {
+            data_dir: PathBuf::from(data_dir),
+            artifacts_dir: PathBuf::from(artifacts_dir),
+            engine_kind,
+            repeats,
+            results_dir: PathBuf::from("results"),
+            graphs: HashMap::new(),
+            engines: HashMap::new(),
+            omegas: HashMap::new(),
+        }
+    }
+
+    pub fn graph(&mut self, name: &str) -> &Graph {
+        if !self.graphs.contains_key(name) {
+            let g = datasets::load_or_generate(&self.data_dir, name);
+            self.graphs.insert(name.to_string(), g);
+        }
+        &self.graphs[name]
+    }
+
+    pub fn spec(&self, name: &str) -> DatasetSpec {
+        datasets::spec_by_name(name).expect("unknown dataset")
+    }
+
+    /// The engine (one per kind, shared across experiments so PJRT
+    /// executable compilation amortizes).
+    pub fn engine(&mut self, kind: EngineKind) -> &mut Engine {
+        let key = match kind {
+            EngineKind::Pjrt => "pjrt",
+            EngineKind::Reference => "ref",
+        };
+        if !self.engines.contains_key(key) {
+            let eng = match Engine::new(kind, &self.artifacts_dir) {
+                Ok(e) => e,
+                Err(e) => {
+                    eprintln!(
+                        "warn: {kind:?} engine unavailable ({e}); using \
+                         reference engine"
+                    );
+                    Engine::new(EngineKind::Reference, &self.artifacts_dir)
+                        .expect("reference engine")
+                }
+            };
+            self.engines.insert(key, eng);
+        }
+        self.engines.get_mut(key).unwrap()
+    }
+
+    pub fn default_engine(&mut self) -> &mut Engine {
+        self.engine(self.engine_kind)
+    }
+
+    /// Offline proxy-guided calibration (paper §III-B): fit ω for
+    /// (model, dataset) by measuring the engine on sampled subgraphs.
+    pub fn omega(&mut self, model: &str, dataset: &str) -> PerfModel {
+        let key = (model.to_string(), dataset.to_string());
+        if let Some(m) = self.omegas.get(&key) {
+            return m.clone();
+        }
+        let g = self.graph(dataset).clone();
+        let spec = self.spec(dataset);
+        let kind = self.engine_kind;
+        let engine = self.engine(kind);
+        let set = calibration::calibration_set(
+            &g,
+            &[0.05, 0.12, 0.25, 0.45],
+            5,
+            0xCA11B ^ model.len() as u64,
+        );
+        let f_in = spec.input_dim();
+        let classes = spec.classes.max(1);
+        let num_layers = crate::runtime::reference::model_layers(model);
+        let model_s = model.to_string();
+        let ds = dataset.to_string();
+        let perf = calibration::profile_node(&set, |sub| {
+            // measure a full forward over the subgraph (host seconds)
+            let n = sub.n_total();
+            let h0 = vec![0.5f32; n * f_in];
+            let mut total = 0.0;
+            if model_s == "astgcn" {
+                let out = engine
+                    .run_astgcn(&ds, &h0, n, f_in, sub)
+                    .expect("calibration astgcn");
+                total += out.host_seconds;
+            } else {
+                let edges =
+                    crate::runtime::pad::prep_edges(&model_s, sub);
+                let mut h = h0;
+                let mut dim = f_in;
+                for layer in 0..num_layers {
+                    let out = engine
+                        .run_layer(&model_s, &ds, layer, &h, dim, &edges,
+                                   f_in, classes)
+                        .expect("calibration layer");
+                    total += out.host_seconds;
+                    // rebuild the full local-space state (halo zeroed),
+                    // as the BSP loop does between layers
+                    let mut st = vec![0f32; n * out.out_dim];
+                    st[..edges.n_local * out.out_dim]
+                        .copy_from_slice(&out.h);
+                    h = st;
+                    dim = out.out_dim;
+                }
+            }
+            total
+        });
+        self.omegas.insert(key, perf.clone());
+        perf
+    }
+
+    pub fn omegas_for(&mut self, model: &str, dataset: &str, n: usize)
+                      -> Vec<PerfModel> {
+        vec![self.omega(model, dataset); n]
+    }
+
+    /// Serve with repeats and average.
+    pub fn run(&mut self, dataset: &str, cluster: &Cluster,
+               opts: &ServeOpts) -> ServingReport {
+        let g = self.graph(dataset).clone();
+        let spec = self.spec(dataset);
+        let omegas = self.omegas_for(&opts.model.clone(), dataset,
+                                     cluster.len());
+        let repeats = self.repeats;
+        let kind = self.engine_kind;
+        let engine = self.engine(kind);
+        let mut reports = Vec::new();
+        // one discarded warmup run absorbs lazy-compile/first-touch costs
+        let total = repeats.max(1) + 1;
+        for i in 0..total {
+            match serve(&g, &spec, cluster, opts, &omegas, engine) {
+                Ok(r) => {
+                    if i > 0 || total == 1 {
+                        reports.push(r);
+                    }
+                }
+                Err(e) => panic!("serving failed: {e}"),
+            }
+        }
+        average(reports)
+    }
+
+    /// Persist an experiment section to results/<id>.md and echo it.
+    pub fn emit(&self, id: &str, markdown: &str) {
+        println!("{markdown}");
+        if std::fs::create_dir_all(&self.results_dir).is_ok() {
+            let _ = std::fs::write(
+                self.results_dir.join(format!("{id}.md")),
+                markdown,
+            );
+        }
+    }
+}

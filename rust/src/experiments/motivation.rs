@@ -1,0 +1,109 @@
+//! §II-C motivation measurements: Fig. 3 (cloud vs single-fog vs multi-fog
+//! latency + stage breakdown across 4G/5G/WiFi) and Fig. 4 (vertex count
+//! vs execution latency per fog under the equal-split multi-fog baseline).
+
+use crate::compress::Codec;
+use crate::fog::Cluster;
+use crate::net::NetKind;
+use crate::serving::{Placement, ServeOpts};
+
+use super::context::Ctx;
+use super::tables::{f2, f3, pct, speedup, Table};
+
+pub fn fig3(ctx: &mut Ctx) -> String {
+    let mut out = String::from(
+        "## Fig. 3 — GNN serving latency: cloud vs single-fog vs multi-fog\n\n\
+         Workload: GCN on the SIoT twin, 8 source devices; multi-fog is the\n\
+         6-node testbed with the straw-man placement (min-cut partitions,\n\
+         random mapping), no compression anywhere — the paper's §II-C setup.\n\n",
+    );
+    let mut t = Table::new(&[
+        "net", "system", "total (s)", "collect (s)", "exec (s)",
+        "collect %", "speedup vs cloud",
+    ]);
+    for net in NetKind::all() {
+        let mut cloud_total = 0.0;
+        let mut cloud_collect = 0.0;
+        for sys in ["cloud", "single-fog", "multi-fog"] {
+            let (cluster, opts) = match sys {
+                "cloud" => (
+                    Cluster::cloud(net),
+                    ServeOpts {
+                        wan: true,
+                        ..ServeOpts::new("gcn", Placement::SingleNode(0),
+                                         Codec::None)
+                    },
+                ),
+                "single-fog" => {
+                    let c = Cluster::testbed(net);
+                    let p = c.most_powerful();
+                    (c, ServeOpts::new("gcn", Placement::SingleNode(p),
+                                       Codec::None))
+                }
+                _ => (
+                    Cluster::testbed(net),
+                    ServeOpts::new("gcn", Placement::MetisRandom(4),
+                                   Codec::None),
+                ),
+            };
+            let r = ctx.run("siot", &cluster, &opts);
+            if sys == "cloud" {
+                cloud_total = r.total_s;
+                cloud_collect = r.collection_s;
+            }
+            t.row(vec![
+                net.name().into(),
+                sys.into(),
+                f3(r.total_s),
+                f3(r.collection_s),
+                f3(r.execution_s + r.sync_s),
+                pct(r.comm_fraction()),
+                speedup(cloud_total, r.total_s),
+            ]);
+            if sys == "single-fog" {
+                let red = 1.0 - r.collection_s / cloud_collect;
+                out.push_str(&format!(
+                    "- {}: single-fog cuts data collection by {:.0}% \
+                     (paper: 64/67/61%)\n",
+                    net.name(),
+                    red * 100.0
+                ));
+            }
+        }
+    }
+    out.push('\n');
+    out.push_str(&t.to_markdown());
+    out
+}
+
+pub fn fig4(ctx: &mut Ctx) -> String {
+    let mut out = String::from(
+        "## Fig. 4 — load distribution in straw-man multi-fog (SIoT, GCN, 4G)\n\n\
+         Equal vertex counts, unequal execution latency — the heterogeneity\n\
+         gap that motivates the IEP.\n\n",
+    );
+    let cluster = Cluster::testbed(NetKind::Cell4G);
+    let opts = ServeOpts::new("gcn", Placement::MetisRandom(4), Codec::None);
+    let r = ctx.run("siot", &cluster, &opts);
+    let mut t = Table::new(&["fog", "type", "vertices", "exec (s)"]);
+    for (j, node) in cluster.nodes.iter().enumerate() {
+        t.row(vec![
+            format!("{}", j + 1),
+            node.node_type.name().into(),
+            format!("{}", r.per_fog_vertices[j]),
+            f3(r.per_fog_exec_s[j]),
+        ]);
+    }
+    out.push_str(&t.to_markdown());
+    let vmax = *r.per_fog_vertices.iter().max().unwrap() as f64;
+    let vmin = *r.per_fog_vertices.iter().min().unwrap() as f64;
+    let emax = r.per_fog_exec_s.iter().cloned().fold(0.0, f64::max);
+    let emin = r.per_fog_exec_s.iter().cloned().fold(f64::MAX, f64::min);
+    out.push_str(&format!(
+        "\nvertex imbalance {}: exec imbalance {} — balanced counts, \
+         skewed load (paper's observation).\n",
+        f2(vmax / vmin.max(1.0)),
+        f2(emax / emin.max(1e-9)),
+    ));
+    out
+}

@@ -1,0 +1,104 @@
+//! Fig. 17 (scalability: RMAT-20K…100K across 1–6 type-B fogs) and
+//! Fig. 18 (GPU enhancement on RMAT-100K, incl. the single-fog OOM).
+//!
+//! These sweeps default to the reference engine (homogeneous type-B
+//! clusters make the LBAP mapping trivial and PJRT bucket padding cost
+//! would dominate the single host core without changing the shape); pass
+//! `--engine pjrt` to force the AOT path.
+
+use crate::fog::Cluster;
+use crate::net::NetKind;
+use crate::profile::PerfModel;
+use crate::runtime::EngineKind;
+use crate::serving::{serve, Placement, ServeOpts};
+
+use super::context::Ctx;
+use super::tables::{f3, Table};
+
+const FOG_COUNTS: [usize; 5] = [1, 2, 3, 4, 6];
+
+fn run_one(ctx: &mut Ctx, dataset: &str, n_fogs: usize, gpu: bool)
+           -> crate::serving::ServingReport {
+    let g = ctx.graph(dataset).clone();
+    let spec = ctx.spec(dataset);
+    let mut cluster = Cluster::uniform_b(n_fogs, NetKind::Wifi);
+    if gpu {
+        cluster = cluster.with_gpus();
+    }
+    let placement = if n_fogs == 1 {
+        Placement::SingleNode(0)
+    } else {
+        Placement::Iep
+    };
+    let opts = ServeOpts::new("gcn", placement, ServeOpts::co_codec(&g));
+    // homogeneous cluster: the uncalibrated ω is sufficient for mapping
+    let omegas = vec![PerfModel::uncalibrated(); n_fogs];
+    let kind = ctx.engine_kind;
+    let repeats = ctx.repeats.max(1);
+    let engine = ctx.engine(kind);
+    let mut reports = Vec::new();
+    for _ in 0..repeats {
+        reports.push(
+            serve(&g, &spec, &cluster, &opts, &omegas, engine)
+                .expect("scalability serve"),
+        );
+        if reports.last().unwrap().oom {
+            break;
+        }
+    }
+    crate::serving::metrics::average(reports)
+}
+
+pub fn fig17(ctx: &mut Ctx) -> String {
+    let engine_note = match ctx.engine_kind {
+        EngineKind::Pjrt => "PJRT (AOT artifacts)",
+        EngineKind::Reference => "reference",
+    };
+    let mut t = Table::new(&[
+        "dataset", "1 fog (s)", "2 fogs (s)", "3 fogs (s)", "4 fogs (s)",
+        "6 fogs (s)",
+    ]);
+    for ds in ["rmat20k", "rmat40k", "rmat60k", "rmat80k", "rmat100k"] {
+        let mut cells = vec![ds.to_string()];
+        for &n in &FOG_COUNTS {
+            let r = run_one(ctx, ds, n, false);
+            cells.push(if r.oom { "OOM".into() } else { f3(r.total_s) });
+        }
+        t.row(cells);
+    }
+    format!(
+        "## Fig. 17 — scalability over RMAT twins × type-B fog count \
+         (engine: {engine_note})\n\n{}\n\
+         Expected shape: latency shrinks with added fogs, biggest graphs\n\
+         benefit most, curves converge once resources are ample.\n",
+        t.to_markdown()
+    )
+}
+
+pub fn fig18(ctx: &mut Ctx) -> String {
+    let mut t = Table::new(&[
+        "fogs", "CPU only (s)", "with GTX-1050 (s)", "GPU gain",
+    ]);
+    for &n in &FOG_COUNTS {
+        let cpu = run_one(ctx, "rmat100k", n, false);
+        let gpu = run_one(ctx, "rmat100k", n, true);
+        let gain = if gpu.oom || cpu.oom {
+            "-".to_string()
+        } else {
+            format!("{:.2}x", cpu.total_s / gpu.total_s)
+        };
+        t.row(vec![
+            format!("{n}"),
+            if cpu.oom { "OOM".into() } else { f3(cpu.total_s) },
+            if gpu.oom { "OOM".into() } else { f3(gpu.total_s) },
+            gain,
+        ]);
+    }
+    format!(
+        "## Fig. 18 — GPU enhancement (RMAT-100K, GCN)\n\n{}\n\
+         Expected shape: single GPU fog OOMs (2 GiB device memory); GPU\n\
+         gains are largest when fog resources are scarce; Fograph on CPUs\n\
+         can still beat the straw-man fog with GPUs (paper Fig. 18).\n",
+        t.to_markdown()
+    )
+}

@@ -1,0 +1,141 @@
+//! Cluster presets used across the paper's experiments, plus the metadata
+//! wiring: §IV-B's 6-node testbed (1×A, 4×B, 1×C), §IV-C's 4-node
+//! case-study cluster (1×A, 2×B, 1×C), the Fig. 8 environments E1–E3, and
+//! homogeneous type-B clusters for the scalability/GPU studies.
+
+use crate::net::{NetKind, NetProfile};
+
+use super::node::{FogNode, NodeType, GTX1050};
+
+#[derive(Clone, Debug)]
+pub struct Cluster {
+    pub nodes: Vec<FogNode>,
+    pub net: NetProfile,
+}
+
+impl Cluster {
+    pub fn new(types: &[NodeType], net: NetKind) -> Cluster {
+        Cluster {
+            nodes: types
+                .iter()
+                .enumerate()
+                .map(|(i, &t)| FogNode::new(i, t))
+                .collect(),
+            net: NetProfile::get(net),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    pub fn with_gpus(mut self) -> Cluster {
+        for n in &mut self.nodes {
+            n.gpu = Some(GTX1050);
+        }
+        self
+    }
+
+    /// The most powerful node's index (used for single-fog serving,
+    /// §II-C: "we select the most powerful one").
+    pub fn most_powerful(&self) -> usize {
+        self.nodes
+            .iter()
+            .enumerate()
+            .min_by(|(_, a), (_, b)| {
+                a.effective_multiplier()
+                    .partial_cmp(&b.effective_multiplier())
+                    .unwrap()
+            })
+            .map(|(i, _)| i)
+            .unwrap()
+    }
+
+    // ---- paper presets ----------------------------------------------------
+
+    /// §IV-B testbed: 1×A, 4×B, 1×C.
+    pub fn testbed(net: NetKind) -> Cluster {
+        Cluster::new(
+            &[NodeType::A, NodeType::B, NodeType::B, NodeType::B,
+              NodeType::B, NodeType::C],
+            net,
+        )
+    }
+
+    /// §IV-C case study: 1×A, 2×B, 1×C.
+    pub fn case_study(net: NetKind) -> Cluster {
+        Cluster::new(
+            &[NodeType::A, NodeType::B, NodeType::B, NodeType::C],
+            net,
+        )
+    }
+
+    /// Fig. 8 environments.
+    pub fn env(name: &str) -> Option<Cluster> {
+        match name {
+            // E1: {1×A, 4×B, 1×C, 4G}
+            "E1" => Some(Cluster::testbed(NetKind::Cell4G)),
+            // E2: {1×A, 4×B, 1×C, 5G}
+            "E2" => Some(Cluster::testbed(NetKind::Cell5G)),
+            // E3: {1×A, 2×B, 1×C, WiFi}
+            "E3" => Some(Cluster::new(
+                &[NodeType::A, NodeType::B, NodeType::B, NodeType::C],
+                NetKind::Wifi,
+            )),
+            _ => None,
+        }
+    }
+
+    /// Homogeneous type-B cluster (scalability / GPU studies).
+    pub fn uniform_b(n: usize, net: NetKind) -> Cluster {
+        Cluster::new(&vec![NodeType::B; n], net)
+    }
+
+    /// Single cloud node behind the WAN.
+    pub fn cloud(net: NetKind) -> Cluster {
+        Cluster::new(&[NodeType::Cloud], net)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_match_paper() {
+        let t = Cluster::testbed(NetKind::Cell4G);
+        assert_eq!(t.len(), 6);
+        let counts = |c: &Cluster, ty: NodeType| {
+            c.nodes.iter().filter(|n| n.node_type == ty).count()
+        };
+        assert_eq!(counts(&t, NodeType::A), 1);
+        assert_eq!(counts(&t, NodeType::B), 4);
+        assert_eq!(counts(&t, NodeType::C), 1);
+        let cs = Cluster::case_study(NetKind::Wifi);
+        assert_eq!(cs.len(), 4);
+        assert_eq!(counts(&cs, NodeType::B), 2);
+        assert!(Cluster::env("E1").is_some());
+        assert!(Cluster::env("E3").unwrap().len() == 4);
+        assert!(Cluster::env("E9").is_none());
+    }
+
+    #[test]
+    fn most_powerful_is_type_c() {
+        let t = Cluster::testbed(NetKind::Wifi);
+        assert_eq!(t.nodes[t.most_powerful()].node_type, NodeType::C);
+    }
+
+    #[test]
+    fn gpu_cluster_is_faster() {
+        let plain = Cluster::uniform_b(3, NetKind::Wifi);
+        let gpu = Cluster::uniform_b(3, NetKind::Wifi).with_gpus();
+        assert!(
+            gpu.nodes[0].effective_multiplier()
+                < plain.nodes[0].effective_multiplier()
+        );
+    }
+}

@@ -1,0 +1,123 @@
+//! Background-load traces — the stand-in for the paper's Alibaba
+//! production snapshot (Fig. 16): per-node CPU load over 1000 timestamps
+//! with a pronounced ramp on one node, plus a generic regime-switching
+//! generator for stress tests.
+
+use crate::util::rng::Rng;
+
+/// loads[t][node] in [0, 0.85].
+#[derive(Clone, Debug)]
+pub struct LoadTrace {
+    pub loads: Vec<Vec<f64>>,
+}
+
+impl LoadTrace {
+    pub fn steps(&self) -> usize {
+        self.loads.len()
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.loads.first().map(|v| v.len()).unwrap_or(0)
+    }
+
+    pub fn at(&self, t: usize, node: usize) -> f64 {
+        self.loads[t.min(self.loads.len() - 1)][node]
+    }
+
+    /// The Fig. 16 scenario: `n` nodes idle-ish; the LAST node's load
+    /// climbs steeply mid-trace, plateaus, then releases — reproducing the
+    /// snapshot the paper replays.
+    pub fn fig16(n: usize, steps: usize, seed: u64) -> LoadTrace {
+        let mut rng = Rng::new(seed);
+        let mut loads = vec![vec![0.0; n]; steps];
+        let ramp_start = steps * 15 / 100;
+        let ramp_top = steps * 35 / 100;
+        let release = steps * 70 / 100;
+        let tail = steps * 85 / 100;
+        for t in 0..steps {
+            for node in 0..n {
+                let base = 0.06 + 0.04 * ((t as f64 / 37.0).sin() + 1.0) / 2.0;
+                let jitter = rng.f64() * 0.05;
+                let mut load = base + jitter;
+                if node == n - 1 {
+                    load += ramp_profile(t, ramp_start, ramp_top, release,
+                                         tail) * 0.65;
+                }
+                loads[t][node] = load.clamp(0.0, 0.85);
+            }
+        }
+        LoadTrace { loads }
+    }
+
+    /// Regime-switching random walk (generic stress workload).
+    pub fn random_walk(n: usize, steps: usize, seed: u64) -> LoadTrace {
+        let mut rng = Rng::new(seed);
+        let mut cur = vec![0.1; n];
+        let mut target = vec![0.1; n];
+        let mut loads = Vec::with_capacity(steps);
+        for t in 0..steps {
+            for i in 0..n {
+                if t % 50 == 0 && rng.bool(0.3) {
+                    target[i] = rng.f64() * 0.8;
+                }
+                cur[i] += (target[i] - cur[i]) * 0.1
+                    + rng.normal() * 0.01;
+                cur[i] = cur[i].clamp(0.0, 0.85);
+            }
+            loads.push(cur.clone());
+        }
+        LoadTrace { loads }
+    }
+}
+
+fn ramp_profile(t: usize, start: usize, top: usize, release: usize,
+                tail: usize) -> f64 {
+    if t < start {
+        0.0
+    } else if t < top {
+        (t - start) as f64 / (top - start) as f64
+    } else if t < release {
+        1.0
+    } else if t < tail {
+        1.0 - (t - release) as f64 / (tail - release) as f64
+    } else {
+        0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig16_has_ramp_on_last_node() {
+        let tr = LoadTrace::fig16(4, 1000, 1);
+        assert_eq!(tr.steps(), 1000);
+        assert_eq!(tr.nodes(), 4);
+        // early: all nodes low
+        assert!(tr.at(50, 3) < 0.25);
+        // mid: node 3 heavily loaded, others still light
+        assert!(tr.at(500, 3) > 0.55, "mid load {}", tr.at(500, 3));
+        assert!(tr.at(500, 0) < 0.25);
+        // end: released
+        assert!(tr.at(950, 3) < 0.25);
+        // all in range
+        for t in 0..1000 {
+            for n in 0..4 {
+                let l = tr.at(t, n);
+                assert!((0.0..=0.85).contains(&l));
+            }
+        }
+    }
+
+    #[test]
+    fn random_walk_stays_in_range_and_moves() {
+        let tr = LoadTrace::random_walk(3, 500, 2);
+        let first = tr.at(0, 0);
+        let later: Vec<f64> = (0..500).map(|t| tr.at(t, 0)).collect();
+        let spread = later.iter().cloned().fold(f64::MIN, f64::max)
+            - later.iter().cloned().fold(f64::MAX, f64::min);
+        assert!(spread > 0.05, "trace too flat");
+        assert!((0.0..=0.85).contains(&first));
+    }
+}

@@ -1,0 +1,132 @@
+//! Metadata server (paper §III-B, Fig. 5 ❶): a dedicated fog node that
+//! registers device-independent configuration (graph skeleton, model,
+//! bandwidth) and device-specific capability profiles, and aggregates
+//! online load reports for execution-plan refinement.
+
+use std::collections::HashMap;
+
+use crate::profile::{OnlineProfiler, PerfModel};
+
+/// Device-independent invariants registered once per deployment.
+#[derive(Clone, Debug)]
+pub struct StaticMetadata {
+    pub dataset: String,
+    pub model: String,
+    pub num_vertices: usize,
+    pub num_edges: usize,
+    pub feature_dim: usize,
+    pub gnn_layers: usize,
+    /// Degree histogram of the registered graph skeleton (drives DAQ).
+    pub degrees: Vec<u32>,
+}
+
+/// Per-node registration entry.
+#[derive(Clone, Debug)]
+pub struct NodeRecord {
+    pub node_id: usize,
+    pub profiler: OnlineProfiler,
+    /// Timestamp (logical) of the node's last report.
+    pub last_report: u64,
+}
+
+/// The metadata server state machine.
+#[derive(Clone, Debug)]
+pub struct MetadataServer {
+    pub static_meta: Option<StaticMetadata>,
+    pub nodes: HashMap<usize, NodeRecord>,
+    clock: u64,
+}
+
+impl MetadataServer {
+    pub fn new() -> Self {
+        Self { static_meta: None, nodes: HashMap::new(), clock: 0 }
+    }
+
+    pub fn register_static(&mut self, meta: StaticMetadata) {
+        self.static_meta = Some(meta);
+    }
+
+    /// Register a node's offline calibration profile (setup phase).
+    pub fn register_node(&mut self, node_id: usize, offline: PerfModel) {
+        self.clock += 1;
+        self.nodes.insert(
+            node_id,
+            NodeRecord {
+                node_id,
+                profiler: OnlineProfiler::new(offline),
+                last_report: self.clock,
+            },
+        );
+    }
+
+    /// Apply a runtime report: measured execution time for a cardinality.
+    pub fn report(&mut self, node_id: usize,
+                  card: crate::profile::Cardinality, real_s: f64) {
+        self.clock += 1;
+        if let Some(rec) = self.nodes.get_mut(&node_id) {
+            rec.profiler.observe(card, real_s);
+            rec.last_report = self.clock;
+        }
+    }
+
+    /// Current η-scaled models for all registered nodes, ordered by id —
+    /// the ω' the planner and the dual-mode scheduler consume.
+    pub fn scaled_models(&self) -> Vec<PerfModel> {
+        let mut ids: Vec<usize> = self.nodes.keys().copied().collect();
+        ids.sort_unstable();
+        ids.iter()
+            .map(|id| self.nodes[id].profiler.scaled_model())
+            .collect()
+    }
+
+    /// Latest raw measurements per node (for the load-balance indicator).
+    pub fn last_measurements(&self) -> Vec<f64> {
+        let mut ids: Vec<usize> = self.nodes.keys().copied().collect();
+        ids.sort_unstable();
+        ids.iter().map(|id| self.nodes[id].profiler.last_real_s).collect()
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+}
+
+impl Default for MetadataServer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::profile::Cardinality;
+
+    fn model() -> PerfModel {
+        PerfModel { beta_v: 1e-6, beta_n: 1e-7, intercept: 0.0, r2: 1.0 }
+    }
+
+    #[test]
+    fn registration_and_reporting_flow() {
+        let mut ms = MetadataServer::new();
+        ms.register_node(0, model());
+        ms.register_node(1, model());
+        assert_eq!(ms.num_nodes(), 2);
+        let c = Cardinality::new(1000, 4000);
+        let base = model().predict(c);
+        ms.report(1, c, base * 2.0);
+        let scaled = ms.scaled_models();
+        // node 1's model now predicts 2x
+        assert!((scaled[1].predict(c) - base * 2.0).abs() < 1e-12);
+        assert!((scaled[0].predict(c) - base).abs() < 1e-12);
+        assert_eq!(ms.last_measurements()[1], base * 2.0);
+    }
+
+    #[test]
+    fn reports_to_unknown_nodes_are_ignored() {
+        let mut ms = MetadataServer::new();
+        ms.register_node(0, model());
+        ms.report(99, Cardinality::new(1, 1), 1.0);
+        assert_eq!(ms.num_nodes(), 1);
+    }
+}

@@ -1,0 +1,13 @@
+//! Fog-environment substrate: heterogeneous node models (Table II),
+//! cluster presets for every experiment, background-load traces, and the
+//! metadata server of the paper's workflow (Fig. 5/6).
+
+pub mod cluster;
+pub mod loadtrace;
+pub mod metadata;
+pub mod node;
+
+pub use cluster::Cluster;
+pub use loadtrace::LoadTrace;
+pub use metadata::{MetadataServer, StaticMetadata};
+pub use node::{FogNode, GpuSpec, NodeType, GTX1050};

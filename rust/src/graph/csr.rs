@@ -1,0 +1,197 @@
+//! CSR graph container — the in-memory form of the `.fgr` interchange
+//! format shared with the Python compile path (python/compile/fgio.py).
+//!
+//! `indices[indptr[v]..indptr[v+1]]` are v's out-neighbors; all dataset
+//! twins are symmetric (each undirected edge stored in both directions),
+//! matching the paper's undirected IoT graphs.
+
+use std::collections::HashSet;
+
+/// A vertex-featured graph. Features are `[V, F]` (static graphs) or
+/// `[V, F, T]` row-major (temporal series, PeMS).
+#[derive(Clone, Debug, Default)]
+pub struct Graph {
+    pub indptr: Vec<u64>,
+    pub indices: Vec<u32>,
+    pub features: Vec<f32>,
+    pub feature_dim: usize,
+    pub duration: usize,
+    pub num_classes: usize,
+    pub labels: Option<Vec<i32>>,
+    pub coords: Option<Vec<[f32; 2]>>,
+}
+
+impl Graph {
+    pub fn num_vertices(&self) -> usize {
+        self.indptr.len().saturating_sub(1)
+    }
+
+    /// Directed edge count (2x the undirected count for our symmetric twins).
+    pub fn num_edges(&self) -> usize {
+        self.indices.len()
+    }
+
+    pub fn undirected_edges(&self) -> usize {
+        self.num_edges() / 2
+    }
+
+    pub fn neighbors(&self, v: usize) -> &[u32] {
+        &self.indices[self.indptr[v] as usize..self.indptr[v + 1] as usize]
+    }
+
+    pub fn degree(&self, v: usize) -> usize {
+        (self.indptr[v + 1] - self.indptr[v]) as usize
+    }
+
+    pub fn degrees(&self) -> Vec<u32> {
+        (0..self.num_vertices()).map(|v| self.degree(v) as u32).collect()
+    }
+
+    /// Feature row of vertex v (length F·T).
+    pub fn feature_row(&self, v: usize) -> &[f32] {
+        let w = self.feature_dim * self.duration.max(1);
+        &self.features[v * w..(v + 1) * w]
+    }
+
+    /// Per-vertex feature payload in bytes at full (f32) precision —
+    /// the φ of Eq. (5).
+    pub fn bytes_per_vertex(&self) -> usize {
+        self.feature_dim * self.duration.max(1) * 4
+    }
+
+    /// Build a symmetric CSR graph from undirected edge pairs.
+    /// Duplicate pairs and self loops must already be removed.
+    pub fn from_undirected_edges(
+        num_vertices: usize,
+        edges: &[(u32, u32)],
+    ) -> Graph {
+        let mut deg = vec![0u64; num_vertices];
+        for &(a, b) in edges {
+            debug_assert_ne!(a, b);
+            deg[a as usize] += 1;
+            deg[b as usize] += 1;
+        }
+        let mut indptr = vec![0u64; num_vertices + 1];
+        for v in 0..num_vertices {
+            indptr[v + 1] = indptr[v] + deg[v];
+        }
+        let mut cursor: Vec<u64> = indptr[..num_vertices].to_vec();
+        let mut indices = vec![0u32; indptr[num_vertices] as usize];
+        for &(a, b) in edges {
+            indices[cursor[a as usize] as usize] = b;
+            cursor[a as usize] += 1;
+            indices[cursor[b as usize] as usize] = a;
+            cursor[b as usize] += 1;
+        }
+        // sort adjacency lists for deterministic layout + fast membership
+        for v in 0..num_vertices {
+            indices[indptr[v] as usize..indptr[v + 1] as usize]
+                .sort_unstable();
+        }
+        Graph {
+            indptr,
+            indices,
+            features: Vec::new(),
+            feature_dim: 0,
+            duration: 1,
+            num_classes: 0,
+            labels: None,
+            coords: None,
+        }
+    }
+
+    /// COO (src, dst) edge list, mirroring fgio.Graph.edge_list().
+    pub fn edge_list(&self) -> (Vec<u32>, Vec<u32>) {
+        let mut src = Vec::with_capacity(self.num_edges());
+        for v in 0..self.num_vertices() {
+            src.extend(
+                std::iter::repeat(v as u32).take(self.degree(v)),
+            );
+        }
+        (src, self.indices.clone())
+    }
+
+    /// Structural sanity: monotone indptr, in-range indices, symmetry.
+    pub fn validate(&self) -> Result<(), String> {
+        let v = self.num_vertices();
+        if self.indptr.first() != Some(&0) {
+            return Err("indptr[0] != 0".into());
+        }
+        for i in 0..v {
+            if self.indptr[i] > self.indptr[i + 1] {
+                return Err(format!("indptr not monotone at {i}"));
+            }
+        }
+        if *self.indptr.last().unwrap() as usize != self.indices.len() {
+            return Err("indptr[-1] != |indices|".into());
+        }
+        if self.indices.iter().any(|&u| u as usize >= v) {
+            return Err("index out of range".into());
+        }
+        // spot-check symmetry on a deterministic sample
+        let mut present: HashSet<(u32, u32)> = HashSet::new();
+        for a in 0..v.min(2000) {
+            for &b in self.neighbors(a) {
+                present.insert((a as u32, b));
+            }
+        }
+        for &(a, b) in present.iter() {
+            if (b as usize) < v.min(2000) && !present.contains(&(b, a)) {
+                return Err(format!("asymmetric edge ({a},{b})"));
+            }
+        }
+        if self.feature_dim > 0 {
+            let want = v * self.feature_dim * self.duration.max(1);
+            if self.features.len() != want {
+                return Err(format!(
+                    "features len {} != {want}",
+                    self.features.len()
+                ));
+            }
+        }
+        if let Some(l) = &self.labels {
+            if l.len() != v {
+                return Err("labels len mismatch".into());
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn triangle() -> Graph {
+        Graph::from_undirected_edges(4, &[(0, 1), (1, 2), (0, 2)])
+    }
+
+    #[test]
+    fn builds_symmetric_csr() {
+        let g = triangle();
+        assert_eq!(g.num_vertices(), 4);
+        assert_eq!(g.num_edges(), 6);
+        assert_eq!(g.undirected_edges(), 3);
+        assert_eq!(g.neighbors(0), &[1, 2]);
+        assert_eq!(g.neighbors(1), &[0, 2]);
+        assert_eq!(g.neighbors(3), &[] as &[u32]);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn edge_list_matches_degrees() {
+        let g = triangle();
+        let (src, dst) = g.edge_list();
+        assert_eq!(src.len(), 6);
+        assert_eq!(dst.len(), 6);
+        assert_eq!(src[0], 0);
+        assert_eq!(g.degree(0), 2);
+    }
+
+    #[test]
+    fn validate_catches_corruption() {
+        let mut g = triangle();
+        g.indices[0] = 99;
+        assert!(g.validate().is_err());
+    }
+}

@@ -1,0 +1,249 @@
+//! Topology generators — the substrate behind the paper's dataset twins.
+//!
+//! * `rmat` — R-MAT (Chakrabarti et al., SDM'04), the generator the paper
+//!   itself uses for its scalability graphs (Appendix D), with rejection of
+//!   duplicates/self-loops until the exact target edge count is met.
+//! * `sbm` — stochastic block model for the community-structured IoT/social
+//!   twins (SIoT, Yelp).
+//! * `road_network` — a freeway-corridor graph for the PeMS twin: a few
+//!   parallel chains with interchange links, matching PeMS' 307/340
+//!   vertex/edge shape and yielding plausible coordinates for Fig. 13(a).
+
+use std::collections::HashSet;
+
+use crate::util::rng::Rng;
+
+use super::csr::Graph;
+
+/// Exact-count R-MAT: samples edges by recursive quadrant descent with
+/// probabilities (a, b, c, d), rejecting self loops and duplicates until
+/// `num_edges` distinct undirected edges exist.
+pub fn rmat(
+    num_vertices: usize,
+    num_edges: usize,
+    seed: u64,
+    probs: (f64, f64, f64, f64),
+) -> Graph {
+    let scale = (num_vertices as f64).log2().ceil() as u32;
+    let n = num_vertices as u64;
+    let (a, b, c, _d) = probs;
+    let mut rng = Rng::new(seed);
+    let mut seen: HashSet<(u32, u32)> = HashSet::with_capacity(num_edges * 2);
+    let mut edges: Vec<(u32, u32)> = Vec::with_capacity(num_edges);
+    let max_undirected = num_vertices * (num_vertices - 1) / 2;
+    assert!(
+        num_edges <= max_undirected,
+        "edge target exceeds complete graph"
+    );
+    while edges.len() < num_edges {
+        let (mut x, mut y) = (0u64, 0u64);
+        for level in 0..scale {
+            let bit = 1u64 << (scale - 1 - level);
+            // noise the quadrant probabilities slightly per level for
+            // realism (standard smoothing trick)
+            let r = rng.f64();
+            if r < a {
+                // top-left: nothing to add
+            } else if r < a + b {
+                y |= bit;
+            } else if r < a + b + c {
+                x |= bit;
+            } else {
+                x |= bit;
+                y |= bit;
+            }
+        }
+        if x >= n || y >= n || x == y {
+            continue;
+        }
+        let key = (x.min(y) as u32, x.max(y) as u32);
+        if seen.insert(key) {
+            edges.push(key);
+        }
+    }
+    Graph::from_undirected_edges(num_vertices, &edges)
+}
+
+/// Stochastic block model with exact edge count: `p_in` is the probability
+/// mass of intra-community edges. Vertices are assigned to
+/// `num_communities` round-robin-contiguous blocks; the returned community
+/// assignment is useful for label synthesis.
+pub fn sbm(
+    num_vertices: usize,
+    num_edges: usize,
+    num_communities: usize,
+    p_in: f64,
+    seed: u64,
+) -> (Graph, Vec<u32>) {
+    let mut rng = Rng::new(seed);
+    let comm_of = |v: usize| (v * num_communities / num_vertices) as u32;
+    // members per community (contiguous blocks)
+    let mut bounds = Vec::with_capacity(num_communities + 1);
+    for c in 0..=num_communities {
+        bounds.push(c * num_vertices / num_communities);
+    }
+    let mut seen: HashSet<(u32, u32)> = HashSet::with_capacity(num_edges * 2);
+    let mut edges: Vec<(u32, u32)> = Vec::with_capacity(num_edges);
+    let mut attempts: u64 = 0;
+    while edges.len() < num_edges {
+        attempts += 1;
+        if attempts > (num_edges as u64) * 400 {
+            panic!("sbm: cannot reach edge target (too dense?)");
+        }
+        let (u, v) = if rng.f64() < p_in {
+            let c = rng.usize_below(num_communities);
+            let lo = bounds[c];
+            let hi = bounds[c + 1];
+            if hi - lo < 2 {
+                continue;
+            }
+            (
+                (lo + rng.usize_below(hi - lo)) as u32,
+                (lo + rng.usize_below(hi - lo)) as u32,
+            )
+        } else {
+            (
+                rng.usize_below(num_vertices) as u32,
+                rng.usize_below(num_vertices) as u32,
+            )
+        };
+        if u == v {
+            continue;
+        }
+        let key = (u.min(v), u.max(v));
+        if seen.insert(key) {
+            edges.push(key);
+        }
+    }
+    let comm: Vec<u32> = (0..num_vertices).map(comm_of).collect();
+    (Graph::from_undirected_edges(num_vertices, &edges), comm)
+}
+
+/// Freeway-corridor road network: `lanes` parallel chains of sensors with
+/// periodic interchange links, plus extra ramp edges to hit the exact
+/// target. Returns the graph and sensor coordinates.
+pub fn road_network(
+    num_vertices: usize,
+    num_edges: usize,
+    lanes: usize,
+    seed: u64,
+) -> (Graph, Vec<[f32; 2]>) {
+    assert!(lanes >= 1);
+    let mut rng = Rng::new(seed);
+    let per_lane = num_vertices / lanes;
+    let mut edges: Vec<(u32, u32)> = Vec::new();
+    let mut seen: HashSet<(u32, u32)> = HashSet::new();
+    let push = |edges: &mut Vec<(u32, u32)>,
+                    seen: &mut HashSet<(u32, u32)>,
+                    a: u32,
+                    b: u32| {
+        if a != b {
+            let key = (a.min(b), a.max(b));
+            if seen.insert(key) {
+                edges.push(key);
+            }
+        }
+    };
+    // chains
+    for lane in 0..lanes {
+        let start = lane * per_lane;
+        let end = if lane == lanes - 1 {
+            num_vertices
+        } else {
+            (lane + 1) * per_lane
+        };
+        for v in start..end - 1 {
+            push(&mut edges, &mut seen, v as u32, (v + 1) as u32);
+        }
+    }
+    // interchanges every ~20 sensors
+    for lane in 0..lanes.saturating_sub(1) {
+        let start = lane * per_lane;
+        for k in (10..per_lane).step_by(20) {
+            let a = (start + k) as u32;
+            let b = (start + per_lane + k.min(per_lane - 1)) as u32;
+            if (b as usize) < num_vertices && edges.len() < num_edges {
+                push(&mut edges, &mut seen, a, b);
+            }
+        }
+    }
+    // random ramps until exact count
+    let mut attempts = 0;
+    while edges.len() < num_edges {
+        attempts += 1;
+        assert!(attempts < 1_000_000, "road_network: cannot reach target");
+        let a = rng.usize_below(num_vertices) as u32;
+        let off = 2 + rng.usize_below(8);
+        let b = ((a as usize + off) % num_vertices) as u32;
+        push(&mut edges, &mut seen, a, b);
+    }
+    edges.truncate(num_edges);
+    // coordinates: gentle S-curve along each lane
+    let mut coords = Vec::with_capacity(num_vertices);
+    for v in 0..num_vertices {
+        let lane = (v / per_lane).min(lanes - 1);
+        let k = v - lane * per_lane;
+        let t = k as f32 / per_lane.max(1) as f32;
+        let x = t * 100.0;
+        let y = lane as f32 * 8.0 + 6.0 * (t * 6.0).sin()
+            + rng.normal_f32(0.0, 0.3);
+        coords.push([x, y]);
+    }
+    (Graph::from_undirected_edges(num_vertices, &edges), coords)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rmat_hits_exact_count_and_is_skewed() {
+        let g = rmat(1 << 10, 4000, 3, (0.57, 0.19, 0.19, 0.05));
+        assert_eq!(g.undirected_edges(), 4000);
+        g.validate().unwrap();
+        let mut degs = g.degrees();
+        degs.sort_unstable_by(|a, b| b.cmp(a));
+        // power-lawish: top vertex much hotter than median
+        assert!(degs[0] as f64 > 4.0 * degs[degs.len() / 2] as f64);
+    }
+
+    #[test]
+    fn rmat_is_deterministic() {
+        let a = rmat(512, 1500, 9, (0.57, 0.19, 0.19, 0.05));
+        let b = rmat(512, 1500, 9, (0.57, 0.19, 0.19, 0.05));
+        assert_eq!(a.indices, b.indices);
+        assert_eq!(a.indptr, b.indptr);
+    }
+
+    #[test]
+    fn sbm_exact_count_and_community_locality() {
+        let (g, comm) = sbm(1000, 5000, 10, 0.9, 5);
+        assert_eq!(g.undirected_edges(), 5000);
+        g.validate().unwrap();
+        // most edges intra-community
+        let mut intra = 0usize;
+        for v in 0..g.num_vertices() {
+            for &u in g.neighbors(v) {
+                if comm[v] == comm[u as usize] {
+                    intra += 1;
+                }
+            }
+        }
+        assert!(
+            intra as f64 / g.num_edges() as f64 > 0.75,
+            "intra fraction {}",
+            intra as f64 / g.num_edges() as f64
+        );
+    }
+
+    #[test]
+    fn road_network_shape() {
+        let (g, coords) = road_network(307, 340, 2, 17);
+        assert_eq!(g.num_vertices(), 307);
+        assert_eq!(g.undirected_edges(), 340);
+        assert_eq!(coords.len(), 307);
+        g.validate().unwrap();
+        // road networks are near-planar: max degree stays small
+        assert!(*g.degrees().iter().max().unwrap() <= 8);
+    }
+}

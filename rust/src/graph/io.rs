@@ -1,0 +1,220 @@
+//! `.fgr` binary reader/writer — byte-compatible with
+//! python/compile/fgio.py (the Python side documents the layout).
+
+use std::fs;
+use std::io::{self, Read, Write};
+use std::path::Path;
+
+use super::csr::Graph;
+
+const MAGIC: &[u8; 4] = b"FGR1";
+
+#[derive(Debug, thiserror::Error)]
+pub enum FgrError {
+    #[error("io: {0}")]
+    Io(#[from] io::Error),
+    #[error("bad magic (not a .fgr file)")]
+    BadMagic,
+    #[error("truncated file: {0}")]
+    Truncated(&'static str),
+}
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize, what: &'static str) -> Result<&'a [u8], FgrError> {
+        if self.pos + n > self.buf.len() {
+            return Err(FgrError::Truncated(what));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self, what: &'static str) -> Result<u32, FgrError> {
+        Ok(u32::from_le_bytes(self.take(4, what)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self, what: &'static str) -> Result<u64, FgrError> {
+        Ok(u64::from_le_bytes(self.take(8, what)?.try_into().unwrap()))
+    }
+
+    fn vec_u64(&mut self, n: usize, what: &'static str) -> Result<Vec<u64>, FgrError> {
+        let raw = self.take(n * 8, what)?;
+        Ok(raw.chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn vec_u32(&mut self, n: usize, what: &'static str) -> Result<Vec<u32>, FgrError> {
+        let raw = self.take(n * 4, what)?;
+        Ok(raw.chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn vec_f32(&mut self, n: usize, what: &'static str) -> Result<Vec<f32>, FgrError> {
+        let raw = self.take(n * 4, what)?;
+        Ok(raw.chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn vec_i32(&mut self, n: usize, what: &'static str) -> Result<Vec<i32>, FgrError> {
+        let raw = self.take(n * 4, what)?;
+        Ok(raw.chunks_exact(4)
+            .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+}
+
+pub fn read_fgr(path: &Path) -> Result<Graph, FgrError> {
+    let buf = fs::read(path)?;
+    if buf.len() < 4 || &buf[..4] != MAGIC {
+        return Err(FgrError::BadMagic);
+    }
+    let mut c = Cursor { buf: &buf, pos: 4 };
+    let v = c.u32("V")? as usize;
+    let e = c.u64("E")? as usize;
+    let f = c.u32("F")? as usize;
+    let classes = c.u32("classes")? as usize;
+    let dur = c.u32("duration")? as usize;
+    let flags = c.u32("flags")?;
+    let indptr = c.vec_u64(v + 1, "indptr")?;
+    let indices = c.vec_u32(e, "indices")?;
+    let features = c.vec_f32(v * f * dur.max(1), "features")?;
+    let labels = if flags & 1 != 0 {
+        Some(c.vec_i32(v, "labels")?)
+    } else {
+        None
+    };
+    let coords = if flags & 2 != 0 {
+        let raw = c.vec_f32(v * 2, "coords")?;
+        Some(raw.chunks_exact(2).map(|p| [p[0], p[1]]).collect())
+    } else {
+        None
+    };
+    // targets (flag bit 2) are python-side only; skip if present
+    Ok(Graph {
+        indptr,
+        indices,
+        features,
+        feature_dim: f,
+        duration: dur.max(1),
+        num_classes: classes,
+        labels,
+        coords,
+    })
+}
+
+pub fn write_fgr(path: &Path, g: &Graph) -> Result<(), FgrError> {
+    let mut out: Vec<u8> = Vec::with_capacity(
+        64 + g.indptr.len() * 8 + g.indices.len() * 4 + g.features.len() * 4,
+    );
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&(g.num_vertices() as u32).to_le_bytes());
+    out.extend_from_slice(&(g.num_edges() as u64).to_le_bytes());
+    out.extend_from_slice(&(g.feature_dim as u32).to_le_bytes());
+    out.extend_from_slice(&(g.num_classes as u32).to_le_bytes());
+    out.extend_from_slice(&(g.duration.max(1) as u32).to_le_bytes());
+    let flags: u32 = (g.labels.is_some() as u32)
+        | ((g.coords.is_some() as u32) << 1);
+    out.extend_from_slice(&flags.to_le_bytes());
+    for x in &g.indptr {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    for x in &g.indices {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    for x in &g.features {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    if let Some(labels) = &g.labels {
+        for x in labels {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+    if let Some(coords) = &g.coords {
+        for p in coords {
+            out.extend_from_slice(&p[0].to_le_bytes());
+            out.extend_from_slice(&p[1].to_le_bytes());
+        }
+    }
+    let mut file = fs::File::create(path)?;
+    file.write_all(&out)?;
+    Ok(())
+}
+
+/// Read only the header (for quick dataset listings).
+pub fn read_fgr_header(path: &Path) -> Result<(usize, usize, usize, usize, usize), FgrError> {
+    let mut file = fs::File::open(path)?;
+    let mut head = [0u8; 28];
+    file.read_exact(&mut head)?;
+    if &head[..4] != MAGIC {
+        return Err(FgrError::BadMagic);
+    }
+    let mut c = Cursor { buf: &head, pos: 4 };
+    Ok((
+        c.u32("V")? as usize,
+        c.u64("E")? as usize,
+        c.u32("F")? as usize,
+        c.u32("classes")? as usize,
+        c.u32("duration")? as usize,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_graph() -> Graph {
+        let mut g = Graph::from_undirected_edges(5, &[(0, 1), (1, 2), (3, 4)]);
+        g.feature_dim = 3;
+        g.features = (0..15).map(|x| x as f32 * 0.5).collect();
+        g.num_classes = 2;
+        g.labels = Some(vec![0, 1, 0, 1, 1]);
+        g.coords = Some(vec![[0.0, 0.0]; 5]);
+        g
+    }
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("fgr_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("g.fgr");
+        let g = sample_graph();
+        write_fgr(&p, &g).unwrap();
+        let g2 = read_fgr(&p).unwrap();
+        assert_eq!(g2.indptr, g.indptr);
+        assert_eq!(g2.indices, g.indices);
+        assert_eq!(g2.features, g.features);
+        assert_eq!(g2.labels, g.labels);
+        assert_eq!(g2.num_classes, 2);
+        let (v, e, f, c, d) = read_fgr_header(&p).unwrap();
+        assert_eq!((v, e, f, c, d), (5, 6, 3, 2, 1));
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let dir = std::env::temp_dir().join("fgr_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.fgr");
+        std::fs::write(&p, b"NOPE....................").unwrap();
+        assert!(matches!(read_fgr(&p), Err(FgrError::BadMagic)));
+    }
+
+    #[test]
+    fn truncation_detected() {
+        let dir = std::env::temp_dir().join("fgr_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("trunc.fgr");
+        let g = sample_graph();
+        write_fgr(&p, &g).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &bytes[..bytes.len() - 10]).unwrap();
+        assert!(read_fgr(&p).is_err());
+    }
+}

@@ -1,0 +1,13 @@
+//! Graph substrate: CSR container, binary IO (.fgr), topology generators,
+//! the paper's dataset twins (Table III), and partition-local subgraph /
+//! halo-exchange extraction for the distributed runtime.
+
+pub mod csr;
+pub mod datasets;
+pub mod generate;
+pub mod io;
+pub mod subgraph;
+
+pub use csr::Graph;
+pub use datasets::DatasetSpec;
+pub use subgraph::{ExchangePlan, LocalGraph};

@@ -1,0 +1,239 @@
+//! Partition-local subgraph extraction with halo vertices, plus the
+//! cross-fog exchange plan the BSP runtime executes between GNN layers
+//! (paper §III-E).
+//!
+//! For a data placement π, fog j owns local vertices L_j; to compute one
+//! GNN layer for L_j it additionally needs the current activations of
+//! every in-neighbor of L_j that lives elsewhere — the *halo* H_j. The
+//! local index space is `[locals..., halo...]`, and the edge list contains
+//! every edge whose destination is local (sources may be halo).
+
+use std::collections::HashMap;
+
+use super::csr::Graph;
+
+/// One fog's executable view of its partition.
+#[derive(Clone, Debug)]
+pub struct LocalGraph {
+    /// Global vertex ids; first `n_local` entries are owned, rest is halo.
+    pub vertices: Vec<u32>,
+    pub n_local: usize,
+    /// COO edges in local index space; dst < n_local always.
+    pub src: Vec<u32>,
+    pub dst: Vec<u32>,
+    /// Global in-degree of each local-space vertex (for GCN/SAGE
+    /// normalization — must be the FULL-graph degree, not the local one).
+    pub global_degree: Vec<u32>,
+}
+
+impl LocalGraph {
+    pub fn n_total(&self) -> usize {
+        self.vertices.len()
+    }
+
+    pub fn n_halo(&self) -> usize {
+        self.vertices.len() - self.n_local
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.src.len()
+    }
+
+    /// The cardinality ⟨|V|, |N_V|⟩ the profiler's latency model uses
+    /// (paper §III-B): owned vertices and their one-hop neighbor count.
+    pub fn cardinality(&self) -> (usize, usize) {
+        (self.n_local, self.num_edges())
+    }
+}
+
+/// Cross-fog halo exchange plan for one layer boundary: for each
+/// (owner, requester) pair, which owner-local vertices to ship.
+#[derive(Clone, Debug, Default)]
+pub struct ExchangePlan {
+    /// transfers[owner][requester] = owner-local indices (usize into the
+    /// owner's `vertices[..n_local]`) that the requester needs.
+    pub transfers: Vec<Vec<Vec<u32>>>,
+}
+
+impl ExchangePlan {
+    /// Total vertices shipped in one synchronization round.
+    pub fn total_vertices(&self) -> usize {
+        self.transfers
+            .iter()
+            .flat_map(|row| row.iter().map(|v| v.len()))
+            .sum()
+    }
+}
+
+/// Extract per-fog local graphs + the exchange plan from an assignment
+/// (assignment[v] = fog index, must be < n_fogs).
+pub fn extract(g: &Graph, assignment: &[u32], n_fogs: usize)
+               -> (Vec<LocalGraph>, ExchangePlan) {
+    let nv = g.num_vertices();
+    assert_eq!(assignment.len(), nv);
+
+    let mut locals: Vec<Vec<u32>> = vec![Vec::new(); n_fogs];
+    for v in 0..nv {
+        locals[assignment[v] as usize].push(v as u32);
+    }
+
+    let mut subs = Vec::with_capacity(n_fogs);
+    // owner -> (requester -> owner-local vertex ids needed)
+    let mut needed: Vec<Vec<Vec<u32>>> = vec![vec![Vec::new(); n_fogs]; n_fogs];
+
+    for (j, owned) in locals.iter().enumerate() {
+        // local index mapping
+        let mut index: HashMap<u32, u32> =
+            owned.iter().enumerate().map(|(i, &v)| (v, i as u32)).collect();
+        let mut vertices = owned.clone();
+        let n_local = owned.len();
+        let mut src = Vec::new();
+        let mut dst = Vec::new();
+        // in-edges of owned vertices: graph is symmetric, so in-neighbors
+        // == out-neighbors
+        for (li, &v) in owned.iter().enumerate() {
+            for &u in g.neighbors(v as usize) {
+                let si = *index.entry(u).or_insert_with(|| {
+                    vertices.push(u);
+                    (vertices.len() - 1) as u32
+                });
+                src.push(si);
+                dst.push(li as u32);
+            }
+        }
+        // halo ownership bookkeeping
+        for &hv in &vertices[n_local..] {
+            let owner = assignment[hv as usize] as usize;
+            needed[owner][j].push(hv);
+        }
+        let global_degree =
+            vertices.iter().map(|&v| g.degree(v as usize) as u32).collect();
+        subs.push(LocalGraph { vertices, n_local, src, dst, global_degree });
+    }
+
+    // translate needed global ids into owner-local indices
+    let mut owner_index: Vec<HashMap<u32, u32>> = Vec::with_capacity(n_fogs);
+    for sub in &subs {
+        owner_index.push(
+            sub.vertices[..sub.n_local]
+                .iter()
+                .enumerate()
+                .map(|(i, &v)| (v, i as u32))
+                .collect(),
+        );
+    }
+    let mut transfers = vec![vec![Vec::new(); n_fogs]; n_fogs];
+    for (owner, row) in needed.into_iter().enumerate() {
+        for (req, globals) in row.into_iter().enumerate() {
+            transfers[owner][req] = globals
+                .iter()
+                .map(|gv| owner_index[owner][gv])
+                .collect();
+        }
+    }
+
+    (subs, ExchangePlan { transfers })
+}
+
+/// Extract a single subgraph over `vertex_set` with halo, for calibration
+/// sampling (paper §III-B's proxy-guided profiling).
+pub fn extract_one(g: &Graph, vertex_set: &[u32]) -> LocalGraph {
+    let mut assignment = vec![1u32; g.num_vertices()];
+    for &v in vertex_set {
+        assignment[v as usize] = 0;
+    }
+    let (mut subs, _) = extract(g, &assignment, 2);
+    subs.swap_remove(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// 0-1-2-3-4 path + edge 0-4, split {0,1},{2,3,4}
+    fn setup() -> (Graph, Vec<LocalGraph>, ExchangePlan) {
+        let g = Graph::from_undirected_edges(
+            5,
+            &[(0, 1), (1, 2), (2, 3), (3, 4), (0, 4)],
+        );
+        let assignment = vec![0, 0, 1, 1, 1];
+        let (subs, plan) = extract(&g, &assignment, 2);
+        (g, subs, plan)
+    }
+
+    #[test]
+    fn locals_and_halo_are_correct() {
+        let (_, subs, _) = setup();
+        assert_eq!(subs[0].n_local, 2);
+        assert_eq!(&subs[0].vertices[..2], &[0, 1]);
+        // fog0 needs 2 (neighbor of 1) and 4 (neighbor of 0) as halo
+        let mut halo = subs[0].vertices[2..].to_vec();
+        halo.sort_unstable();
+        assert_eq!(halo, vec![2, 4]);
+        assert_eq!(subs[1].n_local, 3);
+        let mut halo1 = subs[1].vertices[3..].to_vec();
+        halo1.sort_unstable();
+        assert_eq!(halo1, vec![0, 1]);
+    }
+
+    #[test]
+    fn all_dst_are_local_and_edges_complete() {
+        let (g, subs, _) = setup();
+        let mut total_edges = 0;
+        for sub in &subs {
+            assert!(sub.dst.iter().all(|&d| (d as usize) < sub.n_local));
+            total_edges += sub.num_edges();
+        }
+        // every directed edge lands in exactly one fog (by destination)
+        assert_eq!(total_edges, g.num_edges());
+    }
+
+    #[test]
+    fn global_degrees_preserved() {
+        let (g, subs, _) = setup();
+        for sub in &subs {
+            for (i, &v) in sub.vertices.iter().enumerate() {
+                assert_eq!(
+                    sub.global_degree[i] as usize,
+                    g.degree(v as usize)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn exchange_plan_covers_halo() {
+        let (_, subs, plan) = setup();
+        // fog1 owns vertex 2 and 4; fog0's halo = {2,4} -> transfers[1][0]
+        let t10: Vec<u32> = plan.transfers[1][0].clone();
+        let fog1_locals = &subs[1].vertices[..subs[1].n_local];
+        let shipped: Vec<u32> =
+            t10.iter().map(|&li| fog1_locals[li as usize]).collect();
+        let mut shipped_sorted = shipped.clone();
+        shipped_sorted.sort_unstable();
+        assert_eq!(shipped_sorted, vec![2, 4]);
+        assert_eq!(plan.total_vertices(), 4); // {2,4} to fog0, {0,1} to fog1
+    }
+
+    #[test]
+    fn single_partition_has_no_halo() {
+        let g = Graph::from_undirected_edges(4, &[(0, 1), (1, 2), (2, 3)]);
+        let (subs, plan) = extract(&g, &[0, 0, 0, 0], 1);
+        assert_eq!(subs[0].n_halo(), 0);
+        assert_eq!(plan.total_vertices(), 0);
+        assert_eq!(subs[0].num_edges(), g.num_edges());
+    }
+
+    #[test]
+    fn extract_one_matches_manual() {
+        let g = Graph::from_undirected_edges(
+            5,
+            &[(0, 1), (1, 2), (2, 3), (3, 4)],
+        );
+        let sub = extract_one(&g, &[1, 2]);
+        assert_eq!(sub.n_local, 2);
+        let mut halo = sub.vertices[sub.n_local..].to_vec();
+        halo.sort_unstable();
+        assert_eq!(halo, vec![0, 3]);
+    }
+}

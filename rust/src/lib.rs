@@ -1,0 +1,18 @@
+//! Fograph: distributed real-time GNN inference serving over
+//! heterogeneous fog nodes — a full reproduction of the CS.DC 2023 paper
+//! as a Rust (L3 coordinator) + JAX (L2 models) + Pallas (L1 kernels)
+//! stack with AOT compilation via PJRT. See DESIGN.md.
+
+pub mod compress;
+pub mod exec;
+pub mod experiments;
+pub mod fog;
+pub mod graph;
+pub mod net;
+pub mod partition;
+pub mod placement;
+pub mod profile;
+pub mod runtime;
+pub mod scheduler;
+pub mod serving;
+pub mod util;

@@ -1,0 +1,197 @@
+//! `repro` — the Fograph leader CLI.
+//!
+//! Subcommands:
+//!   dataset   generate dataset twins (.fgr) for the Python compile path
+//!   serve     run one end-to-end serving comparison on a dataset
+//!   exp       regenerate a paper table/figure (see experiments/)
+//!   list      list datasets, artifacts and experiments
+
+use std::path::{Path, PathBuf};
+
+use fograph::compress::Codec;
+use fograph::experiments;
+use fograph::fog::Cluster;
+use fograph::graph::{datasets, io as gio};
+use fograph::net::NetKind;
+use fograph::profile::PerfModel;
+use fograph::runtime::{Engine, EngineKind};
+use fograph::serving::{self, Placement, ServeOpts};
+use fograph::util::cli::Args;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv, &["verbose", "keep-outputs", "gpu"]);
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let code = match cmd {
+        "dataset" => cmd_dataset(&args),
+        "serve" => cmd_serve(&args),
+        "exp" => experiments::cmd_exp(&args),
+        "list" => cmd_list(&args),
+        _ => {
+            print_help();
+            0
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_help() {
+    println!(
+        "repro — Fograph reproduction CLI
+
+USAGE:
+  repro dataset --name <siot|yelp|pems|rmat20k|...|all> [--out data]
+  repro serve   --dataset <name> --model <gcn|gat|sage|astgcn>
+                [--mode cloud|single-fog|multi-fog|fograph]
+                [--net 4g|5g|wifi] [--engine pjrt|ref] [--repeats N]
+  repro exp     <fig3|fig4|fig8|fig11|fig12|table4|fig13|table5|fig14|
+                 fig15|fig16|fig17|fig18|all> [--engine pjrt|ref]
+                [--repeats N] [--data data] [--artifacts artifacts]
+  repro list    [--data data] [--artifacts artifacts]"
+    );
+}
+
+fn cmd_dataset(args: &Args) -> i32 {
+    let out = PathBuf::from(args.get_or("out", "data"));
+    std::fs::create_dir_all(&out).expect("create data dir");
+    let name = args.get_or("name", "all");
+    let names: Vec<&str> = if name == "all" {
+        datasets::all_specs().iter().map(|s| s.name).collect()
+    } else {
+        name.split(',').collect()
+    };
+    for n in names {
+        let spec = match datasets::spec_by_name(n) {
+            Some(s) => s,
+            None => {
+                eprintln!("unknown dataset {n}");
+                return 2;
+            }
+        };
+        let path = out.join(format!("{n}.fgr"));
+        if path.exists() {
+            println!("{n}: already at {}", path.display());
+            continue;
+        }
+        let t = std::time::Instant::now();
+        let g = datasets::generate(n);
+        gio::write_fgr(&path, &g).expect("write .fgr");
+        println!(
+            "{n}: V={} E={} F={} -> {} ({:.1}s)",
+            g.num_vertices(),
+            g.undirected_edges(),
+            spec.feature_dim,
+            path.display(),
+            t.elapsed().as_secs_f64()
+        );
+    }
+    0
+}
+
+fn cmd_serve(args: &Args) -> i32 {
+    let data_dir = PathBuf::from(args.get_or("data", "data"));
+    let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let ds = args.get_or("dataset", "siot");
+    let model = args.get_or("model", "gcn");
+    let mode = args.get_or("mode", "fograph");
+    let net = NetKind::parse(args.get_or("net", "wifi")).expect("bad --net");
+    let repeats = args.get_usize("repeats", 3);
+    let engine_kind = match args.get_or("engine", "pjrt") {
+        "ref" | "reference" => EngineKind::Reference,
+        _ => EngineKind::Pjrt,
+    };
+    let spec = datasets::spec_by_name(ds).expect("unknown dataset");
+    let g = datasets::load_or_generate(&data_dir, ds);
+    let mut engine = match Engine::new(engine_kind, &artifacts) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("engine init failed ({e}); falling back to reference");
+            Engine::new(EngineKind::Reference, &artifacts).unwrap()
+        }
+    };
+
+    let (cluster, opts) = match mode {
+        "cloud" => (
+            Cluster::cloud(net),
+            ServeOpts {
+                wan: true,
+                ..ServeOpts::new(model, Placement::SingleNode(0),
+                                 Codec::None)
+            },
+        ),
+        "single-fog" => {
+            let c = Cluster::testbed(net);
+            let p = c.most_powerful();
+            (c, ServeOpts::new(model, Placement::SingleNode(p),
+                               Codec::None))
+        }
+        "multi-fog" => (
+            Cluster::testbed(net),
+            ServeOpts::new(model, Placement::MetisRandom(1), Codec::None),
+        ),
+        "fograph" => (
+            Cluster::testbed(net),
+            ServeOpts::new(model, Placement::Iep, ServeOpts::co_codec(&g)),
+        ),
+        other => {
+            eprintln!("unknown mode {other}");
+            return 2;
+        }
+    };
+    let omegas = vec![PerfModel::uncalibrated(); cluster.len()];
+    let mut reports = Vec::new();
+    for _ in 0..repeats {
+        match serving::serve(&g, &spec, &cluster, &opts, &omegas,
+                             &mut engine) {
+            Ok(r) => reports.push(r),
+            Err(e) => {
+                eprintln!("serving failed: {e}");
+                return 1;
+            }
+        }
+    }
+    let r = fograph::serving::metrics::average(reports);
+    println!("mode={mode} dataset={ds} model={model} net={}", net.name());
+    println!(
+        "  latency   {:.4} s  (collect {:.4} + exec {:.4} + sync {:.4} + unpack {:.4})",
+        r.total_s, r.collection_s, r.execution_s, r.sync_s, r.unpack_s
+    );
+    println!("  throughput {:.2} inf/s", r.throughput);
+    println!(
+        "  wire {:.2} MB (raw {:.2} MB, ratio {:.3})",
+        r.wire_bytes as f64 / 1e6,
+        r.raw_bytes as f64 / 1e6,
+        r.wire_bytes as f64 / r.raw_bytes.max(1) as f64
+    );
+    if !engine.synthetic_weights.is_empty() {
+        eprintln!(
+            "  note: synthetic weights used for {:?} (run `make artifacts`)",
+            engine.synthetic_weights
+        );
+    }
+    0
+}
+
+fn cmd_list(args: &Args) -> i32 {
+    let data_dir = PathBuf::from(args.get_or("data", "data"));
+    println!("datasets (Table III twins):");
+    for s in datasets::all_specs() {
+        let status = if data_dir.join(format!("{}.fgr", s.name)).exists() {
+            "generated"
+        } else {
+            "not generated"
+        };
+        println!(
+            "  {:<9} V={:<7} E={:<8} F={:<3} C={} [{status}]",
+            s.name, s.vertices, s.edges, s.feature_dim, s.classes
+        );
+    }
+    let art = Path::new(args.get_or("artifacts", "artifacts"));
+    match fograph::runtime::Manifest::load(art) {
+        Ok(m) => println!("artifacts: {} lowered modules in {}",
+                          m.artifacts.len(), art.display()),
+        Err(_) => println!("artifacts: none (run `make artifacts`)"),
+    }
+    println!("experiments: {}", experiments::available().join(", "));
+    0
+}

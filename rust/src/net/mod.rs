@@ -1,0 +1,86 @@
+//! Network substrate: analytic transfer-time models for the three access
+//! technologies the paper evaluates (4G, 5G-NSA, WiFi) plus the WAN path
+//! to the cloud — calibrated so the cloud-vs-fog data-collection ratios
+//! match the paper's §II-C measurements (64%/67%/61% collection-latency
+//! reduction for 4G/5G/WiFi).
+
+pub mod profiles;
+
+pub use profiles::{NetProfile, NetKind};
+
+/// Transfer time of `bytes` over a link of `mbps` with `rtt_s` setup
+/// latency (payloads here are ≫ MTU, so a single-RTT model suffices).
+pub fn transfer_time_s(bytes: usize, mbps: f64, rtt_s: f64) -> f64 {
+    debug_assert!(mbps > 0.0);
+    rtt_s + (bytes as f64 * 8.0) / (mbps * 1e6)
+}
+
+/// Effective device→fog uplink bandwidth when `devices` sources share one
+/// fog access point (contention model of §II-C: more fog nodes = more
+/// access points = wider aggregate bandwidth).
+pub fn fog_uplink_mbps(p: &NetProfile, devices: usize) -> f64 {
+    let aggregate = p.device_uplink_mbps * devices.max(1) as f64;
+    aggregate.min(p.ap_capacity_mbps)
+}
+
+/// Effective device→cloud bandwidth: all devices funnel through the WAN
+/// backhaul; long-haul capacity caps the aggregate.
+pub fn cloud_uplink_mbps(p: &NetProfile, devices: usize) -> f64 {
+    let aggregate = p.device_uplink_mbps * devices.max(1) as f64;
+    aggregate.min(p.wan_capacity_mbps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use profiles::NetKind;
+
+    #[test]
+    fn transfer_time_scales_linearly() {
+        let t1 = transfer_time_s(1_000_000, 10.0, 0.0);
+        let t2 = transfer_time_s(2_000_000, 10.0, 0.0);
+        assert!((t2 - 2.0 * t1).abs() < 1e-12);
+        assert!((t1 - 0.8).abs() < 1e-9); // 8 Mbit over 10 Mbps
+    }
+
+    #[test]
+    fn contention_caps_at_ap_capacity() {
+        let p = NetProfile::get(NetKind::Wifi);
+        let few = fog_uplink_mbps(&p, 1);
+        let many = fog_uplink_mbps(&p, 1000);
+        assert!(few <= many);
+        assert_eq!(many, p.ap_capacity_mbps);
+    }
+
+    /// Calibration check: SIoT-sized upload (per §II-C: 16216 × 52 × 8 B
+    /// over 8 devices) must show the paper's collection-latency reduction
+    /// band when moving cloud → single fog.
+    #[test]
+    fn cloud_to_fog_reduction_matches_paper_band() {
+        let bytes = 16216usize * 52 * 8;
+        let devices = 8;
+        for (kind, expect) in [
+            (NetKind::Cell4G, 0.64),
+            (NetKind::Cell5G, 0.67),
+            (NetKind::Wifi, 0.61),
+        ] {
+            let p = NetProfile::get(kind);
+            let cloud = transfer_time_s(
+                bytes,
+                cloud_uplink_mbps(&p, devices),
+                p.wan_rtt_s,
+            );
+            // single-fog serving runs on the type-C node (share 1.3)
+            let fog = transfer_time_s(
+                bytes,
+                fog_uplink_mbps(&p, devices) * 1.3,
+                p.lan_rtt_s,
+            );
+            let reduction = 1.0 - fog / cloud;
+            assert!(
+                (reduction - expect).abs() < 0.08,
+                "{kind:?}: reduction {reduction:.3}, paper {expect}"
+            );
+        }
+    }
+}

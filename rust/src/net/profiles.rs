@@ -1,0 +1,112 @@
+//! Access-technology parameters. Calibrated (see net::tests) so that the
+//! SIoT upload scenario reproduces §II-C's measured cloud→fog collection
+//! reductions (64% on 4G, 67% on 5G, 61% on WiFi) — the WAN backhaul is
+//! the cloud bottleneck, the shared access point the fog-side one.
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum NetKind {
+    Cell4G,
+    Cell5G,
+    Wifi,
+}
+
+impl NetKind {
+    pub fn parse(s: &str) -> Option<NetKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "4g" => Some(NetKind::Cell4G),
+            "5g" => Some(NetKind::Cell5G),
+            "wifi" => Some(NetKind::Wifi),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            NetKind::Cell4G => "4G",
+            NetKind::Cell5G => "5G",
+            NetKind::Wifi => "WiFi",
+        }
+    }
+
+    pub fn all() -> [NetKind; 3] {
+        [NetKind::Cell4G, NetKind::Cell5G, NetKind::Wifi]
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct NetProfile {
+    pub kind: NetKind,
+    /// Single-device uplink (Mbps).
+    pub device_uplink_mbps: f64,
+    /// Aggregate capacity of one fog-side access point (Mbps).
+    pub ap_capacity_mbps: f64,
+    /// Long-haul WAN capacity toward the cloud region (Mbps).
+    pub wan_capacity_mbps: f64,
+    /// LAN round-trip (device ↔ fog).
+    pub lan_rtt_s: f64,
+    /// WAN round-trip (device ↔ cloud, ~200 km + congestion).
+    pub wan_rtt_s: f64,
+    /// Inter-fog LAN bandwidth for BSP synchronization (Mbps).
+    pub interfog_mbps: f64,
+    /// Inter-fog LAN round-trip.
+    pub interfog_rtt_s: f64,
+}
+
+impl NetProfile {
+    pub fn get(kind: NetKind) -> NetProfile {
+        match kind {
+            NetKind::Cell4G => NetProfile {
+                kind,
+                device_uplink_mbps: 12.0,
+                ap_capacity_mbps: 48.0,
+                wan_capacity_mbps: 22.0,
+                lan_rtt_s: 0.012,
+                wan_rtt_s: 0.055,
+                interfog_mbps: 400.0,
+                interfog_rtt_s: 0.004,
+            },
+            NetKind::Cell5G => NetProfile {
+                kind,
+                device_uplink_mbps: 45.0,
+                ap_capacity_mbps: 155.0,
+                wan_capacity_mbps: 67.0,
+                lan_rtt_s: 0.008,
+                wan_rtt_s: 0.048,
+                interfog_mbps: 900.0,
+                interfog_rtt_s: 0.003,
+            },
+            NetKind::Wifi => NetProfile {
+                kind,
+                device_uplink_mbps: 30.0,
+                ap_capacity_mbps: 78.0,
+                wan_capacity_mbps: 40.0,
+                lan_rtt_s: 0.006,
+                wan_rtt_s: 0.050,
+                interfog_mbps: 900.0,
+                interfog_rtt_s: 0.002,
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_name_roundtrip() {
+        for k in NetKind::all() {
+            assert_eq!(NetKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(NetKind::parse("6g"), None);
+    }
+
+    #[test]
+    fn faster_tech_has_more_capacity() {
+        let g4 = NetProfile::get(NetKind::Cell4G);
+        let g5 = NetProfile::get(NetKind::Cell5G);
+        assert!(g5.device_uplink_mbps > g4.device_uplink_mbps);
+        assert!(g5.ap_capacity_mbps > g4.ap_capacity_mbps);
+        assert!(g5.wan_capacity_mbps > g4.wan_capacity_mbps);
+    }
+}

@@ -1,0 +1,65 @@
+//! Baseline partitioners for ablations and the motivation experiments:
+//! random equal split (the §II-C measurement setup) and contiguous range
+//! (linear) split.
+
+use crate::graph::Graph;
+use crate::util::rng::Rng;
+
+/// Random balanced split: shuffles vertices and deals them round-robin —
+//  exactly the "randomly divided into equal parts" setup of §II-C.
+pub fn random_split(g: &Graph, k: usize, seed: u64) -> Vec<u32> {
+    let nv = g.num_vertices();
+    let mut order: Vec<u32> = (0..nv as u32).collect();
+    let mut rng = Rng::new(seed);
+    rng.shuffle(&mut order);
+    let mut part = vec![0u32; nv];
+    for (i, &v) in order.iter().enumerate() {
+        part[v as usize] = (i % k) as u32;
+    }
+    part
+}
+
+/// Contiguous ranges 0..n/k, n/k..2n/k, ... (cheap, locality only if the
+/// vertex numbering is already spatial).
+pub fn linear_split(g: &Graph, k: usize) -> Vec<u32> {
+    let nv = g.num_vertices();
+    (0..nv).map(|v| ((v * k) / nv).min(k - 1) as u32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate;
+
+    #[test]
+    fn random_split_is_balanced() {
+        let (g, _) = generate::sbm(1000, 3000, 4, 0.9, 1);
+        let part = random_split(&g, 7, 3);
+        let mut counts = vec![0usize; 7];
+        for &p in &part {
+            counts[p as usize] += 1;
+        }
+        let (lo, hi) = (counts.iter().min().unwrap(), counts.iter().max().unwrap());
+        assert!(hi - lo <= 1, "{counts:?}");
+    }
+
+    #[test]
+    fn linear_split_is_contiguous_and_balanced() {
+        let (g, _) = generate::sbm(1003, 3000, 4, 0.9, 2);
+        let part = linear_split(&g, 4);
+        let mut counts = vec![0usize; 4];
+        for &p in &part {
+            counts[p as usize] += 1;
+        }
+        assert!(counts.iter().all(|&c| c >= 250 && c <= 252), "{counts:?}");
+        // contiguity: non-decreasing
+        assert!(part.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn random_split_deterministic_per_seed() {
+        let (g, _) = generate::sbm(100, 300, 2, 0.8, 5);
+        assert_eq!(random_split(&g, 3, 42), random_split(&g, 3, 42));
+        assert_ne!(random_split(&g, 3, 42), random_split(&g, 3, 43));
+    }
+}

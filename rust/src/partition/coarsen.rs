@@ -1,0 +1,138 @@
+//! Coarsening phase of the multilevel partitioner: heavy-edge matching
+//! (METIS' HEM) followed by contraction.
+
+use crate::util::rng::Rng;
+
+use super::wgraph::WGraph;
+
+/// One heavy-edge matching pass. Returns (cmap, coarse_n): matched pairs
+/// share a coarse id, unmatched vertices keep their own.
+pub fn heavy_edge_matching(g: &WGraph, rng: &mut Rng) -> (Vec<u32>, usize) {
+    let nv = g.num_vertices();
+    let mut order: Vec<u32> = (0..nv as u32).collect();
+    rng.shuffle(&mut order);
+    // visit light vertices first — standard HEM heuristic keeps weights even
+    order.sort_by_key(|&v| g.vwgt[v as usize]);
+
+    let mut mate = vec![u32::MAX; nv];
+    for &v in &order {
+        let v = v as usize;
+        if mate[v] != u32::MAX {
+            continue;
+        }
+        let mut best: Option<(u32, u64)> = None;
+        for &(u, w) in g.neighbors(v) {
+            if mate[u as usize] == u32::MAX && u as usize != v {
+                match best {
+                    Some((_, bw)) if bw >= w => {}
+                    _ => best = Some((u, w)),
+                }
+            }
+        }
+        match best {
+            Some((u, _)) => {
+                mate[v] = u;
+                mate[u as usize] = v as u32;
+            }
+            None => mate[v] = v as u32,
+        }
+    }
+    // assign dense coarse ids
+    let mut cmap = vec![u32::MAX; nv];
+    let mut next = 0u32;
+    for v in 0..nv {
+        if cmap[v] != u32::MAX {
+            continue;
+        }
+        let m = mate[v] as usize;
+        cmap[v] = next;
+        cmap[m] = next; // m == v for unmatched
+        next += 1;
+    }
+    (cmap, next as usize)
+}
+
+/// Coarsen until `target_nv` or until progress stalls. Returns the level
+/// stack: `levels[0]` is the input graph; `cmaps[i]` maps level i -> i+1.
+pub struct Hierarchy {
+    pub levels: Vec<WGraph>,
+    pub cmaps: Vec<Vec<u32>>,
+}
+
+pub fn coarsen(g: WGraph, target_nv: usize, seed: u64) -> Hierarchy {
+    let mut rng = Rng::new(seed);
+    let mut levels = vec![g];
+    let mut cmaps = Vec::new();
+    loop {
+        let cur = levels.last().unwrap();
+        let nv = cur.num_vertices();
+        if nv <= target_nv {
+            break;
+        }
+        let (cmap, cn) = heavy_edge_matching(cur, &mut rng);
+        if cn as f64 > nv as f64 * 0.95 {
+            break; // stalled (e.g. star graphs)
+        }
+        let coarse = cur.contract(&cmap, cn);
+        cmaps.push(cmap);
+        levels.push(coarse);
+    }
+    Hierarchy { levels, cmaps }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Graph;
+
+    fn ring(n: usize) -> WGraph {
+        let edges: Vec<(u32, u32)> = (0..n)
+            .map(|i| (i as u32, ((i + 1) % n) as u32))
+            .collect();
+        WGraph::from_graph(&Graph::from_undirected_edges(n, &edges))
+    }
+
+    #[test]
+    fn matching_is_valid() {
+        let g = ring(100);
+        let mut rng = Rng::new(1);
+        let (cmap, cn) = heavy_edge_matching(&g, &mut rng);
+        assert!(cn < 100 && cn >= 50);
+        // every coarse id has 1 or 2 members
+        let mut count = vec![0; cn];
+        for &c in &cmap {
+            count[c as usize] += 1;
+        }
+        assert!(count.iter().all(|&c| c == 1 || c == 2));
+        // matched pairs are adjacent
+        let mut members: Vec<Vec<usize>> = vec![Vec::new(); cn];
+        for (v, &c) in cmap.iter().enumerate() {
+            members[c as usize].push(v);
+        }
+        for m in members.iter().filter(|m| m.len() == 2) {
+            assert!(g.neighbors(m[0]).iter().any(|&(u, _)| u as usize == m[1]));
+        }
+    }
+
+    #[test]
+    fn coarsen_preserves_total_weight() {
+        let g = ring(256);
+        let total = g.total_vwgt();
+        let h = coarsen(g, 16, 7);
+        assert!(h.levels.len() > 2);
+        for lvl in &h.levels {
+            assert_eq!(lvl.total_vwgt(), total);
+        }
+        assert!(h.levels.last().unwrap().num_vertices() <= 32);
+    }
+
+    #[test]
+    fn coarsen_handles_disconnected_isolates() {
+        let g = WGraph::from_graph(&Graph::from_undirected_edges(
+            10,
+            &[(0, 1), (2, 3)],
+        ));
+        let h = coarsen(g, 2, 3);
+        assert!(h.levels.last().unwrap().num_vertices() >= 6 - 2);
+    }
+}

@@ -1,0 +1,12 @@
+//! Balanced graph partitioning (BGP) substrate — the solver family the
+//! IEP's first step relies on (paper §III-C / Alg. 1). The default is the
+//! in-tree multilevel partitioner (METIS substitute); baselines exist for
+//! the §II-C motivation setup and ablations.
+
+pub mod baselines;
+pub mod coarsen;
+pub mod multilevel;
+pub mod refine;
+pub mod wgraph;
+
+pub use multilevel::{partition, MultilevelParams, PartitionResult};

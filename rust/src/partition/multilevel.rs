@@ -1,0 +1,250 @@
+//! Multilevel k-way balanced graph partitioner — the in-tree METIS
+//! substitute the IEP uses as its BGP solver (paper §III-C, Alg. 1 line 2).
+//!
+//! Pipeline: heavy-edge-matching coarsening → greedy graph-growing initial
+//! partition on the coarsest graph → uncoarsening with boundary FM
+//! refinement at every level.
+
+use crate::graph::Graph;
+use crate::util::rng::Rng;
+
+use super::coarsen::coarsen;
+use super::refine::{refine, RefineParams};
+use super::wgraph::{edge_cut, part_weights, WGraph};
+
+#[derive(Clone, Debug)]
+pub struct PartitionResult {
+    pub assignment: Vec<u32>,
+    pub edge_cut: u64,
+    pub part_weights: Vec<u64>,
+}
+
+#[derive(Clone, Debug)]
+pub struct MultilevelParams {
+    pub seed: u64,
+    pub imbalance: f64,
+    pub coarsen_target_per_part: usize,
+    pub refine_passes: usize,
+}
+
+impl Default for MultilevelParams {
+    fn default() -> Self {
+        Self {
+            seed: 0xF06,
+            imbalance: 1.05,
+            coarsen_target_per_part: 30,
+            refine_passes: 8,
+        }
+    }
+}
+
+/// Greedy graph growing on the coarsest graph: grow each part from a BFS
+/// frontier, always expanding the currently-lightest part with its most
+/// connected frontier vertex.
+fn initial_partition(g: &WGraph, k: usize, rng: &mut Rng) -> Vec<u32> {
+    let nv = g.num_vertices();
+    let total = g.total_vwgt();
+    let ideal = total as f64 / k as f64;
+    let mut part = vec![u32::MAX; nv];
+    let mut pw = vec![0u64; k];
+
+    // seeds: spread via repeated BFS-farthest selection
+    let mut seeds = Vec::with_capacity(k);
+    let first = rng.usize_below(nv);
+    seeds.push(first);
+    for _ in 1..k {
+        // farthest-from-seeds vertex by multi-source BFS
+        let mut dist = vec![u32::MAX; nv];
+        let mut q = std::collections::VecDeque::new();
+        for &s in &seeds {
+            dist[s] = 0;
+            q.push_back(s);
+        }
+        while let Some(x) = q.pop_front() {
+            for &(u, _) in g.neighbors(x) {
+                if dist[u as usize] == u32::MAX {
+                    dist[u as usize] = dist[x] + 1;
+                    q.push_back(u as usize);
+                }
+            }
+        }
+        let far = (0..nv)
+            .filter(|v| !seeds.contains(v))
+            .max_by_key(|&v| if dist[v] == u32::MAX { u32::MAX } else { dist[v] })
+            .unwrap_or_else(|| rng.usize_below(nv));
+        seeds.push(far);
+    }
+    for (p, &s) in seeds.iter().enumerate() {
+        part[s] = p as u32;
+        pw[p] += g.vwgt[s];
+    }
+
+    // grow: lightest part claims its best frontier vertex
+    let mut assigned = k.min(nv);
+    while assigned < nv {
+        let p = (0..k).min_by_key(|&p| pw[p]).unwrap();
+        // best unassigned vertex adjacent to part p
+        let mut best: Option<(usize, u64)> = None;
+        for v in 0..nv {
+            if part[v] != u32::MAX {
+                continue;
+            }
+            let conn: u64 = g
+                .neighbors(v)
+                .iter()
+                .filter(|&&(u, _)| part[u as usize] == p as u32)
+                .map(|&(_, w)| w)
+                .sum();
+            if conn > 0 {
+                match best {
+                    Some((_, bc)) if bc >= conn => {}
+                    _ => best = Some((v, conn)),
+                }
+            }
+        }
+        let v = match best {
+            Some((v, _)) => v,
+            None => {
+                // disconnected: claim a random unassigned vertex
+                (0..nv).find(|&v| part[v] == u32::MAX).unwrap()
+            }
+        };
+        part[v] = p as u32;
+        pw[p] += g.vwgt[v];
+        assigned += 1;
+        // stop unbounded growth of a part
+        if pw[p] as f64 > ideal * 1.5 && assigned < nv {
+            // temporarily mark part as full by inflating (handled by
+            // lightest-part selection naturally)
+        }
+    }
+    part
+}
+
+/// Partition `g` into `k` balanced parts minimizing edge cut.
+pub fn partition(g: &Graph, k: usize, params: &MultilevelParams)
+                 -> PartitionResult {
+    assert!(k >= 1);
+    let wg = WGraph::from_graph(g);
+    if k == 1 {
+        let pw = vec![wg.total_vwgt()];
+        return PartitionResult {
+            assignment: vec![0; g.num_vertices()],
+            edge_cut: 0,
+            part_weights: pw,
+        };
+    }
+    let mut rng = Rng::new(params.seed);
+    let target = (params.coarsen_target_per_part * k).max(64);
+    let hier = coarsen(wg, target, params.seed ^ 0xC0A5);
+
+    let coarsest = hier.levels.last().unwrap();
+    let mut part = initial_partition(coarsest, k, &mut rng);
+    let rp = RefineParams {
+        max_passes: params.refine_passes,
+        imbalance: params.imbalance,
+    };
+    refine(coarsest, &mut part, k, &rp, &mut rng);
+
+    // project back up
+    for lvl in (0..hier.cmaps.len()).rev() {
+        let fine = &hier.levels[lvl];
+        let cmap = &hier.cmaps[lvl];
+        let mut fine_part = vec![0u32; fine.num_vertices()];
+        for (v, &c) in cmap.iter().enumerate() {
+            fine_part[v] = part[c as usize];
+        }
+        part = fine_part;
+        refine(fine, &mut part, k, &rp, &mut rng);
+    }
+
+    let wg0 = &hier.levels[0];
+    PartitionResult {
+        edge_cut: edge_cut(wg0, &part),
+        part_weights: part_weights(wg0, &part, k),
+        assignment: part,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate;
+
+    #[test]
+    fn partitions_are_balanced_and_better_than_random() {
+        let (g, _) = generate::sbm(2000, 10_000, 8, 0.9, 3);
+        let k = 4;
+        let res = partition(&g, k, &MultilevelParams::default());
+        let ideal = 2000 / k;
+        for &w in &res.part_weights {
+            assert!(
+                (w as f64) < ideal as f64 * 1.10,
+                "imbalanced: {:?}",
+                res.part_weights
+            );
+            assert!((w as f64) > ideal as f64 * 0.80);
+        }
+        // random baseline cut
+        let mut rng = Rng::new(4);
+        let rand_assign: Vec<u32> =
+            (0..2000).map(|_| rng.below(k as u64) as u32).collect();
+        let wg = WGraph::from_graph(&g);
+        let rand_cut = edge_cut(&wg, &rand_assign);
+        assert!(
+            res.edge_cut * 2 < rand_cut,
+            "multilevel cut {} vs random {}",
+            res.edge_cut,
+            rand_cut
+        );
+    }
+
+    #[test]
+    fn community_structure_is_recovered() {
+        // 4 well-separated communities, k=4: cut should be tiny vs total
+        let (g, comm) = generate::sbm(800, 4000, 4, 0.97, 9);
+        let res = partition(&g, 4, &MultilevelParams::default());
+        // measure agreement: most vertices in a part share a community
+        let mut agree = 0usize;
+        for p in 0..4u32 {
+            let mut counts = [0usize; 4];
+            for v in 0..800 {
+                if res.assignment[v] == p {
+                    counts[comm[v] as usize] += 1;
+                }
+            }
+            agree += counts.iter().max().unwrap();
+        }
+        assert!(agree > 640, "community agreement {agree}/800");
+    }
+
+    #[test]
+    fn k1_is_trivial() {
+        let (g, _) = generate::sbm(100, 300, 2, 0.8, 1);
+        let res = partition(&g, 1, &MultilevelParams::default());
+        assert_eq!(res.edge_cut, 0);
+        assert!(res.assignment.iter().all(|&p| p == 0));
+    }
+
+    #[test]
+    fn deterministic_for_same_seed() {
+        let (g, _) = generate::sbm(500, 2000, 4, 0.9, 2);
+        let a = partition(&g, 3, &MultilevelParams::default());
+        let b = partition(&g, 3, &MultilevelParams::default());
+        assert_eq!(a.assignment, b.assignment);
+    }
+
+    #[test]
+    fn handles_k_greater_than_components() {
+        let g = crate::graph::Graph::from_undirected_edges(
+            12,
+            &[(0, 1), (1, 2), (3, 4), (4, 5), (6, 7), (8, 9), (10, 11)],
+        );
+        let res = partition(&g, 5, &MultilevelParams::default());
+        let mut seen: Vec<bool> = vec![false; 5];
+        for &p in &res.assignment {
+            seen[p as usize] = true;
+        }
+        assert!(seen.iter().filter(|&&b| b).count() >= 4);
+    }
+}

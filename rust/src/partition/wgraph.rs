@@ -1,0 +1,149 @@
+//! Weighted working graph for the multilevel partitioner: vertex weights
+//! carry collapsed-vertex counts through coarsening, edge weights carry
+//! collapsed multi-edge multiplicities.
+
+use crate::graph::Graph;
+
+#[derive(Clone, Debug)]
+pub struct WGraph {
+    pub xadj: Vec<usize>,          // V+1
+    pub adj: Vec<(u32, u64)>,      // (neighbor, edge weight)
+    pub vwgt: Vec<u64>,            // vertex weights
+}
+
+impl WGraph {
+    pub fn num_vertices(&self) -> usize {
+        self.vwgt.len()
+    }
+
+    pub fn total_vwgt(&self) -> u64 {
+        self.vwgt.iter().sum()
+    }
+
+    pub fn neighbors(&self, v: usize) -> &[(u32, u64)] {
+        &self.adj[self.xadj[v]..self.xadj[v + 1]]
+    }
+
+    pub fn from_graph(g: &Graph) -> WGraph {
+        let nv = g.num_vertices();
+        let mut xadj = Vec::with_capacity(nv + 1);
+        xadj.push(0usize);
+        let mut adj = Vec::with_capacity(g.num_edges());
+        for v in 0..nv {
+            for &u in g.neighbors(v) {
+                adj.push((u, 1u64));
+            }
+            xadj.push(adj.len());
+        }
+        WGraph { xadj, adj, vwgt: vec![1; nv] }
+    }
+
+    /// Contract according to `cmap` (vertex -> coarse id, ids dense 0..cn).
+    pub fn contract(&self, cmap: &[u32], cn: usize) -> WGraph {
+        let mut vwgt = vec![0u64; cn];
+        for (v, &c) in cmap.iter().enumerate() {
+            vwgt[c as usize] += self.vwgt[v];
+        }
+        // accumulate coarse adjacency
+        let mut xadj = Vec::with_capacity(cn + 1);
+        xadj.push(0usize);
+        let mut adj: Vec<(u32, u64)> = Vec::with_capacity(self.adj.len() / 2);
+        // bucket vertices by coarse id
+        let mut members: Vec<Vec<u32>> = vec![Vec::new(); cn];
+        for (v, &c) in cmap.iter().enumerate() {
+            members[c as usize].push(v as u32);
+        }
+        let mut acc: std::collections::HashMap<u32, u64> =
+            std::collections::HashMap::new();
+        for c in 0..cn {
+            acc.clear();
+            for &v in &members[c] {
+                for &(u, w) in self.neighbors(v as usize) {
+                    let cu = cmap[u as usize];
+                    if cu as usize != c {
+                        *acc.entry(cu).or_insert(0) += w;
+                    }
+                }
+            }
+            let mut entries: Vec<(u32, u64)> =
+                acc.iter().map(|(&k, &v)| (k, v)).collect();
+            entries.sort_unstable();
+            adj.extend(entries);
+            xadj.push(adj.len());
+        }
+        WGraph { xadj, adj, vwgt }
+    }
+}
+
+/// Edge-cut of an assignment (sum of weights of edges crossing parts;
+/// each undirected edge counted once).
+pub fn edge_cut(g: &WGraph, part: &[u32]) -> u64 {
+    let mut cut = 0u64;
+    for v in 0..g.num_vertices() {
+        for &(u, w) in g.neighbors(v) {
+            if part[v] != part[u as usize] {
+                cut += w;
+            }
+        }
+    }
+    cut / 2
+}
+
+/// Part weights under an assignment.
+pub fn part_weights(g: &WGraph, part: &[u32], k: usize) -> Vec<u64> {
+    let mut w = vec![0u64; k];
+    for (v, &p) in part.iter().enumerate() {
+        w[p as usize] += g.vwgt[v];
+    }
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn path4() -> WGraph {
+        let g = Graph::from_undirected_edges(4, &[(0, 1), (1, 2), (2, 3)]);
+        WGraph::from_graph(&g)
+    }
+
+    #[test]
+    fn from_graph_unit_weights() {
+        let w = path4();
+        assert_eq!(w.num_vertices(), 4);
+        assert_eq!(w.total_vwgt(), 4);
+        assert_eq!(w.neighbors(1), &[(0, 1), (2, 1)]);
+    }
+
+    #[test]
+    fn contract_merges_weights() {
+        let w = path4();
+        // merge {0,1} -> 0, {2,3} -> 1
+        let c = w.contract(&[0, 0, 1, 1], 2);
+        assert_eq!(c.num_vertices(), 2);
+        assert_eq!(c.vwgt, vec![2, 2]);
+        // single crossing edge 1-2 survives with weight 1
+        assert_eq!(c.neighbors(0), &[(1, 1)]);
+        assert_eq!(edge_cut(&c, &[0, 1]), 1);
+    }
+
+    #[test]
+    fn contract_accumulates_multiedges() {
+        let g = Graph::from_undirected_edges(
+            4,
+            &[(0, 2), (0, 3), (1, 2), (1, 3)],
+        );
+        let w = WGraph::from_graph(&g);
+        let c = w.contract(&[0, 0, 1, 1], 2);
+        assert_eq!(c.neighbors(0), &[(1, 4)]);
+    }
+
+    #[test]
+    fn edge_cut_and_weights() {
+        let w = path4();
+        let part = vec![0, 0, 1, 1];
+        assert_eq!(edge_cut(&w, &part), 1);
+        assert_eq!(part_weights(&w, &part, 2), vec![2, 2]);
+        assert_eq!(edge_cut(&w, &[0, 1, 0, 1]), 3);
+    }
+}

@@ -1,0 +1,171 @@
+//! The IEP cost model — Eqs. (5), (6), (8) of the paper:
+//!
+//!   t_colle(j)   = Σ_i x_ij · φ / b_j
+//!   t_exec(j)    = ω_j(∪_i x_ij v_i) + K·δ
+//!   ⟨P_k, f_j⟩   = |P_k|·φ/b_j + ω_j(P_k) + K·δ
+//!
+//! φ is the per-vertex wire size (post-CO when compression is enabled),
+//! b_j the fog's collection bandwidth, ω_j its fitted latency model, and
+//! δ the per-layer BSP synchronization cost.
+
+use crate::fog::{Cluster, FogNode};
+use crate::net::{self, NetProfile};
+use crate::profile::{Cardinality, PerfModel};
+
+/// Statistics of one data partition, from the halo-extracted subgraph.
+#[derive(Clone, Copy, Debug)]
+pub struct PartStats {
+    pub n_vertices: usize,
+    /// One-hop neighbor multiset size (local edge count) — the |N_V| axis.
+    pub n_edges: usize,
+    /// Halo vertices pulled from other fogs each sync round.
+    pub n_halo: usize,
+}
+
+impl PartStats {
+    pub fn cardinality(&self) -> Cardinality {
+        Cardinality::new(self.n_vertices, self.n_edges)
+    }
+}
+
+/// Everything Eq. (8) needs beyond the partition itself.
+#[derive(Clone, Debug)]
+pub struct CostModel {
+    /// Wire bytes per vertex (φ) — compressed when the CO is active.
+    pub phi_bytes: f64,
+    /// GNN depth K.
+    pub k_layers: usize,
+    /// Activation row bytes exchanged at sync (hidden dim × 4).
+    pub sync_row_bytes: f64,
+    /// Devices sharing each fog's access point (contention input).
+    pub devices_per_fog: usize,
+    pub net: NetProfile,
+}
+
+impl CostModel {
+    /// Collection time of a partition on fog j — Eq. (5), with the
+    /// node's heterogeneous bandwidth share b_j.
+    pub fn t_colle(&self, part: &PartStats, fog: &FogNode) -> f64 {
+        let b = net::fog_uplink_mbps(&self.net, self.devices_per_fog)
+            * fog.node_type.bandwidth_share();
+        net::transfer_time_s(
+            (part.n_vertices as f64 * self.phi_bytes) as usize,
+            b,
+            self.net.lan_rtt_s,
+        )
+    }
+
+    /// Per-round synchronization cost δ for a partition: halo activations
+    /// over the inter-fog LAN.
+    pub fn delta(&self, part: &PartStats) -> f64 {
+        net::transfer_time_s(
+            (part.n_halo as f64 * self.sync_row_bytes) as usize,
+            self.net.interfog_mbps,
+            self.net.interfog_rtt_s,
+        )
+    }
+
+    /// Execution time of a partition on fog j — Eq. (6).
+    pub fn t_exec(&self, part: &PartStats, fog: &FogNode,
+                  omega: &PerfModel) -> f64 {
+        let base = omega.predict(part.cardinality());
+        fog.scale_time(base) + self.k_layers as f64 * self.delta(part)
+    }
+
+    /// Composite pair cost ⟨P_k, f_j⟩ — Eq. (8).
+    pub fn pair_cost(&self, part: &PartStats, fog: &FogNode,
+                     omega: &PerfModel) -> f64 {
+        self.t_colle(part, fog) + self.t_exec(part, fog, omega)
+    }
+
+    /// Full n×n weight matrix for the partition→fog bipartite graph.
+    pub fn weight_matrix(&self, parts: &[PartStats], cluster: &Cluster,
+                         omegas: &[PerfModel]) -> Vec<Vec<f64>> {
+        assert_eq!(cluster.len(), omegas.len());
+        parts
+            .iter()
+            .map(|p| {
+                cluster
+                    .nodes
+                    .iter()
+                    .zip(omegas)
+                    .map(|(f, m)| self.pair_cost(p, f, m))
+                    .collect()
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fog::{Cluster, NodeType};
+    use crate::net::{NetKind, NetProfile};
+
+    fn cm() -> CostModel {
+        CostModel {
+            phi_bytes: 52.0 * 8.0,
+            k_layers: 2,
+            sync_row_bytes: 64.0 * 4.0,
+            devices_per_fog: 2,
+            net: NetProfile::get(NetKind::Wifi),
+        }
+    }
+
+    fn part(v: usize, e: usize, h: usize) -> PartStats {
+        PartStats { n_vertices: v, n_edges: e, n_halo: h }
+    }
+
+    fn omega() -> PerfModel {
+        PerfModel { beta_v: 2e-6, beta_n: 3e-7, intercept: 1e-3, r2: 1.0 }
+    }
+
+    #[test]
+    fn weaker_fog_costs_more() {
+        let m = cm();
+        let p = part(2000, 15_000, 300);
+        let a = FogNode::new(0, NodeType::A);
+        let c = FogNode::new(1, NodeType::C);
+        let o = omega();
+        assert!(m.pair_cost(&p, &a, &o) > m.pair_cost(&p, &c, &o));
+        // heterogeneous b_j: the weak node also collects slower
+        assert!(m.t_colle(&p, &a) > m.t_colle(&p, &c));
+    }
+
+    #[test]
+    fn bigger_partition_costs_more_everywhere() {
+        let m = cm();
+        let small = part(500, 3000, 100);
+        let big = part(5000, 40_000, 600);
+        let f = FogNode::new(0, NodeType::B);
+        let o = omega();
+        assert!(m.pair_cost(&big, &f, &o) > m.pair_cost(&small, &f, &o));
+        assert!(m.t_colle(&big, &f) > m.t_colle(&small, &f));
+        assert!(m.delta(&big) > m.delta(&small));
+    }
+
+    #[test]
+    fn sync_cost_scales_with_layers() {
+        let mut m = cm();
+        let p = part(1000, 8000, 400);
+        let f = FogNode::new(0, NodeType::B);
+        let o = omega();
+        let t2 = m.t_exec(&p, &f, &o);
+        m.k_layers = 4;
+        let t4 = m.t_exec(&p, &f, &o);
+        assert!((t4 - t2 - 2.0 * m.delta(&p)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn matrix_shape_and_content() {
+        let m = cm();
+        let parts = vec![part(100, 700, 10), part(150, 900, 20)];
+        let cluster = Cluster::new(&[NodeType::A, NodeType::B],
+                                   NetKind::Wifi);
+        let omegas = vec![omega(), omega()];
+        let w = m.weight_matrix(&parts, &cluster, &omegas);
+        assert_eq!(w.len(), 2);
+        assert_eq!(w[0].len(), 2);
+        assert!(w[0][0] > w[0][1]); // A costs more than B
+    }
+}

@@ -1,0 +1,209 @@
+//! Assignment-problem substrate:
+//! * `min_cost_assignment` — the Hungarian algorithm (Jonker–Volgenant
+//!   potentials form, O(n³)) minimizing the SUM of costs — the
+//!   "traditional bipartite matching" the paper contrasts with (§III-C).
+//! * `max_bipartite_matching` — Kuhn's augmenting-path matching, the
+//!   perfect-matching feasibility test inside the LBAP threshold loop
+//!   (Alg. 1 line 11).
+
+/// Minimum-cost perfect assignment on a square cost matrix.
+/// Returns (assignment row->col, total cost).
+pub fn min_cost_assignment(cost: &[Vec<f64>]) -> (Vec<usize>, f64) {
+    let n = cost.len();
+    assert!(cost.iter().all(|r| r.len() == n), "square matrix required");
+    const INF: f64 = f64::INFINITY;
+    // potentials; 1-indexed internal arrays (classic JV formulation)
+    let mut u = vec![0.0f64; n + 1];
+    let mut v = vec![0.0f64; n + 1];
+    let mut p = vec![0usize; n + 1]; // p[col] = row matched to col (0 = none)
+    let mut way = vec![0usize; n + 1];
+    for i in 1..=n {
+        p[0] = i;
+        let mut j0 = 0usize;
+        let mut minv = vec![INF; n + 1];
+        let mut used = vec![false; n + 1];
+        loop {
+            used[j0] = true;
+            let i0 = p[j0];
+            let mut delta = INF;
+            let mut j1 = 0usize;
+            for j in 1..=n {
+                if used[j] {
+                    continue;
+                }
+                let cur = cost[i0 - 1][j - 1] - u[i0] - v[j];
+                if cur < minv[j] {
+                    minv[j] = cur;
+                    way[j] = j0;
+                }
+                if minv[j] < delta {
+                    delta = minv[j];
+                    j1 = j;
+                }
+            }
+            for j in 0..=n {
+                if used[j] {
+                    u[p[j]] += delta;
+                    v[j] -= delta;
+                } else {
+                    minv[j] -= delta;
+                }
+            }
+            j0 = j1;
+            if p[j0] == 0 {
+                break;
+            }
+        }
+        loop {
+            let j1 = way[j0];
+            p[j0] = p[j1];
+            j0 = j1;
+            if j0 == 0 {
+                break;
+            }
+        }
+    }
+    let mut assign = vec![0usize; n];
+    let mut total = 0.0;
+    for j in 1..=n {
+        if p[j] > 0 {
+            assign[p[j] - 1] = j - 1;
+            total += cost[p[j] - 1][j - 1];
+        }
+    }
+    (assign, total)
+}
+
+/// Kuhn's maximum bipartite matching over an adjacency-list bipartite
+/// graph (left size n, right size n). Returns match_left (col per row,
+/// usize::MAX if unmatched) and the matching size.
+pub fn max_bipartite_matching(adj: &[Vec<usize>], n_right: usize)
+                              -> (Vec<usize>, usize) {
+    let n_left = adj.len();
+    let mut match_right = vec![usize::MAX; n_right];
+    let mut match_left = vec![usize::MAX; n_left];
+
+    fn try_kuhn(
+        v: usize,
+        adj: &[Vec<usize>],
+        used: &mut [bool],
+        match_right: &mut [usize],
+        match_left: &mut [usize],
+    ) -> bool {
+        for &to in &adj[v] {
+            if !used[to] {
+                used[to] = true;
+                if match_right[to] == usize::MAX
+                    || try_kuhn(match_right[to], adj, used, match_right,
+                                match_left)
+                {
+                    match_right[to] = v;
+                    match_left[v] = to;
+                    return true;
+                }
+            }
+        }
+        false
+    }
+
+    let mut size = 0;
+    for v in 0..n_left {
+        let mut used = vec![false; n_right];
+        if try_kuhn(v, adj, &mut used, &mut match_right, &mut match_left) {
+            size += 1;
+        }
+    }
+    (match_left, size)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hungarian_simple_3x3() {
+        let cost = vec![
+            vec![4.0, 1.0, 3.0],
+            vec![2.0, 0.0, 5.0],
+            vec![3.0, 2.0, 2.0],
+        ];
+        let (assign, total) = min_cost_assignment(&cost);
+        assert_eq!(total, 5.0); // 1 + 2 + 2
+        assert_eq!(assign, vec![1, 0, 2]);
+    }
+
+    #[test]
+    fn hungarian_identity_when_diagonal_cheap() {
+        let n = 6;
+        let cost: Vec<Vec<f64>> = (0..n)
+            .map(|i| (0..n).map(|j| if i == j { 0.0 } else { 10.0 }).collect())
+            .collect();
+        let (assign, total) = min_cost_assignment(&cost);
+        assert_eq!(total, 0.0);
+        assert_eq!(assign, (0..n).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn hungarian_beats_greedy_on_adversarial_case() {
+        // greedy (row-wise argmin) picks (0,0)=1 then forced (1,1)=100;
+        // optimal is (0,1)=2 + (1,0)=2.
+        let cost = vec![vec![1.0, 2.0], vec![2.0, 100.0]];
+        let (_, total) = min_cost_assignment(&cost);
+        assert_eq!(total, 4.0);
+    }
+
+    #[test]
+    fn hungarian_matches_bruteforce_random() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(77);
+        for trial in 0..20 {
+            let n = 2 + (trial % 4);
+            let cost: Vec<Vec<f64>> = (0..n)
+                .map(|_| (0..n).map(|_| rng.below(100) as f64).collect())
+                .collect();
+            let (_, total) = min_cost_assignment(&cost);
+            // brute force over permutations
+            let mut perm: Vec<usize> = (0..n).collect();
+            let mut best = f64::INFINITY;
+            permute(&mut perm, 0, &mut |p| {
+                let s: f64 = p.iter().enumerate()
+                    .map(|(i, &j)| cost[i][j]).sum();
+                if s < best {
+                    best = s;
+                }
+            });
+            assert_eq!(total, best, "n={n} cost={cost:?}");
+        }
+    }
+
+    fn permute<F: FnMut(&[usize])>(xs: &mut Vec<usize>, k: usize, f: &mut F) {
+        if k == xs.len() {
+            f(xs);
+            return;
+        }
+        for i in k..xs.len() {
+            xs.swap(k, i);
+            permute(xs, k + 1, f);
+            xs.swap(k, i);
+        }
+    }
+
+    #[test]
+    fn kuhn_perfect_matching_exists() {
+        // K3,3 minus some edges, still perfect
+        let adj = vec![vec![0, 1], vec![1, 2], vec![0, 2]];
+        let (ml, size) = max_bipartite_matching(&adj, 3);
+        assert_eq!(size, 3);
+        let mut cols: Vec<usize> = ml.clone();
+        cols.sort_unstable();
+        assert_eq!(cols, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn kuhn_detects_infeasible() {
+        // two rows compete for one column
+        let adj = vec![vec![0], vec![0], vec![1]];
+        let (_, size) = max_bipartite_matching(&adj, 2);
+        assert_eq!(size, 2);
+    }
+}

@@ -1,0 +1,12 @@
+//! Inference Execution Planner (paper §III-C, Algorithm 1): min-cut
+//! balanced partitioning + resource-aware LBAP partition→fog mapping,
+//! with the Hungarian/Kuhn assignment substrate and the Eq. (5)/(6)/(8)
+//! cost model.
+
+pub mod cost;
+pub mod hungarian;
+pub mod lbap;
+pub mod planner;
+
+pub use cost::{CostModel, PartStats};
+pub use planner::{plan, MappingStrategy, Plan};

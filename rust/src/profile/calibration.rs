@@ -1,0 +1,143 @@
+//! Proxy-guided offline profiling (paper §III-B setup phase): uniformly
+//! sample subgraphs of varying cardinality from the initial graph —
+//! 20 samples per cardinality axis to preserve the degree distribution —
+//! measure execution latency for each, and fit the node's PerfModel.
+
+use crate::graph::{subgraph, Graph, LocalGraph};
+use crate::util::rng::Rng;
+
+use super::model::{Cardinality, PerfModel, Sample};
+
+/// Default vertex-count axes, as fractions of |V|.
+pub const DEFAULT_FRACTIONS: [f64; 5] = [0.05, 0.1, 0.2, 0.35, 0.6];
+pub const SAMPLES_PER_AXIS: usize = 20;
+
+/// Build the calibration set: BFS-grown subgraphs (preserving locality the
+/// way real partitions do) at each size axis.
+pub fn calibration_set(g: &Graph, fractions: &[f64], samples_per: usize,
+                       seed: u64) -> Vec<LocalGraph> {
+    let nv = g.num_vertices();
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::new();
+    for &f in fractions {
+        let target = ((nv as f64 * f) as usize).clamp(2, nv);
+        for _ in 0..samples_per {
+            let verts = bfs_sample(g, target, &mut rng);
+            out.push(subgraph::extract_one(g, &verts));
+        }
+    }
+    out
+}
+
+/// BFS region sample of ~`target` vertices from a random seed (falls back
+/// to extra random seeds when components are exhausted).
+fn bfs_sample(g: &Graph, target: usize, rng: &mut Rng) -> Vec<u32> {
+    let nv = g.num_vertices();
+    let mut taken = vec![false; nv];
+    let mut out: Vec<u32> = Vec::with_capacity(target);
+    let mut queue = std::collections::VecDeque::new();
+    while out.len() < target {
+        if queue.is_empty() {
+            // new seed
+            let mut s = rng.usize_below(nv);
+            let mut guard = 0;
+            while taken[s] {
+                s = rng.usize_below(nv);
+                guard += 1;
+                if guard > 10 * nv {
+                    return out;
+                }
+            }
+            taken[s] = true;
+            out.push(s as u32);
+            queue.push_back(s);
+            continue;
+        }
+        let x = queue.pop_front().unwrap();
+        for &u in g.neighbors(x) {
+            if out.len() >= target {
+                break;
+            }
+            if !taken[u as usize] {
+                taken[u as usize] = true;
+                out.push(u);
+                queue.push_back(u as usize);
+            }
+        }
+    }
+    out
+}
+
+/// Run the measurement closure over the calibration set and fit the model.
+/// `measure` returns the observed execution latency in seconds for one
+/// subgraph (on the node being profiled).
+pub fn profile_node<F>(set: &[LocalGraph], mut measure: F) -> PerfModel
+where
+    F: FnMut(&LocalGraph) -> f64,
+{
+    let samples: Vec<Sample> = set
+        .iter()
+        .map(|sg| {
+            let (v, n) = sg.cardinality();
+            Sample {
+                card: Cardinality::new(v, n),
+                latency_s: measure(sg),
+            }
+        })
+        .collect();
+    PerfModel::fit(&samples)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate;
+
+    #[test]
+    fn calibration_set_spans_axes() {
+        let (g, _) = generate::sbm(2000, 8000, 8, 0.9, 2);
+        let set = calibration_set(&g, &[0.05, 0.2], 5, 3);
+        assert_eq!(set.len(), 10);
+        let small = set[0].n_local;
+        let large = set[5].n_local;
+        assert!(small >= 90 && small <= 110, "small {small}");
+        assert!(large >= 380 && large <= 420, "large {large}");
+        // locality: BFS samples should carry fewer halo than random sets
+        for sg in &set {
+            assert!(sg.n_halo() < sg.n_local * 6);
+        }
+    }
+
+    #[test]
+    fn bfs_sample_is_connectedish() {
+        let (g, _) = generate::sbm(500, 2500, 4, 0.9, 7);
+        let mut rng = Rng::new(1);
+        let verts = bfs_sample(&g, 50, &mut rng);
+        assert_eq!(verts.len(), 50);
+        let set: std::collections::HashSet<u32> =
+            verts.iter().copied().collect();
+        assert_eq!(set.len(), 50);
+        // most sampled vertices have a sampled neighbor
+        let with_nbr = verts
+            .iter()
+            .filter(|&&v| {
+                g.neighbors(v as usize).iter().any(|u| set.contains(u))
+            })
+            .count();
+        assert!(with_nbr >= 45);
+    }
+
+    #[test]
+    fn profile_node_fits_synthetic_latency() {
+        let (g, _) = generate::sbm(3000, 12_000, 8, 0.9, 4);
+        let set = calibration_set(&g, &DEFAULT_FRACTIONS, 8, 5);
+        // synthetic executor: latency = 2e-6 V + 4e-7 N + 1ms
+        let model = profile_node(&set, |sg| {
+            let (v, n) = sg.cardinality();
+            2e-6 * v as f64 + 4e-7 * n as f64 + 1e-3
+        });
+        assert!((model.beta_v - 2e-6).abs() < 2e-7, "{model:?}");
+        assert!((model.beta_n - 4e-7).abs() < 2e-7, "{model:?}");
+        assert!(model.r2 > 0.99);
+    }
+}

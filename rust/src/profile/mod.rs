@@ -1,0 +1,10 @@
+//! GNN-oriented profiling methodology (paper §III-B): offline proxy-guided
+//! calibration fitting per-node regression latency models, and the
+//! lightweight online load-factor tracker that keeps them current.
+
+pub mod calibration;
+pub mod model;
+pub mod online;
+
+pub use model::{Cardinality, PerfModel, Sample};
+pub use online::OnlineProfiler;

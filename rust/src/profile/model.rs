@@ -1,0 +1,153 @@
+//! Regression-based latency estimation models ω(⟨c⟩) — paper Eq. (3):
+//! `latency = β · ⟨|V|, |N_V|⟩ + ε`.
+//!
+//! One model per (fog-node, GNN-model) pair, fitted on the calibration
+//! set and refreshed online by the load factor η (§III-B runtime phase).
+
+use crate::util::stats;
+
+/// Cardinality of a subgraph from the GNN's perspective: owned vertices
+/// and their one-hop neighbor multiset size (== local edge count).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Cardinality {
+    pub vertices: usize,
+    pub neighbors: usize,
+}
+
+impl Cardinality {
+    pub fn new(vertices: usize, neighbors: usize) -> Self {
+        Self { vertices, neighbors }
+    }
+}
+
+/// One calibration observation.
+#[derive(Clone, Copy, Debug)]
+pub struct Sample {
+    pub card: Cardinality,
+    pub latency_s: f64,
+}
+
+/// Fitted linear latency model.
+#[derive(Clone, Debug)]
+pub struct PerfModel {
+    pub beta_v: f64,
+    pub beta_n: f64,
+    pub intercept: f64,
+    /// R² of the fit on its training samples (profiler quality metric,
+    /// surfaced in Fig. 14).
+    pub r2: f64,
+}
+
+impl PerfModel {
+    pub fn fit(samples: &[Sample]) -> PerfModel {
+        assert!(samples.len() >= 3, "need >=3 calibration samples");
+        let xs: Vec<Vec<f64>> = samples
+            .iter()
+            .map(|s| vec![s.card.vertices as f64, s.card.neighbors as f64])
+            .collect();
+        let ys: Vec<f64> = samples.iter().map(|s| s.latency_s).collect();
+        let (beta, intercept) = stats::linreg(&xs, &ys);
+        let model = PerfModel {
+            beta_v: beta[0],
+            beta_n: beta[1],
+            intercept,
+            r2: 0.0,
+        };
+        let mean_y = stats::mean(&ys);
+        let ss_tot: f64 = ys.iter().map(|y| (y - mean_y).powi(2)).sum();
+        let ss_res: f64 = samples
+            .iter()
+            .map(|s| (s.latency_s - model.predict(s.card)).powi(2))
+            .sum();
+        let r2 = if ss_tot > 0.0 { 1.0 - ss_res / ss_tot } else { 1.0 };
+        PerfModel { r2, ..model }
+    }
+
+    /// ω(⟨c⟩): predicted execution latency in seconds.
+    pub fn predict(&self, c: Cardinality) -> f64 {
+        (self.beta_v * c.vertices as f64
+            + self.beta_n * c.neighbors as f64
+            + self.intercept)
+            .max(0.0)
+    }
+
+    /// A conservative default before any calibration has run: linear in
+    /// both cardinality axes with magnitudes typical of CPU GNN layers.
+    pub fn uncalibrated() -> PerfModel {
+        PerfModel {
+            beta_v: 3e-6,
+            beta_n: 4e-7,
+            intercept: 2e-3,
+            r2: 0.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn synth_samples(bv: f64, bn: f64, c: f64, noise: f64) -> Vec<Sample> {
+        let mut rng = crate::util::rng::Rng::new(5);
+        let mut out = Vec::new();
+        for &v in &[100usize, 500, 1000, 4000, 8000] {
+            for _ in 0..20 {
+                let n = v * (2 + rng.usize_below(15));
+                let lat = bv * v as f64 + bn * n as f64 + c
+                    + rng.normal() * noise;
+                out.push(Sample {
+                    card: Cardinality::new(v, n),
+                    latency_s: lat.max(0.0),
+                });
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn fit_recovers_coefficients() {
+        let samples = synth_samples(2e-6, 5e-7, 1e-3, 0.0);
+        let m = PerfModel::fit(&samples);
+        assert!((m.beta_v - 2e-6).abs() < 1e-8);
+        assert!((m.beta_n - 5e-7).abs() < 1e-9);
+        assert!(m.r2 > 0.999);
+    }
+
+    #[test]
+    fn noisy_fit_predicts_within_10pct() {
+        // the ±10% band of Fig. 14 (noise ~4% of the smallest latency)
+        let samples = synth_samples(2e-6, 5e-7, 2e-3, 1e-4);
+        let m = PerfModel::fit(&samples);
+        let mut within = 0;
+        for s in &samples {
+            let p = m.predict(s.card);
+            if (p - s.latency_s).abs() / s.latency_s.max(1e-9) < 0.10 {
+                within += 1;
+            }
+        }
+        assert!(
+            within as f64 > samples.len() as f64 * 0.9,
+            "{within}/{} within ±10%",
+            samples.len()
+        );
+    }
+
+    #[test]
+    fn predict_is_monotone_in_cardinality() {
+        let m = PerfModel::fit(&synth_samples(2e-6, 5e-7, 1e-3, 0.0));
+        let small = m.predict(Cardinality::new(100, 500));
+        let large = m.predict(Cardinality::new(10_000, 80_000));
+        assert!(large > small);
+    }
+
+    #[test]
+    fn never_predicts_negative() {
+        let m = PerfModel {
+            beta_v: -1e-3,
+            beta_n: 0.0,
+            intercept: 0.0,
+            r2: 0.0,
+        };
+        assert_eq!(m.predict(Cardinality::new(1000, 0)), 0.0);
+    }
+}

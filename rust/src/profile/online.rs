@@ -1,0 +1,104 @@
+//! Online profiler (paper §III-B runtime phase): tracks each fog node's
+//! measured execution time, derives the load factor
+//! `η = T_real(c) / ω(⟨c⟩)`,
+//! and predicts the latency of any other cardinality c' as η · ω(⟨c'⟩) —
+//! the two-step lightweight estimation the paper uses instead of refitting.
+
+use super::model::{Cardinality, PerfModel};
+
+/// Rolling online state for one fog node.
+#[derive(Clone, Debug)]
+pub struct OnlineProfiler {
+    pub offline: PerfModel,
+    /// Smoothed load factor η (1.0 = unloaded baseline).
+    pub eta: f64,
+    /// EWMA smoothing for η updates.
+    pub alpha: f64,
+    /// Most recent raw measurement.
+    pub last_real_s: f64,
+    pub observations: u64,
+}
+
+impl OnlineProfiler {
+    pub fn new(offline: PerfModel) -> Self {
+        Self {
+            offline,
+            eta: 1.0,
+            alpha: 0.5,
+            last_real_s: 0.0,
+            observations: 0,
+        }
+    }
+
+    /// Record a measured execution of cardinality `c` taking `real_s`.
+    pub fn observe(&mut self, c: Cardinality, real_s: f64) {
+        let predicted = self.offline.predict(c).max(1e-9);
+        let eta_now = real_s / predicted;
+        self.eta = if self.observations == 0 {
+            eta_now
+        } else {
+            self.alpha * eta_now + (1.0 - self.alpha) * self.eta
+        };
+        self.last_real_s = real_s;
+        self.observations += 1;
+    }
+
+    /// Two-step estimate: η · ω(⟨c'⟩).
+    pub fn predict(&self, c: Cardinality) -> f64 {
+        self.eta * self.offline.predict(c)
+    }
+
+    /// Export an η-scaled PerfModel (what the metadata server aggregates
+    /// and feeds back into IEP re-planning — the ω' of Alg. 2 line 1).
+    pub fn scaled_model(&self) -> PerfModel {
+        PerfModel {
+            beta_v: self.offline.beta_v * self.eta,
+            beta_n: self.offline.beta_n * self.eta,
+            intercept: self.offline.intercept * self.eta,
+            r2: self.offline.r2,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base_model() -> PerfModel {
+        PerfModel { beta_v: 1e-6, beta_n: 1e-7, intercept: 0.0, r2: 1.0 }
+    }
+
+    #[test]
+    fn eta_tracks_load_increase() {
+        let mut p = OnlineProfiler::new(base_model());
+        let c = Cardinality::new(1000, 5000);
+        let baseline = p.offline.predict(c);
+        // node suddenly 3x slower
+        p.observe(c, baseline * 3.0);
+        assert!((p.eta - 3.0).abs() < 1e-9);
+        // prediction for a DIFFERENT cardinality scales by eta
+        let c2 = Cardinality::new(4000, 20_000);
+        assert!((p.predict(c2) - 3.0 * p.offline.predict(c2)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eta_smooths_over_observations() {
+        let mut p = OnlineProfiler::new(base_model());
+        let c = Cardinality::new(1000, 5000);
+        let base = p.offline.predict(c);
+        p.observe(c, base * 4.0);
+        p.observe(c, base * 1.0);
+        assert!(p.eta > 1.0 && p.eta < 4.0);
+        assert_eq!(p.observations, 2);
+    }
+
+    #[test]
+    fn scaled_model_equals_prediction() {
+        let mut p = OnlineProfiler::new(base_model());
+        let c = Cardinality::new(2000, 9000);
+        p.observe(c, p.offline.predict(c) * 2.0);
+        let m = p.scaled_model();
+        let c2 = Cardinality::new(777, 3210);
+        assert!((m.predict(c2) - p.predict(c2)).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,242 @@
+//! Artifact manifest: the index of AOT-lowered HLO modules emitted by
+//! python/compile/aot.py, plus bucket selection (smallest lowered shape
+//! that fits a partition).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+#[derive(Debug, thiserror::Error)]
+pub enum ManifestError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("json: {0}")]
+    Json(#[from] crate::util::json::ParseError),
+    #[error("manifest field missing or wrong type: {0}")]
+    Schema(&'static str),
+    #[error("no artifact fits model={model} dataset={dataset} layer={layer} v={v} e={e}")]
+    NoBucket {
+        model: String,
+        dataset: String,
+        layer: usize,
+        v: usize,
+        e: usize,
+    },
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub path: PathBuf,
+    pub model: String,
+    pub dataset: String,
+    pub frac: usize,
+    pub layer: usize,
+    pub num_layers: usize,
+    pub v_max: usize,
+    pub e_max: usize,
+    /// Owned-row capacity: the update matmul covers only these rows.
+    pub l_max: usize,
+    pub out_dim: usize,
+    /// Ordered (name, shape) of trained-parameter inputs.
+    pub params: Vec<(String, Vec<usize>)>,
+    /// Ordered (name, shape, dtype) of data inputs.
+    pub data: Vec<(String, Vec<usize>, String)>,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub artifacts: Vec<ArtifactMeta>,
+    /// (model, dataset, layer) -> indices sorted by ascending v_max.
+    by_key: HashMap<(String, String, usize), Vec<usize>>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest, ManifestError> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))?;
+        let root = Json::parse(&text)?;
+        let arr = root
+            .get("artifacts")
+            .and_then(|a| a.as_arr())
+            .ok_or(ManifestError::Schema("artifacts"))?;
+        let mut artifacts = Vec::with_capacity(arr.len());
+        for a in arr {
+            let gets = |k: &'static str| -> Result<&Json, ManifestError> {
+                a.get(k).ok_or(ManifestError::Schema(k))
+            };
+            let shapes = |key: &'static str| -> Result<Vec<(String, Vec<usize>, String)>, ManifestError> {
+                let mut out = Vec::new();
+                for item in gets(key)?.as_arr().ok_or(ManifestError::Schema(key))? {
+                    let parts = item.as_arr().ok_or(ManifestError::Schema(key))?;
+                    let name = parts[0].as_str()
+                        .ok_or(ManifestError::Schema(key))?.to_string();
+                    let dims: Vec<usize> = parts[1].as_arr()
+                        .ok_or(ManifestError::Schema(key))?
+                        .iter()
+                        .filter_map(|d| d.as_usize())
+                        .collect();
+                    let dtype = parts.get(2).and_then(|d| d.as_str())
+                        .unwrap_or("f32").to_string();
+                    out.push((name, dims, dtype));
+                }
+                Ok(out)
+            };
+            artifacts.push(ArtifactMeta {
+                name: gets("name")?.as_str()
+                    .ok_or(ManifestError::Schema("name"))?.to_string(),
+                path: dir.join(gets("path")?.as_str()
+                    .ok_or(ManifestError::Schema("path"))?),
+                model: gets("model")?.as_str()
+                    .ok_or(ManifestError::Schema("model"))?.to_string(),
+                dataset: gets("dataset")?.as_str()
+                    .ok_or(ManifestError::Schema("dataset"))?.to_string(),
+                frac: gets("frac")?.as_usize()
+                    .ok_or(ManifestError::Schema("frac"))?,
+                layer: gets("layer")?.as_usize()
+                    .ok_or(ManifestError::Schema("layer"))?,
+                num_layers: gets("num_layers")?.as_usize()
+                    .ok_or(ManifestError::Schema("num_layers"))?,
+                v_max: gets("v_max")?.as_usize()
+                    .ok_or(ManifestError::Schema("v_max"))?,
+                e_max: gets("e_max")?.as_usize()
+                    .ok_or(ManifestError::Schema("e_max"))?,
+                // older manifests predate the local-row split
+                l_max: a.get("l_max").and_then(|x| x.as_usize())
+                    .unwrap_or_else(|| {
+                        gets("v_max").and_then(|x| {
+                            x.as_usize().ok_or(ManifestError::Schema("v_max"))
+                        }).unwrap_or(0)
+                    }),
+                out_dim: gets("out_dim")?.as_usize()
+                    .ok_or(ManifestError::Schema("out_dim"))?,
+                params: shapes("params")?
+                    .into_iter()
+                    .map(|(n, d, _)| (n, d))
+                    .collect(),
+                data: shapes("data")?,
+            });
+        }
+        let mut by_key: HashMap<(String, String, usize), Vec<usize>> =
+            HashMap::new();
+        for (i, a) in artifacts.iter().enumerate() {
+            by_key
+                .entry((a.model.clone(), a.dataset.clone(), a.layer))
+                .or_default()
+                .push(i);
+        }
+        for idxs in by_key.values_mut() {
+            idxs.sort_by_key(|&i| (artifacts[i].v_max, artifacts[i].e_max));
+        }
+        Ok(Manifest { artifacts, by_key })
+    }
+
+    pub fn num_layers(&self, model: &str, dataset: &str) -> Option<usize> {
+        self.artifacts
+            .iter()
+            .find(|a| a.model == model && a.dataset == dataset)
+            .map(|a| a.num_layers)
+    }
+
+    /// Smallest bucket with v_max >= v and e_max >= e (and room for the
+    /// owned rows: l_max >= l).
+    pub fn select_l(&self, model: &str, dataset: &str, layer: usize,
+                    v: usize, e: usize, l: usize)
+                    -> Result<&ArtifactMeta, ManifestError> {
+        let key = (model.to_string(), dataset.to_string(), layer);
+        let idxs = self.by_key.get(&key).ok_or_else(|| {
+            ManifestError::NoBucket {
+                model: model.into(),
+                dataset: dataset.into(),
+                layer,
+                v,
+                e,
+            }
+        })?;
+        idxs.iter()
+            .map(|&i| &self.artifacts[i])
+            .find(|a| a.v_max >= v && a.e_max >= e && a.l_max >= l)
+            .ok_or_else(|| ManifestError::NoBucket {
+                model: model.into(),
+                dataset: dataset.into(),
+                layer,
+                v,
+                e,
+            })
+    }
+
+    /// Smallest bucket with v_max >= v and e_max >= e.
+    pub fn select(&self, model: &str, dataset: &str, layer: usize,
+                  v: usize, e: usize) -> Result<&ArtifactMeta, ManifestError> {
+        let key = (model.to_string(), dataset.to_string(), layer);
+        let idxs = self.by_key.get(&key).ok_or_else(|| {
+            ManifestError::NoBucket {
+                model: model.into(),
+                dataset: dataset.into(),
+                layer,
+                v,
+                e,
+            }
+        })?;
+        idxs.iter()
+            .map(|&i| &self.artifacts[i])
+            .find(|a| a.v_max >= v && a.e_max >= e)
+            .ok_or_else(|| ManifestError::NoBucket {
+                model: model.into(),
+                dataset: dataset.into(),
+                layer,
+                v,
+                e,
+            })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        let text = r#"{
+ "artifacts": [
+  {"name": "gcn_siot_f4_l0", "path": "gcn_siot_f4_l0.hlo.txt",
+   "model": "gcn", "dataset": "siot", "frac": 4, "layer": 0,
+   "num_layers": 2, "v_max": 8192, "e_max": 131072, "out_dim": 64,
+   "params": [["w", [52, 64], "f32"], ["b", [64], "f32"]],
+   "data": [["h", [8192, 52], "f32"], ["src", [131072], "i32"],
+            ["dst", [131072], "i32"], ["ew", [131072], "f32"],
+            ["inv_deg", [8192, 1], "f32"]]},
+  {"name": "gcn_siot_f1_l0", "path": "gcn_siot_f1_l0.hlo.txt",
+   "model": "gcn", "dataset": "siot", "frac": 1, "layer": 0,
+   "num_layers": 2, "v_max": 16384, "e_max": 309248, "out_dim": 64,
+   "params": [["w", [52, 64], "f32"], ["b", [64], "f32"]],
+   "data": [["h", [16384, 52], "f32"], ["src", [309248], "i32"],
+            ["dst", [309248], "i32"], ["ew", [309248], "f32"],
+            ["inv_deg", [16384, 1], "f32"]]}
+ ],
+ "format": 1
+}"#;
+        std::fs::write(dir.join("manifest.json"), text).unwrap();
+    }
+
+    #[test]
+    fn loads_and_selects_smallest_fitting_bucket() {
+        let dir = std::env::temp_dir().join("manifest_test");
+        write_manifest(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        assert_eq!(m.num_layers("gcn", "siot"), Some(2));
+        let small = m.select("gcn", "siot", 0, 5000, 100_000).unwrap();
+        assert_eq!(small.frac, 4);
+        let big = m.select("gcn", "siot", 0, 9000, 100_000).unwrap();
+        assert_eq!(big.frac, 1);
+        // edge overflow forces the big bucket too
+        let big2 = m.select("gcn", "siot", 0, 1000, 200_000).unwrap();
+        assert_eq!(big2.frac, 1);
+        assert!(m.select("gcn", "siot", 0, 999_999, 1).is_err());
+        assert!(m.select("gat", "siot", 0, 1, 1).is_err());
+        // param order preserved
+        assert_eq!(small.params[0].0, "w");
+        assert_eq!(small.data[1].2, "i32");
+    }
+}

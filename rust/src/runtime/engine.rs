@@ -1,0 +1,447 @@
+//! Execution engines behind the BSP runtime:
+//!
+//! * `EngineKind::Pjrt` — loads the AOT HLO-text artifacts produced by the
+//!   Python compile path, compiles them ONCE on the PJRT CPU client (one
+//!   executable per bucket, cached) and executes layers from the request
+//!   path. Python never runs here.
+//! * `EngineKind::Reference` — the in-tree pure-Rust forward (numeric
+//!   oracle; also used for very large sweeps where bucket padding cost
+//!   obscures the effect under study).
+//!
+//! Weight bundles come from `artifacts/weights_<model>_<dataset>.fgw`
+//! (training output). When a bundle is absent the engine falls back to a
+//! deterministic glorot init so latency experiments remain runnable
+//! without the training step; accuracy experiments require real weights.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use crate::util::rng::{mix64, Rng};
+
+use super::artifacts::{ArtifactMeta, Manifest, ManifestError};
+use super::pad::{self, EdgeArrays};
+use super::reference;
+use super::weights::{read_fgw, write_fgw, WeightBundle};
+
+#[derive(Debug, thiserror::Error)]
+pub enum EngineError {
+    #[error("manifest: {0}")]
+    Manifest(#[from] ManifestError),
+    #[error("weights: {0}")]
+    Weights(#[from] super::weights::FgwError),
+    #[error("xla: {0}")]
+    Xla(String),
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for EngineError {
+    fn from(e: xla::Error) -> Self {
+        EngineError::Xla(e.to_string())
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    Pjrt,
+    Reference,
+}
+
+/// Output of one layer execution.
+#[derive(Clone, Debug)]
+pub struct LayerOut {
+    /// [n, out_dim] row-major, unpadded.
+    pub h: Vec<f32>,
+    pub out_dim: usize,
+    /// Host wall-clock of the compute (scaled by fog multipliers upstream).
+    pub host_seconds: f64,
+}
+
+struct PjrtState {
+    client: xla::PjRtClient,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Trained-parameter literals per artifact — weights are constant
+    /// across the serving lifetime, so build them once (§Perf iter. 4).
+    param_literals: HashMap<String, Vec<xla::Literal>>,
+}
+
+pub struct Engine {
+    pub kind: EngineKind,
+    artifacts_dir: PathBuf,
+    manifest: Option<Manifest>,
+    pjrt: Option<PjrtState>,
+    weights: HashMap<String, WeightBundle>,
+    /// Names of bundles that were random-initialized (missing on disk).
+    pub synthetic_weights: Vec<String>,
+}
+
+fn weights_key(model: &str, dataset: &str) -> String {
+    let ds = if dataset.starts_with("rmat") { "rmat" } else { dataset };
+    format!("weights_{model}_{ds}")
+}
+
+impl Engine {
+    pub fn new(kind: EngineKind, artifacts_dir: &Path)
+               -> Result<Engine, EngineError> {
+        let (manifest, pjrt) = match kind {
+            EngineKind::Pjrt => {
+                let m = Manifest::load(artifacts_dir)?;
+                let client = xla::PjRtClient::cpu()?;
+                (Some(m), Some(PjrtState {
+                    client,
+                    executables: HashMap::new(),
+                    param_literals: HashMap::new(),
+                }))
+            }
+            EngineKind::Reference => {
+                (Manifest::load(artifacts_dir).ok(), None)
+            }
+        };
+        Ok(Engine {
+            kind,
+            artifacts_dir: artifacts_dir.to_path_buf(),
+            manifest,
+            pjrt,
+            weights: HashMap::new(),
+            synthetic_weights: Vec::new(),
+        })
+    }
+
+    pub fn manifest(&self) -> Option<&Manifest> {
+        self.manifest.as_ref()
+    }
+
+    /// Fetch (or lazily load / synthesize) the weight bundle.
+    pub fn weights(&mut self, model: &str, dataset: &str, f_in: usize,
+                   classes: usize) -> &WeightBundle {
+        let key = weights_key(model, dataset);
+        if !self.weights.contains_key(&key) {
+            let path = self.artifacts_dir.join(format!("{key}.fgw"));
+            let bundle = match read_fgw(&path) {
+                Ok(b) => b,
+                Err(_) => {
+                    self.synthetic_weights.push(key.clone());
+                    synthesize_weights(model, f_in, classes, &key)
+                }
+            };
+            self.weights.insert(key.clone(), bundle);
+        }
+        &self.weights[&key]
+    }
+
+    /// Execute one message-passing layer on a partition.
+    pub fn run_layer(
+        &mut self,
+        model: &str,
+        dataset: &str,
+        layer: usize,
+        h: &[f32],
+        f_in: usize,
+        edges: &EdgeArrays,
+        f_raw: usize,
+        classes: usize,
+    ) -> Result<LayerOut, EngineError> {
+        let n = edges.n;
+        let last = layer + 1 == reference::model_layers(model);
+        match self.kind {
+            EngineKind::Reference => {
+                let wb = self
+                    .weights(model, dataset, f_raw, classes)
+                    .clone();
+                let t = Instant::now();
+                let out = reference::run_layer(model, layer, &wb, h, f_in,
+                                               edges, last);
+                let host = t.elapsed().as_secs_f64();
+                let out_dim = out.len() / edges.n_local.max(1);
+                let _ = n;
+                Ok(LayerOut { h: out, out_dim, host_seconds: host })
+            }
+            EngineKind::Pjrt => {
+                self.run_layer_pjrt(model, dataset, layer, h, f_in, edges,
+                                    f_raw, classes)
+            }
+        }
+    }
+
+    fn compiled(&mut self, meta: &ArtifactMeta)
+                -> Result<(), EngineError> {
+        let st = self.pjrt.as_mut().expect("pjrt state");
+        if st.executables.contains_key(&meta.name) {
+            return Ok(());
+        }
+        if std::env::var_os("FOGRAPH_DEBUG").is_some() {
+            eprintln!("[engine] compiling {} (v={} e={} l={})",
+                      meta.name, meta.v_max, meta.e_max, meta.l_max);
+        }
+        let proto = xla::HloModuleProto::from_text_file(&meta.path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = st.client.compile(&comp)?;
+        st.executables.insert(meta.name.clone(), exe);
+        Ok(())
+    }
+
+    fn run_layer_pjrt(
+        &mut self,
+        model: &str,
+        dataset: &str,
+        layer: usize,
+        h: &[f32],
+        f_in: usize,
+        edges: &EdgeArrays,
+        f_raw: usize,
+        classes: usize,
+    ) -> Result<LayerOut, EngineError> {
+        let n = edges.n;
+        let meta = self
+            .manifest
+            .as_ref()
+            .expect("pjrt engine has manifest")
+            .select_l(model, dataset, layer, n, edges.num_edges(),
+                      edges.n_local)?
+            .clone();
+        self.compiled(&meta)?;
+        let wb = self.weights(model, dataset, f_raw, classes).clone();
+        // constant parameter literals, built once per artifact
+        if !self
+            .pjrt
+            .as_ref()
+            .unwrap()
+            .param_literals
+            .contains_key(&meta.name)
+        {
+            let mut params: Vec<xla::Literal> = Vec::new();
+            for (pname, dims) in &meta.params {
+                let t = wb
+                    .get(&format!("l{layer}.{pname}"))
+                    .expect("weight tensor for artifact param");
+                params.push(f32_literal(&t.f32_data, dims)?);
+            }
+            self.pjrt
+                .as_mut()
+                .unwrap()
+                .param_literals
+                .insert(meta.name.clone(), params);
+        }
+
+        let t0 = Instant::now();
+        let padded = pad::pad_layer(h, n, f_in, edges, meta.v_max,
+                                    meta.e_max, meta.l_max);
+        let mut literals: Vec<&xla::Literal> = Vec::new();
+        let st = self.pjrt.as_ref().unwrap();
+        let cached = &st.param_literals[&meta.name];
+        for lit in cached {
+            literals.push(lit);
+        }
+        let mut data_literals: Vec<xla::Literal> = Vec::new();
+        for (dname, dims, dtype) in &meta.data {
+            let lit = match (dname.as_str(), dtype.as_str()) {
+                ("h", _) => f32_literal(&padded.h, dims)?,
+                ("src", _) => i32_literal(&padded.src, dims)?,
+                ("dst", _) => i32_literal(&padded.dst, dims)?,
+                ("ew", _) => f32_literal(&padded.ew, dims)?,
+                ("inv_deg", _) => f32_literal(&padded.inv_deg, dims)?,
+                (other, _) => panic!("unknown data input {other}"),
+            };
+            data_literals.push(lit);
+        }
+        for lit in &data_literals {
+            literals.push(lit);
+        }
+        let exe = &st.executables[&meta.name];
+        let result = exe.execute::<&xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()?;
+        let out_padded: Vec<f32> = result.to_tuple1()?.to_vec::<f32>()?;
+        let host = t0.elapsed().as_secs_f64();
+        let out_dim = meta.out_dim;
+        // the artifact computes [l_max, out_dim]; keep owned rows only
+        let l = edges.n_local;
+        let mut out = vec![0f32; l * out_dim];
+        out.copy_from_slice(&out_padded[..l * out_dim]);
+        Ok(LayerOut { h: out, out_dim, host_seconds: host })
+    }
+
+    /// Execute the ASTGCN block on a partition (dense adjacency).
+    pub fn run_astgcn(&mut self, dataset: &str, x: &[f32], n: usize,
+                      ft: usize, sub: &crate::graph::LocalGraph)
+                      -> Result<LayerOut, EngineError> {
+        match self.kind {
+            EngineKind::Reference => {
+                let wb = self.weights("astgcn", dataset, ft, 0).clone();
+                let adj = pad::dense_norm_adj(sub, n);
+                let t = Instant::now();
+                let out = reference::run_astgcn(&wb, x, n, ft, &adj);
+                let host = t.elapsed().as_secs_f64();
+                let out_dim = out.len() / n;
+                Ok(LayerOut { h: out, out_dim, host_seconds: host })
+            }
+            EngineKind::Pjrt => {
+                let meta = self
+                    .manifest
+                    .as_ref()
+                    .expect("manifest")
+                    .select("astgcn", dataset, 0, n, 0)?
+                    .clone();
+                self.compiled(&meta)?;
+                let wb = self.weights("astgcn", dataset, ft, 0).clone();
+                let t0 = Instant::now();
+                let v_max = meta.v_max;
+                let mut xp = vec![0f32; v_max * ft];
+                xp[..n * ft].copy_from_slice(x);
+                let adj = pad::dense_norm_adj(sub, v_max);
+                let mut literals: Vec<xla::Literal> = Vec::new();
+                for (pname, dims) in &meta.params {
+                    let t = wb.get(&format!("l0.{pname}")).unwrap();
+                    literals.push(f32_literal(&t.f32_data, dims)?);
+                }
+                literals.push(f32_literal(&xp, &[v_max, ft])?);
+                literals.push(f32_literal(&adj, &[v_max, v_max])?);
+                let st = self.pjrt.as_ref().unwrap();
+                let exe = &st.executables[&meta.name];
+                let result = exe.execute::<xla::Literal>(&literals)?[0][0]
+                    .to_literal_sync()?;
+                let outp: Vec<f32> = result.to_tuple1()?.to_vec::<f32>()?;
+                let host = t0.elapsed().as_secs_f64();
+                let out_dim = meta.out_dim;
+                let mut out = vec![0f32; n * out_dim];
+                out.copy_from_slice(&outp[..n * out_dim]);
+                Ok(LayerOut { h: out, out_dim, host_seconds: host })
+            }
+        }
+    }
+}
+
+fn f32_literal(data: &[f32], dims: &[usize])
+               -> Result<xla::Literal, EngineError> {
+    debug_assert_eq!(data.len(), dims.iter().product::<usize>());
+    let bytes = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8,
+                                   data.len() * 4)
+    };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32,
+        dims,
+        bytes,
+    )?)
+}
+
+fn i32_literal(data: &[i32], dims: &[usize])
+               -> Result<xla::Literal, EngineError> {
+    debug_assert_eq!(data.len(), dims.iter().product::<usize>());
+    let bytes = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8,
+                                   data.len() * 4)
+    };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::S32,
+        dims,
+        bytes,
+    )?)
+}
+
+/// Deterministic glorot-style init used when a trained bundle is missing
+/// (latency experiments only).
+fn synthesize_weights(model: &str, f_in: usize, classes: usize, key: &str)
+                      -> WeightBundle {
+    let hidden = reference::HIDDEN;
+    let classes = classes.max(1);
+    let mut rng = Rng::new(mix64(key.len() as u64 * 0x9E37) ^ 0xBEEF);
+    let dir = std::env::temp_dir();
+    let path = dir.join(format!("{key}_synth.fgw"));
+    let mut entries: Vec<(String, Vec<usize>, Vec<f32>)> = Vec::new();
+    let glorot = |r: usize, c: usize, rng: &mut Rng| -> Vec<f32> {
+        let lim = (6.0 / (r + c) as f64).sqrt();
+        (0..r * c)
+            .map(|_| rng.range_f64(-lim, lim) as f32)
+            .collect()
+    };
+    match model {
+        "astgcn" => {
+            let datt = 16;
+            let t_out = 12;
+            entries.push(("l0.w1".into(), vec![f_in, datt],
+                          glorot(f_in, datt, &mut rng)));
+            entries.push(("l0.w2".into(), vec![f_in, datt],
+                          glorot(f_in, datt, &mut rng)));
+            entries.push(("l0.wgc".into(), vec![f_in, hidden],
+                          glorot(f_in, hidden, &mut rng)));
+            entries.push(("l0.wself".into(), vec![f_in, hidden],
+                          glorot(f_in, hidden, &mut rng)));
+            entries.push(("l0.wout".into(), vec![hidden, t_out],
+                          glorot(hidden, t_out, &mut rng)));
+            entries.push(("l0.bout".into(), vec![t_out],
+                          vec![0.0; t_out]));
+        }
+        _ => {
+            let dims = [(f_in, hidden), (hidden, classes)];
+            for (li, &(fi, fo)) in dims.iter().enumerate() {
+                let wfi = if model == "sage" { 2 * fi } else { fi };
+                entries.push((format!("l{li}.w"), vec![wfi, fo],
+                              glorot(wfi, fo, &mut rng)));
+                entries.push((format!("l{li}.b"), vec![fo],
+                              vec![0.0; fo]));
+                if model == "gat" {
+                    entries.push((format!("l{li}.a_src"), vec![fo],
+                                  glorot(fo, 1, &mut rng)));
+                    entries.push((format!("l{li}.a_dst"), vec![fo],
+                                  glorot(fo, 1, &mut rng)));
+                }
+            }
+        }
+    }
+    let refs: Vec<(&str, &[usize], &[f32])> = entries
+        .iter()
+        .map(|(n, d, v)| (n.as_str(), d.as_slice(), v.as_slice()))
+        .collect();
+    write_fgw(&path, &refs).expect("write synth weights");
+    read_fgw(&path).expect("read synth weights")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn weights_key_collapses_rmat() {
+        assert_eq!(weights_key("gcn", "rmat40k"), "weights_gcn_rmat");
+        assert_eq!(weights_key("gcn", "siot"), "weights_gcn_siot");
+    }
+
+    #[test]
+    fn reference_engine_with_synth_weights_runs_all_models() {
+        let dir = std::env::temp_dir().join("engine_test_none");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut eng = Engine::new(EngineKind::Reference, &dir).unwrap();
+        let edges = EdgeArrays {
+            src: vec![0, 1],
+            dst: vec![1, 0],
+            ew: vec![1.0, 1.0],
+            inv_deg: vec![0.5, 0.5],
+            n: 2,
+            n_local: 2,
+        };
+        for model in ["gcn", "sage"] {
+            let h = vec![1.0f32; 2 * 8];
+            let out = eng
+                .run_layer(model, "tiny", 0, &h, 8, &edges, 8, 3)
+                .unwrap();
+            assert_eq!(out.out_dim, reference::HIDDEN);
+            assert_eq!(out.h.len(), 2 * reference::HIDDEN);
+            // layer 1 -> classes
+            let out2 = eng
+                .run_layer(model, "tiny", 1, &out.h, out.out_dim, &edges,
+                           8, 3)
+                .unwrap();
+            assert_eq!(out2.out_dim, 3);
+        }
+        assert!(!eng.synthetic_weights.is_empty());
+    }
+
+    #[test]
+    fn synth_weights_are_deterministic() {
+        let a = synthesize_weights("gcn", 10, 2, "k1");
+        let b = synthesize_weights("gcn", 10, 2, "k1");
+        assert_eq!(a.get("l0.w").unwrap().f32_data,
+                   b.get("l0.w").unwrap().f32_data);
+    }
+}

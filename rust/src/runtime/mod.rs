@@ -1,0 +1,16 @@
+//! AOT runtime: loads the Python-compiled HLO-text artifacts and executes
+//! them via the PJRT C API (`xla` crate) — Python is never on the request
+//! path. Includes the manifest/bucket index, the `.fgw` weight loader,
+//! model-specific padding (twin of python/compile/prep.py), and a pure-
+//! Rust reference engine used as numeric oracle and large-sweep fallback.
+
+pub mod artifacts;
+pub mod engine;
+pub mod pad;
+pub mod reference;
+pub mod weights;
+
+pub use artifacts::{ArtifactMeta, Manifest};
+pub use engine::{Engine, EngineError, EngineKind, LayerOut};
+pub use pad::EdgeArrays;
+pub use weights::WeightBundle;

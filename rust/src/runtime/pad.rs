@@ -1,0 +1,218 @@
+//! Model-specific edge preparation + bucket padding — the Rust twin of
+//! python/compile/prep.py (the conventions MUST match, since the Python
+//! side trained the weights and lowered the HLO):
+//!
+//! - gcn:  no self loops; inv_deg = 1 / (deg_in + 1)
+//! - sage: no self loops; inv_deg = 1 / max(deg_in, 1)
+//! - gat:  self loops appended AFTER real edges; inv_deg = 1 (unused)
+//!
+//! Padding invariants (asserted by python/tests/test_models.py::
+//! test_padding_rows_do_not_affect_real_rows): padded edges carry ew = 0
+//! and endpoints 0; padded vertex rows are zeros with inv_deg = 1.
+
+use crate::graph::LocalGraph;
+
+/// Unpadded per-partition edge arrays in local index space.
+#[derive(Clone, Debug)]
+pub struct EdgeArrays {
+    pub src: Vec<u32>,
+    pub dst: Vec<u32>,
+    pub ew: Vec<f32>,
+    /// Per-OWNED-vertex normalization, length n_local (flattened [l, 1]).
+    pub inv_deg: Vec<f32>,
+    /// Total rows (owned + halo).
+    pub n: usize,
+    /// Owned rows; layer outputs cover exactly these.
+    pub n_local: usize,
+}
+
+impl EdgeArrays {
+    pub fn num_edges(&self) -> usize {
+        self.src.len()
+    }
+}
+
+/// Build edge arrays for `model` from a halo-extracted local graph.
+/// Degrees use the GLOBAL in-degree (the normalization the model was
+/// trained with), which LocalGraph carries.
+pub fn prep_edges(model: &str, sub: &LocalGraph) -> EdgeArrays {
+    let n = sub.n_total();
+    let l = sub.n_local;
+    let mut src = sub.src.clone();
+    let mut dst = sub.dst.clone();
+    match model {
+        "gat" => {
+            // self loops for OWNED rows only (halo rows produce no output)
+            for v in 0..l as u32 {
+                src.push(v);
+                dst.push(v);
+            }
+            let ew = vec![1.0; src.len()];
+            EdgeArrays { src, dst, ew, inv_deg: vec![1.0; l], n,
+                         n_local: l }
+        }
+        "gcn" => {
+            let ew = vec![1.0; src.len()];
+            let inv_deg = sub
+                .global_degree[..l]
+                .iter()
+                .map(|&d| 1.0 / (d as f32 + 1.0))
+                .collect();
+            EdgeArrays { src, dst, ew, inv_deg, n, n_local: l }
+        }
+        "sage" => {
+            let ew = vec![1.0; src.len()];
+            let inv_deg = sub
+                .global_degree[..l]
+                .iter()
+                .map(|&d| 1.0 / (d as f32).max(1.0))
+                .collect();
+            EdgeArrays { src, dst, ew, inv_deg, n, n_local: l }
+        }
+        other => panic!("prep_edges: unknown model {other}"),
+    }
+}
+
+/// Bucket-padded layer inputs, ready to become PJRT literals.
+#[derive(Clone, Debug)]
+pub struct PaddedLayer {
+    pub h: Vec<f32>,       // [v_max, f_in]
+    pub src: Vec<i32>,     // [e_max]
+    pub dst: Vec<i32>,     // [e_max]
+    pub ew: Vec<f32>,      // [e_max]
+    pub inv_deg: Vec<f32>, // [l_max]
+    pub v_max: usize,
+    pub e_max: usize,
+    pub l_max: usize,
+    pub f_in: usize,
+}
+
+pub fn pad_layer(h: &[f32], n: usize, f_in: usize, edges: &EdgeArrays,
+                 v_max: usize, e_max: usize, l_max: usize) -> PaddedLayer {
+    assert!(n <= v_max, "{n} > bucket v_max {v_max}");
+    assert!(edges.n_local <= l_max,
+            "{} > bucket l_max {l_max}", edges.n_local);
+    assert!(edges.num_edges() <= e_max,
+            "{} > bucket e_max {e_max}", edges.num_edges());
+    assert_eq!(h.len(), n * f_in);
+    let mut hp = vec![0f32; v_max * f_in];
+    hp[..n * f_in].copy_from_slice(h);
+    let mut src = vec![0i32; e_max];
+    let mut dst = vec![0i32; e_max];
+    let mut ew = vec![0f32; e_max];
+    for (i, (&s, (&d, &w))) in edges
+        .src
+        .iter()
+        .zip(edges.dst.iter().zip(edges.ew.iter()))
+        .enumerate()
+    {
+        src[i] = s as i32;
+        dst[i] = d as i32;
+        ew[i] = w;
+    }
+    let mut inv_deg = vec![1f32; l_max];
+    inv_deg[..edges.n_local].copy_from_slice(&edges.inv_deg);
+    PaddedLayer { h: hp, src, dst, ew, inv_deg, v_max, e_max, l_max, f_in }
+}
+
+/// Dense row-normalized D⁻¹(A+I) adjacency block for astgcn, padded to
+/// v_max (padded rows/cols zero).
+pub fn dense_norm_adj(sub: &LocalGraph, v_max: usize) -> Vec<f32> {
+    let n = sub.n_total();
+    assert!(n <= v_max);
+    let mut a = vec![0f32; v_max * v_max];
+    for (&s, &d) in sub.src.iter().zip(sub.dst.iter()) {
+        a[d as usize * v_max + s as usize] = 1.0;
+    }
+    for v in 0..n {
+        a[v * v_max + v] = 1.0;
+    }
+    for r in 0..n {
+        let row = &mut a[r * v_max..r * v_max + n];
+        let sum: f32 = row.iter().sum();
+        if sum > 0.0 {
+            for x in row.iter_mut() {
+                *x /= sum;
+            }
+        }
+    }
+    a
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{subgraph, Graph};
+
+    fn sub() -> LocalGraph {
+        let g = Graph::from_undirected_edges(
+            5,
+            &[(0, 1), (1, 2), (2, 3), (3, 4)],
+        );
+        subgraph::extract_one(&g, &[1, 2])
+    }
+
+    #[test]
+    fn gcn_inv_deg_uses_global_degree() {
+        let s = sub();
+        let e = prep_edges("gcn", &s);
+        // vertex 1 and 2 both have global degree 2 -> 1/3
+        assert!((e.inv_deg[0] - 1.0 / 3.0).abs() < 1e-6);
+        assert_eq!(e.num_edges(), s.num_edges());
+        assert!(e.ew.iter().all(|&w| w == 1.0));
+    }
+
+    #[test]
+    fn gat_appends_self_loops() {
+        let s = sub();
+        let e = prep_edges("gat", &s);
+        assert_eq!(e.num_edges(), s.num_edges() + s.n_local);
+        let last = e.num_edges() - 1;
+        assert_eq!(e.src[last], e.dst[last]);
+        assert!(e.inv_deg.iter().all(|&x| x == 1.0));
+    }
+
+    #[test]
+    fn sage_inv_deg_floors_at_one() {
+        let g = Graph::from_undirected_edges(3, &[(0, 1)]);
+        let s = subgraph::extract_one(&g, &[0, 2]); // vertex 2 isolated
+        let e = prep_edges("sage", &s);
+        assert!((e.inv_deg[1] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn padding_layout() {
+        let s = sub();
+        let e = prep_edges("gcn", &s);
+        let n = s.n_total();
+        let h: Vec<f32> = (0..n * 3).map(|x| x as f32).collect();
+        let p = pad_layer(&h, n, 3, &e, 8, 16, 8);
+        assert_eq!(p.h.len(), 24);
+        assert_eq!(&p.h[..n * 3], &h[..]);
+        assert!(p.h[n * 3..].iter().all(|&x| x == 0.0));
+        assert!(p.ew[e.num_edges()..].iter().all(|&w| w == 0.0));
+        assert!(p.inv_deg[e.n_local..].iter().all(|&x| x == 1.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "bucket v_max")]
+    fn pad_rejects_overflow() {
+        let s = sub();
+        let e = prep_edges("gcn", &s);
+        let h = vec![0f32; s.n_total() * 3];
+        pad_layer(&h, s.n_total(), 3, &e, 2, 16, 2);
+    }
+
+    #[test]
+    fn dense_adj_rows_normalized() {
+        let s = sub();
+        let adj = dense_norm_adj(&s, 6);
+        let n = s.n_total();
+        for r in 0..n {
+            let sum: f32 = adj[r * 6..r * 6 + 6].iter().sum();
+            assert!((sum - 1.0).abs() < 1e-5, "row {r} sums to {sum}");
+        }
+        // padded rows are zero
+        assert!(adj[n * 6..].iter().all(|&x| x == 0.0));
+    }
+}

@@ -1,0 +1,443 @@
+//! Pure-Rust GNN layer forward — the runtime's numeric oracle and the
+//! fallback engine for large sweeps (no PJRT padding overhead). The math
+//! mirrors python/compile/kernels/ref.py exactly; cross-engine parity is
+//! asserted by rust/tests/pjrt_integration.rs.
+
+use super::pad::EdgeArrays;
+use super::weights::WeightBundle;
+
+pub const HIDDEN: usize = 64;
+
+pub fn model_layers(model: &str) -> usize {
+    match model {
+        "astgcn" => 1,
+        _ => 2,
+    }
+}
+
+/// Row-major matmul with bias: out[n, fo] = x[n, fi] @ w[fi, fo] + b.
+/// Blocked over k for cache friendliness (hot path of the ref engine).
+pub fn matmul_bias(x: &[f32], n: usize, fi: usize, w: &[f32], fo: usize,
+                   b: &[f32]) -> Vec<f32> {
+    debug_assert_eq!(x.len(), n * fi);
+    debug_assert_eq!(w.len(), fi * fo);
+    let mut out = vec![0f32; n * fo];
+    for r in 0..n {
+        let xr = &x[r * fi..(r + 1) * fi];
+        let or = &mut out[r * fo..(r + 1) * fo];
+        or.copy_from_slice(&b[..fo]);
+        for (k, &xv) in xr.iter().enumerate() {
+            if xv == 0.0 {
+                continue; // sparse one-hot features: skip zero rows
+            }
+            let wr = &w[k * fo..(k + 1) * fo];
+            for (o, &wv) in or.iter_mut().zip(wr.iter()) {
+                *o += xv * wv;
+            }
+        }
+    }
+    out
+}
+
+fn relu(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+fn elu(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        if *v < 0.0 {
+            *v = v.exp_m1();
+        }
+    }
+}
+
+/// Σ_{(u,v)∈E} ew · h_u scattered into rows v (ref.segment_aggregate).
+pub fn segment_aggregate(h: &[f32], f: usize, edges: &EdgeArrays,
+                         out_n: usize) -> Vec<f32> {
+    let mut agg = vec![0f32; out_n * f];
+    for ((&s, &d), &w) in
+        edges.src.iter().zip(edges.dst.iter()).zip(edges.ew.iter())
+    {
+        if w == 0.0 {
+            continue;
+        }
+        let hs = &h[s as usize * f..(s as usize + 1) * f];
+        let ar = &mut agg[d as usize * f..(d as usize + 1) * f];
+        if w == 1.0 {
+            for (a, &x) in ar.iter_mut().zip(hs) {
+                *a += x;
+            }
+        } else {
+            for (a, &x) in ar.iter_mut().zip(hs) {
+                *a += w * x;
+            }
+        }
+    }
+    agg
+}
+
+/// One message-passing layer (gcn / sage / gat), ref semantics.
+/// `last` selects the linear output head (no activation).
+pub fn run_layer(model: &str, layer: usize, weights: &WeightBundle,
+                 h: &[f32], f_in: usize, edges: &EdgeArrays, last: bool)
+                 -> Vec<f32> {
+    let n = edges.n;
+    // outputs cover the owned rows only — halo rows cost no update FLOPs
+    // (mirrors the l_max dimension of the lowered artifacts)
+    let l = edges.n_local;
+    debug_assert_eq!(h.len(), n * f_in);
+    let w = weights.get(&format!("l{layer}.w")).expect("missing weight");
+    let b = weights.get(&format!("l{layer}.b")).expect("missing bias");
+    let fo = *w.dims.last().unwrap();
+    match model {
+        "gcn" => {
+            let agg = segment_aggregate(h, f_in, edges, l);
+            let mut comb = vec![0f32; l * f_in];
+            for v in 0..l {
+                let s = edges.inv_deg[v];
+                for k in 0..f_in {
+                    comb[v * f_in + k] =
+                        (agg[v * f_in + k] + h[v * f_in + k]) * s;
+                }
+            }
+            let mut out = matmul_bias(&comb, l, f_in, &w.f32_data, fo,
+                                      &b.f32_data);
+            if !last {
+                relu(&mut out);
+            }
+            out
+        }
+        "sage" => {
+            let agg = segment_aggregate(h, f_in, edges, l);
+            let mut comb = vec![0f32; l * 2 * f_in];
+            for v in 0..l {
+                let s = edges.inv_deg[v];
+                for k in 0..f_in {
+                    comb[v * 2 * f_in + k] = agg[v * f_in + k] * s;
+                    comb[v * 2 * f_in + f_in + k] = h[v * f_in + k];
+                }
+            }
+            let mut out = matmul_bias(&comb, l, 2 * f_in, &w.f32_data, fo,
+                                      &b.f32_data);
+            if !last {
+                relu(&mut out);
+            }
+            out
+        }
+        "gat" => {
+            let a_src = weights.get(&format!("l{layer}.a_src")).unwrap();
+            let a_dst = weights.get(&format!("l{layer}.a_dst")).unwrap();
+            // z spans ALL rows: halo sources feed the attention
+            let z = matmul_bias(h, n, f_in, &w.f32_data, fo, &b.f32_data);
+            // per-vertex attention scalars
+            let dot = |row: usize, a: &[f32]| -> f32 {
+                z[row * fo..(row + 1) * fo]
+                    .iter()
+                    .zip(a)
+                    .map(|(x, y)| x * y)
+                    .sum()
+            };
+            let es: Vec<f32> =
+                (0..n).map(|v| dot(v, &a_src.f32_data)).collect();
+            let ed: Vec<f32> =
+                (0..n).map(|v| dot(v, &a_dst.f32_data)).collect();
+            let ne = edges.num_edges();
+            let mut logits = vec![0f32; ne];
+            for i in 0..ne {
+                let x = es[edges.src[i] as usize]
+                    + ed[edges.dst[i] as usize];
+                logits[i] = if x > 0.0 { x } else { 0.2 * x };
+            }
+            // segment softmax over dst (ew == 0 excluded); dst < l always
+            let mut smax = vec![f32::NEG_INFINITY; l];
+            for i in 0..ne {
+                if edges.ew[i] > 0.0 {
+                    let d = edges.dst[i] as usize;
+                    smax[d] = smax[d].max(logits[i]);
+                }
+            }
+            let mut ex = vec![0f32; ne];
+            let mut denom = vec![0f32; l];
+            for i in 0..ne {
+                if edges.ew[i] > 0.0 {
+                    let d = edges.dst[i] as usize;
+                    ex[i] = (logits[i] - smax[d]).exp();
+                    denom[d] += ex[i];
+                }
+            }
+            let mut out = vec![0f32; l * fo];
+            for i in 0..ne {
+                if ex[i] == 0.0 {
+                    continue;
+                }
+                let d = edges.dst[i] as usize;
+                let alpha = ex[i] / denom[d].max(1e-16);
+                let zs = &z[edges.src[i] as usize * fo
+                    ..(edges.src[i] as usize + 1) * fo];
+                let or = &mut out[d * fo..(d + 1) * fo];
+                for (o, &x) in or.iter_mut().zip(zs) {
+                    *o += alpha * x;
+                }
+            }
+            if !last {
+                elu(&mut out);
+            }
+            out
+        }
+        other => panic!("run_layer: unknown model {other}"),
+    }
+}
+
+/// ASTGCN-lite block, ref semantics (see python/compile/models/astgcn.py).
+/// `adj` is dense row-normalized [n, n].
+pub fn run_astgcn(weights: &WeightBundle, x: &[f32], n: usize, ft: usize,
+                  adj: &[f32]) -> Vec<f32> {
+    let w1 = weights.get("l0.w1").unwrap();
+    let w2 = weights.get("l0.w2").unwrap();
+    let wgc = weights.get("l0.wgc").unwrap();
+    let wself = weights.get("l0.wself").unwrap();
+    let wout = weights.get("l0.wout").unwrap();
+    let bout = weights.get("l0.bout").unwrap();
+    let datt = *w1.dims.last().unwrap();
+    let hidden = *wgc.dims.last().unwrap();
+    let t_out = *wout.dims.last().unwrap();
+    let zeros_datt = vec![0f32; datt];
+    let z1 = matmul_bias(x, n, ft, &w1.f32_data, datt, &zeros_datt);
+    let z2 = matmul_bias(x, n, ft, &w2.f32_data, datt, &zeros_datt);
+    let scale = 1.0 / (datt as f32).sqrt();
+    // masked row softmax of z1 z2^T
+    let mut a_eff = vec![0f32; n * n];
+    for r in 0..n {
+        let zr = &z1[r * datt..(r + 1) * datt];
+        let mut row = vec![f32::NEG_INFINITY; n];
+        let mut mx = f32::NEG_INFINITY;
+        for c in 0..n {
+            if adj[r * n + c] > 0.0 {
+                let zc = &z2[c * datt..(c + 1) * datt];
+                let s: f32 =
+                    zr.iter().zip(zc).map(|(a, b)| a * b).sum::<f32>()
+                        * scale;
+                row[c] = s;
+                mx = mx.max(s);
+            }
+        }
+        if mx == f32::NEG_INFINITY {
+            continue;
+        }
+        let mut denom = 0f32;
+        for c in 0..n {
+            if row[c] > f32::NEG_INFINITY {
+                row[c] = (row[c] - mx).exp();
+                denom += row[c];
+            } else {
+                row[c] = 0.0;
+            }
+        }
+        for c in 0..n {
+            a_eff[r * n + c] = adj[r * n + c] * row[c] / denom.max(1e-16);
+        }
+    }
+    let zeros_h = vec![0f32; hidden];
+    let hg = matmul_bias(x, n, ft, &wgc.f32_data, hidden, &zeros_h);
+    let hs = matmul_bias(x, n, ft, &wself.f32_data, hidden, &zeros_h);
+    // h = relu(a_eff @ hg + hs)
+    let mut hh = hs;
+    for r in 0..n {
+        for c in 0..n {
+            let a = a_eff[r * n + c];
+            if a == 0.0 {
+                continue;
+            }
+            let hgc = &hg[c * hidden..(c + 1) * hidden];
+            let hr = &mut hh[r * hidden..(r + 1) * hidden];
+            for (o, &x) in hr.iter_mut().zip(hgc) {
+                *o += a * x;
+            }
+        }
+    }
+    relu(&mut hh);
+    matmul_bias(&hh, n, hidden, &wout.f32_data, t_out, &bout.f32_data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::weights::{read_fgw, write_fgw};
+    use crate::util::rng::Rng;
+
+    fn bundle(entries: &[(&str, &[usize], &[f32])])
+              -> WeightBundle {
+        let dir = std::env::temp_dir().join("ref_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join(format!("b{}.fgw", entries.len()));
+        write_fgw(&p, entries).unwrap();
+        read_fgw(&p).unwrap()
+    }
+
+    fn chain_edges(n: usize, model: &str) -> EdgeArrays {
+        // 0->1->2->...: each vertex v>0 has in-edge from v-1, symmetric
+        let mut src = Vec::new();
+        let mut dst = Vec::new();
+        for v in 0..n - 1 {
+            src.push(v as u32);
+            dst.push(v as u32 + 1);
+            src.push(v as u32 + 1);
+            dst.push(v as u32);
+        }
+        let deg: Vec<f32> = (0..n)
+            .map(|v| if v == 0 || v == n - 1 { 1.0 } else { 2.0 })
+            .collect();
+        let inv_deg = match model {
+            "gcn" => deg.iter().map(|d| 1.0 / (d + 1.0)).collect(),
+            "sage" => deg.iter().map(|d| 1.0 / d.max(1.0)).collect(),
+            _ => vec![1.0; n],
+        };
+        if model == "gat" {
+            for v in 0..n as u32 {
+                src.push(v);
+                dst.push(v);
+            }
+        }
+        let ew = vec![1.0; src.len()];
+        EdgeArrays { src, dst, ew, inv_deg, n, n_local: n }
+    }
+
+    #[test]
+    fn matmul_bias_matches_manual() {
+        let x = [1.0f32, 2.0, 3.0, 4.0]; // 2x2
+        let w = [1.0f32, 0.0, 0.0, 1.0]; // identity
+        let b = [0.5f32, -0.5];
+        let out = matmul_bias(&x, 2, 2, &w, 2, &b);
+        assert_eq!(out, vec![1.5, 1.5, 3.5, 3.5]);
+    }
+
+    #[test]
+    fn gcn_two_vertex_manual_check() {
+        // vertices {0,1} connected; h = [[1,0],[0,1]]; W = I; b = 0
+        let w = [1.0f32, 0.0, 0.0, 1.0];
+        let b = [0.0f32, 0.0];
+        let wb = bundle(&[("l0.w", &[2, 2], &w), ("l0.b", &[2], &b)]);
+        let edges = EdgeArrays {
+            src: vec![0, 1],
+            dst: vec![1, 0],
+            ew: vec![1.0, 1.0],
+            inv_deg: vec![0.5, 0.5],
+            n: 2,
+            n_local: 2,
+        };
+        let h = [1.0f32, 0.0, 0.0, 1.0];
+        let out = run_layer("gcn", 0, &wb, &h, 2, &edges, true);
+        // v0: (h1 + h0)/2 = [0.5, 0.5]
+        assert_eq!(out, vec![0.5, 0.5, 0.5, 0.5]);
+    }
+
+    #[test]
+    fn gat_attention_rows_are_convex() {
+        let mut rng = Rng::new(3);
+        let n = 10;
+        let f = 6;
+        let w: Vec<f32> = (0..f * f).map(|_| rng.normal_f32(0.0, 0.4)).collect();
+        let b = vec![0f32; f];
+        let a1: Vec<f32> = (0..f).map(|_| rng.normal_f32(0.0, 0.3)).collect();
+        let a2: Vec<f32> = (0..f).map(|_| rng.normal_f32(0.0, 0.3)).collect();
+        let wb = bundle(&[
+            ("l0.w", &[f, f], &w),
+            ("l0.b", &[f], &b),
+            ("l0.a_src", &[f], &a1),
+            ("l0.a_dst", &[f], &a2),
+        ]);
+        let edges = chain_edges(n, "gat");
+        let h: Vec<f32> = (0..n * f).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let out = run_layer("gat", 0, &wb, &h, f, &edges, true);
+        // each output row must lie within the z-range (convex combination)
+        let z = matmul_bias(&h, n, f, &w, f, &b);
+        for k in 0..f {
+            let zmin = (0..n).map(|v| z[v * f + k]).fold(f32::MAX, f32::min);
+            let zmax = (0..n).map(|v| z[v * f + k]).fold(f32::MIN, f32::max);
+            for v in 0..n {
+                let o = out[v * f + k];
+                assert!(o >= zmin - 1e-4 && o <= zmax + 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn sage_concat_order_is_mean_then_self() {
+        // single directed edge 0 -> 1 (use asymmetric arrays directly)
+        let f = 2;
+        // W = [[I];[0]] picks the mean part only
+        let mut w = vec![0f32; 2 * f * f];
+        w[0] = 1.0; // row 0 (mean dim 0) -> out 0
+        w[f + 1] = 1.0; // row 1 (mean dim 1) -> out 1
+        let b = vec![0f32; f];
+        let wb = bundle(&[("l0.w", &[2 * f, f], &w), ("l0.b", &[f], &b)]);
+        let edges = EdgeArrays {
+            src: vec![0],
+            dst: vec![1],
+            ew: vec![1.0],
+            inv_deg: vec![1.0, 1.0],
+            n: 2,
+            n_local: 2,
+        };
+        let h = [3.0f32, 4.0, 9.0, 9.0];
+        let out = run_layer("sage", 0, &wb, &h, f, &edges, true);
+        // out[1] = mean part = h0
+        assert_eq!(&out[2..], &[3.0, 4.0]);
+    }
+
+    #[test]
+    fn astgcn_shapes_and_finiteness() {
+        let mut rng = Rng::new(4);
+        let n = 12;
+        let ft = 36;
+        let mk = |r: usize, c: usize, rng: &mut Rng| -> Vec<f32> {
+            (0..r * c).map(|_| rng.normal_f32(0.0, 0.2)).collect()
+        };
+        let w1 = mk(ft, 16, &mut rng);
+        let w2 = mk(ft, 16, &mut rng);
+        let wgc = mk(ft, 64, &mut rng);
+        let wself = mk(ft, 64, &mut rng);
+        let wout = mk(64, 12, &mut rng);
+        let bout = vec![0f32; 12];
+        let wb = bundle(&[
+            ("l0.w1", &[ft, 16], &w1),
+            ("l0.w2", &[ft, 16], &w2),
+            ("l0.wgc", &[ft, 64], &wgc),
+            ("l0.wself", &[ft, 64], &wself),
+            ("l0.wout", &[64, 12], &wout),
+            ("l0.bout", &[12], &bout),
+        ]);
+        let x: Vec<f32> = (0..n * ft).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        // ring adjacency
+        let mut adj = vec![0f32; n * n];
+        for v in 0..n {
+            adj[v * n + v] = 1.0 / 3.0;
+            adj[v * n + (v + 1) % n] = 1.0 / 3.0;
+            adj[v * n + (v + n - 1) % n] = 1.0 / 3.0;
+        }
+        let out = run_astgcn(&wb, &x, n, ft, &adj);
+        assert_eq!(out.len(), n * 12);
+        assert!(out.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn isolated_vertex_keeps_self_information() {
+        let w = [1.0f32, 0.0, 0.0, 1.0];
+        let b = [0.0f32, 0.0];
+        let wb = bundle(&[("l0.w", &[2, 2], &w), ("l0.b", &[2], &b)]);
+        let edges = EdgeArrays {
+            src: vec![],
+            dst: vec![],
+            ew: vec![],
+            inv_deg: vec![1.0],
+            n: 1,
+            n_local: 1,
+        };
+        let out = run_layer("gcn", 0, &wb, &[2.0, -3.0], 2, &edges, true);
+        assert_eq!(out, vec![2.0, -3.0]);
+    }
+}

@@ -1,0 +1,174 @@
+//! `.fgw` weight-bundle loader — byte-compatible with
+//! python/compile/fgio.py::write_fgw (the training pipeline's output).
+
+use std::collections::HashMap;
+use std::fs;
+use std::path::Path;
+
+#[derive(Debug, thiserror::Error)]
+pub enum FgwError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("bad magic (not a .fgw file)")]
+    BadMagic,
+    #[error("truncated file")]
+    Truncated,
+    #[error("unknown dtype {0}")]
+    BadDtype(u8),
+    #[error("missing tensor {0}")]
+    Missing(String),
+}
+
+/// A named dense tensor (f32 or i32 payload).
+#[derive(Clone, Debug)]
+pub struct Tensor {
+    pub name: String,
+    pub dims: Vec<usize>,
+    pub f32_data: Vec<f32>,
+    pub i32_data: Vec<i32>,
+}
+
+impl Tensor {
+    pub fn len(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// An ordered, name-indexed weight bundle.
+#[derive(Clone, Debug, Default)]
+pub struct WeightBundle {
+    pub tensors: Vec<Tensor>,
+    index: HashMap<String, usize>,
+}
+
+impl WeightBundle {
+    pub fn get(&self, name: &str) -> Result<&Tensor, FgwError> {
+        self.index
+            .get(name)
+            .map(|&i| &self.tensors[i])
+            .ok_or_else(|| FgwError::Missing(name.to_string()))
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.index.contains_key(name)
+    }
+}
+
+pub fn read_fgw(path: &Path) -> Result<WeightBundle, FgwError> {
+    let buf = fs::read(path)?;
+    if buf.len() < 8 || &buf[..4] != b"FGW1" {
+        return Err(FgwError::BadMagic);
+    }
+    let mut pos = 4usize;
+    let take = |pos: &mut usize, n: usize| -> Result<&[u8], FgwError> {
+        if *pos + n > buf.len() {
+            return Err(FgwError::Truncated);
+        }
+        let s = &buf[*pos..*pos + n];
+        *pos += n;
+        Ok(s)
+    };
+    let n_tensors =
+        u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+    let mut bundle = WeightBundle::default();
+    for _ in 0..n_tensors {
+        let name_len =
+            u16::from_le_bytes(take(&mut pos, 2)?.try_into().unwrap())
+                as usize;
+        let name = String::from_utf8_lossy(take(&mut pos, name_len)?)
+            .into_owned();
+        let meta = take(&mut pos, 2)?;
+        let (dtype, ndim) = (meta[0], meta[1] as usize);
+        let mut dims = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            dims.push(u64::from_le_bytes(
+                take(&mut pos, 8)?.try_into().unwrap(),
+            ) as usize);
+        }
+        let count: usize = dims.iter().product::<usize>().max(
+            if ndim == 0 { 1 } else { 0 },
+        );
+        let raw = take(&mut pos, count * 4)?;
+        let mut t = Tensor {
+            name: name.clone(),
+            dims,
+            f32_data: Vec::new(),
+            i32_data: Vec::new(),
+        };
+        match dtype {
+            0 => {
+                t.f32_data = raw
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                    .collect()
+            }
+            1 => {
+                t.i32_data = raw
+                    .chunks_exact(4)
+                    .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                    .collect()
+            }
+            d => return Err(FgwError::BadDtype(d)),
+        }
+        bundle.index.insert(name, bundle.tensors.len());
+        bundle.tensors.push(t);
+    }
+    Ok(bundle)
+}
+
+/// Writer (tests + emitting random-init bundles when training is skipped).
+pub fn write_fgw(path: &Path, tensors: &[(&str, &[usize], &[f32])])
+                 -> Result<(), FgwError> {
+    let mut out: Vec<u8> = Vec::new();
+    out.extend_from_slice(b"FGW1");
+    out.extend_from_slice(&(tensors.len() as u32).to_le_bytes());
+    for (name, dims, data) in tensors {
+        out.extend_from_slice(&(name.len() as u16).to_le_bytes());
+        out.extend_from_slice(name.as_bytes());
+        out.push(0u8); // f32
+        out.push(dims.len() as u8);
+        for d in *dims {
+            out.extend_from_slice(&(*d as u64).to_le_bytes());
+        }
+        for x in *data {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+    fs::write(path, out)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_via_own_writer() {
+        let dir = std::env::temp_dir().join("fgw_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("w.fgw");
+        let w = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let b = vec![0.5f32, -0.5];
+        write_fgw(&p, &[("l0.w", &[3, 2], &w), ("l0.b", &[2], &b)]).unwrap();
+        let bundle = read_fgw(&p).unwrap();
+        assert_eq!(bundle.tensors.len(), 2);
+        let t = bundle.get("l0.w").unwrap();
+        assert_eq!(t.dims, vec![3, 2]);
+        assert_eq!(t.f32_data, w);
+        assert!(bundle.get("l9.w").is_err());
+        assert!(bundle.contains("l0.b"));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = std::env::temp_dir().join("fgw_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.fgw");
+        std::fs::write(&p, b"NOTFGW__").unwrap();
+        assert!(matches!(read_fgw(&p), Err(FgwError::BadMagic)));
+    }
+}

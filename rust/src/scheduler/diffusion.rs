@@ -1,0 +1,206 @@
+//! Diffusion-based placement adjustment (paper §III-F, Fig. 10): migrate
+//! boundary vertices from the most-loaded to the least-loaded partition —
+//! picking, per migration, the boundary vertex sharing the most neighbors
+//! with the receiving side — until the estimated local balance meets the
+//! tolerance λ.
+
+use crate::graph::Graph;
+use crate::profile::{Cardinality, PerfModel};
+
+use super::indicator::skew_indicators;
+
+/// Estimated per-fog execution times for an assignment under per-node
+/// scaled models (capability × load folded into ω').
+pub fn estimate_times(g: &Graph, assignment: &[u32], n: usize,
+                      omegas: &[PerfModel]) -> Vec<f64> {
+    let mut verts = vec![0usize; n];
+    let mut edges = vec![0usize; n];
+    for v in 0..g.num_vertices() {
+        let j = assignment[v] as usize;
+        verts[j] += 1;
+        edges[j] += g.degree(v);
+    }
+    (0..n)
+        .map(|j| omegas[j].predict(Cardinality::new(verts[j], edges[j])))
+        .collect()
+}
+
+/// One pairwise diffusion between the currently most- and least-loaded
+/// partitions. Returns the number of vertices migrated.
+fn diffuse_pair(
+    g: &Graph,
+    assignment: &mut [u32],
+    omegas: &[PerfModel],
+    n: usize,
+    lambda: f64,
+    max_moves: usize,
+) -> usize {
+    let times = estimate_times(g, assignment, n, omegas);
+    let mu = skew_indicators(&times);
+    let hot = mu
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap();
+    let cold = mu
+        .iter()
+        .enumerate()
+        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap();
+    if mu[hot] <= lambda || hot == cold {
+        return 0;
+    }
+    let mut moved = 0usize;
+    for _ in 0..max_moves {
+        // boundary vertex of `hot` sharing the most neighbors with `cold`
+        let mut best: Option<(usize, usize)> = None; // (vertex, shared)
+        for v in 0..g.num_vertices() {
+            if assignment[v] as usize != hot {
+                continue;
+            }
+            let shared = g
+                .neighbors(v)
+                .iter()
+                .filter(|&&u| assignment[u as usize] as usize == cold)
+                .count();
+            if shared > 0 {
+                match best {
+                    Some((_, s)) if s >= shared => {}
+                    _ => best = Some((v, shared)),
+                }
+            }
+        }
+        let v = match best {
+            Some((v, _)) => v,
+            None => {
+                // no boundary vertex: take any hot vertex (disconnected)
+                match (0..g.num_vertices())
+                    .find(|&v| assignment[v] as usize == hot)
+                {
+                    Some(v) => v,
+                    None => break,
+                }
+            }
+        };
+        assignment[v] = cold as u32;
+        moved += 1;
+        // stop once estimated balance is restored
+        let times = estimate_times(g, assignment, n, omegas);
+        let mu = skew_indicators(&times);
+        if mu[hot] <= lambda {
+            break;
+        }
+    }
+    moved
+}
+
+/// Full diffusion pass (paper: "continues for all unevenly-loaded nodes
+/// until the overall estimated performance satisfies λ"). Returns total
+/// migrations.
+pub fn diffuse(
+    g: &Graph,
+    assignment: &mut [u32],
+    omegas: &[PerfModel],
+    n: usize,
+    lambda: f64,
+) -> usize {
+    let mut total = 0usize;
+    let budget = (g.num_vertices() / 10).max(8);
+    for _round in 0..n * 4 {
+        let moved =
+            diffuse_pair(g, assignment, omegas, n, lambda, budget);
+        total += moved;
+        if moved == 0 {
+            break;
+        }
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate;
+
+    fn slowed_models(n: usize, slow_idx: usize, factor: f64)
+                     -> Vec<PerfModel> {
+        (0..n)
+            .map(|j| {
+                let m = if j == slow_idx { factor } else { 1.0 };
+                PerfModel {
+                    beta_v: 2e-6 * m,
+                    beta_n: 4e-7 * m,
+                    intercept: 1e-3 * m,
+                    r2: 1.0,
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn diffusion_moves_load_off_the_hot_node() {
+        let (g, _) = generate::sbm(1200, 6000, 6, 0.9, 3);
+        let n = 3;
+        let mut assignment: Vec<u32> =
+            (0..1200).map(|v| (v * n / 1200) as u32).collect();
+        // node 2 suddenly 3x slower
+        let omegas = slowed_models(n, 2, 3.0);
+        let before = estimate_times(&g, &assignment, n, &omegas);
+        let mu_before = skew_indicators(&before);
+        assert!(mu_before[2] > 1.3);
+        let moved = diffuse(&g, &mut assignment, &omegas, n, 1.15);
+        assert!(moved > 0);
+        let after = estimate_times(&g, &assignment, n, &omegas);
+        let mu_after = skew_indicators(&after);
+        assert!(
+            mu_after[2] < mu_before[2],
+            "skew not reduced: {mu_before:?} -> {mu_after:?}"
+        );
+        // placement still valid
+        assert!(assignment.iter().all(|&a| (a as usize) < n));
+    }
+
+    #[test]
+    fn balanced_layout_is_left_alone() {
+        let (g, _) = generate::sbm(600, 3000, 6, 0.9, 5);
+        let n = 3;
+        let mut assignment: Vec<u32> =
+            (0..600).map(|v| (v * n / 600) as u32).collect();
+        let omegas = slowed_models(n, 0, 1.0);
+        let snapshot = assignment.clone();
+        let moved = diffuse(&g, &mut assignment, &omegas, n, 1.25);
+        assert_eq!(moved, 0);
+        assert_eq!(assignment, snapshot);
+    }
+
+    #[test]
+    fn migration_prefers_boundary_vertices() {
+        // two communities; hot node holds community 0; migrated vertices
+        // should be those adjacent to community 1's partition
+        let (g, _) = generate::sbm(400, 2400, 2, 0.95, 7);
+        let mut assignment: Vec<u32> =
+            (0..400).map(|v| if v < 200 { 0 } else { 1 }).collect();
+        let omegas = slowed_models(2, 0, 4.0);
+        let before = assignment.clone();
+        diffuse(&g, &mut assignment, &omegas, 2, 1.1);
+        let migrated: Vec<usize> = (0..400)
+            .filter(|&v| before[v] == 0 && assignment[v] == 1)
+            .collect();
+        assert!(!migrated.is_empty());
+        // migrated vertices end up adjacent to the receiving partition
+        // (each was a boundary vertex at its migration time, so in the
+        // final layout it must touch partition 1)
+        let boundary_frac = migrated
+            .iter()
+            .filter(|&&v| {
+                g.neighbors(v)
+                    .iter()
+                    .any(|&u| assignment[u as usize] == 1 && u as usize != v)
+            })
+            .count() as f64
+            / migrated.len() as f64;
+        assert!(boundary_frac > 0.9, "boundary frac {boundary_frac}");
+    }
+}

@@ -1,0 +1,161 @@
+//! Dual-mode workload scheduler (paper Algorithm 2): update timings →
+//! compute skew indicators → if tolerance λ is violated, choose between
+//! the lightweight diffusion adjustment (few overloaded nodes) and a full
+//! IEP replan (skew fraction above θ). Layout changes are computed
+//! virtually and deployed at idle time.
+
+use crate::fog::Cluster;
+use crate::graph::{DatasetSpec, Graph};
+use crate::partition::MultilevelParams;
+use crate::placement::{self, MappingStrategy};
+use crate::profile::PerfModel;
+use crate::serving::pipeline::{default_cost_model, ServeOpts};
+
+use super::diffusion;
+use super::indicator::{overloaded, skew_indicators};
+
+#[derive(Clone, Copy, Debug)]
+pub struct SchedulerConfig {
+    /// Imbalance tolerance λ (> 1).
+    pub lambda: f64,
+    /// Skewness threshold θ ∈ (0, 1): fraction of overloaded nodes that
+    /// escalates to global rescheduling (paper default 0.5).
+    pub theta: f64,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        Self { lambda: 1.25, theta: 0.5 }
+    }
+}
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SchedulerDecision {
+    /// Balanced within tolerance — keep the layout.
+    Keep,
+    /// Diffusion adjustment, with the number of migrated vertices.
+    Diffused(usize),
+    /// Full IEP replan.
+    Replanned,
+}
+
+/// One scheduling step (Algorithm 2). `real_times` are the latest per-fog
+/// measured execution times (from the online profilers via the metadata
+/// server); `omegas` their η-scaled models. Mutates `assignment` in place
+/// when an adjustment is applied.
+#[allow(clippy::too_many_arguments)]
+pub fn schedule(
+    g: &Graph,
+    spec: &DatasetSpec,
+    cluster: &Cluster,
+    opts: &ServeOpts,
+    assignment: &mut Vec<u32>,
+    real_times: &[f64],
+    omegas: &[PerfModel],
+    cfg: &SchedulerConfig,
+) -> SchedulerDecision {
+    let n = cluster.len();
+    assert_eq!(real_times.len(), n);
+    let mu = skew_indicators(real_times);
+    let over = overloaded(&mu, cfg.lambda);
+    if over.is_empty() {
+        return SchedulerDecision::Keep;
+    }
+    let frac = over.len() as f64 / n as f64;
+    if frac <= cfg.theta {
+        let moved =
+            diffusion::diffuse(g, assignment, omegas, n, cfg.lambda);
+        SchedulerDecision::Diffused(moved)
+    } else {
+        let params = MultilevelParams {
+            seed: opts.bgp_seed,
+            ..Default::default()
+        };
+        let cost = default_cost_model(g, cluster, opts, spec);
+        let plan = placement::plan(g, cluster, omegas, &cost,
+                                   MappingStrategy::Lbap, &params);
+        *assignment = plan.assignment;
+        SchedulerDecision::Replanned
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::Codec;
+    use crate::fog::Cluster;
+    use crate::net::NetKind;
+    use crate::serving::Placement;
+
+    fn setup() -> (Graph, DatasetSpec, Cluster, ServeOpts, Vec<PerfModel>) {
+        let (mut g, _) = crate::graph::generate::sbm(800, 4000, 8, 0.9, 3);
+        g.feature_dim = 8;
+        g.features = vec![0.0; 800 * 8];
+        let spec = DatasetSpec {
+            name: "tiny",
+            vertices: 800,
+            edges: 4000,
+            feature_dim: 8,
+            classes: 2,
+            duration: 1,
+            window: 1,
+            seed: 1,
+        };
+        let cluster = Cluster::case_study(NetKind::Wifi);
+        let opts = ServeOpts::new("gcn", Placement::Iep, Codec::None);
+        let omegas = vec![PerfModel::uncalibrated(); 4];
+        (g, spec, cluster, opts, omegas)
+    }
+
+    fn balanced_assignment(n: usize, v: usize) -> Vec<u32> {
+        (0..v).map(|x| (x * n / v) as u32).collect()
+    }
+
+    #[test]
+    fn keeps_balanced_layout() {
+        let (g, spec, cluster, opts, omegas) = setup();
+        let mut a = balanced_assignment(4, 800);
+        let d = schedule(&g, &spec, &cluster, &opts, &mut a,
+                         &[0.1, 0.1, 0.1, 0.1], &omegas,
+                         &SchedulerConfig::default());
+        assert_eq!(d, SchedulerDecision::Keep);
+    }
+
+    #[test]
+    fn single_hot_node_triggers_diffusion() {
+        let (g, spec, cluster, opts, mut omegas) = setup();
+        let mut a = balanced_assignment(4, 800);
+        // node 3 reports 3x the mean; its scaled model reflects that
+        omegas[3] = PerfModel {
+            beta_v: omegas[3].beta_v * 3.0,
+            beta_n: omegas[3].beta_n * 3.0,
+            intercept: omegas[3].intercept * 3.0,
+            r2: 1.0,
+        };
+        let d = schedule(&g, &spec, &cluster, &opts, &mut a,
+                         &[0.1, 0.1, 0.1, 0.4], &omegas,
+                         &SchedulerConfig::default());
+        match d {
+            SchedulerDecision::Diffused(m) => assert!(m > 0),
+            other => panic!("expected diffusion, got {other:?}"),
+        }
+        // hot node lost vertices
+        let count3 = a.iter().filter(|&&x| x == 3).count();
+        assert!(count3 < 200);
+    }
+
+    #[test]
+    fn widespread_skew_triggers_replan() {
+        let (g, spec, cluster, opts, omegas) = setup();
+        let mut a = balanced_assignment(4, 800);
+        let before = a.clone();
+        // 3 of 4 nodes overloaded (μ ≈ 1.26 > λ) -> frac 0.75 > θ=0.5
+        let d = schedule(&g, &spec, &cluster, &opts, &mut a,
+                         &[0.6, 0.6, 0.6, 0.1], &omegas,
+                         &SchedulerConfig::default());
+        assert_eq!(d, SchedulerDecision::Replanned);
+        assert_ne!(a, before);
+        // valid placement over 4 fogs
+        assert!(a.iter().all(|&x| x < 4));
+    }
+}

@@ -1,0 +1,50 @@
+//! Load-balance indicator μ_j (paper Eq. 9): each fog's measured execution
+//! time relative to the cluster mean. μ_j > λ flags node j as overloaded.
+
+/// μ_j = T_j / mean_k(T_k). Returns all-1.0 for degenerate inputs.
+pub fn skew_indicators(real_times: &[f64]) -> Vec<f64> {
+    let n = real_times.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let mean: f64 = real_times.iter().sum::<f64>() / n as f64;
+    if mean <= 0.0 {
+        return vec![1.0; n];
+    }
+    real_times.iter().map(|&t| t / mean).collect()
+}
+
+/// Indices of nodes violating the imbalance tolerance λ.
+pub fn overloaded(mu: &[f64], lambda: f64) -> Vec<usize> {
+    debug_assert!(lambda >= 1.0, "λ must be ≥ 1");
+    mu.iter()
+        .enumerate()
+        .filter(|(_, &m)| m > lambda)
+        .map(|(i, _)| i)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn balanced_cluster_has_unit_indicators() {
+        let mu = skew_indicators(&[0.2, 0.2, 0.2, 0.2]);
+        assert!(mu.iter().all(|&m| (m - 1.0).abs() < 1e-12));
+        assert!(overloaded(&mu, 1.2).is_empty());
+    }
+
+    #[test]
+    fn skewed_node_is_flagged() {
+        let mu = skew_indicators(&[0.1, 0.1, 0.1, 0.5]);
+        assert!(mu[3] > 2.0);
+        assert_eq!(overloaded(&mu, 1.3), vec![3]);
+    }
+
+    #[test]
+    fn degenerate_inputs() {
+        assert!(skew_indicators(&[]).is_empty());
+        assert_eq!(skew_indicators(&[0.0, 0.0]), vec![1.0, 1.0]);
+    }
+}

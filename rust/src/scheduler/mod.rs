@@ -1,0 +1,12 @@
+//! Adaptive workload scheduling (paper §III-F): load-balance indicators
+//! (Eq. 9), the lightweight diffusion-based adjustment (Fig. 10) and the
+//! dual-mode scheduler (Algorithm 2) that escalates to a full IEP replan
+//! when skew is widespread.
+
+pub mod diffusion;
+pub mod dual_mode;
+pub mod indicator;
+
+pub use diffusion::diffuse;
+pub use dual_mode::{schedule, SchedulerConfig, SchedulerDecision};
+pub use indicator::skew_indicators;

@@ -1,0 +1,152 @@
+//! Inference-quality evaluation (Table IV accuracy, Table V forecasting
+//! errors): runs the serving output against labels / future ground truth,
+//! under whichever codec the pipeline applied to the uploaded features.
+
+use crate::graph::{DatasetSpec, Graph};
+
+/// Deterministic train/test split — MUST match python prep.train_test_split
+/// (test accuracy is computed on the same held-out vertices the trainer
+/// reported on).
+pub fn test_indices(v: usize, train_frac: f64) -> Vec<usize> {
+    (0..v)
+        .filter(|&i| {
+            let h = (i as u64).wrapping_mul(2654435761) % 4294967296;
+            (h % 1000) as f64 >= train_frac * 1000.0
+        })
+        .collect()
+}
+
+/// Classification accuracy of logits [V, C] on the held-out split.
+pub fn accuracy(outputs: &[f32], out_dim: usize, labels: &[i32]) -> f64 {
+    let test = test_indices(labels.len(), 0.7);
+    let mut correct = 0usize;
+    for &v in &test {
+        let row = &outputs[v * out_dim..(v + 1) * out_dim];
+        let pred = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i as i32)
+            .unwrap();
+        if pred == labels[v] {
+            correct += 1;
+        }
+    }
+    correct as f64 / test.len().max(1) as f64
+}
+
+/// Forecasting errors at a horizon index (0-based step into the predicted
+/// hour): MAE, RMSE, MAPE — Table V's metrics.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ForecastErrors {
+    pub mae: f64,
+    pub rmse: f64,
+    pub mape: f64,
+}
+
+/// `outputs` [V, T_out] de-normalized flow predictions; ground truth from
+/// the stored series at `window_start + window`.
+pub fn forecast_errors(
+    g: &Graph,
+    spec: &DatasetSpec,
+    outputs: &[f32],
+    t_out: usize,
+    window_start: usize,
+    horizon_steps: usize,
+) -> ForecastErrors {
+    let nv = g.num_vertices();
+    let t = g.duration;
+    let base = window_start + spec.window;
+    assert!(base + t_out <= t, "window beyond series end");
+    assert!(horizon_steps >= 1 && horizon_steps <= t_out);
+    let mut abs = 0f64;
+    let mut sq = 0f64;
+    let mut ape = 0f64;
+    let mut count = 0usize;
+    for v in 0..nv {
+        // flow channel is 0: features[v*3T .. v*3T+T]
+        for k in 0..horizon_steps {
+            let truth = g.features[v * 3 * t + base + k] as f64;
+            let pred = outputs[v * t_out + k] as f64;
+            let d = pred - truth;
+            abs += d.abs();
+            sq += d * d;
+            if truth.abs() > 1.0 {
+                ape += (d / truth).abs();
+            }
+            count += 1;
+        }
+    }
+    ForecastErrors {
+        mae: abs / count as f64,
+        rmse: (sq / count as f64).sqrt(),
+        mape: ape / count as f64 * 100.0,
+    }
+}
+
+/// Average forecast errors over several query windows.
+pub fn average_errors(errs: &[ForecastErrors]) -> ForecastErrors {
+    let n = errs.len().max(1) as f64;
+    ForecastErrors {
+        mae: errs.iter().map(|e| e.mae).sum::<f64>() / n,
+        rmse: errs.iter().map(|e| e.rmse).sum::<f64>() / n,
+        mape: errs.iter().map(|e| e.mape).sum::<f64>() / n,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::datasets;
+
+    #[test]
+    fn split_matches_python_hash() {
+        // python: (idx * 2654435761 % 2**32) % 1000 < 700 -> train
+        let test = test_indices(100, 0.7);
+        for &i in &test {
+            let h = (i as u64).wrapping_mul(2654435761) % 4294967296;
+            assert!((h % 1000) >= 700);
+        }
+        // roughly 30%
+        assert!(test.len() > 15 && test.len() < 45, "{}", test.len());
+    }
+
+    #[test]
+    fn perfect_predictions_give_perfect_accuracy() {
+        let labels = vec![0, 1, 1, 0, 1, 0, 0, 1, 1, 0];
+        let mut outputs = vec![0f32; 20];
+        for (i, &l) in labels.iter().enumerate() {
+            outputs[i * 2 + l as usize] = 5.0;
+        }
+        assert_eq!(accuracy(&outputs, 2, &labels), 1.0);
+        // flip all predictions -> 0
+        let mut flipped = vec![0f32; 20];
+        for (i, &l) in labels.iter().enumerate() {
+            flipped[i * 2 + (1 - l) as usize] = 5.0;
+        }
+        assert_eq!(accuracy(&flipped, 2, &labels), 0.0);
+    }
+
+    #[test]
+    fn forecast_errors_zero_for_oracle() {
+        let g = datasets::generate("pems");
+        let spec = datasets::PEMS;
+        let start = 500;
+        let t = g.duration;
+        let t_out = 12;
+        // oracle: copy the truth into predictions
+        let mut outputs = vec![0f32; g.num_vertices() * t_out];
+        for v in 0..g.num_vertices() {
+            for k in 0..t_out {
+                outputs[v * t_out + k] =
+                    g.features[v * 3 * t + start + spec.window + k];
+            }
+        }
+        let e = forecast_errors(&g, &spec, &outputs, t_out, start, 6);
+        assert!(e.mae < 1e-6 && e.rmse < 1e-6 && e.mape < 1e-6);
+        // constant predictor has substantial error
+        let flat = vec![250f32; g.num_vertices() * t_out];
+        let ef = forecast_errors(&g, &spec, &flat, t_out, start, 6);
+        assert!(ef.mae > 10.0);
+    }
+}

@@ -1,0 +1,214 @@
+//! Data-collection stage (paper Fig. 5 ❸ + §III-D deployment): devices
+//! pack their local readings (quantize + shuffle + LZ4), upload over the
+//! access network, and fogs unpack on a side thread pipelined with
+//! inference.
+//!
+//! The packing/unpacking COMPUTE times are real (measured on this host and
+//! scaled to device/fog capability); the TRANSFER times are analytic from
+//! the calibrated network model.
+
+use std::time::Instant;
+
+use crate::compress::{self, Codec};
+use crate::fog::Cluster;
+use crate::graph::Graph;
+use crate::net;
+
+/// End devices (Raspberry-Pi class) are markedly slower than this host at
+/// the packing arithmetic.
+pub const DEVICE_COMPUTE_MULT: f64 = 6.0;
+/// Unpacking runs on a separate fog thread, pipelined with inference
+/// (§III-D "Deployment of CO"); only this share lands on the critical path.
+pub const UNPACK_PIPELINE_SHARE: f64 = 0.25;
+
+#[derive(Clone, Debug)]
+pub struct CollectionResult {
+    /// Per-fog collection latency (transfer + device-side packing).
+    pub per_fog_s: Vec<f64>,
+    /// Pipelined unpack cost on the critical path (max over fogs).
+    pub unpack_s: f64,
+    pub wire_bytes: usize,
+    pub raw_bytes: usize,
+    /// Dequantized features [V, F·W] in GLOBAL vertex order (what the
+    /// fogs' runtimes see after unpacking).
+    pub features: Vec<f32>,
+}
+
+/// Simulate the collection stage for a placement.
+///
+/// * `window_features` — [V, D] per-vertex upload payload for this query
+///   (for PeMS this is the current 12-step window, already flattened).
+/// * `assignment` — vertex → fog id (all-zeros + n_fogs=1 for cloud).
+/// * `devices` — number of source devices (APs contention input).
+/// * `wan` — route uploads over the WAN (cloud serving).
+pub fn collect(
+    g: &Graph,
+    window_features: &[f32],
+    dims: usize,
+    assignment: &[u32],
+    cluster: &Cluster,
+    codec: &Codec,
+    devices: usize,
+    wan: bool,
+) -> CollectionResult {
+    let nv = g.num_vertices();
+    assert_eq!(window_features.len(), nv * dims);
+    let n_fogs = cluster.len();
+    let degrees = g.degrees();
+
+    let mut per_fog_s = vec![0f64; n_fogs];
+    let mut unpack_s = 0f64;
+    let mut wire_total = 0usize;
+    let mut raw_total = 0usize;
+    let mut features = vec![0f32; nv * dims];
+
+    // partition vertex ids by fog
+    let mut by_fog: Vec<Vec<u32>> = vec![Vec::new(); n_fogs];
+    for v in 0..nv {
+        by_fog[assignment[v] as usize].push(v as u32);
+    }
+    // contention spreads over the fogs that actually receive data (a
+    // single-fog placement concentrates every device on one AP)
+    let active_fogs = by_fog.iter().filter(|v| !v.is_empty()).count();
+    let devices_per_fog = devices.div_ceil(active_fogs.max(1)).max(1);
+
+    for (j, verts) in by_fog.iter().enumerate() {
+        if verts.is_empty() {
+            continue;
+        }
+        let rows: Vec<&[f32]> = verts
+            .iter()
+            .map(|&v| {
+                &window_features[v as usize * dims..(v as usize + 1) * dims]
+            })
+            .collect();
+        let degs: Vec<u64> =
+            verts.iter().map(|&v| degrees[v as usize] as u64).collect();
+        let t_pack = Instant::now();
+        let packed = compress::pack(&rows, &degs, codec);
+        let pack_host = t_pack.elapsed().as_secs_f64();
+        // devices pack their shards in parallel; per-device share
+        let pack_device_s = pack_host * DEVICE_COMPUTE_MULT
+            / devices_per_fog as f64;
+
+        let t_unpack = Instant::now();
+        let mut rows_out: Vec<Vec<f32>> = Vec::new();
+        compress::unpack(&packed, &mut rows_out).expect("unpack");
+        let unpack_host = t_unpack.elapsed().as_secs_f64();
+        let fog_mult = cluster.nodes[j].effective_multiplier();
+        unpack_s = unpack_s
+            .max(unpack_host * fog_mult * UNPACK_PIPELINE_SHARE);
+
+        // write dequantized rows back in global order
+        if rows_out.is_empty() {
+            for &v in verts {
+                let src = &window_features
+                    [v as usize * dims..(v as usize + 1) * dims];
+                features[v as usize * dims..(v as usize + 1) * dims]
+                    .copy_from_slice(src);
+            }
+        } else {
+            for (&v, row) in verts.iter().zip(&rows_out) {
+                features[v as usize * dims..(v as usize + 1) * dims]
+                    .copy_from_slice(row);
+            }
+        }
+
+        let bw = if wan {
+            net::cloud_uplink_mbps(&cluster.net, devices)
+        } else {
+            net::fog_uplink_mbps(&cluster.net, devices_per_fog)
+                * cluster.nodes[j].node_type.bandwidth_share()
+        };
+        let rtt = if wan {
+            cluster.net.wan_rtt_s
+        } else {
+            cluster.net.lan_rtt_s
+        };
+        per_fog_s[j] =
+            net::transfer_time_s(packed.wire_bytes, bw, rtt) + pack_device_s;
+        wire_total += packed.wire_bytes;
+        raw_total += packed.raw_bytes;
+    }
+
+    CollectionResult {
+        per_fog_s,
+        unpack_s,
+        wire_bytes: wire_total,
+        raw_bytes: raw_total,
+        features,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{DaqConfig, IntervalScheme, DEFAULT_BITS};
+    use crate::fog::Cluster;
+    use crate::graph::generate;
+    use crate::net::NetKind;
+
+    fn setup() -> (Graph, Vec<f32>) {
+        let (mut g, _) = generate::sbm(400, 2000, 4, 0.85, 3);
+        let mut rng = crate::util::rng::Rng::new(1);
+        let feats: Vec<f32> = (0..400 * 16)
+            .map(|_| if rng.bool(0.1) { 1.0 } else { 0.0 })
+            .collect();
+        g.feature_dim = 16;
+        g.features = feats.clone();
+        (g, feats)
+    }
+
+    #[test]
+    fn co_reduces_wire_bytes_and_collection_time() {
+        let (g, feats) = setup();
+        let cluster = Cluster::testbed(NetKind::Cell4G);
+        let assignment: Vec<u32> =
+            (0..400).map(|v| (v % 6) as u32).collect();
+        let cfg = DaqConfig::from_degrees(&g.degrees(),
+                                          IntervalScheme::EqualMass,
+                                          DEFAULT_BITS);
+        let none = collect(&g, &feats, 16, &assignment, &cluster,
+                           &Codec::None, 8, false);
+        let co = collect(&g, &feats, 16, &assignment, &cluster,
+                         &Codec::Daq(cfg), 8, false);
+        assert!(co.wire_bytes < none.wire_bytes / 3);
+        let max = |v: &Vec<f64>| {
+            v.iter().cloned().fold(0f64, f64::max)
+        };
+        assert!(max(&co.per_fog_s) < max(&none.per_fog_s));
+        // features must round-trip with small error
+        let err: f32 = feats
+            .iter()
+            .zip(&co.features)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max);
+        assert!(err < 0.02, "max err {err}");
+    }
+
+    #[test]
+    fn wan_collection_is_slower_than_lan() {
+        let (g, feats) = setup();
+        let cloud = Cluster::cloud(NetKind::Cell4G);
+        let fog = Cluster::testbed(NetKind::Cell4G);
+        let all0 = vec![0u32; 400];
+        let assignment: Vec<u32> = (0..400).map(|v| (v % 6) as u32).collect();
+        let c = collect(&g, &feats, 16, &all0, &cloud, &Codec::None, 8, true);
+        let f = collect(&g, &feats, 16, &assignment, &fog, &Codec::None, 8,
+                        false);
+        let maxt = |v: &Vec<f64>| v.iter().cloned().fold(0f64, f64::max);
+        assert!(maxt(&c.per_fog_s) > maxt(&f.per_fog_s));
+    }
+
+    #[test]
+    fn none_codec_passes_features_through_exactly() {
+        let (g, feats) = setup();
+        let cluster = Cluster::uniform_b(2, NetKind::Wifi);
+        let assignment: Vec<u32> = (0..400).map(|v| (v % 2) as u32).collect();
+        let r = collect(&g, &feats, 16, &assignment, &cluster,
+                        &Codec::None, 4, false);
+        assert_eq!(r.features, feats);
+        assert_eq!(r.raw_bytes, 400 * 16 * 8);
+        assert_eq!(r.wire_bytes, r.raw_bytes);
+    }
+}

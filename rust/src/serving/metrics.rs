@@ -1,0 +1,109 @@
+//! Serving metrics: the stage-wise latency breakdown of Fig. 3/15 and the
+//! pipelined-throughput model of Fig. 12/13(d).
+
+/// One inference's end-to-end accounting (all seconds, simulated clock).
+#[derive(Clone, Debug, Default)]
+pub struct ServingReport {
+    /// max over fogs of device→fog (or →cloud) upload, incl. packing.
+    pub collection_s: f64,
+    /// Σ over layers of (max-fog layer time), without sync.
+    pub execution_s: f64,
+    /// Σ over layers of the synchronization cost δ.
+    pub sync_s: f64,
+    /// Unpacking on the fog side (pipelined share).
+    pub unpack_s: f64,
+    pub total_s: f64,
+    /// Steady-state pipelined inferences/second.
+    pub throughput: f64,
+    /// Bytes on the wire for one inference's data collection.
+    pub wire_bytes: usize,
+    /// Raw (uncompressed f64) payload bytes.
+    pub raw_bytes: usize,
+    /// Per-fog detail (index = fog id).
+    pub per_fog_vertices: Vec<usize>,
+    pub per_fog_collection_s: Vec<f64>,
+    pub per_fog_exec_s: Vec<f64>,
+    /// Whether any fog exceeded its serving memory (Fig. 18 OOM).
+    pub oom: bool,
+    /// Model outputs [V, out_dim] (when requested).
+    pub outputs: Option<Vec<f32>>,
+    pub out_dim: usize,
+}
+
+impl ServingReport {
+    /// The two pipeline stages overlap across successive inferences:
+    /// collection of query i+1 proceeds while query i executes.
+    pub fn compute_throughput(&mut self) {
+        let exec_stage = self.execution_s + self.sync_s + self.unpack_s;
+        let bottleneck = self.collection_s.max(exec_stage);
+        self.throughput =
+            if bottleneck > 0.0 { 1.0 / bottleneck } else { 0.0 };
+    }
+
+    pub fn finalize(&mut self) {
+        self.total_s = self.collection_s + self.execution_s + self.sync_s
+            + self.unpack_s;
+        self.compute_throughput();
+    }
+
+    /// Communication share of the total (Fig. 3-right / Fig. 15-right).
+    pub fn comm_fraction(&self) -> f64 {
+        if self.total_s == 0.0 {
+            return 0.0;
+        }
+        (self.collection_s + self.sync_s + self.unpack_s) / self.total_s
+    }
+}
+
+/// Aggregate repeat runs into one report (outputs from the last run).
+/// Components use the MEDIAN: single-core wall-clock measurement is
+/// outlier-prone and the paper reports typical-case latency.
+pub fn average(reports: Vec<ServingReport>) -> ServingReport {
+    assert!(!reports.is_empty());
+    let med = |xs: Vec<f64>| crate::util::stats::percentile(&xs, 50.0);
+    let mut acc = reports.last().unwrap().clone();
+    acc.collection_s =
+        med(reports.iter().map(|r| r.collection_s).collect());
+    acc.execution_s =
+        med(reports.iter().map(|r| r.execution_s).collect());
+    acc.sync_s = med(reports.iter().map(|r| r.sync_s).collect());
+    acc.unpack_s = med(reports.iter().map(|r| r.unpack_s).collect());
+    acc.finalize();
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn finalize_sums_stages_and_pipelines_throughput() {
+        let mut r = ServingReport {
+            collection_s: 0.6,
+            execution_s: 0.3,
+            sync_s: 0.05,
+            unpack_s: 0.05,
+            ..Default::default()
+        };
+        r.finalize();
+        assert!((r.total_s - 1.0).abs() < 1e-12);
+        // collection (0.6) dominates the exec stage (0.4)
+        assert!((r.throughput - 1.0 / 0.6).abs() < 1e-9);
+        assert!((r.comm_fraction() - 0.7).abs() < 1e-9);
+    }
+
+    #[test]
+    fn average_is_elementwise_mean() {
+        let mk = |c: f64| {
+            let mut r = ServingReport {
+                collection_s: c,
+                execution_s: 0.2,
+                ..Default::default()
+            };
+            r.finalize();
+            r
+        };
+        let avg = average(vec![mk(0.4), mk(0.8)]);
+        assert!((avg.collection_s - 0.6).abs() < 1e-12);
+    }
+}

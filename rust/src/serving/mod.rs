@@ -1,0 +1,11 @@
+//! Serving layer: data-collection simulation, end-to-end pipelines
+//! (cloud / single-fog / straw-man multi-fog / Fograph / ablations),
+//! latency+throughput metrics, and inference-quality evaluation.
+
+pub mod accuracy;
+pub mod collection;
+pub mod metrics;
+pub mod pipeline;
+
+pub use metrics::ServingReport;
+pub use pipeline::{serve, serve_with_assignment, Placement, ServeOpts};

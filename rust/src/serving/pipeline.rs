@@ -1,0 +1,513 @@
+//! End-to-end serving pipelines — the paper's four comparison points plus
+//! ablations, expressed as placement × codec × cluster combinations:
+//!
+//! * cloud          — single Cloud node, WAN collection, no compression
+//! * single-fog     — the most powerful fog node alone
+//! * multi-fog      — straw-man: BGP partitions, random fog mapping, no CO
+//! * Fograph        — IEP (LBAP mapping) + communication optimizer
+//! * ablations      — Fograph w/o IEP, Fograph w/o CO (Fig. 15)
+//!
+//! Latency composition (Eq. (7) + the BSP barrier structure of §III-E):
+//!   total = max_j collection_j + Σ_k (max_j exec_{j,k} + δ_k) + unpack
+
+use crate::compress::{Codec, DaqConfig, IntervalScheme, DEFAULT_BITS};
+use crate::exec;
+use crate::fog::{node::partition_footprint_bytes, Cluster};
+use crate::graph::{DatasetSpec, Graph};
+use crate::net;
+use crate::partition::{baselines, MultilevelParams};
+use crate::placement::{self, CostModel, MappingStrategy};
+use crate::profile::PerfModel;
+use crate::runtime::{reference, Engine, EngineError};
+
+use super::collection;
+use super::metrics::ServingReport;
+
+/// Placement strategies across the evaluation.
+#[derive(Clone, Debug)]
+pub enum Placement {
+    /// Everything on one node (cloud / single-fog).
+    SingleNode(usize),
+    /// §II-C motivation: random equal split.
+    RandomSplit(u64),
+    /// Straw-man multi-fog: min-cut partitions, stochastic mapping [39].
+    MetisRandom(u64),
+    /// METIS + greedy mapping (Fig. 8 baseline).
+    MetisGreedy,
+    /// Fograph's IEP (LBAP mapping).
+    Iep,
+}
+
+#[derive(Clone, Debug)]
+pub struct ServeOpts {
+    pub model: String,
+    pub placement: Placement,
+    pub codec: Codec,
+    /// Number of source devices (contention; the paper's testbed has 8).
+    pub devices: usize,
+    /// Route collection over the WAN (cloud serving).
+    pub wan: bool,
+    pub keep_outputs: bool,
+    /// Window start offset for temporal datasets (PeMS).
+    pub window_start: usize,
+    pub bgp_seed: u64,
+}
+
+impl ServeOpts {
+    pub fn new(model: &str, placement: Placement, codec: Codec) -> Self {
+        ServeOpts {
+            model: model.to_string(),
+            placement,
+            codec,
+            devices: 8,
+            wan: false,
+            keep_outputs: false,
+            window_start: 1600,
+            bgp_seed: 0xF06,
+        }
+    }
+
+    /// Default DAQ codec for a graph.
+    pub fn co_codec(g: &Graph) -> Codec {
+        Codec::Daq(DaqConfig::from_degrees(
+            &g.degrees(),
+            IntervalScheme::EqualMass,
+            DEFAULT_BITS,
+        ))
+    }
+}
+
+/// Per-inference upload payload: static features, or the current window
+/// slice for temporal datasets. Returns ([V, dims] row-major, dims).
+pub fn query_payload(g: &Graph, spec: &DatasetSpec, window_start: usize)
+                     -> (Vec<f32>, usize) {
+    if spec.window <= 1 {
+        return (g.features.clone(), g.feature_dim);
+    }
+    // features are [V, F, T]; take [V, F, window] at window_start and
+    // flatten feature-major (matches python prep.pems_windows)
+    let nv = g.num_vertices();
+    let f = g.feature_dim;
+    let t = g.duration;
+    let w = spec.window;
+    let start = window_start.min(t - w);
+    let mut out = vec![0f32; nv * f * w];
+    for v in 0..nv {
+        for c in 0..f {
+            for k in 0..w {
+                out[v * f * w + c * w + k] =
+                    g.features[v * f * t + c * t + start + k];
+            }
+        }
+    }
+    (out, f * w)
+}
+
+/// Compute the placement assignment for the options.
+pub fn place(
+    g: &Graph,
+    cluster: &Cluster,
+    opts: &ServeOpts,
+    omegas: &[PerfModel],
+    spec: &DatasetSpec,
+) -> Vec<u32> {
+    let n = cluster.len();
+    match &opts.placement {
+        Placement::SingleNode(idx) => vec![*idx as u32; g.num_vertices()],
+        Placement::RandomSplit(seed) => {
+            baselines::random_split(g, n, *seed)
+        }
+        Placement::MetisRandom(seed) => {
+            let params = MultilevelParams {
+                seed: opts.bgp_seed,
+                ..Default::default()
+            };
+            let cost = default_cost_model(g, cluster, opts, spec);
+            placement::plan(g, cluster, omegas, &cost,
+                            MappingStrategy::Random(*seed), &params)
+                .assignment
+        }
+        Placement::MetisGreedy => {
+            let params = MultilevelParams {
+                seed: opts.bgp_seed,
+                ..Default::default()
+            };
+            let cost = default_cost_model(g, cluster, opts, spec);
+            placement::plan(g, cluster, omegas, &cost,
+                            MappingStrategy::Greedy, &params)
+                .assignment
+        }
+        Placement::Iep => {
+            let params = MultilevelParams {
+                seed: opts.bgp_seed,
+                ..Default::default()
+            };
+            let cost = default_cost_model(g, cluster, opts, spec);
+            placement::plan(g, cluster, omegas, &cost,
+                            MappingStrategy::Lbap, &params)
+                .assignment
+        }
+    }
+}
+
+/// Planning-time φ estimate (wire bytes/vertex) for the cost model.
+pub fn phi_estimate(g: &Graph, codec: &Codec, dims: usize) -> f64 {
+    let raw = dims as f64 * 8.0;
+    match codec {
+        Codec::None => raw,
+        Codec::Lz4Only => raw * 0.6,
+        Codec::Uniform(bits) => {
+            (dims as f64 * *bits as f64 / 8.0 + 9.0) * 0.7
+        }
+        Codec::Daq(cfg) => {
+            let thm2 = cfg.theorem2_ratio(&g.degrees(), 64.0);
+            raw * thm2 * 0.6 // LZ4 sparsity elimination on top of DAQ
+        }
+    }
+}
+
+pub fn default_cost_model(g: &Graph, cluster: &Cluster, opts: &ServeOpts,
+                          spec: &DatasetSpec) -> CostModel {
+    CostModel {
+        phi_bytes: phi_estimate(g, &opts.codec, spec.input_dim()),
+        k_layers: reference::model_layers(&opts.model),
+        sync_row_bytes: (reference::HIDDEN * 4) as f64,
+        devices_per_fog: opts.devices.div_ceil(cluster.len()).max(1),
+        net: cluster.net,
+    }
+}
+
+/// Run one end-to-end inference and account its latency.
+pub fn serve(
+    g: &Graph,
+    spec: &DatasetSpec,
+    cluster: &Cluster,
+    opts: &ServeOpts,
+    omegas: &[PerfModel],
+    engine: &mut Engine,
+) -> Result<ServingReport, EngineError> {
+    let (payload, dims) = query_payload(g, spec, opts.window_start);
+    let assignment = place(g, cluster, opts, omegas, spec);
+    serve_with_assignment(g, spec, cluster, opts, &assignment, &payload,
+                          dims, engine)
+}
+
+/// Like `serve` but with a precomputed placement (the adaptive scheduler
+/// reuses this to run under migrated layouts).
+#[allow(clippy::too_many_arguments)]
+pub fn serve_with_assignment(
+    g: &Graph,
+    spec: &DatasetSpec,
+    cluster: &Cluster,
+    opts: &ServeOpts,
+    assignment: &[u32],
+    payload: &[f32],
+    dims: usize,
+    engine: &mut Engine,
+) -> Result<ServingReport, EngineError> {
+    let n_fogs = cluster.len();
+    let mut report = ServingReport::default();
+
+    // ---- OOM check (Fig. 18) ----------------------------------------------
+    let mut fog_vertices = vec![0usize; n_fogs];
+    for &a in assignment {
+        fog_vertices[a as usize] += 1;
+    }
+    let k_layers = reference::model_layers(&opts.model);
+    for (j, node) in cluster.nodes.iter().enumerate() {
+        if fog_vertices[j] == 0 {
+            continue;
+        }
+        // halo-augmented estimate: partitions see ~1.4x their vertices
+        let v_est = (fog_vertices[j] as f64 * 1.4) as usize;
+        let e_est = (g.num_edges() as f64 * fog_vertices[j] as f64
+            / g.num_vertices() as f64
+            * 1.3) as usize;
+        let fp = partition_footprint_bytes(v_est, e_est, dims,
+                                           reference::HIDDEN);
+        if fp > node.serving_memory_bytes() {
+            report.oom = true;
+            report.per_fog_vertices = fog_vertices;
+            return Ok(report);
+        }
+    }
+
+    // ---- collection ---------------------------------------------------------
+    let coll = collection::collect(g, payload, dims, assignment, cluster,
+                                   &opts.codec, opts.devices, opts.wan);
+    report.collection_s =
+        coll.per_fog_s.iter().cloned().fold(0f64, f64::max);
+    report.per_fog_collection_s = coll.per_fog_s.clone();
+    report.unpack_s = coll.unpack_s;
+    report.wire_bytes = coll.wire_bytes;
+    report.raw_bytes = coll.raw_bytes;
+
+    // ---- normalization for temporal models ---------------------------------
+    let mut features = coll.features;
+    if opts.model == "astgcn" {
+        normalize_windows(&mut features, dims, spec, engine);
+    }
+
+    // ---- distributed BSP execution ------------------------------------------
+    let bsp = exec::run_bsp(g, &features, dims, assignment, n_fogs,
+                            &opts.model, spec.name, spec.classes, engine)?;
+    // scale per-fog host times by node capability; barrier per layer
+    let mut exec_total = 0f64;
+    let mut per_fog_exec = vec![0f64; n_fogs];
+    for layer_times in &bsp.layer_host_seconds {
+        let mut layer_max = 0f64;
+        for (j, &host) in layer_times.iter().enumerate() {
+            let scaled = cluster.nodes[j].scale_time(host);
+            per_fog_exec[j] += scaled;
+            layer_max = layer_max.max(scaled);
+        }
+        exec_total += layer_max;
+    }
+    report.execution_s = exec_total;
+    report.per_fog_exec_s = per_fog_exec;
+    report.per_fog_vertices = bsp.fog_vertices.clone();
+
+    // sync cost δ per layer boundary: transfers run pairwise-parallel
+    // over the fog LAN, so the bottleneck is the max per-fog outgoing
+    // payload (skip when single fog)
+    if n_fogs > 1 {
+        for &bytes in &bsp.sync_max_out {
+            report.sync_s += net::transfer_time_s(
+                bytes,
+                cluster.net.interfog_mbps,
+                cluster.net.interfog_rtt_s,
+            );
+        }
+    }
+    report.out_dim = bsp.out_dim;
+    if opts.keep_outputs {
+        let mut outputs = bsp.outputs;
+        if opts.model == "astgcn" {
+            // the model predicts NORMALIZED flow; de-normalize with the
+            // training constants (channel 0 = flow) for downstream metrics
+            let bundle = engine.weights("astgcn", spec.name, dims, 0);
+            if bundle.contains("norm_mean") {
+                let mean = bundle.get("norm_mean").unwrap().f32_data[0];
+                let std = bundle.get("norm_std").unwrap().f32_data[0];
+                for x in outputs.iter_mut() {
+                    *x = *x * std + mean;
+                }
+            }
+        }
+        report.outputs = Some(outputs);
+    }
+    report.finalize();
+    let _ = k_layers;
+    Ok(report)
+}
+
+/// Standardize a PeMS window with the training normalization constants
+/// (stored alongside the weights; falls back to batch statistics).
+fn normalize_windows(features: &mut [f32], dims: usize,
+                     spec: &DatasetSpec, engine: &mut Engine) {
+    let w = spec.window;
+    let f = spec.feature_dim;
+    debug_assert_eq!(dims, f * w);
+    let bundle = engine.weights("astgcn", spec.name, dims, 0);
+    let (mean, std): (Vec<f32>, Vec<f32>) = if bundle.contains("norm_mean") {
+        (
+            bundle.get("norm_mean").unwrap().f32_data.clone(),
+            bundle.get("norm_std").unwrap().f32_data.clone(),
+        )
+    } else {
+        // batch stats fallback (untrained runs)
+        let nv = features.len() / dims;
+        let mut mean = vec![0f64; f];
+        for v in 0..nv {
+            for c in 0..f {
+                for k in 0..w {
+                    mean[c] += features[v * dims + c * w + k] as f64;
+                }
+            }
+        }
+        for m in mean.iter_mut() {
+            *m /= (nv * w) as f64;
+        }
+        let mut var = vec![0f64; f];
+        for v in 0..nv {
+            for c in 0..f {
+                for k in 0..w {
+                    let d = features[v * dims + c * w + k] as f64 - mean[c];
+                    var[c] += d * d;
+                }
+            }
+        }
+        (
+            mean.iter().map(|&m| m as f32).collect(),
+            var.iter()
+                .map(|&v| ((v / 1f64.max(features.len() as f64 / f as f64))
+                    .sqrt() as f32)
+                    .max(1e-6))
+                .collect(),
+        )
+    };
+    let nv = features.len() / dims;
+    for v in 0..nv {
+        for c in 0..f {
+            for k in 0..w {
+                let x = &mut features[v * dims + c * w + k];
+                *x = (*x - mean[c]) / std[c].max(1e-6);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::datasets;
+    use crate::net::NetKind;
+    use crate::runtime::EngineKind;
+
+    fn tiny_spec() -> DatasetSpec {
+        DatasetSpec {
+            name: "tiny",
+            vertices: 400,
+            edges: 2000,
+            feature_dim: 16,
+            classes: 3,
+            duration: 1,
+            window: 1,
+            seed: 1,
+        }
+    }
+
+    fn tiny_graph() -> Graph {
+        let (mut g, _) =
+            crate::graph::generate::sbm(400, 2000, 8, 0.85, 3);
+        let mut rng = crate::util::rng::Rng::new(5);
+        g.feature_dim = 16;
+        g.features = (0..400 * 16)
+            .map(|_| if rng.bool(0.15) { 1.0 } else { 0.0 })
+            .collect();
+        g
+    }
+
+    fn engine() -> Engine {
+        let dir = std::env::temp_dir().join("pipeline_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        Engine::new(EngineKind::Reference, &dir).unwrap()
+    }
+
+    fn omegas(n: usize) -> Vec<PerfModel> {
+        vec![PerfModel::uncalibrated(); n]
+    }
+
+    #[test]
+    fn fograph_beats_cloud_and_strawman_fog() {
+        let g = tiny_graph();
+        let spec = tiny_spec();
+        let mut eng = engine();
+
+        let cloud_cluster = Cluster::cloud(NetKind::Cell4G);
+        let cloud = serve(
+            &g, &spec, &cloud_cluster,
+            &ServeOpts {
+                wan: true,
+                ..ServeOpts::new("gcn", Placement::SingleNode(0),
+                                 Codec::None)
+            },
+            &omegas(1), &mut eng,
+        ).unwrap();
+
+        let fog_cluster = Cluster::testbed(NetKind::Cell4G);
+        let strawman = serve(
+            &g, &spec, &fog_cluster,
+            &ServeOpts::new("gcn", Placement::MetisRandom(7), Codec::None),
+            &omegas(6), &mut eng,
+        ).unwrap();
+
+        let fograph = serve(
+            &g, &spec, &fog_cluster,
+            &ServeOpts::new("gcn", Placement::Iep,
+                            ServeOpts::co_codec(&g)),
+            &omegas(6), &mut eng,
+        ).unwrap();
+
+        assert!(
+            fograph.total_s < strawman.total_s,
+            "fograph {:.4} !< strawman {:.4}",
+            fograph.total_s, strawman.total_s
+        );
+        assert!(
+            fograph.total_s < cloud.total_s,
+            "fograph {:.4} !< cloud {:.4}",
+            fograph.total_s, cloud.total_s
+        );
+        assert!(fograph.throughput > cloud.throughput);
+        // cloud is dominated by communication (>90% per §II-C)
+        assert!(cloud.comm_fraction() > 0.9,
+                "cloud comm fraction {}", cloud.comm_fraction());
+    }
+
+    #[test]
+    fn outputs_identical_across_placements_without_codec() {
+        let g = tiny_graph();
+        let spec = tiny_spec();
+        let mut eng = engine();
+        let cluster = Cluster::testbed(NetKind::Wifi);
+        let mut opts = ServeOpts::new("gcn", Placement::SingleNode(0),
+                                      Codec::None);
+        opts.keep_outputs = true;
+        let single = serve(&g, &spec, &Cluster::cloud(NetKind::Wifi),
+                           &opts, &omegas(1), &mut eng).unwrap();
+        let mut opts2 = ServeOpts::new("gcn", Placement::Iep, Codec::None);
+        opts2.keep_outputs = true;
+        let multi = serve(&g, &spec, &cluster, &opts2, &omegas(6),
+                          &mut eng).unwrap();
+        let a = single.outputs.unwrap();
+        let b = multi.outputs.unwrap();
+        let err = a.iter().zip(&b).map(|(x, y)| (x - y).abs())
+            .fold(0f32, f32::max);
+        assert!(err < 2e-4, "placement changed outputs by {err}");
+    }
+
+    #[test]
+    fn pems_window_payload_shape() {
+        let g = datasets::generate("pems");
+        let spec = datasets::PEMS;
+        let (payload, dims) = query_payload(&g, &spec, 100);
+        assert_eq!(dims, 36);
+        assert_eq!(payload.len(), 307 * 36);
+        // window slice matches the raw series
+        let t = g.duration;
+        assert_eq!(payload[0], g.features[100]); // v0, c0, k0
+        assert_eq!(payload[36 + 12], g.features[3 * t + t + 100]);
+        // ^ v1 (offset 36), channel 1 (offset 12 in window), k0
+    }
+
+    #[test]
+    fn oom_reported_for_gpu_single_fog_on_big_graph() {
+        // synthetic large spec: don't build the real rmat100k in tests
+        let (mut g, _) = crate::graph::generate::sbm(2000, 10_000, 4, 0.9, 2);
+        g.feature_dim = 32;
+        g.features = vec![0.0; 2000 * 32];
+        let spec = DatasetSpec {
+            name: "tiny100k",
+            vertices: 2000,
+            edges: 10_000,
+            feature_dim: 32,
+            classes: 8,
+            duration: 1,
+            window: 1,
+            seed: 2,
+        };
+        let mut eng = engine();
+        let mut cluster = Cluster::uniform_b(1, NetKind::Wifi).with_gpus();
+        // shrink GPU memory so the test graph overflows it
+        cluster.nodes[0].gpu = Some(crate::fog::GpuSpec {
+            multiplier: 0.22,
+            memory_bytes: 1 << 20,
+        });
+        let r = serve(&g, &spec, &cluster,
+                      &ServeOpts::new("gcn", Placement::SingleNode(0),
+                                      Codec::None),
+                      &omegas(1), &mut eng).unwrap();
+        assert!(r.oom);
+    }
+}

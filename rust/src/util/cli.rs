@@ -1,0 +1,101 @@
+//! Tiny CLI argument substrate (no clap offline): subcommand + `--key value`
+//! flags + `--switch` booleans + positionals.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw argv (excluding program name). `known_switches` lists
+    /// boolean flags that take no value.
+    pub fn parse(argv: &[String], known_switches: &[&str]) -> Args {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if known_switches.contains(&name) {
+                    out.switches.push(name.to_string());
+                } else if i + 1 < argv.len()
+                    && !argv[i + 1].starts_with("--")
+                {
+                    out.flags.insert(name.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.switches.push(name.to_string());
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        out
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed_args() {
+        let a = Args::parse(
+            &v(&["exp", "fig11", "--repeats", "5", "--verbose",
+                 "--out=results.md"]),
+            &["verbose"],
+        );
+        assert_eq!(a.positional, vec!["exp", "fig11"]);
+        assert_eq!(a.get("repeats"), Some("5"));
+        assert_eq!(a.get("out"), Some("results.md"));
+        assert!(a.has("verbose"));
+        assert_eq!(a.get_usize("repeats", 1), 5);
+        assert_eq!(a.get_usize("missing", 9), 9);
+    }
+
+    #[test]
+    fn trailing_flag_without_value_is_switch() {
+        let a = Args::parse(&v(&["--gpu"]), &[]);
+        assert!(a.has("gpu"));
+    }
+
+    #[test]
+    fn equals_form_always_has_value() {
+        let a = Args::parse(&v(&["--x=--weird"]), &[]);
+        assert_eq!(a.get("x"), Some("--weird"));
+    }
+}

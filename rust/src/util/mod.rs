@@ -1,0 +1,11 @@
+//! Foundation substrates: PRNG, JSON, statistics, CLI parsing, a mini
+//! property-test harness, and a bench timer. These stand in for the crates
+//! (`rand`, `serde`, `clap`, `proptest`, `criterion`) the offline registry
+//! does not provide — see DESIGN.md's substitution log.
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod testkit;
+pub mod timer;

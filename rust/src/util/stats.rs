@@ -1,0 +1,204 @@
+//! Small statistics substrate: summaries, percentiles, linear regression
+//! (the profiler's latency model, Eq. (3) of the paper), and CDFs
+//! (Theorem 2's compression-ratio formula).
+
+/// Mean of a slice (0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64
+}
+
+pub fn stddev(xs: &[f64]) -> f64 {
+    variance(xs).sqrt()
+}
+
+/// Linear-interpolated percentile, `q` in [0, 100].
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = q / 100.0 * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (v[hi] - v[lo]) * (pos - lo as f64)
+    }
+}
+
+/// Multivariate ordinary least squares: y ≈ X·beta + eps.
+/// Returns (beta [d], intercept). Solved by normal equations with
+/// Gaussian elimination — dimensions here are tiny (d = 2 for the
+/// cardinality model ⟨|V|, |N_V|⟩).
+pub fn linreg(xs: &[Vec<f64>], ys: &[f64]) -> (Vec<f64>, f64) {
+    assert_eq!(xs.len(), ys.len());
+    assert!(!xs.is_empty());
+    let d = xs[0].len();
+    let n = xs.len();
+    // augmented design matrix with intercept column
+    let dd = d + 1;
+    let mut ata = vec![vec![0.0f64; dd]; dd];
+    let mut aty = vec![0.0f64; dd];
+    for (row, &y) in xs.iter().zip(ys) {
+        let mut aug = row.clone();
+        aug.push(1.0);
+        for i in 0..dd {
+            aty[i] += aug[i] * y;
+            for j in 0..dd {
+                ata[i][j] += aug[i] * aug[j];
+            }
+        }
+    }
+    // ridge epsilon for numerical safety
+    for (i, row) in ata.iter_mut().enumerate() {
+        row[i] += 1e-9 * n as f64;
+    }
+    let beta = solve(ata, aty);
+    let intercept = beta[d];
+    (beta[..d].to_vec(), intercept)
+}
+
+/// Gaussian elimination with partial pivoting.
+fn solve(mut a: Vec<Vec<f64>>, mut b: Vec<f64>) -> Vec<f64> {
+    let n = b.len();
+    for col in 0..n {
+        let piv = (col..n)
+            .max_by(|&i, &j| a[i][col].abs().partial_cmp(&a[j][col].abs()).unwrap())
+            .unwrap();
+        a.swap(col, piv);
+        b.swap(col, piv);
+        let pv = a[col][col];
+        if pv.abs() < 1e-30 {
+            continue;
+        }
+        for row in col + 1..n {
+            let f = a[row][col] / pv;
+            for k in col..n {
+                a[row][k] -= f * a[col][k];
+            }
+            b[row] -= f * b[col];
+        }
+    }
+    let mut x = vec![0.0; n];
+    for row in (0..n).rev() {
+        let mut acc = b[row];
+        for k in row + 1..n {
+            acc -= a[row][k] * x[k];
+        }
+        x[row] = if a[row][row].abs() < 1e-30 { 0.0 } else { acc / a[row][row] };
+    }
+    x
+}
+
+/// Empirical CDF over integer-valued samples (e.g. vertex degrees):
+/// `cdf.at(d)` = P(X <= d).  Used by Theorem 2's compression-ratio check.
+pub struct EmpiricalCdf {
+    sorted: Vec<u64>,
+}
+
+impl EmpiricalCdf {
+    pub fn new(mut samples: Vec<u64>) -> Self {
+        samples.sort_unstable();
+        Self { sorted: samples }
+    }
+
+    pub fn at(&self, x: u64) -> f64 {
+        if self.sorted.is_empty() {
+            return 0.0;
+        }
+        let idx = self.sorted.partition_point(|&s| s <= x);
+        idx as f64 / self.sorted.len() as f64
+    }
+
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.sorted.is_empty() {
+            return 0;
+        }
+        let idx = ((q * self.sorted.len() as f64) as usize)
+            .min(self.sorted.len() - 1);
+        self.sorted[idx]
+    }
+
+    pub fn max(&self) -> u64 {
+        self.sorted.last().copied().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_stddev() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((stddev(&xs) - 2.138089935).abs() < 1e-6);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn linreg_recovers_plane() {
+        // y = 3 x0 - 2 x1 + 5
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for i in 0..20 {
+            for j in 0..20 {
+                xs.push(vec![i as f64, j as f64]);
+                ys.push(3.0 * i as f64 - 2.0 * j as f64 + 5.0);
+            }
+        }
+        let (beta, c) = linreg(&xs, &ys);
+        assert!((beta[0] - 3.0).abs() < 1e-6);
+        assert!((beta[1] + 2.0).abs() < 1e-6);
+        assert!((c - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn linreg_with_noise_is_close() {
+        let mut rng = crate::util::rng::Rng::new(3);
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for _ in 0..500 {
+            let a = rng.range_f64(0.0, 100.0);
+            let b = rng.range_f64(0.0, 50.0);
+            xs.push(vec![a, b]);
+            ys.push(0.7 * a + 1.3 * b + 10.0 + rng.normal());
+        }
+        let (beta, c) = linreg(&xs, &ys);
+        assert!((beta[0] - 0.7).abs() < 0.01);
+        assert!((beta[1] - 1.3).abs() < 0.01);
+        assert!((c - 10.0).abs() < 0.5);
+    }
+
+    #[test]
+    fn cdf_basics() {
+        let cdf = EmpiricalCdf::new(vec![1, 1, 2, 3, 5, 8]);
+        assert_eq!(cdf.at(0), 0.0);
+        assert!((cdf.at(1) - 2.0 / 6.0).abs() < 1e-12);
+        assert!((cdf.at(4) - 4.0 / 6.0).abs() < 1e-12);
+        assert_eq!(cdf.at(8), 1.0);
+        assert_eq!(cdf.max(), 8);
+        assert_eq!(cdf.quantile(0.5), 3);
+    }
+}

@@ -1,0 +1,103 @@
+//! Mini property-testing substrate (no proptest offline).
+//!
+//! `forall(seed, cases, gen, prop)` runs `prop` over `cases` generated
+//! inputs; on failure it performs a bounded greedy shrink via the
+//! generator's `Shrink` hook and panics with the minimal counterexample's
+//! debug representation plus the reproducing seed.
+
+use crate::util::rng::Rng;
+
+/// Run `prop` on `cases` inputs produced by `gen`. On failure, retries the
+/// input's shrinks (produced by `shrink`) to find a smaller counterexample.
+pub fn forall_shrink<T, G, S, P>(
+    seed: u64,
+    cases: usize,
+    gen: G,
+    shrink: S,
+    prop: P,
+) where
+    T: std::fmt::Debug + Clone,
+    G: Fn(&mut Rng) -> T,
+    S: Fn(&T) -> Vec<T>,
+    P: Fn(&T) -> bool,
+{
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if prop(&input) {
+            continue;
+        }
+        // shrink loop (greedy, bounded)
+        let mut cur = input;
+        'outer: for _ in 0..200 {
+            for cand in shrink(&cur) {
+                if !prop(&cand) {
+                    cur = cand;
+                    continue 'outer;
+                }
+            }
+            break;
+        }
+        panic!(
+            "property failed (seed={seed}, case={case});\n\
+             minimal counterexample: {cur:#?}"
+        );
+    }
+}
+
+/// `forall` without shrinking.
+pub fn forall<T, G, P>(seed: u64, cases: usize, gen: G, prop: P)
+where
+    T: std::fmt::Debug + Clone,
+    G: Fn(&mut Rng) -> T,
+    P: Fn(&T) -> bool,
+{
+    forall_shrink(seed, cases, gen, |_| Vec::new(), prop);
+}
+
+/// Common shrinker: all ways of halving/removing elements of a Vec.
+pub fn shrink_vec<T: Clone>(xs: &Vec<T>) -> Vec<Vec<T>> {
+    let mut out = Vec::new();
+    if xs.is_empty() {
+        return out;
+    }
+    out.push(xs[..xs.len() / 2].to_vec());
+    out.push(xs[xs.len() / 2..].to_vec());
+    if xs.len() <= 8 {
+        for i in 0..xs.len() {
+            let mut c = xs.clone();
+            c.remove(i);
+            out.push(c);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_is_silent() {
+        forall(1, 200, |r| r.below(100), |&x| x < 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics() {
+        forall(2, 200, |r| r.below(100), |&x| x < 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "minimal counterexample")]
+    fn shrinking_reaches_small_case() {
+        // property: all vecs have sum < 10; generator makes big vecs.
+        forall_shrink(
+            3,
+            50,
+            |r| (0..20).map(|_| r.below(5)).collect::<Vec<u64>>(),
+            shrink_vec,
+            |xs| xs.iter().sum::<u64>() < 10,
+        );
+    }
+}

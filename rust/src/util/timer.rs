@@ -1,0 +1,118 @@
+//! Measurement substrate for the custom bench harness (no criterion
+//! offline): warmup + repeated timing with mean/p50/p95 summaries.
+
+use std::time::Instant;
+
+use crate::util::stats;
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub stddev_ns: f64,
+}
+
+impl BenchResult {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+
+    pub fn throughput_per_s(&self) -> f64 {
+        1e9 / self.mean_ns
+    }
+}
+
+impl std::fmt::Display for BenchResult {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<44} {:>10} iters  mean {:>12}  p50 {:>12}  p95 {:>12}",
+            self.name,
+            self.iters,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p95_ns),
+        )
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Time `f` adaptively: warm up, then run until `min_time_s` of samples or
+/// `max_iters`, whichever first. Returns summary statistics.
+pub fn bench<F: FnMut()>(name: &str, min_time_s: f64, max_iters: usize,
+                         mut f: F) -> BenchResult {
+    // warmup
+    let warm_start = Instant::now();
+    let mut warm_iters = 0usize;
+    while warm_start.elapsed().as_secs_f64() < min_time_s * 0.2
+        && warm_iters < 3
+    {
+        f();
+        warm_iters += 1;
+    }
+    let mut samples_ns: Vec<f64> = Vec::new();
+    let start = Instant::now();
+    while start.elapsed().as_secs_f64() < min_time_s
+        && samples_ns.len() < max_iters
+    {
+        let t = Instant::now();
+        f();
+        samples_ns.push(t.elapsed().as_nanos() as f64);
+    }
+    if samples_ns.is_empty() {
+        let t = Instant::now();
+        f();
+        samples_ns.push(t.elapsed().as_nanos() as f64);
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters: samples_ns.len(),
+        mean_ns: stats::mean(&samples_ns),
+        p50_ns: stats::percentile(&samples_ns, 50.0),
+        p95_ns: stats::percentile(&samples_ns, 95.0),
+        stddev_ns: stats::stddev(&samples_ns),
+    }
+}
+
+/// Prevent the optimizer from discarding a value (stable-rust black_box).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_numbers() {
+        let r = bench("spin", 0.05, 10_000, || {
+            black_box((0..100).sum::<u64>());
+        });
+        assert!(r.iters >= 1);
+        assert!(r.mean_ns > 0.0);
+        assert!(r.p95_ns >= r.p50_ns * 0.5);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(12.0).ends_with("ns"));
+        assert!(fmt_ns(12_000.0).ends_with("µs"));
+        assert!(fmt_ns(12_000_000.0).ends_with("ms"));
+        assert!(fmt_ns(2_000_000_000.0).ends_with("s"));
+    }
+}

@@ -1,0 +1,321 @@
+//! Property-based invariant suite (via util::testkit): randomized sweeps
+//! over the substrates' core guarantees.
+
+use std::path::Path;
+
+use fograph::compress::{self, Codec, DaqConfig, IntervalScheme,
+                        DEFAULT_BITS};
+use fograph::exec;
+use fograph::graph::{generate, subgraph, Graph};
+use fograph::partition::{self, wgraph, MultilevelParams};
+use fograph::placement::lbap;
+use fograph::profile::PerfModel;
+use fograph::runtime::{Engine, EngineKind};
+use fograph::scheduler::diffusion;
+use fograph::util::json::Json;
+use fograph::util::rng::Rng;
+use fograph::util::testkit::forall;
+
+fn engine() -> Engine {
+    Engine::new(EngineKind::Reference, Path::new("artifacts"))
+        .or_else(|_| {
+            Engine::new(EngineKind::Reference,
+                        &std::env::temp_dir().join("props"))
+        })
+        .unwrap()
+}
+
+/// Multilevel partitions are balanced and beat random cuts on community
+/// graphs of any shape.
+#[test]
+fn prop_partition_balance_and_cut() {
+    forall(
+        0xA11CE,
+        8,
+        |r| {
+            let nv = 300 + r.usize_below(900);
+            let ne = nv * (2 + r.usize_below(4));
+            let k = 2 + r.usize_below(5);
+            let comms = 4 + r.usize_below(8);
+            (nv, ne, k, comms, r.next_u64())
+        },
+        |&(nv, ne, k, comms, seed)| {
+            let (g, _) = generate::sbm(nv, ne, comms, 0.9, seed);
+            let res = partition::partition(&g, k,
+                                           &MultilevelParams::default());
+            let ideal = nv as f64 / k as f64;
+            let balanced = res
+                .part_weights
+                .iter()
+                .all(|&w| (w as f64) <= ideal * 1.25 + 2.0);
+            let wg = wgraph::WGraph::from_graph(&g);
+            let mut rng = Rng::new(seed ^ 1);
+            let rand_assign: Vec<u32> =
+                (0..nv).map(|_| rng.below(k as u64) as u32).collect();
+            let rand_cut = wgraph::edge_cut(&wg, &rand_assign);
+            balanced && res.edge_cut <= rand_cut
+        },
+    );
+}
+
+/// LBAP's bottleneck is never worse than the Hungarian (min-sum)
+/// solution's bottleneck, and the mapping is always a permutation.
+#[test]
+fn prop_lbap_dominates_min_sum_on_bottleneck() {
+    forall(
+        0xB0B,
+        60,
+        |r| {
+            let n = 2 + r.usize_below(7);
+            (0..n)
+                .map(|_| (0..n).map(|_| r.below(1000) as f64).collect())
+                .collect::<Vec<Vec<f64>>>()
+        },
+        |w| {
+            let n = w.len();
+            let (assign, bn) = lbap::solve(w);
+            let mut sorted = assign.clone();
+            sorted.sort_unstable();
+            let perm_ok = sorted == (0..n).collect::<Vec<_>>();
+            let (hung, _) =
+                fograph::placement::hungarian::min_cost_assignment(w);
+            let hung_bn = lbap::bottleneck(w, &hung);
+            perm_ok && bn <= hung_bn + 1e-9
+        },
+    );
+}
+
+/// Pack→unpack round-trips within the quantization error bound for every
+/// codec, on arbitrary feature matrices and degree profiles.
+#[test]
+fn prop_codec_roundtrip_error_bounds() {
+    forall(
+        0xC0DEC,
+        20,
+        |r| {
+            let n = 1 + r.usize_below(400);
+            let dims = 1 + r.usize_below(64);
+            let spread = r.range_f64(0.5, 100.0);
+            (n, dims, spread, r.next_u64())
+        },
+        |&(n, dims, spread, seed)| {
+            let mut rng = Rng::new(seed);
+            let rows: Vec<Vec<f32>> = (0..n)
+                .map(|_| {
+                    (0..dims)
+                        .map(|_| rng.normal_f32(0.0, spread as f32))
+                        .collect()
+                })
+                .collect();
+            let degrees: Vec<u64> =
+                (0..n).map(|_| rng.below(300)).collect();
+            let d32: Vec<u32> = degrees.iter().map(|&d| d as u32).collect();
+            let cfg = DaqConfig::from_degrees(&d32,
+                                              IntervalScheme::EqualMass,
+                                              DEFAULT_BITS);
+            for codec in [
+                Codec::Daq(cfg),
+                Codec::Uniform(8),
+                Codec::Uniform(16),
+                Codec::Lz4Only,
+            ] {
+                let refs: Vec<&[f32]> =
+                    rows.iter().map(|r| r.as_slice()).collect();
+                let p = compress::pack(&refs, &degrees, &codec);
+                let mut out = Vec::new();
+                if compress::unpack(&p, &mut out).is_err() {
+                    return false;
+                }
+                // worst quantizer: 8 bits over the row's range
+                for (orig, back) in rows.iter().zip(&out) {
+                    let lo = orig.iter().cloned().fold(f32::MAX, f32::min);
+                    let hi = orig.iter().cloned().fold(f32::MIN, f32::max);
+                    let bound = ((hi - lo) / 255.0).max(1e-5) * 1.01;
+                    for (a, b) in orig.iter().zip(back) {
+                        if (a - b).abs() > bound {
+                            return false;
+                        }
+                    }
+                }
+            }
+            true
+        },
+    );
+}
+
+/// Distributed BSP output equals the single-fog output for arbitrary
+/// graphs, assignments and models (the system's core correctness claim).
+#[test]
+fn prop_bsp_placement_invariance() {
+    let mut eng = engine();
+    let mut failures = Vec::new();
+    let mut rng = Rng::new(0xD157);
+    for case in 0..6 {
+        let nv = 150 + rng.usize_below(300);
+        let ne = nv * 3;
+        let comms = 3 + rng.usize_below(5);
+        let k = 2 + rng.usize_below(4);
+        let (mut g, _) = generate::sbm(nv, ne, comms, 0.85, rng.next_u64());
+        let f_in = 8;
+        g.feature_dim = f_in;
+        g.features =
+            (0..nv * f_in).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let model = ["gcn", "sage", "gat"][case % 3];
+        let assignment: Vec<u32> =
+            (0..nv).map(|_| rng.below(k as u64) as u32).collect();
+        let single = exec::run_bsp(&g, &g.features, f_in, &vec![0; nv], 1,
+                                   model, "prop", 3, &mut eng)
+            .unwrap();
+        let multi = exec::run_bsp(&g, &g.features, f_in, &assignment,
+                                  k, model, "prop", 3, &mut eng)
+            .unwrap();
+        let err = single
+            .outputs
+            .iter()
+            .zip(&multi.outputs)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0f32, f32::max);
+        if err > 5e-4 {
+            failures.push((case, model, k, err));
+        }
+    }
+    assert!(failures.is_empty(), "BSP invariance violated: {failures:?}");
+}
+
+/// Halo extraction partitions every directed edge exactly once (by
+/// destination), for arbitrary assignments.
+#[test]
+fn prop_halo_extraction_covers_all_edges() {
+    forall(
+        0xE49E,
+        10,
+        |r| {
+            let nv = 100 + r.usize_below(500);
+            (nv, nv * (1 + r.usize_below(5)), 1 + r.usize_below(6),
+             r.next_u64())
+        },
+        |&(nv, ne, k, seed)| {
+            let (g, _) = generate::sbm(nv, ne, 6, 0.8, seed);
+            let mut rng = Rng::new(seed ^ 3);
+            let assignment: Vec<u32> =
+                (0..nv).map(|_| rng.below(k as u64) as u32).collect();
+            let (subs, plan) = subgraph::extract(&g, &assignment, k);
+            let total: usize = subs.iter().map(|s| s.num_edges()).sum();
+            let dst_local =
+                subs.iter().all(|s| {
+                    s.dst.iter().all(|&d| (d as usize) < s.n_local)
+                });
+            // every halo vertex is covered by exactly one transfer
+            let halo_total: usize = subs.iter().map(|s| s.n_halo()).sum();
+            total == g.num_edges() && dst_local
+                && plan.total_vertices() == halo_total
+        },
+    );
+}
+
+/// Diffusion never increases the estimated bottleneck.
+#[test]
+fn prop_diffusion_never_hurts_bottleneck() {
+    forall(
+        0xD1FF,
+        8,
+        |r| (300 + r.usize_below(600), 2 + r.usize_below(4), r.next_u64()),
+        |&(nv, k, seed)| {
+            let (g, _) = generate::sbm(nv, nv * 4, 6, 0.9, seed);
+            let mut rng = Rng::new(seed ^ 9);
+            let mut assignment: Vec<u32> =
+                (0..nv).map(|_| rng.below(k as u64) as u32).collect();
+            let omegas: Vec<PerfModel> = (0..k)
+                .map(|j| {
+                    let m = 1.0 + rng.f64() * 3.0 * (j == 0) as u8 as f64;
+                    PerfModel {
+                        beta_v: 2e-6 * m,
+                        beta_n: 3e-7 * m,
+                        intercept: 1e-3 * m,
+                        r2: 1.0,
+                    }
+                })
+                .collect();
+            let before = diffusion::estimate_times(&g, &assignment, k,
+                                                   &omegas);
+            let max_before =
+                before.iter().cloned().fold(0f64, f64::max);
+            diffusion::diffuse(&g, &mut assignment, &omegas, k, 1.2);
+            let after = diffusion::estimate_times(&g, &assignment, k,
+                                                  &omegas);
+            let max_after = after.iter().cloned().fold(0f64, f64::max);
+            max_after <= max_before * 1.001 + 1e-9
+        },
+    );
+}
+
+/// JSON round-trips arbitrary (generated) documents.
+#[test]
+fn prop_json_roundtrip() {
+    fn gen_value(r: &mut Rng, depth: usize) -> Json {
+        match if depth > 2 { r.below(4) } else { r.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(r.bool(0.5)),
+            2 => Json::Num((r.below(1_000_000) as f64) / 8.0),
+            3 => {
+                let s: String = (0..r.usize_below(12))
+                    .map(|_| {
+                        char::from_u32(32 + r.below(90) as u32).unwrap()
+                    })
+                    .collect();
+                Json::Str(s)
+            }
+            4 => Json::Arr(
+                (0..r.usize_below(5))
+                    .map(|_| gen_value(r, depth + 1))
+                    .collect(),
+            ),
+            _ => Json::Obj(
+                (0..r.usize_below(5))
+                    .map(|i| (format!("k{i}"), gen_value(r, depth + 1)))
+                    .collect(),
+            ),
+        }
+    }
+    forall(
+        0x1503,
+        200,
+        |r| gen_value(r, 0),
+        |v| Json::parse(&v.to_string()).map(|p| p == *v).unwrap_or(false),
+    );
+}
+
+/// Theorem 2's analytic ratio matches the measured quantized payload for
+/// arbitrary degree distributions.
+#[test]
+fn prop_theorem2_matches_measurement() {
+    forall(
+        0x7E02,
+        15,
+        |r| {
+            let n = 200 + r.usize_below(2000);
+            let alpha = r.range_f64(0.4, 1.4);
+            (n, alpha, r.next_u64())
+        },
+        |&(n, alpha, seed)| {
+            let mut rng = Rng::new(seed);
+            let degrees: Vec<u32> = (0..n)
+                .map(|_| {
+                    let u = rng.f64();
+                    ((1.0 / (1.0 - u)).powf(alpha) as u32).min(2000)
+                })
+                .collect();
+            let cfg = DaqConfig::from_degrees(&degrees,
+                                              IntervalScheme::EqualMass,
+                                              DEFAULT_BITS);
+            let predicted = cfg.theorem2_ratio(&degrees, 64.0);
+            let actual: f64 = degrees
+                .iter()
+                .map(|&d| cfg.bits_for_degree(d as u64) as f64)
+                .sum::<f64>()
+                / degrees.len() as f64
+                / 64.0;
+            (predicted - actual).abs() < 0.03
+        },
+    );
+}

@@ -1,0 +1,158 @@
+//! End-to-end serving integration tests over generated (small) twins with
+//! the reference engine — exercise the full pipeline surface without
+//! requiring `make artifacts`.
+
+use std::path::Path;
+
+use fograph::compress::Codec;
+use fograph::fog::Cluster;
+use fograph::graph::{generate, DatasetSpec, Graph};
+use fograph::net::NetKind;
+use fograph::profile::PerfModel;
+use fograph::runtime::{Engine, EngineKind};
+use fograph::serving::{serve, Placement, ServeOpts};
+use fograph::util::rng::Rng;
+
+fn small_twin() -> (Graph, DatasetSpec) {
+    let (mut g, _) = generate::sbm(1500, 9000, 10, 0.85, 21);
+    let mut rng = Rng::new(4);
+    g.feature_dim = 24;
+    g.features = (0..1500 * 24)
+        .map(|_| if rng.bool(0.1) { 1.0 } else { 0.0 })
+        .collect();
+    g.num_classes = 2;
+    g.labels = Some((0..1500).map(|v| (v % 2) as i32).collect());
+    let spec = DatasetSpec {
+        name: "e2e",
+        vertices: 1500,
+        edges: 9000,
+        feature_dim: 24,
+        classes: 2,
+        duration: 1,
+        window: 1,
+        seed: 21,
+    };
+    (g, spec)
+}
+
+fn engine() -> Engine {
+    Engine::new(EngineKind::Reference, Path::new("artifacts"))
+        .or_else(|_| {
+            Engine::new(EngineKind::Reference,
+                        &std::env::temp_dir().join("e2e"))
+        })
+        .unwrap()
+}
+
+/// The paper's headline ordering must hold on every network and model:
+/// fograph < straw-man fog < cloud in latency; reversed in throughput.
+#[test]
+fn headline_ordering_holds_across_nets_and_models() {
+    let (g, spec) = small_twin();
+    let mut eng = engine();
+    for net in NetKind::all() {
+        for model in ["gcn", "sage"] {
+            let cloud = serve(
+                &g, &spec, &Cluster::cloud(net),
+                &ServeOpts {
+                    wan: true,
+                    ..ServeOpts::new(model, Placement::SingleNode(0),
+                                     Codec::None)
+                },
+                &[PerfModel::uncalibrated()],
+                &mut eng,
+            ).unwrap();
+            let testbed = Cluster::testbed(net);
+            let omegas = vec![PerfModel::uncalibrated(); 6];
+            let fog = serve(
+                &g, &spec, &testbed,
+                &ServeOpts::new(model, Placement::MetisRandom(3),
+                                Codec::None),
+                &omegas, &mut eng,
+            ).unwrap();
+            let fograph = serve(
+                &g, &spec, &testbed,
+                &ServeOpts::new(model, Placement::Iep,
+                                ServeOpts::co_codec(&g)),
+                &omegas, &mut eng,
+            ).unwrap();
+            assert!(
+                fograph.total_s < fog.total_s
+                    && fog.total_s < cloud.total_s,
+                "{model}/{:?}: fograph {:.4} fog {:.4} cloud {:.4}",
+                net, fograph.total_s, fog.total_s, cloud.total_s
+            );
+            assert!(fograph.throughput > cloud.throughput);
+        }
+    }
+}
+
+/// DAQ + LZ4 must not perturb predictions: class agreement with the
+/// full-precision pipeline stays near-perfect.
+#[test]
+fn codec_preserves_predictions() {
+    let (g, spec) = small_twin();
+    let mut eng = engine();
+    let testbed = Cluster::testbed(NetKind::Wifi);
+    let omegas = vec![PerfModel::uncalibrated(); 6];
+    let mut full_opts =
+        ServeOpts::new("gcn", Placement::Iep, Codec::None);
+    full_opts.keep_outputs = true;
+    let full = serve(&g, &spec, &testbed, &full_opts, &omegas, &mut eng)
+        .unwrap();
+    let mut daq_opts =
+        ServeOpts::new("gcn", Placement::Iep, ServeOpts::co_codec(&g));
+    daq_opts.keep_outputs = true;
+    let daq = serve(&g, &spec, &testbed, &daq_opts, &omegas, &mut eng)
+        .unwrap();
+    let (a, b) = (full.outputs.unwrap(), daq.outputs.unwrap());
+    let d = full.out_dim;
+    let mut agree = 0;
+    for v in 0..g.num_vertices() {
+        let am = argmax(&a[v * d..(v + 1) * d]);
+        let bm = argmax(&b[v * d..(v + 1) * d]);
+        if am == bm {
+            agree += 1;
+        }
+    }
+    assert!(
+        agree >= g.num_vertices() * 99 / 100,
+        "agreement {agree}/{}",
+        g.num_vertices()
+    );
+    assert!(daq.wire_bytes < full.wire_bytes / 3);
+}
+
+/// Failure injection: a fog node that is enormously slowed must not change
+/// results, only timing; and an empty partition is tolerated.
+#[test]
+fn degraded_cluster_still_serves_correctly() {
+    let (g, spec) = small_twin();
+    let mut eng = engine();
+    let mut cluster = Cluster::testbed(NetKind::Wifi);
+    cluster.nodes[2].background_load = 0.85; // nearly saturated
+    let omegas = vec![PerfModel::uncalibrated(); 6];
+    let mut opts = ServeOpts::new("gcn", Placement::Iep,
+                                  ServeOpts::co_codec(&g));
+    opts.keep_outputs = true;
+    let r = serve(&g, &spec, &cluster, &opts, &omegas, &mut eng).unwrap();
+    assert!(r.outputs.is_some());
+    assert!(r.total_s.is_finite() && r.total_s > 0.0);
+    // degenerate: more fogs than useful partitions still works
+    let tiny_assign: Vec<u32> = vec![0; g.num_vertices()];
+    let (payload, dims) =
+        fograph::serving::pipeline::query_payload(&g, &spec, 0);
+    let r2 = fograph::serving::serve_with_assignment(
+        &g, &spec, &cluster, &opts, &tiny_assign, &payload, dims,
+        &mut eng,
+    ).unwrap();
+    assert!(r2.per_fog_vertices[1..].iter().all(|&v| v == 0));
+}
+
+fn argmax(row: &[f32]) -> usize {
+    row.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap()
+}
