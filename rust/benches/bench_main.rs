@@ -18,7 +18,9 @@ use fograph::partition::{self, MultilevelParams};
 use fograph::placement::{hungarian, lbap};
 use fograph::profile::PerfModel;
 use fograph::runtime::{pad, reference, Engine, EngineKind};
-use fograph::serving::{serve, Placement, ServeOpts};
+use fograph::serving::{mode_setup, serve, Placement, ServeOpts};
+use fograph::traffic::{doc_json, report_json, run_loadtest,
+                       TrafficConfig};
 use fograph::util::rng::Rng;
 use fograph::util::timer::{bench, black_box, BenchResult};
 
@@ -130,7 +132,7 @@ fn main() {
     let assignment: Vec<u32> =
         (0..g.num_vertices()).map(|v| (v % 4) as u32).collect();
     let (subs, _) = subgraph::extract(&g, &assignment, 4);
-    let edges = pad::prep_edges("gcn", &subs[0]);
+    let edges = pad::prep_edges("gcn", &subs[0]).unwrap();
     let h: Vec<f32> = vec![0.5; subs[0].n_total() * 52];
     run("kernel/segment_aggregate_512v", 0.5, &mut || {
         black_box(reference::segment_aggregate(&h, 52, &edges,
@@ -211,7 +213,7 @@ fn main() {
     }
 
     // pems / astgcn (fig13, table5 path)
-    let pems = datasets::generate("pems");
+    let pems = datasets::generate("pems").unwrap();
     let pspec = datasets::PEMS;
     let omegas4 = vec![PerfModel::uncalibrated(); 4];
     let pcluster = Cluster::case_study(NetKind::Cell5G);
@@ -240,6 +242,36 @@ fn main() {
         ));
     });
     assign2.clear();
+
+    // ---- request-level loadtest (also emits BENCH_loadtest.json) -----------
+    let traffic_cfg = TrafficConfig {
+        rps: 150.0,
+        duration_s: 8.0,
+        seed: 0xBE7C,
+        ..Default::default()
+    };
+    let mut loadtest_runs = Vec::new();
+    for mode in ["cloud", "fograph"] {
+        let (cluster, topts) =
+            mode_setup(mode, "gcn", NetKind::Wifi, &g).unwrap();
+        let om = vec![PerfModel::uncalibrated(); cluster.len()];
+        let mut last = None;
+        run(&format!("traffic/loadtest_{mode}_150rps_8s"), 1.0, &mut || {
+            let r = run_loadtest(&g, &spec, &cluster, &topts,
+                                 &traffic_cfg, &om, &mut engine)
+                .unwrap();
+            last = Some(r);
+        });
+        if let Some(r) = last {
+            loadtest_runs.push(report_json(mode, &traffic_cfg, &r));
+        }
+    }
+    if !loadtest_runs.is_empty() {
+        let doc = doc_json("benchsiot", "gcn", "WiFi", loadtest_runs);
+        std::fs::write("BENCH_loadtest.json", format!("{doc}\n"))
+            .expect("write BENCH_loadtest.json");
+        println!("\nwrote BENCH_loadtest.json");
+    }
 
     println!("\n{} benches complete.", results.len());
 }

@@ -10,11 +10,20 @@ const LAST_LITERALS: usize = 5;
 const MF_LIMIT: usize = 12; // matches may not start within the last 12 bytes
 const HASH_LOG: usize = 16;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum Lz4Error {
-    #[error("malformed stream: {0}")]
     Malformed(&'static str),
 }
+
+impl std::fmt::Display for Lz4Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Lz4Error::Malformed(m) => write!(f, "malformed stream: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Lz4Error {}
 
 #[inline]
 fn hash(seq: u32) -> usize {

@@ -111,7 +111,7 @@ pub fn run(
     } else {
         subs.iter()
             .map(|s| crate::runtime::pad::prep_edges(model, s))
-            .collect()
+            .collect::<Result<Vec<_>, _>>()?
     };
     // initial states: local rows from collected features; halo zeroed
     // (filled by the first sync round)

@@ -43,7 +43,8 @@ impl Ctx {
 
     pub fn graph(&mut self, name: &str) -> &Graph {
         if !self.graphs.contains_key(name) {
-            let g = datasets::load_or_generate(&self.data_dir, name);
+            let g = datasets::load_or_generate(&self.data_dir, name)
+                .expect("experiment dataset");
             self.graphs.insert(name.to_string(), g);
         }
         &self.graphs[name]
@@ -114,8 +115,8 @@ impl Ctx {
                     .expect("calibration astgcn");
                 total += out.host_seconds;
             } else {
-                let edges =
-                    crate::runtime::pad::prep_edges(&model_s, sub);
+                let edges = crate::runtime::pad::prep_edges(&model_s, sub)
+                    .expect("calibration model");
                 let mut h = h0;
                 let mut dim = f_in;
                 for layer in 0..num_layers {

@@ -50,7 +50,8 @@ pub fn run(ctx: &mut Ctx) -> String {
         let mut pairs: Vec<(f64, f64)> = Vec::new(); // (actual, predicted)
         for sub in &set {
             let n = sub.n_total();
-            let edges = crate::runtime::pad::prep_edges(model, sub);
+            let edges = crate::runtime::pad::prep_edges(model, sub)
+                .expect("fig14 model");
             // median of 3 measurements: sub-millisecond single-shot
             // wall-clock has ±15% jitter on a busy single core
             let mut meas = Vec::with_capacity(3);

@@ -108,33 +108,47 @@ pub fn spec_by_name(name: &str) -> Option<DatasetSpec> {
     all_specs().into_iter().find(|s| s.name == name)
 }
 
+/// Error for a dataset name outside Table III. Surfaces to the CLI as an
+/// exit-code-2 error instead of a panic.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct UnknownDataset(pub String);
+
+impl std::fmt::Display for UnknownDataset {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "unknown dataset {}", self.0)
+    }
+}
+
+impl std::error::Error for UnknownDataset {}
+
 /// Generate a dataset twin by name.
-pub fn generate(name: &str) -> Graph {
+pub fn generate(name: &str) -> Result<Graph, UnknownDataset> {
     match name {
-        "siot" => gen_siot(),
-        "yelp" => gen_yelp(),
-        "pems" => gen_pems(),
-        n if n.starts_with("rmat") => {
-            let spec = spec_by_name(n).expect("unknown rmat twin");
-            gen_rmat_twin(spec)
-        }
-        other => panic!("unknown dataset {other}"),
+        "siot" => Ok(gen_siot()),
+        "yelp" => Ok(gen_yelp()),
+        "pems" => Ok(gen_pems()),
+        n if n.starts_with("rmat") => match spec_by_name(n) {
+            Some(spec) => Ok(gen_rmat_twin(spec)),
+            None => Err(UnknownDataset(n.to_string())),
+        },
+        other => Err(UnknownDataset(other.to_string())),
     }
 }
 
 /// Load from `dir/<name>.fgr` if present, else generate (and cache).
-pub fn load_or_generate(dir: &Path, name: &str) -> Graph {
+pub fn load_or_generate(dir: &Path, name: &str)
+                        -> Result<Graph, UnknownDataset> {
     let p = dir.join(format!("{name}.fgr"));
     if p.exists() {
         if let Ok(g) = super::io::read_fgr(&p) {
-            return g;
+            return Ok(g);
         }
     }
-    let g = generate(name);
+    let g = generate(name)?;
     if dir.exists() {
         let _ = super::io::write_fgr(&p, &g);
     }
-    g
+    Ok(g)
 }
 
 // ---------------------------------------------------------------- SIoT ----
@@ -444,6 +458,13 @@ mod tests {
             assert_eq!(spec_by_name(s.name).unwrap(), *s);
         }
         assert!(spec_by_name("nope").is_none());
+    }
+
+    #[test]
+    fn unknown_dataset_is_an_error_not_a_panic() {
+        assert!(matches!(generate("nope"), Err(UnknownDataset(_))));
+        assert!(matches!(generate("rmat999k"), Err(UnknownDataset(_))));
+        assert!(generate("pems").is_ok());
     }
 
     #[test]

@@ -9,14 +9,29 @@ use super::csr::Graph;
 
 const MAGIC: &[u8; 4] = b"FGR1";
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum FgrError {
-    #[error("io: {0}")]
-    Io(#[from] io::Error),
-    #[error("bad magic (not a .fgr file)")]
+    Io(io::Error),
     BadMagic,
-    #[error("truncated file: {0}")]
     Truncated(&'static str),
+}
+
+impl std::fmt::Display for FgrError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FgrError::Io(e) => write!(f, "io: {e}"),
+            FgrError::BadMagic => write!(f, "bad magic (not a .fgr file)"),
+            FgrError::Truncated(w) => write!(f, "truncated file: {w}"),
+        }
+    }
+}
+
+impl std::error::Error for FgrError {}
+
+impl From<io::Error> for FgrError {
+    fn from(e: io::Error) -> Self {
+        FgrError::Io(e)
+    }
 }
 
 struct Cursor<'a> {

@@ -15,4 +15,5 @@ pub mod profile;
 pub mod runtime;
 pub mod scheduler;
 pub mod serving;
+pub mod traffic;
 pub mod util;

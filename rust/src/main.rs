@@ -3,28 +3,32 @@
 //! Subcommands:
 //!   dataset   generate dataset twins (.fgr) for the Python compile path
 //!   serve     run one end-to-end serving comparison on a dataset
+//!   loadtest  sustained request-level load generation + online serving
 //!   exp       regenerate a paper table/figure (see experiments/)
 //!   list      list datasets, artifacts and experiments
 
 use std::path::{Path, PathBuf};
 
-use fograph::compress::Codec;
 use fograph::experiments;
-use fograph::fog::Cluster;
-use fograph::graph::{datasets, io as gio};
+use fograph::graph::{datasets, io as gio, DatasetSpec, Graph};
 use fograph::net::NetKind;
 use fograph::profile::PerfModel;
-use fograph::runtime::{Engine, EngineKind};
-use fograph::serving::{self, Placement, ServeOpts};
+use fograph::runtime::{reference, Engine, EngineKind};
+use fograph::serving::{self, pipeline};
+use fograph::traffic::{doc_json, report_json, run_loadtest, ArrivalKind,
+                       BatchPolicy, LoadtestReport, TrafficConfig};
 use fograph::util::cli::Args;
+use fograph::util::json::Json;
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
-    let args = Args::parse(&argv, &["verbose", "keep-outputs", "gpu"]);
+    let args = Args::parse(&argv, &["verbose", "keep-outputs", "gpu",
+                                    "spill", "no-background-load"]);
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     let code = match cmd {
         "dataset" => cmd_dataset(&args),
         "serve" => cmd_serve(&args),
+        "loadtest" => cmd_loadtest(&args),
         "exp" => experiments::cmd_exp(&args),
         "list" => cmd_list(&args),
         _ => {
@@ -40,15 +44,85 @@ fn print_help() {
         "repro — Fograph reproduction CLI
 
 USAGE:
-  repro dataset --name <siot|yelp|pems|rmat20k|...|all> [--out data]
-  repro serve   --dataset <name> --model <gcn|gat|sage|astgcn>
-                [--mode cloud|single-fog|multi-fog|fograph]
-                [--net 4g|5g|wifi] [--engine pjrt|ref] [--repeats N]
-  repro exp     <fig3|fig4|fig8|fig11|fig12|table4|fig13|table5|fig14|
-                 fig15|fig16|fig17|fig18|all> [--engine pjrt|ref]
-                [--repeats N] [--data data] [--artifacts artifacts]
-  repro list    [--data data] [--artifacts artifacts]"
+  repro dataset  --name <siot|yelp|pems|rmat20k|...|all> [--out data]
+  repro serve    --dataset <name> --model <gcn|gat|sage|astgcn>
+                 [--mode cloud|single-fog|multi-fog|fograph]
+                 [--net 4g|5g|wifi] [--engine pjrt|ref] [--repeats N]
+  repro loadtest --dataset <name> --model <gcn|gat|sage|astgcn>
+                 [--mode cloud|single-fog|multi-fog|fograph|all]
+                 [--net 4g|5g|wifi] [--engine pjrt|ref]
+                 [--arrival poisson|bursty|diurnal] [--rps R]
+                 [--duration SECONDS] [--seed N] [--slo-ms MS]
+                 [--batch-max N] [--batch-deadline-ms MS]
+                 [--queue-cap N] [--spill] [--no-background-load]
+                 [--scheduler-period SECONDS] [--out BENCH_loadtest.json]
+  repro exp      <fig3|fig4|fig8|fig11|fig12|table4|fig13|table5|fig14|
+                  fig15|fig16|fig17|fig18|loadtest|all> [--engine pjrt|ref]
+                 [--repeats N] [--data data] [--artifacts artifacts]
+  repro list     [--data data] [--artifacts artifacts]"
     );
+}
+
+/// Validated (spec, graph) for a `--dataset` flag, or a CLI error.
+fn resolve_dataset(args: &Args) -> Result<(DatasetSpec, Graph), String> {
+    let data_dir = PathBuf::from(args.get_or("data", "data"));
+    let ds = args.get_or("dataset", "siot");
+    let spec = datasets::spec_by_name(ds)
+        .ok_or_else(|| format!("unknown dataset {ds}"))?;
+    let g = datasets::load_or_generate(&data_dir, ds)
+        .map_err(|e| e.to_string())?;
+    Ok((spec, g))
+}
+
+fn resolve_model(args: &Args) -> Result<String, String> {
+    let model = args.get_or("model", "gcn");
+    if reference::known_model(model) {
+        Ok(model.to_string())
+    } else {
+        Err(format!(
+            "unknown model {model} (expected one of {})",
+            reference::KNOWN_MODELS.join("|")
+        ))
+    }
+}
+
+fn resolve_net(args: &Args) -> Result<NetKind, String> {
+    let net = args.get_or("net", "wifi");
+    NetKind::parse(net).ok_or_else(|| format!("unknown net {net}"))
+}
+
+/// Validated (spec, graph, model, net) shared by serve and loadtest;
+/// prints every error and yields the CLI exit code on failure.
+fn resolve_run_inputs(args: &Args)
+                      -> Result<(DatasetSpec, Graph, String, NetKind), i32> {
+    match (resolve_dataset(args), resolve_model(args), resolve_net(args)) {
+        (Ok((spec, g)), Ok(model), Ok(net)) => Ok((spec, g, model, net)),
+        (d, m, n) => {
+            for e in [d.err(), m.err(), n.err()].into_iter().flatten() {
+                eprintln!("{e}");
+            }
+            Err(2)
+        }
+    }
+}
+
+fn make_engine(args: &Args) -> Engine {
+    let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    // a std-only build has no PJRT client; don't route every default
+    // run through a doomed init + fallback warning
+    let default_engine =
+        if cfg!(feature = "pjrt") { "pjrt" } else { "ref" };
+    let engine_kind = match args.get_or("engine", default_engine) {
+        "ref" | "reference" => EngineKind::Reference,
+        _ => EngineKind::Pjrt,
+    };
+    match Engine::new(engine_kind, &artifacts) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("engine init failed ({e}); falling back to reference");
+            Engine::new(EngineKind::Reference, &artifacts).unwrap()
+        }
+    }
 }
 
 fn cmd_dataset(args: &Args) -> i32 {
@@ -74,7 +148,13 @@ fn cmd_dataset(args: &Args) -> i32 {
             continue;
         }
         let t = std::time::Instant::now();
-        let g = datasets::generate(n);
+        let g = match datasets::generate(n) {
+            Ok(g) => g,
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        };
         gio::write_fgr(&path, &g).expect("write .fgr");
         println!(
             "{n}: V={} E={} F={} -> {} ({:.1}s)",
@@ -89,55 +169,18 @@ fn cmd_dataset(args: &Args) -> i32 {
 }
 
 fn cmd_serve(args: &Args) -> i32 {
-    let data_dir = PathBuf::from(args.get_or("data", "data"));
-    let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
-    let ds = args.get_or("dataset", "siot");
-    let model = args.get_or("model", "gcn");
     let mode = args.get_or("mode", "fograph");
-    let net = NetKind::parse(args.get_or("net", "wifi")).expect("bad --net");
     let repeats = args.get_usize("repeats", 3);
-    let engine_kind = match args.get_or("engine", "pjrt") {
-        "ref" | "reference" => EngineKind::Reference,
-        _ => EngineKind::Pjrt,
+    let (spec, g, model, net) = match resolve_run_inputs(args) {
+        Ok(x) => x,
+        Err(code) => return code,
     };
-    let spec = datasets::spec_by_name(ds).expect("unknown dataset");
-    let g = datasets::load_or_generate(&data_dir, ds);
-    let mut engine = match Engine::new(engine_kind, &artifacts) {
-        Ok(e) => e,
-        Err(e) => {
-            eprintln!("engine init failed ({e}); falling back to reference");
-            Engine::new(EngineKind::Reference, &artifacts).unwrap()
-        }
+    let Some((cluster, opts)) = pipeline::mode_setup(mode, &model, net, &g)
+    else {
+        eprintln!("unknown mode {mode}");
+        return 2;
     };
-
-    let (cluster, opts) = match mode {
-        "cloud" => (
-            Cluster::cloud(net),
-            ServeOpts {
-                wan: true,
-                ..ServeOpts::new(model, Placement::SingleNode(0),
-                                 Codec::None)
-            },
-        ),
-        "single-fog" => {
-            let c = Cluster::testbed(net);
-            let p = c.most_powerful();
-            (c, ServeOpts::new(model, Placement::SingleNode(p),
-                               Codec::None))
-        }
-        "multi-fog" => (
-            Cluster::testbed(net),
-            ServeOpts::new(model, Placement::MetisRandom(1), Codec::None),
-        ),
-        "fograph" => (
-            Cluster::testbed(net),
-            ServeOpts::new(model, Placement::Iep, ServeOpts::co_codec(&g)),
-        ),
-        other => {
-            eprintln!("unknown mode {other}");
-            return 2;
-        }
-    };
+    let mut engine = make_engine(args);
     let omegas = vec![PerfModel::uncalibrated(); cluster.len()];
     let mut reports = Vec::new();
     for _ in 0..repeats {
@@ -151,7 +194,8 @@ fn cmd_serve(args: &Args) -> i32 {
         }
     }
     let r = fograph::serving::metrics::average(reports);
-    println!("mode={mode} dataset={ds} model={model} net={}", net.name());
+    println!("mode={mode} dataset={} model={model} net={}", spec.name,
+             net.name());
     println!(
         "  latency   {:.4} s  (collect {:.4} + exec {:.4} + sync {:.4} + unpack {:.4})",
         r.total_s, r.collection_s, r.execution_s, r.sync_s, r.unpack_s
@@ -170,6 +214,140 @@ fn cmd_serve(args: &Args) -> i32 {
         );
     }
     0
+}
+
+fn cmd_loadtest(args: &Args) -> i32 {
+    // validate the cheap flags before paying for dataset generation
+    let arrival_name = args.get_or("arrival", "poisson");
+    let Some(arrival) = ArrivalKind::parse(arrival_name) else {
+        eprintln!("unknown arrival process {arrival_name}");
+        return 2;
+    };
+    let traffic = TrafficConfig {
+        arrival,
+        rps: args.get_f64("rps", 100.0),
+        duration_s: args.get_f64("duration", 30.0),
+        seed: args.get_u64("seed", 0xF06),
+        slo_s: args.get_f64("slo-ms", 1000.0) / 1e3,
+        batch: BatchPolicy {
+            max_batch: args.get_usize("batch-max", 32).max(1),
+            max_delay_s: args.get_f64("batch-deadline-ms", 20.0) / 1e3,
+        },
+        queue_cap: args.get_usize("queue-cap", 64),
+        spill: args.has("spill"),
+        scheduler_period_s: args.get_f64("scheduler-period", 5.0),
+        background_load: !args.has("no-background-load"),
+    };
+    let positive = |x: f64| x.is_finite() && x > 0.0;
+    if !positive(traffic.rps) || !positive(traffic.duration_s) {
+        eprintln!("--rps and --duration must be positive finite numbers");
+        return 2;
+    }
+    if !traffic.batch.max_delay_s.is_finite()
+        || traffic.batch.max_delay_s < 0.0
+        || !positive(traffic.slo_s)
+    {
+        eprintln!(
+            "--batch-deadline-ms must be >= 0 and --slo-ms positive"
+        );
+        return 2;
+    }
+    let mode = args.get_or("mode", "fograph");
+    let modes: Vec<&str> = if mode == "all" {
+        pipeline::MODES.to_vec()
+    } else if pipeline::MODES.contains(&mode) {
+        vec![mode]
+    } else {
+        eprintln!("unknown mode {mode}");
+        return 2;
+    };
+    let (spec, g, model, net) = match resolve_run_inputs(args) {
+        Ok(x) => x,
+        Err(code) => return code,
+    };
+    let mut engine = make_engine(args);
+    let mut runs: Vec<Json> = Vec::new();
+    for m in modes {
+        let Some((cluster, opts)) =
+            pipeline::mode_setup(m, &model, net, &g)
+        else {
+            eprintln!("unknown mode {m}");
+            return 2;
+        };
+        let omegas = vec![PerfModel::uncalibrated(); cluster.len()];
+        let r = match run_loadtest(&g, &spec, &cluster, &opts, &traffic,
+                                   &omegas, &mut engine) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("loadtest failed: {e}");
+                return 1;
+            }
+        };
+        print_loadtest(m, &spec, &model, net, &traffic, &r);
+        runs.push(report_json(m, &traffic, &r));
+    }
+    let out = args.get_or("out", "BENCH_loadtest.json");
+    let doc = doc_json(spec.name, &model, net.name(), runs);
+    match std::fs::write(out, format!("{doc}\n")) {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => {
+            eprintln!("cannot write {out}: {e}");
+            return 1;
+        }
+    }
+    0
+}
+
+fn print_loadtest(mode: &str, spec: &DatasetSpec, model: &str,
+                  net: NetKind, traffic: &TrafficConfig,
+                  r: &LoadtestReport) {
+    let slo = &r.slo;
+    println!(
+        "mode={mode} dataset={} model={model} net={} arrival={} \
+         rps={} duration={}s seed={}",
+        spec.name,
+        net.name(),
+        traffic.arrival.name(),
+        traffic.rps,
+        traffic.duration_s,
+        traffic.seed
+    );
+    if slo.oom {
+        println!("  OOM: placement exceeds fog memory; all load shed");
+        return;
+    }
+    println!(
+        "  latency    p50 {:.1} ms  p95 {:.1} ms  p99 {:.1} ms  \
+         (SLO {:.0} ms)",
+        slo.latency.p50_s * 1e3,
+        slo.latency.p95_s * 1e3,
+        slo.latency.p99_s * 1e3,
+        slo.slo_s * 1e3
+    );
+    println!(
+        "  goodput    {:.2} req/s within SLO ({}/{} offered, {:.1}% shed, \
+         {} spilled)",
+        slo.goodput_rps,
+        slo.within_slo,
+        slo.offered,
+        slo.shed_rate() * 100.0,
+        slo.spilled
+    );
+    println!(
+        "  batching   {} batches, mean {:.1} req/batch, exec util {:.0}%",
+        slo.batches,
+        slo.mean_batch,
+        r.exec_utilization * 100.0
+    );
+    println!(
+        "  scheduler  {} diffusions, {} replans; queue depth mean {:.1} \
+         max {} (skew {:.2})",
+        slo.diffusions,
+        slo.replans,
+        r.queue_len_mean,
+        r.queue_len_max,
+        slo.queue.mean_skew()
+    );
 }
 
 fn cmd_list(args: &Args) -> i32 {

@@ -7,15 +7,11 @@ use std::path::{Path, PathBuf};
 
 use crate::util::json::Json;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ManifestError {
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("json: {0}")]
-    Json(#[from] crate::util::json::ParseError),
-    #[error("manifest field missing or wrong type: {0}")]
+    Io(std::io::Error),
+    Json(crate::util::json::ParseError),
     Schema(&'static str),
-    #[error("no artifact fits model={model} dataset={dataset} layer={layer} v={v} e={e}")]
     NoBucket {
         model: String,
         dataset: String,
@@ -23,6 +19,39 @@ pub enum ManifestError {
         v: usize,
         e: usize,
     },
+}
+
+impl std::fmt::Display for ManifestError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ManifestError::Io(e) => write!(f, "io: {e}"),
+            ManifestError::Json(e) => write!(f, "json: {e}"),
+            ManifestError::Schema(w) => {
+                write!(f, "manifest field missing or wrong type: {w}")
+            }
+            ManifestError::NoBucket { model, dataset, layer, v, e } => {
+                write!(
+                    f,
+                    "no artifact fits model={model} dataset={dataset} \
+                     layer={layer} v={v} e={e}"
+                )
+            }
+        }
+    }
+}
+
+impl std::error::Error for ManifestError {}
+
+impl From<std::io::Error> for ManifestError {
+    fn from(e: std::io::Error) -> Self {
+        ManifestError::Io(e)
+    }
+}
+
+impl From<crate::util::json::ParseError> for ManifestError {
+    fn from(e: crate::util::json::ParseError) -> Self {
+        ManifestError::Json(e)
+    }
 }
 
 #[derive(Clone, Debug)]

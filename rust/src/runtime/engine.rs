@@ -19,23 +19,62 @@ use std::time::Instant;
 
 use crate::util::rng::{mix64, Rng};
 
-use super::artifacts::{ArtifactMeta, Manifest, ManifestError};
+#[cfg(feature = "pjrt")]
+use super::artifacts::ArtifactMeta;
+use super::artifacts::{Manifest, ManifestError};
 use super::pad::{self, EdgeArrays};
 use super::reference;
 use super::weights::{read_fgw, write_fgw, WeightBundle};
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum EngineError {
-    #[error("manifest: {0}")]
-    Manifest(#[from] ManifestError),
-    #[error("weights: {0}")]
-    Weights(#[from] super::weights::FgwError),
-    #[error("xla: {0}")]
+    Manifest(ManifestError),
+    Weights(super::weights::FgwError),
     Xla(String),
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+    /// Unknown model name reached the runtime (user input).
+    Model(String),
 }
 
+impl std::fmt::Display for EngineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EngineError::Manifest(e) => write!(f, "manifest: {e}"),
+            EngineError::Weights(e) => write!(f, "weights: {e}"),
+            EngineError::Xla(m) => write!(f, "xla: {m}"),
+            EngineError::Io(e) => write!(f, "io: {e}"),
+            EngineError::Model(m) => write!(f, "unknown model {m}"),
+        }
+    }
+}
+
+impl std::error::Error for EngineError {}
+
+impl From<ManifestError> for EngineError {
+    fn from(e: ManifestError) -> Self {
+        EngineError::Manifest(e)
+    }
+}
+
+impl From<super::weights::FgwError> for EngineError {
+    fn from(e: super::weights::FgwError) -> Self {
+        EngineError::Weights(e)
+    }
+}
+
+impl From<std::io::Error> for EngineError {
+    fn from(e: std::io::Error) -> Self {
+        EngineError::Io(e)
+    }
+}
+
+impl From<pad::UnknownModel> for EngineError {
+    fn from(e: pad::UnknownModel) -> Self {
+        EngineError::Model(e.0)
+    }
+}
+
+#[cfg(feature = "pjrt")]
 impl From<xla::Error> for EngineError {
     fn from(e: xla::Error) -> Self {
         EngineError::Xla(e.to_string())
@@ -58,12 +97,42 @@ pub struct LayerOut {
     pub host_seconds: f64,
 }
 
+#[cfg(feature = "pjrt")]
 struct PjrtState {
     client: xla::PjRtClient,
     executables: HashMap<String, xla::PjRtLoadedExecutable>,
     /// Trained-parameter literals per artifact — weights are constant
     /// across the serving lifetime, so build them once (§Perf iter. 4).
     param_literals: HashMap<String, Vec<xla::Literal>>,
+}
+
+/// Placeholder so the engine's shape is identical without the feature;
+/// no value of this type is ever constructed then.
+#[cfg(not(feature = "pjrt"))]
+#[allow(dead_code)]
+struct PjrtState {}
+
+#[cfg(feature = "pjrt")]
+fn init_pjrt(artifacts_dir: &Path)
+             -> Result<(Option<Manifest>, Option<PjrtState>), EngineError> {
+    let m = Manifest::load(artifacts_dir)?;
+    let client = xla::PjRtClient::cpu()?;
+    Ok((Some(m), Some(PjrtState {
+        client,
+        executables: HashMap::new(),
+        param_literals: HashMap::new(),
+    })))
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn init_pjrt(_artifacts_dir: &Path)
+             -> Result<(Option<Manifest>, Option<PjrtState>), EngineError> {
+    Err(EngineError::Xla(
+        "built without the `pjrt` cargo feature; use the reference \
+         engine, or vendor the xla crate (see rust/Cargo.toml) and \
+         rebuild with --features pjrt"
+            .to_string(),
+    ))
 }
 
 pub struct Engine {
@@ -85,15 +154,7 @@ impl Engine {
     pub fn new(kind: EngineKind, artifacts_dir: &Path)
                -> Result<Engine, EngineError> {
         let (manifest, pjrt) = match kind {
-            EngineKind::Pjrt => {
-                let m = Manifest::load(artifacts_dir)?;
-                let client = xla::PjRtClient::cpu()?;
-                (Some(m), Some(PjrtState {
-                    client,
-                    executables: HashMap::new(),
-                    param_literals: HashMap::new(),
-                }))
-            }
+            EngineKind::Pjrt => init_pjrt(artifacts_dir)?,
             EngineKind::Reference => {
                 (Manifest::load(artifacts_dir).ok(), None)
             }
@@ -151,7 +212,7 @@ impl Engine {
                     .clone();
                 let t = Instant::now();
                 let out = reference::run_layer(model, layer, &wb, h, f_in,
-                                               edges, last);
+                                               edges, last)?;
                 let host = t.elapsed().as_secs_f64();
                 let out_dim = out.len() / edges.n_local.max(1);
                 let _ = n;
@@ -164,6 +225,7 @@ impl Engine {
         }
     }
 
+    #[cfg(feature = "pjrt")]
     fn compiled(&mut self, meta: &ArtifactMeta)
                 -> Result<(), EngineError> {
         let st = self.pjrt.as_mut().expect("pjrt state");
@@ -181,6 +243,26 @@ impl Engine {
         Ok(())
     }
 
+    /// Unreachable without the feature: `Engine::new(Pjrt, ..)` already
+    /// failed, so no Pjrt-kind engine exists to dispatch here.
+    #[cfg(not(feature = "pjrt"))]
+    #[allow(clippy::too_many_arguments)]
+    fn run_layer_pjrt(
+        &mut self,
+        _model: &str,
+        _dataset: &str,
+        _layer: usize,
+        _h: &[f32],
+        _f_in: usize,
+        _edges: &EdgeArrays,
+        _f_raw: usize,
+        _classes: usize,
+    ) -> Result<LayerOut, EngineError> {
+        Err(EngineError::Xla("pjrt feature disabled".to_string()))
+    }
+
+    #[cfg(feature = "pjrt")]
+    #[allow(clippy::too_many_arguments)]
     fn run_layer_pjrt(
         &mut self,
         model: &str,
@@ -275,42 +357,56 @@ impl Engine {
                 let out_dim = out.len() / n;
                 Ok(LayerOut { h: out, out_dim, host_seconds: host })
             }
-            EngineKind::Pjrt => {
-                let meta = self
-                    .manifest
-                    .as_ref()
-                    .expect("manifest")
-                    .select("astgcn", dataset, 0, n, 0)?
-                    .clone();
-                self.compiled(&meta)?;
-                let wb = self.weights("astgcn", dataset, ft, 0).clone();
-                let t0 = Instant::now();
-                let v_max = meta.v_max;
-                let mut xp = vec![0f32; v_max * ft];
-                xp[..n * ft].copy_from_slice(x);
-                let adj = pad::dense_norm_adj(sub, v_max);
-                let mut literals: Vec<xla::Literal> = Vec::new();
-                for (pname, dims) in &meta.params {
-                    let t = wb.get(&format!("l0.{pname}")).unwrap();
-                    literals.push(f32_literal(&t.f32_data, dims)?);
-                }
-                literals.push(f32_literal(&xp, &[v_max, ft])?);
-                literals.push(f32_literal(&adj, &[v_max, v_max])?);
-                let st = self.pjrt.as_ref().unwrap();
-                let exe = &st.executables[&meta.name];
-                let result = exe.execute::<xla::Literal>(&literals)?[0][0]
-                    .to_literal_sync()?;
-                let outp: Vec<f32> = result.to_tuple1()?.to_vec::<f32>()?;
-                let host = t0.elapsed().as_secs_f64();
-                let out_dim = meta.out_dim;
-                let mut out = vec![0f32; n * out_dim];
-                out.copy_from_slice(&outp[..n * out_dim]);
-                Ok(LayerOut { h: out, out_dim, host_seconds: host })
-            }
+            EngineKind::Pjrt => self.run_astgcn_pjrt(dataset, x, n, ft, sub),
         }
+    }
+
+    /// See `run_layer_pjrt`: unreachable without the feature.
+    #[cfg(not(feature = "pjrt"))]
+    fn run_astgcn_pjrt(&mut self, _dataset: &str, _x: &[f32], _n: usize,
+                       _ft: usize, _sub: &crate::graph::LocalGraph)
+                       -> Result<LayerOut, EngineError> {
+        Err(EngineError::Xla("pjrt feature disabled".to_string()))
+    }
+
+    #[cfg(feature = "pjrt")]
+    fn run_astgcn_pjrt(&mut self, dataset: &str, x: &[f32], n: usize,
+                       ft: usize, sub: &crate::graph::LocalGraph)
+                       -> Result<LayerOut, EngineError> {
+        let meta = self
+            .manifest
+            .as_ref()
+            .expect("manifest")
+            .select("astgcn", dataset, 0, n, 0)?
+            .clone();
+        self.compiled(&meta)?;
+        let wb = self.weights("astgcn", dataset, ft, 0).clone();
+        let t0 = Instant::now();
+        let v_max = meta.v_max;
+        let mut xp = vec![0f32; v_max * ft];
+        xp[..n * ft].copy_from_slice(x);
+        let adj = pad::dense_norm_adj(sub, v_max);
+        let mut literals: Vec<xla::Literal> = Vec::new();
+        for (pname, dims) in &meta.params {
+            let t = wb.get(&format!("l0.{pname}")).unwrap();
+            literals.push(f32_literal(&t.f32_data, dims)?);
+        }
+        literals.push(f32_literal(&xp, &[v_max, ft])?);
+        literals.push(f32_literal(&adj, &[v_max, v_max])?);
+        let st = self.pjrt.as_ref().unwrap();
+        let exe = &st.executables[&meta.name];
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()?;
+        let outp: Vec<f32> = result.to_tuple1()?.to_vec::<f32>()?;
+        let host = t0.elapsed().as_secs_f64();
+        let out_dim = meta.out_dim;
+        let mut out = vec![0f32; n * out_dim];
+        out.copy_from_slice(&outp[..n * out_dim]);
+        Ok(LayerOut { h: out, out_dim, host_seconds: host })
     }
 }
 
+#[cfg(feature = "pjrt")]
 fn f32_literal(data: &[f32], dims: &[usize])
                -> Result<xla::Literal, EngineError> {
     debug_assert_eq!(data.len(), dims.iter().product::<usize>());
@@ -325,6 +421,7 @@ fn f32_literal(data: &[f32], dims: &[usize])
     )?)
 }
 
+#[cfg(feature = "pjrt")]
 fn i32_literal(data: &[i32], dims: &[usize])
                -> Result<xla::Literal, EngineError> {
     debug_assert_eq!(data.len(), dims.iter().product::<usize>());

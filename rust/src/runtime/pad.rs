@@ -12,6 +12,19 @@
 
 use crate::graph::LocalGraph;
 
+/// Error for a model name the edge-preparation layer does not know.
+/// Surfaces to the CLI as an exit-code-2 error instead of a panic.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct UnknownModel(pub String);
+
+impl std::fmt::Display for UnknownModel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "unknown model {}", self.0)
+    }
+}
+
+impl std::error::Error for UnknownModel {}
+
 /// Unpadded per-partition edge arrays in local index space.
 #[derive(Clone, Debug)]
 pub struct EdgeArrays {
@@ -35,12 +48,13 @@ impl EdgeArrays {
 /// Build edge arrays for `model` from a halo-extracted local graph.
 /// Degrees use the GLOBAL in-degree (the normalization the model was
 /// trained with), which LocalGraph carries.
-pub fn prep_edges(model: &str, sub: &LocalGraph) -> EdgeArrays {
+pub fn prep_edges(model: &str, sub: &LocalGraph)
+                  -> Result<EdgeArrays, UnknownModel> {
     let n = sub.n_total();
     let l = sub.n_local;
     let mut src = sub.src.clone();
     let mut dst = sub.dst.clone();
-    match model {
+    Ok(match model {
         "gat" => {
             // self loops for OWNED rows only (halo rows produce no output)
             for v in 0..l as u32 {
@@ -69,8 +83,8 @@ pub fn prep_edges(model: &str, sub: &LocalGraph) -> EdgeArrays {
                 .collect();
             EdgeArrays { src, dst, ew, inv_deg, n, n_local: l }
         }
-        other => panic!("prep_edges: unknown model {other}"),
-    }
+        other => return Err(UnknownModel(other.to_string())),
+    })
 }
 
 /// Bucket-padded layer inputs, ready to become PJRT literals.
@@ -155,7 +169,7 @@ mod tests {
     #[test]
     fn gcn_inv_deg_uses_global_degree() {
         let s = sub();
-        let e = prep_edges("gcn", &s);
+        let e = prep_edges("gcn", &s).unwrap();
         // vertex 1 and 2 both have global degree 2 -> 1/3
         assert!((e.inv_deg[0] - 1.0 / 3.0).abs() < 1e-6);
         assert_eq!(e.num_edges(), s.num_edges());
@@ -165,7 +179,7 @@ mod tests {
     #[test]
     fn gat_appends_self_loops() {
         let s = sub();
-        let e = prep_edges("gat", &s);
+        let e = prep_edges("gat", &s).unwrap();
         assert_eq!(e.num_edges(), s.num_edges() + s.n_local);
         let last = e.num_edges() - 1;
         assert_eq!(e.src[last], e.dst[last]);
@@ -176,14 +190,14 @@ mod tests {
     fn sage_inv_deg_floors_at_one() {
         let g = Graph::from_undirected_edges(3, &[(0, 1)]);
         let s = subgraph::extract_one(&g, &[0, 2]); // vertex 2 isolated
-        let e = prep_edges("sage", &s);
+        let e = prep_edges("sage", &s).unwrap();
         assert!((e.inv_deg[1] - 1.0).abs() < 1e-6);
     }
 
     #[test]
     fn padding_layout() {
         let s = sub();
-        let e = prep_edges("gcn", &s);
+        let e = prep_edges("gcn", &s).unwrap();
         let n = s.n_total();
         let h: Vec<f32> = (0..n * 3).map(|x| x as f32).collect();
         let p = pad_layer(&h, n, 3, &e, 8, 16, 8);
@@ -195,10 +209,18 @@ mod tests {
     }
 
     #[test]
+    fn unknown_model_is_an_error_not_a_panic() {
+        let s = sub();
+        let e = prep_edges("transformer", &s);
+        assert_eq!(e.unwrap_err(),
+                   UnknownModel("transformer".to_string()));
+    }
+
+    #[test]
     #[should_panic(expected = "bucket v_max")]
     fn pad_rejects_overflow() {
         let s = sub();
-        let e = prep_edges("gcn", &s);
+        let e = prep_edges("gcn", &s).unwrap();
         let h = vec![0f32; s.n_total() * 3];
         pad_layer(&h, s.n_total(), 3, &e, 2, 16, 2);
     }

@@ -3,10 +3,19 @@
 //! mirrors python/compile/kernels/ref.py exactly; cross-engine parity is
 //! asserted by rust/tests/pjrt_integration.rs.
 
-use super::pad::EdgeArrays;
+use super::pad::{EdgeArrays, UnknownModel};
 use super::weights::WeightBundle;
 
 pub const HIDDEN: usize = 64;
+
+/// Every model name the runtime understands (user input is validated
+/// against this at the CLI boundary; deeper layers return
+/// `UnknownModel` rather than panic).
+pub const KNOWN_MODELS: [&str; 4] = ["gcn", "gat", "sage", "astgcn"];
+
+pub fn known_model(model: &str) -> bool {
+    KNOWN_MODELS.contains(&model)
+}
 
 pub fn model_layers(model: &str) -> usize {
     match model {
@@ -84,7 +93,10 @@ pub fn segment_aggregate(h: &[f32], f: usize, edges: &EdgeArrays,
 /// `last` selects the linear output head (no activation).
 pub fn run_layer(model: &str, layer: usize, weights: &WeightBundle,
                  h: &[f32], f_in: usize, edges: &EdgeArrays, last: bool)
-                 -> Vec<f32> {
+                 -> Result<Vec<f32>, UnknownModel> {
+    if !matches!(model, "gcn" | "sage" | "gat") {
+        return Err(UnknownModel(model.to_string()));
+    }
     let n = edges.n;
     // outputs cover the owned rows only — halo rows cost no update FLOPs
     // (mirrors the l_max dimension of the lowered artifacts)
@@ -93,7 +105,7 @@ pub fn run_layer(model: &str, layer: usize, weights: &WeightBundle,
     let w = weights.get(&format!("l{layer}.w")).expect("missing weight");
     let b = weights.get(&format!("l{layer}.b")).expect("missing bias");
     let fo = *w.dims.last().unwrap();
-    match model {
+    Ok(match model {
         "gcn" => {
             let agg = segment_aggregate(h, f_in, edges, l);
             let mut comb = vec![0f32; l * f_in];
@@ -188,8 +200,8 @@ pub fn run_layer(model: &str, layer: usize, weights: &WeightBundle,
             }
             out
         }
-        other => panic!("run_layer: unknown model {other}"),
-    }
+        _ => unreachable!("model validated above"),
+    })
 }
 
 /// ASTGCN-lite block, ref semantics (see python/compile/models/astgcn.py).
@@ -330,7 +342,7 @@ mod tests {
             n_local: 2,
         };
         let h = [1.0f32, 0.0, 0.0, 1.0];
-        let out = run_layer("gcn", 0, &wb, &h, 2, &edges, true);
+        let out = run_layer("gcn", 0, &wb, &h, 2, &edges, true).unwrap();
         // v0: (h1 + h0)/2 = [0.5, 0.5]
         assert_eq!(out, vec![0.5, 0.5, 0.5, 0.5]);
     }
@@ -352,7 +364,7 @@ mod tests {
         ]);
         let edges = chain_edges(n, "gat");
         let h: Vec<f32> = (0..n * f).map(|_| rng.normal_f32(0.0, 1.0)).collect();
-        let out = run_layer("gat", 0, &wb, &h, f, &edges, true);
+        let out = run_layer("gat", 0, &wb, &h, f, &edges, true).unwrap();
         // each output row must lie within the z-range (convex combination)
         let z = matmul_bias(&h, n, f, &w, f, &b);
         for k in 0..f {
@@ -384,7 +396,7 @@ mod tests {
             n_local: 2,
         };
         let h = [3.0f32, 4.0, 9.0, 9.0];
-        let out = run_layer("sage", 0, &wb, &h, f, &edges, true);
+        let out = run_layer("sage", 0, &wb, &h, f, &edges, true).unwrap();
         // out[1] = mean part = h0
         assert_eq!(&out[2..], &[3.0, 4.0]);
     }
@@ -437,7 +449,9 @@ mod tests {
             n: 1,
             n_local: 1,
         };
-        let out = run_layer("gcn", 0, &wb, &[2.0, -3.0], 2, &edges, true);
+        let out =
+            run_layer("gcn", 0, &wb, &[2.0, -3.0], 2, &edges, true)
+                .unwrap();
         assert_eq!(out, vec![2.0, -3.0]);
     }
 }

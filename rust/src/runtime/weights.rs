@@ -5,18 +5,35 @@ use std::collections::HashMap;
 use std::fs;
 use std::path::Path;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum FgwError {
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("bad magic (not a .fgw file)")]
+    Io(std::io::Error),
     BadMagic,
-    #[error("truncated file")]
     Truncated,
-    #[error("unknown dtype {0}")]
     BadDtype(u8),
-    #[error("missing tensor {0}")]
     Missing(String),
+}
+
+impl std::fmt::Display for FgwError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FgwError::Io(e) => write!(f, "io: {e}"),
+            FgwError::BadMagic => {
+                write!(f, "bad magic (not a .fgw file)")
+            }
+            FgwError::Truncated => write!(f, "truncated file"),
+            FgwError::BadDtype(d) => write!(f, "unknown dtype {d}"),
+            FgwError::Missing(n) => write!(f, "missing tensor {n}"),
+        }
+    }
+}
+
+impl std::error::Error for FgwError {}
+
+impl From<std::io::Error> for FgwError {
+    fn from(e: std::io::Error) -> Self {
+        FgwError::Io(e)
+    }
 }
 
 /// A named dense tensor (f32 or i32 payload).

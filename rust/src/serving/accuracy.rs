@@ -129,7 +129,7 @@ mod tests {
 
     #[test]
     fn forecast_errors_zero_for_oracle() {
-        let g = datasets::generate("pems");
+        let g = datasets::generate("pems").unwrap();
         let spec = datasets::PEMS;
         let start = 500;
         let t = g.duration;

@@ -8,4 +8,5 @@ pub mod metrics;
 pub mod pipeline;
 
 pub use metrics::ServingReport;
-pub use pipeline::{serve, serve_with_assignment, Placement, ServeOpts};
+pub use pipeline::{mode_setup, serve, serve_with_assignment, Placement,
+                   ServeOpts, MODES};

@@ -14,7 +14,7 @@ use crate::compress::{Codec, DaqConfig, IntervalScheme, DEFAULT_BITS};
 use crate::exec;
 use crate::fog::{node::partition_footprint_bytes, Cluster};
 use crate::graph::{DatasetSpec, Graph};
-use crate::net;
+use crate::net::{self, NetKind};
 use crate::partition::{baselines, MultilevelParams};
 use crate::placement::{self, CostModel, MappingStrategy};
 use crate::profile::PerfModel;
@@ -74,6 +74,41 @@ impl ServeOpts {
             IntervalScheme::EqualMass,
             DEFAULT_BITS,
         ))
+    }
+}
+
+/// The four comparison systems of the evaluation, CLI spelling.
+pub const MODES: [&str; 4] = ["cloud", "single-fog", "multi-fog",
+                              "fograph"];
+
+/// Cluster + options for one of the paper's comparison modes (shared by
+/// `repro serve`, `repro loadtest` and the loadtest experiment).
+pub fn mode_setup(mode: &str, model: &str, net: NetKind, g: &Graph)
+                  -> Option<(Cluster, ServeOpts)> {
+    match mode {
+        "cloud" => Some((
+            Cluster::cloud(net),
+            ServeOpts {
+                wan: true,
+                ..ServeOpts::new(model, Placement::SingleNode(0),
+                                 Codec::None)
+            },
+        )),
+        "single-fog" => {
+            let c = Cluster::testbed(net);
+            let p = c.most_powerful();
+            Some((c, ServeOpts::new(model, Placement::SingleNode(p),
+                                    Codec::None)))
+        }
+        "multi-fog" => Some((
+            Cluster::testbed(net),
+            ServeOpts::new(model, Placement::MetisRandom(1), Codec::None),
+        )),
+        "fograph" => Some((
+            Cluster::testbed(net),
+            ServeOpts::new(model, Placement::Iep, ServeOpts::co_codec(g)),
+        )),
+        _ => None,
     }
 }
 
@@ -469,7 +504,7 @@ mod tests {
 
     #[test]
     fn pems_window_payload_shape() {
-        let g = datasets::generate("pems");
+        let g = datasets::generate("pems").unwrap();
         let spec = datasets::PEMS;
         let (payload, dims) = query_payload(&g, &spec, 100);
         assert_eq!(dims, 36);

@@ -1,0 +1,140 @@
+//! Adaptive micro-batching for the online serving loop: queued requests
+//! are released as one batch when either the size bound fills or the
+//! oldest request has waited out the latency budget. Formed batches are
+//! costed at the next power-of-two *bucket* — the same padding discipline
+//! as `runtime/pad.rs`, where an executable exists per bucket shape and a
+//! batch pays for the bucket it runs in, not its exact size.
+
+use std::collections::VecDeque;
+
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// Release a batch as soon as this many requests are queued.
+    pub max_batch: usize,
+    /// Release an underfull batch once its oldest request has waited
+    /// this long (the batching share of the latency budget).
+    pub max_delay_s: f64,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 32, max_delay_s: 0.02 }
+    }
+}
+
+/// Execution-cost bucket for a batch of `n` requests: the next power of
+/// two ≥ n. Mirrors the lowered-artifact buckets of the runtime.
+pub fn bucket(n: usize) -> usize {
+    n.max(1).next_power_of_two()
+}
+
+/// FIFO micro-batcher over request arrival times (simulation seconds).
+#[derive(Clone, Debug)]
+pub struct MicroBatcher {
+    policy: BatchPolicy,
+    pending: VecDeque<f64>,
+}
+
+impl MicroBatcher {
+    pub fn new(policy: BatchPolicy) -> MicroBatcher {
+        assert!(policy.max_batch >= 1);
+        assert!(policy.max_delay_s >= 0.0);
+        MicroBatcher { policy, pending: VecDeque::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    pub fn policy(&self) -> BatchPolicy {
+        self.policy
+    }
+
+    /// Enqueue a request that arrived at `arrival_s` (non-decreasing).
+    pub fn push(&mut self, arrival_s: f64) {
+        debug_assert!(
+            self.pending.back().map_or(true, |&b| b <= arrival_s),
+            "arrivals must be pushed in time order"
+        );
+        self.pending.push_back(arrival_s);
+    }
+
+    /// Earliest simulation time at which a batch may be released under
+    /// the policy: the arrival that filled the size bound, or the oldest
+    /// request's deadline. `None` while the queue is empty.
+    pub fn ready_at(&self) -> Option<f64> {
+        if self.pending.is_empty() {
+            return None;
+        }
+        if self.pending.len() >= self.policy.max_batch {
+            return Some(self.pending[self.policy.max_batch - 1]);
+        }
+        Some(self.pending[0] + self.policy.max_delay_s)
+    }
+
+    /// Remove the oldest `≤ max_batch` requests as one batch (FIFO).
+    pub fn take_batch(&mut self) -> Vec<f64> {
+        let k = self.pending.len().min(self.policy.max_batch);
+        self.pending.drain(..k).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy(max_batch: usize, max_delay_s: f64) -> BatchPolicy {
+        BatchPolicy { max_batch, max_delay_s }
+    }
+
+    #[test]
+    fn size_bound_is_respected() {
+        let mut b = MicroBatcher::new(policy(4, 1.0));
+        for i in 0..11 {
+            b.push(i as f64 * 0.001);
+        }
+        // size condition met at the 4th arrival, not the deadline
+        assert_eq!(b.ready_at(), Some(0.003));
+        let batch = b.take_batch();
+        assert_eq!(batch.len(), 4);
+        assert_eq!(batch[0], 0.0); // FIFO
+        assert_eq!(b.len(), 7);
+        assert_eq!(b.take_batch().len(), 4);
+        assert_eq!(b.take_batch().len(), 3); // final underfull batch
+        assert!(b.is_empty());
+        assert_eq!(b.ready_at(), None);
+    }
+
+    #[test]
+    fn deadline_bound_releases_underfull_batches() {
+        let mut b = MicroBatcher::new(policy(32, 0.05));
+        b.push(10.0);
+        b.push(10.01);
+        assert_eq!(b.ready_at(), Some(10.05));
+        let batch = b.take_batch();
+        assert_eq!(batch, vec![10.0, 10.01]);
+    }
+
+    #[test]
+    fn deadline_follows_the_oldest_request() {
+        let mut b = MicroBatcher::new(policy(8, 0.1));
+        b.push(1.0);
+        b.push(1.09);
+        // the second arrival must not extend the first one's deadline
+        assert_eq!(b.ready_at(), Some(1.1));
+    }
+
+    #[test]
+    fn buckets_are_powers_of_two() {
+        assert_eq!(bucket(0), 1);
+        assert_eq!(bucket(1), 1);
+        assert_eq!(bucket(2), 2);
+        assert_eq!(bucket(3), 4);
+        assert_eq!(bucket(17), 32);
+        assert_eq!(bucket(32), 32);
+    }
+}

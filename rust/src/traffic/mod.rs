@@ -1,0 +1,18 @@
+//! Request-level traffic subsystem: seeded workload generation (Poisson /
+//! bursty / diurnal arrival processes), an event-driven online serving
+//! loop with per-fog queues, adaptive micro-batching, admission control
+//! with backpressure, and SLO metrics (latency percentiles, goodput,
+//! shed rate, queue-depth timelines). The loop feeds queue-skew back into
+//! the dual-mode scheduler so diffusion / IEP replans fire mid-run —
+//! `repro loadtest` is the CLI entry point.
+
+pub mod arrival;
+pub mod batcher;
+pub mod sim;
+pub mod slo;
+
+pub use arrival::{ArrivalKind, ArrivalProcess};
+pub use batcher::{bucket, BatchPolicy, MicroBatcher};
+pub use sim::{doc_json, report_json, run_loadtest, LoadtestReport,
+              TrafficConfig};
+pub use slo::{LatencySummary, QueueTimeline, SloReport};

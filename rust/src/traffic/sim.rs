@@ -1,0 +1,630 @@
+//! Event-driven online serving loop: drives the existing serving
+//! pipeline with a sustained, seeded request stream through admission
+//! control, adaptive micro-batching and the dual-mode scheduler.
+//!
+//! One real end-to-end run of the pipeline (per layout) exercises the
+//! full serving surface (placement, compression, BSP execution, the OOM
+//! check). The loop's own timing then uses only deterministic parts:
+//! the analytic transfer share of collection (packing/unpacking pipeline
+//! with adjacent windows, off the steady-state critical path), the
+//! analytic sync cost, and per-fog execution from the calibratable ω
+//! models (`profile::PerfModel`) — exactly the quantity the scheduler
+//! reasons about (as in the Fig. 16 experiment). Every reported number
+//! is therefore a pure function of `(inputs, seed)`: loadtest runs are
+//! bit-reproducible.
+//!
+//! Stations and timing model:
+//!
+//! * **collection** — one snapshot upload per micro-batch window; the
+//!   batch shares it, so collection cost grows only mildly with batch
+//!   size (devices stream once per window, §III-D).
+//! * **execution**  — BSP over all fogs: the batch finishes when the
+//!   slowest fog finishes. Batching amortizes the per-inference fixed
+//!   overhead; a batch pays for its padded power-of-two *bucket*
+//!   (`batcher::bucket`), mirroring the lowered-artifact shapes.
+//! * the two stations pipeline with depth 2 (collection of batch k
+//!   overlaps execution of batch k-1), the paper's throughput model.
+//!
+//! Admission control sheds (or spills to the cloud tier) when the wait
+//! queue exceeds its bound; per-fog queue depths in work-seconds feed the
+//! skew indicators, so diffusion / IEP replans fire mid-run when the
+//! background load tilts the cluster.
+
+use crate::fog::{Cluster, LoadTrace};
+use crate::graph::{DatasetSpec, Graph};
+use crate::profile::PerfModel;
+use crate::runtime::{Engine, EngineError};
+use crate::scheduler::{schedule, SchedulerConfig, SchedulerDecision};
+use crate::scheduler::diffusion::estimate_times;
+use crate::serving::collection;
+use crate::serving::pipeline::{self, Placement, ServeOpts};
+use crate::util::json::{arr, num, obj, s, Json};
+
+use super::arrival::{ArrivalKind, ArrivalProcess};
+use super::batcher::{bucket, BatchPolicy, MicroBatcher};
+use super::slo::{QueueTimeline, SloReport};
+
+/// Fraction of a batch's execution cost that is fixed per batch (kernel
+/// launch, BSP barriers); the rest scales with the padded bucket size.
+const EXEC_FIXED_FRAC: f64 = 0.85;
+/// Fixed share of the per-window collection cost; the rest grows with
+/// batch fill (larger windows admit marginally more device traffic).
+const COLL_FIXED_FRAC: f64 = 0.85;
+/// Collection of batch k may overlap execution of batch k-1.
+const PIPELINE_DEPTH: usize = 2;
+
+#[derive(Clone, Copy, Debug)]
+pub struct TrafficConfig {
+    pub arrival: ArrivalKind,
+    /// Mean offered load, requests/second.
+    pub rps: f64,
+    /// Offered-traffic window (simulation seconds); the loop drains
+    /// queued work past this point.
+    pub duration_s: f64,
+    pub seed: u64,
+    /// End-to-end latency objective.
+    pub slo_s: f64,
+    pub batch: BatchPolicy,
+    /// Admission bound on the wait queue (requests).
+    pub queue_cap: usize,
+    /// Spill over-bound requests to the cloud tier instead of dropping.
+    pub spill: bool,
+    /// Dual-mode scheduler period (simulation seconds); 0 disables.
+    pub scheduler_period_s: f64,
+    /// Replay a background-load trace over the fogs.
+    pub background_load: bool,
+}
+
+impl TrafficConfig {
+    /// The admission bound the loop actually enforces: never below one
+    /// full batch, or the batcher could starve.
+    pub fn effective_queue_cap(&self) -> usize {
+        self.queue_cap.max(self.batch.max_batch)
+    }
+}
+
+impl Default for TrafficConfig {
+    fn default() -> Self {
+        TrafficConfig {
+            arrival: ArrivalKind::Poisson,
+            rps: 100.0,
+            duration_s: 30.0,
+            seed: 0xF06,
+            slo_s: 1.0,
+            batch: BatchPolicy::default(),
+            // bound the worst-case admission wait near SLO/2 at the
+            // cluster's typical service rate (see sim tests)
+            queue_cap: 64,
+            spill: false,
+            scheduler_period_s: 5.0,
+            background_load: true,
+        }
+    }
+}
+
+/// Outcome of one loadtest run.
+#[derive(Clone, Debug, Default)]
+pub struct LoadtestReport {
+    pub slo: SloReport,
+    /// Raw per-request fog-tier latencies (seconds, completion order).
+    pub latencies: Vec<f64>,
+    /// Busy fraction of the execution station over the run.
+    pub exec_utilization: f64,
+    /// Wait-queue length extremes (requests).
+    pub queue_len_max: usize,
+    pub queue_len_mean: f64,
+    /// Communication constants from the grounding pipeline run.
+    pub base_collection_s: f64,
+    pub base_sync_s: f64,
+    pub base_wire_bytes: usize,
+}
+
+fn scaled_model(m: &PerfModel, k: f64) -> PerfModel {
+    PerfModel {
+        beta_v: m.beta_v * k,
+        beta_n: m.beta_n * k,
+        intercept: m.intercept * k,
+        r2: m.r2,
+    }
+}
+
+/// Deterministic per-window collection cost for a layout: the slowest
+/// fog's analytic transfer time (device-side packing pipelines with the
+/// previous window's upload, so it is off the steady-state critical
+/// path, like the fog-side unpack thread).
+fn collection_transfer_s(
+    g: &Graph,
+    payload: &[f32],
+    dims: usize,
+    assignment: &[u32],
+    cluster: &Cluster,
+    opts: &ServeOpts,
+) -> f64 {
+    let coll = collection::collect(g, payload, dims, assignment, cluster,
+                                   &opts.codec, opts.devices, opts.wan);
+    coll.per_fog_transfer_s.iter().cloned().fold(0f64, f64::max)
+}
+
+/// Per-fog execution seconds for one inference at simulation time `t`:
+/// host-model prediction × node capability × background-load slowdown.
+fn exec_per_fog(
+    host_times: &[f64],
+    node_mult: &[f64],
+    trace: &LoadTrace,
+    t: f64,
+) -> Vec<f64> {
+    let step = t.max(0.0) as usize;
+    host_times
+        .iter()
+        .zip(node_mult)
+        .enumerate()
+        .map(|(j, (&h, &m))| {
+            let load = trace.at(step, j).clamp(0.0, 0.85);
+            h * m / (1.0 - load)
+        })
+        .collect()
+}
+
+/// Drive the serving stack under a sustained request stream.
+#[allow(clippy::too_many_arguments)]
+pub fn run_loadtest(
+    g: &Graph,
+    spec: &DatasetSpec,
+    cluster: &Cluster,
+    opts: &ServeOpts,
+    traffic: &TrafficConfig,
+    omegas: &[PerfModel],
+    engine: &mut Engine,
+) -> Result<LoadtestReport, EngineError> {
+    assert!(traffic.rps > 0.0 && traffic.duration_s > 0.0);
+    assert_eq!(omegas.len(), cluster.len());
+    let n = cluster.len();
+    let queue_cap = traffic.effective_queue_cap();
+
+    // ---- ground the model with one real pipeline run --------------------
+    let mut assignment = pipeline::place(g, cluster, opts, omegas, spec);
+    let (payload, dims) = pipeline::query_payload(g, spec,
+                                                  opts.window_start);
+    let base = pipeline::serve_with_assignment(
+        g, spec, cluster, opts, &assignment, &payload, dims, engine,
+    )?;
+    let mut coll_s = collection_transfer_s(g, &payload, dims, &assignment,
+                                           cluster, opts);
+    let mut report = LoadtestReport {
+        base_collection_s: coll_s,
+        base_sync_s: base.sync_s,
+        base_wire_bytes: base.wire_bytes,
+        ..Default::default()
+    };
+    report.slo.slo_s = traffic.slo_s;
+    report.slo.duration_s = traffic.duration_s;
+    if base.oom {
+        report.slo.oom = true;
+        return Ok(report);
+    }
+
+    // ---- analytic execution model (deterministic) -----------------------
+    let node_mult: Vec<f64> = cluster
+        .nodes
+        .iter()
+        .map(|nd| nd.effective_multiplier())
+        .collect();
+    let mut host_times = estimate_times(g, &assignment, n, omegas);
+    let trace = if traffic.background_load {
+        LoadTrace::random_walk(
+            n,
+            traffic.duration_s.ceil() as usize + 2,
+            traffic.seed ^ 0x10AD,
+        )
+    } else {
+        LoadTrace { loads: vec![vec![0.0; n]; 1] }
+    };
+
+    // adaptive replanning only makes sense for distributed layouts
+    let scheduler_on = n > 1
+        && traffic.scheduler_period_s > 0.0
+        && !matches!(opts.placement, Placement::SingleNode(_));
+    let cfg = SchedulerConfig::default();
+
+    // ---- request stream --------------------------------------------------
+    let arrivals = ArrivalProcess::new(traffic.arrival, traffic.rps,
+                                       traffic.seed)
+        .times(traffic.duration_s);
+    report.slo.offered = arrivals.len();
+
+    // ---- event loop ------------------------------------------------------
+    let mut batcher = MicroBatcher::new(traffic.batch);
+    let mut coll_free = 0f64;
+    let mut exec_free = 0f64;
+    let mut finishes: Vec<f64> = Vec::new();
+    let mut latencies: Vec<f64> = Vec::new();
+    let mut batch_total = 0usize;
+    let mut exec_busy = 0f64;
+    let mut qlen_sum = 0usize;
+    let mut qlen_ticks = 0usize;
+    let mut queue = QueueTimeline::default();
+    let mut next_sample = 0f64;
+    let mut next_sched = if scheduler_on {
+        traffic.scheduler_period_s
+    } else {
+        f64::INFINITY
+    };
+    let mut idx = 0usize;
+    loop {
+        let t_arr = arrivals.get(idx).copied().unwrap_or(f64::INFINITY);
+        // pipeline-depth gate: batch k waits for batch k-PIPELINE_DEPTH
+        let gate = if finishes.len() >= PIPELINE_DEPTH {
+            finishes[finishes.len() - PIPELINE_DEPTH]
+        } else {
+            0.0
+        };
+        let t_form = match batcher.ready_at() {
+            Some(r) => r.max(coll_free).max(gate),
+            None => f64::INFINITY,
+        };
+        let t_next = t_arr.min(t_form);
+        if t_next == f64::INFINITY {
+            break;
+        }
+
+        // per-second queue-depth timeline up to the next event
+        while next_sample <= t_next && next_sample <= traffic.duration_s {
+            let per_fog =
+                exec_per_fog(&host_times, &node_mult, &trace, next_sample);
+            let depth = batcher.len() as f64;
+            queue.record(per_fog.iter().map(|&e| depth * e).collect());
+            qlen_sum += batcher.len();
+            qlen_ticks += 1;
+            report.queue_len_max = report.queue_len_max.max(batcher.len());
+            next_sample += 1.0;
+        }
+
+        // dual-mode scheduler ticks (metadata reporting period)
+        while next_sched <= t_next && next_sched <= traffic.duration_s {
+            let step = next_sched as usize;
+            let scaled: Vec<PerfModel> = (0..n)
+                .map(|j| {
+                    let load = trace.at(step, j).clamp(0.0, 0.85);
+                    scaled_model(&omegas[j],
+                                 node_mult[j] / (1.0 - load))
+                })
+                .collect();
+            let real_times = estimate_times(g, &assignment, n, &scaled);
+            match schedule(g, spec, cluster, opts, &mut assignment,
+                           &real_times, &scaled, &cfg) {
+                SchedulerDecision::Keep => {}
+                SchedulerDecision::Diffused(_) => {
+                    report.slo.diffusions += 1;
+                    host_times =
+                        estimate_times(g, &assignment, n, omegas);
+                    coll_s = collection_transfer_s(
+                        g, &payload, dims, &assignment, cluster, opts,
+                    );
+                }
+                SchedulerDecision::Replanned => {
+                    report.slo.replans += 1;
+                    host_times =
+                        estimate_times(g, &assignment, n, omegas);
+                    coll_s = collection_transfer_s(
+                        g, &payload, dims, &assignment, cluster, opts,
+                    );
+                }
+            }
+            next_sched += traffic.scheduler_period_s;
+        }
+
+        if t_arr <= t_next {
+            // admission
+            idx += 1;
+            if batcher.len() >= queue_cap {
+                if traffic.spill {
+                    report.slo.spilled += 1;
+                } else {
+                    report.slo.shed += 1;
+                }
+            } else {
+                batcher.push(t_arr);
+            }
+        } else {
+            // release one micro-batch at t_form
+            let batch = batcher.take_batch();
+            let b = batch.len();
+            // the executable only exists at power-of-two shapes; a
+            // 17..=32 batch really pays for the 32 bucket
+            let slot = bucket(b);
+            let coll_time = coll_s
+                * (COLL_FIXED_FRAC
+                    + (1.0 - COLL_FIXED_FRAC) * b as f64
+                        / traffic.batch.max_batch as f64);
+            let coll_done = t_next + coll_time;
+            let start_exec = coll_done.max(exec_free);
+            let per_fog =
+                exec_per_fog(&host_times, &node_mult, &trace, start_exec);
+            let slowest =
+                per_fog.iter().cloned().fold(0f64, f64::max);
+            let exec_time = (slowest + report.base_sync_s)
+                * (EXEC_FIXED_FRAC
+                    + (1.0 - EXEC_FIXED_FRAC) * slot as f64);
+            let finish = start_exec + exec_time;
+            coll_free = coll_done;
+            exec_free = finish;
+            exec_busy += exec_time;
+            finishes.push(finish);
+            report.slo.batches += 1;
+            batch_total += b;
+            report.slo.completed += b;
+            for &a in &batch {
+                latencies.push(finish - a);
+            }
+        }
+    }
+
+    // ---- summaries -------------------------------------------------------
+    report.slo.mean_batch = if report.slo.batches > 0 {
+        batch_total as f64 / report.slo.batches as f64
+    } else {
+        0.0
+    };
+    report.exec_utilization = if exec_free > 0.0 {
+        (exec_busy / exec_free.max(traffic.duration_s)).min(1.0)
+    } else {
+        0.0
+    };
+    report.queue_len_mean = if qlen_ticks > 0 {
+        qlen_sum as f64 / qlen_ticks as f64
+    } else {
+        0.0
+    };
+    report.slo.finalize(&latencies);
+    report.slo.queue = queue;
+    report.latencies = latencies;
+    Ok(report)
+}
+
+/// JSON record of one loadtest run (everything in here is deterministic
+/// for a fixed seed).
+pub fn report_json(label: &str, traffic: &TrafficConfig,
+                   r: &LoadtestReport) -> Json {
+    let slo = &r.slo;
+    obj(vec![
+        ("label", s(label)),
+        ("arrival", s(traffic.arrival.name())),
+        ("rps", num(traffic.rps)),
+        ("duration_s", num(traffic.duration_s)),
+        // string: a u64 seed above 2^53 would lose digits as an f64,
+        // breaking replay from the recorded artifact
+        ("seed", s(&traffic.seed.to_string())),
+        ("slo_ms", num(traffic.slo_s * 1e3)),
+        ("max_batch", num(traffic.batch.max_batch as f64)),
+        ("batch_deadline_ms", num(traffic.batch.max_delay_s * 1e3)),
+        ("queue_cap", num(traffic.effective_queue_cap() as f64)),
+        ("offered", num(slo.offered as f64)),
+        ("completed", num(slo.completed as f64)),
+        ("within_slo", num(slo.within_slo as f64)),
+        ("shed", num(slo.shed as f64)),
+        ("spilled", num(slo.spilled as f64)),
+        ("shed_rate", num(slo.shed_rate())),
+        ("goodput_rps", num(slo.goodput_rps)),
+        ("p50_ms", num(slo.latency.p50_s * 1e3)),
+        ("p95_ms", num(slo.latency.p95_s * 1e3)),
+        ("p99_ms", num(slo.latency.p99_s * 1e3)),
+        ("mean_ms", num(slo.latency.mean_s * 1e3)),
+        ("batches", num(slo.batches as f64)),
+        ("mean_batch", num(slo.mean_batch)),
+        ("diffusions", num(slo.diffusions as f64)),
+        ("replans", num(slo.replans as f64)),
+        ("oom", Json::Bool(slo.oom)),
+        ("exec_utilization", num(r.exec_utilization)),
+        ("queue_len_max", num(r.queue_len_max as f64)),
+        ("queue_len_mean", num(r.queue_len_mean)),
+        ("queue_skew", num(slo.queue.mean_skew())),
+        (
+            "per_fog_queue_depth_mean_s",
+            arr(slo.queue.per_fog_mean().into_iter().map(num)),
+        ),
+        (
+            "per_fog_queue_depth_max_s",
+            arr(slo.queue.per_fog_max().into_iter().map(num)),
+        ),
+        ("collection_s", num(r.base_collection_s)),
+        ("sync_s", num(r.base_sync_s)),
+        ("wire_bytes", num(r.base_wire_bytes as f64)),
+    ])
+}
+
+/// Top-level loadtest document shared by the CLI's BENCH_loadtest.json,
+/// the bench harness and the loadtest experiment — one schema.
+pub fn doc_json(dataset: &str, model: &str, net: &str, runs: Vec<Json>)
+                -> Json {
+    obj(vec![
+        ("benchmark", s("loadtest")),
+        ("dataset", s(dataset)),
+        ("model", s(model)),
+        ("net", s(net)),
+        ("runs", arr(runs)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::NetKind;
+    use crate::runtime::EngineKind;
+
+    fn tiny() -> (Graph, DatasetSpec) {
+        let (mut g, _) = crate::graph::generate::sbm(400, 2000, 8, 0.85, 3);
+        let mut rng = crate::util::rng::Rng::new(5);
+        g.feature_dim = 16;
+        g.features = (0..400 * 16)
+            .map(|_| if rng.bool(0.15) { 1.0 } else { 0.0 })
+            .collect();
+        let spec = DatasetSpec {
+            name: "tiny",
+            vertices: 400,
+            edges: 2000,
+            feature_dim: 16,
+            classes: 3,
+            duration: 1,
+            window: 1,
+            seed: 1,
+        };
+        (g, spec)
+    }
+
+    fn engine() -> Engine {
+        let dir = std::env::temp_dir().join("traffic_sim_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        Engine::new(EngineKind::Reference, &dir).unwrap()
+    }
+
+    fn fog_setup(g: &Graph) -> (Cluster, ServeOpts, Vec<PerfModel>) {
+        let cluster = Cluster::case_study(NetKind::Wifi);
+        let opts = ServeOpts::new("gcn", Placement::Iep,
+                                  ServeOpts::co_codec(g));
+        let omegas = vec![PerfModel::uncalibrated(); cluster.len()];
+        (cluster, opts, omegas)
+    }
+
+    fn quick_traffic() -> TrafficConfig {
+        TrafficConfig {
+            rps: 60.0,
+            duration_s: 6.0,
+            seed: 42,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn loadtest_is_deterministic_for_a_fixed_seed() {
+        let (g, spec) = tiny();
+        let (cluster, opts, omegas) = fog_setup(&g);
+        let mut eng = engine();
+        let traffic = quick_traffic();
+        let a = run_loadtest(&g, &spec, &cluster, &opts, &traffic,
+                             &omegas, &mut eng)
+            .unwrap();
+        let b = run_loadtest(&g, &spec, &cluster, &opts, &traffic,
+                             &omegas, &mut eng)
+            .unwrap();
+        assert_eq!(a.latencies, b.latencies);
+        assert_eq!(a.slo.offered, b.slo.offered);
+        assert_eq!(a.slo.shed, b.slo.shed);
+        assert_eq!(a.slo.goodput_rps, b.slo.goodput_rps);
+        assert_eq!(a.slo.queue.samples, b.slo.queue.samples);
+        assert!(a.slo.offered > 0);
+        assert!(a.slo.completed > 0);
+        // every offered request is accounted for
+        assert_eq!(
+            a.slo.offered,
+            a.slo.completed + a.slo.shed + a.slo.spilled
+        );
+    }
+
+    #[test]
+    fn different_seed_changes_the_stream() {
+        let (g, spec) = tiny();
+        let (cluster, opts, omegas) = fog_setup(&g);
+        let mut eng = engine();
+        let t1 = quick_traffic();
+        let t2 = TrafficConfig { seed: 43, ..t1 };
+        let a = run_loadtest(&g, &spec, &cluster, &opts, &t1, &omegas,
+                             &mut eng)
+            .unwrap();
+        let b = run_loadtest(&g, &spec, &cluster, &opts, &t2, &omegas,
+                             &mut eng)
+            .unwrap();
+        assert_ne!(a.latencies, b.latencies);
+    }
+
+    #[test]
+    fn overload_sheds_and_respects_queue_bound() {
+        let (g, spec) = tiny();
+        let (cluster, opts, omegas) = fog_setup(&g);
+        let mut eng = engine();
+        let traffic = TrafficConfig {
+            rps: 4000.0,
+            duration_s: 4.0,
+            queue_cap: 64,
+            seed: 7,
+            ..Default::default()
+        };
+        let r = run_loadtest(&g, &spec, &cluster, &opts, &traffic,
+                             &omegas, &mut eng)
+            .unwrap();
+        assert!(r.slo.shed > 0, "no shedding under 40x overload");
+        assert!(r.queue_len_max <= 64);
+        assert!(r.slo.shed_rate() > 0.3);
+        // goodput can't exceed what the SLO admits
+        assert!(r.slo.within_slo <= r.slo.completed);
+    }
+
+    #[test]
+    fn spill_replaces_shed() {
+        let (g, spec) = tiny();
+        let (cluster, opts, omegas) = fog_setup(&g);
+        let mut eng = engine();
+        let traffic = TrafficConfig {
+            rps: 4000.0,
+            duration_s: 2.0,
+            queue_cap: 64,
+            spill: true,
+            seed: 7,
+            ..Default::default()
+        };
+        let r = run_loadtest(&g, &spec, &cluster, &opts, &traffic,
+                             &omegas, &mut eng)
+            .unwrap();
+        assert_eq!(r.slo.shed, 0);
+        assert!(r.slo.spilled > 0);
+    }
+
+    #[test]
+    fn batching_beats_serial_service() {
+        // with batching off (max_batch 1) the same stream must finish
+        // with strictly lower goodput than with micro-batching on
+        let (g, spec) = tiny();
+        let (cluster, opts, omegas) = fog_setup(&g);
+        let mut eng = engine();
+        let batched = TrafficConfig {
+            rps: 300.0,
+            duration_s: 5.0,
+            seed: 13,
+            ..Default::default()
+        };
+        let serial = TrafficConfig {
+            batch: BatchPolicy { max_batch: 1, max_delay_s: 0.0 },
+            ..batched
+        };
+        let rb = run_loadtest(&g, &spec, &cluster, &opts, &batched,
+                              &omegas, &mut eng)
+            .unwrap();
+        let rs = run_loadtest(&g, &spec, &cluster, &opts, &serial,
+                              &omegas, &mut eng)
+            .unwrap();
+        assert!(
+            rb.slo.goodput_rps > rs.slo.goodput_rps,
+            "batched {} !> serial {}",
+            rb.slo.goodput_rps,
+            rs.slo.goodput_rps
+        );
+    }
+
+    #[test]
+    fn report_json_has_the_headline_fields() {
+        let (g, spec) = tiny();
+        let (cluster, opts, omegas) = fog_setup(&g);
+        let mut eng = engine();
+        let traffic = quick_traffic();
+        let r = run_loadtest(&g, &spec, &cluster, &opts, &traffic,
+                             &omegas, &mut eng)
+            .unwrap();
+        let j = report_json("fograph", &traffic, &r);
+        for key in ["goodput_rps", "p50_ms", "p95_ms", "p99_ms",
+                    "shed_rate", "per_fog_queue_depth_mean_s"] {
+            assert!(j.get(key).is_some(), "missing {key}");
+        }
+        let txt = j.to_string();
+        let parsed = Json::parse(&txt).unwrap();
+        assert_eq!(parsed.get("label").unwrap().as_str(), Some("fograph"));
+    }
+}

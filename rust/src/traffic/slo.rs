@@ -1,0 +1,208 @@
+//! SLO accounting for sustained-traffic runs: latency percentiles,
+//! goodput (completions inside the latency objective per second), shed
+//! rate and per-fog queue-depth timelines. All summaries build on
+//! `util/stats`; nothing here touches the wall clock.
+
+use crate::util::stats;
+
+/// Percentile summary of per-request end-to-end latencies (seconds).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct LatencySummary {
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub p99_s: f64,
+    pub mean_s: f64,
+    pub max_s: f64,
+}
+
+impl LatencySummary {
+    pub fn from_samples(xs: &[f64]) -> LatencySummary {
+        LatencySummary {
+            p50_s: stats::percentile(xs, 50.0),
+            p95_s: stats::percentile(xs, 95.0),
+            p99_s: stats::percentile(xs, 99.0),
+            mean_s: stats::mean(xs),
+            max_s: xs.iter().cloned().fold(0f64, f64::max),
+        }
+    }
+}
+
+/// Per-fog queue-depth samples over the run, one row per sampling tick.
+/// Depths are in *work seconds* (queued requests × that fog's marginal
+/// per-request execution time under its current background load), which
+/// is the quantity the dual-mode scheduler balances.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct QueueTimeline {
+    pub samples: Vec<Vec<f64>>,
+}
+
+impl QueueTimeline {
+    pub fn record(&mut self, depths: Vec<f64>) {
+        debug_assert!(
+            self.samples.last().map_or(true, |p| p.len() == depths.len())
+        );
+        self.samples.push(depths);
+    }
+
+    pub fn num_fogs(&self) -> usize {
+        self.samples.first().map_or(0, |r| r.len())
+    }
+
+    pub fn per_fog_mean(&self) -> Vec<f64> {
+        let n = self.num_fogs();
+        let mut acc = vec![0f64; n];
+        for row in &self.samples {
+            for (a, &d) in acc.iter_mut().zip(row) {
+                *a += d;
+            }
+        }
+        let steps = self.samples.len().max(1) as f64;
+        for a in acc.iter_mut() {
+            *a /= steps;
+        }
+        acc
+    }
+
+    pub fn per_fog_max(&self) -> Vec<f64> {
+        let n = self.num_fogs();
+        let mut acc = vec![0f64; n];
+        for row in &self.samples {
+            for (a, &d) in acc.iter_mut().zip(row) {
+                *a = a.max(d);
+            }
+        }
+        acc
+    }
+
+    /// Mean over ticks of (max fog depth / mean fog depth) — 1.0 means
+    /// perfectly balanced queues; the scheduler's λ applies to this.
+    pub fn mean_skew(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 1.0;
+        }
+        let mut acc = 0f64;
+        let mut counted = 0usize;
+        for row in &self.samples {
+            let mean = stats::mean(row);
+            if mean <= 0.0 {
+                continue;
+            }
+            let mx = row.iter().cloned().fold(0f64, f64::max);
+            acc += mx / mean;
+            counted += 1;
+        }
+        if counted == 0 {
+            1.0
+        } else {
+            acc / counted as f64
+        }
+    }
+}
+
+/// Full SLO accounting of one loadtest run.
+#[derive(Clone, Debug, Default)]
+pub struct SloReport {
+    /// Requests the generator offered.
+    pub offered: usize,
+    /// Requests served by the fog tier.
+    pub completed: usize,
+    /// Completions within the latency objective.
+    pub within_slo: usize,
+    /// Requests dropped by admission control.
+    pub shed: usize,
+    /// Requests redirected to the cloud tier by admission control
+    /// (served out-of-band; excluded from fog latency stats).
+    pub spilled: usize,
+    pub slo_s: f64,
+    pub duration_s: f64,
+    pub latency: LatencySummary,
+    /// Within-SLO completions per second of offered-traffic window.
+    pub goodput_rps: f64,
+    pub batches: usize,
+    pub mean_batch: f64,
+    /// Dual-mode scheduler decisions taken mid-run.
+    pub diffusions: usize,
+    pub replans: usize,
+    /// A placement exceeded fog memory; the run was aborted.
+    pub oom: bool,
+    pub queue: QueueTimeline,
+}
+
+impl SloReport {
+    pub fn shed_rate(&self) -> f64 {
+        if self.offered == 0 {
+            0.0
+        } else {
+            self.shed as f64 / self.offered as f64
+        }
+    }
+
+    /// Fill the derived fields from raw per-request latencies.
+    pub fn finalize(&mut self, latencies: &[f64]) {
+        self.latency = LatencySummary::from_samples(latencies);
+        self.within_slo =
+            latencies.iter().filter(|&&l| l <= self.slo_s).count();
+        self.goodput_rps = if self.duration_s > 0.0 {
+            self.within_slo as f64 / self.duration_s
+        } else {
+            0.0
+        };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_summary_percentiles() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64 / 100.0).collect();
+        let s = LatencySummary::from_samples(&xs);
+        assert!((s.p50_s - 0.505).abs() < 1e-9);
+        assert!((s.p95_s - 0.9505).abs() < 1e-6);
+        assert!((s.p99_s - 0.9901).abs() < 1e-6);
+        assert_eq!(s.max_s, 1.0);
+        assert!((s.mean_s - 0.505).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_latencies_are_all_zero() {
+        let s = LatencySummary::from_samples(&[]);
+        assert_eq!(s, LatencySummary::default());
+    }
+
+    #[test]
+    fn finalize_counts_slo_and_goodput() {
+        let mut r = SloReport {
+            offered: 6,
+            completed: 4,
+            shed: 2,
+            slo_s: 0.5,
+            duration_s: 2.0,
+            ..Default::default()
+        };
+        r.finalize(&[0.1, 0.2, 0.4, 0.9]);
+        assert_eq!(r.within_slo, 3);
+        assert!((r.goodput_rps - 1.5).abs() < 1e-12);
+        assert!((r.shed_rate() - 2.0 / 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn queue_timeline_summaries() {
+        let mut q = QueueTimeline::default();
+        q.record(vec![1.0, 1.0]);
+        q.record(vec![3.0, 1.0]);
+        assert_eq!(q.num_fogs(), 2);
+        assert_eq!(q.per_fog_mean(), vec![2.0, 1.0]);
+        assert_eq!(q.per_fog_max(), vec![3.0, 1.0]);
+        // tick skews: 1.0 and 3/2 → mean 1.25
+        assert!((q.mean_skew() - 1.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_timeline_is_balanced() {
+        let q = QueueTimeline::default();
+        assert_eq!(q.mean_skew(), 1.0);
+        assert!(q.per_fog_mean().is_empty());
+    }
+}

@@ -158,6 +158,24 @@ mod tests {
     }
 
     #[test]
+    fn percentile_edge_cases_for_slo_tails() {
+        // unsorted input; the SLO metrics rely on these exact semantics
+        let xs = [4.0, 1.0, 3.0, 2.0];
+        assert!((percentile(&xs, 95.0) - 3.85).abs() < 1e-12);
+        assert!((percentile(&xs, 99.0) - 3.97).abs() < 1e-12);
+        // degenerate inputs
+        assert_eq!(percentile(&[], 95.0), 0.0);
+        assert_eq!(percentile(&[7.5], 99.0), 7.5);
+        // monotone in q
+        let mut last = f64::MIN;
+        for q in [0.0, 10.0, 50.0, 90.0, 95.0, 99.0, 100.0] {
+            let p = percentile(&xs, q);
+            assert!(p >= last);
+            last = p;
+        }
+    }
+
+    #[test]
     fn linreg_recovers_plane() {
         // y = 3 x0 - 2 x1 + 5
         let mut xs = Vec::new();

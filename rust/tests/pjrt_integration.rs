@@ -30,7 +30,8 @@ fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
 #[test]
 fn pjrt_matches_reference_on_siot_all_models() {
     let Some(dir) = artifacts_dir() else { return };
-    let g = datasets::load_or_generate(Path::new("data"), "siot");
+    let g = datasets::load_or_generate(Path::new("data"), "siot")
+        .expect("siot twin");
     let mut pjrt = Engine::new(EngineKind::Pjrt, dir).expect("pjrt engine");
     let mut refe = Engine::new(EngineKind::Reference, dir).unwrap();
     // 3-way partition, includes halo exchange across fogs
@@ -71,7 +72,8 @@ fn pjrt_matches_reference_on_siot_all_models() {
 #[test]
 fn pjrt_matches_reference_astgcn_pems() {
     let Some(dir) = artifacts_dir() else { return };
-    let g = datasets::load_or_generate(Path::new("data"), "pems");
+    let g = datasets::load_or_generate(Path::new("data"), "pems")
+        .expect("pems twin");
     let spec = datasets::PEMS;
     let (payload, dims) =
         fograph::serving::pipeline::query_payload(&g, &spec, 900);
