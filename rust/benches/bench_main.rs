@@ -17,10 +17,13 @@ use fograph::net::NetKind;
 use fograph::partition::{self, MultilevelParams};
 use fograph::placement::{hungarian, lbap};
 use fograph::profile::PerfModel;
-use fograph::runtime::{pad, reference, Engine, EngineKind};
+use fograph::runtime::csr_backend::{csr_aggregate, run_layer_csr};
+use fograph::runtime::{pad, reference, CsrPartition, Engine,
+                       EngineKind};
 use fograph::serving::{mode_setup, serve, Placement, ServeOpts};
-use fograph::traffic::{doc_json, report_json, run_loadtest,
+use fograph::traffic::{doc_json, report_json, run_loadtest, ExecMode,
                        TrafficConfig};
+use fograph::util::json::{num, obj, s, Json};
 use fograph::util::rng::Rng;
 use fograph::util::timer::{bench, black_box, BenchResult};
 
@@ -147,10 +150,43 @@ fn main() {
     let dir = std::env::temp_dir().join("bench_engine");
     std::fs::create_dir_all(&dir).unwrap();
     let mut engine = Engine::new(EngineKind::Reference, &dir).unwrap();
+
+    // ---- hot paths: sparse CSR backend --------------------------------------
+    let csr = CsrPartition::from_edges(&edges);
+    run("kernel/csr_spmm_aggregate_512v", 0.5, &mut || {
+        black_box(csr_aggregate(&csr, &h, 52));
+    });
+    let wb_gcn = engine.weights("gcn", "benchsiot", 52, 2).clone();
+    run("kernel/csr_gcn_layer_512v", 0.5, &mut || {
+        black_box(
+            run_layer_csr("gcn", 0, &wb_gcn, &h, 52, &csr, false, 1)
+                .unwrap(),
+        );
+    });
+    // block-diagonal batch of 8: one stacked GEMM vs 8 solo layers
+    let h8: Vec<f32> =
+        (0..8).flat_map(|_| h.iter().copied()).collect();
+    run("kernel/csr_gcn_layer_batched_b8", 1.0, &mut || {
+        black_box(
+            run_layer_csr("gcn", 0, &wb_gcn, &h8, 52, &csr, false, 8)
+                .unwrap(),
+        );
+    });
+
     run("exec/bsp_gcn_2layer_4fogs", 1.0, &mut || {
         black_box(
             fograph::exec::run_bsp(&g, &g.features, 52, &assignment, 4,
                                    "gcn", "benchsiot", 2, &mut engine)
+                .unwrap(),
+        );
+    });
+    // measured path: CSR kernels, one std::thread worker per fog,
+    // block-diagonal batch of 4 — compare against the serial bench above
+    run("exec/bsp_parallel_csr_b4_4fogs", 1.0, &mut || {
+        black_box(
+            fograph::exec::run_parallel(&g, &g.features, 52,
+                                        &assignment, 4, "gcn",
+                                        "benchsiot", 2, &mut engine, 4)
                 .unwrap(),
         );
     });
@@ -266,8 +302,54 @@ fn main() {
             loadtest_runs.push(report_json(mode, &traffic_cfg, &r));
         }
     }
+    // measured mode: real CSR batched kernel execution per micro-batch
+    let measured_cfg = TrafficConfig {
+        rps: 120.0,
+        duration_s: 3.0,
+        seed: 0xBE7D,
+        exec: ExecMode::Measured,
+        ..Default::default()
+    };
+    {
+        let (cluster, topts) =
+            mode_setup("fograph", "gcn", NetKind::Wifi, &g).unwrap();
+        let om = vec![PerfModel::uncalibrated(); cluster.len()];
+        let mut mlast = None;
+        run("traffic/loadtest_fograph_measured_120rps_3s", 1.0,
+            &mut || {
+                let r = run_loadtest(&g, &spec, &cluster, &topts,
+                                     &measured_cfg, &om, &mut engine)
+                    .unwrap();
+                mlast = Some(r);
+            });
+        if let Some(r) = mlast {
+            loadtest_runs
+                .push(report_json("fograph-measured", &measured_cfg,
+                                  &r));
+        }
+    }
     if !loadtest_runs.is_empty() {
-        let doc = doc_json("benchsiot", "gcn", "WiFi", loadtest_runs);
+        // kernel timings + engine kind ride along in the bench doc
+        let kernels: Vec<Json> = results
+            .iter()
+            .filter(|r| {
+                r.name.starts_with("kernel/")
+                    || r.name.starts_with("exec/")
+            })
+            .map(|r| {
+                obj(vec![
+                    ("name", s(&r.name)),
+                    ("mean_ms", num(r.mean_ns / 1e6)),
+                    ("p50_ms", num(r.p50_ns / 1e6)),
+                    ("p95_ms", num(r.p95_ns / 1e6)),
+                    ("iters", num(r.iters as f64)),
+                ])
+            })
+            .collect();
+        // runs mix analytic (grounding engine) and measured
+        // (csr-batched) pricing; each run row carries its own engine
+        let doc = doc_json("benchsiot", "gcn", "WiFi", "mixed",
+                           loadtest_runs, kernels);
         std::fs::write("BENCH_loadtest.json", format!("{doc}\n"))
             .expect("write BENCH_loadtest.json");
         println!("\nwrote BENCH_loadtest.json");

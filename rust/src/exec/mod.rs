@@ -1,6 +1,9 @@
 //! Distributed execution runtime (paper §III-E): BSP layer loop with
-//! halo-exchange synchronization between GNN layers.
+//! halo-exchange synchronization between GNN layers, in two flavors —
+//! the engine-driven serial loop (`run_bsp`) and the measured batched
+//! path (`run_parallel` / `BatchedBspPlan`) that executes sparse CSR
+//! kernels on one `std::thread` worker per fog.
 
 pub mod bsp;
 
-pub use bsp::{run as run_bsp, BspResult};
+pub use bsp::{run as run_bsp, run_parallel, BatchedBspPlan, BspResult};

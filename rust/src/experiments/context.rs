@@ -60,6 +60,7 @@ impl Ctx {
         let key = match kind {
             EngineKind::Pjrt => "pjrt",
             EngineKind::Reference => "ref",
+            EngineKind::Csr => "csr",
         };
         if !self.engines.contains_key(key) {
             let eng = match Engine::new(kind, &self.artifacts_dir) {

@@ -64,7 +64,8 @@ pub fn run(ctx: &mut Ctx) -> String {
         runs.push(report_json(mode, &traffic, &r));
     }
 
-    let doc = doc_json(dataset, model, net.name(), runs);
+    let doc = doc_json(dataset, model, net.name(), "analytic", runs,
+                       Vec::new());
     let _ = std::fs::create_dir_all(&ctx.results_dir);
     let _ = std::fs::write(
         ctx.results_dir.join("loadtest.json"),

@@ -53,6 +53,7 @@ pub fn fig17(ctx: &mut Ctx) -> String {
     let engine_note = match ctx.engine_kind {
         EngineKind::Pjrt => "PJRT (AOT artifacts)",
         EngineKind::Reference => "reference",
+        EngineKind::Csr => "sparse CSR",
     };
     let mut t = Table::new(&[
         "dataset", "1 fog (s)", "2 fogs (s)", "3 fogs (s)", "4 fogs (s)",

@@ -16,7 +16,8 @@ use fograph::profile::PerfModel;
 use fograph::runtime::{reference, Engine, EngineKind};
 use fograph::serving::{self, pipeline};
 use fograph::traffic::{doc_json, report_json, run_loadtest, ArrivalKind,
-                       BatchPolicy, LoadtestReport, TrafficConfig};
+                       BatchPolicy, ExecMode, LoadtestReport,
+                       TrafficConfig};
 use fograph::util::cli::Args;
 use fograph::util::json::Json;
 
@@ -47,19 +48,34 @@ USAGE:
   repro dataset  --name <siot|yelp|pems|rmat20k|...|all> [--out data]
   repro serve    --dataset <name> --model <gcn|gat|sage|astgcn>
                  [--mode cloud|single-fog|multi-fog|fograph]
-                 [--net 4g|5g|wifi] [--engine pjrt|ref] [--repeats N]
+                 [--net 4g|5g|wifi] [--engine pjrt|ref|csr] [--repeats N]
   repro loadtest --dataset <name> --model <gcn|gat|sage|astgcn>
                  [--mode cloud|single-fog|multi-fog|fograph|all]
-                 [--net 4g|5g|wifi] [--engine pjrt|ref]
+                 [--net 4g|5g|wifi] [--engine pjrt|ref|csr]
+                 [--exec analytic|measured]
                  [--arrival poisson|bursty|diurnal] [--rps R]
                  [--duration SECONDS] [--seed N] [--slo-ms MS]
                  [--batch-max N] [--batch-deadline-ms MS]
                  [--queue-cap N] [--spill] [--no-background-load]
                  [--scheduler-period SECONDS] [--out BENCH_loadtest.json]
   repro exp      <fig3|fig4|fig8|fig11|fig12|table4|fig13|table5|fig14|
-                  fig15|fig16|fig17|fig18|loadtest|all> [--engine pjrt|ref]
+                  fig15|fig16|fig17|fig18|loadtest|all>
+                 [--engine pjrt|ref|csr]
                  [--repeats N] [--data data] [--artifacts artifacts]
-  repro list     [--data data] [--artifacts artifacts]"
+  repro list     [--data data] [--artifacts artifacts]
+
+ENGINES (see rust/src/runtime/backend.rs):
+  ref   pure-Rust dense reference forward (numeric oracle)
+  csr   sparse CSR aggregation, block-diagonal batched kernels
+  pjrt  AOT HLO artifacts on the PJRT CPU client (needs --features pjrt)
+
+EXEC MODES (loadtest only):
+  analytic  price batches with the calibratable ω models; runs are
+            bit-reproducible for a fixed seed (the default)
+  measured  execute every micro-batch on the real CSR batched kernels
+            (one std::thread worker per fog) and feed measured per-fog
+            timings into the online profiler, so mid-run replans use
+            observed costs; gcn|gat|sage only"
     );
 }
 
@@ -114,6 +130,7 @@ fn make_engine(args: &Args) -> Engine {
         if cfg!(feature = "pjrt") { "pjrt" } else { "ref" };
     let engine_kind = match args.get_or("engine", default_engine) {
         "ref" | "reference" => EngineKind::Reference,
+        "csr" => EngineKind::Csr,
         _ => EngineKind::Pjrt,
     };
     match Engine::new(engine_kind, &artifacts) {
@@ -223,6 +240,12 @@ fn cmd_loadtest(args: &Args) -> i32 {
         eprintln!("unknown arrival process {arrival_name}");
         return 2;
     };
+    let exec_name = args.get_or("exec", "analytic");
+    let Some(exec) = ExecMode::parse(exec_name) else {
+        eprintln!("unknown exec mode {exec_name} \
+                   (expected analytic|measured)");
+        return 2;
+    };
     let traffic = TrafficConfig {
         arrival,
         rps: args.get_f64("rps", 100.0),
@@ -237,6 +260,7 @@ fn cmd_loadtest(args: &Args) -> i32 {
         spill: args.has("spill"),
         scheduler_period_s: args.get_f64("scheduler-period", 5.0),
         background_load: !args.has("no-background-load"),
+        exec,
     };
     let positive = |x: f64| x.is_finite() && x > 0.0;
     if !positive(traffic.rps) || !positive(traffic.duration_s) {
@@ -265,6 +289,14 @@ fn cmd_loadtest(args: &Args) -> i32 {
         Ok(x) => x,
         Err(code) => return code,
     };
+    if traffic.exec == ExecMode::Measured && model == "astgcn" {
+        eprintln!(
+            "--exec measured drives the CSR batched kernels, which \
+             cover gcn|gat|sage; astgcn loadtests run with --exec \
+             analytic"
+        );
+        return 2;
+    }
     let mut engine = make_engine(args);
     let mut runs: Vec<Json> = Vec::new();
     for m in modes {
@@ -287,7 +319,12 @@ fn cmd_loadtest(args: &Args) -> i32 {
         runs.push(report_json(m, &traffic, &r));
     }
     let out = args.get_or("out", "BENCH_loadtest.json");
-    let doc = doc_json(spec.name, &model, net.name(), runs);
+    let doc_engine = match traffic.exec {
+        ExecMode::Measured => "csr-batched",
+        ExecMode::Analytic => engine.backend_name(),
+    };
+    let doc = doc_json(spec.name, &model, net.name(), doc_engine, runs,
+                       Vec::new());
     match std::fs::write(out, format!("{doc}\n")) {
         Ok(()) => println!("wrote {out}"),
         Err(e) => {
@@ -348,6 +385,16 @@ fn print_loadtest(mode: &str, spec: &DatasetSpec, model: &str,
         r.queue_len_max,
         slo.queue.mean_skew()
     );
+    println!("  exec       {} ({})", r.exec_mode.name(), r.engine);
+    if !r.bucket_host_ms.is_empty() {
+        let buckets: Vec<String> = r
+            .bucket_host_ms
+            .iter()
+            .map(|&(b, ms, c)| format!("b{b}: {ms:.2} ms x{c}"))
+            .collect();
+        println!("  measured   per-bucket batch host time: {}",
+                 buckets.join(", "));
+    }
 }
 
 fn cmd_list(args: &Args) -> i32 {

@@ -1,28 +1,32 @@
-//! Execution engines behind the BSP runtime:
+//! Engine façade over the pluggable execution backends (`backend.rs`):
 //!
 //! * `EngineKind::Pjrt` — loads the AOT HLO-text artifacts produced by the
 //!   Python compile path, compiles them ONCE on the PJRT CPU client (one
 //!   executable per bucket, cached) and executes layers from the request
 //!   path. Python never runs here.
-//! * `EngineKind::Reference` — the in-tree pure-Rust forward (numeric
-//!   oracle; also used for very large sweeps where bucket padding cost
-//!   obscures the effect under study).
+//! * `EngineKind::Reference` — the in-tree pure-Rust dense forward
+//!   (numeric oracle; also used for very large sweeps where bucket
+//!   padding cost obscures the effect under study).
+//! * `EngineKind::Csr` — sparse CSR aggregation with block-diagonal
+//!   batched execution (`csr_backend.rs`); no O(V²) dense buffers.
 //!
-//! Weight bundles come from `artifacts/weights_<model>_<dataset>.fgw`
-//! (training output). When a bundle is absent the engine falls back to a
-//! deterministic glorot init so latency experiments remain runnable
-//! without the training step; accuracy experiments require real weights.
+//! The engine owns weight bundles (from
+//! `artifacts/weights_<model>_<dataset>.fgw`, the training output) and
+//! the artifact manifest; backends own their kernel state (compiled
+//! executables, CSR views). When a bundle is absent the engine falls
+//! back to a deterministic glorot init so latency experiments remain
+//! runnable without the training step; accuracy experiments require
+//! real weights.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::time::Instant;
 
 use crate::util::rng::{mix64, Rng};
 
-#[cfg(feature = "pjrt")]
-use super::artifacts::ArtifactMeta;
 use super::artifacts::{Manifest, ManifestError};
-use super::pad::{self, EdgeArrays};
+use super::backend::{ExecBackend, LayerCtx, ReferenceBackend};
+use super::csr_backend::CsrBackend;
+use super::pad;
 use super::reference;
 use super::weights::{read_fgw, write_fgw, WeightBundle};
 
@@ -34,6 +38,9 @@ pub enum EngineError {
     Io(std::io::Error),
     /// Unknown model name reached the runtime (user input).
     Model(String),
+    /// The requested execution is outside this backend's envelope
+    /// (e.g. a dense-adjacency build above the sizing guard).
+    Unsupported(String),
 }
 
 impl std::fmt::Display for EngineError {
@@ -44,6 +51,7 @@ impl std::fmt::Display for EngineError {
             EngineError::Xla(m) => write!(f, "xla: {m}"),
             EngineError::Io(e) => write!(f, "io: {e}"),
             EngineError::Model(m) => write!(f, "unknown model {m}"),
+            EngineError::Unsupported(m) => write!(f, "unsupported: {m}"),
         }
     }
 }
@@ -74,6 +82,12 @@ impl From<pad::UnknownModel> for EngineError {
     }
 }
 
+impl From<pad::DenseAdjTooLarge> for EngineError {
+    fn from(e: pad::DenseAdjTooLarge) -> Self {
+        EngineError::Unsupported(e.to_string())
+    }
+}
+
 #[cfg(feature = "pjrt")]
 impl From<xla::Error> for EngineError {
     fn from(e: xla::Error) -> Self {
@@ -85,61 +99,26 @@ impl From<xla::Error> for EngineError {
 pub enum EngineKind {
     Pjrt,
     Reference,
+    Csr,
 }
 
 /// Output of one layer execution.
 #[derive(Clone, Debug)]
 pub struct LayerOut {
-    /// [n, out_dim] row-major, unpadded.
+    /// [n, out_dim] row-major, unpadded ([batch * n, out_dim] for the
+    /// batched entry points).
     pub h: Vec<f32>,
     pub out_dim: usize,
-    /// Host wall-clock of the compute (scaled by fog multipliers upstream).
+    /// Host wall-clock of the compute (scaled by fog multipliers
+    /// upstream).
     pub host_seconds: f64,
-}
-
-#[cfg(feature = "pjrt")]
-struct PjrtState {
-    client: xla::PjRtClient,
-    executables: HashMap<String, xla::PjRtLoadedExecutable>,
-    /// Trained-parameter literals per artifact — weights are constant
-    /// across the serving lifetime, so build them once (§Perf iter. 4).
-    param_literals: HashMap<String, Vec<xla::Literal>>,
-}
-
-/// Placeholder so the engine's shape is identical without the feature;
-/// no value of this type is ever constructed then.
-#[cfg(not(feature = "pjrt"))]
-#[allow(dead_code)]
-struct PjrtState {}
-
-#[cfg(feature = "pjrt")]
-fn init_pjrt(artifacts_dir: &Path)
-             -> Result<(Option<Manifest>, Option<PjrtState>), EngineError> {
-    let m = Manifest::load(artifacts_dir)?;
-    let client = xla::PjRtClient::cpu()?;
-    Ok((Some(m), Some(PjrtState {
-        client,
-        executables: HashMap::new(),
-        param_literals: HashMap::new(),
-    })))
-}
-
-#[cfg(not(feature = "pjrt"))]
-fn init_pjrt(_artifacts_dir: &Path)
-             -> Result<(Option<Manifest>, Option<PjrtState>), EngineError> {
-    Err(EngineError::Xla(
-        "built without the `pjrt` cargo feature; use the reference \
-         engine, or vendor the xla crate (see rust/Cargo.toml) and \
-         rebuild with --features pjrt"
-            .to_string(),
-    ))
 }
 
 pub struct Engine {
     pub kind: EngineKind,
     artifacts_dir: PathBuf,
     manifest: Option<Manifest>,
-    pjrt: Option<PjrtState>,
+    backend: Box<dyn ExecBackend>,
     weights: HashMap<String, WeightBundle>,
     /// Names of bundles that were random-initialized (missing on disk).
     pub synthetic_weights: Vec<String>,
@@ -153,17 +132,19 @@ fn weights_key(model: &str, dataset: &str) -> String {
 impl Engine {
     pub fn new(kind: EngineKind, artifacts_dir: &Path)
                -> Result<Engine, EngineError> {
-        let (manifest, pjrt) = match kind {
-            EngineKind::Pjrt => init_pjrt(artifacts_dir)?,
-            EngineKind::Reference => {
-                (Manifest::load(artifacts_dir).ok(), None)
+        let manifest = Manifest::load(artifacts_dir).ok();
+        let backend: Box<dyn ExecBackend> = match kind {
+            EngineKind::Reference => Box::new(ReferenceBackend),
+            EngineKind::Csr => Box::new(CsrBackend::new()),
+            EngineKind::Pjrt => {
+                new_pjrt_backend(artifacts_dir, manifest.as_ref())?
             }
         };
         Ok(Engine {
             kind,
             artifacts_dir: artifacts_dir.to_path_buf(),
             manifest,
-            pjrt,
+            backend,
             weights: HashMap::new(),
             synthetic_weights: Vec::new(),
         })
@@ -173,9 +154,14 @@ impl Engine {
         self.manifest.as_ref()
     }
 
-    /// Fetch (or lazily load / synthesize) the weight bundle.
-    pub fn weights(&mut self, model: &str, dataset: &str, f_in: usize,
-                   classes: usize) -> &WeightBundle {
+    /// The active backend's display name (for reports/benchmarks).
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// Load (or synthesize) the bundle into the cache if absent.
+    fn ensure_weights(&mut self, model: &str, dataset: &str, f_in: usize,
+                      classes: usize) {
         let key = weights_key(model, dataset);
         if !self.weights.contains_key(&key) {
             let path = self.artifacts_dir.join(format!("{key}.fgw"));
@@ -186,12 +172,19 @@ impl Engine {
                     synthesize_weights(model, f_in, classes, &key)
                 }
             };
-            self.weights.insert(key.clone(), bundle);
+            self.weights.insert(key, bundle);
         }
-        &self.weights[&key]
+    }
+
+    /// Fetch (or lazily load / synthesize) the weight bundle.
+    pub fn weights(&mut self, model: &str, dataset: &str, f_in: usize,
+                   classes: usize) -> &WeightBundle {
+        self.ensure_weights(model, dataset, f_in, classes);
+        &self.weights[&weights_key(model, dataset)]
     }
 
     /// Execute one message-passing layer on a partition.
+    #[allow(clippy::too_many_arguments)]
     pub fn run_layer(
         &mut self,
         model: &str,
@@ -199,241 +192,288 @@ impl Engine {
         layer: usize,
         h: &[f32],
         f_in: usize,
-        edges: &EdgeArrays,
+        edges: &super::pad::EdgeArrays,
         f_raw: usize,
         classes: usize,
     ) -> Result<LayerOut, EngineError> {
-        let n = edges.n;
+        self.ensure_weights(model, dataset, f_raw, classes);
         let last = layer + 1 == reference::model_layers(model);
-        match self.kind {
-            EngineKind::Reference => {
-                let wb = self
-                    .weights(model, dataset, f_raw, classes)
-                    .clone();
-                let t = Instant::now();
-                let out = reference::run_layer(model, layer, &wb, h, f_in,
-                                               edges, last)?;
-                let host = t.elapsed().as_secs_f64();
-                let out_dim = out.len() / edges.n_local.max(1);
-                let _ = n;
-                Ok(LayerOut { h: out, out_dim, host_seconds: host })
-            }
-            EngineKind::Pjrt => {
-                self.run_layer_pjrt(model, dataset, layer, h, f_in, edges,
-                                    f_raw, classes)
-            }
-        }
+        let ctx = LayerCtx {
+            model,
+            dataset,
+            layer,
+            f_in,
+            f_raw,
+            classes,
+            last,
+            weights: &self.weights[&weights_key(model, dataset)],
+        };
+        self.backend.run_layer(&ctx, h, edges)
     }
 
-    #[cfg(feature = "pjrt")]
-    fn compiled(&mut self, meta: &ArtifactMeta)
-                -> Result<(), EngineError> {
-        let st = self.pjrt.as_mut().expect("pjrt state");
-        if st.executables.contains_key(&meta.name) {
-            return Ok(());
-        }
-        if std::env::var_os("FOGRAPH_DEBUG").is_some() {
-            eprintln!("[engine] compiling {} (v={} e={} l={})",
-                      meta.name, meta.v_max, meta.e_max, meta.l_max);
-        }
-        let proto = xla::HloModuleProto::from_text_file(&meta.path)?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = st.client.compile(&comp)?;
-        st.executables.insert(meta.name.clone(), exe);
-        Ok(())
-    }
-
-    /// Unreachable without the feature: `Engine::new(Pjrt, ..)` already
-    /// failed, so no Pjrt-kind engine exists to dispatch here.
-    #[cfg(not(feature = "pjrt"))]
+    /// Execute one layer over a block-diagonal batch of `batch`
+    /// requests sharing the partition structure (`h` is
+    /// [batch * n, f_in] block-major). Backends without a native
+    /// batched kernel fall back to a serial per-request loop.
     #[allow(clippy::too_many_arguments)]
-    fn run_layer_pjrt(
-        &mut self,
-        _model: &str,
-        _dataset: &str,
-        _layer: usize,
-        _h: &[f32],
-        _f_in: usize,
-        _edges: &EdgeArrays,
-        _f_raw: usize,
-        _classes: usize,
-    ) -> Result<LayerOut, EngineError> {
-        Err(EngineError::Xla("pjrt feature disabled".to_string()))
-    }
-
-    #[cfg(feature = "pjrt")]
-    #[allow(clippy::too_many_arguments)]
-    fn run_layer_pjrt(
+    pub fn run_layer_batched(
         &mut self,
         model: &str,
         dataset: &str,
         layer: usize,
         h: &[f32],
         f_in: usize,
-        edges: &EdgeArrays,
+        edges: &super::pad::EdgeArrays,
         f_raw: usize,
         classes: usize,
+        batch: usize,
     ) -> Result<LayerOut, EngineError> {
-        let n = edges.n;
-        let meta = self
-            .manifest
-            .as_ref()
-            .expect("pjrt engine has manifest")
-            .select_l(model, dataset, layer, n, edges.num_edges(),
-                      edges.n_local)?
-            .clone();
-        self.compiled(&meta)?;
-        let wb = self.weights(model, dataset, f_raw, classes).clone();
-        // constant parameter literals, built once per artifact
-        if !self
-            .pjrt
-            .as_ref()
-            .unwrap()
-            .param_literals
-            .contains_key(&meta.name)
-        {
-            let mut params: Vec<xla::Literal> = Vec::new();
-            for (pname, dims) in &meta.params {
-                let t = wb
-                    .get(&format!("l{layer}.{pname}"))
-                    .expect("weight tensor for artifact param");
-                params.push(f32_literal(&t.f32_data, dims)?);
-            }
-            self.pjrt
-                .as_mut()
-                .unwrap()
-                .param_literals
-                .insert(meta.name.clone(), params);
-        }
-
-        let t0 = Instant::now();
-        let padded = pad::pad_layer(h, n, f_in, edges, meta.v_max,
-                                    meta.e_max, meta.l_max);
-        let mut literals: Vec<&xla::Literal> = Vec::new();
-        let st = self.pjrt.as_ref().unwrap();
-        let cached = &st.param_literals[&meta.name];
-        for lit in cached {
-            literals.push(lit);
-        }
-        let mut data_literals: Vec<xla::Literal> = Vec::new();
-        for (dname, dims, dtype) in &meta.data {
-            let lit = match (dname.as_str(), dtype.as_str()) {
-                ("h", _) => f32_literal(&padded.h, dims)?,
-                ("src", _) => i32_literal(&padded.src, dims)?,
-                ("dst", _) => i32_literal(&padded.dst, dims)?,
-                ("ew", _) => f32_literal(&padded.ew, dims)?,
-                ("inv_deg", _) => f32_literal(&padded.inv_deg, dims)?,
-                (other, _) => panic!("unknown data input {other}"),
-            };
-            data_literals.push(lit);
-        }
-        for lit in &data_literals {
-            literals.push(lit);
-        }
-        let exe = &st.executables[&meta.name];
-        let result = exe.execute::<&xla::Literal>(&literals)?[0][0]
-            .to_literal_sync()?;
-        let out_padded: Vec<f32> = result.to_tuple1()?.to_vec::<f32>()?;
-        let host = t0.elapsed().as_secs_f64();
-        let out_dim = meta.out_dim;
-        // the artifact computes [l_max, out_dim]; keep owned rows only
-        let l = edges.n_local;
-        let mut out = vec![0f32; l * out_dim];
-        out.copy_from_slice(&out_padded[..l * out_dim]);
-        Ok(LayerOut { h: out, out_dim, host_seconds: host })
+        self.ensure_weights(model, dataset, f_raw, classes);
+        let last = layer + 1 == reference::model_layers(model);
+        let ctx = LayerCtx {
+            model,
+            dataset,
+            layer,
+            f_in,
+            f_raw,
+            classes,
+            last,
+            weights: &self.weights[&weights_key(model, dataset)],
+        };
+        self.backend.run_layer_batched(&ctx, h, edges, batch)
     }
 
-    /// Execute the ASTGCN block on a partition (dense adjacency).
+    /// Execute the ASTGCN block on a partition.
     pub fn run_astgcn(&mut self, dataset: &str, x: &[f32], n: usize,
                       ft: usize, sub: &crate::graph::LocalGraph)
                       -> Result<LayerOut, EngineError> {
-        match self.kind {
-            EngineKind::Reference => {
-                let wb = self.weights("astgcn", dataset, ft, 0).clone();
-                let adj = pad::dense_norm_adj(sub, n);
-                let t = Instant::now();
-                let out = reference::run_astgcn(&wb, x, n, ft, &adj);
-                let host = t.elapsed().as_secs_f64();
-                let out_dim = out.len() / n;
-                Ok(LayerOut { h: out, out_dim, host_seconds: host })
+        self.ensure_weights("astgcn", dataset, ft, 0);
+        let ctx = LayerCtx {
+            model: "astgcn",
+            dataset,
+            layer: 0,
+            f_in: ft,
+            f_raw: ft,
+            classes: 0,
+            last: true,
+            weights: &self.weights[&weights_key("astgcn", dataset)],
+        };
+        self.backend.run_astgcn(&ctx, x, n, sub)
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn new_pjrt_backend(_artifacts_dir: &Path, _manifest: Option<&Manifest>)
+                    -> Result<Box<dyn ExecBackend>, EngineError> {
+    Err(EngineError::Xla(
+        "built without the `pjrt` cargo feature; use the reference or \
+         csr engine, or vendor the xla crate (see rust/Cargo.toml) and \
+         rebuild with --features pjrt"
+            .to_string(),
+    ))
+}
+
+#[cfg(feature = "pjrt")]
+fn new_pjrt_backend(artifacts_dir: &Path, manifest: Option<&Manifest>)
+                    -> Result<Box<dyn ExecBackend>, EngineError> {
+    // reuse the facade's parsed manifest; reload only to surface the
+    // precise load error when it was absent
+    let manifest = match manifest {
+        Some(m) => m.clone(),
+        None => Manifest::load(artifacts_dir)?,
+    };
+    Ok(Box::new(pjrt::PjrtBackend::new(manifest)?))
+}
+
+/// The AOT PJRT backend: per-bucket executables compiled once and
+/// cached, constant parameter literals built once per artifact.
+#[cfg(feature = "pjrt")]
+mod pjrt {
+    use std::collections::HashMap;
+    use std::time::Instant;
+
+    use super::super::artifacts::{ArtifactMeta, Manifest};
+    use super::super::backend::{ExecBackend, LayerCtx};
+    use super::super::pad::{self, EdgeArrays};
+    use super::{EngineError, LayerOut};
+
+    pub struct PjrtBackend {
+        manifest: Manifest,
+        client: xla::PjRtClient,
+        executables: HashMap<String, xla::PjRtLoadedExecutable>,
+        /// Trained-parameter literals per artifact — weights are
+        /// constant across the serving lifetime, so build them once
+        /// (§Perf iter. 4).
+        param_literals: HashMap<String, Vec<xla::Literal>>,
+    }
+
+    impl PjrtBackend {
+        pub fn new(manifest: Manifest)
+                   -> Result<PjrtBackend, EngineError> {
+            let client = xla::PjRtClient::cpu()?;
+            Ok(PjrtBackend {
+                manifest,
+                client,
+                executables: HashMap::new(),
+                param_literals: HashMap::new(),
+            })
+        }
+
+        fn compiled(&mut self, meta: &ArtifactMeta)
+                    -> Result<(), EngineError> {
+            if self.executables.contains_key(&meta.name) {
+                return Ok(());
             }
-            EngineKind::Pjrt => self.run_astgcn_pjrt(dataset, x, n, ft, sub),
+            if std::env::var_os("FOGRAPH_DEBUG").is_some() {
+                eprintln!("[engine] compiling {} (v={} e={} l={})",
+                          meta.name, meta.v_max, meta.e_max, meta.l_max);
+            }
+            let proto = xla::HloModuleProto::from_text_file(&meta.path)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            self.executables.insert(meta.name.clone(), exe);
+            Ok(())
+        }
+
+        fn ensure_params(&mut self, meta: &ArtifactMeta,
+                         ctx: &LayerCtx<'_>)
+                         -> Result<(), EngineError> {
+            if self.param_literals.contains_key(&meta.name) {
+                return Ok(());
+            }
+            let mut params: Vec<xla::Literal> = Vec::new();
+            for (pname, dims) in &meta.params {
+                let t = ctx
+                    .weights
+                    .get(&format!("l{}.{pname}", ctx.layer))
+                    .expect("weight tensor for artifact param");
+                params.push(f32_literal(&t.f32_data, dims)?);
+            }
+            self.param_literals.insert(meta.name.clone(), params);
+            Ok(())
         }
     }
 
-    /// See `run_layer_pjrt`: unreachable without the feature.
-    #[cfg(not(feature = "pjrt"))]
-    fn run_astgcn_pjrt(&mut self, _dataset: &str, _x: &[f32], _n: usize,
-                       _ft: usize, _sub: &crate::graph::LocalGraph)
-                       -> Result<LayerOut, EngineError> {
-        Err(EngineError::Xla("pjrt feature disabled".to_string()))
-    }
-
-    #[cfg(feature = "pjrt")]
-    fn run_astgcn_pjrt(&mut self, dataset: &str, x: &[f32], n: usize,
-                       ft: usize, sub: &crate::graph::LocalGraph)
-                       -> Result<LayerOut, EngineError> {
-        let meta = self
-            .manifest
-            .as_ref()
-            .expect("manifest")
-            .select("astgcn", dataset, 0, n, 0)?
-            .clone();
-        self.compiled(&meta)?;
-        let wb = self.weights("astgcn", dataset, ft, 0).clone();
-        let t0 = Instant::now();
-        let v_max = meta.v_max;
-        let mut xp = vec![0f32; v_max * ft];
-        xp[..n * ft].copy_from_slice(x);
-        let adj = pad::dense_norm_adj(sub, v_max);
-        let mut literals: Vec<xla::Literal> = Vec::new();
-        for (pname, dims) in &meta.params {
-            let t = wb.get(&format!("l0.{pname}")).unwrap();
-            literals.push(f32_literal(&t.f32_data, dims)?);
+    impl ExecBackend for PjrtBackend {
+        fn name(&self) -> &'static str {
+            "pjrt"
         }
-        literals.push(f32_literal(&xp, &[v_max, ft])?);
-        literals.push(f32_literal(&adj, &[v_max, v_max])?);
-        let st = self.pjrt.as_ref().unwrap();
-        let exe = &st.executables[&meta.name];
-        let result = exe.execute::<xla::Literal>(&literals)?[0][0]
-            .to_literal_sync()?;
-        let outp: Vec<f32> = result.to_tuple1()?.to_vec::<f32>()?;
-        let host = t0.elapsed().as_secs_f64();
-        let out_dim = meta.out_dim;
-        let mut out = vec![0f32; n * out_dim];
-        out.copy_from_slice(&outp[..n * out_dim]);
-        Ok(LayerOut { h: out, out_dim, host_seconds: host })
+
+        fn run_layer(&mut self, ctx: &LayerCtx<'_>, h: &[f32],
+                     edges: &EdgeArrays)
+                     -> Result<LayerOut, EngineError> {
+            let n = edges.n;
+            let meta = self
+                .manifest
+                .select_l(ctx.model, ctx.dataset, ctx.layer, n,
+                          edges.num_edges(), edges.n_local)?
+                .clone();
+            self.compiled(&meta)?;
+            self.ensure_params(&meta, ctx)?;
+
+            let t0 = Instant::now();
+            let padded = pad::pad_layer(h, n, ctx.f_in, edges,
+                                        meta.v_max, meta.e_max,
+                                        meta.l_max);
+            let mut literals: Vec<&xla::Literal> = Vec::new();
+            let cached = &self.param_literals[&meta.name];
+            for lit in cached {
+                literals.push(lit);
+            }
+            let mut data_literals: Vec<xla::Literal> = Vec::new();
+            for (dname, dims, dtype) in &meta.data {
+                let lit = match (dname.as_str(), dtype.as_str()) {
+                    ("h", _) => f32_literal(&padded.h, dims)?,
+                    ("src", _) => i32_literal(&padded.src, dims)?,
+                    ("dst", _) => i32_literal(&padded.dst, dims)?,
+                    ("ew", _) => f32_literal(&padded.ew, dims)?,
+                    ("inv_deg", _) => {
+                        f32_literal(&padded.inv_deg, dims)?
+                    }
+                    (other, _) => panic!("unknown data input {other}"),
+                };
+                data_literals.push(lit);
+            }
+            for lit in &data_literals {
+                literals.push(lit);
+            }
+            let exe = &self.executables[&meta.name];
+            let result = exe.execute::<&xla::Literal>(&literals)?[0][0]
+                .to_literal_sync()?;
+            let out_padded: Vec<f32> =
+                result.to_tuple1()?.to_vec::<f32>()?;
+            let host = t0.elapsed().as_secs_f64();
+            let out_dim = meta.out_dim;
+            // the artifact computes [l_max, out_dim]; keep owned rows
+            let l = edges.n_local;
+            let mut out = vec![0f32; l * out_dim];
+            out.copy_from_slice(&out_padded[..l * out_dim]);
+            Ok(LayerOut { h: out, out_dim, host_seconds: host })
+        }
+
+        fn run_astgcn(&mut self, ctx: &LayerCtx<'_>, x: &[f32],
+                      n: usize, sub: &crate::graph::LocalGraph)
+                      -> Result<LayerOut, EngineError> {
+            let ft = ctx.f_in;
+            let meta = self
+                .manifest
+                .select("astgcn", ctx.dataset, 0, n, 0)?
+                .clone();
+            self.compiled(&meta)?;
+            let t0 = Instant::now();
+            let v_max = meta.v_max;
+            let mut xp = vec![0f32; v_max * ft];
+            xp[..n * ft].copy_from_slice(x);
+            let adj = pad::dense_norm_adj(sub, v_max)?;
+            let mut literals: Vec<xla::Literal> = Vec::new();
+            for (pname, dims) in &meta.params {
+                let t = ctx
+                    .weights
+                    .get(&format!("l0.{pname}"))
+                    .expect("astgcn artifact param");
+                literals.push(f32_literal(&t.f32_data, dims)?);
+            }
+            literals.push(f32_literal(&xp, &[v_max, ft])?);
+            literals.push(f32_literal(&adj, &[v_max, v_max])?);
+            let exe = &self.executables[&meta.name];
+            let result = exe.execute::<xla::Literal>(&literals)?[0][0]
+                .to_literal_sync()?;
+            let outp: Vec<f32> = result.to_tuple1()?.to_vec::<f32>()?;
+            let host = t0.elapsed().as_secs_f64();
+            let out_dim = meta.out_dim;
+            let mut out = vec![0f32; n * out_dim];
+            out.copy_from_slice(&outp[..n * out_dim]);
+            Ok(LayerOut { h: out, out_dim, host_seconds: host })
+        }
     }
-}
 
-#[cfg(feature = "pjrt")]
-fn f32_literal(data: &[f32], dims: &[usize])
-               -> Result<xla::Literal, EngineError> {
-    debug_assert_eq!(data.len(), dims.iter().product::<usize>());
-    let bytes = unsafe {
-        std::slice::from_raw_parts(data.as_ptr() as *const u8,
-                                   data.len() * 4)
-    };
-    Ok(xla::Literal::create_from_shape_and_untyped_data(
-        xla::ElementType::F32,
-        dims,
-        bytes,
-    )?)
-}
+    fn f32_literal(data: &[f32], dims: &[usize])
+                   -> Result<xla::Literal, EngineError> {
+        debug_assert_eq!(data.len(), dims.iter().product::<usize>());
+        let bytes = unsafe {
+            std::slice::from_raw_parts(data.as_ptr() as *const u8,
+                                       data.len() * 4)
+        };
+        Ok(xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::F32,
+            dims,
+            bytes,
+        )?)
+    }
 
-#[cfg(feature = "pjrt")]
-fn i32_literal(data: &[i32], dims: &[usize])
-               -> Result<xla::Literal, EngineError> {
-    debug_assert_eq!(data.len(), dims.iter().product::<usize>());
-    let bytes = unsafe {
-        std::slice::from_raw_parts(data.as_ptr() as *const u8,
-                                   data.len() * 4)
-    };
-    Ok(xla::Literal::create_from_shape_and_untyped_data(
-        xla::ElementType::S32,
-        dims,
-        bytes,
-    )?)
+    fn i32_literal(data: &[i32], dims: &[usize])
+                   -> Result<xla::Literal, EngineError> {
+        debug_assert_eq!(data.len(), dims.iter().product::<usize>());
+        let bytes = unsafe {
+            std::slice::from_raw_parts(data.as_ptr() as *const u8,
+                                       data.len() * 4)
+        };
+        Ok(xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::S32,
+            dims,
+            bytes,
+        )?)
+    }
 }
 
 /// Deterministic glorot-style init used when a trained bundle is missing
@@ -496,6 +536,7 @@ fn synthesize_weights(model: &str, f_in: usize, classes: usize, key: &str)
 
 #[cfg(test)]
 mod tests {
+    use super::super::pad::EdgeArrays;
     use super::*;
 
     #[test]
@@ -504,19 +545,23 @@ mod tests {
         assert_eq!(weights_key("gcn", "siot"), "weights_gcn_siot");
     }
 
-    #[test]
-    fn reference_engine_with_synth_weights_runs_all_models() {
-        let dir = std::env::temp_dir().join("engine_test_none");
-        std::fs::create_dir_all(&dir).unwrap();
-        let mut eng = Engine::new(EngineKind::Reference, &dir).unwrap();
-        let edges = EdgeArrays {
+    fn two_vertex_edges() -> EdgeArrays {
+        EdgeArrays {
             src: vec![0, 1],
             dst: vec![1, 0],
             ew: vec![1.0, 1.0],
             inv_deg: vec![0.5, 0.5],
             n: 2,
             n_local: 2,
-        };
+        }
+    }
+
+    #[test]
+    fn reference_engine_with_synth_weights_runs_all_models() {
+        let dir = std::env::temp_dir().join("engine_test_none");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut eng = Engine::new(EngineKind::Reference, &dir).unwrap();
+        let edges = two_vertex_edges();
         for model in ["gcn", "sage"] {
             let h = vec![1.0f32; 2 * 8];
             let out = eng
@@ -532,6 +577,58 @@ mod tests {
             assert_eq!(out2.out_dim, 3);
         }
         assert!(!eng.synthetic_weights.is_empty());
+    }
+
+    #[test]
+    fn csr_engine_matches_reference_engine() {
+        let dir = std::env::temp_dir().join("engine_test_csr");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut re = Engine::new(EngineKind::Reference, &dir).unwrap();
+        let mut ce = Engine::new(EngineKind::Csr, &dir).unwrap();
+        assert_eq!(ce.backend_name(), "csr");
+        let edges = two_vertex_edges();
+        for model in ["gcn", "sage", "gat"] {
+            let h = vec![0.5f32; 2 * 8];
+            let a = re
+                .run_layer(model, "tiny", 0, &h, 8, &edges, 8, 3)
+                .unwrap();
+            let b = ce
+                .run_layer(model, "tiny", 0, &h, 8, &edges, 8, 3)
+                .unwrap();
+            assert_eq!(a.out_dim, b.out_dim);
+            let err = a
+                .h
+                .iter()
+                .zip(&b.h)
+                .map(|(x, y)| (x - y).abs())
+                .fold(0f32, f32::max);
+            assert!(err < 1e-5, "{model}: csr deviates by {err}");
+        }
+    }
+
+    #[test]
+    fn batched_facade_matches_serial_on_both_backends() {
+        let dir = std::env::temp_dir().join("engine_test_batched");
+        std::fs::create_dir_all(&dir).unwrap();
+        let edges = two_vertex_edges();
+        let h = [0.25f32, 1.0, -0.5, 0.75, 2.0, 0.0, 1.5, -1.0];
+        for kind in [EngineKind::Reference, EngineKind::Csr] {
+            let mut eng = Engine::new(kind, &dir).unwrap();
+            let batched = eng
+                .run_layer_batched("gcn", "tiny", 0, &h, 2, &edges, 2,
+                                   3, 2)
+                .unwrap();
+            let a = eng
+                .run_layer("gcn", "tiny", 0, &h[..4], 2, &edges, 2, 3)
+                .unwrap();
+            let b = eng
+                .run_layer("gcn", "tiny", 0, &h[4..], 2, &edges, 2, 3)
+                .unwrap();
+            assert_eq!(batched.out_dim, a.out_dim);
+            let d = a.out_dim;
+            assert_eq!(&batched.h[..2 * d], &a.h[..]);
+            assert_eq!(&batched.h[2 * d..], &b.h[..]);
+        }
     }
 
     #[test]

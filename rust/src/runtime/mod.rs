@@ -1,16 +1,29 @@
-//! AOT runtime: loads the Python-compiled HLO-text artifacts and executes
-//! them via the PJRT C API (`xla` crate) — Python is never on the request
-//! path. Includes the manifest/bucket index, the `.fgw` weight loader,
-//! model-specific padding (twin of python/compile/prep.py), and a pure-
-//! Rust reference engine used as numeric oracle and large-sweep fallback.
+//! Execution runtime behind a pluggable backend architecture
+//! (`backend::ExecBackend`): the `Engine` façade owns weight bundles and
+//! the artifact manifest and dispatches kernels to one of
+//!
+//! * the AOT PJRT backend (Python-lowered HLO artifacts via the `xla`
+//!   crate, behind the `pjrt` feature) — Python is never on the request
+//!   path;
+//! * the pure-Rust dense reference backend (numeric oracle and
+//!   large-sweep fallback);
+//! * the sparse CSR backend with block-diagonal batched execution
+//!   (`csr_backend`), the engine behind `--exec measured` serving.
+//!
+//! Also includes the manifest/bucket index, the `.fgw` weight loader and
+//! model-specific padding (twin of python/compile/prep.py).
 
 pub mod artifacts;
+pub mod backend;
+pub mod csr_backend;
 pub mod engine;
 pub mod pad;
 pub mod reference;
 pub mod weights;
 
 pub use artifacts::{ArtifactMeta, Manifest};
+pub use backend::{ExecBackend, LayerCtx};
+pub use csr_backend::{CsrBackend, CsrPartition};
 pub use engine::{Engine, EngineError, EngineKind, LayerOut};
 pub use pad::EdgeArrays;
 pub use weights::WeightBundle;

@@ -129,9 +129,41 @@ pub fn pad_layer(h: &[f32], n: usize, f_in: usize, edges: &EdgeArrays,
     PaddedLayer { h: hp, src, dst, ew, inv_deg, v_max, e_max, l_max, f_in }
 }
 
+/// Upper bound on the dense adjacency build: above this many rows the
+/// O(v_max²) f32 buffer crosses the 64 MiB line and would silently eat
+/// gigabytes on large sweeps. Callers get a sizing error instead; the
+/// sparse CSR backend (`--engine csr`) has no dense-adjacency path at
+/// all and serves any size.
+pub const DENSE_ADJ_MAX_VERTICES: usize = 4096;
+
+/// Sizing error from `dense_norm_adj`: the requested dense block would
+/// exceed the `DENSE_ADJ_MAX_VERTICES` guard.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct DenseAdjTooLarge {
+    pub v_max: usize,
+}
+
+impl std::fmt::Display for DenseAdjTooLarge {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "dense adjacency of {} rows exceeds the {}-row guard \
+             (O(v²) allocation); use the sparse backend (--engine csr)",
+            self.v_max, DENSE_ADJ_MAX_VERTICES
+        )
+    }
+}
+
+impl std::error::Error for DenseAdjTooLarge {}
+
 /// Dense row-normalized D⁻¹(A+I) adjacency block for astgcn, padded to
-/// v_max (padded rows/cols zero).
-pub fn dense_norm_adj(sub: &LocalGraph, v_max: usize) -> Vec<f32> {
+/// v_max (padded rows/cols zero). Errors above the O(v²) sizing guard
+/// instead of allocating unbounded memory.
+pub fn dense_norm_adj(sub: &LocalGraph, v_max: usize)
+                      -> Result<Vec<f32>, DenseAdjTooLarge> {
+    if v_max > DENSE_ADJ_MAX_VERTICES {
+        return Err(DenseAdjTooLarge { v_max });
+    }
     let n = sub.n_total();
     assert!(n <= v_max);
     let mut a = vec![0f32; v_max * v_max];
@@ -150,7 +182,7 @@ pub fn dense_norm_adj(sub: &LocalGraph, v_max: usize) -> Vec<f32> {
             }
         }
     }
-    a
+    Ok(a)
 }
 
 #[cfg(test)]
@@ -226,9 +258,19 @@ mod tests {
     }
 
     #[test]
+    fn dense_adj_refuses_oversized_blocks() {
+        let s = sub();
+        let err = dense_norm_adj(&s, DENSE_ADJ_MAX_VERTICES + 1);
+        assert_eq!(
+            err.unwrap_err(),
+            DenseAdjTooLarge { v_max: DENSE_ADJ_MAX_VERTICES + 1 }
+        );
+    }
+
+    #[test]
     fn dense_adj_rows_normalized() {
         let s = sub();
-        let adj = dense_norm_adj(&s, 6);
+        let adj = dense_norm_adj(&s, 6).unwrap();
         let n = s.n_total();
         for r in 0..n {
             let sum: f32 = adj[r * 6..r * 6 + 6].iter().sum();

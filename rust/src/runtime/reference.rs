@@ -48,7 +48,7 @@ pub fn matmul_bias(x: &[f32], n: usize, fi: usize, w: &[f32], fo: usize,
     out
 }
 
-fn relu(x: &mut [f32]) {
+pub(crate) fn relu(x: &mut [f32]) {
     for v in x.iter_mut() {
         if *v < 0.0 {
             *v = 0.0;
@@ -56,7 +56,7 @@ fn relu(x: &mut [f32]) {
     }
 }
 
-fn elu(x: &mut [f32]) {
+pub(crate) fn elu(x: &mut [f32]) {
     for v in x.iter_mut() {
         if *v < 0.0 {
             *v = v.exp_m1();

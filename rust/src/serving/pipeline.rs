@@ -9,6 +9,12 @@
 //!
 //! Latency composition (Eq. (7) + the BSP barrier structure of §III-E):
 //!   total = max_j collection_j + Σ_k (max_j exec_{j,k} + δ_k) + unpack
+//!
+//! Execution goes through the engine's pluggable backend
+//! (`runtime::backend::ExecBackend`): dense reference, sparse CSR
+//! (`--engine csr`, no O(V²) buffers) or AOT PJRT. The request-level
+//! loop on top of this pipeline (`traffic::sim`) can additionally run
+//! measured per-batch execution (`--exec measured`).
 
 use crate::compress::{Codec, DaqConfig, IntervalScheme, DEFAULT_BITS};
 use crate::exec;

@@ -1,0 +1,191 @@
+//! Measured per-batch execution for the online serving loop
+//! (`--exec measured`): each released micro-batch drives the real CSR
+//! batched BSP kernels (`exec::BatchedBspPlan`) at its padded bucket
+//! size, with per-fog layer compute on `std::thread` workers. Measured
+//! per-fog timings feed the online profiler (η-scaled ω′ models,
+//! paper §III-B runtime phase), so mid-run diffusion / IEP replans
+//! reason over OBSERVED costs instead of the closed-form ω — the
+//! calibration loop the edge-serving cost models argue for.
+
+use std::collections::BTreeMap;
+
+use crate::exec::BatchedBspPlan;
+use crate::graph::Graph;
+use crate::profile::{Cardinality, OnlineProfiler, PerfModel};
+use crate::runtime::{Engine, EngineError, WeightBundle};
+
+/// Accumulated wall-clock for one padded bucket size.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BucketStat {
+    /// Sum of per-batch BSP barrier host seconds (Σ_layer max_fog).
+    pub total_host_s: f64,
+    pub batches: usize,
+}
+
+impl BucketStat {
+    pub fn mean_ms(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.total_host_s / self.batches as f64 * 1e3
+        }
+    }
+}
+
+/// Real-kernel executor for the serving loop: owns the pre-extracted
+/// partition plan, the weight bundle and the per-fog online profilers.
+pub struct MeasuredExec {
+    plan: BatchedBspPlan,
+    wb: WeightBundle,
+    features: Vec<f32>,
+    f_in: usize,
+    profilers: Vec<OnlineProfiler>,
+    bucket_stats: BTreeMap<usize, BucketStat>,
+}
+
+impl MeasuredExec {
+    /// `payload`/`dims` are the raw (pre-codec) per-inference upload —
+    /// the same snapshot the grounding pipeline run served; `omegas`
+    /// seed the profilers' offline models.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        g: &Graph,
+        assignment: &[u32],
+        n_fogs: usize,
+        model: &str,
+        dataset: &str,
+        payload: &[f32],
+        dims: usize,
+        classes: usize,
+        omegas: &[PerfModel],
+        engine: &mut Engine,
+    ) -> Result<MeasuredExec, EngineError> {
+        let plan = BatchedBspPlan::new(g, assignment, n_fogs, model)?;
+        let wb = engine.weights(model, dataset, dims, classes).clone();
+        Ok(MeasuredExec {
+            plan,
+            wb,
+            features: payload.to_vec(),
+            f_in: dims,
+            profilers: omegas
+                .iter()
+                .map(|m| OnlineProfiler::new(m.clone()))
+                .collect(),
+            bucket_stats: BTreeMap::new(),
+        })
+    }
+
+    pub fn engine_name(&self) -> &'static str {
+        "csr-batched"
+    }
+
+    /// Execute one micro-batch at bucket size `bucket`; returns the
+    /// measured `layer_host_seconds[layer][fog]` and feeds the per-fog
+    /// profilers with per-request-normalized observations.
+    pub fn run_batch(&mut self, bucket: usize) -> Vec<Vec<f64>> {
+        let res = self.plan.execute_timings(&self.features, self.f_in,
+                                            &self.wb, bucket);
+        let mut barrier = 0f64;
+        for layer_times in &res.layer_host_seconds {
+            barrier +=
+                layer_times.iter().cloned().fold(0f64, f64::max);
+        }
+        let stat = self.bucket_stats.entry(bucket).or_default();
+        stat.total_host_s += barrier;
+        stat.batches += 1;
+        for j in 0..self.plan.n_fogs() {
+            let (v, ne) = self.plan.cardinality(j);
+            if v == 0 {
+                continue;
+            }
+            let total_j: f64 = res
+                .layer_host_seconds
+                .iter()
+                .map(|lt| lt[j])
+                .sum();
+            // ω predicts single-inference latency; the batch amortizes
+            // fixed costs, so observe the per-request share
+            self.profilers[j].observe(Cardinality::new(v, ne),
+                                      total_j / bucket as f64);
+        }
+        res.layer_host_seconds
+    }
+
+    /// η-scaled ω′ per fog — what diffusion / IEP replans consume in
+    /// place of the analytic omegas.
+    pub fn scaled_omegas(&self) -> Vec<PerfModel> {
+        self.profilers.iter().map(|p| p.scaled_model()).collect()
+    }
+
+    /// Re-extract partition structures after a migration (profilers and
+    /// bucket stats carry over; η is a node property, not a placement
+    /// property).
+    pub fn rebuild(&mut self, g: &Graph, assignment: &[u32],
+                   model: &str) -> Result<(), EngineError> {
+        self.plan = BatchedBspPlan::new(g, assignment,
+                                        self.plan.n_fogs(), model)?;
+        Ok(())
+    }
+
+    /// Measured (bucket, mean batch ms, batches) rows, smallest bucket
+    /// first.
+    pub fn bucket_summary(&self) -> Vec<(usize, f64, usize)> {
+        self.bucket_stats
+            .iter()
+            .map(|(&b, st)| (b, st.mean_ms(), st.batches))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate;
+    use crate::runtime::EngineKind;
+
+    #[test]
+    fn measured_exec_runs_and_profiles() {
+        let (mut g, _) = generate::sbm(200, 900, 4, 0.85, 3);
+        let f_in = 8;
+        let mut rng = crate::util::rng::Rng::new(17);
+        g.features =
+            (0..200 * f_in).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        g.feature_dim = f_in;
+        let dir = std::env::temp_dir().join("measured_exec_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut eng = Engine::new(EngineKind::Csr, &dir).unwrap();
+        let assignment: Vec<u32> =
+            (0..200).map(|v| (v % 2) as u32).collect();
+        let omegas = vec![PerfModel::uncalibrated(); 2];
+        let mut me = MeasuredExec::new(
+            &g, &assignment, 2, "gcn", "tiny", &g.features, f_in, 3,
+            &omegas, &mut eng,
+        )
+        .unwrap();
+        let lhs = me.run_batch(4);
+        assert_eq!(lhs.len(), 2, "gcn has 2 layers");
+        assert_eq!(lhs[0].len(), 2, "one timing per fog");
+        assert!(lhs.iter().flatten().all(|&s| s >= 0.0));
+        let summary = me.bucket_summary();
+        assert_eq!(summary.len(), 1);
+        assert_eq!(summary[0].0, 4);
+        assert_eq!(summary[0].2, 1);
+        // profilers observed the run: scaled models exist per fog
+        let scaled = me.scaled_omegas();
+        assert_eq!(scaled.len(), 2);
+        assert!(scaled.iter().all(|m| m.beta_v >= 0.0));
+    }
+
+    #[test]
+    fn measured_exec_rejects_astgcn() {
+        let (g, _) = generate::sbm(50, 200, 2, 0.8, 5);
+        let dir = std::env::temp_dir().join("measured_exec_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut eng = Engine::new(EngineKind::Csr, &dir).unwrap();
+        let assignment = vec![0u32; 50];
+        let omegas = vec![PerfModel::uncalibrated(); 1];
+        let r = MeasuredExec::new(&g, &assignment, 1, "astgcn", "tiny",
+                                  &[], 4, 0, &omegas, &mut eng);
+        assert!(r.is_err());
+    }
+}

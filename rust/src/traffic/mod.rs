@@ -5,14 +5,21 @@
 //! shed rate, queue-depth timelines). The loop feeds queue-skew back into
 //! the dual-mode scheduler so diffusion / IEP replans fire mid-run —
 //! `repro loadtest` is the CLI entry point.
+//!
+//! Execution is priced either analytically (ω models; bit-reproducible)
+//! or measured (`--exec measured`): real CSR batched BSP kernels per
+//! micro-batch with the observations fed back into profiler calibration
+//! (see `measured`).
 
 pub mod arrival;
 pub mod batcher;
+pub mod measured;
 pub mod sim;
 pub mod slo;
 
 pub use arrival::{ArrivalKind, ArrivalProcess};
 pub use batcher::{bucket, BatchPolicy, MicroBatcher};
-pub use sim::{doc_json, report_json, run_loadtest, LoadtestReport,
-              TrafficConfig};
+pub use measured::MeasuredExec;
+pub use sim::{doc_json, report_json, run_loadtest, ExecMode,
+              LoadtestReport, TrafficConfig};
 pub use slo::{LatencySummary, QueueTimeline, SloReport};

@@ -4,14 +4,21 @@
 //!
 //! One real end-to-end run of the pipeline (per layout) exercises the
 //! full serving surface (placement, compression, BSP execution, the OOM
-//! check). The loop's own timing then uses only deterministic parts:
-//! the analytic transfer share of collection (packing/unpacking pipeline
-//! with adjacent windows, off the steady-state critical path), the
-//! analytic sync cost, and per-fog execution from the calibratable ω
-//! models (`profile::PerfModel`) — exactly the quantity the scheduler
-//! reasons about (as in the Fig. 16 experiment). Every reported number
-//! is therefore a pure function of `(inputs, seed)`: loadtest runs are
-//! bit-reproducible.
+//! check). The loop then prices execution in one of two modes
+//! (`ExecMode`):
+//!
+//! * **analytic** (default) — per-fog execution from the calibratable ω
+//!   models (`profile::PerfModel`), the analytic transfer share of
+//!   collection and the analytic sync cost — exactly the quantities the
+//!   scheduler reasons about (as in the Fig. 16 experiment). Every
+//!   reported number is a pure function of `(inputs, seed)`: analytic
+//!   loadtest runs are bit-reproducible.
+//! * **measured** — every released micro-batch executes the real sparse
+//!   CSR batched BSP kernels at its padded bucket size
+//!   (`traffic::measured`), per-fog compute on `std::thread` workers;
+//!   measured timings feed the online profiler so diffusion / IEP
+//!   replans use η-scaled OBSERVED costs (ω′) instead of ω. Wall-clock
+//!   measurements are inherently non-deterministic.
 //!
 //! Stations and timing model:
 //!
@@ -42,7 +49,35 @@ use crate::util::json::{arr, num, obj, s, Json};
 
 use super::arrival::{ArrivalKind, ArrivalProcess};
 use super::batcher::{bucket, BatchPolicy, MicroBatcher};
+use super::measured::MeasuredExec;
 use super::slo::{QueueTimeline, SloReport};
+
+/// How the loop prices per-batch execution (see module docs).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ExecMode {
+    /// ω-model execution costs; bit-reproducible for a fixed seed.
+    #[default]
+    Analytic,
+    /// Real CSR batched kernel execution, measured per batch.
+    Measured,
+}
+
+impl ExecMode {
+    pub fn parse(s: &str) -> Option<ExecMode> {
+        match s {
+            "analytic" => Some(ExecMode::Analytic),
+            "measured" => Some(ExecMode::Measured),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ExecMode::Analytic => "analytic",
+            ExecMode::Measured => "measured",
+        }
+    }
+}
 
 /// Fraction of a batch's execution cost that is fixed per batch (kernel
 /// launch, BSP barriers); the rest scales with the padded bucket size.
@@ -73,6 +108,9 @@ pub struct TrafficConfig {
     pub scheduler_period_s: f64,
     /// Replay a background-load trace over the fogs.
     pub background_load: bool,
+    /// Analytic ω-model pricing (default) or measured per-batch kernel
+    /// execution.
+    pub exec: ExecMode,
 }
 
 impl TrafficConfig {
@@ -98,6 +136,7 @@ impl Default for TrafficConfig {
             spill: false,
             scheduler_period_s: 5.0,
             background_load: true,
+            exec: ExecMode::Analytic,
         }
     }
 }
@@ -117,6 +156,14 @@ pub struct LoadtestReport {
     pub base_collection_s: f64,
     pub base_sync_s: f64,
     pub base_wire_bytes: usize,
+    /// Execution pricing mode the run used.
+    pub exec_mode: ExecMode,
+    /// Engine behind the run ("csr-batched" for measured mode, else
+    /// the analytic model over the grounding engine).
+    pub engine: String,
+    /// Measured (bucket, mean batch ms, batches) rows — empty in
+    /// analytic mode.
+    pub bucket_host_ms: Vec<(usize, f64, usize)>,
 }
 
 fn scaled_model(m: &PerfModel, k: f64) -> PerfModel {
@@ -194,6 +241,8 @@ pub fn run_loadtest(
         base_collection_s: coll_s,
         base_sync_s: base.sync_s,
         base_wire_bytes: base.wire_bytes,
+        exec_mode: traffic.exec,
+        engine: engine.backend_name().to_string(),
         ..Default::default()
     };
     report.slo.slo_s = traffic.slo_s;
@@ -202,6 +251,17 @@ pub fn run_loadtest(
         report.slo.oom = true;
         return Ok(report);
     }
+
+    // ---- measured executor (real CSR batched kernels) -------------------
+    let mut measured: Option<MeasuredExec> =
+        if traffic.exec == ExecMode::Measured {
+            Some(MeasuredExec::new(
+                g, &assignment, n, &opts.model, spec.name, &payload,
+                dims, spec.classes, omegas, engine,
+            )?)
+        } else {
+            None
+        };
 
     // ---- analytic execution model (deterministic) -----------------------
     let node_mult: Vec<f64> = cluster
@@ -282,10 +342,16 @@ pub fn run_loadtest(
         // dual-mode scheduler ticks (metadata reporting period)
         while next_sched <= t_next && next_sched <= traffic.duration_s {
             let step = next_sched as usize;
+            // measured mode replans over η-scaled OBSERVED costs (ω′
+            // from the online profiler); analytic mode over ω itself
+            let eff_omegas: Vec<PerfModel> = match &measured {
+                Some(m) => m.scaled_omegas(),
+                None => omegas.to_vec(),
+            };
             let scaled: Vec<PerfModel> = (0..n)
                 .map(|j| {
                     let load = trace.at(step, j).clamp(0.0, 0.85);
-                    scaled_model(&omegas[j],
+                    scaled_model(&eff_omegas[j],
                                  node_mult[j] / (1.0 - load))
                 })
                 .collect();
@@ -295,16 +361,22 @@ pub fn run_loadtest(
                 SchedulerDecision::Keep => {}
                 SchedulerDecision::Diffused(_) => {
                     report.slo.diffusions += 1;
+                    if let Some(m) = measured.as_mut() {
+                        m.rebuild(g, &assignment, &opts.model)?;
+                    }
                     host_times =
-                        estimate_times(g, &assignment, n, omegas);
+                        estimate_times(g, &assignment, n, &eff_omegas);
                     coll_s = collection_transfer_s(
                         g, &payload, dims, &assignment, cluster, opts,
                     );
                 }
                 SchedulerDecision::Replanned => {
                     report.slo.replans += 1;
+                    if let Some(m) = measured.as_mut() {
+                        m.rebuild(g, &assignment, &opts.model)?;
+                    }
                     host_times =
-                        estimate_times(g, &assignment, n, omegas);
+                        estimate_times(g, &assignment, n, &eff_omegas);
                     coll_s = collection_transfer_s(
                         g, &payload, dims, &assignment, cluster, opts,
                     );
@@ -338,13 +410,33 @@ pub fn run_loadtest(
                         / traffic.batch.max_batch as f64);
             let coll_done = t_next + coll_time;
             let start_exec = coll_done.max(exec_free);
-            let per_fog =
-                exec_per_fog(&host_times, &node_mult, &trace, start_exec);
-            let slowest =
-                per_fog.iter().cloned().fold(0f64, f64::max);
-            let exec_time = (slowest + report.base_sync_s)
-                * (EXEC_FIXED_FRAC
-                    + (1.0 - EXEC_FIXED_FRAC) * slot as f64);
+            let exec_time = if let Some(m) = measured.as_mut() {
+                // real batched kernels at the padded bucket size; scale
+                // each fog's measured host time by its capability and
+                // current background load, BSP barrier per layer
+                let step = start_exec.max(0.0) as usize;
+                let mut total = 0f64;
+                for layer_times in m.run_batch(slot) {
+                    let mut mx = 0f64;
+                    for (j, &h) in layer_times.iter().enumerate() {
+                        let load = trace.at(step, j).clamp(0.0, 0.85);
+                        mx = mx.max(h * node_mult[j] / (1.0 - load));
+                    }
+                    total += mx;
+                }
+                // the block-diagonal batch ships `slot` copies of the
+                // halo rows, so the (bandwidth-dominated) sync share
+                // scales with the bucket
+                total + report.base_sync_s * slot as f64
+            } else {
+                let per_fog = exec_per_fog(&host_times, &node_mult,
+                                           &trace, start_exec);
+                let slowest =
+                    per_fog.iter().cloned().fold(0f64, f64::max);
+                (slowest + report.base_sync_s)
+                    * (EXEC_FIXED_FRAC
+                        + (1.0 - EXEC_FIXED_FRAC) * slot as f64)
+            };
             let finish = start_exec + exec_time;
             coll_free = coll_done;
             exec_free = finish;
@@ -378,6 +470,10 @@ pub fn run_loadtest(
     report.slo.finalize(&latencies);
     report.slo.queue = queue;
     report.latencies = latencies;
+    if let Some(m) = &measured {
+        report.engine = m.engine_name().to_string();
+        report.bucket_host_ms = m.bucket_summary();
+    }
     Ok(report)
 }
 
@@ -429,19 +525,35 @@ pub fn report_json(label: &str, traffic: &TrafficConfig,
         ("collection_s", num(r.base_collection_s)),
         ("sync_s", num(r.base_sync_s)),
         ("wire_bytes", num(r.base_wire_bytes as f64)),
+        ("exec", s(r.exec_mode.name())),
+        ("engine", s(&r.engine)),
+        (
+            "measured_buckets",
+            arr(r.bucket_host_ms.iter().map(|&(b, ms, c)| {
+                obj(vec![
+                    ("bucket", num(b as f64)),
+                    ("mean_host_ms", num(ms)),
+                    ("batches", num(c as f64)),
+                ])
+            })),
+        ),
     ])
 }
 
 /// Top-level loadtest document shared by the CLI's BENCH_loadtest.json,
-/// the bench harness and the loadtest experiment — one schema.
-pub fn doc_json(dataset: &str, model: &str, net: &str, runs: Vec<Json>)
-                -> Json {
+/// the bench harness and the loadtest experiment — one schema. `engine`
+/// names the execution engine behind the runs; `kernels` carries
+/// kernel-level bench timings (empty outside the bench harness).
+pub fn doc_json(dataset: &str, model: &str, net: &str, engine: &str,
+                runs: Vec<Json>, kernels: Vec<Json>) -> Json {
     obj(vec![
         ("benchmark", s("loadtest")),
         ("dataset", s(dataset)),
         ("model", s(model)),
         ("net", s(net)),
+        ("engine", s(engine)),
         ("runs", arr(runs)),
+        ("kernel_benches", arr(kernels)),
     ])
 }
 
@@ -607,6 +719,58 @@ mod tests {
             rb.slo.goodput_rps,
             rs.slo.goodput_rps
         );
+    }
+
+    #[test]
+    fn measured_exec_runs_real_kernels_and_records_buckets() {
+        let (g, spec) = tiny();
+        let (cluster, opts, omegas) = fog_setup(&g);
+        let mut eng = engine();
+        let traffic = TrafficConfig {
+            rps: 60.0,
+            duration_s: 2.0,
+            seed: 42,
+            exec: ExecMode::Measured,
+            ..Default::default()
+        };
+        let r = run_loadtest(&g, &spec, &cluster, &opts, &traffic,
+                             &omegas, &mut eng)
+            .unwrap();
+        assert_eq!(r.exec_mode, ExecMode::Measured);
+        assert_eq!(r.engine, "csr-batched");
+        assert!(r.slo.completed > 0);
+        assert!(!r.bucket_host_ms.is_empty(),
+                "measured buckets recorded");
+        for &(b, ms, c) in &r.bucket_host_ms {
+            assert!(b.is_power_of_two());
+            assert!(ms >= 0.0);
+            assert!(c > 0);
+        }
+        // measured latencies are strictly positive wall-clock sums
+        assert!(r.latencies.iter().all(|&l| l > 0.0));
+        let j = report_json("measured", &traffic, &r);
+        assert_eq!(j.get("exec").unwrap().as_str(), Some("measured"));
+        assert_eq!(j.get("engine").unwrap().as_str(),
+                   Some("csr-batched"));
+        assert!(j.get("measured_buckets").is_some());
+    }
+
+    #[test]
+    fn measured_mode_rejects_astgcn() {
+        let (g, spec) = tiny();
+        let (cluster, _, omegas) = fog_setup(&g);
+        let opts = ServeOpts::new("astgcn", Placement::Iep,
+                                  ServeOpts::co_codec(&g));
+        let mut eng = engine();
+        let traffic = TrafficConfig {
+            rps: 20.0,
+            duration_s: 1.0,
+            exec: ExecMode::Measured,
+            ..Default::default()
+        };
+        let r = run_loadtest(&g, &spec, &cluster, &opts, &traffic,
+                             &omegas, &mut eng);
+        assert!(r.is_err(), "astgcn has no measured batched path");
     }
 
     #[test]
