@@ -17,7 +17,8 @@ use fograph::net::NetKind;
 use fograph::partition::{self, MultilevelParams};
 use fograph::placement::{hungarian, lbap};
 use fograph::profile::PerfModel;
-use fograph::runtime::csr_backend::{csr_aggregate, run_layer_csr};
+use fograph::runtime::csr_backend::run_layer_csr;
+use fograph::runtime::kernels::{gemm, spmm};
 use fograph::runtime::{pad, reference, CsrPartition, Engine,
                        EngineKind};
 use fograph::serving::{mode_setup, serve, Placement, ServeOpts};
@@ -143,8 +144,11 @@ fn main() {
     });
     let w = vec![0.01f32; 52 * 64];
     let b = vec![0f32; 64];
-    run("kernel/matmul_512x52x64", 0.5, &mut || {
-        black_box(reference::matmul_bias(&h, edges.n, 52, &w, 64, &b));
+    run("kernel/gemm_naive_512x52x64", 0.5, &mut || {
+        black_box(gemm::gemm_bias_naive(&h, edges.n, 52, &w, 64, &b));
+    });
+    run("kernel/gemm_tiled_512x52x64", 0.5, &mut || {
+        black_box(gemm::gemm_bias(&h, edges.n, 52, &w, 64, &b));
     });
 
     let dir = std::env::temp_dir().join("bench_engine");
@@ -153,8 +157,11 @@ fn main() {
 
     // ---- hot paths: sparse CSR backend --------------------------------------
     let csr = CsrPartition::from_edges(&edges);
-    run("kernel/csr_spmm_aggregate_512v", 0.5, &mut || {
-        black_box(csr_aggregate(&csr, &h, 52));
+    run("kernel/csr_spmm_naive_512v", 0.5, &mut || {
+        black_box(spmm::csr_spmm_naive(&csr, &h, 52));
+    });
+    run("kernel/csr_spmm_blocked_512v", 0.5, &mut || {
+        black_box(spmm::csr_spmm(&csr, &h, 52));
     });
     let wb_gcn = engine.weights("gcn", "benchsiot", 52, 2).clone();
     run("kernel/csr_gcn_layer_512v", 0.5, &mut || {

@@ -6,16 +6,19 @@
 //! Fogs are simulated as logically-parallel workers on this host. The
 //! engine-driven path (`run`) measures each fog's layer compute
 //! individually; the measured path (`BatchedBspPlan` / `run_parallel`)
-//! executes the sparse CSR kernels on real `std::thread` workers — one
-//! per fog — over a block-diagonal micro-batch, so per-fog times are
-//! observed under genuine concurrency. The serving pipeline scales
+//! executes the sparse CSR kernels on a persistent per-fog worker pool
+//! (`runtime::kernels::pool`) over a block-diagonal micro-batch, so
+//! per-fog times are observed under genuine concurrency and reflect
+//! kernel cost rather than thread start-up. The serving pipeline scales
 //! those times by the node's capability multiplier and takes the
 //! per-layer max (the BSP barrier).
 
-use std::time::Instant;
+use std::borrow::Borrow;
+use std::sync::Arc;
 
 use crate::graph::{subgraph, ExchangePlan, Graph, LocalGraph};
-use crate::runtime::csr_backend::{run_layer_csr, CsrPartition};
+use crate::runtime::csr_backend::CsrPartition;
+use crate::runtime::kernels::{FogJob, FogWorkerPool, KernelScratch};
 use crate::runtime::{engine::EngineError, EdgeArrays, Engine,
                      WeightBundle};
 
@@ -37,30 +40,39 @@ pub struct BspResult {
     pub fog_cardinality: Vec<(usize, usize)>,
 }
 
-/// Exchange halo activations: copy each owner's local rows into the
-/// requesters' halo slots, once per batch block (states are
-/// [batch * n_total, dim] block-major). Returns total bytes moved
-/// between fogs across all blocks.
-fn sync_halo(
-    subs: &[LocalGraph],
-    plan: &ExchangePlan,
-    states: &mut [Vec<f32>],
-    dim: usize,
-    batch: usize,
-) -> usize {
-    let mut bytes = 0usize;
-    // receiver halo index: gid -> halo row, built once per call
-    // (O(halo) instead of a linear scan per shipped vertex)
-    let halo_index: Vec<std::collections::HashMap<u32, usize>> = subs
-        .iter()
+/// Per-fog receiver index: global id -> halo row slot. A pure function
+/// of the partition, so the batched plan precomputes it once and the
+/// per-batch sync pays no structure rebuild.
+type HaloIndex = Vec<std::collections::HashMap<u32, usize>>;
+
+fn build_halo_index<S: Borrow<LocalGraph>>(subs: &[S]) -> HaloIndex {
+    subs.iter()
         .map(|s| {
+            let s = s.borrow();
             s.vertices[s.n_local..]
                 .iter()
                 .enumerate()
                 .map(|(i, &gid)| (gid, s.n_local + i))
                 .collect()
         })
-        .collect();
+        .collect()
+}
+
+/// Exchange halo activations: copy each owner's local rows into the
+/// requesters' halo slots, once per batch block (states are
+/// [batch * n_total, dim] block-major). Returns total bytes moved
+/// between fogs across all blocks. Generic over the sub container so
+/// the engine path (`Vec<LocalGraph>`) and the shared-ownership plan
+/// path (`Vec<Arc<LocalGraph>>`) use the same implementation.
+fn sync_halo<S: Borrow<LocalGraph>>(
+    subs: &[S],
+    plan: &ExchangePlan,
+    halo_index: &HaloIndex,
+    states: &mut [Vec<f32>],
+    dim: usize,
+    batch: usize,
+) -> usize {
+    let mut bytes = 0usize;
     for owner in 0..subs.len() {
         for req in 0..subs.len() {
             let wanted = &plan.transfers[owner][req];
@@ -68,10 +80,11 @@ fn sync_halo(
                 continue;
             }
             bytes += wanted.len() * dim * 4 * batch;
-            let n_owner = subs[owner].n_total();
-            let n_req = subs[req].n_total();
+            let n_owner = subs[owner].borrow().n_total();
+            let n_req = subs[req].borrow().n_total();
             for &owner_local in wanted {
-                let gid = subs[owner].vertices[owner_local as usize];
+                let gid =
+                    subs[owner].borrow().vertices[owner_local as usize];
                 let pos = *halo_index[req]
                     .get(&gid)
                     .expect("halo row for shipped vertex");
@@ -161,9 +174,11 @@ pub fn run(
     let max_out_vertices = out_counts.iter().copied().max().unwrap_or(0);
     let mut dim = f_in;
     let mut out_dim = f_in;
+    let halo_index = build_halo_index(&subs);
     for layer in 0..num_layers {
         // sync round: ship current halo activations
-        sync_bytes.push(sync_halo(&subs, &plan, &mut states, dim, 1));
+        sync_bytes.push(sync_halo(&subs, &plan, &halo_index,
+                                  &mut states, dim, 1));
         sync_max_out.push(max_out_vertices * dim * 4);
         let mut per_fog = Vec::with_capacity(n_fogs);
         let mut next_states: Vec<Vec<f32>> = Vec::with_capacity(n_fogs);
@@ -223,14 +238,20 @@ pub fn run(
 }
 
 /// Pre-extracted measured-execution plan for one placement: partition
-/// views, the halo exchange plan and per-fog CSR structures, reusable
-/// across micro-batches — the per-batch hot path pays only kernels and
-/// syncs. Only the COO/CSR models (gcn/gat/sage) are supported; astgcn
-/// uses the engine-driven `run` path.
+/// views, the halo exchange plan, per-fog CSR structures and a
+/// persistent per-fog worker pool, reusable across micro-batches — the
+/// per-batch hot path pays only kernels and syncs, never partition
+/// extraction or thread start-up. Covers every model: gcn|gat|sage run
+/// the batched CSR layer kernels; astgcn runs the sparse-attention
+/// block per batch block.
 pub struct BatchedBspPlan {
-    pub subs: Vec<LocalGraph>,
+    pub subs: Vec<Arc<LocalGraph>>,
     pub plan: ExchangePlan,
-    pub csrs: Vec<CsrPartition>,
+    /// One CSR per fog for the message-passing models; empty for
+    /// astgcn (its kernel works on the local graph directly).
+    pub csrs: Vec<Arc<CsrPartition>>,
+    pool: FogWorkerPool,
+    halo_index: HaloIndex,
     model: String,
     n_fogs: usize,
     nv: usize,
@@ -239,22 +260,38 @@ pub struct BatchedBspPlan {
 impl BatchedBspPlan {
     pub fn new(g: &Graph, assignment: &[u32], n_fogs: usize,
                model: &str) -> Result<BatchedBspPlan, EngineError> {
-        if !matches!(model, "gcn" | "sage" | "gat") {
+        if !matches!(model, "gcn" | "sage" | "gat" | "astgcn") {
             return Err(EngineError::Unsupported(format!(
-                "measured batched BSP supports gcn|gat|sage, not {model}"
+                "measured batched BSP supports gcn|gat|sage|astgcn, \
+                 not {model}"
             )));
         }
         let (subs, plan) = subgraph::extract(g, assignment, n_fogs);
-        let edges: Vec<EdgeArrays> = subs
-            .iter()
-            .map(|s| crate::runtime::pad::prep_edges(model, s))
-            .collect::<Result<Vec<_>, _>>()?;
-        let csrs: Vec<CsrPartition> =
-            edges.iter().map(CsrPartition::from_edges).collect();
+        let subs: Vec<Arc<LocalGraph>> =
+            subs.into_iter().map(Arc::new).collect();
+        let csrs: Vec<Arc<CsrPartition>> = if model == "astgcn" {
+            Vec::new()
+        } else {
+            subs.iter()
+                .map(|s| {
+                    crate::runtime::pad::prep_edges(model, s)
+                        .map(|e| Arc::new(CsrPartition::from_edges(&e)))
+                })
+                .collect::<Result<Vec<_>, _>>()?
+        };
+        let fogs: Vec<(Arc<LocalGraph>, Option<Arc<CsrPartition>>)> =
+            subs.iter()
+                .enumerate()
+                .map(|(j, s)| (s.clone(), csrs.get(j).cloned()))
+                .collect();
+        let pool = FogWorkerPool::new(model, fogs);
+        let halo_index = build_halo_index(&subs);
         Ok(BatchedBspPlan {
             subs,
             plan,
             csrs,
+            pool,
+            halo_index,
             model: model.to_string(),
             n_fogs,
             nv: g.num_vertices(),
@@ -271,29 +308,99 @@ impl BatchedBspPlan {
     }
 
     /// Execute a block-diagonal batch of `batch` identical-snapshot
-    /// requests. Per-fog layer compute runs on `std::thread` workers —
-    /// one per fog, mirroring the logically-parallel fog machines — so
-    /// the measured per-fog wall-clock reflects real concurrency.
-    /// `outputs` stacks [batch * V, out_dim] block-major;
+    /// requests. Per-fog layer compute runs on the persistent worker
+    /// pool — one long-lived thread per fog, mirroring the
+    /// logically-parallel fog machines — so the measured per-fog
+    /// wall-clock reflects real concurrency without per-batch spawn
+    /// cost. `outputs` stacks [batch * V, out_dim] block-major;
     /// `layer_host_seconds[layer][fog]` is each fog's measured batched
     /// kernel time.
     pub fn execute(&self, features: &[f32], f_in: usize,
-                   wb: &WeightBundle, batch: usize) -> BspResult {
-        self.execute_inner(features, f_in, wb, batch, true)
+                   wb: &Arc<WeightBundle>, batch: usize) -> BspResult {
+        self.execute_inner(features, f_in, wb, batch, true, true)
     }
 
     /// Like `execute` but skips global-output assembly — the serving
     /// loop only consumes the measured timings, so the O(batch·V·F)
     /// gather would be pure waste per micro-batch. `outputs` is empty.
     pub fn execute_timings(&self, features: &[f32], f_in: usize,
-                           wb: &WeightBundle, batch: usize)
+                           wb: &Arc<WeightBundle>, batch: usize)
                            -> BspResult {
-        self.execute_inner(features, f_in, wb, batch, false)
+        self.execute_inner(features, f_in, wb, batch, false, true)
+    }
+
+    /// `execute` with every fog's kernels run inline on the calling
+    /// thread — the spawn-free oracle. Shares the exact kernel code
+    /// path with the pooled workers (`FogJob::run`), so pooled and
+    /// serial outputs are bit-identical; `tests/backend_parity.rs`
+    /// asserts it.
+    pub fn execute_serial(&self, features: &[f32], f_in: usize,
+                          wb: &Arc<WeightBundle>, batch: usize)
+                          -> BspResult {
+        self.execute_inner(features, f_in, wb, batch, true, false)
+    }
+
+    /// Build this layer's per-fog jobs, draining `states` (fogs owning
+    /// no vertices get `None`).
+    #[allow(clippy::too_many_arguments)]
+    fn layer_jobs(&self, layer: usize, dim: usize, last: bool,
+                  batch: usize, f_in: usize,
+                  states: &mut [Vec<f32>], wb: &Arc<WeightBundle>)
+                  -> Vec<Option<FogJob>> {
+        (0..self.n_fogs)
+            .map(|j| {
+                if self.subs[j].n_total() == 0 {
+                    return None;
+                }
+                let state = std::mem::take(&mut states[j]);
+                Some(if self.model == "astgcn" {
+                    FogJob::Astgcn {
+                        ft: f_in,
+                        batch,
+                        state,
+                        weights: wb.clone(),
+                    }
+                } else {
+                    FogJob::Layer {
+                        layer,
+                        dim,
+                        last,
+                        batch,
+                        state,
+                        weights: wb.clone(),
+                    }
+                })
+            })
+            .collect()
+    }
+
+    /// Run one layer's jobs inline (the serial oracle).
+    fn run_jobs_serial(&self, jobs: Vec<Option<FogJob>>)
+                       -> (Vec<Vec<f32>>, Vec<f64>) {
+        let mut scratch = KernelScratch::default();
+        let mut outs = Vec::with_capacity(jobs.len());
+        let mut secs = Vec::with_capacity(jobs.len());
+        for (j, job) in jobs.into_iter().enumerate() {
+            match job {
+                None => {
+                    outs.push(Vec::new());
+                    secs.push(0.0);
+                }
+                Some(job) => {
+                    let csr = self.csrs.get(j).map(|c| c.as_ref());
+                    let (out, s) = job.run(&self.model, csr,
+                                           &self.subs[j], &mut scratch);
+                    outs.push(out);
+                    secs.push(s);
+                }
+            }
+        }
+        (outs, secs)
     }
 
     fn execute_inner(&self, features: &[f32], f_in: usize,
-                     wb: &WeightBundle, batch: usize,
-                     assemble_outputs: bool) -> BspResult {
+                     wb: &Arc<WeightBundle>, batch: usize,
+                     assemble_outputs: bool, pooled: bool) -> BspResult {
         assert!(batch >= 1);
         let n_fogs = self.n_fogs;
         let model = self.model.as_str();
@@ -336,67 +443,47 @@ impl BatchedBspPlan {
         let mut out_dim = f_in;
         for layer in 0..num_layers {
             sync_bytes.push(sync_halo(&self.subs, &self.plan,
-                                      &mut states, dim, batch));
+                                      &self.halo_index, &mut states,
+                                      dim, batch));
             sync_max_out.push(max_out_vertices * dim * 4 * batch);
             let last = layer + 1 == num_layers;
-            // one worker thread per fog: the fogs are independent
-            // machines, so their layer kernels run concurrently
-            let results: Vec<Option<(Vec<f32>, f64)>> =
-                std::thread::scope(|sc| {
-                    let mut handles = Vec::with_capacity(n_fogs);
-                    for j in 0..n_fogs {
-                        let sub = &self.subs[j];
-                        let csr = &self.csrs[j];
-                        let st = &states[j];
-                        handles.push(sc.spawn(move || {
-                            if sub.n_total() == 0 {
-                                return None;
-                            }
-                            let t = Instant::now();
-                            let out = run_layer_csr(
-                                model, layer, wb, st, dim, csr, last,
-                                batch,
-                            )
-                            .expect("model validated in new()");
-                            Some((out, t.elapsed().as_secs_f64()))
-                        }));
-                    }
-                    handles
-                        .into_iter()
-                        .map(|h| h.join().expect("fog worker panicked"))
-                        .collect()
-                });
-            let mut per_fog = Vec::with_capacity(n_fogs);
+            let jobs = self.layer_jobs(layer, dim, last, batch, f_in,
+                                       &mut states, wb);
+            let (outs, secs) = if pooled {
+                self.pool.dispatch(jobs)
+            } else {
+                self.run_jobs_serial(jobs)
+            };
             let mut next_states: Vec<Vec<f32>> =
                 Vec::with_capacity(n_fogs);
-            for (j, r) in results.into_iter().enumerate() {
-                match r {
-                    None => {
-                        per_fog.push(0.0);
-                        next_states.push(Vec::new());
+            for (j, out) in outs.into_iter().enumerate() {
+                if out.is_empty() {
+                    // fog owns no vertices (n_local > 0 ⟺ n_total > 0)
+                    next_states.push(Vec::new());
+                    continue;
+                }
+                let l = self.subs[j].n_local;
+                let n = self.subs[j].n_total();
+                if model == "astgcn" {
+                    // the astgcn kernel emits ALL rows (halos included)
+                    out_dim = out.len() / (batch * n);
+                    next_states.push(out);
+                } else {
+                    out_dim = out.len() / (batch * l);
+                    // rebuild full local-space states with halo slots
+                    // zeroed (filled by the next sync round)
+                    let mut st = vec![0f32; batch * n * out_dim];
+                    for bk in 0..batch {
+                        st[bk * n * out_dim..(bk * n + l) * out_dim]
+                            .copy_from_slice(
+                                &out[bk * l * out_dim
+                                    ..(bk + 1) * l * out_dim],
+                            );
                     }
-                    Some((out, secs)) => {
-                        per_fog.push(secs);
-                        let l = self.subs[j].n_local;
-                        let n = self.subs[j].n_total();
-                        out_dim = out.len() / (batch * l).max(1);
-                        // rebuild full local-space states with halo
-                        // slots zeroed (filled by the next sync round)
-                        let mut st =
-                            vec![0f32; batch * n * out_dim];
-                        for bk in 0..batch {
-                            st[bk * n * out_dim
-                                ..(bk * n + l) * out_dim]
-                                .copy_from_slice(
-                                    &out[bk * l * out_dim
-                                        ..(bk + 1) * l * out_dim],
-                                );
-                        }
-                        next_states.push(st);
-                    }
+                    next_states.push(st);
                 }
             }
-            layer_host.push(per_fog);
+            layer_host.push(secs);
             states = next_states;
             dim = out_dim;
         }
@@ -458,7 +545,8 @@ pub fn run_parallel(
     batch: usize,
 ) -> Result<BspResult, EngineError> {
     let plan = BatchedBspPlan::new(g, assignment, n_fogs, model)?;
-    let wb = engine.weights(model, dataset, f_in, classes).clone();
+    let wb =
+        Arc::new(engine.weights(model, dataset, f_in, classes).clone());
     Ok(plan.execute(features, f_in, &wb, batch))
 }
 
@@ -545,5 +633,40 @@ mod tests {
             .unwrap();
         assert_eq!(res.out_dim, 12);
         assert!(res.outputs.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn batched_plan_serves_astgcn() {
+        let (mut g, _) = generate::sbm(60, 200, 3, 0.8, 7);
+        let ft = 36;
+        let mut rng = crate::util::rng::Rng::new(12);
+        g.features =
+            (0..60 * ft).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        g.feature_dim = ft;
+        let dir = std::env::temp_dir().join("bsp_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut eng = Engine::new(EngineKind::Csr, &dir).unwrap();
+        let assignment: Vec<u32> =
+            (0..60).map(|v| (v % 2) as u32).collect();
+        let batch = 2;
+        let res = run_parallel(&g, &g.features, ft, &assignment, 2,
+                               "astgcn", "tinypems", 0, &mut eng, batch)
+            .unwrap();
+        assert_eq!(res.out_dim, 12);
+        assert_eq!(res.outputs.len(), batch * 60 * 12);
+        assert!(res.outputs.iter().all(|v| v.is_finite()));
+        // one layer, one timing per fog
+        assert_eq!(res.layer_host_seconds.len(), 1);
+        assert_eq!(res.layer_host_seconds[0].len(), 2);
+        // both blocks are the same snapshot forward
+        assert_eq!(&res.outputs[..60 * 12], &res.outputs[60 * 12..]);
+    }
+
+    #[test]
+    fn unknown_model_is_rejected_by_plan() {
+        let (g, _) = generate::sbm(40, 120, 2, 0.8, 3);
+        let assignment = vec![0u32; 40];
+        let r = BatchedBspPlan::new(&g, &assignment, 1, "mlp");
+        assert!(r.is_err());
     }
 }

@@ -2,7 +2,9 @@
 //! halo-exchange synchronization between GNN layers, in two flavors —
 //! the engine-driven serial loop (`run_bsp`) and the measured batched
 //! path (`run_parallel` / `BatchedBspPlan`) that executes sparse CSR
-//! kernels on one `std::thread` worker per fog.
+//! kernels on a persistent per-fog worker pool
+//! (`runtime::kernels::pool`), so per-batch timings reflect kernel
+//! cost rather than thread start-up.
 
 pub mod bsp;
 

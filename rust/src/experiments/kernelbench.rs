@@ -1,0 +1,256 @@
+//! `repro bench-kernels` — the kernel-perf baseline recorder: measures
+//! the tiled GEMM and blocked SpMM against their in-tree naive
+//! baselines at serving-relevant shapes (n ≥ 1024, f ∈ {64, 128, 256}),
+//! plus batched-vs-serial fog execution on the persistent worker pool,
+//! and writes BENCH_kernels.json so the repo's perf trajectory is
+//! recorded run over run.
+//!
+//! `--smoke` runs a fast subset for CI; in every mode the tiled
+//! kernels are parity-checked against the naive ones (1e-5 relative)
+//! and a mismatch fails the command — the benchmark doubles as the
+//! cross-kernel correctness gate at bench shapes.
+
+use std::sync::Arc;
+
+use crate::exec::BatchedBspPlan;
+use crate::graph::{generate, subgraph};
+use crate::runtime::csr_backend::CsrPartition;
+use crate::runtime::kernels::{gemm, spmm};
+use crate::runtime::{pad, Engine, EngineKind};
+use crate::util::cli::Args;
+use crate::util::json::{arr, num, obj, s, Json};
+use crate::util::rng::Rng;
+use crate::util::timer::{bench, black_box};
+
+/// Relative parity tolerance between tiled and naive kernels.
+const PARITY_TOL: f32 = 1e-5;
+
+fn max_rel_diff(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs() / (1.0 + x.abs().max(y.abs())))
+        .fold(0f32, f32::max)
+}
+
+pub fn cmd(args: &Args) -> i32 {
+    let smoke = args.has("smoke");
+    let out_path = args.get_or("out", "BENCH_kernels.json");
+    // smoke keeps CI turnaround low; full runs settle the timings
+    let min_s = if smoke { 0.08 } else { 0.5 };
+    println!(
+        "== kernel bench ({}) ==",
+        if smoke { "smoke" } else { "full" }
+    );
+
+    // ---- GEMM: tiled vs naive ------------------------------------------
+    let gemm_shapes: &[(usize, usize, usize)] = if smoke {
+        &[(1024, 64, 64), (1024, 128, 128), (1024, 256, 256)]
+    } else {
+        &[
+            (1024, 64, 64),
+            (1024, 128, 128),
+            (1024, 256, 256),
+            (2048, 128, 64),
+            (4096, 64, 64),
+        ]
+    };
+    let mut gemm_rows: Vec<Json> = Vec::new();
+    let mut min_gemm_speedup = f64::INFINITY;
+    for &(n, fi, fo) in gemm_shapes {
+        let mut rng = Rng::new(0x6E66 ^ (n * fi * fo) as u64);
+        let x: Vec<f32> =
+            (0..n * fi).map(|_| rng.normal_f32(0.0, 0.3)).collect();
+        let w: Vec<f32> =
+            (0..fi * fo).map(|_| rng.normal_f32(0.0, 0.3)).collect();
+        let b: Vec<f32> =
+            (0..fo).map(|_| rng.normal_f32(0.0, 0.3)).collect();
+        let tiled = gemm::gemm_bias(&x, n, fi, &w, fo, &b);
+        let naive = gemm::gemm_bias_naive(&x, n, fi, &w, fo, &b);
+        let err = max_rel_diff(&tiled, &naive);
+        if err > PARITY_TOL {
+            eprintln!(
+                "PARITY FAIL gemm {n}x{fi}x{fo}: tiled deviates from \
+                 naive by {err}"
+            );
+            return 1;
+        }
+        let rn = bench(&format!("gemm/naive_{n}x{fi}x{fo}"), min_s,
+                       10_000, || {
+            black_box(gemm::gemm_bias_naive(&x, n, fi, &w, fo, &b));
+        });
+        let rt = bench(&format!("gemm/tiled_{n}x{fi}x{fo}"), min_s,
+                       10_000, || {
+            black_box(gemm::gemm_bias(&x, n, fi, &w, fo, &b));
+        });
+        let flop = 2.0 * (n * fi * fo) as f64;
+        let speedup = rn.p50_ns / rt.p50_ns;
+        min_gemm_speedup = min_gemm_speedup.min(speedup);
+        println!(
+            "gemm {n:>5}x{fi:>3}x{fo:>3}  naive {:>8.2} ms  tiled \
+             {:>8.2} ms  {:>5.2}x  {:>6.2} GFLOP/s",
+            rn.p50_ns / 1e6,
+            rt.p50_ns / 1e6,
+            speedup,
+            flop / rt.p50_ns
+        );
+        gemm_rows.push(obj(vec![
+            ("n", num(n as f64)),
+            ("f_in", num(fi as f64)),
+            ("f_out", num(fo as f64)),
+            ("naive_ms", num(rn.p50_ns / 1e6)),
+            ("tiled_ms", num(rt.p50_ns / 1e6)),
+            ("speedup", num(speedup)),
+            ("gflops_naive", num(flop / rn.p50_ns)),
+            ("gflops_tiled", num(flop / rt.p50_ns)),
+            ("max_rel_err", num(err as f64)),
+        ]));
+    }
+
+    // ---- SpMM: blocked vs naive ----------------------------------------
+    let (nv, ne) = if smoke { (4096, 32_768) } else { (16_384, 131_072) };
+    let (g, _) = generate::sbm(nv, ne, 16, 0.8, 7);
+    let all_on_one = vec![0u32; nv];
+    let (subs, _) = subgraph::extract(&g, &all_on_one, 1);
+    let edges = pad::prep_edges("gcn", &subs[0]).unwrap();
+    let csr = CsrPartition::from_edges(&edges);
+    let nnz = csr.num_edges();
+    let mut spmm_rows: Vec<Json> = Vec::new();
+    let mut min_spmm_speedup = f64::INFINITY;
+    for &f in &[64usize, 128, 256] {
+        let mut rng = Rng::new(0x5B33 ^ f as u64);
+        let h: Vec<f32> =
+            (0..csr.n * f).map(|_| rng.normal_f32(0.0, 0.5)).collect();
+        let blocked = spmm::csr_spmm(&csr, &h, f);
+        let naive = spmm::csr_spmm_naive(&csr, &h, f);
+        let err = max_rel_diff(&blocked, &naive);
+        if err > PARITY_TOL {
+            eprintln!(
+                "PARITY FAIL spmm v={nv} f={f}: blocked deviates from \
+                 naive by {err}"
+            );
+            return 1;
+        }
+        let rn = bench(&format!("spmm/naive_v{nv}_f{f}"), min_s,
+                       10_000, || {
+            black_box(spmm::csr_spmm_naive(&csr, &h, f));
+        });
+        let rt = bench(&format!("spmm/blocked_v{nv}_f{f}"), min_s,
+                       10_000, || {
+            black_box(spmm::csr_spmm(&csr, &h, f));
+        });
+        // effective traffic: gathered rows + written aggregate + CSR
+        // metadata (col u32 + val f32 + amortized row_ptr)
+        let bytes = ((nnz + csr.n_local) * f * 4 + nnz * 12) as f64;
+        let speedup = rn.p50_ns / rt.p50_ns;
+        min_spmm_speedup = min_spmm_speedup.min(speedup);
+        println!(
+            "spmm v={nv} nnz={nnz} f={f:>3}  naive {:>8.2} ms  blocked \
+             {:>8.2} ms  {:>5.2}x  {:>6.2} GB/s",
+            rn.p50_ns / 1e6,
+            rt.p50_ns / 1e6,
+            speedup,
+            bytes / rt.p50_ns
+        );
+        spmm_rows.push(obj(vec![
+            ("vertices", num(nv as f64)),
+            ("nnz", num(nnz as f64)),
+            ("f", num(f as f64)),
+            ("naive_ms", num(rn.p50_ns / 1e6)),
+            ("blocked_ms", num(rt.p50_ns / 1e6)),
+            ("speedup", num(speedup)),
+            ("gbps_naive", num(bytes / rn.p50_ns)),
+            ("gbps_blocked", num(bytes / rt.p50_ns)),
+            ("max_rel_err", num(err as f64)),
+        ]));
+    }
+
+    // ---- fog exec: batched pool vs serial per-request -------------------
+    let (fnv, fne) = if smoke { (2048, 16_384) } else { (8192, 65_536) };
+    let (mut fg, _) = generate::sbm(fnv, fne, 8, 0.82, 11);
+    let f_in = 64;
+    let mut rng = Rng::new(0xF06E);
+    fg.feature_dim = f_in;
+    fg.features =
+        (0..fnv * f_in).map(|_| rng.normal_f32(0.0, 0.5)).collect();
+    let assignment: Vec<u32> =
+        (0..fnv).map(|v| (v % 4) as u32).collect();
+    let dir = std::env::temp_dir().join("bench_kernels");
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut engine = Engine::new(EngineKind::Csr, &dir).unwrap();
+    let wb = Arc::new(
+        engine.weights("gcn", "benchkernels", f_in, 8).clone(),
+    );
+    let plan = BatchedBspPlan::new(&fg, &assignment, 4, "gcn").unwrap();
+    let batch = 8;
+    // pooled and serial execution must agree bit-for-bit
+    let pooled = plan.execute(&fg.features, f_in, &wb, batch);
+    let serial = plan.execute_serial(&fg.features, f_in, &wb, batch);
+    if pooled.outputs != serial.outputs {
+        eprintln!("PARITY FAIL fog exec: pooled != serial outputs");
+        return 1;
+    }
+    let rb = bench("exec/pool_batched_b8_4fogs", min_s.max(0.2),
+                   10_000, || {
+        black_box(plan.execute_timings(&fg.features, f_in, &wb, batch));
+    });
+    let rs = bench("exec/pool_serial_8x_b1_4fogs", min_s.max(0.2),
+                   10_000, || {
+        for _ in 0..batch {
+            black_box(plan.execute_timings(&fg.features, f_in, &wb, 1));
+        }
+    });
+    let fog_speedup = rs.p50_ns / rb.p50_ns;
+    println!(
+        "fog exec v={fnv} b={batch}  serial {:>8.2} ms  batched \
+         {:>8.2} ms  {:>5.2}x",
+        rs.p50_ns / 1e6,
+        rb.p50_ns / 1e6,
+        fog_speedup
+    );
+    let fog_rows = vec![obj(vec![
+        ("vertices", num(fnv as f64)),
+        ("fogs", num(4.0)),
+        ("batch", num(batch as f64)),
+        ("model", s("gcn")),
+        ("serial_ms", num(rs.p50_ns / 1e6)),
+        ("batched_ms", num(rb.p50_ns / 1e6)),
+        ("speedup", num(fog_speedup)),
+    ])];
+
+    println!(
+        "min speedups: gemm {min_gemm_speedup:.2}x, spmm \
+         {min_spmm_speedup:.2}x (parity ok at {PARITY_TOL} rel)"
+    );
+
+    let doc = obj(vec![
+        ("benchmark", s("kernels")),
+        ("generated_by", s("repro bench-kernels")),
+        // all _ms / throughput / speedup values are p50-of-samples
+        // (robust on noisy shared hosts)
+        ("stat", s("p50")),
+        ("smoke", Json::Bool(smoke)),
+        ("gemm", arr(gemm_rows)),
+        ("spmm", arr(spmm_rows)),
+        ("fog_exec", arr(fog_rows)),
+        (
+            "summary",
+            obj(vec![
+                ("min_gemm_speedup", num(min_gemm_speedup)),
+                ("min_spmm_speedup", num(min_spmm_speedup)),
+                ("fog_batched_speedup", num(fog_speedup)),
+                ("parity_tol_rel", num(PARITY_TOL as f64)),
+            ]),
+        ),
+    ]);
+    match std::fs::write(out_path, format!("{doc}\n")) {
+        Ok(()) => {
+            println!("wrote {out_path}");
+            0
+        }
+        Err(e) => {
+            eprintln!("cannot write {out_path}: {e}");
+            1
+        }
+    }
+}

@@ -1,11 +1,14 @@
 //! `repro` — the Fograph leader CLI.
 //!
 //! Subcommands:
-//!   dataset   generate dataset twins (.fgr) for the Python compile path
-//!   serve     run one end-to-end serving comparison on a dataset
-//!   loadtest  sustained request-level load generation + online serving
-//!   exp       regenerate a paper table/figure (see experiments/)
-//!   list      list datasets, artifacts and experiments
+//!   dataset        generate dataset twins (.fgr) for the Python compile
+//!                  path
+//!   serve          run one end-to-end serving comparison on a dataset
+//!   loadtest       sustained request-level load generation + online
+//!                  serving
+//!   bench-kernels  naive-vs-tiled kernel benchmark -> BENCH_kernels.json
+//!   exp            regenerate a paper table/figure (see experiments/)
+//!   list           list datasets, artifacts and experiments
 
 use std::path::{Path, PathBuf};
 
@@ -24,12 +27,14 @@ use fograph::util::json::Json;
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = Args::parse(&argv, &["verbose", "keep-outputs", "gpu",
-                                    "spill", "no-background-load"]);
+                                    "spill", "no-background-load",
+                                    "smoke"]);
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     let code = match cmd {
         "dataset" => cmd_dataset(&args),
         "serve" => cmd_serve(&args),
         "loadtest" => cmd_loadtest(&args),
+        "bench-kernels" => experiments::kernelbench::cmd(&args),
         "exp" => experiments::cmd_exp(&args),
         "list" => cmd_list(&args),
         _ => {
@@ -58,6 +63,7 @@ USAGE:
                  [--batch-max N] [--batch-deadline-ms MS]
                  [--queue-cap N] [--spill] [--no-background-load]
                  [--scheduler-period SECONDS] [--out BENCH_loadtest.json]
+  repro bench-kernels [--smoke] [--out BENCH_kernels.json]
   repro exp      <fig3|fig4|fig8|fig11|fig12|table4|fig13|table5|fig14|
                   fig15|fig16|fig17|fig18|loadtest|all>
                  [--engine pjrt|ref|csr]
@@ -72,10 +78,16 @@ ENGINES (see rust/src/runtime/backend.rs):
 EXEC MODES (loadtest only):
   analytic  price batches with the calibratable ω models; runs are
             bit-reproducible for a fixed seed (the default)
-  measured  execute every micro-batch on the real CSR batched kernels
-            (one std::thread worker per fog) and feed measured per-fog
-            timings into the online profiler, so mid-run replans use
-            observed costs; gcn|gat|sage only"
+  measured  execute every micro-batch on the real tiled/blocked kernels
+            (persistent worker pool, one thread per fog) and feed
+            measured per-fog timings into the online profiler, so
+            mid-run replans use observed costs; all models incl. astgcn
+
+KERNELS:
+  bench-kernels measures the tiled GEMM and blocked SpMM against their
+  naive baselines (GFLOP/s, effective GB/s, batched-vs-serial fog exec)
+  and writes BENCH_kernels.json; --smoke runs a fast parity-checked
+  subset for CI"
     );
 }
 
@@ -289,14 +301,6 @@ fn cmd_loadtest(args: &Args) -> i32 {
         Ok(x) => x,
         Err(code) => return code,
     };
-    if traffic.exec == ExecMode::Measured && model == "astgcn" {
-        eprintln!(
-            "--exec measured drives the CSR batched kernels, which \
-             cover gcn|gat|sage; astgcn loadtests run with --exec \
-             analytic"
-        );
-        return 2;
-    }
     let mut engine = make_engine(args);
     let mut runs: Vec<Json> = Vec::new();
     for m in modes {

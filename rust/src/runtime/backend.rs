@@ -12,7 +12,9 @@
 //!
 //! Per-bucket artifact caching, CSR-view caching and any other
 //! backend-specific state live behind the trait; callers only see
-//! `run_layer` / `run_layer_batched` / `run_astgcn`.
+//! `run_layer` / `run_layer_batched` / `run_astgcn`. The CPU backends'
+//! numerics (tiled GEMM, blocked SpMM) live in `runtime::kernels` —
+//! backends own structure and scratch, kernels own the loops.
 
 use std::time::Instant;
 

@@ -7,6 +7,12 @@
 //! runs as a single stacked GEMM — the amortization the serving loop's
 //! power-of-two buckets pay for).
 //!
+//! The numeric kernels live in `runtime::kernels` (tiled GEMM, blocked
+//! SpMM); this module owns the CSR structure, the layer semantics and
+//! the per-backend scratch reuse. Masked (zero-weight) edges are
+//! dropped once at `CsrPartition::from_edges` instead of branch-checked
+//! per edge per layer in the hot loops.
+//!
 //! Numeric semantics mirror `reference.rs` exactly (same normalization,
 //! same activation, same attention masking); cross-backend parity is
 //! asserted by `rust/tests/backend_parity.rs` to 1e-5.
@@ -18,8 +24,10 @@ use crate::graph::LocalGraph;
 
 use super::backend::{ExecBackend, LayerCtx};
 use super::engine::{EngineError, LayerOut};
+use super::kernels::{gemm_bias, gemm_bias_into, resized, KernelScratch};
+use super::kernels::spmm::{csr_spmm, csr_spmm_into};
 use super::pad::{EdgeArrays, UnknownModel};
-use super::reference::{elu, matmul_bias, relu};
+use super::reference::{elu, relu};
 use super::weights::WeightBundle;
 
 /// Destination-indexed CSR view of one partition: row v lists the
@@ -31,31 +39,45 @@ pub struct CsrPartition {
     pub row_ptr: Vec<usize>,
     /// Source row of each edge, local index space (may be >= n_local).
     pub col: Vec<u32>,
-    /// Edge weight (0 entries are masked, matching the padding rules).
+    /// Edge weight; never zero — masked entries are dropped at
+    /// construction, so the kernels carry no per-edge mask branch.
     pub val: Vec<f32>,
     /// Per-owned-vertex normalization, length n_local.
     pub inv_deg: Vec<f32>,
     /// Total rows (owned + halo).
     pub n: usize,
     pub n_local: usize,
+    /// COO edges this CSR was built from (including dropped masked
+    /// edges) — the cache-staleness witness.
+    pub n_source_edges: usize,
 }
 
 impl CsrPartition {
-    /// Counting-sort the COO edge arrays by destination.
+    /// Counting-sort the COO edge arrays by destination, dropping
+    /// `ew == 0` (masked) edges: they contribute nothing to any kernel
+    /// — aggregation skips them and the GAT/ASTGCN softmaxes exclude
+    /// them — so paying a branch for them per edge per layer in the hot
+    /// loop is pure waste.
     pub fn from_edges(edges: &EdgeArrays) -> CsrPartition {
         let l = edges.n_local;
         let ne = edges.num_edges();
         let mut row_ptr = vec![0usize; l + 1];
-        for &d in &edges.dst {
-            row_ptr[d as usize + 1] += 1;
+        for i in 0..ne {
+            if edges.ew[i] != 0.0 {
+                row_ptr[edges.dst[i] as usize + 1] += 1;
+            }
         }
         for v in 0..l {
             row_ptr[v + 1] += row_ptr[v];
         }
+        let nnz = row_ptr[l];
         let mut cursor: Vec<usize> = row_ptr[..l].to_vec();
-        let mut col = vec![0u32; ne];
-        let mut val = vec![0f32; ne];
+        let mut col = vec![0u32; nnz];
+        let mut val = vec![0f32; nnz];
         for i in 0..ne {
+            if edges.ew[i] == 0.0 {
+                continue;
+            }
             let d = edges.dst[i] as usize;
             col[cursor[d]] = edges.src[i];
             val[cursor[d]] = edges.ew[i];
@@ -68,9 +90,11 @@ impl CsrPartition {
             inv_deg: edges.inv_deg.clone(),
             n: edges.n,
             n_local: l,
+            n_source_edges: ne,
         }
     }
 
+    /// Stored (unmasked) edges; `<= n_source_edges`.
     pub fn num_edges(&self) -> usize {
         self.col.len()
     }
@@ -78,42 +102,37 @@ impl CsrPartition {
 
 /// Sparse weighted in-neighbor aggregation for one block:
 /// `agg[v] = Σ_{(u,v)} w · h[u]` over owned rows v (the SpMM core).
+/// Delegates to the blocked kernel (`kernels::spmm`).
 pub fn csr_aggregate(csr: &CsrPartition, h: &[f32], f: usize)
                      -> Vec<f32> {
-    let l = csr.n_local;
-    let mut agg = vec![0f32; l * f];
-    for v in 0..l {
-        let row = &mut agg[v * f..(v + 1) * f];
-        for e in csr.row_ptr[v]..csr.row_ptr[v + 1] {
-            let w = csr.val[e];
-            if w == 0.0 {
-                continue;
-            }
-            let u = csr.col[e] as usize;
-            let hu = &h[u * f..(u + 1) * f];
-            if w == 1.0 {
-                for (a, &x) in row.iter_mut().zip(hu) {
-                    *a += x;
-                }
-            } else {
-                for (a, &x) in row.iter_mut().zip(hu) {
-                    *a += w * x;
-                }
-            }
-        }
-    }
-    agg
+    csr_spmm(csr, h, f)
 }
 
 /// One message-passing layer over a block-diagonal batch of `batch`
 /// requests: `h` is [batch * n, f_in] block-major; the output is
 /// [batch * n_local, fo] block-major. `batch == 1` is the single-request
-/// forward. Semantics mirror `reference::run_layer`.
+/// forward. Semantics mirror `reference::run_layer`. Allocates a fresh
+/// scratch — the steady-state paths (backend, worker pool) hold one and
+/// call `run_layer_csr_with`.
 #[allow(clippy::too_many_arguments)]
 pub fn run_layer_csr(model: &str, layer: usize, weights: &WeightBundle,
                      h: &[f32], f_in: usize, csr: &CsrPartition,
                      last: bool, batch: usize)
                      -> Result<Vec<f32>, UnknownModel> {
+    let mut scratch = KernelScratch::default();
+    run_layer_csr_with(model, layer, weights, h, f_in, csr, last, batch,
+                       &mut scratch)
+}
+
+/// `run_layer_csr` with caller-owned scratch buffers: the per-layer
+/// intermediates (aggregate, combine input, attention projections)
+/// reuse `scratch` instead of allocating per call.
+#[allow(clippy::too_many_arguments)]
+pub fn run_layer_csr_with(model: &str, layer: usize,
+                          weights: &WeightBundle, h: &[f32],
+                          f_in: usize, csr: &CsrPartition, last: bool,
+                          batch: usize, scratch: &mut KernelScratch)
+                          -> Result<Vec<f32>, UnknownModel> {
     if !matches!(model, "gcn" | "sage" | "gat") {
         return Err(UnknownModel(model.to_string()));
     }
@@ -130,10 +149,11 @@ pub fn run_layer_csr(model: &str, layer: usize, weights: &WeightBundle,
     let fo = *w.dims.last().unwrap();
     Ok(match model {
         "gcn" => {
-            let mut comb = vec![0f32; batch * l * f_in];
+            let agg = resized(&mut scratch.agg, l * f_in);
+            let comb = resized(&mut scratch.comb, batch * l * f_in);
             for bk in 0..batch {
                 let hb = &h[bk * n * f_in..(bk + 1) * n * f_in];
-                let agg = csr_aggregate(csr, hb, f_in);
+                csr_spmm_into(csr, hb, f_in, agg);
                 let cb =
                     &mut comb[bk * l * f_in..(bk + 1) * l * f_in];
                 for v in 0..l {
@@ -144,18 +164,20 @@ pub fn run_layer_csr(model: &str, layer: usize, weights: &WeightBundle,
                     }
                 }
             }
-            let mut out = matmul_bias(&comb, batch * l, f_in,
-                                      &w.f32_data, fo, &b.f32_data);
+            let mut out = gemm_bias(comb, batch * l, f_in,
+                                    &w.f32_data, fo, &b.f32_data);
             if !last {
                 relu(&mut out);
             }
             out
         }
         "sage" => {
-            let mut comb = vec![0f32; batch * l * 2 * f_in];
+            let agg = resized(&mut scratch.agg, l * f_in);
+            let comb =
+                resized(&mut scratch.comb, batch * l * 2 * f_in);
             for bk in 0..batch {
                 let hb = &h[bk * n * f_in..(bk + 1) * n * f_in];
-                let agg = csr_aggregate(csr, hb, f_in);
+                csr_spmm_into(csr, hb, f_in, agg);
                 let cb = &mut comb
                     [bk * l * 2 * f_in..(bk + 1) * l * 2 * f_in];
                 for v in 0..l {
@@ -167,8 +189,8 @@ pub fn run_layer_csr(model: &str, layer: usize, weights: &WeightBundle,
                     }
                 }
             }
-            let mut out = matmul_bias(&comb, batch * l, 2 * f_in,
-                                      &w.f32_data, fo, &b.f32_data);
+            let mut out = gemm_bias(comb, batch * l, 2 * f_in,
+                                    &w.f32_data, fo, &b.f32_data);
             if !last {
                 relu(&mut out);
             }
@@ -182,8 +204,9 @@ pub fn run_layer_csr(model: &str, layer: usize, weights: &WeightBundle,
                 .get(&format!("l{layer}.a_dst"))
                 .expect("gat a_dst");
             // z spans ALL rows of ALL blocks: one stacked GEMM
-            let z = matmul_bias(h, batch * n, f_in, &w.f32_data, fo,
-                                &b.f32_data);
+            let z = resized(&mut scratch.z, batch * n * fo);
+            gemm_bias_into(h, batch * n, f_in, &w.f32_data, fo,
+                           &b.f32_data, z);
             let dot = |row: usize, a: &[f32]| -> f32 {
                 z[row * fo..(row + 1) * fo]
                     .iter()
@@ -191,12 +214,14 @@ pub fn run_layer_csr(model: &str, layer: usize, weights: &WeightBundle,
                     .map(|(x, y)| x * y)
                     .sum()
             };
-            let es: Vec<f32> = (0..batch * n)
-                .map(|r| dot(r, &a_src.f32_data))
-                .collect();
-            let ed: Vec<f32> = (0..batch * n)
-                .map(|r| dot(r, &a_dst.f32_data))
-                .collect();
+            let es = resized(&mut scratch.att_src, batch * n);
+            for (r, e) in es.iter_mut().enumerate() {
+                *e = dot(r, &a_src.f32_data);
+            }
+            let ed = resized(&mut scratch.att_dst, batch * n);
+            for (r, e) in ed.iter_mut().enumerate() {
+                *e = dot(r, &a_dst.f32_data);
+            }
             let mut out = vec![0f32; batch * l * fo];
             let mut ex: Vec<f32> = Vec::new();
             for bk in 0..batch {
@@ -204,27 +229,21 @@ pub fn run_layer_csr(model: &str, layer: usize, weights: &WeightBundle,
                 for v in 0..l {
                     let lo = csr.row_ptr[v];
                     let hi = csr.row_ptr[v + 1];
+                    if lo == hi {
+                        continue; // isolated vertex (masked edges are
+                                  // dropped at construction)
+                    }
                     // segment softmax over the in-edges of v
                     let mut mx = f32::NEG_INFINITY;
                     for e in lo..hi {
-                        if csr.val[e] == 0.0 {
-                            continue;
-                        }
                         let x = es[off + csr.col[e] as usize]
                             + ed[off + v];
                         let lg = if x > 0.0 { x } else { 0.2 * x };
                         mx = mx.max(lg);
                     }
-                    if mx == f32::NEG_INFINITY {
-                        continue;
-                    }
                     ex.clear();
                     let mut denom = 0f32;
                     for e in lo..hi {
-                        if csr.val[e] == 0.0 {
-                            ex.push(0.0);
-                            continue;
-                        }
                         let x = es[off + csr.col[e] as usize]
                             + ed[off + v];
                         let lg = if x > 0.0 { x } else { 0.2 * x };
@@ -293,13 +312,13 @@ pub fn run_astgcn_csr(weights: &WeightBundle, x: &[f32], n: usize,
     }
 
     let zeros_datt = vec![0f32; datt];
-    let z1 = matmul_bias(x, n, ft, &w1.f32_data, datt, &zeros_datt);
-    let z2 = matmul_bias(x, n, ft, &w2.f32_data, datt, &zeros_datt);
+    let z1 = gemm_bias(x, n, ft, &w1.f32_data, datt, &zeros_datt);
+    let z2 = gemm_bias(x, n, ft, &w2.f32_data, datt, &zeros_datt);
     let scale = 1.0 / (datt as f32).sqrt();
     let zeros_h = vec![0f32; hidden];
-    let hg = matmul_bias(x, n, ft, &wgc.f32_data, hidden, &zeros_h);
-    let mut hh = matmul_bias(x, n, ft, &wself.f32_data, hidden,
-                             &zeros_h);
+    let hg = gemm_bias(x, n, ft, &wgc.f32_data, hidden, &zeros_h);
+    let mut hh = gemm_bias(x, n, ft, &wself.f32_data, hidden,
+                           &zeros_h);
 
     // per row: masked attention softmax over {in(r), r}, then the
     // normalized sparse combine hh_r += Σ_c a_eff[r][c] · hg_c
@@ -346,7 +365,7 @@ pub fn run_astgcn_csr(weights: &WeightBundle, x: &[f32], n: usize,
         }
     }
     relu(&mut hh);
-    matmul_bias(&hh, n, hidden, &wout.f32_data, t_out, &bout.f32_data)
+    gemm_bias(&hh, n, hidden, &wout.f32_data, t_out, &bout.f32_data)
 }
 
 /// Structural fingerprint of the edge arrays — the CSR cache key. FNV-1a
@@ -376,11 +395,13 @@ const CSR_CACHE_CAP: usize = 64;
 /// fingerprint (the analogue of the PJRT per-bucket executable cache),
 /// so the steady-state request path pays one O(E) fingerprint scan
 /// plus the O(E·F) SpMM — never the O(E log E + scatter) rebuild.
-/// (The astgcn path groups edges per call instead; its cost is
-/// dominated by the four dense feature transforms.)
+/// Holds one `KernelScratch`, so per-layer intermediates reuse buffers
+/// across requests. (The astgcn path groups edges per call instead;
+/// its cost is dominated by the four dense feature transforms.)
 #[derive(Debug, Default)]
 pub struct CsrBackend {
     cache: HashMap<u64, CsrPartition>,
+    scratch: KernelScratch,
 }
 
 impl CsrBackend {
@@ -388,24 +409,25 @@ impl CsrBackend {
         CsrBackend::default()
     }
 
-    fn partition(&mut self, edges: &EdgeArrays) -> &CsrPartition {
+    fn partition<'a>(cache: &'a mut HashMap<u64, CsrPartition>,
+                     edges: &EdgeArrays) -> &'a CsrPartition {
         let key = fingerprint(edges);
         // structural verification on hit (also in release): a 64-bit
         // fingerprint collision must rebuild, never silently compute
         // over the wrong partition
-        let stale = self.cache.get(&key).is_some_and(|c| {
+        let stale = cache.get(&key).is_some_and(|c| {
             c.n != edges.n
                 || c.n_local != edges.n_local
-                || c.num_edges() != edges.num_edges()
+                || c.n_source_edges != edges.num_edges()
         });
         if stale {
-            self.cache.remove(&key);
-        } else if !self.cache.contains_key(&key)
-            && self.cache.len() >= CSR_CACHE_CAP
+            cache.remove(&key);
+        } else if !cache.contains_key(&key)
+            && cache.len() >= CSR_CACHE_CAP
         {
-            self.cache.clear();
+            cache.clear();
         }
-        self.cache
+        cache
             .entry(key)
             .or_insert_with(|| CsrPartition::from_edges(edges))
     }
@@ -424,10 +446,12 @@ impl ExecBackend for CsrBackend {
     fn run_layer_batched(&mut self, ctx: &LayerCtx<'_>, h: &[f32],
                          edges: &EdgeArrays, batch: usize)
                          -> Result<LayerOut, EngineError> {
-        let csr = self.partition(edges);
+        let CsrBackend { cache, scratch } = self;
+        let csr = CsrBackend::partition(cache, edges);
         let t = Instant::now();
-        let out = run_layer_csr(ctx.model, ctx.layer, ctx.weights, h,
-                                ctx.f_in, csr, ctx.last, batch)?;
+        let out = run_layer_csr_with(ctx.model, ctx.layer, ctx.weights,
+                                     h, ctx.f_in, csr, ctx.last, batch,
+                                     scratch)?;
         let host = t.elapsed().as_secs_f64();
         let out_dim = out.len() / (batch * csr.n_local).max(1);
         Ok(LayerOut { h: out, out_dim, host_seconds: host })
@@ -477,6 +501,7 @@ mod tests {
         let e = ring_edges(5);
         let csr = CsrPartition::from_edges(&e);
         assert_eq!(csr.num_edges(), e.num_edges());
+        assert_eq!(csr.n_source_edges, e.num_edges());
         for v in 0..5usize {
             let lo = csr.row_ptr[v];
             let hi = csr.row_ptr[v + 1];
@@ -489,6 +514,27 @@ mod tests {
             ];
             want.sort_unstable();
             assert_eq!(ins, want);
+        }
+    }
+
+    #[test]
+    fn masked_edges_dropped_at_construction() {
+        let mut e = ring_edges(5);
+        e.ew[3] = 0.0;
+        e.ew[7] = 0.0;
+        let csr = CsrPartition::from_edges(&e);
+        assert_eq!(csr.num_edges(), e.num_edges() - 2);
+        assert_eq!(csr.n_source_edges, e.num_edges());
+        assert!(csr.val.iter().all(|&w| w != 0.0));
+        // aggregation still matches the masked COO reference semantics
+        let f = 3;
+        let mut rng = crate::util::rng::Rng::new(31);
+        let h: Vec<f32> =
+            (0..5 * f).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let a = csr_aggregate(&csr, &h, f);
+        let b = reference::segment_aggregate(&h, f, &e, 5);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-6);
         }
     }
 
@@ -551,6 +597,38 @@ mod tests {
             .unwrap();
             assert_eq!(&stacked[bk * 5 * f..(bk + 1) * 5 * f], &one[..]);
         }
+    }
+
+    #[test]
+    fn scratch_reuse_does_not_change_results() {
+        let e = ring_edges(7);
+        let csr = CsrPartition::from_edges(&e);
+        let f = 4;
+        let mut rng = crate::util::rng::Rng::new(8);
+        let w: Vec<f32> =
+            (0..2 * f * f).map(|_| rng.normal_f32(0.0, 0.4)).collect();
+        let b = vec![0f32; f];
+        let wb =
+            bundle(&[("l0.w", &[2 * f, f], &w), ("l0.b", &[f], &b)]);
+        let mut scratch = KernelScratch::default();
+        let h1: Vec<f32> =
+            (0..7 * f).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let h2: Vec<f32> =
+            (0..2 * 7 * f).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        // interleave shapes so stale scratch contents would corrupt
+        // results if any kernel read-before-write survived
+        let a1 = run_layer_csr_with("sage", 0, &wb, &h1, f, &csr, false,
+                                    1, &mut scratch)
+            .unwrap();
+        let a2 = run_layer_csr_with("sage", 0, &wb, &h2, f, &csr, false,
+                                    2, &mut scratch)
+            .unwrap();
+        let b1 = run_layer_csr("sage", 0, &wb, &h1, f, &csr, false, 1)
+            .unwrap();
+        let b2 = run_layer_csr("sage", 0, &wb, &h2, f, &csr, false, 2)
+            .unwrap();
+        assert_eq!(a1, b1);
+        assert_eq!(a2, b2);
     }
 
     #[test]

@@ -1,0 +1,83 @@
+//! The dedicated kernel layer every execution backend routes through:
+//!
+//! * `gemm` — register-blocked, K-unrolled matmul-with-bias (the
+//!   combination kernel; compute-bound, so the win is weight-row reuse
+//!   across an MR-row block and KU-deep independent sums).
+//! * `spmm` — edge-unrolled CSR aggregation (the memory-bandwidth-bound
+//!   kernel; full-width sequential gathers the prefetcher can follow,
+//!   EU source rows per out-row round-trip).
+//! * `pool` — persistent per-fog worker threads with channel handoff,
+//!   so measured per-batch timings reflect kernel cost rather than
+//!   thread start-up.
+//!
+//! The tile/unroll shapes were chosen by measurement (see the design
+//! notes in `gemm.rs` / `spmm.rs`): the classic MR×NR accumulator tile
+//! and the row-blocked + feature-tiled SpMM both regress under
+//! baseline x86-64 codegen, so the shipped kernels are the variants
+//! that actually win at serving shapes.
+//!
+//! Both compute kernels keep their naive predecessors
+//! (`gemm_bias_naive` / `csr_spmm_naive`) as in-tree baselines:
+//! `rust/tests/backend_parity.rs` asserts numerical parity and
+//! `repro bench-kernels` records the measured speedups in
+//! BENCH_kernels.json.
+
+pub mod gemm;
+pub mod pool;
+pub mod spmm;
+
+pub use gemm::{gemm_bias, gemm_bias_into, gemm_bias_naive};
+pub use pool::{FogJob, FogWorkerPool};
+pub use spmm::{csr_spmm, csr_spmm_into, csr_spmm_naive};
+
+/// Reusable intermediate buffers for the layer kernels — one per
+/// executor (backend or pool worker), so the per-layer/per-batch hot
+/// path performs no `Vec` allocations for aggregates, combine inputs or
+/// attention projections (buffers grow once to the high-water mark and
+/// are reused forever).
+#[derive(Debug, Default)]
+pub struct KernelScratch {
+    /// SpMM aggregate, [n_local, f].
+    pub agg: Vec<f32>,
+    /// Combine-stage GEMM input, [batch * n_local, f or 2f].
+    pub comb: Vec<f32>,
+    /// Dense projection (GAT z), [batch * n, fo].
+    pub z: Vec<f32>,
+    /// Per-row attention scalars (GAT), [batch * n] each.
+    pub att_src: Vec<f32>,
+    pub att_dst: Vec<f32>,
+}
+
+/// Resize a scratch buffer to `len` elements without shrinking its
+/// capacity. Contents are UNSPECIFIED (stale data from earlier layers
+/// survives): every kernel that takes a scratch buffer fully
+/// overwrites it, so zero-filling here would be a redundant
+/// O(len) memset on the per-layer hot path (only newly grown tail
+/// elements are initialized, and growth stops at the high-water mark).
+pub fn resized(buf: &mut Vec<f32>, len: usize) -> &mut [f32] {
+    if buf.len() < len {
+        buf.resize(len, 0.0);
+    } else {
+        buf.truncate(len);
+    }
+    buf.as_mut_slice()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resized_reuses_capacity_and_keeps_stale_prefix() {
+        let mut buf = vec![1.0f32; 128];
+        let cap = buf.capacity();
+        let s = resized(&mut buf, 64);
+        assert_eq!(s.len(), 64);
+        assert_eq!(buf.capacity(), cap);
+        // growth initializes only the new tail; the prefix is stale by
+        // contract (every kernel consumer fully overwrites)
+        let s2 = resized(&mut buf, 200);
+        assert_eq!(s2.len(), 200);
+        assert!(s2[128..].iter().all(|&x| x == 0.0));
+    }
+}

@@ -1,0 +1,327 @@
+//! Persistent per-fog worker pool: one long-lived thread per fog with
+//! channel handoff, replacing the per-micro-batch `std::thread::scope`
+//! spawns the measured serving path used before. Spawning costs tens of
+//! microseconds per thread per batch — comparable to a small bucket's
+//! entire kernel time — so with the pool, measured per-bucket timings
+//! reflect kernel cost, not thread start-up.
+//!
+//! Each worker owns its fog's partition structures (`Arc`-shared with
+//! the plan) and a private `KernelScratch`, so the steady-state batch
+//! path allocates nothing but the output activations. The BSP barrier
+//! is the result collection in `dispatch`: one reply per dispatched
+//! job.
+
+use std::cell::Cell;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::graph::LocalGraph;
+use crate::runtime::csr_backend::{run_astgcn_csr, run_layer_csr_with,
+                                  CsrPartition};
+use crate::runtime::weights::WeightBundle;
+
+use super::KernelScratch;
+
+/// One unit of per-fog work. `state` moves in and the output moves back
+/// through the result channel — no shared mutable state.
+pub enum FogJob {
+    /// One gcn|gat|sage message-passing layer over a block-diagonal
+    /// batch (`state` is [batch * n, dim] block-major).
+    Layer {
+        layer: usize,
+        dim: usize,
+        last: bool,
+        batch: usize,
+        state: Vec<f32>,
+        weights: Arc<WeightBundle>,
+    },
+    /// The ASTGCN block, executed once per batch block (`state` is
+    /// [batch * n, ft] block-major; output stacks [n, t_out] blocks).
+    Astgcn {
+        ft: usize,
+        batch: usize,
+        state: Vec<f32>,
+        weights: Arc<WeightBundle>,
+    },
+}
+
+impl FogJob {
+    /// Execute on the calling thread. Pool workers and the serial
+    /// oracle (`BatchedBspPlan::execute_serial`) share this code path,
+    /// so pooled and unpooled runs are bit-identical. Returns the
+    /// output activations and the measured kernel seconds.
+    pub fn run(self, model: &str, csr: Option<&CsrPartition>,
+               sub: &LocalGraph, scratch: &mut KernelScratch)
+               -> (Vec<f32>, f64) {
+        match self {
+            FogJob::Layer { layer, dim, last, batch, state, weights } => {
+                let csr = csr.expect("CSR built at plan construction");
+                let t = Instant::now();
+                let out = run_layer_csr_with(model, layer, &weights,
+                                             &state, dim, csr, last,
+                                             batch, scratch)
+                    .expect("model validated at plan construction");
+                (out, t.elapsed().as_secs_f64())
+            }
+            FogJob::Astgcn { ft, batch, state, weights } => {
+                let n = sub.n_total();
+                let t = Instant::now();
+                let mut out = Vec::new();
+                for bk in 0..batch {
+                    let block = run_astgcn_csr(
+                        &weights,
+                        &state[bk * n * ft..(bk + 1) * n * ft],
+                        n,
+                        ft,
+                        sub,
+                    );
+                    if bk == 0 {
+                        out.reserve_exact(block.len() * batch);
+                    }
+                    out.extend_from_slice(&block);
+                }
+                (out, t.elapsed().as_secs_f64())
+            }
+        }
+    }
+}
+
+struct Reply {
+    fog: usize,
+    out: Vec<f32>,
+    seconds: f64,
+    /// The worker's job panicked; `dispatch` re-raises on the caller's
+    /// thread (the pool equivalent of `thread::scope`'s join-propagate).
+    panicked: bool,
+}
+
+/// The persistent pool: `senders[j]` feeds fog j's worker; `results`
+/// collects replies from all workers.
+pub struct FogWorkerPool {
+    senders: Vec<Sender<FogJob>>,
+    results: Receiver<Reply>,
+    handles: Vec<JoinHandle<()>>,
+    /// Set when a worker panic was re-raised: the results channel may
+    /// still hold that round's other replies, so further dispatches
+    /// would mis-attribute them. A poisoned pool refuses to dispatch.
+    poisoned: Cell<bool>,
+}
+
+impl FogWorkerPool {
+    /// Spawn one worker per fog. `fogs[j]` carries the structures the
+    /// worker computes over (the CSR is `None` for astgcn, which works
+    /// on the local graph directly).
+    pub fn new(
+        model: &str,
+        fogs: Vec<(Arc<LocalGraph>, Option<Arc<CsrPartition>>)>,
+    ) -> FogWorkerPool {
+        let (res_tx, res_rx) = channel::<Reply>();
+        let mut senders = Vec::with_capacity(fogs.len());
+        let mut handles = Vec::with_capacity(fogs.len());
+        for (j, (sub, csr)) in fogs.into_iter().enumerate() {
+            let (tx, rx) = channel::<FogJob>();
+            senders.push(tx);
+            let results = res_tx.clone();
+            let model = model.to_string();
+            let handle = std::thread::Builder::new()
+                .name(format!("fog-worker-{j}"))
+                .spawn(move || {
+                    worker_loop(j, &model, sub, csr, rx, results)
+                })
+                .expect("spawn fog worker");
+            handles.push(handle);
+        }
+        FogWorkerPool {
+            senders,
+            results: res_rx,
+            handles,
+            poisoned: Cell::new(false),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.senders.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.senders.is_empty()
+    }
+
+    /// Hand one job per fog to the workers (`None` = no work, e.g. a
+    /// fog owning no vertices) and wait at the BSP barrier for every
+    /// reply. Returns per-fog outputs and measured kernel seconds
+    /// (empty/0.0 for `None` slots).
+    pub fn dispatch(&self, jobs: Vec<Option<FogJob>>)
+                    -> (Vec<Vec<f32>>, Vec<f64>) {
+        assert_eq!(jobs.len(), self.senders.len());
+        assert!(
+            !self.poisoned.get(),
+            "fog worker pool poisoned by an earlier worker panic; \
+             rebuild the plan"
+        );
+        let mut outs: Vec<Vec<f32>> =
+            (0..jobs.len()).map(|_| Vec::new()).collect();
+        let mut secs = vec![0f64; jobs.len()];
+        let mut pending = 0usize;
+        for (j, job) in jobs.into_iter().enumerate() {
+            if let Some(job) = job {
+                self.senders[j]
+                    .send(job)
+                    .expect("fog worker alive while pool exists");
+                pending += 1;
+            }
+        }
+        for _ in 0..pending {
+            // recv fails only if every worker died; individual worker
+            // panics arrive as `panicked` replies and re-raise here
+            let r = self.results.recv().expect("fog worker reply");
+            if r.panicked {
+                self.poisoned.set(true);
+                panic!("fog worker {} panicked during kernel \
+                        execution",
+                       r.fog);
+            }
+            secs[r.fog] = r.seconds;
+            outs[r.fog] = r.out;
+        }
+        (outs, secs)
+    }
+}
+
+impl Drop for FogWorkerPool {
+    fn drop(&mut self) {
+        // closing the job channels ends the worker loops
+        self.senders.clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(
+    fog: usize,
+    model: &str,
+    sub: Arc<LocalGraph>,
+    csr: Option<Arc<CsrPartition>>,
+    jobs: Receiver<FogJob>,
+    results: Sender<Reply>,
+) {
+    let mut scratch = KernelScratch::default();
+    while let Ok(job) = jobs.recv() {
+        // a panicking job must not leave dispatch() counting a reply
+        // that never comes (the other workers keep the channel open):
+        // catch it, report it, and retire this worker
+        let ran = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| {
+                job.run(model, csr.as_deref(), &sub, &mut scratch)
+            }),
+        );
+        match ran {
+            Ok((out, seconds)) => {
+                let reply =
+                    Reply { fog, out, seconds, panicked: false };
+                if results.send(reply).is_err() {
+                    break; // pool dropped mid-flight
+                }
+            }
+            Err(_) => {
+                let _ = results.send(Reply {
+                    fog,
+                    out: Vec::new(),
+                    seconds: 0.0,
+                    panicked: true,
+                });
+                break;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{generate, subgraph};
+    use crate::runtime::csr_backend::run_layer_csr;
+    use crate::runtime::pad;
+    use crate::runtime::{Engine, EngineKind};
+
+    #[test]
+    fn pooled_layer_matches_inline_execution() {
+        let (mut g, _) = generate::sbm(120, 500, 3, 0.85, 19);
+        let f_in = 6;
+        let mut rng = crate::util::rng::Rng::new(20);
+        g.features =
+            (0..120 * f_in).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        g.feature_dim = f_in;
+        let assignment: Vec<u32> =
+            (0..120).map(|v| (v % 2) as u32).collect();
+        let (subs, _) = subgraph::extract(&g, &assignment, 2);
+        let dir = std::env::temp_dir().join("pool_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut eng = Engine::new(EngineKind::Csr, &dir).unwrap();
+        let wb = Arc::new(eng.weights("gcn", "tiny", f_in, 3).clone());
+        let csrs: Vec<Arc<CsrPartition>> = subs
+            .iter()
+            .map(|s| {
+                Arc::new(CsrPartition::from_edges(
+                    &pad::prep_edges("gcn", s).unwrap(),
+                ))
+            })
+            .collect();
+        let states: Vec<Vec<f32>> = subs
+            .iter()
+            .map(|s| {
+                (0..s.n_total() * f_in)
+                    .map(|_| rng.normal_f32(0.0, 1.0))
+                    .collect()
+            })
+            .collect();
+        let fogs: Vec<(Arc<LocalGraph>, Option<Arc<CsrPartition>>)> =
+            subs.iter()
+                .cloned()
+                .map(Arc::new)
+                .zip(csrs.iter().cloned().map(Some))
+                .collect();
+        let pool = FogWorkerPool::new("gcn", fogs);
+        assert_eq!(pool.len(), 2);
+        let jobs: Vec<Option<FogJob>> = states
+            .iter()
+            .map(|st| {
+                Some(FogJob::Layer {
+                    layer: 0,
+                    dim: f_in,
+                    last: false,
+                    batch: 1,
+                    state: st.clone(),
+                    weights: wb.clone(),
+                })
+            })
+            .collect();
+        let (outs, secs) = pool.dispatch(jobs);
+        for j in 0..2 {
+            let inline = run_layer_csr("gcn", 0, &wb, &states[j], f_in,
+                                       &csrs[j], false, 1)
+                .unwrap();
+            assert_eq!(outs[j], inline, "fog {j} pooled != inline");
+            assert!(secs[j] >= 0.0);
+        }
+    }
+
+    #[test]
+    fn none_jobs_are_skipped() {
+        let g = crate::graph::Graph::from_undirected_edges(2, &[(0, 1)]);
+        let sub = subgraph::extract_one(&g, &[0, 1]);
+        let csr = Arc::new(CsrPartition::from_edges(
+            &pad::prep_edges("gcn", &sub).unwrap(),
+        ));
+        let pool = FogWorkerPool::new(
+            "gcn",
+            vec![(Arc::new(sub), Some(csr))],
+        );
+        let (outs, secs) = pool.dispatch(vec![None]);
+        assert!(outs[0].is_empty());
+        assert_eq!(secs[0], 0.0);
+    }
+}

@@ -1,0 +1,203 @@
+//! Edge-unrolled CSR SpMM — the aggregation kernel (Wu et al.'s
+//! characterization: aggregation is memory-bandwidth-bound, so the win
+//! is locality and fewer out-row round-trips, not FLOPs).
+//!
+//! Structure: each owned row streams its gathered source rows at full
+//! feature width (sequential reads the hardware prefetcher can run
+//! ahead of) and unrolls `EU` edges per pass, so the destination row
+//! does one load/store round-trip per `EU` gathered rows instead of
+//! per edge — `EU×` less accumulator traffic and an `EU`-deep
+//! independent-sum tree that hides gather latency. Unit-weight edge
+//! groups (every gcn/gat/sage edge after `prep_edges`) skip the
+//! multiply entirely.
+//!
+//! Design note: the textbook row-blocked + feature-tiled SpMM (sweep
+//! the block's edges once per FT-wide feature tile, accumulate in an
+//! FT register tile) was measured here too and LOSES badly — tiling
+//! turns each gather into a single isolated cache line, which defeats
+//! the prefetcher that full-width sequential row reads feed, and
+//! re-reads the CSR metadata f/FT times. The shipped edge-unrolled
+//! form is the variant that actually wins at serving widths;
+//! `repro bench-kernels` records the measured margin in
+//! BENCH_kernels.json.
+//!
+//! Zero-weight (masked) edges never reach these kernels:
+//! `CsrPartition::from_edges` drops them at construction, so the hot
+//! loop carries no per-edge mask branch. `csr_spmm_naive` preserves
+//! the scalar edge-at-a-time loop as the baseline for parity tests and
+//! `repro bench-kernels`.
+
+use crate::runtime::csr_backend::CsrPartition;
+
+/// Edges unrolled per destination-row pass.
+pub const EU: usize = 4;
+
+/// Scalar edge-at-a-time SpMM — the naive baseline (formerly
+/// `csr_backend::csr_aggregate`).
+pub fn csr_spmm_naive(csr: &CsrPartition, h: &[f32], f: usize)
+                      -> Vec<f32> {
+    let l = csr.n_local;
+    let mut agg = vec![0f32; l * f];
+    for v in 0..l {
+        let row = &mut agg[v * f..(v + 1) * f];
+        for e in csr.row_ptr[v]..csr.row_ptr[v + 1] {
+            let w = csr.val[e];
+            if w == 0.0 {
+                continue;
+            }
+            let u = csr.col[e] as usize;
+            let hu = &h[u * f..(u + 1) * f];
+            if w == 1.0 {
+                for (a, &x) in row.iter_mut().zip(hu) {
+                    *a += x;
+                }
+            } else {
+                for (a, &x) in row.iter_mut().zip(hu) {
+                    *a += w * x;
+                }
+            }
+        }
+    }
+    agg
+}
+
+/// Edge-unrolled SpMM into a fresh vector:
+/// `agg[v] = Σ_{(u,v)} w · h[u]` over owned rows v.
+pub fn csr_spmm(csr: &CsrPartition, h: &[f32], f: usize) -> Vec<f32> {
+    let mut agg = vec![0f32; csr.n_local * f];
+    csr_spmm_into(csr, h, f, &mut agg);
+    agg
+}
+
+/// Edge-unrolled SpMM into a caller-owned buffer (`out` is fully
+/// overwritten) — the scratch-reuse entry point for the per-layer hot
+/// path.
+pub fn csr_spmm_into(csr: &CsrPartition, h: &[f32], f: usize,
+                     out: &mut [f32]) {
+    let l = csr.n_local;
+    assert_eq!(out.len(), l * f);
+    debug_assert!(h.len() >= csr.n * f);
+    for v in 0..l {
+        let row = &mut out[v * f..(v + 1) * f];
+        row.fill(0.0);
+        let hi = csr.row_ptr[v + 1];
+        let mut e = csr.row_ptr[v];
+        while e + EU <= hi {
+            let u0 = csr.col[e] as usize;
+            let u1 = csr.col[e + 1] as usize;
+            let u2 = csr.col[e + 2] as usize;
+            let u3 = csr.col[e + 3] as usize;
+            let (w0, w1, w2, w3) = (csr.val[e], csr.val[e + 1],
+                                    csr.val[e + 2], csr.val[e + 3]);
+            let h0 = &h[u0 * f..(u0 + 1) * f];
+            let h1 = &h[u1 * f..(u1 + 1) * f];
+            let h2 = &h[u2 * f..(u2 + 1) * f];
+            let h3 = &h[u3 * f..(u3 + 1) * f];
+            let it = row.iter_mut().zip(h0).zip(h1).zip(h2).zip(h3);
+            if w0 == 1.0 && w1 == 1.0 && w2 == 1.0 && w3 == 1.0 {
+                for ((((a, &x0), &x1), &x2), &x3) in it {
+                    *a += (x0 + x1) + (x2 + x3);
+                }
+            } else {
+                for ((((a, &x0), &x1), &x2), &x3) in it {
+                    *a += w0 * x0 + w1 * x1 + w2 * x2 + w3 * x3;
+                }
+            }
+            e += EU;
+        }
+        while e < hi {
+            let w = csr.val[e];
+            let u = csr.col[e] as usize;
+            let hu = &h[u * f..(u + 1) * f];
+            if w == 1.0 {
+                for (a, &x) in row.iter_mut().zip(hu) {
+                    *a += x;
+                }
+            } else {
+                for (a, &x) in row.iter_mut().zip(hu) {
+                    *a += w * x;
+                }
+            }
+            e += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::pad::EdgeArrays;
+    use crate::util::rng::Rng;
+
+    /// Random digraph with some isolated (empty-row) vertices and a mix
+    /// of unit / fractional edge weights.
+    fn random_csr(n: usize, ne: usize, seed: u64) -> CsrPartition {
+        let mut rng = Rng::new(seed);
+        let mut src = Vec::with_capacity(ne);
+        let mut dst = Vec::with_capacity(ne);
+        let mut ew = Vec::with_capacity(ne);
+        for _ in 0..ne {
+            src.push(rng.usize_below(n) as u32);
+            // leave the last quarter of vertices edge-free
+            dst.push(rng.usize_below((3 * n / 4).max(1)) as u32);
+            ew.push(if rng.bool(0.5) {
+                1.0
+            } else {
+                rng.normal_f32(0.5, 0.2)
+            });
+        }
+        CsrPartition::from_edges(&EdgeArrays {
+            src,
+            dst,
+            ew,
+            inv_deg: vec![1.0; n],
+            n,
+            n_local: n,
+        })
+    }
+
+    #[test]
+    fn unrolled_matches_naive_across_widths() {
+        let csr = random_csr(150, 700, 21);
+        let mut rng = Rng::new(22);
+        for f in [1, 3, 15, 16, 21, 64, 130] {
+            let h: Vec<f32> = (0..csr.n * f)
+                .map(|_| rng.normal_f32(0.0, 0.5))
+                .collect();
+            let a = csr_spmm(&csr, &h, f);
+            let b = csr_spmm_naive(&csr, &h, f);
+            for (x, y) in a.iter().zip(&b) {
+                let tol = 1e-5 * (1.0 + x.abs());
+                assert!((x - y).abs() <= tol, "f={f}: {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_rows_stay_zero() {
+        let csr = random_csr(80, 200, 23);
+        let f = 18;
+        let h = vec![1.0f32; csr.n * f];
+        let agg = csr_spmm(&csr, &h, f);
+        for v in 0..csr.n_local {
+            if csr.row_ptr[v] == csr.row_ptr[v + 1] {
+                assert!(agg[v * f..(v + 1) * f]
+                    .iter()
+                    .all(|&x| x == 0.0));
+            }
+        }
+    }
+
+    #[test]
+    fn into_variant_overwrites_stale_contents() {
+        let csr = random_csr(40, 160, 24);
+        let f = 16;
+        let mut rng = Rng::new(25);
+        let h: Vec<f32> = (0..csr.n * f)
+            .map(|_| rng.normal_f32(0.0, 0.5))
+            .collect();
+        let mut out = vec![777f32; csr.n_local * f];
+        csr_spmm_into(&csr, &h, f, &mut out);
+        assert_eq!(out, csr_spmm(&csr, &h, f));
+    }
+}

@@ -10,6 +10,11 @@
 //! * the sparse CSR backend with block-diagonal batched execution
 //!   (`csr_backend`), the engine behind `--exec measured` serving.
 //!
+//! All CPU backends route their numerics through the dedicated kernel
+//! layer (`kernels`): register-blocked K-unrolled GEMM, edge-unrolled
+//! CSR SpMM, and the persistent per-fog worker pool the measured
+//! serving path executes on.
+//!
 //! Also includes the manifest/bucket index, the `.fgw` weight loader and
 //! model-specific padding (twin of python/compile/prep.py).
 
@@ -17,6 +22,7 @@ pub mod artifacts;
 pub mod backend;
 pub mod csr_backend;
 pub mod engine;
+pub mod kernels;
 pub mod pad;
 pub mod reference;
 pub mod weights;
@@ -25,5 +31,6 @@ pub use artifacts::{ArtifactMeta, Manifest};
 pub use backend::{ExecBackend, LayerCtx};
 pub use csr_backend::{CsrBackend, CsrPartition};
 pub use engine::{Engine, EngineError, EngineKind, LayerOut};
+pub use kernels::{FogWorkerPool, KernelScratch};
 pub use pad::EdgeArrays;
 pub use weights::WeightBundle;

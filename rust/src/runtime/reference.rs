@@ -25,27 +25,12 @@ pub fn model_layers(model: &str) -> usize {
 }
 
 /// Row-major matmul with bias: out[n, fo] = x[n, fi] @ w[fi, fo] + b.
-/// Blocked over k for cache friendliness (hot path of the ref engine).
+/// Delegates to the tiled kernel layer (`kernels::gemm`); the textbook
+/// loop survives as `kernels::gemm::gemm_bias_naive`, the baseline the
+/// parity suite and `repro bench-kernels` measure against.
 pub fn matmul_bias(x: &[f32], n: usize, fi: usize, w: &[f32], fo: usize,
                    b: &[f32]) -> Vec<f32> {
-    debug_assert_eq!(x.len(), n * fi);
-    debug_assert_eq!(w.len(), fi * fo);
-    let mut out = vec![0f32; n * fo];
-    for r in 0..n {
-        let xr = &x[r * fi..(r + 1) * fi];
-        let or = &mut out[r * fo..(r + 1) * fo];
-        or.copy_from_slice(&b[..fo]);
-        for (k, &xv) in xr.iter().enumerate() {
-            if xv == 0.0 {
-                continue; // sparse one-hot features: skip zero rows
-            }
-            let wr = &w[k * fo..(k + 1) * fo];
-            for (o, &wv) in or.iter_mut().zip(wr.iter()) {
-                *o += xv * wv;
-            }
-        }
-    }
-    out
+    super::kernels::gemm_bias(x, n, fi, w, fo, b)
 }
 
 pub(crate) fn relu(x: &mut [f32]) {

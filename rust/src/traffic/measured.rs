@@ -1,13 +1,16 @@
 //! Measured per-batch execution for the online serving loop
 //! (`--exec measured`): each released micro-batch drives the real CSR
 //! batched BSP kernels (`exec::BatchedBspPlan`) at its padded bucket
-//! size, with per-fog layer compute on `std::thread` workers. Measured
-//! per-fog timings feed the online profiler (η-scaled ω′ models,
-//! paper §III-B runtime phase), so mid-run diffusion / IEP replans
-//! reason over OBSERVED costs instead of the closed-form ω — the
-//! calibration loop the edge-serving cost models argue for.
+//! size, with per-fog layer compute on the persistent worker pool
+//! (`runtime::kernels::pool`). Measured per-fog timings feed the
+//! online profiler (η-scaled ω′ models, paper §III-B runtime phase),
+//! so mid-run diffusion / IEP replans reason over OBSERVED costs
+//! instead of the closed-form ω — the calibration loop the
+//! edge-serving cost models argue for. Covers every model, astgcn
+//! included.
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use crate::exec::BatchedBspPlan;
 use crate::graph::Graph;
@@ -36,7 +39,7 @@ impl BucketStat {
 /// partition plan, the weight bundle and the per-fog online profilers.
 pub struct MeasuredExec {
     plan: BatchedBspPlan,
-    wb: WeightBundle,
+    wb: Arc<WeightBundle>,
     features: Vec<f32>,
     f_in: usize,
     profilers: Vec<OnlineProfiler>,
@@ -61,7 +64,8 @@ impl MeasuredExec {
         engine: &mut Engine,
     ) -> Result<MeasuredExec, EngineError> {
         let plan = BatchedBspPlan::new(g, assignment, n_fogs, model)?;
-        let wb = engine.weights(model, dataset, dims, classes).clone();
+        let wb =
+            Arc::new(engine.weights(model, dataset, dims, classes).clone());
         Ok(MeasuredExec {
             plan,
             wb,
@@ -177,15 +181,28 @@ mod tests {
     }
 
     #[test]
-    fn measured_exec_rejects_astgcn() {
-        let (g, _) = generate::sbm(50, 200, 2, 0.8, 5);
+    fn measured_exec_serves_astgcn() {
+        let (mut g, _) = generate::sbm(50, 200, 2, 0.8, 5);
+        let ft = 24;
+        let mut rng = crate::util::rng::Rng::new(29);
+        g.features =
+            (0..50 * ft).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        g.feature_dim = ft;
         let dir = std::env::temp_dir().join("measured_exec_test");
         std::fs::create_dir_all(&dir).unwrap();
         let mut eng = Engine::new(EngineKind::Csr, &dir).unwrap();
-        let assignment = vec![0u32; 50];
-        let omegas = vec![PerfModel::uncalibrated(); 1];
-        let r = MeasuredExec::new(&g, &assignment, 1, "astgcn", "tiny",
-                                  &[], 4, 0, &omegas, &mut eng);
-        assert!(r.is_err());
+        let assignment: Vec<u32> =
+            (0..50).map(|v| (v % 2) as u32).collect();
+        let omegas = vec![PerfModel::uncalibrated(); 2];
+        let mut me = MeasuredExec::new(
+            &g, &assignment, 2, "astgcn", "tinypems", &g.features, ft,
+            0, &omegas, &mut eng,
+        )
+        .unwrap();
+        let lhs = me.run_batch(2);
+        assert_eq!(lhs.len(), 1, "astgcn has 1 layer");
+        assert_eq!(lhs[0].len(), 2, "one timing per fog");
+        assert!(lhs.iter().flatten().all(|&s| s >= 0.0));
+        assert_eq!(me.bucket_summary().len(), 1);
     }
 }

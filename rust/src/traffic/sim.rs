@@ -15,10 +15,11 @@
 //!   loadtest runs are bit-reproducible.
 //! * **measured** — every released micro-batch executes the real sparse
 //!   CSR batched BSP kernels at its padded bucket size
-//!   (`traffic::measured`), per-fog compute on `std::thread` workers;
-//!   measured timings feed the online profiler so diffusion / IEP
-//!   replans use η-scaled OBSERVED costs (ω′) instead of ω. Wall-clock
-//!   measurements are inherently non-deterministic.
+//!   (`traffic::measured`), per-fog compute on the persistent worker
+//!   pool (`runtime::kernels::pool`); measured timings feed the online
+//!   profiler so diffusion / IEP replans use η-scaled OBSERVED costs
+//!   (ω′) instead of ω. Wall-clock measurements are inherently
+//!   non-deterministic.
 //!
 //! Stations and timing model:
 //!
@@ -756,7 +757,7 @@ mod tests {
     }
 
     #[test]
-    fn measured_mode_rejects_astgcn() {
+    fn measured_mode_serves_astgcn() {
         let (g, spec) = tiny();
         let (cluster, _, omegas) = fog_setup(&g);
         let opts = ServeOpts::new("astgcn", Placement::Iep,
@@ -769,8 +770,12 @@ mod tests {
             ..Default::default()
         };
         let r = run_loadtest(&g, &spec, &cluster, &opts, &traffic,
-                             &omegas, &mut eng);
-        assert!(r.is_err(), "astgcn has no measured batched path");
+                             &omegas, &mut eng)
+            .unwrap();
+        assert_eq!(r.exec_mode, ExecMode::Measured);
+        assert_eq!(r.engine, "csr-batched");
+        assert!(r.slo.completed > 0);
+        assert!(!r.bucket_host_ms.is_empty());
     }
 
     #[test]
