@@ -9,16 +9,22 @@
 //! executes the sparse CSR kernels on a persistent per-fog worker pool
 //! (`runtime::kernels::pool`) over a block-diagonal micro-batch, so
 //! per-fog times are observed under genuine concurrency and reflect
-//! kernel cost rather than thread start-up. The serving pipeline scales
-//! those times by the node's capability multiplier and takes the
-//! per-layer max (the BSP barrier).
+//! kernel cost rather than thread start-up. With
+//! `--kernel-threads > 1` each fog worker leads a shard helper group
+//! sized from its partition volume, so a single large partition runs
+//! row-parallel inside its fog (and the measured timings — hence the
+//! online profiler's η-scaled replans — see the sharded costs). The
+//! serving pipeline scales those times by the node's capability
+//! multiplier and takes the per-layer max (the BSP barrier).
 
 use std::borrow::Borrow;
 use std::sync::Arc;
 
 use crate::graph::{subgraph, ExchangePlan, Graph, LocalGraph};
-use crate::runtime::csr_backend::CsrPartition;
-use crate::runtime::kernels::{FogJob, FogWorkerPool, KernelScratch};
+use crate::runtime::csr_backend::{in_neighbor_lists, CsrPartition,
+                                  InNbrLists};
+use crate::runtime::kernels::{FogJob, FogStructures, FogWorkerPool,
+                              KernelScratch, ShardExec};
 use crate::runtime::{engine::EngineError, EdgeArrays, Engine,
                      WeightBundle};
 
@@ -27,8 +33,14 @@ pub struct BspResult {
     /// Assembled [V_global, out_dim] outputs (global vertex order).
     pub outputs: Vec<f32>,
     pub out_dim: usize,
-    /// host_seconds[layer][fog].
+    /// host_seconds[layer][fog] — pure kernel wall-clock (intra-fog
+    /// shard parallelism included, job-channel queueing excluded).
     pub layer_host_seconds: Vec<Vec<f64>>,
+    /// queue_wait_s[layer][fog] — job-channel send-to-dequeue latency,
+    /// reported apart from kernel seconds so profiler observations
+    /// stay queueing-free (all zero on the engine-driven and serial
+    /// paths, which have no job channel).
+    pub layer_queue_wait_seconds: Vec<Vec<f64>>,
     /// Activation bytes exchanged at each layer boundary (total).
     pub sync_bytes: Vec<usize>,
     /// Max per-fog OUTGOING bytes at each boundary — the bottleneck of
@@ -226,10 +238,12 @@ pub fn run(
                 );
         }
     }
+    let layers = layer_host.len();
     Ok(BspResult {
         outputs,
         out_dim,
         layer_host_seconds: layer_host,
+        layer_queue_wait_seconds: vec![vec![0.0; n_fogs]; layers],
         sync_bytes,
         sync_max_out,
         fog_vertices: subs.iter().map(|s| s.n_local).collect(),
@@ -250,20 +264,48 @@ pub struct BatchedBspPlan {
     /// One CSR per fog for the message-passing models; empty for
     /// astgcn (its kernel works on the local graph directly).
     pub csrs: Vec<Arc<CsrPartition>>,
+    /// One in-neighbor structure per fog for astgcn; empty otherwise.
+    /// Built once here so the per-batch hot path (and the measured
+    /// timings it produces) never pays the O(V + E) counting sort.
+    nbrs: Vec<Arc<InNbrLists>>,
     pool: FogWorkerPool,
     halo_index: HaloIndex,
     model: String,
     n_fogs: usize,
     nv: usize,
+    kernel_threads: usize,
 }
 
 impl BatchedBspPlan {
+    /// Single-threaded fogs (no intra-fog sharding) — the
+    /// pre-`--kernel-threads` behavior.
     pub fn new(g: &Graph, assignment: &[u32], n_fogs: usize,
                model: &str) -> Result<BatchedBspPlan, EngineError> {
+        BatchedBspPlan::with_threads(g, assignment, n_fogs, model, 1)
+    }
+
+    /// `kernel_threads` is the worker-group width the largest
+    /// partition gets; smaller fogs get proportionally fewer workers
+    /// (`kernels::pool::group_widths`).
+    pub fn with_threads(g: &Graph, assignment: &[u32], n_fogs: usize,
+                        model: &str, kernel_threads: usize)
+                        -> Result<BatchedBspPlan, EngineError> {
         if !matches!(model, "gcn" | "sage" | "gat" | "astgcn") {
             return Err(EngineError::Unsupported(format!(
                 "measured batched BSP supports gcn|gat|sage|astgcn, \
                  not {model}"
+            )));
+        }
+        // bound on the library path too, not just CLI parsing: an
+        // absurd width would otherwise panic mid-run spawning
+        // n_fogs × (threads - 1) helper threads
+        if kernel_threads == 0
+            || kernel_threads > crate::util::cli::MAX_KERNEL_THREADS
+        {
+            return Err(EngineError::Unsupported(format!(
+                "kernel_threads must be in 1..={} (got \
+                 {kernel_threads})",
+                crate::util::cli::MAX_KERNEL_THREADS
             )));
         }
         let (subs, plan) = subgraph::extract(g, assignment, n_fogs);
@@ -279,27 +321,50 @@ impl BatchedBspPlan {
                 })
                 .collect::<Result<Vec<_>, _>>()?
         };
-        let fogs: Vec<(Arc<LocalGraph>, Option<Arc<CsrPartition>>)> =
+        let nbrs: Vec<Arc<InNbrLists>> = if model == "astgcn" {
             subs.iter()
-                .enumerate()
-                .map(|(j, s)| (s.clone(), csrs.get(j).cloned()))
-                .collect();
-        let pool = FogWorkerPool::new(model, fogs);
+                .map(|s| Arc::new(in_neighbor_lists(s, s.n_total())))
+                .collect()
+        } else {
+            Vec::new()
+        };
+        let fogs: Vec<FogStructures> = subs
+            .iter()
+            .enumerate()
+            .map(|(j, s)| {
+                (s.clone(), csrs.get(j).cloned(), nbrs.get(j).cloned())
+            })
+            .collect();
+        let pool =
+            FogWorkerPool::with_threads(model, fogs, kernel_threads);
         let halo_index = build_halo_index(&subs);
         Ok(BatchedBspPlan {
             subs,
             plan,
             csrs,
+            nbrs,
             pool,
             halo_index,
             model: model.to_string(),
             n_fogs,
             nv: g.num_vertices(),
+            kernel_threads,
         })
     }
 
     pub fn n_fogs(&self) -> usize {
         self.n_fogs
+    }
+
+    /// The `--kernel-threads` value this plan was built with (max
+    /// per-fog worker-group width).
+    pub fn kernel_threads(&self) -> usize {
+        self.kernel_threads
+    }
+
+    /// Per-fog worker-group widths (leader + shard helpers).
+    pub fn widths(&self) -> &[usize] {
+        self.pool.widths()
     }
 
     /// Per-fog cardinality ⟨|V|, |N_V|⟩ (for the online profiler).
@@ -374,7 +439,11 @@ impl BatchedBspPlan {
             .collect()
     }
 
-    /// Run one layer's jobs inline (the serial oracle).
+    /// Run one layer's jobs inline (the serial oracle). Shard widths
+    /// mirror the pool's per-fog groups (`ShardExec::Inline`), so the
+    /// split points — and therefore the outputs — are identical to the
+    /// pooled run by construction (and row-decomposition invariance
+    /// makes them split-independent besides).
     fn run_jobs_serial(&self, jobs: Vec<Option<FogJob>>)
                        -> (Vec<Vec<f32>>, Vec<f64>) {
         let mut scratch = KernelScratch::default();
@@ -387,9 +456,13 @@ impl BatchedBspPlan {
                     secs.push(0.0);
                 }
                 Some(job) => {
-                    let csr = self.csrs.get(j).map(|c| c.as_ref());
-                    let (out, s) = job.run(&self.model, csr,
-                                           &self.subs[j], &mut scratch);
+                    let csr = self.csrs.get(j);
+                    let nbr = self.nbrs.get(j);
+                    let exec =
+                        ShardExec::Inline(self.pool.widths()[j]);
+                    let (out, s) =
+                        job.run(&self.model, csr, &self.subs[j], nbr,
+                                &mut scratch, &exec);
                     outs.push(out);
                     secs.push(s);
                 }
@@ -427,6 +500,7 @@ impl BatchedBspPlan {
             .collect();
 
         let mut layer_host = Vec::with_capacity(num_layers);
+        let mut layer_wait = Vec::with_capacity(num_layers);
         let mut sync_bytes = Vec::with_capacity(num_layers);
         let mut sync_max_out = Vec::with_capacity(num_layers);
         let out_counts: Vec<usize> = (0..n_fogs)
@@ -449,10 +523,12 @@ impl BatchedBspPlan {
             let last = layer + 1 == num_layers;
             let jobs = self.layer_jobs(layer, dim, last, batch, f_in,
                                        &mut states, wb);
-            let (outs, secs) = if pooled {
+            let (outs, secs, waits) = if pooled {
                 self.pool.dispatch(jobs)
             } else {
-                self.run_jobs_serial(jobs)
+                let (outs, secs) = self.run_jobs_serial(jobs);
+                let waits = vec![0.0; secs.len()];
+                (outs, secs, waits)
             };
             let mut next_states: Vec<Vec<f32>> =
                 Vec::with_capacity(n_fogs);
@@ -484,6 +560,7 @@ impl BatchedBspPlan {
                 }
             }
             layer_host.push(secs);
+            layer_wait.push(waits);
             states = next_states;
             dim = out_dim;
         }
@@ -515,6 +592,7 @@ impl BatchedBspPlan {
             outputs,
             out_dim,
             layer_host_seconds: layer_host,
+            layer_queue_wait_seconds: layer_wait,
             sync_bytes,
             sync_max_out,
             fog_vertices: self.subs.iter().map(|s| s.n_local).collect(),
@@ -668,5 +746,59 @@ mod tests {
         let assignment = vec![0u32; 40];
         let r = BatchedBspPlan::new(&g, &assignment, 1, "mlp");
         assert!(r.is_err());
+        let r = BatchedBspPlan::with_threads(&g, &assignment, 1,
+                                             "gcn", 0);
+        assert!(r.is_err(), "0 kernel threads is rejected");
+    }
+
+    /// Intra-fog sharding must not change a single output bit:
+    /// 4-wide pooled == its serial oracle == the 1-wide plan, at a
+    /// batch size that genuinely shards (batch · n_local clears
+    /// MIN_ROWS_PER_SHARD).
+    #[test]
+    fn sharded_plan_is_bit_identical_to_single_threaded() {
+        let (mut g, _) = generate::sbm(300, 1200, 4, 0.85, 3);
+        let f_in = 8;
+        let mut rng = crate::util::rng::Rng::new(21);
+        g.features =
+            (0..300 * f_in).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        g.feature_dim = f_in;
+        let dir = std::env::temp_dir().join("bsp_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut eng = Engine::new(EngineKind::Csr, &dir).unwrap();
+        let assignment: Vec<u32> =
+            (0..300).map(|v| (v % 3) as u32).collect();
+        let batch = 8;
+        for model in ["gcn", "gat"] {
+            let wb = std::sync::Arc::new(
+                eng.weights(model, "tiny", f_in, 3).clone(),
+            );
+            let p1 = BatchedBspPlan::new(&g, &assignment, 3, model)
+                .unwrap();
+            let p4 = BatchedBspPlan::with_threads(&g, &assignment, 3,
+                                                  model, 4)
+                .unwrap();
+            assert_eq!(p4.kernel_threads(), 4);
+            let r1 = p1.execute(&g.features, f_in, &wb, batch);
+            let r4 = p4.execute(&g.features, f_in, &wb, batch);
+            let rs = p4.execute_serial(&g.features, f_in, &wb, batch);
+            assert_eq!(r4.outputs, rs.outputs,
+                       "{model}: pooled-sharded != serial oracle");
+            assert_eq!(r4.outputs, r1.outputs,
+                       "{model}: sharded != single-threaded");
+            // queue waits are reported apart from kernel seconds
+            assert_eq!(r4.layer_queue_wait_seconds.len(),
+                       r4.layer_host_seconds.len());
+            assert!(r4
+                .layer_queue_wait_seconds
+                .iter()
+                .flatten()
+                .all(|&w| w >= 0.0));
+            assert!(rs
+                .layer_queue_wait_seconds
+                .iter()
+                .flatten()
+                .all(|&w| w == 0.0));
+        }
     }
 }

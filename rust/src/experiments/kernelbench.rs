@@ -1,29 +1,50 @@
 //! `repro bench-kernels` — the kernel-perf baseline recorder: measures
 //! the tiled GEMM and blocked SpMM against their in-tree naive
 //! baselines at serving-relevant shapes (n ≥ 1024, f ∈ {64, 128, 256}),
-//! plus batched-vs-serial fog execution on the persistent worker pool,
-//! and writes BENCH_kernels.json so the repo's perf trajectory is
-//! recorded run over run.
+//! the intra-fog thread-scaling curve (1/2/4-worker row sharding on
+//! the largest single-fog shapes), the dispatched-vs-scalar SIMD
+//! margin when the AVX2+FMA path is active, plus batched-vs-serial fog
+//! execution on the persistent worker pool, and writes
+//! BENCH_kernels.json so the repo's perf trajectory is recorded run
+//! over run. Every run also appends a one-line summary (date, git rev,
+//! stat, per-shape speedups, SIMD path, thread scaling) to
+//! BENCH_history.jsonl, so regressions are visible ACROSS runs, not
+//! just within one artifact.
 //!
-//! `--smoke` runs a fast subset for CI; in every mode the tiled
-//! kernels are parity-checked against the naive ones (1e-5 relative)
-//! and a mismatch fails the command — the benchmark doubles as the
-//! cross-kernel correctness gate at bench shapes.
+//! `--smoke` runs a fast subset for CI; `--kernel-threads` caps the
+//! scaling curve. In every mode the tiled kernels are parity-checked
+//! against the naive ones (1e-5 relative), sharded results are
+//! asserted bitwise-equal to unsharded ones, and pooled / sharded /
+//! serial BSP outputs are asserted bit-identical — a mismatch fails
+//! the command, so the benchmark doubles as the cross-kernel
+//! correctness gate at bench shapes.
 
+use std::io::Write;
 use std::sync::Arc;
 
 use crate::exec::BatchedBspPlan;
 use crate::graph::{generate, subgraph};
 use crate::runtime::csr_backend::CsrPartition;
-use crate::runtime::kernels::{gemm, spmm};
+use crate::runtime::kernels::shard::{split_rows, ShardClosure,
+                                     ShardExec, ShardGroup};
+use crate::runtime::kernels::{gemm, simd, spmm};
 use crate::runtime::{pad, Engine, EngineKind};
-use crate::util::cli::Args;
+use crate::util::cli::{parse_kernel_threads, Args};
 use crate::util::json::{arr, num, obj, s, Json};
 use crate::util::rng::Rng;
 use crate::util::timer::{bench, black_box};
 
 /// Relative parity tolerance between tiled and naive kernels.
 const PARITY_TOL: f32 = 1e-5;
+
+/// `num`, except non-finite (curve skipped) becomes JSON null.
+fn num_or_null(x: f64) -> Json {
+    if x.is_finite() {
+        num(x)
+    } else {
+        Json::Null
+    }
+}
 
 fn max_rel_diff(a: &[f32], b: &[f32]) -> f32 {
     assert_eq!(a.len(), b.len());
@@ -33,14 +54,105 @@ fn max_rel_diff(a: &[f32], b: &[f32]) -> f32 {
         .fold(0f32, f32::max)
 }
 
+/// Row-sharded GEMM on an executor: the bench-side mirror of what a
+/// fog leader does for a large `FogJob` (split, run, ordered concat).
+fn gemm_sharded(exec: &ShardExec<'_>, x: &Arc<Vec<f32>>, n: usize,
+                fi: usize, w: &Arc<Vec<f32>>, fo: usize,
+                b: &Arc<Vec<f32>>) -> Vec<f32> {
+    let ranges = split_rows(n, exec.effective_shards(n));
+    let closures: Vec<ShardClosure> = ranges
+        .iter()
+        .map(|&(r0, r1)| {
+            let (x, w, b) = (x.clone(), w.clone(), b.clone());
+            Box::new(move || {
+                gemm::gemm_bias_rows(&x, fi, &w, fo, &b, r0, r1)
+            }) as ShardClosure
+        })
+        .collect();
+    let mut out = Vec::with_capacity(n * fo);
+    for sh in exec.run(closures) {
+        out.extend_from_slice(&sh);
+    }
+    out
+}
+
+/// Row-sharded SpMM on an executor (owned-row ranges, ordered concat).
+fn spmm_sharded(exec: &ShardExec<'_>, csr: &Arc<CsrPartition>,
+                h: &Arc<Vec<f32>>, f: usize) -> Vec<f32> {
+    let ranges =
+        split_rows(csr.n_local, exec.effective_shards(csr.n_local));
+    let closures: Vec<ShardClosure> = ranges
+        .iter()
+        .map(|&(v0, v1)| {
+            let (csr, h) = (csr.clone(), h.clone());
+            Box::new(move || spmm::csr_spmm_rows(&csr, &h, f, v0, v1))
+                as ShardClosure
+        })
+        .collect();
+    let mut out = Vec::with_capacity(csr.n_local * f);
+    for sh in exec.run(closures) {
+        out.extend_from_slice(&sh);
+    }
+    out
+}
+
+/// UTC civil date from the system clock, YYYY-MM-DD (no chrono
+/// offline; Hinnant's days-to-civil algorithm).
+fn utc_date_string() -> String {
+    let secs = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let z = (secs / 86_400) as i64 + 719_468;
+    let era = z.div_euclid(146_097);
+    let doe = z.rem_euclid(146_097);
+    let yoe = (doe - doe / 1460 + doe / 36_524 - doe / 146_096) / 365;
+    let doy = doe - (365 * yoe + yoe / 4 - yoe / 100);
+    let mp = (5 * doy + 2) / 153;
+    let d = doy - (153 * mp + 2) / 5 + 1;
+    let m = if mp < 10 { mp + 3 } else { mp - 9 };
+    let y = yoe + era * 400 + i64::from(m <= 2);
+    format!("{y:04}-{m:02}-{d:02}")
+}
+
+/// Short git revision, or "unknown" outside a work tree.
+fn git_rev() -> String {
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
 pub fn cmd(args: &Args) -> i32 {
     let smoke = args.has("smoke");
     let out_path = args.get_or("out", "BENCH_kernels.json");
+    let history_path = args.get_or("history", "BENCH_history.jsonl");
+    // scaling-curve cap: 1/2/4 workers by default
+    let max_threads = match parse_kernel_threads(args) {
+        Ok(1) => {
+            if args.get("kernel-threads").is_some() {
+                1 // explicit --kernel-threads 1: skip the curve
+            } else {
+                4
+            }
+        }
+        Ok(k) => k,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
     // smoke keeps CI turnaround low; full runs settle the timings
     let min_s = if smoke { 0.08 } else { 0.5 };
     println!(
-        "== kernel bench ({}) ==",
-        if smoke { "smoke" } else { "full" }
+        "== kernel bench ({}, simd={}, kernel-threads<={max_threads}) ==",
+        if smoke { "smoke" } else { "full" },
+        simd::name()
     );
 
     // ---- GEMM: tiled vs naive ------------------------------------------
@@ -56,6 +168,7 @@ pub fn cmd(args: &Args) -> i32 {
         ]
     };
     let mut gemm_rows: Vec<Json> = Vec::new();
+    let mut gemm_speedups: Vec<(String, f64)> = Vec::new();
     let mut min_gemm_speedup = f64::INFINITY;
     for &(n, fi, fo) in gemm_shapes {
         let mut rng = Rng::new(0x6E66 ^ (n * fi * fo) as u64);
@@ -94,6 +207,7 @@ pub fn cmd(args: &Args) -> i32 {
             speedup,
             flop / rt.p50_ns
         );
+        gemm_speedups.push((format!("{n}x{fi}x{fo}"), speedup));
         gemm_rows.push(obj(vec![
             ("n", num(n as f64)),
             ("f_in", num(fi as f64)),
@@ -113,9 +227,10 @@ pub fn cmd(args: &Args) -> i32 {
     let all_on_one = vec![0u32; nv];
     let (subs, _) = subgraph::extract(&g, &all_on_one, 1);
     let edges = pad::prep_edges("gcn", &subs[0]).unwrap();
-    let csr = CsrPartition::from_edges(&edges);
+    let csr = Arc::new(CsrPartition::from_edges(&edges));
     let nnz = csr.num_edges();
     let mut spmm_rows: Vec<Json> = Vec::new();
+    let mut spmm_speedups: Vec<(String, f64)> = Vec::new();
     let mut min_spmm_speedup = f64::INFINITY;
     for &f in &[64usize, 128, 256] {
         let mut rng = Rng::new(0x5B33 ^ f as u64);
@@ -152,6 +267,7 @@ pub fn cmd(args: &Args) -> i32 {
             speedup,
             bytes / rt.p50_ns
         );
+        spmm_speedups.push((format!("v{nv}_f{f}"), speedup));
         spmm_rows.push(obj(vec![
             ("vertices", num(nv as f64)),
             ("nnz", num(nnz as f64)),
@@ -163,6 +279,260 @@ pub fn cmd(args: &Args) -> i32 {
             ("gbps_blocked", num(bytes / rt.p50_ns)),
             ("max_rel_err", num(err as f64)),
         ]));
+    }
+
+    // ---- SIMD margin: dispatched path vs portable scalar ----------------
+    // Only meaningful when the dispatcher picked AVX2+FMA; the margin
+    // doubles as the avx2-vs-scalar parity gate at bench shapes.
+    let mut simd_rows: Vec<Json> = Vec::new();
+    if simd::avx2_active() {
+        let (n, fi, fo) =
+            if smoke { (1024, 128, 128) } else { (1024, 256, 256) };
+        let mut rng = Rng::new(0x51D1);
+        let x: Vec<f32> =
+            (0..n * fi).map(|_| rng.normal_f32(0.0, 0.3)).collect();
+        let w: Vec<f32> =
+            (0..fi * fo).map(|_| rng.normal_f32(0.0, 0.3)).collect();
+        let b: Vec<f32> =
+            (0..fo).map(|_| rng.normal_f32(0.0, 0.3)).collect();
+        let dispatched = gemm::gemm_bias(&x, n, fi, &w, fo, &b);
+        let mut scalar = vec![0f32; n * fo];
+        gemm::gemm_bias_into_scalar(&x, n, fi, &w, fo, &b,
+                                    &mut scalar);
+        let err = max_rel_diff(&dispatched, &scalar);
+        if err > PARITY_TOL {
+            eprintln!(
+                "PARITY FAIL simd gemm {n}x{fi}x{fo}: avx2 deviates \
+                 from scalar by {err}"
+            );
+            return 1;
+        }
+        let ra = bench(&format!("gemm/avx2_{n}x{fi}x{fo}"), min_s,
+                       10_000, || {
+            black_box(gemm::gemm_bias(&x, n, fi, &w, fo, &b));
+        });
+        let rs = bench(&format!("gemm/scalar_{n}x{fi}x{fo}"), min_s,
+                       10_000, || {
+            let mut out = vec![0f32; n * fo];
+            gemm::gemm_bias_into_scalar(&x, n, fi, &w, fo, &b,
+                                        &mut out);
+            black_box(out);
+        });
+        let margin = rs.p50_ns / ra.p50_ns;
+        println!(
+            "simd gemm {n}x{fi}x{fo}  scalar {:>8.2} ms  avx2+fma \
+             {:>8.2} ms  {:>5.2}x",
+            rs.p50_ns / 1e6,
+            ra.p50_ns / 1e6,
+            margin
+        );
+        simd_rows.push(obj(vec![
+            ("kernel", s("gemm")),
+            ("n", num(n as f64)),
+            ("f_in", num(fi as f64)),
+            ("f_out", num(fo as f64)),
+            ("scalar_ms", num(rs.p50_ns / 1e6)),
+            ("simd_ms", num(ra.p50_ns / 1e6)),
+            ("speedup", num(margin)),
+            ("max_rel_err", num(err as f64)),
+        ]));
+        // SpMM: the AVX2 kernel is NOT dispatched (measured even, see
+        // the spmm.rs design note) — this row keeps that measurement
+        // honest run over run.
+        let f = if smoke { 64 } else { 256 };
+        let h: Vec<f32> =
+            (0..csr.n * f).map(|_| rng.normal_f32(0.0, 0.5)).collect();
+        let scalar = spmm::csr_spmm(&csr, &h, f);
+        let mut avx2 = vec![0f32; csr.n_local * f];
+        assert!(simd::try_csr_spmm_rows_into(&csr, &h, f, 0,
+                                             csr.n_local, &mut avx2));
+        let err = max_rel_diff(&avx2, &scalar);
+        if err > PARITY_TOL {
+            eprintln!(
+                "PARITY FAIL simd spmm v={nv} f={f}: avx2 deviates \
+                 from scalar by {err}"
+            );
+            return 1;
+        }
+        let ra = bench(&format!("spmm/avx2_v{nv}_f{f}"), min_s,
+                       10_000, || {
+            let mut out = vec![0f32; csr.n_local * f];
+            simd::try_csr_spmm_rows_into(&csr, &h, f, 0, csr.n_local,
+                                         &mut out);
+            black_box(out);
+        });
+        let rs = bench(&format!("spmm/scalar_v{nv}_f{f}"), min_s,
+                       10_000, || {
+            black_box(spmm::csr_spmm(&csr, &h, f));
+        });
+        let margin = rs.p50_ns / ra.p50_ns;
+        println!(
+            "simd spmm v={nv} f={f}  scalar {:>8.2} ms  avx2+fma \
+             {:>8.2} ms  {:>5.2}x (not dispatched; see spmm.rs)",
+            rs.p50_ns / 1e6,
+            ra.p50_ns / 1e6,
+            margin
+        );
+        simd_rows.push(obj(vec![
+            ("kernel", s("spmm")),
+            ("vertices", num(nv as f64)),
+            ("f", num(f as f64)),
+            ("scalar_ms", num(rs.p50_ns / 1e6)),
+            ("simd_ms", num(ra.p50_ns / 1e6)),
+            ("speedup", num(margin)),
+            ("max_rel_err", num(err as f64)),
+        ]));
+    } else {
+        println!("simd margin: skipped ({})", simd::name());
+    }
+
+    // ---- intra-fog thread scaling (row-sharded kernels) -----------------
+    // The largest single-fog shapes: precisely the case where one fog
+    // used to run serial while other cores idled. The curve doubles
+    // worker counts and always ends at exactly --kernel-threads, so
+    // `scaling_at_max_workers` in the artifact/history line is
+    // measured at the width the run is labeled with.
+    let workers: Vec<usize> = {
+        let mut ws = vec![1usize];
+        let mut w = 2;
+        while w < max_threads {
+            ws.push(w);
+            w *= 2;
+        }
+        if max_threads > 1 {
+            ws.push(max_threads);
+        }
+        ws
+    };
+    let mut scaling_rows: Vec<Json> = Vec::new();
+    let mut gemm_scaling_max = f64::NAN;
+    let mut spmm_scaling_max = f64::NAN;
+    if workers.len() > 1 {
+        let scale_gemm: &[(usize, usize, usize)] = if smoke {
+            &[(1024, 128, 128)]
+        } else {
+            &[(1024, 256, 256), (4096, 64, 64)]
+        };
+        for &(n, fi, fo) in scale_gemm {
+            let mut rng = Rng::new(0x7C41 ^ (n * fi) as u64);
+            let x: Arc<Vec<f32>> = Arc::new(
+                (0..n * fi).map(|_| rng.normal_f32(0.0, 0.3)).collect(),
+            );
+            let w: Arc<Vec<f32>> = Arc::new(
+                (0..fi * fo)
+                    .map(|_| rng.normal_f32(0.0, 0.3))
+                    .collect(),
+            );
+            let b: Arc<Vec<f32>> = Arc::new(
+                (0..fo).map(|_| rng.normal_f32(0.0, 0.3)).collect(),
+            );
+            let reference = gemm::gemm_bias(&x, n, fi, &w, fo, &b);
+            let mut t1 = f64::NAN;
+            for &wk in &workers {
+                let group = ShardGroup::new(wk - 1, "bench");
+                let exec = ShardExec::Group(&group);
+                let sharded =
+                    gemm_sharded(&exec, &x, n, fi, &w, fo, &b);
+                if sharded != reference {
+                    eprintln!(
+                        "PARITY FAIL gemm {n}x{fi}x{fo} w{wk}: \
+                         sharded != unsharded (bitwise)"
+                    );
+                    return 1;
+                }
+                let r = bench(
+                    &format!("gemm/sharded_{n}x{fi}x{fo}_w{wk}"),
+                    min_s,
+                    10_000,
+                    || {
+                        black_box(gemm_sharded(&exec, &x, n, fi, &w,
+                                               fo, &b));
+                    },
+                );
+                if wk == 1 {
+                    t1 = r.p50_ns;
+                }
+                let sp = t1 / r.p50_ns;
+                if wk == *workers.last().unwrap() {
+                    gemm_scaling_max = if gemm_scaling_max.is_nan() {
+                        sp
+                    } else {
+                        gemm_scaling_max.min(sp)
+                    };
+                }
+                println!(
+                    "scaling gemm {n:>5}x{fi:>3}x{fo:>3}  w{wk}  \
+                     {:>8.2} ms  {sp:>5.2}x vs w1",
+                    r.p50_ns / 1e6
+                );
+                scaling_rows.push(obj(vec![
+                    ("kernel", s("gemm")),
+                    ("n", num(n as f64)),
+                    ("f_in", num(fi as f64)),
+                    ("f_out", num(fo as f64)),
+                    ("workers", num(wk as f64)),
+                    ("ms", num(r.p50_ns / 1e6)),
+                    ("speedup_vs_1", num(sp)),
+                ]));
+            }
+        }
+        let scale_f = if smoke { 64usize } else { 256 };
+        let mut rng = Rng::new(0x7C42);
+        let h: Arc<Vec<f32>> = Arc::new(
+            (0..csr.n * scale_f)
+                .map(|_| rng.normal_f32(0.0, 0.5))
+                .collect(),
+        );
+        let reference = spmm::csr_spmm(&csr, &h, scale_f);
+        let mut t1 = f64::NAN;
+        for &wk in &workers {
+            let group = ShardGroup::new(wk - 1, "bench");
+            let exec = ShardExec::Group(&group);
+            let sharded = spmm_sharded(&exec, &csr, &h, scale_f);
+            if sharded != reference {
+                eprintln!(
+                    "PARITY FAIL spmm v={nv} f={scale_f} w{wk}: \
+                     sharded != unsharded (bitwise)"
+                );
+                return 1;
+            }
+            let r = bench(
+                &format!("spmm/sharded_v{nv}_f{scale_f}_w{wk}"),
+                min_s,
+                10_000,
+                || {
+                    black_box(spmm_sharded(&exec, &csr, &h, scale_f));
+                },
+            );
+            if wk == 1 {
+                t1 = r.p50_ns;
+            }
+            let sp = t1 / r.p50_ns;
+            if wk == *workers.last().unwrap() {
+                // same worst-case min-fold as the gemm loop, so adding
+                // a second SpMM shape cannot silently over-report
+                spmm_scaling_max = if spmm_scaling_max.is_nan() {
+                    sp
+                } else {
+                    spmm_scaling_max.min(sp)
+                };
+            }
+            println!(
+                "scaling spmm v={nv} f={scale_f}  w{wk}  {:>8.2} ms  \
+                 {sp:>5.2}x vs w1",
+                r.p50_ns / 1e6
+            );
+            scaling_rows.push(obj(vec![
+                ("kernel", s("spmm")),
+                ("vertices", num(nv as f64)),
+                ("f", num(scale_f as f64)),
+                ("workers", num(wk as f64)),
+                ("ms", num(r.p50_ns / 1e6)),
+                ("speedup_vs_1", num(sp)),
+            ]));
+        }
+    } else {
+        println!("thread scaling: skipped (--kernel-threads 1)");
     }
 
     // ---- fog exec: batched pool vs serial per-request -------------------
@@ -183,13 +553,36 @@ pub fn cmd(args: &Args) -> i32 {
     );
     let plan = BatchedBspPlan::new(&fg, &assignment, 4, "gcn").unwrap();
     let batch = 8;
-    // pooled and serial execution must agree bit-for-bit
+    // pooled, serial and intra-fog-sharded execution must agree
+    // bit-for-bit
     let pooled = plan.execute(&fg.features, f_in, &wb, batch);
     let serial = plan.execute_serial(&fg.features, f_in, &wb, batch);
     if pooled.outputs != serial.outputs {
         eprintln!("PARITY FAIL fog exec: pooled != serial outputs");
         return 1;
     }
+    // the sharded plan is configuration-identical to `plan` at
+    // kt = 1, so only build/measure it when it can actually shard
+    let plan_t = if max_threads > 1 {
+        let p = BatchedBspPlan::with_threads(&fg, &assignment, 4,
+                                             "gcn", max_threads)
+            .unwrap();
+        let pooled_t = p.execute(&fg.features, f_in, &wb, batch);
+        let serial_t = p.execute_serial(&fg.features, f_in, &wb,
+                                        batch);
+        if pooled_t.outputs != serial_t.outputs
+            || pooled_t.outputs != pooled.outputs
+        {
+            eprintln!(
+                "PARITY FAIL fog exec: sharded pool deviates from \
+                 serial/single-threaded outputs"
+            );
+            return 1;
+        }
+        Some(p)
+    } else {
+        None
+    };
     let rb = bench("exec/pool_batched_b8_4fogs", min_s.max(0.2),
                    10_000, || {
         black_box(plan.execute_timings(&fg.features, f_in, &wb, batch));
@@ -200,15 +593,32 @@ pub fn cmd(args: &Args) -> i32 {
             black_box(plan.execute_timings(&fg.features, f_in, &wb, 1));
         }
     });
+    let rt = plan_t.as_ref().map(|p| {
+        bench(
+            &format!("exec/pool_batched_b8_4fogs_kt{max_threads}"),
+            min_s.max(0.2),
+            10_000,
+            || {
+                black_box(p.execute_timings(&fg.features, f_in, &wb,
+                                            batch));
+            },
+        )
+    });
     let fog_speedup = rs.p50_ns / rb.p50_ns;
     println!(
         "fog exec v={fnv} b={batch}  serial {:>8.2} ms  batched \
-         {:>8.2} ms  {:>5.2}x",
+         {:>8.2} ms  {:>5.2}x{}",
         rs.p50_ns / 1e6,
         rb.p50_ns / 1e6,
-        fog_speedup
+        fog_speedup,
+        match &rt {
+            Some(r) => format!("  (kt{max_threads} batched \
+                                {:>8.2} ms)",
+                               r.p50_ns / 1e6),
+            None => String::new(),
+        }
     );
-    let fog_rows = vec![obj(vec![
+    let mut fog_fields = vec![
         ("vertices", num(fnv as f64)),
         ("fogs", num(4.0)),
         ("batch", num(batch as f64)),
@@ -216,11 +626,17 @@ pub fn cmd(args: &Args) -> i32 {
         ("serial_ms", num(rs.p50_ns / 1e6)),
         ("batched_ms", num(rb.p50_ns / 1e6)),
         ("speedup", num(fog_speedup)),
-    ])];
+    ];
+    if let Some(r) = &rt {
+        fog_fields.push(("kernel_threads", num(max_threads as f64)));
+        fog_fields.push(("batched_sharded_ms", num(r.p50_ns / 1e6)));
+    }
+    let fog_rows = vec![obj(fog_fields)];
 
     println!(
         "min speedups: gemm {min_gemm_speedup:.2}x, spmm \
-         {min_spmm_speedup:.2}x (parity ok at {PARITY_TOL} rel)"
+         {min_spmm_speedup:.2}x (parity ok at {PARITY_TOL} rel, \
+         sharded/pooled/serial bitwise-identical)"
     );
 
     let doc = obj(vec![
@@ -230,8 +646,12 @@ pub fn cmd(args: &Args) -> i32 {
         // (robust on noisy shared hosts)
         ("stat", s("p50")),
         ("smoke", Json::Bool(smoke)),
+        ("simd", s(simd::name())),
+        ("kernel_threads", num(max_threads as f64)),
         ("gemm", arr(gemm_rows)),
         ("spmm", arr(spmm_rows)),
+        ("simd_margin", arr(simd_rows)),
+        ("thread_scaling", arr(scaling_rows)),
         ("fog_exec", arr(fog_rows)),
         (
             "summary",
@@ -239,17 +659,65 @@ pub fn cmd(args: &Args) -> i32 {
                 ("min_gemm_speedup", num(min_gemm_speedup)),
                 ("min_spmm_speedup", num(min_spmm_speedup)),
                 ("fog_batched_speedup", num(fog_speedup)),
+                (
+                    "gemm_scaling_at_max_workers",
+                    num_or_null(gemm_scaling_max),
+                ),
+                (
+                    "spmm_scaling_at_max_workers",
+                    num_or_null(spmm_scaling_max),
+                ),
                 ("parity_tol_rel", num(PARITY_TOL as f64)),
             ]),
         ),
     ]);
-    match std::fs::write(out_path, format!("{doc}\n")) {
+    if let Err(e) = std::fs::write(out_path, format!("{doc}\n")) {
+        eprintln!("cannot write {out_path}: {e}");
+        return 1;
+    }
+    println!("wrote {out_path}");
+
+    // ---- bench history: one line per run, committed ---------------------
+    let gentries: Vec<(&str, Json)> = gemm_speedups
+        .iter()
+        .map(|(k, v)| (k.as_str(), num(*v)))
+        .collect();
+    let sentries: Vec<(&str, Json)> = spmm_speedups
+        .iter()
+        .map(|(k, v)| (k.as_str(), num(*v)))
+        .collect();
+    let date = utc_date_string();
+    let rev = git_rev();
+    let line = obj(vec![
+        ("date", s(&date)),
+        ("rev", s(&rev)),
+        ("stat", s("p50")),
+        ("smoke", Json::Bool(smoke)),
+        ("simd", s(simd::name())),
+        ("kernel_threads", num(max_threads as f64)),
+        ("gemm_speedups", obj(gentries)),
+        ("spmm_speedups", obj(sentries)),
+        ("fog_batched_speedup", num(fog_speedup)),
+        (
+            "scaling_at_max_workers",
+            obj(vec![
+                ("gemm", num_or_null(gemm_scaling_max)),
+                ("spmm", num_or_null(spmm_scaling_max)),
+            ]),
+        ),
+    ]);
+    let appended = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(history_path)
+        .and_then(|mut fh| writeln!(fh, "{line}"));
+    match appended {
         Ok(()) => {
-            println!("wrote {out_path}");
+            println!("appended {history_path}");
             0
         }
         Err(e) => {
-            eprintln!("cannot write {out_path}: {e}");
+            eprintln!("cannot append {history_path}: {e}");
             1
         }
     }

@@ -57,13 +57,15 @@ USAGE:
   repro loadtest --dataset <name> --model <gcn|gat|sage|astgcn>
                  [--mode cloud|single-fog|multi-fog|fograph|all]
                  [--net 4g|5g|wifi] [--engine pjrt|ref|csr]
-                 [--exec analytic|measured]
+                 [--exec analytic|measured] [--kernel-threads K]
                  [--arrival poisson|bursty|diurnal] [--rps R]
                  [--duration SECONDS] [--seed N] [--slo-ms MS]
                  [--batch-max N] [--batch-deadline-ms MS]
                  [--queue-cap N] [--spill] [--no-background-load]
                  [--scheduler-period SECONDS] [--out BENCH_loadtest.json]
-  repro bench-kernels [--smoke] [--out BENCH_kernels.json]
+  repro bench-kernels [--smoke] [--kernel-threads K]
+                 [--out BENCH_kernels.json]
+                 [--history BENCH_history.jsonl]
   repro exp      <fig3|fig4|fig8|fig11|fig12|table4|fig13|table5|fig14|
                   fig15|fig16|fig17|fig18|loadtest|all>
                  [--engine pjrt|ref|csr]
@@ -79,15 +81,19 @@ EXEC MODES (loadtest only):
   analytic  price batches with the calibratable ω models; runs are
             bit-reproducible for a fixed seed (the default)
   measured  execute every micro-batch on the real tiled/blocked kernels
-            (persistent worker pool, one thread per fog) and feed
-            measured per-fog timings into the online profiler, so
-            mid-run replans use observed costs; all models incl. astgcn
+            (persistent worker pool; --kernel-threads K gives the
+            largest fog a K-wide row-parallel shard group, smaller fogs
+            proportionally fewer workers) and feed measured per-fog
+            timings into the online profiler, so mid-run replans use
+            observed costs; all models incl. astgcn
 
 KERNELS:
   bench-kernels measures the tiled GEMM and blocked SpMM against their
-  naive baselines (GFLOP/s, effective GB/s, batched-vs-serial fog exec)
-  and writes BENCH_kernels.json; --smoke runs a fast parity-checked
-  subset for CI"
+  naive baselines (GFLOP/s, effective GB/s, batched-vs-serial fog exec,
+  1/2/4-worker intra-fog thread scaling, the dispatched SIMD path) and
+  writes BENCH_kernels.json plus a one-line summary appended to
+  BENCH_history.jsonl; --smoke runs a fast parity-checked subset for CI,
+  --kernel-threads caps the scaling curve"
     );
 }
 
@@ -117,6 +123,13 @@ fn resolve_model(args: &Args) -> Result<String, String> {
 fn resolve_net(args: &Args) -> Result<NetKind, String> {
     let net = args.get_or("net", "wifi");
     NetKind::parse(net).ok_or_else(|| format!("unknown net {net}"))
+}
+
+/// Validated `--kernel-threads` (default 1): worker-group width the
+/// largest fog partition gets. 0, non-numeric and absurd values are
+/// CLI errors (exit code 2), not silent fallbacks.
+pub fn resolve_kernel_threads(args: &Args) -> Result<usize, String> {
+    fograph::util::cli::parse_kernel_threads(args)
 }
 
 /// Validated (spec, graph, model, net) shared by serve and loadtest;
@@ -258,6 +271,13 @@ fn cmd_loadtest(args: &Args) -> i32 {
                    (expected analytic|measured)");
         return 2;
     };
+    let kernel_threads = match resolve_kernel_threads(args) {
+        Ok(k) => k,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
     let traffic = TrafficConfig {
         arrival,
         rps: args.get_f64("rps", 100.0),
@@ -273,6 +293,7 @@ fn cmd_loadtest(args: &Args) -> i32 {
         scheduler_period_s: args.get_f64("scheduler-period", 5.0),
         background_load: !args.has("no-background-load"),
         exec,
+        kernel_threads,
     };
     let positive = |x: f64| x.is_finite() && x > 0.0;
     if !positive(traffic.rps) || !positive(traffic.duration_s) {
@@ -389,12 +410,26 @@ fn print_loadtest(mode: &str, spec: &DatasetSpec, model: &str,
         r.queue_len_max,
         slo.queue.mean_skew()
     );
-    println!("  exec       {} ({})", r.exec_mode.name(), r.engine);
+    println!(
+        "  exec       {} ({}, kernel_threads={}, simd={})",
+        r.exec_mode.name(),
+        r.engine,
+        r.kernel_threads,
+        r.simd
+    );
     if !r.bucket_host_ms.is_empty() {
         let buckets: Vec<String> = r
             .bucket_host_ms
             .iter()
-            .map(|&(b, ms, c)| format!("b{b}: {ms:.2} ms x{c}"))
+            .map(|row| {
+                format!(
+                    "b{}: {:.2} ms (+{:.3} ms queue) x{}",
+                    row.bucket,
+                    row.mean_host_ms,
+                    row.mean_queue_wait_ms,
+                    row.batches
+                )
+            })
             .collect();
         println!("  measured   per-bucket batch host time: {}",
                  buckets.join(", "));

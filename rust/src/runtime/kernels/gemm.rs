@@ -12,6 +12,25 @@
 //! loops run over fixed-length zipped slices, so LLVM emits
 //! bounds-check-free SIMD.
 //!
+//! Row-decomposition invariance (the property the intra-fog sharded
+//! pool relies on): every output row's arithmetic is a pure function
+//! of that row's inputs — the one-hot zero-group skip is decided PER
+//! ROW, never jointly for an MR pair, and the fused two-row loop
+//! evaluates the same `a0·w0 + a1·w1 + a2·w2 + a3·w3` expression the
+//! single-row path does. Computing rows `[r0, r1)` of a matrix
+//! therefore produces bit-identical values to the same rows of the
+//! full-matrix call, for ANY contiguous split — pooled, sharded and
+//! serial execution agree bit-for-bit, and
+//! `tests/backend_parity.rs` asserts it across random split points.
+//!
+//! Dispatch: when the one-time `kernels::simd` probe detects
+//! `avx2+fma`, `gemm_bias_into` routes to the 8-wide FMA micro-kernel
+//! (`simd::x86::gemm_bias_into`) — same row structure, same per-row
+//! skip, ~1e-7-relative drift from FMA contraction (asserted ≤ 1e-5
+//! against the scalar path). `gemm_bias_into_scalar` keeps the
+//! portable kernel callable directly for parity tests and margin
+//! measurement.
+//!
 //! Design note: the textbook MR×NR accumulator-tile micro-kernel
 //! (accumulators held in a fixed NR-wide register tile, K-panelized)
 //! was measured here too and LOSES under baseline x86-64 codegen — a
@@ -19,14 +38,18 @@
 //! spill and the kernel runs below the naive loop. The shipped
 //! row-paired K-unrolled form is the variant that actually wins at
 //! serving shapes; `repro bench-kernels` records the measured margin
-//! in BENCH_kernels.json.
+//! in BENCH_kernels.json. (Re-measure before re-attempting tiles on
+//! the AVX2 path too — the current AVX2 kernel keeps the row-at-a-time
+//! structure and wins on width + FMA alone.)
 //!
 //! The naive kernel's one-hot zero skip survives as a per-group branch
-//! (a K group whose `2 × KU` x-entries are all zero is skipped), so
+//! (a K group whose `KU` x-entries are all zero is skipped), so
 //! sparse layer-0 feature matrices keep their fast path.
 //! `gemm_bias_naive` preserves the textbook triple loop as the numeric
 //! baseline; `rust/tests/backend_parity.rs` asserts tiled == naive
 //! within 1e-5 across random shapes.
+
+use super::simd;
 
 /// Output rows per register block.
 pub const MR: usize = 2;
@@ -67,10 +90,34 @@ pub fn gemm_bias(x: &[f32], n: usize, fi: usize, w: &[f32], fo: usize,
     out
 }
 
-/// Blocked matmul-with-bias writing into a caller-owned buffer (the
-/// scratch-reuse entry point; `out` is fully overwritten).
+/// Rows `[r0, r1)` of the blocked matmul-with-bias — the row-range
+/// view the sharded pool executes. Bit-identical to the same rows of
+/// the full call (row-decomposition invariance, see module docs).
+pub fn gemm_bias_rows(x: &[f32], fi: usize, w: &[f32], fo: usize,
+                      b: &[f32], r0: usize, r1: usize) -> Vec<f32> {
+    debug_assert!(r0 <= r1 && r1 * fi <= x.len());
+    gemm_bias(&x[r0 * fi..r1 * fi], r1 - r0, fi, w, fo, b)
+}
+
+/// Matmul-with-bias writing into a caller-owned buffer (the
+/// scratch-reuse entry point; `out` is fully overwritten). Dispatches
+/// to the AVX2+FMA micro-kernel when the runtime probe detected it.
 pub fn gemm_bias_into(x: &[f32], n: usize, fi: usize, w: &[f32],
                       fo: usize, b: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(x.len(), n * fi);
+    debug_assert_eq!(w.len(), fi * fo);
+    assert_eq!(out.len(), n * fo);
+    if simd::try_gemm_bias_into(x, n, fi, w, fo, b, out) {
+        return;
+    }
+    gemm_bias_into_scalar(x, n, fi, w, fo, b, out);
+}
+
+/// The portable blocked kernel (tuned for baseline SSE2 codegen) —
+/// public so parity tests and `repro bench-kernels` can measure the
+/// SIMD path against it regardless of what the dispatcher picked.
+pub fn gemm_bias_into_scalar(x: &[f32], n: usize, fi: usize, w: &[f32],
+                             fo: usize, b: &[f32], out: &mut [f32]) {
     debug_assert_eq!(x.len(), n * fi);
     debug_assert_eq!(w.len(), fi * fo);
     assert_eq!(out.len(), n * fo);
@@ -89,10 +136,11 @@ pub fn gemm_bias_into(x: &[f32], n: usize, fi: usize, w: &[f32],
                 (xa[k], xa[k + 1], xa[k + 2], xa[k + 3]);
             let (b0, b1, b2, b3) =
                 (xb[k], xb[k + 1], xb[k + 2], xb[k + 3]);
-            // one-hot fast path: a whole-zero K group does no work
-            if a0 == 0.0 && a1 == 0.0 && a2 == 0.0 && a3 == 0.0
-                && b0 == 0.0 && b1 == 0.0 && b2 == 0.0 && b3 == 0.0
-            {
+            // one-hot fast path, decided PER ROW so any row split
+            // reproduces the same arithmetic (see module docs)
+            let za = a0 == 0.0 && a1 == 0.0 && a2 == 0.0 && a3 == 0.0;
+            let zb = b0 == 0.0 && b1 == 0.0 && b2 == 0.0 && b3 == 0.0;
+            if za && zb {
                 k += KU;
                 continue;
             }
@@ -100,16 +148,28 @@ pub fn gemm_bias_into(x: &[f32], n: usize, fi: usize, w: &[f32],
             let w1 = &w[(k + 1) * fo..(k + 2) * fo];
             let w2 = &w[(k + 2) * fo..(k + 3) * fo];
             let w3 = &w[(k + 3) * fo..(k + 4) * fo];
-            let it = oa
-                .iter_mut()
-                .zip(ob.iter_mut())
-                .zip(w0)
-                .zip(w1)
-                .zip(w2)
-                .zip(w3);
-            for (((((ov_a, ov_b), &v0), &v1), &v2), &v3) in it {
-                *ov_a += a0 * v0 + a1 * v1 + a2 * v2 + a3 * v3;
-                *ov_b += b0 * v0 + b1 * v1 + b2 * v2 + b3 * v3;
+            if !za && !zb {
+                let it = oa
+                    .iter_mut()
+                    .zip(ob.iter_mut())
+                    .zip(w0)
+                    .zip(w1)
+                    .zip(w2)
+                    .zip(w3);
+                for (((((ov_a, ov_b), &v0), &v1), &v2), &v3) in it {
+                    *ov_a += a0 * v0 + a1 * v1 + a2 * v2 + a3 * v3;
+                    *ov_b += b0 * v0 + b1 * v1 + b2 * v2 + b3 * v3;
+                }
+            } else if !za {
+                let it = oa.iter_mut().zip(w0).zip(w1).zip(w2).zip(w3);
+                for ((((ov, &v0), &v1), &v2), &v3) in it {
+                    *ov += a0 * v0 + a1 * v1 + a2 * v2 + a3 * v3;
+                }
+            } else {
+                let it = ob.iter_mut().zip(w0).zip(w1).zip(w2).zip(w3);
+                for ((((ov, &v0), &v1), &v2), &v3) in it {
+                    *ov += b0 * v0 + b1 * v1 + b2 * v2 + b3 * v3;
+                }
             }
             k += KU;
         }
@@ -118,11 +178,21 @@ pub fn gemm_bias_into(x: &[f32], n: usize, fi: usize, w: &[f32],
             let bv = xb[k];
             if av != 0.0 || bv != 0.0 {
                 let wr = &w[k * fo..(k + 1) * fo];
-                for ((ov_a, ov_b), &wv) in
-                    oa.iter_mut().zip(ob.iter_mut()).zip(wr)
-                {
-                    *ov_a += av * wv;
-                    *ov_b += bv * wv;
+                if av != 0.0 && bv != 0.0 {
+                    for ((ov_a, ov_b), &wv) in
+                        oa.iter_mut().zip(ob.iter_mut()).zip(wr)
+                    {
+                        *ov_a += av * wv;
+                        *ov_b += bv * wv;
+                    }
+                } else if av != 0.0 {
+                    for (ov, &wv) in oa.iter_mut().zip(wr) {
+                        *ov += av * wv;
+                    }
+                } else {
+                    for (ov, &wv) in ob.iter_mut().zip(wr) {
+                        *ov += bv * wv;
+                    }
                 }
             }
             k += 1;
@@ -240,5 +310,56 @@ mod tests {
         let mut out = vec![777f32; n * fo];
         gemm_bias_into(&x, n, fi, &w, fo, &b, &mut out);
         close(&out, &gemm_bias_naive(&x, n, fi, &w, fo, &b));
+    }
+
+    /// THE sharding invariant: any contiguous row split reproduces the
+    /// full-matrix result bit-for-bit, including rows with the one-hot
+    /// zero-group fast path (whichever SIMD path is dispatched).
+    #[test]
+    fn row_splits_are_bitwise_identical() {
+        let mut rng = Rng::new(14);
+        for trial in 0..20 {
+            let n = 3 + rng.usize_below(40);
+            let fi = 1 + rng.usize_below(50);
+            let fo = 1 + rng.usize_below(40);
+            let x: Vec<f32> = (0..n * fi)
+                .map(|_| {
+                    if rng.bool(0.35) {
+                        0.0
+                    } else {
+                        rng.normal_f32(0.0, 0.3)
+                    }
+                })
+                .collect();
+            let w: Vec<f32> =
+                (0..fi * fo).map(|_| rng.normal_f32(0.0, 0.3)).collect();
+            let b: Vec<f32> =
+                (0..fo).map(|_| rng.normal_f32(0.0, 0.5)).collect();
+            let full = gemm_bias(&x, n, fi, &w, fo, &b);
+            let cut = 1 + rng.usize_below(n - 1);
+            let mut stitched =
+                gemm_bias_rows(&x, fi, &w, fo, &b, 0, cut);
+            stitched.extend(gemm_bias_rows(&x, fi, &w, fo, &b, cut, n));
+            assert_eq!(full, stitched,
+                       "trial {trial}: split at {cut}/{n} deviates");
+        }
+    }
+
+    /// When AVX2+FMA is detected the dispatched kernel must stay
+    /// within 1e-5 relative of the portable scalar kernel.
+    #[test]
+    fn dispatched_matches_scalar_within_tolerance() {
+        let mut rng = Rng::new(15);
+        let (n, fi, fo) = (33, 47, 29);
+        let x: Vec<f32> =
+            (0..n * fi).map(|_| rng.normal_f32(0.0, 0.3)).collect();
+        let w: Vec<f32> =
+            (0..fi * fo).map(|_| rng.normal_f32(0.0, 0.3)).collect();
+        let b: Vec<f32> =
+            (0..fo).map(|_| rng.normal_f32(0.0, 0.5)).collect();
+        let dispatched = gemm_bias(&x, n, fi, &w, fo, &b);
+        let mut scalar = vec![0f32; n * fo];
+        gemm_bias_into_scalar(&x, n, fi, &w, fo, &b, &mut scalar);
+        close(&dispatched, &scalar);
     }
 }

@@ -8,7 +8,15 @@
 //!   EU source rows per out-row round-trip).
 //! * `pool` — persistent per-fog worker threads with channel handoff,
 //!   so measured per-batch timings reflect kernel cost rather than
-//!   thread start-up.
+//!   thread start-up. Each fog worker leads a `shard` helper group
+//!   sized from its partition volume, so large partitions run
+//!   row-parallel inside the fog (`--kernel-threads`).
+//! * `shard` — intra-fog row parallelism: deterministic contiguous
+//!   row ranges with fixed-order reduction, so pooled, sharded and
+//!   serial execution are bit-identical.
+//! * `simd` — one-time runtime dispatch (`is_x86_feature_detected!`)
+//!   to `target_feature(avx2,fma)` micro-kernels, with the shipped
+//!   SSE2-tuned shapes as the portable fallback.
 //!
 //! The tile/unroll shapes were chosen by measurement (see the design
 //! notes in `gemm.rs` / `spmm.rs`): the classic MR×NR accumulator tile
@@ -24,11 +32,16 @@
 
 pub mod gemm;
 pub mod pool;
+pub mod shard;
+pub mod simd;
 pub mod spmm;
 
-pub use gemm::{gemm_bias, gemm_bias_into, gemm_bias_naive};
-pub use pool::{FogJob, FogWorkerPool};
-pub use spmm::{csr_spmm, csr_spmm_into, csr_spmm_naive};
+pub use gemm::{gemm_bias, gemm_bias_into, gemm_bias_naive,
+               gemm_bias_rows};
+pub use pool::{group_widths, FogJob, FogStructures, FogWorkerPool};
+pub use shard::{split_rows, ShardClosure, ShardExec, ShardGroup};
+pub use spmm::{csr_spmm, csr_spmm_into, csr_spmm_naive,
+               csr_spmm_rows};
 
 /// Reusable intermediate buffers for the layer kernels — one per
 /// executor (backend or pool worker), so the per-layer/per-batch hot

@@ -1,15 +1,28 @@
-//! Persistent per-fog worker pool: one long-lived thread per fog with
-//! channel handoff, replacing the per-micro-batch `std::thread::scope`
-//! spawns the measured serving path used before. Spawning costs tens of
-//! microseconds per thread per batch — comparable to a small bucket's
-//! entire kernel time — so with the pool, measured per-bucket timings
-//! reflect kernel cost, not thread start-up.
+//! Persistent fog-aware sharded worker pool: one long-lived leader
+//! thread per fog with channel handoff (replacing the per-micro-batch
+//! `std::thread::scope` spawns the measured serving path used before),
+//! plus a per-fog `ShardGroup` of helper threads sized from the
+//! partition's volume (`group_widths`), so one large partition runs
+//! row-parallel inside its fog instead of serial while other cores
+//! idle. Spawning costs tens of microseconds per thread per batch —
+//! comparable to a small bucket's entire kernel time — so with the
+//! pool, measured per-bucket timings reflect kernel cost, not thread
+//! start-up.
 //!
-//! Each worker owns its fog's partition structures (`Arc`-shared with
-//! the plan) and a private `KernelScratch`, so the steady-state batch
-//! path allocates nothing but the output activations. The BSP barrier
-//! is the result collection in `dispatch`: one reply per dispatched
-//! job.
+//! Each leader owns its fog's partition structures (`Arc`-shared with
+//! the plan) and a private `KernelScratch` for the unsharded path; a
+//! `FogJob` whose row count clears `shard::MIN_ROWS_PER_SHARD` per
+//! worker is split into deterministic contiguous row ranges with a
+//! fixed-order reduction, so pooled, sharded and
+//! `BatchedBspPlan::execute_serial` outputs are bit-identical. The BSP
+//! barrier is the result collection in `dispatch`: one reply per
+//! dispatched job.
+//!
+//! Timing: each reply separates `seconds` (pure kernel wall-clock,
+//! measured inside the leader from first touch to completion — shard
+//! parallelism is visible here) from `queue_wait_s` (send-to-dequeue
+//! latency on the job channel), so the per-bucket timings fed to
+//! `OnlineProfiler` reflect kernel cost, not queueing.
 
 use std::cell::Cell;
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -18,11 +31,23 @@ use std::thread::JoinHandle;
 use std::time::Instant;
 
 use crate::graph::LocalGraph;
-use crate::runtime::csr_backend::{run_astgcn_csr, run_layer_csr_with,
-                                  CsrPartition};
+use crate::runtime::csr_backend::{run_astgcn_csr_cached,
+                                  run_astgcn_csr_sharded,
+                                  run_layer_csr_sharded,
+                                  run_layer_csr_with, CsrPartition,
+                                  InNbrLists};
 use crate::runtime::weights::WeightBundle;
 
+use super::shard::{ShardExec, ShardGroup};
 use super::KernelScratch;
+
+/// The placement-invariant structures a fog worker computes over: its
+/// partition view, the CSR (message-passing models), and the ASTGCN
+/// in-neighbor lists — all built once at plan construction so the
+/// per-batch hot path (and its measured timings) pays kernels only.
+pub type FogStructures = (Arc<LocalGraph>,
+                          Option<Arc<CsrPartition>>,
+                          Option<Arc<InNbrLists>>);
 
 /// One unit of per-fog work. `state` moves in and the output moves back
 /// through the result channel — no shared mutable state.
@@ -48,34 +73,62 @@ pub enum FogJob {
 }
 
 impl FogJob {
-    /// Execute on the calling thread. Pool workers and the serial
-    /// oracle (`BatchedBspPlan::execute_serial`) share this code path,
-    /// so pooled and unpooled runs are bit-identical. Returns the
-    /// output activations and the measured kernel seconds.
-    pub fn run(self, model: &str, csr: Option<&CsrPartition>,
-               sub: &LocalGraph, scratch: &mut KernelScratch)
+    /// Execute on the calling thread (row-sharding onto `shards` when
+    /// the job is large enough). Pool leaders and the serial oracle
+    /// (`BatchedBspPlan::execute_serial`) share this code path with
+    /// matching shard widths, and every row kernel is
+    /// row-decomposition invariant, so pooled and unpooled runs are
+    /// bit-identical. Returns the output activations and the measured
+    /// kernel seconds.
+    pub fn run(self, model: &str, csr: Option<&Arc<CsrPartition>>,
+               sub: &Arc<LocalGraph>, nbr: Option<&Arc<InNbrLists>>,
+               scratch: &mut KernelScratch, shards: &ShardExec<'_>)
                -> (Vec<f32>, f64) {
         match self {
             FogJob::Layer { layer, dim, last, batch, state, weights } => {
                 let csr = csr.expect("CSR built at plan construction");
                 let t = Instant::now();
-                let out = run_layer_csr_with(model, layer, &weights,
-                                             &state, dim, csr, last,
-                                             batch, scratch)
-                    .expect("model validated at plan construction");
+                let out = if shards
+                    .effective_shards(batch * csr.n_local)
+                    > 1
+                {
+                    run_layer_csr_sharded(model, layer, &weights,
+                                          &Arc::new(state), dim, csr,
+                                          last, batch, shards)
+                        .expect("model validated at plan construction")
+                } else {
+                    run_layer_csr_with(model, layer, &weights, &state,
+                                       dim, csr, last, batch, scratch)
+                        .expect("model validated at plan construction")
+                };
                 (out, t.elapsed().as_secs_f64())
             }
             FogJob::Astgcn { ft, batch, state, weights } => {
                 let n = sub.n_total();
+                let nbr = nbr
+                    .expect("in-neighbor lists built at plan \
+                             construction");
                 let t = Instant::now();
+                if shards.effective_shards(n) > 1 {
+                    let out = run_astgcn_csr_sharded(
+                        &weights,
+                        &Arc::new(state),
+                        n,
+                        ft,
+                        nbr,
+                        batch,
+                        shards,
+                    );
+                    return (out, t.elapsed().as_secs_f64());
+                }
                 let mut out = Vec::new();
                 for bk in 0..batch {
-                    let block = run_astgcn_csr(
+                    let block = run_astgcn_csr_cached(
                         &weights,
                         &state[bk * n * ft..(bk + 1) * n * ft],
                         n,
                         ft,
-                        sub,
+                        nbr,
                     );
                     if bk == 0 {
                         out.reserve_exact(block.len() * batch);
@@ -91,18 +144,53 @@ impl FogJob {
 struct Reply {
     fog: usize,
     out: Vec<f32>,
+    /// Pure kernel wall-clock (shard parallelism included).
     seconds: f64,
+    /// Send-to-dequeue latency on the job channel — reported apart
+    /// from `seconds` so profiler observations stay queueing-free.
+    queue_wait_s: f64,
     /// The worker's job panicked; `dispatch` re-raises on the caller's
     /// thread (the pool equivalent of `thread::scope`'s join-propagate).
     panicked: bool,
 }
 
-/// The persistent pool: `senders[j]` feeds fog j's worker; `results`
-/// collects replies from all workers.
+/// Per-fog worker-group widths from partition volume: the largest
+/// partition gets `kernel_threads` workers and the others
+/// proportionally fewer (always at least one), so cores go where the
+/// rows are after heterogeneity-aware placement skews the partition
+/// sizes.
+///
+/// Note on the simulation model: widths are deliberately NOT a shared
+/// host budget — each fog simulates a separate physical machine, so
+/// `kernel_threads` models PER-NODE parallelism and the pool may run
+/// up to `Σ widths` threads on this host (exactly as the pre-sharding
+/// pool ran `n_fogs` concurrent workers). When measuring on a small
+/// host, size `--kernel-threads` with `cores / n_fogs` in mind or the
+/// per-fog timings include host contention the real cluster would not
+/// see.
+pub fn group_widths(volumes: &[usize], kernel_threads: usize)
+                    -> Vec<usize> {
+    let kt = kernel_threads.max(1);
+    let mx = volumes.iter().copied().max().unwrap_or(0);
+    volumes
+        .iter()
+        .map(|&v| {
+            if mx == 0 || v == 0 {
+                1
+            } else {
+                ((kt * v).div_ceil(mx)).clamp(1, kt)
+            }
+        })
+        .collect()
+}
+
+/// The persistent pool: `senders[j]` feeds fog j's leader worker;
+/// `results` collects replies from all workers.
 pub struct FogWorkerPool {
-    senders: Vec<Sender<FogJob>>,
+    senders: Vec<Sender<(Instant, FogJob)>>,
     results: Receiver<Reply>,
     handles: Vec<JoinHandle<()>>,
+    widths: Vec<usize>,
     /// Set when a worker panic was re-raised: the results channel may
     /// still hold that round's other replies, so further dispatches
     /// would mis-attribute them. A poisoned pool refuses to dispatch.
@@ -110,25 +198,40 @@ pub struct FogWorkerPool {
 }
 
 impl FogWorkerPool {
-    /// Spawn one worker per fog. `fogs[j]` carries the structures the
-    /// worker computes over (the CSR is `None` for astgcn, which works
-    /// on the local graph directly).
-    pub fn new(
+    /// One single-threaded worker per fog (no intra-fog sharding) —
+    /// the pre-`--kernel-threads` behavior.
+    pub fn new(model: &str, fogs: Vec<FogStructures>) -> FogWorkerPool {
+        FogWorkerPool::with_threads(model, fogs, 1)
+    }
+
+    /// Spawn one leader worker per fog, each leading a shard helper
+    /// group sized from its partition volume (`group_widths`;
+    /// `kernel_threads` is the width the largest partition gets).
+    /// `fogs[j]` carries the structures the worker computes over (the
+    /// CSR is `None` for astgcn, whose in-neighbor lists fill the
+    /// third slot instead).
+    pub fn with_threads(
         model: &str,
-        fogs: Vec<(Arc<LocalGraph>, Option<Arc<CsrPartition>>)>,
+        fogs: Vec<FogStructures>,
+        kernel_threads: usize,
     ) -> FogWorkerPool {
+        let volumes: Vec<usize> =
+            fogs.iter().map(|(s, _, _)| s.n_local).collect();
+        let widths = group_widths(&volumes, kernel_threads);
         let (res_tx, res_rx) = channel::<Reply>();
         let mut senders = Vec::with_capacity(fogs.len());
         let mut handles = Vec::with_capacity(fogs.len());
-        for (j, (sub, csr)) in fogs.into_iter().enumerate() {
-            let (tx, rx) = channel::<FogJob>();
+        for (j, (sub, csr, nbr)) in fogs.into_iter().enumerate() {
+            let (tx, rx) = channel::<(Instant, FogJob)>();
             senders.push(tx);
             let results = res_tx.clone();
             let model = model.to_string();
+            let width = widths[j];
             let handle = std::thread::Builder::new()
                 .name(format!("fog-worker-{j}"))
                 .spawn(move || {
-                    worker_loop(j, &model, sub, csr, rx, results)
+                    worker_loop(j, &model, sub, csr, nbr, width, rx,
+                                results)
                 })
                 .expect("spawn fog worker");
             handles.push(handle);
@@ -137,6 +240,7 @@ impl FogWorkerPool {
             senders,
             results: res_rx,
             handles,
+            widths,
             poisoned: Cell::new(false),
         }
     }
@@ -149,12 +253,17 @@ impl FogWorkerPool {
         self.senders.is_empty()
     }
 
+    /// Per-fog worker-group widths (leader + shard helpers).
+    pub fn widths(&self) -> &[usize] {
+        &self.widths
+    }
+
     /// Hand one job per fog to the workers (`None` = no work, e.g. a
     /// fog owning no vertices) and wait at the BSP barrier for every
-    /// reply. Returns per-fog outputs and measured kernel seconds
-    /// (empty/0.0 for `None` slots).
+    /// reply. Returns per-fog outputs, measured kernel seconds and
+    /// job-channel queue waits (empty/0.0 for `None` slots).
     pub fn dispatch(&self, jobs: Vec<Option<FogJob>>)
-                    -> (Vec<Vec<f32>>, Vec<f64>) {
+                    -> (Vec<Vec<f32>>, Vec<f64>, Vec<f64>) {
         assert_eq!(jobs.len(), self.senders.len());
         assert!(
             !self.poisoned.get(),
@@ -164,11 +273,12 @@ impl FogWorkerPool {
         let mut outs: Vec<Vec<f32>> =
             (0..jobs.len()).map(|_| Vec::new()).collect();
         let mut secs = vec![0f64; jobs.len()];
+        let mut waits = vec![0f64; jobs.len()];
         let mut pending = 0usize;
         for (j, job) in jobs.into_iter().enumerate() {
             if let Some(job) = job {
                 self.senders[j]
-                    .send(job)
+                    .send((Instant::now(), job))
                     .expect("fog worker alive while pool exists");
                 pending += 1;
             }
@@ -184,9 +294,10 @@ impl FogWorkerPool {
                        r.fog);
             }
             secs[r.fog] = r.seconds;
+            waits[r.fog] = r.queue_wait_s;
             outs[r.fog] = r.out;
         }
-        (outs, secs)
+        (outs, secs, waits)
     }
 }
 
@@ -200,28 +311,48 @@ impl Drop for FogWorkerPool {
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn worker_loop(
     fog: usize,
     model: &str,
     sub: Arc<LocalGraph>,
     csr: Option<Arc<CsrPartition>>,
-    jobs: Receiver<FogJob>,
+    nbr: Option<Arc<InNbrLists>>,
+    width: usize,
+    jobs: Receiver<(Instant, FogJob)>,
     results: Sender<Reply>,
 ) {
     let mut scratch = KernelScratch::default();
-    while let Ok(job) = jobs.recv() {
+    // helper threads only when this fog can actually shard
+    let group = if width > 1 {
+        Some(ShardGroup::new(width - 1, &format!("fog{fog}")))
+    } else {
+        None
+    };
+    while let Ok((sent, job)) = jobs.recv() {
+        let queue_wait_s = sent.elapsed().as_secs_f64();
+        let exec = match &group {
+            Some(g) => ShardExec::Group(g),
+            None => ShardExec::Inline(1),
+        };
         // a panicking job must not leave dispatch() counting a reply
         // that never comes (the other workers keep the channel open):
         // catch it, report it, and retire this worker
         let ran = std::panic::catch_unwind(
             std::panic::AssertUnwindSafe(|| {
-                job.run(model, csr.as_deref(), &sub, &mut scratch)
+                job.run(model, csr.as_ref(), &sub, nbr.as_ref(),
+                        &mut scratch, &exec)
             }),
         );
         match ran {
             Ok((out, seconds)) => {
-                let reply =
-                    Reply { fog, out, seconds, panicked: false };
+                let reply = Reply {
+                    fog,
+                    out,
+                    seconds,
+                    queue_wait_s,
+                    panicked: false,
+                };
                 if results.send(reply).is_err() {
                     break; // pool dropped mid-flight
                 }
@@ -231,6 +362,7 @@ fn worker_loop(
                     fog,
                     out: Vec::new(),
                     seconds: 0.0,
+                    queue_wait_s,
                     panicked: true,
                 });
                 break;
@@ -247,8 +379,13 @@ mod tests {
     use crate::runtime::pad;
     use crate::runtime::{Engine, EngineKind};
 
-    #[test]
-    fn pooled_layer_matches_inline_execution() {
+    type FogSetup = (Vec<Arc<LocalGraph>>,
+                     Vec<Arc<CsrPartition>>,
+                     Arc<WeightBundle>,
+                     Vec<Vec<f32>>,
+                     usize);
+
+    fn two_fog_setup() -> FogSetup {
         let (mut g, _) = generate::sbm(120, 500, 3, 0.85, 19);
         let f_in = 6;
         let mut rng = crate::util::rng::Rng::new(20);
@@ -278,35 +415,87 @@ mod tests {
                     .collect()
             })
             .collect();
-        let fogs: Vec<(Arc<LocalGraph>, Option<Arc<CsrPartition>>)> =
-            subs.iter()
-                .cloned()
-                .map(Arc::new)
-                .zip(csrs.iter().cloned().map(Some))
-                .collect();
-        let pool = FogWorkerPool::new("gcn", fogs);
-        assert_eq!(pool.len(), 2);
-        let jobs: Vec<Option<FogJob>> = states
+        let subs: Vec<Arc<LocalGraph>> =
+            subs.into_iter().map(Arc::new).collect();
+        (subs, csrs, wb, states, f_in)
+    }
+
+    fn layer_jobs(states: &[Vec<f32>], wb: &Arc<WeightBundle>,
+                  f_in: usize, batch: usize) -> Vec<Option<FogJob>> {
+        states
             .iter()
             .map(|st| {
+                // block-diagonal batch of identical snapshot blocks
+                let mut state =
+                    Vec::with_capacity(batch * st.len());
+                for _ in 0..batch {
+                    state.extend_from_slice(st);
+                }
                 Some(FogJob::Layer {
                     layer: 0,
                     dim: f_in,
                     last: false,
-                    batch: 1,
-                    state: st.clone(),
+                    batch,
+                    state,
                     weights: wb.clone(),
                 })
             })
-            .collect();
-        let (outs, secs) = pool.dispatch(jobs);
+            .collect()
+    }
+
+    fn fog_structs(subs: &[Arc<LocalGraph>],
+                   csrs: &[Arc<CsrPartition>]) -> Vec<FogStructures> {
+        subs.iter()
+            .cloned()
+            .zip(csrs.iter().cloned())
+            .map(|(s, c)| (s, Some(c), None))
+            .collect()
+    }
+
+    #[test]
+    fn pooled_layer_matches_inline_execution() {
+        let (subs, csrs, wb, states, f_in) = two_fog_setup();
+        let pool = FogWorkerPool::new("gcn", fog_structs(&subs, &csrs));
+        assert_eq!(pool.len(), 2);
+        assert_eq!(pool.widths(), &[1, 1]);
+        let (outs, secs, waits) =
+            pool.dispatch(layer_jobs(&states, &wb, f_in, 1));
         for j in 0..2 {
             let inline = run_layer_csr("gcn", 0, &wb, &states[j], f_in,
                                        &csrs[j], false, 1)
                 .unwrap();
             assert_eq!(outs[j], inline, "fog {j} pooled != inline");
             assert!(secs[j] >= 0.0);
+            assert!(waits[j] >= 0.0);
         }
+    }
+
+    #[test]
+    fn sharded_pool_matches_single_threaded_pool() {
+        let (subs, csrs, wb, states, f_in) = two_fog_setup();
+        let one = FogWorkerPool::new("gcn", fog_structs(&subs, &csrs));
+        let four = FogWorkerPool::with_threads(
+            "gcn", fog_structs(&subs, &csrs), 4);
+        assert!(four.widths().iter().all(|&w| (1..=4).contains(&w)));
+        // equal partitions: every fog gets the full width
+        assert_eq!(four.widths(), &[4, 4]);
+        // batch 16 × 60 owned rows clears MIN_ROWS_PER_SHARD, so the
+        // 4-wide pool genuinely shards while the 1-wide pool cannot
+        let batch = 16;
+        let (o1, _, _) =
+            one.dispatch(layer_jobs(&states, &wb, f_in, batch));
+        let (o4, _, _) =
+            four.dispatch(layer_jobs(&states, &wb, f_in, batch));
+        assert_eq!(o1, o4, "sharded pool deviates from 1-thread pool");
+    }
+
+    #[test]
+    fn group_widths_scale_with_volume() {
+        assert_eq!(group_widths(&[100, 100], 4), vec![4, 4]);
+        assert_eq!(group_widths(&[400, 100, 0], 4), vec![4, 1, 1]);
+        assert_eq!(group_widths(&[300, 150], 4), vec![4, 2]);
+        assert_eq!(group_widths(&[10, 20], 1), vec![1, 1]);
+        assert_eq!(group_widths(&[], 4), Vec::<usize>::new());
     }
 
     #[test]
@@ -318,10 +507,11 @@ mod tests {
         ));
         let pool = FogWorkerPool::new(
             "gcn",
-            vec![(Arc::new(sub), Some(csr))],
+            vec![(Arc::new(sub), Some(csr), None)],
         );
-        let (outs, secs) = pool.dispatch(vec![None]);
+        let (outs, secs, waits) = pool.dispatch(vec![None]);
         assert!(outs[0].is_empty());
         assert_eq!(secs[0], 0.0);
+        assert_eq!(waits[0], 0.0);
     }
 }

@@ -1,0 +1,291 @@
+//! Intra-fog row parallelism: a persistent helper-thread group per fog
+//! worker, so one large partition no longer runs serial while other
+//! cores idle (the pool used to map exactly one thread per fog, which
+//! is precisely wrong after heterogeneity-aware placement concentrates
+//! work on the beefiest node).
+//!
+//! Execution model: a row-parallel pass is a list of deterministic
+//! contiguous row ranges (`split_rows`), one closure per range. The
+//! group leader (the fog's pool worker, or the serial oracle) sends
+//! ranges `1..k` to its helpers, computes range `0` inline, and
+//! collects the shard outputs in **fixed range order** — the reduction
+//! is an ordered copy into the destination buffer, never an
+//! accumulation, so pooled, sharded and serial execution are
+//! bit-identical. On top of that, every row kernel in this layer is
+//! *row-decomposition invariant* (each output row's arithmetic is a
+//! pure function of its own inputs — see the design notes in
+//! `gemm.rs`/`spmm.rs`), so the equality holds for ANY split points,
+//! not just matching ones; `tests/backend_parity.rs` asserts it across
+//! random splits.
+//!
+//! Helpers are long-lived threads with channel handoff (same rationale
+//! as the per-fog pool itself: spawning costs tens of microseconds,
+//! comparable to a small shard's entire kernel time). Work below
+//! `MIN_ROWS_PER_SHARD` rows is not split at all — the round trip
+//! would cost more than the parallelism buys.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+/// A unit of row-range work: runs on a helper (or inline) and returns
+/// its shard's output rows.
+pub type ShardClosure = Box<dyn FnOnce() -> Vec<f32> + Send + 'static>;
+
+/// Minimum row-blocks of work per shard: below this, the channel round
+/// trip and per-shard buffers outweigh the parallel win, so the pass
+/// runs unsplit.
+pub const MIN_ROWS_PER_SHARD: usize = 256;
+
+struct HelperTask {
+    shard: usize,
+    work: ShardClosure,
+}
+
+struct HelperReply {
+    shard: usize,
+    out: Vec<f32>,
+    panicked: bool,
+}
+
+/// `helpers` persistent threads plus the calling thread = a worker
+/// group of width `helpers + 1`.
+pub struct ShardGroup {
+    txs: Vec<Sender<HelperTask>>,
+    results: Receiver<HelperReply>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl ShardGroup {
+    /// Spawn `helpers` long-lived shard threads. `label` names them
+    /// (`<label>-shard-<i>`) for debuggability.
+    pub fn new(helpers: usize, label: &str) -> ShardGroup {
+        let (res_tx, res_rx) = channel::<HelperReply>();
+        let mut txs = Vec::with_capacity(helpers);
+        let mut handles = Vec::with_capacity(helpers);
+        for i in 0..helpers {
+            let (tx, rx) = channel::<HelperTask>();
+            txs.push(tx);
+            let results = res_tx.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("{label}-shard-{i}"))
+                .spawn(move || helper_loop(rx, results))
+                .expect("spawn shard helper");
+            handles.push(handle);
+        }
+        ShardGroup { txs, results: res_rx, handles }
+    }
+
+    /// Workers in the group, including the calling thread.
+    pub fn width(&self) -> usize {
+        self.txs.len() + 1
+    }
+
+    /// Execute one closure per shard: closures `1..k` on the helpers,
+    /// closure `0` on the calling thread (so the leader is never idle).
+    /// Returns the outputs in closure order — the fixed-order
+    /// reduction. Panics if a helper's closure panicked (the caller —
+    /// a pool worker — reports it up through the pool's poison path).
+    pub fn run(&self, closures: Vec<ShardClosure>) -> Vec<Vec<f32>> {
+        let k = closures.len();
+        assert!(k >= 1, "at least one shard");
+        assert!(
+            k <= self.width(),
+            "more shards ({k}) than group width ({})",
+            self.width()
+        );
+        let mut iter = closures.into_iter();
+        let first = iter.next().expect("first shard closure");
+        for (i, work) in iter.enumerate() {
+            self.txs[i]
+                .send(HelperTask { shard: i + 1, work })
+                .expect("shard helper alive while group exists");
+        }
+        let mut outs: Vec<Vec<f32>> =
+            (0..k).map(|_| Vec::new()).collect();
+        outs[0] = first();
+        for _ in 1..k {
+            let r = self.results.recv().expect("shard helper reply");
+            if r.panicked {
+                panic!("shard helper panicked during kernel execution");
+            }
+            outs[r.shard] = r.out;
+        }
+        outs
+    }
+}
+
+impl Drop for ShardGroup {
+    fn drop(&mut self) {
+        // closing the task channels ends the helper loops
+        self.txs.clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn helper_loop(tasks: Receiver<HelperTask>, results: Sender<HelperReply>) {
+    while let Ok(task) = tasks.recv() {
+        let shard = task.shard;
+        // a panicking shard must not leave the leader waiting for a
+        // reply that never comes: catch, report, retire this helper
+        let ran = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(move || (task.work)()),
+        );
+        match ran {
+            Ok(out) => {
+                if results
+                    .send(HelperReply { shard, out, panicked: false })
+                    .is_err()
+                {
+                    break; // group dropped mid-flight
+                }
+            }
+            Err(_) => {
+                let _ = results.send(HelperReply {
+                    shard,
+                    out: Vec::new(),
+                    panicked: true,
+                });
+                break;
+            }
+        }
+    }
+}
+
+/// How a row-parallel pass executes: on a fog's persistent helper
+/// group, or inline in shard order with the same logical width (the
+/// spawn-free serial oracle). Both run identical closures over
+/// identical ranges, so their outputs are bit-identical by
+/// construction.
+pub enum ShardExec<'a> {
+    Group(&'a ShardGroup),
+    Inline(usize),
+}
+
+impl ShardExec<'_> {
+    /// Workers this executor represents (>= 1).
+    pub fn width(&self) -> usize {
+        match self {
+            ShardExec::Group(g) => g.width(),
+            ShardExec::Inline(k) => (*k).max(1),
+        }
+    }
+
+    /// Shards a pass over `work_rows` total row-blocks should use:
+    /// capped by the group width and by `MIN_ROWS_PER_SHARD` of work
+    /// per shard.
+    pub fn effective_shards(&self, work_rows: usize) -> usize {
+        self.width().min((work_rows / MIN_ROWS_PER_SHARD).max(1))
+    }
+
+    /// Run the pass: on the group, or sequentially in shard order.
+    pub fn run(&self, closures: Vec<ShardClosure>) -> Vec<Vec<f32>> {
+        match self {
+            ShardExec::Group(g) => g.run(closures),
+            ShardExec::Inline(_) => {
+                closures.into_iter().map(|c| c()).collect()
+            }
+        }
+    }
+}
+
+/// Deterministic contiguous split of `rows` into at most `shards`
+/// non-empty ranges, sizes differing by at most one (the first
+/// `rows % k` ranges are one longer). Pure function of its arguments —
+/// every executor that splits the same way gets the same ranges.
+pub fn split_rows(rows: usize, shards: usize) -> Vec<(usize, usize)> {
+    if rows == 0 {
+        return Vec::new();
+    }
+    let k = shards.clamp(1, rows);
+    let base = rows / k;
+    let rem = rows % k;
+    let mut ranges = Vec::with_capacity(k);
+    let mut at = 0usize;
+    for i in 0..k {
+        let len = base + usize::from(i < rem);
+        ranges.push((at, at + len));
+        at += len;
+    }
+    debug_assert_eq!(at, rows);
+    ranges
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn split_rows_is_contiguous_and_balanced() {
+        for rows in [1usize, 2, 7, 255, 256, 1000, 1001] {
+            for k in [1usize, 2, 3, 4, 8] {
+                let r = split_rows(rows, k);
+                assert!(!r.is_empty());
+                assert!(r.len() <= k.min(rows));
+                assert_eq!(r[0].0, 0);
+                assert_eq!(r.last().unwrap().1, rows);
+                for w in r.windows(2) {
+                    assert_eq!(w[0].1, w[1].0, "contiguous");
+                }
+                let sizes: Vec<usize> =
+                    r.iter().map(|&(a, b)| b - a).collect();
+                let mx = *sizes.iter().max().unwrap();
+                let mn = *sizes.iter().min().unwrap();
+                assert!(mx - mn <= 1, "balanced within one row");
+                assert!(mn >= 1);
+            }
+        }
+        assert!(split_rows(0, 4).is_empty());
+    }
+
+    #[test]
+    fn group_runs_shards_in_fixed_order() {
+        let group = ShardGroup::new(3, "test");
+        assert_eq!(group.width(), 4);
+        let data: Arc<Vec<f32>> =
+            Arc::new((0..64).map(|i| i as f32).collect());
+        let ranges = split_rows(64, 4);
+        let closures: Vec<ShardClosure> = ranges
+            .iter()
+            .map(|&(a, b)| {
+                let d = data.clone();
+                Box::new(move || d[a..b].to_vec()) as ShardClosure
+            })
+            .collect();
+        let outs = group.run(closures);
+        let flat: Vec<f32> =
+            outs.into_iter().flatten().collect();
+        assert_eq!(flat, *data, "ordered concatenation reproduces input");
+    }
+
+    #[test]
+    fn inline_exec_matches_group_exec() {
+        let group = ShardGroup::new(2, "test");
+        let make = |exec: &ShardExec| -> Vec<f32> {
+            let ranges = split_rows(100, exec.width());
+            let closures: Vec<ShardClosure> = ranges
+                .iter()
+                .map(|&(a, b)| {
+                    Box::new(move || {
+                        (a..b).map(|i| (i * i) as f32).collect()
+                    }) as ShardClosure
+                })
+                .collect();
+            exec.run(closures).into_iter().flatten().collect()
+        };
+        let pooled = make(&ShardExec::Group(&group));
+        let inline = make(&ShardExec::Inline(3));
+        assert_eq!(pooled, inline);
+    }
+
+    #[test]
+    fn effective_shards_respects_min_rows() {
+        let exec = ShardExec::Inline(4);
+        assert_eq!(exec.effective_shards(10), 1);
+        assert_eq!(exec.effective_shards(MIN_ROWS_PER_SHARD), 1);
+        assert_eq!(exec.effective_shards(2 * MIN_ROWS_PER_SHARD), 2);
+        assert_eq!(exec.effective_shards(100 * MIN_ROWS_PER_SHARD), 4);
+    }
+}

@@ -26,6 +26,24 @@
 //! loop carries no per-edge mask branch. `csr_spmm_naive` preserves
 //! the scalar edge-at-a-time loop as the baseline for parity tests and
 //! `repro bench-kernels`.
+//!
+//! Row-decomposition invariance: each destination row reads only its
+//! own edge segment, so aggregating rows `[v0, v1)` is bit-identical
+//! to the same rows of the full sweep for ANY contiguous split — the
+//! property the intra-fog sharded pool relies on
+//! (`csr_spmm_rows_into` is the row-range entry point).
+//!
+//! Design note (SIMD): an AVX2+FMA SpMM micro-kernel exists
+//! (`kernels::simd::x86::csr_spmm_rows_into`, same edge unroll and
+//! unit-weight fast path) but is NOT dispatched: measured at the
+//! bench shapes it is 0.95–1.01x of this portable kernel — SpMM is
+//! DRAM-bandwidth-bound and the SSE2-autovectorized loop already
+//! saturates it, so the wider vectors buy nothing (and sometimes lose
+//! on the gather-heavy small-f shapes). The kernel stays in-tree so
+//! `repro bench-kernels` keeps quantifying the margin
+//! (`simd_margin` rows) and the parity suite keeps exercising it —
+//! re-measure there before flipping the dispatch (the GEMM story is
+//! different: see `gemm.rs`).
 
 use crate::runtime::csr_backend::CsrPartition;
 
@@ -74,11 +92,41 @@ pub fn csr_spmm(csr: &CsrPartition, h: &[f32], f: usize) -> Vec<f32> {
 /// path.
 pub fn csr_spmm_into(csr: &CsrPartition, h: &[f32], f: usize,
                      out: &mut [f32]) {
-    let l = csr.n_local;
-    assert_eq!(out.len(), l * f);
+    csr_spmm_rows_into(csr, h, f, 0, csr.n_local, out);
+}
+
+/// Owned rows `[v0, v1)` of the aggregate, written into `out`
+/// (`(v1 - v0) * f`, fully overwritten) — the row-range view the
+/// sharded pool executes. Bit-identical to the same rows of the full
+/// sweep (row-decomposition invariance, see module docs). Stays on
+/// the portable kernel on every host: the AVX2 variant measured even
+/// (see the SIMD design note above).
+pub fn csr_spmm_rows_into(csr: &CsrPartition, h: &[f32], f: usize,
+                          v0: usize, v1: usize, out: &mut [f32]) {
+    csr_spmm_rows_into_scalar(csr, h, f, v0, v1, out);
+}
+
+/// Row-sharded aggregate into a fresh vector (`csr_spmm_rows_into`
+/// convenience wrapper).
+pub fn csr_spmm_rows(csr: &CsrPartition, h: &[f32], f: usize,
+                     v0: usize, v1: usize) -> Vec<f32> {
+    let mut out = vec![0f32; (v1 - v0) * f];
+    csr_spmm_rows_into(csr, h, f, v0, v1, &mut out);
+    out
+}
+
+/// The portable edge-unrolled kernel (tuned for baseline SSE2
+/// codegen) — public so parity tests and `repro bench-kernels` can
+/// measure the SIMD path against it regardless of what the dispatcher
+/// picked.
+pub fn csr_spmm_rows_into_scalar(csr: &CsrPartition, h: &[f32],
+                                 f: usize, v0: usize, v1: usize,
+                                 out: &mut [f32]) {
+    assert!(v0 <= v1 && v1 <= csr.n_local);
+    assert_eq!(out.len(), (v1 - v0) * f);
     debug_assert!(h.len() >= csr.n * f);
-    for v in 0..l {
-        let row = &mut out[v * f..(v + 1) * f];
+    for v in v0..v1 {
+        let row = &mut out[(v - v0) * f..(v - v0 + 1) * f];
         row.fill(0.0);
         let hi = csr.row_ptr[v + 1];
         let mut e = csr.row_ptr[v];
@@ -199,5 +247,51 @@ mod tests {
         let mut out = vec![777f32; csr.n_local * f];
         csr_spmm_into(&csr, &h, f, &mut out);
         assert_eq!(out, csr_spmm(&csr, &h, f));
+    }
+
+    /// THE sharding invariant: any contiguous row split reproduces the
+    /// full sweep bit-for-bit (whichever SIMD path is dispatched).
+    #[test]
+    fn row_splits_are_bitwise_identical() {
+        let csr = random_csr(120, 500, 26);
+        let mut rng = Rng::new(27);
+        for f in [1usize, 7, 16, 33, 64] {
+            let h: Vec<f32> = (0..csr.n * f)
+                .map(|_| rng.normal_f32(0.0, 0.5))
+                .collect();
+            let full = csr_spmm(&csr, &h, f);
+            let cut = 1 + rng.usize_below(csr.n_local - 1);
+            let mut stitched = csr_spmm_rows(&csr, &h, f, 0, cut);
+            stitched.extend(csr_spmm_rows(&csr, &h, f, cut,
+                                          csr.n_local));
+            assert_eq!(full, stitched,
+                       "f={f}: split at {cut} deviates");
+        }
+    }
+
+    /// The in-tree (non-dispatched) AVX2 SpMM kernel must stay within
+    /// 1e-5 relative of the portable kernel when the feature is
+    /// detected (no-op assertion otherwise).
+    #[test]
+    fn avx2_kernel_matches_scalar_within_tolerance() {
+        let csr = random_csr(90, 400, 28);
+        let mut rng = Rng::new(29);
+        for f in [5usize, 16, 40] {
+            let h: Vec<f32> = (0..csr.n * f)
+                .map(|_| rng.normal_f32(0.0, 0.5))
+                .collect();
+            let mut avx2 = vec![0f32; csr.n_local * f];
+            if !crate::runtime::kernels::simd::try_csr_spmm_rows_into(
+                &csr, &h, f, 0, csr.n_local, &mut avx2,
+            ) {
+                return; // feature not detected on this host
+            }
+            let scalar = csr_spmm(&csr, &h, f);
+            for (i, (a, e)) in avx2.iter().zip(&scalar).enumerate() {
+                let tol = 1e-5 * (1.0 + a.abs().max(e.abs()));
+                assert!((a - e).abs() <= tol,
+                        "f={f} elem {i}: {a} vs {e}");
+            }
+        }
     }
 }

@@ -17,11 +17,17 @@ use crate::graph::Graph;
 use crate::profile::{Cardinality, OnlineProfiler, PerfModel};
 use crate::runtime::{Engine, EngineError, WeightBundle};
 
-/// Accumulated wall-clock for one padded bucket size.
+/// Accumulated wall-clock for one padded bucket size. Kernel seconds
+/// and pool queue waits are accumulated separately, so the per-bucket
+/// timings (and the profiler observations derived from them) reflect
+/// pure kernel cost.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct BucketStat {
     /// Sum of per-batch BSP barrier host seconds (Σ_layer max_fog).
     pub total_host_s: f64,
+    /// Sum of per-batch pool queue waits (Σ_layer max_fog of the
+    /// job-channel send-to-dequeue latency).
+    pub total_queue_wait_s: f64,
     pub batches: usize,
 }
 
@@ -33,6 +39,26 @@ impl BucketStat {
             self.total_host_s / self.batches as f64 * 1e3
         }
     }
+
+    pub fn mean_queue_wait_ms(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.total_queue_wait_s / self.batches as f64 * 1e3
+        }
+    }
+}
+
+/// One row of the measured per-bucket summary.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct BucketRow {
+    pub bucket: usize,
+    /// Mean per-batch kernel barrier time (pure kernel cost).
+    pub mean_host_ms: f64,
+    /// Mean per-batch pool queue wait, reported apart from kernel
+    /// seconds.
+    pub mean_queue_wait_ms: f64,
+    pub batches: usize,
 }
 
 /// Real-kernel executor for the serving loop: owns the pre-extracted
@@ -42,6 +68,7 @@ pub struct MeasuredExec {
     wb: Arc<WeightBundle>,
     features: Vec<f32>,
     f_in: usize,
+    kernel_threads: usize,
     profilers: Vec<OnlineProfiler>,
     bucket_stats: BTreeMap<usize, BucketStat>,
 }
@@ -49,7 +76,9 @@ pub struct MeasuredExec {
 impl MeasuredExec {
     /// `payload`/`dims` are the raw (pre-codec) per-inference upload —
     /// the same snapshot the grounding pipeline run served; `omegas`
-    /// seed the profilers' offline models.
+    /// seed the profilers' offline models; `kernel_threads` sizes the
+    /// per-fog shard groups (`--kernel-threads`; 1 = no intra-fog
+    /// parallelism).
     #[allow(clippy::too_many_arguments)]
     pub fn new(
         g: &Graph,
@@ -62,8 +91,11 @@ impl MeasuredExec {
         classes: usize,
         omegas: &[PerfModel],
         engine: &mut Engine,
+        kernel_threads: usize,
     ) -> Result<MeasuredExec, EngineError> {
-        let plan = BatchedBspPlan::new(g, assignment, n_fogs, model)?;
+        let plan = BatchedBspPlan::with_threads(g, assignment, n_fogs,
+                                                model,
+                                                kernel_threads)?;
         let wb =
             Arc::new(engine.weights(model, dataset, dims, classes).clone());
         Ok(MeasuredExec {
@@ -71,6 +103,7 @@ impl MeasuredExec {
             wb,
             features: payload.to_vec(),
             f_in: dims,
+            kernel_threads,
             profilers: omegas
                 .iter()
                 .map(|m| OnlineProfiler::new(m.clone()))
@@ -83,9 +116,17 @@ impl MeasuredExec {
         "csr-batched"
     }
 
+    /// The `--kernel-threads` value the worker pool was built with.
+    pub fn kernel_threads(&self) -> usize {
+        self.kernel_threads
+    }
+
     /// Execute one micro-batch at bucket size `bucket`; returns the
     /// measured `layer_host_seconds[layer][fog]` and feeds the per-fog
-    /// profilers with per-request-normalized observations.
+    /// profilers with per-request-normalized observations. Pool queue
+    /// waits accumulate separately (`BucketRow::mean_queue_wait_ms`),
+    /// so kernel timings — and the profiler observations — never fold
+    /// in channel queueing.
     pub fn run_batch(&mut self, bucket: usize) -> Vec<Vec<f64>> {
         let res = self.plan.execute_timings(&self.features, self.f_in,
                                             &self.wb, bucket);
@@ -94,8 +135,14 @@ impl MeasuredExec {
             barrier +=
                 layer_times.iter().cloned().fold(0f64, f64::max);
         }
+        let mut wait_barrier = 0f64;
+        for layer_waits in &res.layer_queue_wait_seconds {
+            wait_barrier +=
+                layer_waits.iter().cloned().fold(0f64, f64::max);
+        }
         let stat = self.bucket_stats.entry(bucket).or_default();
         stat.total_host_s += barrier;
+        stat.total_queue_wait_s += wait_barrier;
         stat.batches += 1;
         for j in 0..self.plan.n_fogs() {
             let (v, ne) = self.plan.cardinality(j);
@@ -121,22 +168,31 @@ impl MeasuredExec {
         self.profilers.iter().map(|p| p.scaled_model()).collect()
     }
 
-    /// Re-extract partition structures after a migration (profilers and
-    /// bucket stats carry over; η is a node property, not a placement
-    /// property).
+    /// Re-extract partition structures after a migration (profilers,
+    /// bucket stats and the kernel-thread budget carry over; η is a
+    /// node property, not a placement property).
     pub fn rebuild(&mut self, g: &Graph, assignment: &[u32],
                    model: &str) -> Result<(), EngineError> {
-        self.plan = BatchedBspPlan::new(g, assignment,
-                                        self.plan.n_fogs(), model)?;
+        self.plan = BatchedBspPlan::with_threads(
+            g,
+            assignment,
+            self.plan.n_fogs(),
+            model,
+            self.kernel_threads,
+        )?;
         Ok(())
     }
 
-    /// Measured (bucket, mean batch ms, batches) rows, smallest bucket
-    /// first.
-    pub fn bucket_summary(&self) -> Vec<(usize, f64, usize)> {
+    /// Measured per-bucket rows, smallest bucket first.
+    pub fn bucket_summary(&self) -> Vec<BucketRow> {
         self.bucket_stats
             .iter()
-            .map(|(&b, st)| (b, st.mean_ms(), st.batches))
+            .map(|(&b, st)| BucketRow {
+                bucket: b,
+                mean_host_ms: st.mean_ms(),
+                mean_queue_wait_ms: st.mean_queue_wait_ms(),
+                batches: st.batches,
+            })
             .collect()
     }
 }
@@ -163,17 +219,20 @@ mod tests {
         let omegas = vec![PerfModel::uncalibrated(); 2];
         let mut me = MeasuredExec::new(
             &g, &assignment, 2, "gcn", "tiny", &g.features, f_in, 3,
-            &omegas, &mut eng,
+            &omegas, &mut eng, 2,
         )
         .unwrap();
+        assert_eq!(me.kernel_threads(), 2);
         let lhs = me.run_batch(4);
         assert_eq!(lhs.len(), 2, "gcn has 2 layers");
         assert_eq!(lhs[0].len(), 2, "one timing per fog");
         assert!(lhs.iter().flatten().all(|&s| s >= 0.0));
         let summary = me.bucket_summary();
         assert_eq!(summary.len(), 1);
-        assert_eq!(summary[0].0, 4);
-        assert_eq!(summary[0].2, 1);
+        assert_eq!(summary[0].bucket, 4);
+        assert_eq!(summary[0].batches, 1);
+        assert!(summary[0].mean_host_ms >= 0.0);
+        assert!(summary[0].mean_queue_wait_ms >= 0.0);
         // profilers observed the run: scaled models exist per fog
         let scaled = me.scaled_omegas();
         assert_eq!(scaled.len(), 2);
@@ -196,7 +255,7 @@ mod tests {
         let omegas = vec![PerfModel::uncalibrated(); 2];
         let mut me = MeasuredExec::new(
             &g, &assignment, 2, "astgcn", "tinypems", &g.features, ft,
-            0, &omegas, &mut eng,
+            0, &omegas, &mut eng, 1,
         )
         .unwrap();
         let lhs = me.run_batch(2);

@@ -19,7 +19,7 @@ pub mod slo;
 
 pub use arrival::{ArrivalKind, ArrivalProcess};
 pub use batcher::{bucket, BatchPolicy, MicroBatcher};
-pub use measured::MeasuredExec;
+pub use measured::{BucketRow, MeasuredExec};
 pub use sim::{doc_json, report_json, run_loadtest, ExecMode,
               LoadtestReport, TrafficConfig};
 pub use slo::{LatencySummary, QueueTimeline, SloReport};

@@ -50,7 +50,7 @@ use crate::util::json::{arr, num, obj, s, Json};
 
 use super::arrival::{ArrivalKind, ArrivalProcess};
 use super::batcher::{bucket, BatchPolicy, MicroBatcher};
-use super::measured::MeasuredExec;
+use super::measured::{BucketRow, MeasuredExec};
 use super::slo::{QueueTimeline, SloReport};
 
 /// How the loop prices per-batch execution (see module docs).
@@ -112,6 +112,10 @@ pub struct TrafficConfig {
     /// Analytic ω-model pricing (default) or measured per-batch kernel
     /// execution.
     pub exec: ExecMode,
+    /// Worker-group width the largest fog partition gets in measured
+    /// mode (`--kernel-threads`; 1 = no intra-fog sharding). Analytic
+    /// pricing ignores it.
+    pub kernel_threads: usize,
 }
 
 impl TrafficConfig {
@@ -138,6 +142,7 @@ impl Default for TrafficConfig {
             scheduler_period_s: 5.0,
             background_load: true,
             exec: ExecMode::Analytic,
+            kernel_threads: 1,
         }
     }
 }
@@ -162,9 +167,15 @@ pub struct LoadtestReport {
     /// Engine behind the run ("csr-batched" for measured mode, else
     /// the analytic model over the grounding engine).
     pub engine: String,
-    /// Measured (bucket, mean batch ms, batches) rows — empty in
-    /// analytic mode.
-    pub bucket_host_ms: Vec<(usize, f64, usize)>,
+    /// Measured per-bucket rows (kernel ms and pool queue-wait ms
+    /// separated) — empty in analytic mode.
+    pub bucket_host_ms: Vec<BucketRow>,
+    /// Worker-group width the measured pool was built with (1 in
+    /// analytic mode).
+    pub kernel_threads: usize,
+    /// SIMD path the one-time kernel dispatcher picked
+    /// ("avx2+fma" | "sse2-baseline").
+    pub simd: String,
 }
 
 fn scaled_model(m: &PerfModel, k: f64) -> PerfModel {
@@ -244,6 +255,12 @@ pub fn run_loadtest(
         base_wire_bytes: base.wire_bytes,
         exec_mode: traffic.exec,
         engine: engine.backend_name().to_string(),
+        kernel_threads: if traffic.exec == ExecMode::Measured {
+            traffic.kernel_threads.max(1)
+        } else {
+            1
+        },
+        simd: crate::runtime::kernels::simd::name().to_string(),
         ..Default::default()
     };
     report.slo.slo_s = traffic.slo_s;
@@ -259,6 +276,7 @@ pub fn run_loadtest(
             Some(MeasuredExec::new(
                 g, &assignment, n, &opts.model, spec.name, &payload,
                 dims, spec.classes, omegas, engine,
+                traffic.kernel_threads.max(1),
             )?)
         } else {
             None
@@ -528,13 +546,19 @@ pub fn report_json(label: &str, traffic: &TrafficConfig,
         ("wire_bytes", num(r.base_wire_bytes as f64)),
         ("exec", s(r.exec_mode.name())),
         ("engine", s(&r.engine)),
+        ("kernel_threads", num(r.kernel_threads as f64)),
+        ("simd", s(&r.simd)),
         (
             "measured_buckets",
-            arr(r.bucket_host_ms.iter().map(|&(b, ms, c)| {
+            arr(r.bucket_host_ms.iter().map(|row| {
                 obj(vec![
-                    ("bucket", num(b as f64)),
-                    ("mean_host_ms", num(ms)),
-                    ("batches", num(c as f64)),
+                    ("bucket", num(row.bucket as f64)),
+                    ("mean_host_ms", num(row.mean_host_ms)),
+                    (
+                        "mean_queue_wait_ms",
+                        num(row.mean_queue_wait_ms),
+                    ),
+                    ("batches", num(row.batches as f64)),
                 ])
             })),
         ),
@@ -742,11 +766,14 @@ mod tests {
         assert!(r.slo.completed > 0);
         assert!(!r.bucket_host_ms.is_empty(),
                 "measured buckets recorded");
-        for &(b, ms, c) in &r.bucket_host_ms {
-            assert!(b.is_power_of_two());
-            assert!(ms >= 0.0);
-            assert!(c > 0);
+        for row in &r.bucket_host_ms {
+            assert!(row.bucket.is_power_of_two());
+            assert!(row.mean_host_ms >= 0.0);
+            assert!(row.mean_queue_wait_ms >= 0.0);
+            assert!(row.batches > 0);
         }
+        assert_eq!(r.kernel_threads, 1);
+        assert!(!r.simd.is_empty());
         // measured latencies are strictly positive wall-clock sums
         assert!(r.latencies.iter().all(|&l| l > 0.0));
         let j = report_json("measured", &traffic, &r);
@@ -754,6 +781,32 @@ mod tests {
         assert_eq!(j.get("engine").unwrap().as_str(),
                    Some("csr-batched"));
         assert!(j.get("measured_buckets").is_some());
+        assert_eq!(j.get("kernel_threads").unwrap().as_usize(),
+                   Some(1));
+        assert!(j.get("simd").unwrap().as_str().is_some());
+    }
+
+    #[test]
+    fn measured_exec_with_kernel_threads_runs() {
+        let (g, spec) = tiny();
+        let (cluster, opts, omegas) = fog_setup(&g);
+        let mut eng = engine();
+        let traffic = TrafficConfig {
+            rps: 60.0,
+            duration_s: 2.0,
+            seed: 42,
+            exec: ExecMode::Measured,
+            kernel_threads: 2,
+            ..Default::default()
+        };
+        let r = run_loadtest(&g, &spec, &cluster, &opts, &traffic,
+                             &omegas, &mut eng)
+            .unwrap();
+        assert_eq!(r.kernel_threads, 2);
+        assert!(r.slo.completed > 0);
+        let j = report_json("measured", &traffic, &r);
+        assert_eq!(j.get("kernel_threads").unwrap().as_usize(),
+                   Some(2));
     }
 
     #[test]

@@ -64,6 +64,26 @@ impl Args {
     }
 }
 
+/// Upper bound for `--kernel-threads`: generous headroom over any sane
+/// host core count while still catching typos like 5000.
+pub const MAX_KERNEL_THREADS: usize = 64;
+
+/// Validated `--kernel-threads` (default 1 = no intra-fog sharding).
+/// 0, non-numeric and absurd values are errors, so callers can exit
+/// with CLI code 2 instead of silently falling back to a default.
+pub fn parse_kernel_threads(args: &Args) -> Result<usize, String> {
+    match args.get("kernel-threads") {
+        None => Ok(1),
+        Some(v) => match v.parse::<usize>() {
+            Ok(k) if (1..=MAX_KERNEL_THREADS).contains(&k) => Ok(k),
+            _ => Err(format!(
+                "--kernel-threads must be an integer in \
+                 1..={MAX_KERNEL_THREADS} (got {v})"
+            )),
+        },
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -97,5 +117,18 @@ mod tests {
     fn equals_form_always_has_value() {
         let a = Args::parse(&v(&["--x=--weird"]), &[]);
         assert_eq!(a.get("x"), Some("--weird"));
+    }
+
+    #[test]
+    fn kernel_threads_validation() {
+        let ok = |xs: &[&str]| parse_kernel_threads(&Args::parse(
+            &v(xs), &[]));
+        assert_eq!(ok(&[]), Ok(1));
+        assert_eq!(ok(&["--kernel-threads", "4"]), Ok(4));
+        assert_eq!(ok(&["--kernel-threads=64"]), Ok(64));
+        assert!(ok(&["--kernel-threads", "0"]).is_err());
+        assert!(ok(&["--kernel-threads", "65"]).is_err());
+        assert!(ok(&["--kernel-threads", "many"]).is_err());
+        assert!(ok(&["--kernel-threads", "-2"]).is_err());
     }
 }

@@ -5,15 +5,24 @@
 //! per-request execution. The tiled/blocked kernels
 //! (`runtime::kernels`) must agree with their naive baselines across
 //! random shapes (including non-multiples of the tile sizes and empty
-//! rows), and pool-executed BSP must equal the serial oracle
-//! bit-for-bit.
+//! rows), pool-executed BSP must equal the serial oracle bit-for-bit,
+//! intra-fog row-sharded execution must be bitwise identical to the
+//! unsharded path for ANY shard width / batch size (row-decomposition
+//! invariance), and the runtime-dispatched AVX2+FMA micro-kernels must
+//! agree with the portable scalar kernels within 1e-5 when the feature
+//! is detected.
 
 use std::sync::Arc;
 
 use fograph::exec::{self, BatchedBspPlan};
 use fograph::graph::{generate, subgraph, Graph};
-use fograph::runtime::csr_backend::{run_layer_csr, CsrPartition};
-use fograph::runtime::kernels::{gemm, spmm};
+use fograph::runtime::csr_backend::{in_neighbor_lists,
+                                    run_astgcn_csr,
+                                    run_astgcn_csr_sharded,
+                                    run_layer_csr,
+                                    run_layer_csr_sharded,
+                                    CsrPartition};
+use fograph::runtime::kernels::{gemm, simd, spmm, ShardExec};
 use fograph::runtime::{pad, EdgeArrays, Engine, EngineKind,
                        WeightBundle};
 use fograph::util::rng::Rng;
@@ -333,7 +342,9 @@ fn blocked_spmm_matches_naive_across_random_structures() {
 }
 
 /// Pool-executed BSP must equal the spawn-free serial oracle
-/// bit-for-bit (same kernels, same order, only the threading differs).
+/// bit-for-bit (same kernels, same order, only the threading differs)
+/// — and the intra-fog sharded pool (`--kernel-threads 4`) must equal
+/// BOTH, at a batch size that genuinely splits rows.
 #[test]
 fn pooled_bsp_equals_serial_oracle_bitwise() {
     let g = seeded_graph();
@@ -350,5 +361,232 @@ fn pooled_bsp_equals_serial_oracle_bitwise() {
         assert_eq!(pooled.outputs, serial.outputs,
                    "{model}: pooled != serial");
         assert_eq!(pooled.sync_bytes, serial.sync_bytes);
+        // 100 owned rows per fog × batch 8 clears the shard threshold
+        let sharded =
+            BatchedBspPlan::with_threads(&g, &assignment, 3, model, 4)
+                .unwrap();
+        let pooled8 = plan.execute(&g.features, f_in, &wb, 8);
+        let sharded8 = sharded.execute(&g.features, f_in, &wb, 8);
+        let sharded8s =
+            sharded.execute_serial(&g.features, f_in, &wb, 8);
+        assert_eq!(sharded8.outputs, pooled8.outputs,
+                   "{model}: sharded pool != single-threaded pool");
+        assert_eq!(sharded8.outputs, sharded8s.outputs,
+                   "{model}: sharded pool != its serial oracle");
+    }
+}
+
+/// Row-sharded layer execution must be bitwise identical to the
+/// unsharded path for ANY shard width and batch size — the shard
+/// widths pick different contiguous split points, and
+/// row-decomposition invariance makes every one of them exact.
+#[test]
+fn sharded_layer_bitwise_equals_unsharded_across_widths() {
+    let g = seeded_graph();
+    let f_in = g.feature_dim;
+    // one fog owning everything: the case intra-fog sharding exists for
+    let (subs, _) =
+        subgraph::extract(&g, &vec![0; g.num_vertices()], 1);
+    for model in ["gcn", "sage", "gat"] {
+        let wb = Arc::new(synth_weights(model, f_in));
+        let edges = pad::prep_edges(model, &subs[0]).unwrap();
+        let csr = Arc::new(CsrPartition::from_edges(&edges));
+        let n = subs[0].n_total();
+        let mut rng = Rng::new(0x5AA + f_in as u64);
+        for batch in [1usize, 2, 5] {
+            let h: Vec<f32> = (0..batch * n * f_in)
+                .map(|_| rng.normal_f32(0.0, 1.0))
+                .collect();
+            let unsharded = run_layer_csr(model, 0, &wb, &h, f_in,
+                                          &csr, false, batch)
+                .unwrap();
+            let h = Arc::new(h);
+            for width in [2usize, 3, 4, 7] {
+                let exec = ShardExec::Inline(width);
+                let sharded = run_layer_csr_sharded(
+                    model, 0, &wb, &h, f_in, &csr, false, batch,
+                    &exec,
+                )
+                .unwrap();
+                assert_eq!(
+                    sharded, unsharded,
+                    "{model} batch={batch} width={width}: sharded \
+                     deviates"
+                );
+            }
+        }
+    }
+}
+
+/// Same invariant for the ASTGCN block: sharded projections +
+/// attention combine reproduce the per-block serial loop bit-for-bit.
+#[test]
+fn sharded_astgcn_bitwise_equals_unsharded() {
+    let (mut g, _) = generate::sbm(600, 2400, 4, 0.8, 15);
+    let ft = 36;
+    let mut rng = Rng::new(0xA57);
+    g.features =
+        (0..600 * ft).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    g.feature_dim = ft;
+    let sub = Arc::new(subgraph::extract(&g, &vec![0; 600], 1).0
+        .remove(0));
+    let n = sub.n_total();
+    let wb = Arc::new(
+        engine(EngineKind::Reference)
+            .weights("astgcn", "tinypems", ft, 0)
+            .clone(),
+    );
+    let batch = 2;
+    let x: Vec<f32> = (0..batch * n * ft)
+        .map(|_| rng.normal_f32(0.0, 1.0))
+        .collect();
+    let mut unsharded = Vec::new();
+    for bk in 0..batch {
+        unsharded.extend(run_astgcn_csr(
+            &wb,
+            &x[bk * n * ft..(bk + 1) * n * ft],
+            n,
+            ft,
+            &sub,
+        ));
+    }
+    let x = Arc::new(x);
+    let nbr = Arc::new(in_neighbor_lists(&sub, n));
+    for width in [2usize, 4] {
+        let exec = ShardExec::Inline(width);
+        let sharded = run_astgcn_csr_sharded(&wb, &x, n, ft, &nbr,
+                                             batch, &exec);
+        assert_eq!(sharded, unsharded,
+                   "astgcn width={width}: sharded deviates");
+    }
+}
+
+/// AVX2-vs-scalar parity within 1e-5 relative across random shapes —
+/// exercised only when the runtime dispatcher detected the feature
+/// (skipped otherwise: both paths would be the same code).
+#[test]
+fn avx2_kernels_match_scalar_within_tolerance() {
+    if !simd::avx2_active() {
+        eprintln!("avx2+fma not detected ({}): parity test skipped",
+                  simd::name());
+        return;
+    }
+    let mut rng = Rng::new(0xA5A5);
+    for trial in 0..40 {
+        let n = 1 + rng.usize_below(60);
+        let fi = 1 + rng.usize_below(120);
+        let fo = 1 + rng.usize_below(100);
+        let zero_p = if trial % 2 == 0 { 0.0 } else { 0.5 };
+        let x: Vec<f32> = (0..n * fi)
+            .map(|_| {
+                if zero_p > 0.0 && rng.bool(zero_p) {
+                    0.0
+                } else {
+                    rng.normal_f32(0.0, 0.3)
+                }
+            })
+            .collect();
+        let w: Vec<f32> =
+            (0..fi * fo).map(|_| rng.normal_f32(0.0, 0.3)).collect();
+        let b: Vec<f32> =
+            (0..fo).map(|_| rng.normal_f32(0.0, 0.5)).collect();
+        let dispatched = gemm::gemm_bias(&x, n, fi, &w, fo, &b);
+        let mut scalar = vec![0f32; n * fo];
+        gemm::gemm_bias_into_scalar(&x, n, fi, &w, fo, &b,
+                                    &mut scalar);
+        for (i, (a, e)) in dispatched.iter().zip(&scalar).enumerate() {
+            let tol = 1e-5 * (1.0 + a.abs().max(e.abs()));
+            assert!(
+                (a - e).abs() <= tol,
+                "gemm trial {trial} ({n}x{fi}x{fo}) elem {i}: {a} vs \
+                 {e}"
+            );
+        }
+    }
+    for trial in 0..20 {
+        let l = 1 + rng.usize_below(100);
+        let n = l + rng.usize_below(30);
+        let ne = rng.usize_below(6 * l + 1);
+        let mut src = Vec::with_capacity(ne);
+        let mut dst = Vec::with_capacity(ne);
+        let mut ew = Vec::with_capacity(ne);
+        for _ in 0..ne {
+            src.push(rng.usize_below(n) as u32);
+            dst.push(rng.usize_below(l) as u32);
+            ew.push(match rng.usize_below(4) {
+                0 => 1.0,
+                1 => 0.0,
+                _ => rng.normal_f32(0.5, 0.3),
+            });
+        }
+        let edges = EdgeArrays {
+            src,
+            dst,
+            ew,
+            inv_deg: vec![1.0; l],
+            n,
+            n_local: l,
+        };
+        let csr = CsrPartition::from_edges(&edges);
+        let f = 1 + rng.usize_below(150);
+        let h: Vec<f32> =
+            (0..n * f).map(|_| rng.normal_f32(0.0, 0.5)).collect();
+        // the AVX2 SpMM kernel is kept in-tree but NOT dispatched
+        // (measured even with the portable kernel — spmm.rs design
+        // note); parity must hold regardless
+        let mut avx2 = vec![0f32; l * f];
+        assert!(
+            simd::try_csr_spmm_rows_into(&csr, &h, f, 0, l, &mut avx2),
+            "avx2_active but spmm hook declined"
+        );
+        let scalar = spmm::csr_spmm(&csr, &h, f);
+        for (i, (a, e)) in avx2.iter().zip(&scalar).enumerate() {
+            let tol = 1e-5 * (1.0 + a.abs().max(e.abs()));
+            assert!(
+                (a - e).abs() <= tol,
+                "spmm trial {trial} (l={l} f={f}) elem {i}: {a} vs {e}"
+            );
+        }
+    }
+}
+
+/// Random row-split points stitched back together must equal the
+/// full-matrix kernels bit-for-bit (the direct statement of
+/// row-decomposition invariance, independent of `split_rows`).
+#[test]
+fn random_row_splits_stitch_bitwise() {
+    let mut rng = Rng::new(0x517C);
+    for trial in 0..30 {
+        let n = 4 + rng.usize_below(60);
+        let fi = 1 + rng.usize_below(80);
+        let fo = 1 + rng.usize_below(60);
+        let x: Vec<f32> = (0..n * fi)
+            .map(|_| {
+                if rng.bool(0.3) {
+                    0.0
+                } else {
+                    rng.normal_f32(0.0, 0.3)
+                }
+            })
+            .collect();
+        let w: Vec<f32> =
+            (0..fi * fo).map(|_| rng.normal_f32(0.0, 0.3)).collect();
+        let b: Vec<f32> =
+            (0..fo).map(|_| rng.normal_f32(0.0, 0.5)).collect();
+        let full = gemm::gemm_bias(&x, n, fi, &w, fo, &b);
+        // random number of random cut points
+        let mut cuts = vec![0usize, n];
+        for _ in 0..rng.usize_below(4) {
+            cuts.push(rng.usize_below(n));
+        }
+        cuts.sort_unstable();
+        cuts.dedup();
+        let mut stitched = Vec::with_capacity(n * fo);
+        for pair in cuts.windows(2) {
+            stitched.extend(gemm::gemm_bias_rows(&x, fi, &w, fo, &b,
+                                                 pair[0], pair[1]));
+        }
+        assert_eq!(full, stitched,
+                   "gemm trial {trial}: random splits {cuts:?} deviate");
     }
 }
