@@ -23,8 +23,8 @@ use std::sync::Arc;
 use crate::graph::{subgraph, ExchangePlan, Graph, LocalGraph};
 use crate::runtime::csr_backend::{in_neighbor_lists, CsrPartition,
                                   InNbrLists};
-use crate::runtime::kernels::{FogJob, FogStructures, FogWorkerPool,
-                              KernelScratch, ShardExec};
+use crate::runtime::kernels::{group_widths, FogJob, FogKernel,
+                              FogWorkerPool, KernelScratch, ShardExec};
 use crate::runtime::{engine::EngineError, EdgeArrays, Engine,
                      WeightBundle};
 
@@ -56,6 +56,29 @@ pub struct BspResult {
 /// of the partition, so the batched plan precomputes it once and the
 /// per-batch sync pays no structure rebuild.
 type HaloIndex = Vec<std::collections::HashMap<u32, usize>>;
+
+/// Shared plan-construction validation: known model, sane width. The
+/// width bound holds on the library path too, not just CLI parsing —
+/// an absurd value would otherwise panic mid-run spawning
+/// n_fogs × (threads - 1) helper threads.
+fn validate_plan_inputs(model: &str, kernel_threads: usize)
+                        -> Result<(), EngineError> {
+    if !matches!(model, "gcn" | "sage" | "gat" | "astgcn") {
+        return Err(EngineError::Unsupported(format!(
+            "measured batched BSP supports gcn|gat|sage|astgcn, \
+             not {model}"
+        )));
+    }
+    if kernel_threads == 0
+        || kernel_threads > crate::util::cli::MAX_KERNEL_THREADS
+    {
+        return Err(EngineError::Unsupported(format!(
+            "kernel_threads must be in 1..={} (got {kernel_threads})",
+            crate::util::cli::MAX_KERNEL_THREADS
+        )));
+    }
+    Ok(())
+}
 
 fn build_halo_index<S: Borrow<LocalGraph>>(subs: &[S]) -> HaloIndex {
     subs.iter()
@@ -258,6 +281,13 @@ pub fn run(
 /// extraction or thread start-up. Covers every model: gcn|gat|sage run
 /// the batched CSR layer kernels; astgcn runs the sparse-attention
 /// block per batch block.
+///
+/// The pool is held behind an `Arc` and the workers are
+/// structure-free (jobs carry their structures), so multiple plans —
+/// the multi-tenant fabric's plan cache holds one per distinct
+/// `(model, dataset)` — share one set of threads
+/// (`with_shared_pool`), and a replan's `rebuild` swaps partition
+/// structures without respawning a thread.
 pub struct BatchedBspPlan {
     pub subs: Vec<Arc<LocalGraph>>,
     pub plan: ExchangePlan,
@@ -268,9 +298,9 @@ pub struct BatchedBspPlan {
     /// Built once here so the per-batch hot path (and the measured
     /// timings it produces) never pays the O(V + E) counting sort.
     nbrs: Vec<Arc<InNbrLists>>,
-    pool: FogWorkerPool,
+    pool: Arc<FogWorkerPool>,
     halo_index: HaloIndex,
-    model: String,
+    model: Arc<str>,
     n_fogs: usize,
     nv: usize,
     kernel_threads: usize,
@@ -286,27 +316,48 @@ impl BatchedBspPlan {
 
     /// `kernel_threads` is the worker-group width the largest
     /// partition gets; smaller fogs get proportionally fewer workers
-    /// (`kernels::pool::group_widths`).
+    /// (`kernels::pool::group_widths`). Builds a private pool; use
+    /// `with_shared_pool` to reuse another plan's threads.
     pub fn with_threads(g: &Graph, assignment: &[u32], n_fogs: usize,
                         model: &str, kernel_threads: usize)
                         -> Result<BatchedBspPlan, EngineError> {
-        if !matches!(model, "gcn" | "sage" | "gat" | "astgcn") {
+        validate_plan_inputs(model, kernel_threads)?;
+        let mut volumes = vec![0usize; n_fogs];
+        for &a in assignment {
+            volumes[a as usize] += 1;
+        }
+        let pool = Arc::new(FogWorkerPool::with_widths(group_widths(
+            &volumes,
+            kernel_threads,
+        )));
+        BatchedBspPlan::with_shared_pool(g, assignment, n_fogs, model,
+                                         kernel_threads, pool)
+    }
+
+    /// Build a plan on an EXISTING pool (one thread set shared across
+    /// every plan holding the handle). The pool must have one worker
+    /// per fog; shard widths are the pool's — kernels are
+    /// row-decomposition invariant, so outputs are identical for any
+    /// widths, only the parallel speedup differs.
+    pub fn with_shared_pool(g: &Graph, assignment: &[u32],
+                            n_fogs: usize, model: &str,
+                            kernel_threads: usize,
+                            pool: Arc<FogWorkerPool>)
+                            -> Result<BatchedBspPlan, EngineError> {
+        validate_plan_inputs(model, kernel_threads)?;
+        if pool.len() != n_fogs {
             return Err(EngineError::Unsupported(format!(
-                "measured batched BSP supports gcn|gat|sage|astgcn, \
-                 not {model}"
+                "shared pool has {} workers but the placement has \
+                 {n_fogs} fogs",
+                pool.len()
             )));
         }
-        // bound on the library path too, not just CLI parsing: an
-        // absurd width would otherwise panic mid-run spawning
-        // n_fogs × (threads - 1) helper threads
-        if kernel_threads == 0
-            || kernel_threads > crate::util::cli::MAX_KERNEL_THREADS
-        {
-            return Err(EngineError::Unsupported(format!(
-                "kernel_threads must be in 1..={} (got \
-                 {kernel_threads})",
-                crate::util::cli::MAX_KERNEL_THREADS
-            )));
+        if pool.is_poisoned() {
+            return Err(EngineError::Unsupported(
+                "shared pool was poisoned by an earlier worker panic; \
+                 build the plan on a fresh pool"
+                    .to_string(),
+            ));
         }
         let (subs, plan) = subgraph::extract(g, assignment, n_fogs);
         let subs: Vec<Arc<LocalGraph>> =
@@ -328,15 +379,6 @@ impl BatchedBspPlan {
         } else {
             Vec::new()
         };
-        let fogs: Vec<FogStructures> = subs
-            .iter()
-            .enumerate()
-            .map(|(j, s)| {
-                (s.clone(), csrs.get(j).cloned(), nbrs.get(j).cloned())
-            })
-            .collect();
-        let pool =
-            FogWorkerPool::with_threads(model, fogs, kernel_threads);
         let halo_index = build_halo_index(&subs);
         Ok(BatchedBspPlan {
             subs,
@@ -345,7 +387,7 @@ impl BatchedBspPlan {
             nbrs,
             pool,
             halo_index,
-            model: model.to_string(),
+            model: Arc::from(model),
             n_fogs,
             nv: g.num_vertices(),
             kernel_threads,
@@ -360,6 +402,12 @@ impl BatchedBspPlan {
     /// per-fog worker-group width).
     pub fn kernel_threads(&self) -> usize {
         self.kernel_threads
+    }
+
+    /// Handle to the persistent worker pool, for building further
+    /// plans over the same threads (`with_shared_pool`).
+    pub fn pool_handle(&self) -> Arc<FogWorkerPool> {
+        self.pool.clone()
     }
 
     /// Per-fog worker-group widths (leader + shard helpers).
@@ -418,22 +466,20 @@ impl BatchedBspPlan {
                     return None;
                 }
                 let state = std::mem::take(&mut states[j]);
-                Some(if self.model == "astgcn" {
-                    FogJob::Astgcn {
-                        ft: f_in,
-                        batch,
-                        state,
-                        weights: wb.clone(),
-                    }
+                let kernel = if &*self.model == "astgcn" {
+                    FogKernel::Astgcn { ft: f_in }
                 } else {
-                    FogJob::Layer {
-                        layer,
-                        dim,
-                        last,
-                        batch,
-                        state,
-                        weights: wb.clone(),
-                    }
+                    FogKernel::Layer { layer, dim, last }
+                };
+                Some(FogJob {
+                    kernel,
+                    model: self.model.clone(),
+                    batch,
+                    state,
+                    weights: wb.clone(),
+                    sub: self.subs[j].clone(),
+                    csr: self.csrs.get(j).cloned(),
+                    nbr: self.nbrs.get(j).cloned(),
                 })
             })
             .collect()
@@ -456,13 +502,9 @@ impl BatchedBspPlan {
                     secs.push(0.0);
                 }
                 Some(job) => {
-                    let csr = self.csrs.get(j);
-                    let nbr = self.nbrs.get(j);
                     let exec =
                         ShardExec::Inline(self.pool.widths()[j]);
-                    let (out, s) =
-                        job.run(&self.model, csr, &self.subs[j], nbr,
-                                &mut scratch, &exec);
+                    let (out, s) = job.run(&mut scratch, &exec);
                     outs.push(out);
                     secs.push(s);
                 }
@@ -476,7 +518,7 @@ impl BatchedBspPlan {
                      assemble_outputs: bool, pooled: bool) -> BspResult {
         assert!(batch >= 1);
         let n_fogs = self.n_fogs;
-        let model = self.model.as_str();
+        let model: &str = &self.model;
         let num_layers = crate::runtime::reference::model_layers(model);
         // initial states: every block carries the same snapshot rows
         let mut states: Vec<Vec<f32>> = self
@@ -749,6 +791,55 @@ mod tests {
         let r = BatchedBspPlan::with_threads(&g, &assignment, 1,
                                              "gcn", 0);
         assert!(r.is_err(), "0 kernel threads is rejected");
+    }
+
+    /// Two plans over different placements sharing ONE pool must each
+    /// produce exactly what a private-pool plan produces — the
+    /// multi-tenant plan-cache contract.
+    #[test]
+    fn shared_pool_plans_match_private_pool_plans() {
+        let (mut g, _) = generate::sbm(200, 800, 3, 0.85, 5);
+        let f_in = 8;
+        let mut rng = crate::util::rng::Rng::new(31);
+        g.features =
+            (0..200 * f_in).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        g.feature_dim = f_in;
+        let dir = std::env::temp_dir().join("bsp_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut eng = Engine::new(EngineKind::Csr, &dir).unwrap();
+        let a2: Vec<u32> = (0..200).map(|v| (v % 2) as u32).collect();
+        let a2b: Vec<u32> =
+            (0..200).map(|v| ((v / 7) % 2) as u32).collect();
+        let wb_g = std::sync::Arc::new(
+            eng.weights("gcn", "tiny", f_in, 3).clone(),
+        );
+        let wb_s = std::sync::Arc::new(
+            eng.weights("sage", "tiny", f_in, 3).clone(),
+        );
+        let base =
+            BatchedBspPlan::with_threads(&g, &a2, 2, "gcn", 2).unwrap();
+        let pool = base.pool_handle();
+        // a second model + a different placement on the SAME pool
+        let shared = BatchedBspPlan::with_shared_pool(
+            &g, &a2b, 2, "sage", 2, pool.clone(),
+        )
+        .unwrap();
+        let private =
+            BatchedBspPlan::with_threads(&g, &a2b, 2, "sage", 2)
+                .unwrap();
+        let rb = base.execute(&g.features, f_in, &wb_g, 4);
+        let rs = shared.execute(&g.features, f_in, &wb_s, 4);
+        let rp = private.execute(&g.features, f_in, &wb_s, 4);
+        assert_eq!(rs.outputs, rp.outputs,
+                   "shared-pool plan deviates from private-pool plan");
+        // interleaving plans on the pool does not cross wires
+        let rb2 = base.execute(&g.features, f_in, &wb_g, 4);
+        assert_eq!(rb.outputs, rb2.outputs);
+        // fog-count mismatch is rejected, not a hang
+        assert!(BatchedBspPlan::with_shared_pool(
+            &g, &a2b, 3, "gcn", 2, pool
+        )
+        .is_err());
     }
 
     /// Intra-fog sharding must not change a single output bit:

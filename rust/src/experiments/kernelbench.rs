@@ -25,12 +25,14 @@ use std::sync::Arc;
 use crate::exec::BatchedBspPlan;
 use crate::graph::{generate, subgraph};
 use crate::runtime::csr_backend::CsrPartition;
-use crate::runtime::kernels::shard::{split_rows, ShardClosure,
-                                     ShardExec, ShardGroup};
+use crate::runtime::kernels::shard::{min_rows_per_shard, split_rows,
+                                     ShardClosure, ShardExec,
+                                     ShardGroup};
 use crate::runtime::kernels::{gemm, simd, spmm};
 use crate::runtime::{pad, Engine, EngineKind};
 use crate::util::cli::{parse_kernel_threads, Args};
 use crate::util::json::{arr, num, obj, s, Json};
+use crate::util::provenance::{git_rev, utc_date_string};
 use crate::util::rng::Rng;
 use crate::util::timer::{bench, black_box};
 
@@ -96,38 +98,6 @@ fn spmm_sharded(exec: &ShardExec<'_>, csr: &Arc<CsrPartition>,
     out
 }
 
-/// UTC civil date from the system clock, YYYY-MM-DD (no chrono
-/// offline; Hinnant's days-to-civil algorithm).
-fn utc_date_string() -> String {
-    let secs = std::time::SystemTime::now()
-        .duration_since(std::time::UNIX_EPOCH)
-        .map(|d| d.as_secs())
-        .unwrap_or(0);
-    let z = (secs / 86_400) as i64 + 719_468;
-    let era = z.div_euclid(146_097);
-    let doe = z.rem_euclid(146_097);
-    let yoe = (doe - doe / 1460 + doe / 36_524 - doe / 146_096) / 365;
-    let doy = doe - (365 * yoe + yoe / 4 - yoe / 100);
-    let mp = (5 * doy + 2) / 153;
-    let d = doy - (153 * mp + 2) / 5 + 1;
-    let m = if mp < 10 { mp + 3 } else { mp - 9 };
-    let y = yoe + era * 400 + i64::from(m <= 2);
-    format!("{y:04}-{m:02}-{d:02}")
-}
-
-/// Short git revision, or "unknown" outside a work tree.
-fn git_rev() -> String {
-    std::process::Command::new("git")
-        .args(["rev-parse", "--short", "HEAD"])
-        .output()
-        .ok()
-        .filter(|o| o.status.success())
-        .and_then(|o| String::from_utf8(o.stdout).ok())
-        .map(|s| s.trim().to_string())
-        .filter(|s| !s.is_empty())
-        .unwrap_or_else(|| "unknown".to_string())
-}
-
 pub fn cmd(args: &Args) -> i32 {
     let smoke = args.has("smoke");
     let out_path = args.get_or("out", "BENCH_kernels.json");
@@ -149,8 +119,12 @@ pub fn cmd(args: &Args) -> i32 {
     };
     // smoke keeps CI turnaround low; full runs settle the timings
     let min_s = if smoke { 0.08 } else { 0.5 };
+    // the active shard floor (FOGRAPH_MIN_ROWS_PER_SHARD override or
+    // the default); main() has already rejected invalid values
+    let min_rows = min_rows_per_shard();
     println!(
-        "== kernel bench ({}, simd={}, kernel-threads<={max_threads}) ==",
+        "== kernel bench ({}, simd={}, kernel-threads<={max_threads}, \
+         min-rows-per-shard={min_rows}) ==",
         if smoke { "smoke" } else { "full" },
         simd::name()
     );
@@ -648,6 +622,7 @@ pub fn cmd(args: &Args) -> i32 {
         ("smoke", Json::Bool(smoke)),
         ("simd", s(simd::name())),
         ("kernel_threads", num(max_threads as f64)),
+        ("min_rows_per_shard", num(min_rows as f64)),
         ("gemm", arr(gemm_rows)),
         ("spmm", arr(spmm_rows)),
         ("simd_margin", arr(simd_rows)),
@@ -695,6 +670,7 @@ pub fn cmd(args: &Args) -> i32 {
         ("smoke", Json::Bool(smoke)),
         ("simd", s(simd::name())),
         ("kernel_threads", num(max_threads as f64)),
+        ("min_rows_per_shard", num(min_rows as f64)),
         ("gemm_speedups", obj(gentries)),
         ("spmm_speedups", obj(sentries)),
         ("fog_batched_speedup", num(fog_speedup)),

@@ -10,21 +10,31 @@
 //!   exp            regenerate a paper table/figure (see experiments/)
 //!   list           list datasets, artifacts and experiments
 
+use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
 use fograph::experiments;
 use fograph::graph::{datasets, io as gio, DatasetSpec, Graph};
 use fograph::net::NetKind;
 use fograph::profile::PerfModel;
+use fograph::runtime::kernels::shard;
 use fograph::runtime::{reference, Engine, EngineKind};
 use fograph::serving::{self, pipeline};
-use fograph::traffic::{doc_json, report_json, run_loadtest, ArrivalKind,
-                       BatchPolicy, ExecMode, LoadtestReport,
+use fograph::traffic::{doc_json, fabric_json, report_json, run_fabric,
+                       run_loadtest, ArrivalKind, BatchPolicy,
+                       ExecMode, FabricReport, FairPolicy,
+                       LoadtestReport, TenantInput, TenantSpec,
                        TrafficConfig};
 use fograph::util::cli::Args;
 use fograph::util::json::Json;
 
 fn main() {
+    // a bad FOGRAPH_MIN_ROWS_PER_SHARD must be a loud exit-2 before
+    // any kernel latches the default, not a silent fallback
+    if let Err(e) = shard::min_rows_per_shard_env() {
+        eprintln!("{e}");
+        std::process::exit(2);
+    }
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = Args::parse(&argv, &["verbose", "keep-outputs", "gpu",
                                     "spill", "no-background-load",
@@ -63,6 +73,7 @@ USAGE:
                  [--batch-max N] [--batch-deadline-ms MS]
                  [--queue-cap N] [--spill] [--no-background-load]
                  [--scheduler-period SECONDS] [--out BENCH_loadtest.json]
+                 [--tenant k=v,... (repeatable)] [--fair drr|fifo]
   repro bench-kernels [--smoke] [--kernel-threads K]
                  [--out BENCH_kernels.json]
                  [--history BENCH_history.jsonl]
@@ -87,13 +98,30 @@ EXEC MODES (loadtest only):
             timings into the online profiler, so mid-run replans use
             observed costs; all models incl. astgcn
 
+MULTI-TENANT (loadtest only):
+  each repeatable --tenant declares one workload sharing the fog
+  cluster: comma-separated key=value with keys
+    name|model|dataset|arrival|rps|weight|slo-ms|seed|queue-cap
+  unset keys inherit the legacy flags. Tenants get their own admission
+  queues; released batches are arbitrated by deficit-round-robin
+  weighted-fair queuing (--fair drr, default) so one tenant's burst
+  cannot starve another's SLO, or by a shared-FIFO control (--fair
+  fifo). One plan per distinct (model, dataset) is built and cached;
+  all plans share one --kernel-threads worker-pool budget. Per-tenant
+  p50/p95/p99/goodput/shed plus a Jain fairness index land in
+  BENCH_loadtest.json.
+  Example: --tenant name=hi,model=gcn,arrival=bursty,rps=300,weight=4
+           --tenant name=lo,model=sage,rps=50,weight=1
+
 KERNELS:
   bench-kernels measures the tiled GEMM and blocked SpMM against their
   naive baselines (GFLOP/s, effective GB/s, batched-vs-serial fog exec,
   1/2/4-worker intra-fog thread scaling, the dispatched SIMD path) and
   writes BENCH_kernels.json plus a one-line summary appended to
   BENCH_history.jsonl; --smoke runs a fast parity-checked subset for CI,
-  --kernel-threads caps the scaling curve"
+  --kernel-threads caps the scaling curve. FOGRAPH_MIN_ROWS_PER_SHARD
+  overrides the intra-fog shard floor (rows per shard; validated, the
+  active value is recorded in BENCH_kernels.json/BENCH_history.jsonl)"
     );
 }
 
@@ -309,6 +337,11 @@ fn cmd_loadtest(args: &Args) -> i32 {
         );
         return 2;
     }
+    let fair_name = args.get_or("fair", "drr");
+    let Some(fair) = FairPolicy::parse(fair_name) else {
+        eprintln!("unknown fair policy {fair_name} (expected drr|fifo)");
+        return 2;
+    };
     let mode = args.get_or("mode", "fograph");
     let modes: Vec<&str> = if mode == "all" {
         pipeline::MODES.to_vec()
@@ -318,6 +351,33 @@ fn cmd_loadtest(args: &Args) -> i32 {
         eprintln!("unknown mode {mode}");
         return 2;
     };
+    // repeatable --tenant flags switch the run onto the multi-tenant
+    // fabric; parse (and reject) them before paying for datasets. A
+    // bare `--tenant` (value missing or eaten by the shell) parses as
+    // a switch — that must be a loud error, not a silent fall-back to
+    // the single-tenant path
+    if args.has("tenant") {
+        eprintln!(
+            "--tenant requires a spec value (e.g. --tenant \
+             model=gcn,rps=100,weight=2)"
+        );
+        return 2;
+    }
+    let tenant_flags = args.get_all("tenant");
+    if !tenant_flags.is_empty() {
+        let mut specs = Vec::new();
+        for raw in &tenant_flags {
+            match TenantSpec::parse(raw) {
+                Ok(s) => specs.push(s),
+                Err(e) => {
+                    eprintln!("{e}");
+                    return 2;
+                }
+            }
+        }
+        return cmd_loadtest_fabric(args, &traffic, fair, &modes,
+                                   &specs);
+    }
     let (spec, g, model, net) = match resolve_run_inputs(args) {
         Ok(x) => x,
         Err(code) => return code,
@@ -358,6 +418,207 @@ fn cmd_loadtest(args: &Args) -> i32 {
         }
     }
     0
+}
+
+/// The multi-tenant loadtest path: resolve every `--tenant` spec
+/// against the legacy flags, load each distinct dataset once, and run
+/// the serving fabric per mode.
+fn cmd_loadtest_fabric(args: &Args, traffic: &TrafficConfig,
+                       fair: FairPolicy, modes: &[&str],
+                       specs: &[TenantSpec]) -> i32 {
+    let default_model = args.get_or("model", "gcn").to_string();
+    let default_dataset = args.get_or("dataset", "siot").to_string();
+    let tenants: Vec<fograph::traffic::Tenant> = specs
+        .iter()
+        .map(|s| s.resolve(traffic, &default_model, &default_dataset))
+        .collect();
+    for t in &tenants {
+        if !reference::known_model(&t.model) {
+            eprintln!(
+                "tenant {}: unknown model {} (expected one of {})",
+                t.name,
+                t.model,
+                reference::KNOWN_MODELS.join("|")
+            );
+            return 2;
+        }
+    }
+    let mut names: Vec<&str> =
+        tenants.iter().map(|t| t.name.as_str()).collect();
+    names.sort_unstable();
+    for w in names.windows(2) {
+        if w[0] == w[1] {
+            eprintln!(
+                "duplicate tenant name {:?}: set name=... to \
+                 distinguish tenants sharing a (model, dataset)",
+                w[0]
+            );
+            return 2;
+        }
+    }
+    let net = match resolve_net(args) {
+        Ok(n) => n,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    // one load per distinct dataset, shared by its tenants
+    let data_dir = PathBuf::from(args.get_or("data", "data"));
+    let mut packs: BTreeMap<String, (DatasetSpec, Graph)> =
+        BTreeMap::new();
+    for t in &tenants {
+        if packs.contains_key(&t.dataset) {
+            continue;
+        }
+        let Some(spec) = datasets::spec_by_name(&t.dataset) else {
+            eprintln!("tenant {}: unknown dataset {}", t.name,
+                      t.dataset);
+            return 2;
+        };
+        match datasets::load_or_generate(&data_dir, &t.dataset) {
+            Ok(g) => {
+                packs.insert(t.dataset.clone(), (spec, g));
+            }
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        }
+    }
+    let mut engine = make_engine(args);
+    let mut runs: Vec<Json> = Vec::new();
+    for m in modes {
+        let mut inputs: Vec<TenantInput<'_>> = Vec::new();
+        let mut cluster = None;
+        for t in &tenants {
+            let (spec, g) = &packs[&t.dataset];
+            let Some((cl, opts)) =
+                pipeline::mode_setup(m, &t.model, net, g)
+            else {
+                eprintln!("unknown mode {m}");
+                return 2;
+            };
+            let omegas =
+                vec![PerfModel::uncalibrated_for(&t.model); cl.len()];
+            if cluster.is_none() {
+                // the cluster is a property of (mode, net), identical
+                // across tenants
+                cluster = Some(cl);
+            }
+            inputs.push(TenantInput {
+                tenant: t.clone(),
+                g,
+                spec: *spec,
+                opts,
+                omegas,
+            });
+        }
+        let cluster = cluster.expect("at least one tenant");
+        let fr = match run_fabric(&cluster, inputs, traffic, fair,
+                                  &mut engine) {
+            Ok(fr) => fr,
+            Err(e) => {
+                eprintln!("loadtest failed: {e}");
+                return 1;
+            }
+        };
+        print_fabric(m, net, traffic, &fr);
+        runs.push(fabric_json(m, traffic, &fr));
+    }
+    let out = args.get_or("out", "BENCH_loadtest.json");
+    let doc_engine = match traffic.exec {
+        ExecMode::Measured => "csr-batched",
+        ExecMode::Analytic => engine.backend_name(),
+    };
+    // BTreeMap keys: already unique and sorted
+    let ds: Vec<&str> =
+        packs.keys().map(|k| k.as_str()).collect();
+    let mut ms: Vec<&str> =
+        tenants.iter().map(|t| t.model.as_str()).collect();
+    ms.sort_unstable();
+    ms.dedup();
+    let doc = doc_json(&ds.join("+"), &ms.join("+"), net.name(),
+                       doc_engine, runs, Vec::new());
+    match std::fs::write(out, format!("{doc}\n")) {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => {
+            eprintln!("cannot write {out}: {e}");
+            return 1;
+        }
+    }
+    0
+}
+
+/// Per-run console summary for a fabric run: the aggregate line plus
+/// one line per tenant and the fairness/plan-cache accounting.
+fn print_fabric(mode: &str, net: NetKind, traffic: &TrafficConfig,
+                fr: &FabricReport) {
+    let agg = &fr.aggregate.slo;
+    println!(
+        "mode={mode} net={} tenants={} fair={} duration={}s seed={} \
+         exec={}",
+        net.name(),
+        fr.tenants.len(),
+        fr.fair.name(),
+        traffic.duration_s,
+        traffic.seed,
+        fr.aggregate.exec_mode.name(),
+    );
+    if agg.oom {
+        println!("  OOM: a placement exceeds fog memory; run aborted");
+        return;
+    }
+    for t in &fr.tenants {
+        println!(
+            "  tenant {:<12} {}/{} {} rps w={} | p50 {:.1} p95 {:.1} \
+             p99 {:.1} ms (SLO {:.0}) | goodput {:.2}/s | {}/{} \
+             offered, {:.1}% shed, {} spilled",
+            t.name,
+            t.model,
+            t.dataset,
+            t.rps,
+            t.weight,
+            t.slo.latency.p50_s * 1e3,
+            t.slo.latency.p95_s * 1e3,
+            t.slo.latency.p99_s * 1e3,
+            t.slo.slo_s * 1e3,
+            t.slo.goodput_rps,
+            t.slo.within_slo,
+            t.slo.offered,
+            t.slo.shed_rate() * 100.0,
+            t.slo.spilled,
+        );
+    }
+    println!(
+        "  fairness   jain={:.4} (weight-normalized goodput); \
+         aggregate goodput {:.2}/s, {} batches, {} diffusions, {} \
+         replans",
+        fr.fairness_jain,
+        agg.goodput_rps,
+        agg.batches,
+        agg.diffusions,
+        agg.replans,
+    );
+    for e in &fr.plan_cache {
+        println!(
+            "  plan-cache {}/{}: {} build, {} hits, {} rebuilds",
+            e.model, e.dataset, e.builds, e.hits, e.rebuilds
+        );
+    }
+    if !fr.aggregate.bucket_host_ms.is_empty() {
+        let buckets: Vec<String> = fr
+            .aggregate
+            .bucket_host_ms
+            .iter()
+            .map(|row| {
+                format!("b{}: {:.2} ms x{}", row.bucket,
+                        row.mean_host_ms, row.batches)
+            })
+            .collect();
+        println!("  measured   per-bucket batch host time: {}",
+                 buckets.join(", "));
+    }
 }
 
 fn print_loadtest(mode: &str, spec: &DatasetSpec, model: &str,

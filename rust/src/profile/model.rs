@@ -81,6 +81,30 @@ impl PerfModel {
             r2: 0.0,
         }
     }
+
+    /// Per-MODEL uncalibrated defaults for mixed-blend serving: one ω
+    /// per GNN architecture, scaled by its relative per-layer cost
+    /// (combine width, attention overhead, temporal window), so the
+    /// multi-tenant planner prices a gat tenant's partition heavier
+    /// than a gcn tenant's on the same fog before any calibration.
+    /// `gcn` (and unknown names) fall back to `uncalibrated()`, so
+    /// legacy single-model paths are unchanged.
+    pub fn uncalibrated_for(model: &str) -> PerfModel {
+        let base = PerfModel::uncalibrated();
+        // relative (vertex, neighbor, fixed) cost factors vs gcn
+        let (kv, kn, kc) = match model {
+            "sage" => (1.25, 1.1, 1.0),   // concat combine, 2F GEMM
+            "gat" => (1.6, 1.5, 1.2),     // per-edge attention scores
+            "astgcn" => (2.2, 1.8, 1.5),  // T-window temporal block
+            _ => (1.0, 1.0, 1.0),
+        };
+        PerfModel {
+            beta_v: base.beta_v * kv,
+            beta_n: base.beta_n * kn,
+            intercept: base.intercept * kc,
+            r2: base.r2,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -130,6 +154,20 @@ mod tests {
             "{within}/{} within ±10%",
             samples.len()
         );
+    }
+
+    #[test]
+    fn per_model_defaults_order_by_architecture_cost() {
+        let c = Cardinality::new(1000, 6000);
+        let gcn = PerfModel::uncalibrated_for("gcn").predict(c);
+        let sage = PerfModel::uncalibrated_for("sage").predict(c);
+        let gat = PerfModel::uncalibrated_for("gat").predict(c);
+        let ast = PerfModel::uncalibrated_for("astgcn").predict(c);
+        assert!(gcn < sage && sage < gat && gat < ast,
+                "{gcn} {sage} {gat} {ast}");
+        // gcn and unknown models are the legacy default, unchanged
+        assert_eq!(gcn, PerfModel::uncalibrated().predict(c));
+        assert_eq!(PerfModel::uncalibrated_for("mlp").predict(c), gcn);
     }
 
     #[test]

@@ -25,16 +25,64 @@
 //! would cost more than the parallelism buys.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::OnceLock;
 use std::thread::JoinHandle;
 
 /// A unit of row-range work: runs on a helper (or inline) and returns
 /// its shard's output rows.
 pub type ShardClosure = Box<dyn FnOnce() -> Vec<f32> + Send + 'static>;
 
-/// Minimum row-blocks of work per shard: below this, the channel round
-/// trip and per-shard buffers outweigh the parallel win, so the pass
-/// runs unsplit.
+/// Default minimum row-blocks of work per shard: below this, the
+/// channel round trip and per-shard buffers outweigh the parallel win,
+/// so the pass runs unsplit. Overridable per-host via
+/// [`MIN_ROWS_ENV`] (the right floor is a property of the channel
+/// round-trip vs. per-row kernel cost, which varies across hosts).
 pub const MIN_ROWS_PER_SHARD: usize = 256;
+
+/// Environment override for the shard floor. Must parse to an integer
+/// in `1..=MAX_MIN_ROWS_PER_SHARD`; CLI entry points validate it at
+/// startup (exit 2 on 0 / junk) via [`min_rows_per_shard_env`].
+pub const MIN_ROWS_ENV: &str = "FOGRAPH_MIN_ROWS_PER_SHARD";
+
+/// Typo guard for the override: a floor above this disables sharding
+/// on every realistic partition, which is better spelled
+/// `--kernel-threads 1`.
+pub const MAX_MIN_ROWS_PER_SHARD: usize = 1 << 24;
+
+static ACTIVE_MIN_ROWS: OnceLock<usize> = OnceLock::new();
+
+/// Parse one candidate floor value (pure; unit-testable without
+/// touching process environment).
+pub fn parse_min_rows_per_shard(v: &str) -> Result<usize, String> {
+    match v.trim().parse::<usize>() {
+        Ok(k) if (1..=MAX_MIN_ROWS_PER_SHARD).contains(&k) => Ok(k),
+        _ => Err(format!(
+            "{MIN_ROWS_ENV} must be an integer in \
+             1..={MAX_MIN_ROWS_PER_SHARD} (got {v:?})"
+        )),
+    }
+}
+
+/// Read + validate the environment override (`Ok(default)` when
+/// unset). CLI entry points call this once at startup so a bad value
+/// is a loud exit-2, not a silent fallback.
+pub fn min_rows_per_shard_env() -> Result<usize, String> {
+    match std::env::var(MIN_ROWS_ENV) {
+        Ok(v) => parse_min_rows_per_shard(&v),
+        Err(_) => Ok(MIN_ROWS_PER_SHARD),
+    }
+}
+
+/// The active shard floor: the validated environment override, or the
+/// built-in default. Latched on first use (library callers may race
+/// threads through `effective_shards`; the floor must not change
+/// mid-run). Invalid values fall back to the default here — the CLI
+/// has already rejected them before any kernel runs.
+pub fn min_rows_per_shard() -> usize {
+    *ACTIVE_MIN_ROWS.get_or_init(|| {
+        min_rows_per_shard_env().unwrap_or(MIN_ROWS_PER_SHARD)
+    })
+}
 
 struct HelperTask {
     shard: usize,
@@ -173,10 +221,10 @@ impl ShardExec<'_> {
     }
 
     /// Shards a pass over `work_rows` total row-blocks should use:
-    /// capped by the group width and by `MIN_ROWS_PER_SHARD` of work
-    /// per shard.
+    /// capped by the group width and by the active shard floor
+    /// (`min_rows_per_shard`, env-overridable) of work per shard.
     pub fn effective_shards(&self, work_rows: usize) -> usize {
-        self.width().min((work_rows / MIN_ROWS_PER_SHARD).max(1))
+        self.width().min((work_rows / min_rows_per_shard()).max(1))
     }
 
     /// Run the pass: on the group, or sequentially in shard order.
@@ -278,6 +326,34 @@ mod tests {
         let pooled = make(&ShardExec::Group(&group));
         let inline = make(&ShardExec::Inline(3));
         assert_eq!(pooled, inline);
+    }
+
+    #[test]
+    fn min_rows_override_parses_and_rejects() {
+        assert_eq!(parse_min_rows_per_shard("1"), Ok(1));
+        assert_eq!(parse_min_rows_per_shard("256"), Ok(256));
+        assert_eq!(parse_min_rows_per_shard(" 4096 "), Ok(4096));
+        assert_eq!(
+            parse_min_rows_per_shard(&MAX_MIN_ROWS_PER_SHARD.to_string()),
+            Ok(MAX_MIN_ROWS_PER_SHARD)
+        );
+        for bad in ["0", "-1", "many", "", "1e3",
+                    "16777217" /* MAX + 1 */] {
+            assert!(parse_min_rows_per_shard(bad).is_err(),
+                    "{bad:?} accepted");
+        }
+    }
+
+    #[test]
+    fn active_floor_defaults_when_env_unset() {
+        // the test runner does not set the override, so the latched
+        // value is the compiled default (also pins the env contract:
+        // `min_rows_per_shard_env` is Ok when unset)
+        if std::env::var(MIN_ROWS_ENV).is_err() {
+            assert_eq!(min_rows_per_shard(), MIN_ROWS_PER_SHARD);
+            assert_eq!(min_rows_per_shard_env(),
+                       Ok(MIN_ROWS_PER_SHARD));
+        }
     }
 
     #[test]

@@ -63,6 +63,12 @@ impl MicroBatcher {
         self.pending.push_back(arrival_s);
     }
 
+    /// Arrival time of the oldest queued request (`None` when empty) —
+    /// the head-of-line timestamp shared-FIFO arbitration compares.
+    pub fn oldest(&self) -> Option<f64> {
+        self.pending.front().copied()
+    }
+
     /// Earliest simulation time at which a batch may be released under
     /// the policy: the arrival that filled the size bound, or the oldest
     /// request's deadline. `None` while the queue is empty.

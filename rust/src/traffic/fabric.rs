@@ -1,0 +1,1087 @@
+//! The multi-tenant serving fabric: N seeded request streams — one per
+//! tenant, each naming its own `(model, dataset)` workload, arrival
+//! process, rate, fair-share weight and SLO — merged into ONE
+//! deterministic event loop over the shared fog cluster.
+//!
+//! Architecture (generalizing the single-workload loop this module
+//! replaced; `sim::run_loadtest` is now the one-tenant mapping):
+//!
+//! * **Tenants** own an arrival stream, an admission queue
+//!   (`MicroBatcher` + per-tenant queue cap with shed/spill), a weight
+//!   and an SLO. Everything about a tenant keys off its NAME, so runs
+//!   are invariant under `--tenant` declaration order.
+//! * **Services** are distinct `(model, dataset)` pairs — the fabric's
+//!   plan cache. Tenants sharing a service share its placement, its
+//!   grounding pipeline run, its analytic ω estimates, and (in
+//!   measured mode) one `BatchedBspPlan` + per-fog online profilers;
+//!   the cache records builds/hits so a plan is provably constructed
+//!   once per key. All measured plans execute on ONE persistent
+//!   worker-pool handle (`--kernel-threads` budget), shared across
+//!   plans and survived by replans.
+//! * **Stations** — collection and BSP execution, pipelined depth 2 —
+//!   are shared: the whole point of the fabric is contention between
+//!   tenants on real shared fog resources.
+//! * **Admission arbitration** — when several tenants have releasable
+//!   batches, deficit-round-robin weighted-fair queuing (`FairPolicy::
+//!   Drr`) picks who runs: each tenant earns credit in proportion to
+//!   its weight and pays its batch's padded bucket size, so a bursty
+//!   tenant saturating the cluster cannot starve a low-weight
+//!   tenant's SLO. `FairPolicy::Fifo` (serve the globally oldest
+//!   head-of-line request) is kept as the control the fairness claim
+//!   is measured against.
+//! * **Scheduling** — the dual-mode scheduler ticks per service:
+//!   per-model ω (or η-scaled ω′ from that service's profilers in
+//!   measured mode) drive diffusion / IEP replans of that service's
+//!   placement, exactly as in the single-workload loop.
+//!
+//! Reported per tenant: p50/p95/p99/mean latency, goodput, shed/spill,
+//! batches — plus a Jain fairness index over weight-normalized
+//! goodput and the plan-cache hit counts, all surfaced in
+//! BENCH_loadtest.json.
+
+use std::collections::BTreeMap;
+
+use crate::fog::{Cluster, LoadTrace};
+use crate::graph::{DatasetSpec, Graph};
+use crate::profile::PerfModel;
+use crate::runtime::{Engine, EngineError};
+use crate::scheduler::diffusion::estimate_times;
+use crate::scheduler::{schedule, SchedulerConfig, SchedulerDecision};
+use crate::serving::collection;
+use crate::serving::pipeline::{self, Placement, ServeOpts};
+use crate::util::json::{arr, num, obj, s, Json};
+
+use super::arrival::ArrivalProcess;
+use super::batcher::{bucket, MicroBatcher};
+use super::measured::{BucketRow, MeasuredExec};
+use super::sim::{report_json, ExecMode, LoadtestReport, TrafficConfig};
+use super::slo::{QueueTimeline, SloReport};
+use super::tenant::{FairPolicy, Tenant};
+
+/// Fraction of a batch's execution cost that is fixed per batch (kernel
+/// launch, BSP barriers); the rest scales with the padded bucket size.
+const EXEC_FIXED_FRAC: f64 = 0.85;
+/// Fixed share of the per-window collection cost; the rest grows with
+/// batch fill (larger windows admit marginally more device traffic).
+const COLL_FIXED_FRAC: f64 = 0.85;
+/// Collection of batch k may overlap execution of batch k-1.
+const PIPELINE_DEPTH: usize = 2;
+
+/// One tenant plus the workload inputs it runs against. `opts` must be
+/// built for this tenant's model (`pipeline::mode_setup`); tenants
+/// sharing a `(model, dataset)` service must pass identical
+/// `opts`/`omegas` (they share the service's placement and plan).
+pub struct TenantInput<'a> {
+    pub tenant: Tenant,
+    pub g: &'a Graph,
+    pub spec: DatasetSpec,
+    pub opts: ServeOpts,
+    pub omegas: Vec<PerfModel>,
+}
+
+/// Per-tenant outcome of a fabric run.
+#[derive(Clone, Debug, Default)]
+pub struct TenantReport {
+    pub name: String,
+    pub model: String,
+    pub dataset: String,
+    pub arrival: &'static str,
+    pub rps: f64,
+    pub weight: f64,
+    pub stream_seed: u64,
+    pub slo: SloReport,
+    /// Raw per-request fog-tier latencies (completion order).
+    pub latencies: Vec<f64>,
+    pub queue_len_max: usize,
+    pub queue_len_mean: f64,
+}
+
+/// One plan-cache key's accounting: a `(model, dataset)` service is
+/// built exactly once (`builds`), every further tenant binding to it
+/// is a `hits`, and scheduler migrations rebuild its partition
+/// structures in place (`rebuilds`, measured mode only — the worker
+/// pool is respawned only if a worker panic poisoned it). Each entry
+/// also carries its OWN grounding constants — the aggregate report's
+/// single `base_*` fields describe only the canonical-first service,
+/// so mixed-blend runs read per-service values from here.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct PlanCacheEntry {
+    pub model: String,
+    pub dataset: String,
+    pub builds: usize,
+    pub hits: usize,
+    pub rebuilds: usize,
+    /// Grounding-run communication constants for THIS service.
+    pub collection_s: f64,
+    pub sync_s: f64,
+    pub wire_bytes: usize,
+}
+
+/// Outcome of one fabric run: the legacy-shaped aggregate plus the
+/// per-tenant breakdown, fairness index and plan-cache accounting.
+#[derive(Clone, Debug, Default)]
+pub struct FabricReport {
+    pub aggregate: LoadtestReport,
+    /// Canonical (name-sorted) order.
+    pub tenants: Vec<TenantReport>,
+    /// Jain index over weight-normalized per-tenant goodput
+    /// (`goodput_i / weight_i`): 1.0 = perfectly weighted-fair.
+    pub fairness_jain: f64,
+    pub fair: FairPolicy,
+    /// Canonical (key-sorted) order.
+    pub plan_cache: Vec<PlanCacheEntry>,
+}
+
+/// Jain's fairness index over non-negative allocations:
+/// `(Σx)² / (n·Σx²)` ∈ (0, 1], with 1.0 iff all equal. Degenerate
+/// all-zero input reports 1.0 (nothing was unfairly shared).
+pub fn jain_index(xs: &[f64]) -> f64 {
+    let sum: f64 = xs.iter().sum();
+    let sq: f64 = xs.iter().map(|x| x * x).sum();
+    if xs.is_empty() || sq <= 0.0 {
+        1.0
+    } else {
+        sum * sum / (xs.len() as f64 * sq)
+    }
+}
+
+fn scaled_model(m: &PerfModel, k: f64) -> PerfModel {
+    PerfModel {
+        beta_v: m.beta_v * k,
+        beta_n: m.beta_n * k,
+        intercept: m.intercept * k,
+        r2: m.r2,
+    }
+}
+
+/// Deterministic per-window collection cost for a layout: the slowest
+/// fog's analytic transfer time (device-side packing pipelines with the
+/// previous window's upload, so it is off the steady-state critical
+/// path, like the fog-side unpack thread).
+fn collection_transfer_s(
+    g: &Graph,
+    payload: &[f32],
+    dims: usize,
+    assignment: &[u32],
+    cluster: &Cluster,
+    opts: &ServeOpts,
+) -> f64 {
+    let coll = collection::collect(g, payload, dims, assignment, cluster,
+                                   &opts.codec, opts.devices, opts.wan);
+    coll.per_fog_transfer_s.iter().cloned().fold(0f64, f64::max)
+}
+
+/// Per-fog execution seconds for one inference at simulation time `t`:
+/// host-model prediction × node capability × background-load slowdown.
+fn exec_per_fog(
+    host_times: &[f64],
+    node_mult: &[f64],
+    trace: &LoadTrace,
+    t: f64,
+) -> Vec<f64> {
+    let step = t.max(0.0) as usize;
+    host_times
+        .iter()
+        .zip(node_mult)
+        .enumerate()
+        .map(|(j, (&h, &m))| {
+            let load = trace.at(step, j).clamp(0.0, 0.85);
+            h * m / (1.0 - load)
+        })
+        .collect()
+}
+
+/// One `(model, dataset)` plan-cache entry at runtime.
+struct Service<'a> {
+    model: String,
+    dataset: String,
+    g: &'a Graph,
+    spec: DatasetSpec,
+    opts: ServeOpts,
+    omegas: Vec<PerfModel>,
+    assignment: Vec<u32>,
+    payload: Vec<f32>,
+    dims: usize,
+    coll_s: f64,
+    base_sync_s: f64,
+    base_wire_bytes: usize,
+    host_times: Vec<f64>,
+    measured: Option<MeasuredExec>,
+    scheduler_on: bool,
+    /// Canonical tenant indices bound to this service.
+    tenants: Vec<usize>,
+    hits: usize,
+    rebuilds: usize,
+    diffusions: usize,
+    replans: usize,
+    oom: bool,
+    /// Grounding actually ran (false when an earlier service's OOM
+    /// aborted the run first) — the plan-cache `builds` witness.
+    grounded: bool,
+}
+
+/// Per-tenant runtime state in the event loop.
+struct TenantState {
+    tenant: Tenant,
+    service: usize,
+    arrivals: Vec<f64>,
+    next_arrival: usize,
+    batcher: MicroBatcher,
+    queue_cap: usize,
+    slo: SloReport,
+    latencies: Vec<f64>,
+    qlen_sum: usize,
+    queue_len_max: usize,
+}
+
+/// Deficit-round-robin arbiter over the canonical tenant order.
+struct DrrState {
+    deficit: Vec<f64>,
+    quantum: Vec<f64>,
+    cursor: usize,
+}
+
+impl DrrState {
+    fn new(weights: &[f64], max_batch: usize) -> DrrState {
+        let w_max = weights.iter().cloned().fold(0f64, f64::max).max(1e-12);
+        // the max-weight tenant earns one full padded batch of credit
+        // per replenish round, others proportionally less — so a scan
+        // after one replenish always finds an eligible candidate
+        let unit = bucket(max_batch) as f64;
+        DrrState {
+            deficit: vec![0.0; weights.len()],
+            quantum: weights.iter().map(|w| w / w_max * unit).collect(),
+            cursor: 0,
+        }
+    }
+
+    /// Pick the next tenant to serve among `ready` (canonical indices,
+    /// ascending), each with its head-batch cost. Replenishes credit
+    /// only when no ready tenant can pay — an idle tenant never banks
+    /// credit it did not need. The replenish jumps straight to the
+    /// first round at which some candidate qualifies (identical
+    /// deficits and selection as adding one quantum at a time, but
+    /// O(1) even for extreme weight ratios).
+    fn pick(&mut self, ready: &[usize], cost: &[f64]) -> usize {
+        assert!(!ready.is_empty());
+        let n = self.deficit.len();
+        loop {
+            for off in 0..n {
+                let i = (self.cursor + off) % n;
+                if ready.contains(&i) && self.deficit[i] >= cost[i] {
+                    self.deficit[i] -= cost[i];
+                    self.cursor = (i + 1) % n;
+                    return i;
+                }
+            }
+            // rounds until the first candidate can pay (>= 1; quanta
+            // are positive because run_fabric rejects w <= 0)
+            let rounds = ready
+                .iter()
+                .map(|&i| {
+                    ((cost[i] - self.deficit[i]) / self.quantum[i])
+                        .ceil()
+                        .max(1.0)
+                })
+                .fold(f64::INFINITY, f64::min);
+            for &i in ready {
+                self.deficit[i] += rounds * self.quantum[i];
+            }
+        }
+    }
+}
+
+/// Run the multi-tenant serving fabric. See the module docs; with one
+/// tenant this is step-for-step the legacy single-stream loop
+/// (`sim::run_loadtest` delegates here).
+pub fn run_fabric<'a>(
+    cluster: &Cluster,
+    inputs: Vec<TenantInput<'a>>,
+    base: &TrafficConfig,
+    fair: FairPolicy,
+    engine: &mut Engine,
+) -> Result<FabricReport, EngineError> {
+    assert!(!inputs.is_empty(), "fabric needs at least one tenant");
+    assert!(base.duration_s > 0.0);
+    let n = cluster.len();
+    // recoverable input errors on the library path too (same contract
+    // as BatchedBspPlan's kernel_threads validation), not panics —
+    // callers constructing Tenants directly bypass TenantSpec::parse
+    for inp in &inputs {
+        let t = &inp.tenant;
+        if !t.rps.is_finite() || t.rps <= 0.0 {
+            return Err(EngineError::Unsupported(format!(
+                "tenant {:?}: rps must be positive and finite (got \
+                 {})",
+                t.name, t.rps
+            )));
+        }
+        if !t.weight.is_finite() || t.weight <= 0.0 {
+            return Err(EngineError::Unsupported(format!(
+                "tenant {:?}: weight must be positive and finite (got \
+                 {}); a zero-weight tenant would never be scheduled",
+                t.name, t.weight
+            )));
+        }
+        if inp.omegas.len() != n {
+            return Err(EngineError::Unsupported(format!(
+                "tenant {:?}: {} ω models for a {n}-fog cluster",
+                t.name,
+                inp.omegas.len()
+            )));
+        }
+    }
+
+    // ---- canonical tenant order (name-sorted, declaration-free) ---------
+    let mut inputs = inputs;
+    inputs.sort_by(|a, b| a.tenant.name.cmp(&b.tenant.name));
+    for w in inputs.windows(2) {
+        if w[0].tenant.name == w[1].tenant.name {
+            return Err(EngineError::Unsupported(format!(
+                "duplicate tenant name {:?}: tenant identities must \
+                 be unique (set name=... on the --tenant spec)",
+                w[0].tenant.name
+            )));
+        }
+    }
+
+    // ---- plan cache: one service per distinct (model, dataset) ----------
+    let mut key_to_service: BTreeMap<(String, String), usize> =
+        BTreeMap::new();
+    let mut services: Vec<Service<'a>> = Vec::new();
+    let mut tenants: Vec<TenantState> = Vec::new();
+    for (ti, inp) in inputs.into_iter().enumerate() {
+        let key =
+            (inp.tenant.model.clone(), inp.tenant.dataset.clone());
+        let si = match key_to_service.get(&key) {
+            Some(&si) => {
+                // a cache hit drops this tenant's opts/omegas in favor
+                // of the service's; that is only sound if they are the
+                // same — enforce the documented precondition instead
+                // of silently repricing the tenant with another's
+                // models
+                let svc = &services[si];
+                let same_omegas = svc.omegas.len() == inp.omegas.len()
+                    && svc.omegas.iter().zip(&inp.omegas).all(
+                        |(a, b)| {
+                            a.beta_v == b.beta_v
+                                && a.beta_n == b.beta_n
+                                && a.intercept == b.intercept
+                        },
+                    );
+                if !same_omegas
+                    || format!("{:?}", svc.opts)
+                        != format!("{:?}", inp.opts)
+                {
+                    return Err(EngineError::Unsupported(format!(
+                        "tenant {:?} shares service ({}, {}) but \
+                         passes different opts/ω models than the \
+                         tenant that built it",
+                        inp.tenant.name, key.0, key.1
+                    )));
+                }
+                services[si].hits += 1;
+                si
+            }
+            None => {
+                let si = services.len();
+                key_to_service.insert(key.clone(), si);
+                services.push(Service {
+                    model: key.0,
+                    dataset: key.1,
+                    g: inp.g,
+                    spec: inp.spec,
+                    opts: inp.opts,
+                    omegas: inp.omegas,
+                    assignment: Vec::new(),
+                    payload: Vec::new(),
+                    dims: 0,
+                    coll_s: 0.0,
+                    base_sync_s: 0.0,
+                    base_wire_bytes: 0,
+                    host_times: Vec::new(),
+                    measured: None,
+                    scheduler_on: false,
+                    tenants: Vec::new(),
+                    hits: 0,
+                    rebuilds: 0,
+                    diffusions: 0,
+                    replans: 0,
+                    oom: false,
+                    grounded: false,
+                });
+                si
+            }
+        };
+        services[si].tenants.push(ti);
+        let queue_cap =
+            inp.tenant.queue_cap.max(base.batch.max_batch);
+        tenants.push(TenantState {
+            tenant: inp.tenant,
+            service: si,
+            arrivals: Vec::new(),
+            next_arrival: 0,
+            batcher: MicroBatcher::new(base.batch),
+            queue_cap,
+            slo: SloReport {
+                slo_s: 0.0,
+                duration_s: base.duration_s,
+                ..Default::default()
+            },
+            latencies: Vec::new(),
+            qlen_sum: 0,
+            queue_len_max: 0,
+        });
+    }
+    for t in tenants.iter_mut() {
+        t.slo.slo_s = t.tenant.slo_s;
+    }
+
+    // note: services are created in canonical TENANT order, which
+    // makes service creation order itself declaration-independent
+
+    // ---- ground every service with one real pipeline run ----------------
+    let mut aggregate = LoadtestReport {
+        exec_mode: base.exec,
+        engine: engine.backend_name().to_string(),
+        kernel_threads: if base.exec == ExecMode::Measured {
+            base.kernel_threads.max(1)
+        } else {
+            1
+        },
+        simd: crate::runtime::kernels::simd::name().to_string(),
+        ..Default::default()
+    };
+    aggregate.slo.slo_s = base.slo_s;
+    aggregate.slo.duration_s = base.duration_s;
+    let cfg = SchedulerConfig::default();
+    let mut shared_pool = None;
+    for (si, svc) in services.iter_mut().enumerate() {
+        if aggregate.slo.oom {
+            // an earlier service already aborted the run; don't pay
+            // for grounding (or plan builds) the run will never use
+            break;
+        }
+        svc.grounded = true;
+        svc.assignment = pipeline::place(svc.g, cluster, &svc.opts,
+                                         &svc.omegas, &svc.spec);
+        let (payload, dims) = pipeline::query_payload(
+            svc.g, &svc.spec, svc.opts.window_start);
+        let ground = pipeline::serve_with_assignment(
+            svc.g, &svc.spec, cluster, &svc.opts, &svc.assignment,
+            &payload, dims, engine,
+        )?;
+        svc.payload = payload;
+        svc.dims = dims;
+        svc.coll_s = collection_transfer_s(
+            svc.g, &svc.payload, svc.dims, &svc.assignment, cluster,
+            &svc.opts,
+        );
+        svc.base_sync_s = ground.sync_s;
+        svc.base_wire_bytes = ground.wire_bytes;
+        if si == 0 {
+            aggregate.base_collection_s = svc.coll_s;
+            aggregate.base_sync_s = svc.base_sync_s;
+            aggregate.base_wire_bytes = svc.base_wire_bytes;
+        }
+        if ground.oom {
+            svc.oom = true;
+            aggregate.slo.oom = true;
+            continue;
+        }
+        if base.exec == ExecMode::Measured {
+            let kt = base.kernel_threads.max(1);
+            let m = match &shared_pool {
+                // every (model, dataset) plan shares the first
+                // service's worker pool: one --kernel-threads thread
+                // budget for the whole fabric
+                Some(pool) => MeasuredExec::with_pool(
+                    svc.g, &svc.assignment, n, &svc.model,
+                    svc.spec.name, &svc.payload, svc.dims,
+                    svc.spec.classes, &svc.omegas, engine, kt,
+                    std::sync::Arc::clone(pool),
+                )?,
+                None => MeasuredExec::new(
+                    svc.g, &svc.assignment, n, &svc.model,
+                    svc.spec.name, &svc.payload, svc.dims,
+                    svc.spec.classes, &svc.omegas, engine, kt,
+                )?,
+            };
+            if shared_pool.is_none() {
+                shared_pool = Some(m.pool_handle());
+            }
+            svc.measured = Some(m);
+        }
+        svc.host_times =
+            estimate_times(svc.g, &svc.assignment, n, &svc.omegas);
+        svc.scheduler_on = n > 1
+            && base.scheduler_period_s > 0.0
+            && !matches!(svc.opts.placement, Placement::SingleNode(_));
+    }
+    if aggregate.slo.oom {
+        // a service's placement exceeds fog memory: the run is aborted
+        // before any traffic, exactly like the single-workload loop
+        let mut out = FabricReport {
+            aggregate,
+            fair,
+            plan_cache: plan_cache_entries(&services),
+            fairness_jain: 1.0,
+            ..Default::default()
+        };
+        for t in &tenants {
+            let mut tr = tenant_report_base(t);
+            tr.slo.oom = services[t.service].oom;
+            out.tenants.push(tr);
+        }
+        return Ok(out);
+    }
+
+    // ---- analytic execution substrate (shared across services) ----------
+    let node_mult: Vec<f64> = cluster
+        .nodes
+        .iter()
+        .map(|nd| nd.effective_multiplier())
+        .collect();
+    let trace = if base.background_load {
+        LoadTrace::random_walk(
+            n,
+            base.duration_s.ceil() as usize + 2,
+            base.seed ^ 0x10AD,
+        )
+    } else {
+        LoadTrace { loads: vec![vec![0.0; n]; 1] }
+    };
+
+    // ---- request streams (per tenant, identity-seeded) -------------------
+    for t in tenants.iter_mut() {
+        t.arrivals = ArrivalProcess::new(
+            t.tenant.arrival,
+            t.tenant.rps,
+            t.tenant.stream_seed,
+        )
+        .times(base.duration_s);
+        t.slo.offered = t.arrivals.len();
+        aggregate.slo.offered += t.arrivals.len();
+    }
+
+    // ---- merged event loop -----------------------------------------------
+    let nt = tenants.len();
+    let mut drr = DrrState::new(
+        &tenants.iter().map(|t| t.tenant.weight).collect::<Vec<_>>(),
+        base.batch.max_batch,
+    );
+    let mut coll_free = 0f64;
+    let mut exec_free = 0f64;
+    let mut finishes: Vec<f64> = Vec::new();
+    let mut latencies: Vec<f64> = Vec::new();
+    let mut batch_total = 0usize;
+    let mut exec_busy = 0f64;
+    let mut qlen_sum = 0usize;
+    let mut qlen_ticks = 0usize;
+    let mut queue = QueueTimeline::default();
+    let mut next_sample = 0f64;
+    let scheduler_on = services.iter().any(|s| s.scheduler_on);
+    let mut next_sched = if scheduler_on {
+        base.scheduler_period_s
+    } else {
+        f64::INFINITY
+    };
+    // hoisted per-event scratch: the legacy loop allocated nothing per
+    // event, and a capacity probe drives tens of thousands of events
+    let mut forms: Vec<f64> = vec![f64::INFINITY; nt];
+    let mut ready: Vec<usize> = Vec::with_capacity(nt);
+    let mut cost: Vec<f64> = vec![0.0; nt];
+    loop {
+        // next arrival across tenants (ties: canonical order)
+        let mut arr_tenant = usize::MAX;
+        let mut t_arr = f64::INFINITY;
+        for (i, t) in tenants.iter().enumerate() {
+            let a = t
+                .arrivals
+                .get(t.next_arrival)
+                .copied()
+                .unwrap_or(f64::INFINITY);
+            if a < t_arr {
+                t_arr = a;
+                arr_tenant = i;
+            }
+        }
+        // pipeline-depth gate: batch k waits for batch k-PIPELINE_DEPTH
+        let gate = if finishes.len() >= PIPELINE_DEPTH {
+            finishes[finishes.len() - PIPELINE_DEPTH]
+        } else {
+            0.0
+        };
+        // earliest releasable batch per tenant, and the global earliest
+        let mut t_form = f64::INFINITY;
+        for (slot, t) in forms.iter_mut().zip(&tenants) {
+            let f = match t.batcher.ready_at() {
+                Some(r) => r.max(coll_free).max(gate),
+                None => f64::INFINITY,
+            };
+            t_form = t_form.min(f);
+            *slot = f;
+        }
+        let t_next = t_arr.min(t_form);
+        if t_next == f64::INFINITY {
+            break;
+        }
+
+        // per-second queue-depth timeline up to the next event
+        while next_sample <= t_next && next_sample <= base.duration_s {
+            let mut row = vec![0f64; n];
+            for svc in services.iter() {
+                let per_fog = exec_per_fog(&svc.host_times, &node_mult,
+                                           &trace, next_sample);
+                let depth: f64 = svc
+                    .tenants
+                    .iter()
+                    .map(|&ti| tenants[ti].batcher.len())
+                    .sum::<usize>() as f64;
+                for (r, &e) in row.iter_mut().zip(&per_fog) {
+                    *r += depth * e;
+                }
+            }
+            queue.record(row);
+            let total_len: usize =
+                tenants.iter().map(|t| t.batcher.len()).sum();
+            qlen_sum += total_len;
+            qlen_ticks += 1;
+            aggregate.queue_len_max =
+                aggregate.queue_len_max.max(total_len);
+            for t in tenants.iter_mut() {
+                t.qlen_sum += t.batcher.len();
+                t.queue_len_max = t.queue_len_max.max(t.batcher.len());
+            }
+            next_sample += 1.0;
+        }
+
+        // dual-mode scheduler ticks (metadata reporting period), one
+        // replan pass per service: per-model ω — or that service's
+        // η-scaled OBSERVED ω′ in measured mode — drive its decisions
+        while next_sched <= t_next && next_sched <= base.duration_s {
+            let step = next_sched as usize;
+            for svc in services.iter_mut() {
+                if !svc.scheduler_on {
+                    continue;
+                }
+                let eff_omegas: Vec<PerfModel> = match &svc.measured {
+                    Some(m) => m.scaled_omegas(),
+                    None => svc.omegas.clone(),
+                };
+                let scaled: Vec<PerfModel> = (0..n)
+                    .map(|j| {
+                        let load = trace.at(step, j).clamp(0.0, 0.85);
+                        scaled_model(&eff_omegas[j],
+                                     node_mult[j] / (1.0 - load))
+                    })
+                    .collect();
+                let real_times =
+                    estimate_times(svc.g, &svc.assignment, n, &scaled);
+                let decision = schedule(
+                    svc.g, &svc.spec, cluster, &svc.opts,
+                    &mut svc.assignment, &real_times, &scaled, &cfg,
+                );
+                let moved = match decision {
+                    SchedulerDecision::Keep => false,
+                    SchedulerDecision::Diffused(_) => {
+                        svc.diffusions += 1;
+                        aggregate.slo.diffusions += 1;
+                        true
+                    }
+                    SchedulerDecision::Replanned => {
+                        svc.replans += 1;
+                        aggregate.slo.replans += 1;
+                        true
+                    }
+                };
+                if moved {
+                    if let Some(m) = svc.measured.as_mut() {
+                        m.rebuild(svc.g, &svc.assignment,
+                                  &svc.model)?;
+                        svc.rebuilds += 1;
+                    }
+                    svc.host_times = estimate_times(
+                        svc.g, &svc.assignment, n, &eff_omegas);
+                    svc.coll_s = collection_transfer_s(
+                        svc.g, &svc.payload, svc.dims,
+                        &svc.assignment, cluster, &svc.opts,
+                    );
+                }
+            }
+            next_sched += base.scheduler_period_s;
+        }
+
+        if t_arr <= t_next {
+            // admission: one request of the earliest-arriving tenant
+            let t = &mut tenants[arr_tenant];
+            t.next_arrival += 1;
+            if t.batcher.len() >= t.queue_cap {
+                if base.spill {
+                    t.slo.spilled += 1;
+                    aggregate.slo.spilled += 1;
+                } else {
+                    t.slo.shed += 1;
+                    aggregate.slo.shed += 1;
+                }
+            } else {
+                t.batcher.push(t_arr);
+            }
+        } else {
+            // release one micro-batch at t_form: the fair-admission
+            // arbiter picks among every tenant releasable NOW (head-
+            // batch costs are only computed for those)
+            ready.clear();
+            for i in 0..nt {
+                if forms[i] <= t_form {
+                    ready.push(i);
+                    cost[i] = bucket(
+                        tenants[i]
+                            .batcher
+                            .len()
+                            .min(base.batch.max_batch),
+                    ) as f64;
+                }
+            }
+            let sel = match fair {
+                FairPolicy::Drr => drr.pick(&ready, &cost),
+                FairPolicy::Fifo => {
+                    // globally oldest head-of-line request wins
+                    let mut best = ready[0];
+                    let mut best_head = f64::INFINITY;
+                    for &i in &ready {
+                        let head = tenants[i]
+                            .batcher
+                            .oldest()
+                            .unwrap_or(f64::INFINITY);
+                        if head < best_head {
+                            best_head = head;
+                            best = i;
+                        }
+                    }
+                    best
+                }
+            };
+            let svc_idx = tenants[sel].service;
+            let batch = tenants[sel].batcher.take_batch();
+            if tenants[sel].batcher.is_empty() {
+                // classic DRR: an emptied queue banks no credit
+                drr.deficit[sel] = 0.0;
+            }
+            let b = batch.len();
+            // the executable only exists at power-of-two shapes; a
+            // 17..=32 batch really pays for the 32 bucket
+            let slot = bucket(b);
+            let svc = &mut services[svc_idx];
+            let coll_time = svc.coll_s
+                * (COLL_FIXED_FRAC
+                    + (1.0 - COLL_FIXED_FRAC) * b as f64
+                        / base.batch.max_batch as f64);
+            let coll_done = t_form + coll_time;
+            let start_exec = coll_done.max(exec_free);
+            let exec_time = if let Some(m) = svc.measured.as_mut() {
+                // real batched kernels at the padded bucket size; scale
+                // each fog's measured host time by its capability and
+                // current background load, BSP barrier per layer
+                let step = start_exec.max(0.0) as usize;
+                let mut total = 0f64;
+                for layer_times in m.run_batch(slot) {
+                    let mut mx = 0f64;
+                    for (j, &h) in layer_times.iter().enumerate() {
+                        let load = trace.at(step, j).clamp(0.0, 0.85);
+                        mx = mx.max(h * node_mult[j] / (1.0 - load));
+                    }
+                    total += mx;
+                }
+                // the block-diagonal batch ships `slot` copies of the
+                // halo rows, so the (bandwidth-dominated) sync share
+                // scales with the bucket
+                total + svc.base_sync_s * slot as f64
+            } else {
+                let per_fog = exec_per_fog(&svc.host_times, &node_mult,
+                                           &trace, start_exec);
+                let slowest =
+                    per_fog.iter().cloned().fold(0f64, f64::max);
+                (slowest + svc.base_sync_s)
+                    * (EXEC_FIXED_FRAC
+                        + (1.0 - EXEC_FIXED_FRAC) * slot as f64)
+            };
+            let finish = start_exec + exec_time;
+            coll_free = coll_done;
+            exec_free = finish;
+            exec_busy += exec_time;
+            finishes.push(finish);
+            aggregate.slo.batches += 1;
+            batch_total += b;
+            aggregate.slo.completed += b;
+            let t = &mut tenants[sel];
+            t.slo.batches += 1;
+            t.slo.completed += b;
+            for &a in &batch {
+                latencies.push(finish - a);
+                t.latencies.push(finish - a);
+            }
+        }
+    }
+
+    // ---- summaries -------------------------------------------------------
+    aggregate.slo.mean_batch = if aggregate.slo.batches > 0 {
+        batch_total as f64 / aggregate.slo.batches as f64
+    } else {
+        0.0
+    };
+    aggregate.exec_utilization = if exec_free > 0.0 {
+        (exec_busy / exec_free.max(base.duration_s)).min(1.0)
+    } else {
+        0.0
+    };
+    aggregate.queue_len_mean = if qlen_ticks > 0 {
+        qlen_sum as f64 / qlen_ticks as f64
+    } else {
+        0.0
+    };
+    aggregate.slo.finalize(&latencies);
+    aggregate.slo.queue = queue;
+    aggregate.latencies = latencies;
+    if base.exec == ExecMode::Measured {
+        if let Some(m) =
+            services.iter().find_map(|s| s.measured.as_ref())
+        {
+            aggregate.engine = m.engine_name().to_string();
+        }
+        aggregate.bucket_host_ms = merged_bucket_rows(&services);
+    }
+
+    let mut report = FabricReport {
+        aggregate,
+        fair,
+        plan_cache: plan_cache_entries(&services),
+        ..Default::default()
+    };
+    for t in tenants.iter_mut() {
+        // tenant_report_base already carries the final slo counters
+        let mut tr = tenant_report_base(t);
+        tr.slo.mean_batch = if t.slo.batches > 0 {
+            t.slo.completed as f64 / t.slo.batches as f64
+        } else {
+            0.0
+        };
+        tr.slo.finalize(&t.latencies);
+        tr.latencies = std::mem::take(&mut t.latencies);
+        tr.queue_len_max = t.queue_len_max;
+        tr.queue_len_mean = if qlen_ticks > 0 {
+            t.qlen_sum as f64 / qlen_ticks as f64
+        } else {
+            0.0
+        };
+        report.tenants.push(tr);
+    }
+    // the aggregate SLO attainment honors each tenant's OWN objective
+    // (a request that misses its tenant's SLO must not count as
+    // goodput just because the run-level --slo-ms is looser); for one
+    // tenant this equals the legacy computation bit-for-bit, since
+    // the legacy mapping sets tenant slo == run slo
+    report.aggregate.slo.within_slo =
+        report.tenants.iter().map(|t| t.slo.within_slo).sum();
+    report.aggregate.slo.goodput_rps = if base.duration_s > 0.0 {
+        report.aggregate.slo.within_slo as f64 / base.duration_s
+    } else {
+        0.0
+    };
+    let weighted: Vec<f64> = report
+        .tenants
+        .iter()
+        .map(|t| t.slo.goodput_rps / t.weight.max(1e-12))
+        .collect();
+    report.fairness_jain = jain_index(&weighted);
+    Ok(report)
+}
+
+fn tenant_report_base(t: &TenantState) -> TenantReport {
+    TenantReport {
+        name: t.tenant.name.clone(),
+        model: t.tenant.model.clone(),
+        dataset: t.tenant.dataset.clone(),
+        arrival: t.tenant.arrival.name(),
+        rps: t.tenant.rps,
+        weight: t.tenant.weight,
+        stream_seed: t.tenant.stream_seed,
+        slo: t.slo.clone(),
+        ..Default::default()
+    }
+}
+
+fn plan_cache_entries(services: &[Service<'_>]) -> Vec<PlanCacheEntry> {
+    services
+        .iter()
+        .map(|s| PlanCacheEntry {
+            model: s.model.clone(),
+            dataset: s.dataset.clone(),
+            builds: usize::from(s.grounded),
+            hits: s.hits,
+            rebuilds: s.rebuilds,
+            collection_s: s.coll_s,
+            sync_s: s.base_sync_s,
+            wire_bytes: s.base_wire_bytes,
+        })
+        .collect()
+}
+
+/// Merge per-service measured bucket summaries into one aggregate
+/// table (batch-weighted means per bucket size). A single-service run
+/// returns its summary as-is — no float round-trip, so the one-tenant
+/// fabric reports exactly what the legacy loop reported.
+fn merged_bucket_rows(services: &[Service<'_>]) -> Vec<BucketRow> {
+    let measured: Vec<&MeasuredExec> =
+        services.iter().filter_map(|s| s.measured.as_ref()).collect();
+    if let [only] = measured.as_slice() {
+        return only.bucket_summary();
+    }
+    let mut acc: BTreeMap<usize, (f64, f64, usize)> = BTreeMap::new();
+    for svc in services {
+        let Some(m) = &svc.measured else { continue };
+        for row in m.bucket_summary() {
+            let e = acc.entry(row.bucket).or_insert((0.0, 0.0, 0));
+            e.0 += row.mean_host_ms * row.batches as f64;
+            e.1 += row.mean_queue_wait_ms * row.batches as f64;
+            e.2 += row.batches;
+        }
+    }
+    acc.into_iter()
+        .map(|(bucket, (host, wait, batches))| BucketRow {
+            bucket,
+            mean_host_ms: host / batches.max(1) as f64,
+            mean_queue_wait_ms: wait / batches.max(1) as f64,
+            batches,
+        })
+        .collect()
+}
+
+/// JSON record of one fabric run: the legacy aggregate record plus the
+/// fairness policy/index, the per-tenant SLO summaries and the
+/// plan-cache accounting.
+pub fn fabric_json(label: &str, base: &TrafficConfig,
+                   fr: &FabricReport) -> Json {
+    let mut j = report_json(label, base, &fr.aggregate);
+    let tenants: Vec<Json> = fr
+        .tenants
+        .iter()
+        .map(|t| {
+            obj(vec![
+                ("name", s(&t.name)),
+                ("model", s(&t.model)),
+                ("dataset", s(&t.dataset)),
+                ("arrival", s(t.arrival)),
+                ("rps", num(t.rps)),
+                ("weight", num(t.weight)),
+                // string for the same u64-precision reason as the run
+                // seed in `report_json`
+                ("seed", s(&t.stream_seed.to_string())),
+                ("slo_ms", num(t.slo.slo_s * 1e3)),
+                ("offered", num(t.slo.offered as f64)),
+                ("completed", num(t.slo.completed as f64)),
+                ("within_slo", num(t.slo.within_slo as f64)),
+                ("shed", num(t.slo.shed as f64)),
+                ("spilled", num(t.slo.spilled as f64)),
+                ("shed_rate", num(t.slo.shed_rate())),
+                ("goodput_rps", num(t.slo.goodput_rps)),
+                ("p50_ms", num(t.slo.latency.p50_s * 1e3)),
+                ("p95_ms", num(t.slo.latency.p95_s * 1e3)),
+                ("p99_ms", num(t.slo.latency.p99_s * 1e3)),
+                ("mean_ms", num(t.slo.latency.mean_s * 1e3)),
+                ("batches", num(t.slo.batches as f64)),
+                ("mean_batch", num(t.slo.mean_batch)),
+                ("queue_len_max", num(t.queue_len_max as f64)),
+                ("queue_len_mean", num(t.queue_len_mean)),
+                ("oom", Json::Bool(t.slo.oom)),
+            ])
+        })
+        .collect();
+    let cache: Vec<Json> = fr
+        .plan_cache
+        .iter()
+        .map(|e| {
+            obj(vec![
+                ("model", s(&e.model)),
+                ("dataset", s(&e.dataset)),
+                ("builds", num(e.builds as f64)),
+                ("hits", num(e.hits as f64)),
+                ("rebuilds", num(e.rebuilds as f64)),
+                ("collection_s", num(e.collection_s)),
+                ("sync_s", num(e.sync_s)),
+                ("wire_bytes", num(e.wire_bytes as f64)),
+            ])
+        })
+        .collect();
+    if let Json::Obj(map) = &mut j {
+        map.insert("fair".to_string(), s(fr.fair.name()));
+        map.insert("fairness_jain".to_string(),
+                   num(fr.fairness_jain));
+        map.insert("tenants".to_string(), arr(tenants));
+        map.insert("plan_cache".to_string(), arr(cache));
+    }
+    j
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jain_index_bounds_and_equality() {
+        assert_eq!(jain_index(&[]), 1.0);
+        assert_eq!(jain_index(&[0.0, 0.0]), 1.0);
+        assert!((jain_index(&[5.0, 5.0, 5.0]) - 1.0).abs() < 1e-12);
+        // one-of-four monopoly: J = 1/4
+        assert!((jain_index(&[8.0, 0.0, 0.0, 0.0]) - 0.25).abs()
+                < 1e-12);
+        let j = jain_index(&[4.0, 1.0]);
+        assert!(j > 0.5 && j < 1.0, "{j}");
+    }
+
+    #[test]
+    fn drr_serves_in_weight_proportion_under_saturation() {
+        // both tenants always ready with full batches (cost 32): the
+        // long-run service ratio must match the 4:1 weights
+        let mut drr = DrrState::new(&[4.0, 1.0], 32);
+        let ready = [0usize, 1];
+        let cost = [32.0, 32.0];
+        let mut served = [0usize; 2];
+        for _ in 0..500 {
+            served[drr.pick(&ready, &cost)] += 1;
+        }
+        let ratio = served[0] as f64 / served[1] as f64;
+        assert!((ratio - 4.0).abs() < 0.3,
+                "served {served:?}, ratio {ratio}");
+    }
+
+    #[test]
+    fn drr_lets_a_cheap_underfull_batch_through_quickly() {
+        // tenant 1 (low weight) has a small batch (cost 2); it must be
+        // served within a handful of opportunities even while tenant 0
+        // (heavy weight) is saturating with full batches
+        let mut drr = DrrState::new(&[4.0, 1.0], 32);
+        let ready = [0usize, 1];
+        let cost = [32.0, 2.0];
+        let mut first_low = None;
+        for k in 0..20 {
+            if drr.pick(&ready, &cost) == 1 {
+                first_low = Some(k);
+                break;
+            }
+        }
+        assert!(first_low.is_some() && first_low.unwrap() <= 4,
+                "low tenant first served at {first_low:?}");
+    }
+
+    #[test]
+    fn drr_is_deterministic() {
+        let run = || {
+            let mut drr = DrrState::new(&[2.0, 1.0, 1.0], 16);
+            let ready = [0usize, 1, 2];
+            let cost = [16.0, 8.0, 4.0];
+            (0..200).map(|_| drr.pick(&ready, &cost)).collect::<Vec<_>>()
+        };
+        assert_eq!(run(), run());
+    }
+}

@@ -93,9 +93,58 @@ impl MeasuredExec {
         engine: &mut Engine,
         kernel_threads: usize,
     ) -> Result<MeasuredExec, EngineError> {
-        let plan = BatchedBspPlan::with_threads(g, assignment, n_fogs,
-                                                model,
-                                                kernel_threads)?;
+        MeasuredExec::build(g, assignment, n_fogs, model, dataset,
+                            payload, dims, classes, omegas, engine,
+                            kernel_threads, None)
+    }
+
+    /// Like `new`, but execute on an EXISTING worker pool instead of
+    /// spawning a private one — the multi-tenant fabric's plan cache
+    /// uses this so every `(model, dataset)` plan shares one
+    /// `--kernel-threads` budget of threads.
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_pool(
+        g: &Graph,
+        assignment: &[u32],
+        n_fogs: usize,
+        model: &str,
+        dataset: &str,
+        payload: &[f32],
+        dims: usize,
+        classes: usize,
+        omegas: &[PerfModel],
+        engine: &mut Engine,
+        kernel_threads: usize,
+        pool: Arc<crate::runtime::FogWorkerPool>,
+    ) -> Result<MeasuredExec, EngineError> {
+        MeasuredExec::build(g, assignment, n_fogs, model, dataset,
+                            payload, dims, classes, omegas, engine,
+                            kernel_threads, Some(pool))
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn build(
+        g: &Graph,
+        assignment: &[u32],
+        n_fogs: usize,
+        model: &str,
+        dataset: &str,
+        payload: &[f32],
+        dims: usize,
+        classes: usize,
+        omegas: &[PerfModel],
+        engine: &mut Engine,
+        kernel_threads: usize,
+        pool: Option<Arc<crate::runtime::FogWorkerPool>>,
+    ) -> Result<MeasuredExec, EngineError> {
+        let plan = match pool {
+            Some(pool) => BatchedBspPlan::with_shared_pool(
+                g, assignment, n_fogs, model, kernel_threads, pool,
+            )?,
+            None => BatchedBspPlan::with_threads(
+                g, assignment, n_fogs, model, kernel_threads,
+            )?,
+        };
         let wb =
             Arc::new(engine.weights(model, dataset, dims, classes).clone());
         Ok(MeasuredExec {
@@ -170,17 +219,37 @@ impl MeasuredExec {
 
     /// Re-extract partition structures after a migration (profilers,
     /// bucket stats and the kernel-thread budget carry over; η is a
-    /// node property, not a placement property).
+    /// node property, not a placement property). The worker pool is
+    /// reused — a replan never respawns a thread — UNLESS a worker
+    /// panic poisoned it, in which case the rebuild spawns a fresh
+    /// pool ("rebuild the plan" stays the documented recovery path).
     pub fn rebuild(&mut self, g: &Graph, assignment: &[u32],
                    model: &str) -> Result<(), EngineError> {
-        self.plan = BatchedBspPlan::with_threads(
-            g,
-            assignment,
-            self.plan.n_fogs(),
-            model,
-            self.kernel_threads,
-        )?;
+        let pool = self.plan.pool_handle();
+        self.plan = if pool.is_poisoned() {
+            BatchedBspPlan::with_threads(
+                g,
+                assignment,
+                self.plan.n_fogs(),
+                model,
+                self.kernel_threads,
+            )?
+        } else {
+            BatchedBspPlan::with_shared_pool(
+                g,
+                assignment,
+                self.plan.n_fogs(),
+                model,
+                self.kernel_threads,
+                pool,
+            )?
+        };
         Ok(())
+    }
+
+    /// Handle to the worker pool (for sharing with further plans).
+    pub fn pool_handle(&self) -> Arc<crate::runtime::FogWorkerPool> {
+        self.plan.pool_handle()
     }
 
     /// Measured per-bucket rows, smallest bucket first.

@@ -1,25 +1,35 @@
 //! Request-level traffic subsystem: seeded workload generation (Poisson /
-//! bursty / diurnal arrival processes), an event-driven online serving
-//! loop with per-fog queues, adaptive micro-batching, admission control
-//! with backpressure, and SLO metrics (latency percentiles, goodput,
-//! shed rate, queue-depth timelines). The loop feeds queue-skew back into
-//! the dual-mode scheduler so diffusion / IEP replans fire mid-run —
-//! `repro loadtest` is the CLI entry point.
+//! bursty / diurnal arrival processes), a multi-tenant event-driven
+//! online serving fabric with per-tenant admission queues,
+//! deficit-round-robin weighted-fair scheduling, adaptive
+//! micro-batching, admission control with backpressure, and SLO metrics
+//! (latency percentiles, goodput, shed rate, queue-depth timelines,
+//! Jain fairness index). The loop feeds queue-skew back into the
+//! dual-mode scheduler so diffusion / IEP replans fire mid-run, per
+//! `(model, dataset)` service — `repro loadtest` is the CLI entry
+//! point, `--tenant` (repeatable) declares the tenants.
 //!
 //! Execution is priced either analytically (ω models; bit-reproducible)
 //! or measured (`--exec measured`): real CSR batched BSP kernels per
-//! micro-batch with the observations fed back into profiler calibration
-//! (see `measured`).
+//! micro-batch — one cached `BatchedBspPlan` per distinct
+//! `(model, dataset)`, all sharing one persistent worker pool — with
+//! the observations fed back into profiler calibration (see
+//! `measured`).
 
 pub mod arrival;
 pub mod batcher;
+pub mod fabric;
 pub mod measured;
 pub mod sim;
 pub mod slo;
+pub mod tenant;
 
 pub use arrival::{ArrivalKind, ArrivalProcess};
 pub use batcher::{bucket, BatchPolicy, MicroBatcher};
+pub use fabric::{fabric_json, jain_index, run_fabric, FabricReport,
+                 PlanCacheEntry, TenantInput, TenantReport};
 pub use measured::{BucketRow, MeasuredExec};
 pub use sim::{doc_json, report_json, run_loadtest, ExecMode,
               LoadtestReport, TrafficConfig};
 pub use slo::{LatencySummary, QueueTimeline, SloReport};
+pub use tenant::{FairPolicy, Tenant, TenantSpec};

@@ -1,11 +1,18 @@
-//! Event-driven online serving loop: drives the existing serving
-//! pipeline with a sustained, seeded request stream through admission
-//! control, adaptive micro-batching and the dual-mode scheduler.
+//! Single-workload loadtest entry point over the multi-tenant serving
+//! fabric (`traffic::fabric`), plus the shared loadtest configuration
+//! and report types.
 //!
-//! One real end-to-end run of the pipeline (per layout) exercises the
-//! full serving surface (placement, compression, BSP execution, the OOM
-//! check). The loop then prices execution in one of two modes
-//! (`ExecMode`):
+//! The event-driven serving loop itself lives in `fabric`: N per-tenant
+//! request streams merged into one deterministic event loop over shared
+//! collection/execution stations, deficit-round-robin weighted-fair
+//! admission, per-service plan caching and per-service dual-mode
+//! rescheduling. `run_loadtest` here maps the legacy single-tenant
+//! flags onto a ONE-tenant fabric — same stream seed, same admission
+//! bound, weight 1 — which reduces step-for-step to the pre-fabric
+//! loop, so `--exec analytic` runs stay bit-reproducible against
+//! existing seeds (asserted by `tests/traffic_fabric.rs`).
+//!
+//! Execution pricing (`ExecMode`):
 //!
 //! * **analytic** (default) — per-fog execution from the calibratable ω
 //!   models (`profile::PerfModel`), the analytic transfer share of
@@ -21,7 +28,7 @@
 //!   (ω′) instead of ω. Wall-clock measurements are inherently
 //!   non-deterministic.
 //!
-//! Stations and timing model:
+//! Stations and timing model (see `fabric` for the loop):
 //!
 //! * **collection** — one snapshot upload per micro-batch window; the
 //!   batch shares it, so collection cost grows only mildly with batch
@@ -32,26 +39,21 @@
 //!   (`batcher::bucket`), mirroring the lowered-artifact shapes.
 //! * the two stations pipeline with depth 2 (collection of batch k
 //!   overlaps execution of batch k-1), the paper's throughput model.
-//!
-//! Admission control sheds (or spills to the cloud tier) when the wait
-//! queue exceeds its bound; per-fog queue depths in work-seconds feed the
-//! skew indicators, so diffusion / IEP replans fire mid-run when the
-//! background load tilts the cluster.
 
-use crate::fog::{Cluster, LoadTrace};
+use crate::fog::Cluster;
 use crate::graph::{DatasetSpec, Graph};
 use crate::profile::PerfModel;
 use crate::runtime::{Engine, EngineError};
-use crate::scheduler::{schedule, SchedulerConfig, SchedulerDecision};
-use crate::scheduler::diffusion::estimate_times;
-use crate::serving::collection;
-use crate::serving::pipeline::{self, Placement, ServeOpts};
+use crate::serving::pipeline::ServeOpts;
 use crate::util::json::{arr, num, obj, s, Json};
+use crate::util::provenance::{git_rev, utc_date_string};
 
-use super::arrival::{ArrivalKind, ArrivalProcess};
-use super::batcher::{bucket, BatchPolicy, MicroBatcher};
-use super::measured::{BucketRow, MeasuredExec};
-use super::slo::{QueueTimeline, SloReport};
+use super::arrival::ArrivalKind;
+use super::batcher::BatchPolicy;
+use super::fabric::{run_fabric, TenantInput};
+use super::measured::BucketRow;
+use super::slo::SloReport;
+use super::tenant::{FairPolicy, Tenant};
 
 /// How the loop prices per-batch execution (see module docs).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -79,15 +81,6 @@ impl ExecMode {
         }
     }
 }
-
-/// Fraction of a batch's execution cost that is fixed per batch (kernel
-/// launch, BSP barriers); the rest scales with the padded bucket size.
-const EXEC_FIXED_FRAC: f64 = 0.85;
-/// Fixed share of the per-window collection cost; the rest grows with
-/// batch fill (larger windows admit marginally more device traffic).
-const COLL_FIXED_FRAC: f64 = 0.85;
-/// Collection of batch k may overlap execution of batch k-1.
-const PIPELINE_DEPTH: usize = 2;
 
 #[derive(Clone, Copy, Debug)]
 pub struct TrafficConfig {
@@ -178,53 +171,10 @@ pub struct LoadtestReport {
     pub simd: String,
 }
 
-fn scaled_model(m: &PerfModel, k: f64) -> PerfModel {
-    PerfModel {
-        beta_v: m.beta_v * k,
-        beta_n: m.beta_n * k,
-        intercept: m.intercept * k,
-        r2: m.r2,
-    }
-}
-
-/// Deterministic per-window collection cost for a layout: the slowest
-/// fog's analytic transfer time (device-side packing pipelines with the
-/// previous window's upload, so it is off the steady-state critical
-/// path, like the fog-side unpack thread).
-fn collection_transfer_s(
-    g: &Graph,
-    payload: &[f32],
-    dims: usize,
-    assignment: &[u32],
-    cluster: &Cluster,
-    opts: &ServeOpts,
-) -> f64 {
-    let coll = collection::collect(g, payload, dims, assignment, cluster,
-                                   &opts.codec, opts.devices, opts.wan);
-    coll.per_fog_transfer_s.iter().cloned().fold(0f64, f64::max)
-}
-
-/// Per-fog execution seconds for one inference at simulation time `t`:
-/// host-model prediction × node capability × background-load slowdown.
-fn exec_per_fog(
-    host_times: &[f64],
-    node_mult: &[f64],
-    trace: &LoadTrace,
-    t: f64,
-) -> Vec<f64> {
-    let step = t.max(0.0) as usize;
-    host_times
-        .iter()
-        .zip(node_mult)
-        .enumerate()
-        .map(|(j, (&h, &m))| {
-            let load = trace.at(step, j).clamp(0.0, 0.85);
-            h * m / (1.0 - load)
-        })
-        .collect()
-}
-
-/// Drive the serving stack under a sustained request stream.
+/// Drive the serving stack under a sustained request stream: the
+/// legacy single-tenant flags mapped onto a one-tenant fabric
+/// (weight 1, the run seed as the stream seed), which reduces exactly
+/// to the pre-fabric single-workload loop.
 #[allow(clippy::too_many_arguments)]
 pub fn run_loadtest(
     g: &Graph,
@@ -237,263 +187,16 @@ pub fn run_loadtest(
 ) -> Result<LoadtestReport, EngineError> {
     assert!(traffic.rps > 0.0 && traffic.duration_s > 0.0);
     assert_eq!(omegas.len(), cluster.len());
-    let n = cluster.len();
-    let queue_cap = traffic.effective_queue_cap();
-
-    // ---- ground the model with one real pipeline run --------------------
-    let mut assignment = pipeline::place(g, cluster, opts, omegas, spec);
-    let (payload, dims) = pipeline::query_payload(g, spec,
-                                                  opts.window_start);
-    let base = pipeline::serve_with_assignment(
-        g, spec, cluster, opts, &assignment, &payload, dims, engine,
-    )?;
-    let mut coll_s = collection_transfer_s(g, &payload, dims, &assignment,
-                                           cluster, opts);
-    let mut report = LoadtestReport {
-        base_collection_s: coll_s,
-        base_sync_s: base.sync_s,
-        base_wire_bytes: base.wire_bytes,
-        exec_mode: traffic.exec,
-        engine: engine.backend_name().to_string(),
-        kernel_threads: if traffic.exec == ExecMode::Measured {
-            traffic.kernel_threads.max(1)
-        } else {
-            1
-        },
-        simd: crate::runtime::kernels::simd::name().to_string(),
-        ..Default::default()
+    let input = TenantInput {
+        tenant: Tenant::legacy(traffic, &opts.model, spec.name),
+        g,
+        spec: *spec,
+        opts: opts.clone(),
+        omegas: omegas.to_vec(),
     };
-    report.slo.slo_s = traffic.slo_s;
-    report.slo.duration_s = traffic.duration_s;
-    if base.oom {
-        report.slo.oom = true;
-        return Ok(report);
-    }
-
-    // ---- measured executor (real CSR batched kernels) -------------------
-    let mut measured: Option<MeasuredExec> =
-        if traffic.exec == ExecMode::Measured {
-            Some(MeasuredExec::new(
-                g, &assignment, n, &opts.model, spec.name, &payload,
-                dims, spec.classes, omegas, engine,
-                traffic.kernel_threads.max(1),
-            )?)
-        } else {
-            None
-        };
-
-    // ---- analytic execution model (deterministic) -----------------------
-    let node_mult: Vec<f64> = cluster
-        .nodes
-        .iter()
-        .map(|nd| nd.effective_multiplier())
-        .collect();
-    let mut host_times = estimate_times(g, &assignment, n, omegas);
-    let trace = if traffic.background_load {
-        LoadTrace::random_walk(
-            n,
-            traffic.duration_s.ceil() as usize + 2,
-            traffic.seed ^ 0x10AD,
-        )
-    } else {
-        LoadTrace { loads: vec![vec![0.0; n]; 1] }
-    };
-
-    // adaptive replanning only makes sense for distributed layouts
-    let scheduler_on = n > 1
-        && traffic.scheduler_period_s > 0.0
-        && !matches!(opts.placement, Placement::SingleNode(_));
-    let cfg = SchedulerConfig::default();
-
-    // ---- request stream --------------------------------------------------
-    let arrivals = ArrivalProcess::new(traffic.arrival, traffic.rps,
-                                       traffic.seed)
-        .times(traffic.duration_s);
-    report.slo.offered = arrivals.len();
-
-    // ---- event loop ------------------------------------------------------
-    let mut batcher = MicroBatcher::new(traffic.batch);
-    let mut coll_free = 0f64;
-    let mut exec_free = 0f64;
-    let mut finishes: Vec<f64> = Vec::new();
-    let mut latencies: Vec<f64> = Vec::new();
-    let mut batch_total = 0usize;
-    let mut exec_busy = 0f64;
-    let mut qlen_sum = 0usize;
-    let mut qlen_ticks = 0usize;
-    let mut queue = QueueTimeline::default();
-    let mut next_sample = 0f64;
-    let mut next_sched = if scheduler_on {
-        traffic.scheduler_period_s
-    } else {
-        f64::INFINITY
-    };
-    let mut idx = 0usize;
-    loop {
-        let t_arr = arrivals.get(idx).copied().unwrap_or(f64::INFINITY);
-        // pipeline-depth gate: batch k waits for batch k-PIPELINE_DEPTH
-        let gate = if finishes.len() >= PIPELINE_DEPTH {
-            finishes[finishes.len() - PIPELINE_DEPTH]
-        } else {
-            0.0
-        };
-        let t_form = match batcher.ready_at() {
-            Some(r) => r.max(coll_free).max(gate),
-            None => f64::INFINITY,
-        };
-        let t_next = t_arr.min(t_form);
-        if t_next == f64::INFINITY {
-            break;
-        }
-
-        // per-second queue-depth timeline up to the next event
-        while next_sample <= t_next && next_sample <= traffic.duration_s {
-            let per_fog =
-                exec_per_fog(&host_times, &node_mult, &trace, next_sample);
-            let depth = batcher.len() as f64;
-            queue.record(per_fog.iter().map(|&e| depth * e).collect());
-            qlen_sum += batcher.len();
-            qlen_ticks += 1;
-            report.queue_len_max = report.queue_len_max.max(batcher.len());
-            next_sample += 1.0;
-        }
-
-        // dual-mode scheduler ticks (metadata reporting period)
-        while next_sched <= t_next && next_sched <= traffic.duration_s {
-            let step = next_sched as usize;
-            // measured mode replans over η-scaled OBSERVED costs (ω′
-            // from the online profiler); analytic mode over ω itself
-            let eff_omegas: Vec<PerfModel> = match &measured {
-                Some(m) => m.scaled_omegas(),
-                None => omegas.to_vec(),
-            };
-            let scaled: Vec<PerfModel> = (0..n)
-                .map(|j| {
-                    let load = trace.at(step, j).clamp(0.0, 0.85);
-                    scaled_model(&eff_omegas[j],
-                                 node_mult[j] / (1.0 - load))
-                })
-                .collect();
-            let real_times = estimate_times(g, &assignment, n, &scaled);
-            match schedule(g, spec, cluster, opts, &mut assignment,
-                           &real_times, &scaled, &cfg) {
-                SchedulerDecision::Keep => {}
-                SchedulerDecision::Diffused(_) => {
-                    report.slo.diffusions += 1;
-                    if let Some(m) = measured.as_mut() {
-                        m.rebuild(g, &assignment, &opts.model)?;
-                    }
-                    host_times =
-                        estimate_times(g, &assignment, n, &eff_omegas);
-                    coll_s = collection_transfer_s(
-                        g, &payload, dims, &assignment, cluster, opts,
-                    );
-                }
-                SchedulerDecision::Replanned => {
-                    report.slo.replans += 1;
-                    if let Some(m) = measured.as_mut() {
-                        m.rebuild(g, &assignment, &opts.model)?;
-                    }
-                    host_times =
-                        estimate_times(g, &assignment, n, &eff_omegas);
-                    coll_s = collection_transfer_s(
-                        g, &payload, dims, &assignment, cluster, opts,
-                    );
-                }
-            }
-            next_sched += traffic.scheduler_period_s;
-        }
-
-        if t_arr <= t_next {
-            // admission
-            idx += 1;
-            if batcher.len() >= queue_cap {
-                if traffic.spill {
-                    report.slo.spilled += 1;
-                } else {
-                    report.slo.shed += 1;
-                }
-            } else {
-                batcher.push(t_arr);
-            }
-        } else {
-            // release one micro-batch at t_form
-            let batch = batcher.take_batch();
-            let b = batch.len();
-            // the executable only exists at power-of-two shapes; a
-            // 17..=32 batch really pays for the 32 bucket
-            let slot = bucket(b);
-            let coll_time = coll_s
-                * (COLL_FIXED_FRAC
-                    + (1.0 - COLL_FIXED_FRAC) * b as f64
-                        / traffic.batch.max_batch as f64);
-            let coll_done = t_next + coll_time;
-            let start_exec = coll_done.max(exec_free);
-            let exec_time = if let Some(m) = measured.as_mut() {
-                // real batched kernels at the padded bucket size; scale
-                // each fog's measured host time by its capability and
-                // current background load, BSP barrier per layer
-                let step = start_exec.max(0.0) as usize;
-                let mut total = 0f64;
-                for layer_times in m.run_batch(slot) {
-                    let mut mx = 0f64;
-                    for (j, &h) in layer_times.iter().enumerate() {
-                        let load = trace.at(step, j).clamp(0.0, 0.85);
-                        mx = mx.max(h * node_mult[j] / (1.0 - load));
-                    }
-                    total += mx;
-                }
-                // the block-diagonal batch ships `slot` copies of the
-                // halo rows, so the (bandwidth-dominated) sync share
-                // scales with the bucket
-                total + report.base_sync_s * slot as f64
-            } else {
-                let per_fog = exec_per_fog(&host_times, &node_mult,
-                                           &trace, start_exec);
-                let slowest =
-                    per_fog.iter().cloned().fold(0f64, f64::max);
-                (slowest + report.base_sync_s)
-                    * (EXEC_FIXED_FRAC
-                        + (1.0 - EXEC_FIXED_FRAC) * slot as f64)
-            };
-            let finish = start_exec + exec_time;
-            coll_free = coll_done;
-            exec_free = finish;
-            exec_busy += exec_time;
-            finishes.push(finish);
-            report.slo.batches += 1;
-            batch_total += b;
-            report.slo.completed += b;
-            for &a in &batch {
-                latencies.push(finish - a);
-            }
-        }
-    }
-
-    // ---- summaries -------------------------------------------------------
-    report.slo.mean_batch = if report.slo.batches > 0 {
-        batch_total as f64 / report.slo.batches as f64
-    } else {
-        0.0
-    };
-    report.exec_utilization = if exec_free > 0.0 {
-        (exec_busy / exec_free.max(traffic.duration_s)).min(1.0)
-    } else {
-        0.0
-    };
-    report.queue_len_mean = if qlen_ticks > 0 {
-        qlen_sum as f64 / qlen_ticks as f64
-    } else {
-        0.0
-    };
-    report.slo.finalize(&latencies);
-    report.slo.queue = queue;
-    report.latencies = latencies;
-    if let Some(m) = &measured {
-        report.engine = m.engine_name().to_string();
-        report.bucket_host_ms = m.bucket_summary();
-    }
-    Ok(report)
+    let fabric = run_fabric(cluster, vec![input], traffic,
+                            FairPolicy::Drr, engine)?;
+    Ok(fabric.aggregate)
 }
 
 /// JSON record of one loadtest run (everything in here is deterministic
@@ -569,10 +272,15 @@ pub fn report_json(label: &str, traffic: &TrafficConfig,
 /// the bench harness and the loadtest experiment — one schema. `engine`
 /// names the execution engine behind the runs; `kernels` carries
 /// kernel-level bench timings (empty outside the bench harness).
+/// Stamped with the same `rev`/`date` provenance fields as
+/// BENCH_history.jsonl, so recorded loadtest numbers are traceable
+/// across PRs.
 pub fn doc_json(dataset: &str, model: &str, net: &str, engine: &str,
                 runs: Vec<Json>, kernels: Vec<Json>) -> Json {
     obj(vec![
         ("benchmark", s("loadtest")),
+        ("rev", s(&git_rev())),
+        ("date", s(&utc_date_string())),
         ("dataset", s(dataset)),
         ("model", s(model)),
         ("net", s(net)),
@@ -585,8 +293,10 @@ pub fn doc_json(dataset: &str, model: &str, net: &str, engine: &str,
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::fog::Cluster;
     use crate::net::NetKind;
     use crate::runtime::EngineKind;
+    use crate::serving::pipeline::Placement;
 
     fn tiny() -> (Graph, DatasetSpec) {
         let (mut g, _) = crate::graph::generate::sbm(400, 2000, 8, 0.85, 3);
@@ -848,5 +558,17 @@ mod tests {
         let txt = j.to_string();
         let parsed = Json::parse(&txt).unwrap();
         assert_eq!(parsed.get("label").unwrap().as_str(), Some("fograph"));
+    }
+
+    #[test]
+    fn doc_json_carries_provenance() {
+        let doc = doc_json("siot", "gcn", "wifi", "analytic",
+                           Vec::new(), Vec::new());
+        let rev = doc.get("rev").unwrap().as_str().unwrap();
+        assert!(!rev.is_empty());
+        let date = doc.get("date").unwrap().as_str().unwrap();
+        assert_eq!(date.len(), 10);
+        assert_eq!(doc.get("benchmark").unwrap().as_str(),
+                   Some("loadtest"));
     }
 }

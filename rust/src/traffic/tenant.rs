@@ -1,0 +1,440 @@
+//! Tenant declarations for the multi-tenant serving fabric: one
+//! `TenantSpec` per `--tenant` CLI flag (repeatable), each naming a
+//! workload — model, dataset, arrival process, offered rate, fair-share
+//! weight, latency objective — that shares the fog cluster with every
+//! other tenant. Unset fields inherit the legacy single-tenant flags,
+//! so `--tenant model=sage,rps=50` rides on the same `--arrival`,
+//! `--slo-ms` and `--queue-cap` the run was given.
+//!
+//! Identity discipline: every derived quantity (per-tenant stream
+//! seeds, scheduling tie-breaks, report ordering) keys off the tenant
+//! NAME, never the declaration position, so an N-tenant run is
+//! invariant under reordering its `--tenant` flags — asserted by the
+//! fabric property tests.
+
+use super::arrival::ArrivalKind;
+use super::sim::TrafficConfig;
+use crate::util::rng::mix64;
+
+/// How the fabric arbitrates released batches between tenants
+/// competing for the shared execution station.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum FairPolicy {
+    /// Deficit-round-robin weighted-fair queuing: each tenant earns
+    /// service credit in proportion to its weight, so one tenant's
+    /// burst cannot starve another's SLO (the default).
+    #[default]
+    Drr,
+    /// Shared-FIFO control: always serve the tenant whose oldest
+    /// queued request arrived first, weights ignored — the baseline a
+    /// fairness claim must beat.
+    Fifo,
+}
+
+impl FairPolicy {
+    pub fn parse(s: &str) -> Option<FairPolicy> {
+        match s {
+            "drr" | "wfq" => Some(FairPolicy::Drr),
+            "fifo" => Some(FairPolicy::Fifo),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            FairPolicy::Drr => "drr",
+            FairPolicy::Fifo => "fifo",
+        }
+    }
+}
+
+/// One `--tenant` declaration, fields optional where a legacy flag
+/// provides the default.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TenantSpec {
+    pub name: Option<String>,
+    pub model: Option<String>,
+    pub dataset: Option<String>,
+    pub arrival: Option<ArrivalKind>,
+    pub rps: Option<f64>,
+    /// Fair-share weight (DRR credit rate). Defaults to 1.
+    pub weight: Option<f64>,
+    pub slo_s: Option<f64>,
+    /// Explicit arrival-stream seed; defaults to a stable mix of the
+    /// run seed and the tenant name.
+    pub seed: Option<u64>,
+    pub queue_cap: Option<usize>,
+}
+
+impl TenantSpec {
+    /// Parse one `--tenant` value: comma-separated `key=value` pairs.
+    /// Recognized keys: `name`, `model`, `dataset`, `arrival`, `rps`,
+    /// `weight`, `slo-ms`, `seed`, `queue-cap`. Malformed specs —
+    /// unknown or duplicate keys, non-numeric numbers, zero or
+    /// negative `weight`/`rps`/`slo-ms` — are errors the CLI turns
+    /// into exit code 2.
+    pub fn parse(spec: &str) -> Result<TenantSpec, String> {
+        let mut out = TenantSpec::default();
+        let mut seen: Vec<&str> = Vec::new();
+        if spec.trim().is_empty() {
+            return Err("empty --tenant spec".to_string());
+        }
+        for part in spec.split(',') {
+            let part = part.trim();
+            let (key, value) = part.split_once('=').ok_or_else(|| {
+                format!(
+                    "--tenant field {part:?} is not key=value \
+                     (expected e.g. model=gcn,rps=100,weight=2)"
+                )
+            })?;
+            if seen.contains(&key) {
+                return Err(format!(
+                    "--tenant field {key:?} given twice in {spec:?}"
+                ));
+            }
+            let bad_num = |what: &str| {
+                format!(
+                    "--tenant {key}={value:?} is not a valid {what}"
+                )
+            };
+            match key {
+                "name" => {
+                    if value.is_empty() {
+                        return Err(
+                            "--tenant name= must not be empty".into()
+                        );
+                    }
+                    out.name = Some(value.to_string());
+                }
+                "model" => out.model = Some(value.to_string()),
+                "dataset" => out.dataset = Some(value.to_string()),
+                "arrival" => {
+                    out.arrival =
+                        Some(ArrivalKind::parse(value).ok_or_else(
+                            || {
+                                format!(
+                                    "--tenant arrival={value:?} \
+                                     (expected \
+                                     poisson|bursty|diurnal)"
+                                )
+                            },
+                        )?)
+                }
+                "rps" => {
+                    let v: f64 = value
+                        .parse()
+                        .map_err(|_| bad_num("rate"))?;
+                    if !v.is_finite() || v <= 0.0 {
+                        return Err(format!(
+                            "--tenant rps must be positive and \
+                             finite (got {value})"
+                        ));
+                    }
+                    out.rps = Some(v);
+                }
+                "weight" => {
+                    let v: f64 = value
+                        .parse()
+                        .map_err(|_| bad_num("weight"))?;
+                    if !v.is_finite() || v <= 0.0 {
+                        return Err(format!(
+                            "--tenant weight must be positive and \
+                             finite (got {value}); a zero-weight \
+                             tenant would never be scheduled"
+                        ));
+                    }
+                    out.weight = Some(v);
+                }
+                "slo-ms" => {
+                    let v: f64 = value
+                        .parse()
+                        .map_err(|_| bad_num("latency bound"))?;
+                    if !v.is_finite() || v <= 0.0 {
+                        return Err(format!(
+                            "--tenant slo-ms must be positive and \
+                             finite (got {value})"
+                        ));
+                    }
+                    out.slo_s = Some(v / 1e3);
+                }
+                "seed" => {
+                    out.seed = Some(
+                        value.parse().map_err(|_| bad_num("seed"))?,
+                    )
+                }
+                "queue-cap" => {
+                    let v: usize = value
+                        .parse()
+                        .map_err(|_| bad_num("queue bound"))?;
+                    if v == 0 {
+                        return Err(
+                            "--tenant queue-cap must be >= 1".into()
+                        );
+                    }
+                    out.queue_cap = Some(v);
+                }
+                _ => {
+                    return Err(format!(
+                        "unknown --tenant field {key:?} (expected \
+                         name|model|dataset|arrival|rps|weight|\
+                         slo-ms|seed|queue-cap)"
+                    ))
+                }
+            }
+            seen.push(key);
+        }
+        Ok(out)
+    }
+
+    /// Fill the unset fields from the legacy single-tenant flags and
+    /// produce the runnable tenant. `default_model`/`default_dataset`
+    /// are the run-level `--model`/`--dataset`.
+    pub fn resolve(&self, base: &TrafficConfig, default_model: &str,
+                   default_dataset: &str) -> Tenant {
+        let model = self
+            .model
+            .clone()
+            .unwrap_or_else(|| default_model.to_string());
+        let dataset = self
+            .dataset
+            .clone()
+            .unwrap_or_else(|| default_dataset.to_string());
+        let name = self
+            .name
+            .clone()
+            .unwrap_or_else(|| format!("{model}-{dataset}"));
+        let stream_seed = self
+            .seed
+            .unwrap_or_else(|| tenant_stream_seed(base.seed, &name));
+        Tenant {
+            name,
+            model,
+            dataset,
+            arrival: self.arrival.unwrap_or(base.arrival),
+            rps: self.rps.unwrap_or(base.rps),
+            weight: self.weight.unwrap_or(1.0),
+            slo_s: self.slo_s.unwrap_or(base.slo_s),
+            stream_seed,
+            queue_cap: self.queue_cap.unwrap_or(base.queue_cap),
+        }
+    }
+}
+
+/// A fully-resolved tenant the fabric runs.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tenant {
+    pub name: String,
+    pub model: String,
+    pub dataset: String,
+    pub arrival: ArrivalKind,
+    /// Mean offered load, requests/second.
+    pub rps: f64,
+    /// Fair-share weight (DRR credit rate).
+    pub weight: f64,
+    /// This tenant's end-to-end latency objective.
+    pub slo_s: f64,
+    /// Seed of this tenant's arrival stream (identity-derived unless
+    /// the spec pinned one), so runs are invariant under `--tenant`
+    /// reordering.
+    pub stream_seed: u64,
+    /// Admission bound on this tenant's wait queue (requests; the
+    /// fabric enforces at least one full batch, like the legacy
+    /// `effective_queue_cap`).
+    pub queue_cap: usize,
+}
+
+impl Tenant {
+    /// The legacy single-stream flags as a one-tenant fabric: the
+    /// stream seed is the run seed itself (NOT name-mixed), so a
+    /// one-tenant fabric run replays the exact request stream the
+    /// pre-fabric loop generated for the same `--seed`.
+    pub fn legacy(base: &TrafficConfig, model: &str,
+                  dataset: &str) -> Tenant {
+        Tenant {
+            name: "default".to_string(),
+            model: model.to_string(),
+            dataset: dataset.to_string(),
+            arrival: base.arrival,
+            rps: base.rps,
+            weight: 1.0,
+            slo_s: base.slo_s,
+            stream_seed: base.seed,
+            queue_cap: base.queue_cap,
+        }
+    }
+
+    /// A tenant named `name` riding on the legacy flag defaults, with
+    /// the stream seed derived from the NAME (the identity
+    /// discipline). Use this — not `legacy(..)` plus a `name`
+    /// mutation, which would leave `stream_seed` stale and silently
+    /// correlate two tenants' arrival streams.
+    pub fn named(base: &TrafficConfig, name: &str, model: &str,
+                 dataset: &str) -> Tenant {
+        Tenant {
+            name: name.to_string(),
+            stream_seed: tenant_stream_seed(base.seed, name),
+            ..Tenant::legacy(base, model, dataset)
+        }
+    }
+}
+
+/// The canonical burst-fairness scenario: a bursty, throughput-
+/// oriented high-weight tenant saturating the cluster (offered 2.5×
+/// the probed capacity, 4:1 weight, lenient 5 s SLO, ~1.2 s of queue)
+/// against a latency-sensitive low-weight Poisson tenant at ~8% of
+/// capacity with a 600 ms SLO. ONE definition, shared by the loadtest
+/// experiment's DRR-vs-FIFO table and the fairness integration test,
+/// so the reported numbers and the asserted property can never drift
+/// onto different scenarios. `cap` is the measured service capacity
+/// (completions/second) from a saturating single-tenant probe run.
+pub fn burst_fairness_pair(base: &TrafficConfig, cap: f64,
+                           hi_model: &str, lo_model: &str,
+                           dataset: &str) -> (Tenant, Tenant) {
+    let mut hi = Tenant::named(base, "hi-burst", hi_model, dataset);
+    hi.arrival = ArrivalKind::Bursty;
+    hi.rps = 2.5 * cap;
+    hi.weight = 4.0;
+    hi.slo_s = 5.0;
+    hi.queue_cap = (1.2 * cap).ceil() as usize;
+    let mut lo = Tenant::named(base, "lo-steady", lo_model, dataset);
+    lo.rps = (0.08 * cap).max(20.0);
+    lo.weight = 1.0;
+    lo.slo_s = 0.6;
+    (hi, lo)
+}
+
+/// FNV-1a over the tenant name — a stable, dependency-free identity
+/// hash (NOT `DefaultHasher`, whose output may change across rustc
+/// releases and would silently re-seed every recorded run).
+pub fn fnv1a(name: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in name.as_bytes() {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// Per-tenant arrival-stream seed: a stable mix of the run seed and
+/// the tenant identity. Declaration order never enters.
+pub fn tenant_stream_seed(run_seed: u64, name: &str) -> u64 {
+    mix64(run_seed ^ fnv1a(name))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_a_full_spec() {
+        let t = TenantSpec::parse(
+            "name=hi,model=gcn,dataset=siot,arrival=bursty,rps=300,\
+             weight=4,slo-ms=150,seed=9,queue-cap=128",
+        )
+        .unwrap();
+        assert_eq!(t.name.as_deref(), Some("hi"));
+        assert_eq!(t.model.as_deref(), Some("gcn"));
+        assert_eq!(t.dataset.as_deref(), Some("siot"));
+        assert_eq!(t.arrival, Some(ArrivalKind::Bursty));
+        assert_eq!(t.rps, Some(300.0));
+        assert_eq!(t.weight, Some(4.0));
+        assert_eq!(t.slo_s, Some(0.15));
+        assert_eq!(t.seed, Some(9));
+        assert_eq!(t.queue_cap, Some(128));
+    }
+
+    #[test]
+    fn malformed_specs_are_errors() {
+        for bad in [
+            "",
+            "model",                    // not key=value
+            "model=gcn,model=sage",     // duplicate key
+            "weight=0",                 // zero weight
+            "weight=-1",
+            "weight=abc",
+            "rps=0",
+            "rps=inf",
+            "slo-ms=0",
+            "queue-cap=0",
+            "arrival=weekly",
+            "name=",
+            "color=blue",               // unknown key
+        ] {
+            assert!(TenantSpec::parse(bad).is_err(),
+                    "{bad:?} accepted");
+        }
+    }
+
+    #[test]
+    fn resolve_inherits_legacy_flags() {
+        let base = TrafficConfig::default();
+        let t = TenantSpec::parse("model=sage,rps=50")
+            .unwrap()
+            .resolve(&base, "gcn", "siot");
+        assert_eq!(t.name, "sage-siot");
+        assert_eq!(t.model, "sage");
+        assert_eq!(t.dataset, "siot");
+        assert_eq!(t.arrival, base.arrival);
+        assert_eq!(t.rps, 50.0);
+        assert_eq!(t.weight, 1.0);
+        assert_eq!(t.slo_s, base.slo_s);
+        assert_eq!(t.queue_cap, base.queue_cap);
+        // identity-derived stream seed, stable and name-keyed
+        assert_eq!(t.stream_seed,
+                   tenant_stream_seed(base.seed, "sage-siot"));
+    }
+
+    #[test]
+    fn stream_seeds_are_identity_keyed() {
+        let a = tenant_stream_seed(7, "alpha");
+        assert_eq!(a, tenant_stream_seed(7, "alpha"));
+        assert_ne!(a, tenant_stream_seed(7, "beta"));
+        assert_ne!(a, tenant_stream_seed(8, "alpha"));
+        // legacy mapping uses the raw run seed, not the mix
+        let base = TrafficConfig::default();
+        let t = Tenant::legacy(&base, "gcn", "siot");
+        assert_eq!(t.stream_seed, base.seed);
+        assert_eq!(t.name, "default");
+        // the named constructor derives the seed from the name
+        let a = Tenant::named(&base, "alpha", "gcn", "siot");
+        assert_eq!(a.name, "alpha");
+        assert_eq!(a.stream_seed,
+                   tenant_stream_seed(base.seed, "alpha"));
+        assert_ne!(a.stream_seed,
+                   Tenant::named(&base, "beta", "gcn", "siot")
+                       .stream_seed);
+    }
+
+    #[test]
+    fn burst_fairness_pair_is_the_canonical_scenario() {
+        let base = TrafficConfig::default();
+        let (hi, lo) = burst_fairness_pair(&base, 500.0, "gcn",
+                                           "sage", "siot");
+        assert_eq!(hi.name, "hi-burst");
+        assert_eq!(lo.name, "lo-steady");
+        assert_eq!(hi.arrival, ArrivalKind::Bursty);
+        assert_eq!(hi.rps, 2.5 * 500.0);
+        assert_eq!((hi.weight, lo.weight), (4.0, 1.0));
+        assert!(hi.slo_s > lo.slo_s);
+        assert_eq!(hi.queue_cap, 600);
+        assert_eq!(lo.rps, 40.0);
+        // independent identity-derived streams
+        assert_ne!(hi.stream_seed, lo.stream_seed);
+        assert_eq!(hi.stream_seed,
+                   tenant_stream_seed(base.seed, "hi-burst"));
+        // tiny probed capacity: the low tenant keeps a sane floor
+        let (_, lo2) =
+            burst_fairness_pair(&base, 60.0, "gcn", "sage", "siot");
+        assert_eq!(lo2.rps, 20.0);
+    }
+
+    #[test]
+    fn fair_policy_parses() {
+        assert_eq!(FairPolicy::parse("drr"), Some(FairPolicy::Drr));
+        assert_eq!(FairPolicy::parse("wfq"), Some(FairPolicy::Drr));
+        assert_eq!(FairPolicy::parse("fifo"), Some(FairPolicy::Fifo));
+        assert_eq!(FairPolicy::parse("edf"), None);
+        assert_eq!(FairPolicy::Drr.name(), "drr");
+        assert_eq!(FairPolicy::Fifo.name(), "fifo");
+    }
+}

@@ -8,6 +8,10 @@ pub struct Args {
     pub positional: Vec<String>,
     pub flags: BTreeMap<String, String>,
     pub switches: Vec<String>,
+    /// Every `--key value` occurrence in argv order — the substrate
+    /// for REPEATABLE flags (`get_all`), which `flags` (last wins)
+    /// cannot represent.
+    pub occurrences: Vec<(String, String)>,
 }
 
 impl Args {
@@ -21,12 +25,16 @@ impl Args {
             if let Some(name) = a.strip_prefix("--") {
                 if let Some((k, v)) = name.split_once('=') {
                     out.flags.insert(k.to_string(), v.to_string());
+                    out.occurrences
+                        .push((k.to_string(), v.to_string()));
                 } else if known_switches.contains(&name) {
                     out.switches.push(name.to_string());
                 } else if i + 1 < argv.len()
                     && !argv[i + 1].starts_with("--")
                 {
                     out.flags.insert(name.to_string(), argv[i + 1].clone());
+                    out.occurrences
+                        .push((name.to_string(), argv[i + 1].clone()));
                     i += 1;
                 } else {
                     out.switches.push(name.to_string());
@@ -41,6 +49,16 @@ impl Args {
 
     pub fn get(&self, key: &str) -> Option<&str> {
         self.flags.get(key).map(|s| s.as_str())
+    }
+
+    /// Every value a repeatable flag was given, in argv order (empty
+    /// when absent) — e.g. one element per `--tenant` spec.
+    pub fn get_all(&self, key: &str) -> Vec<&str> {
+        self.occurrences
+            .iter()
+            .filter(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+            .collect()
     }
 
     pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
@@ -105,6 +123,23 @@ mod tests {
         assert!(a.has("verbose"));
         assert_eq!(a.get_usize("repeats", 1), 5);
         assert_eq!(a.get_usize("missing", 9), 9);
+    }
+
+    #[test]
+    fn repeated_flags_collect_in_order() {
+        let a = Args::parse(
+            &v(&["loadtest", "--tenant", "model=gcn,rps=100",
+                 "--tenant=model=sage,weight=2", "--rps", "50"]),
+            &[],
+        );
+        assert_eq!(
+            a.get_all("tenant"),
+            vec!["model=gcn,rps=100", "model=sage,weight=2"]
+        );
+        // the map keeps last-wins semantics for single-valued flags
+        assert_eq!(a.get("tenant"), Some("model=sage,weight=2"));
+        assert_eq!(a.get_all("rps"), vec!["50"]);
+        assert!(a.get_all("absent").is_empty());
     }
 
     #[test]

@@ -5,6 +5,7 @@
 
 pub mod cli;
 pub mod json;
+pub mod provenance;
 pub mod rng;
 pub mod stats;
 pub mod testkit;

@@ -1,0 +1,64 @@
+//! Run provenance for committed artifacts: the short git revision and
+//! the UTC civil date. Every benchmark artifact that outlives a PR
+//! (BENCH_kernels.json, BENCH_history.jsonl, BENCH_loadtest.json)
+//! stamps both, so a number in a working tree is always traceable to
+//! the code that produced it — regressions are attributable ACROSS
+//! runs, not just within one artifact.
+
+/// Short git revision, or "unknown" outside a work tree.
+pub fn git_rev() -> String {
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+/// UTC civil date from the system clock, YYYY-MM-DD (no chrono
+/// offline; Hinnant's days-to-civil algorithm).
+pub fn utc_date_string() -> String {
+    let secs = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let z = (secs / 86_400) as i64 + 719_468;
+    let era = z.div_euclid(146_097);
+    let doe = z.rem_euclid(146_097);
+    let yoe = (doe - doe / 1460 + doe / 36_524 - doe / 146_096) / 365;
+    let doy = doe - (365 * yoe + yoe / 4 - yoe / 100);
+    let mp = (5 * doy + 2) / 153;
+    let d = doy - (153 * mp + 2) / 5 + 1;
+    let m = if mp < 10 { mp + 3 } else { mp - 9 };
+    let y = yoe + era * 400 + i64::from(m <= 2);
+    format!("{y:04}-{m:02}-{d:02}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn date_is_iso_shaped() {
+        let d = utc_date_string();
+        assert_eq!(d.len(), 10, "{d}");
+        let bytes = d.as_bytes();
+        assert_eq!(bytes[4], b'-');
+        assert_eq!(bytes[7], b'-');
+        assert!(d[..4].parse::<i64>().unwrap() >= 2024);
+        let month: u32 = d[5..7].parse().unwrap();
+        let day: u32 = d[8..10].parse().unwrap();
+        assert!((1..=12).contains(&month));
+        assert!((1..=31).contains(&day));
+    }
+
+    #[test]
+    fn rev_is_nonempty() {
+        // inside the repo's work tree this is a short hash; elsewhere
+        // the documented "unknown" fallback — never an empty string
+        assert!(!git_rev().is_empty());
+    }
+}
