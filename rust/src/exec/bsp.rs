@@ -21,12 +21,45 @@ use std::borrow::Borrow;
 use std::sync::Arc;
 
 use crate::graph::{subgraph, ExchangePlan, Graph, LocalGraph};
+use crate::obs::clock::Stopwatch;
+use crate::obs::recorder::{Recorder, Ring};
+use crate::obs::span::{Phase, SpanEvent};
 use crate::runtime::csr_backend::{in_neighbor_lists, CsrPartition,
                                   InNbrLists};
 use crate::runtime::kernels::{group_widths, FogJob, FogKernel,
-                              FogWorkerPool, KernelScratch, ShardExec};
+                              FogWorkerPool, JobTrace, KernelScratch,
+                              ShardExec};
 use crate::runtime::{engine::EngineError, EdgeArrays, Engine,
                      WeightBundle};
+
+/// Flight-recorder context for a traced measured execution: the
+/// recorder handle plus the rings the spans land in. Built once per
+/// (tenant, plan) pair and reused across micro-batches, so each pool
+/// worker remains the sole producer of its wall ring (`rings[j]` is
+/// written only by fog worker `j`; `coord` only by the calling
+/// thread). Dropping the context detaches tracing without touching
+/// the execution path.
+pub struct ExecTrace {
+    pub rec: Arc<Recorder>,
+    /// `rings[j]` — fog `j`'s wall-clock ring (kernel + queue spans).
+    pub rings: Vec<Arc<Ring>>,
+    /// Coordinator-thread ring (halo-sync wall spans).
+    pub coord: Arc<Ring>,
+    /// Canonical tenant index the spans are attributed to.
+    pub tenant: u32,
+}
+
+impl ExecTrace {
+    pub fn new(rec: &Arc<Recorder>, n_fogs: usize,
+               tenant: u32) -> ExecTrace {
+        ExecTrace {
+            rec: rec.clone(),
+            rings: (0..n_fogs).map(|_| rec.ring()).collect(),
+            coord: rec.ring(),
+            tenant,
+        }
+    }
+}
 
 #[derive(Clone, Debug)]
 pub struct BspResult {
@@ -430,7 +463,7 @@ impl BatchedBspPlan {
     /// kernel time.
     pub fn execute(&self, features: &[f32], f_in: usize,
                    wb: &Arc<WeightBundle>, batch: usize) -> BspResult {
-        self.execute_inner(features, f_in, wb, batch, true, true)
+        self.execute_inner(features, f_in, wb, batch, true, true, None)
     }
 
     /// Like `execute` but skips global-output assembly — the serving
@@ -439,7 +472,20 @@ impl BatchedBspPlan {
     pub fn execute_timings(&self, features: &[f32], f_in: usize,
                            wb: &Arc<WeightBundle>, batch: usize)
                            -> BspResult {
-        self.execute_inner(features, f_in, wb, batch, false, true)
+        self.execute_inner(features, f_in, wb, batch, false, true, None)
+    }
+
+    /// `execute_timings` with flight-recorder spans: each fog worker
+    /// records wall-clock `kernel`/`queue` spans into its ring and the
+    /// calling thread records halo-sync spans — numerically identical
+    /// to the untraced path (tracing only observes the seconds the
+    /// result already reports).
+    pub fn execute_timings_traced(&self, features: &[f32], f_in: usize,
+                                  wb: &Arc<WeightBundle>, batch: usize,
+                                  trace: Option<&ExecTrace>)
+                                  -> BspResult {
+        self.execute_inner(features, f_in, wb, batch, false, true,
+                           trace)
     }
 
     /// `execute` with every fog's kernels run inline on the calling
@@ -450,7 +496,7 @@ impl BatchedBspPlan {
     pub fn execute_serial(&self, features: &[f32], f_in: usize,
                           wb: &Arc<WeightBundle>, batch: usize)
                           -> BspResult {
-        self.execute_inner(features, f_in, wb, batch, true, false)
+        self.execute_inner(features, f_in, wb, batch, true, false, None)
     }
 
     /// Build this layer's per-fog jobs, draining `states` (fogs owning
@@ -458,8 +504,8 @@ impl BatchedBspPlan {
     #[allow(clippy::too_many_arguments)]
     fn layer_jobs(&self, layer: usize, dim: usize, last: bool,
                   batch: usize, f_in: usize,
-                  states: &mut [Vec<f32>], wb: &Arc<WeightBundle>)
-                  -> Vec<Option<FogJob>> {
+                  states: &mut [Vec<f32>], wb: &Arc<WeightBundle>,
+                  trace: Option<&ExecTrace>) -> Vec<Option<FogJob>> {
         (0..self.n_fogs)
             .map(|j| {
                 if self.subs[j].n_total() == 0 {
@@ -480,6 +526,12 @@ impl BatchedBspPlan {
                     sub: self.subs[j].clone(),
                     csr: self.csrs.get(j).cloned(),
                     nbr: self.nbrs.get(j).cloned(),
+                    trace: trace.map(|tr| JobTrace {
+                        rec: tr.rec.clone(),
+                        ring: tr.rings[j].clone(),
+                        tenant: tr.tenant,
+                        layer: layer as i32,
+                    }),
                 })
             })
             .collect()
@@ -513,9 +565,11 @@ impl BatchedBspPlan {
         (outs, secs)
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn execute_inner(&self, features: &[f32], f_in: usize,
                      wb: &Arc<WeightBundle>, batch: usize,
-                     assemble_outputs: bool, pooled: bool) -> BspResult {
+                     assemble_outputs: bool, pooled: bool,
+                     trace: Option<&ExecTrace>) -> BspResult {
         assert!(batch >= 1);
         let n_fogs = self.n_fogs;
         let model: &str = &self.model;
@@ -558,13 +612,24 @@ impl BatchedBspPlan {
         let mut dim = f_in;
         let mut out_dim = f_in;
         for layer in 0..num_layers {
+            let sw = trace.map(|_| Stopwatch::start());
             sync_bytes.push(sync_halo(&self.subs, &self.plan,
                                       &self.halo_index, &mut states,
                                       dim, batch));
+            if let (Some(tr), Some(sw)) = (trace, sw) {
+                let dur_us = sw.elapsed_s() * 1e6;
+                let end_us = tr.rec.wall_now_us();
+                let mut ev = SpanEvent::new(Phase::Sync, tr.tenant,
+                                            end_us - dur_us, dur_us)
+                    .count(batch)
+                    .on_wall();
+                ev.layer = layer as i32;
+                tr.rec.span(&tr.coord, ev);
+            }
             sync_max_out.push(max_out_vertices * dim * 4 * batch);
             let last = layer + 1 == num_layers;
             let jobs = self.layer_jobs(layer, dim, last, batch, f_in,
-                                       &mut states, wb);
+                                       &mut states, wb, trace);
             let (outs, secs, waits) = if pooled {
                 self.pool.dispatch(jobs)
             } else {

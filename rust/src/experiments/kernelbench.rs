@@ -4,7 +4,9 @@
 //! the intra-fog thread-scaling curve (1/2/4-worker row sharding on
 //! the largest single-fog shapes), the dispatched-vs-scalar SIMD
 //! margin when the AVX2+FMA path is active, plus batched-vs-serial fog
-//! execution on the persistent worker pool, and writes
+//! execution on the persistent worker pool and the flight-recorder
+//! overhead gate (`recorder_overhead`: traced vs untraced kernel loop,
+//! enabled tracing must stay under 2%), and writes
 //! BENCH_kernels.json so the repo's perf trajectory is recorded run
 //! over run. Every run also appends a one-line summary (date, git rev,
 //! stat, per-shape speedups, SIMD path, thread scaling) to
@@ -24,6 +26,9 @@ use std::sync::Arc;
 
 use crate::exec::BatchedBspPlan;
 use crate::graph::{generate, subgraph};
+use crate::obs::clock::ClockMode;
+use crate::obs::recorder::{Recorder, Ring};
+use crate::obs::span::{Phase, SpanEvent};
 use crate::runtime::csr_backend::CsrPartition;
 use crate::runtime::kernels::shard::{min_rows_per_shard, split_rows,
                                      ShardClosure, ShardExec,
@@ -38,6 +43,11 @@ use crate::util::timer::{bench, black_box};
 
 /// Relative parity tolerance between tiled and naive kernels.
 const PARITY_TOL: f32 = 1e-5;
+
+/// Enabled-tracing overhead gate on the serving-shaped kernel loop:
+/// the flight recorder must stay under this relative cost (see
+/// `obs::recorder`'s design constraints).
+const RECORDER_GATE_PCT: f64 = 2.0;
 
 /// `num`, except non-finite (curve skipped) becomes JSON null.
 fn num_or_null(x: f64) -> Json {
@@ -607,6 +617,111 @@ pub fn cmd(args: &Args) -> i32 {
     }
     let fog_rows = vec![obj(fog_fields)];
 
+    // ---- recorder overhead: traced vs untraced kernel loop --------------
+    // The flight-recorder contract (obs::recorder): a disabled recorder
+    // costs ~one branch per call site, and enabled tracing stays under
+    // RECORDER_GATE_PCT on a serving-shaped kernel loop — per-fog,
+    // per-layer spans plus registry phase accounting wrapped around real
+    // GEMM work, the same shape the measured fabric emits per batch.
+    // The enabled figure is GATED, so a recorder hot-path regression
+    // fails bench-kernels exactly like a kernel parity break would.
+    let (rec_overhead_doc, rec_overhead_hist) = {
+        let (n, fi, fo) = (1024usize, 128usize, 128usize);
+        let mut rng = Rng::new(0x0B5E);
+        let x: Vec<f32> =
+            (0..n * fi).map(|_| rng.normal_f32(0.0, 0.3)).collect();
+        let w: Vec<f32> =
+            (0..fi * fo).map(|_| rng.normal_f32(0.0, 0.3)).collect();
+        let b: Vec<f32> =
+            (0..fo).map(|_| rng.normal_f32(0.0, 0.3)).collect();
+        let spans_per_iter = 8usize; // 4 fogs x 2 layers
+        let run_traced = |rec: &Arc<Recorder>, ring: &Ring| {
+            for j in 0..4usize {
+                for l in 0..2usize {
+                    let t = rec.wall_now_us();
+                    rec.span(ring,
+                             SpanEvent::new(Phase::Kernel, 0, t, 0.0)
+                                 .fog(j)
+                                 .layer(l)
+                                 .on_wall());
+                    rec.registry()
+                        .record_phase(0, j as i32, Phase::Kernel, 1e-6);
+                }
+                rec.registry()
+                    .record_phase(0, j as i32, Phase::Sync, 1e-7);
+            }
+            black_box(gemm::gemm_bias(&x, n, fi, &w, fo, &b));
+        };
+        let r_base = bench("obs/kernel_untraced", min_s, 10_000, || {
+            black_box(gemm::gemm_bias(&x, n, fi, &w, fo, &b));
+        });
+        let rec_off = Recorder::disabled();
+        let ring_off = rec_off.ring();
+        let r_off = bench("obs/kernel_rec_disabled", min_s, 10_000,
+                          || {
+            run_traced(&rec_off, &ring_off);
+        });
+        let rec_on = Recorder::with_capacity(ClockMode::Wall, 1 << 16);
+        let ring_on = rec_on.ring();
+        let r_on = bench("obs/kernel_rec_enabled", min_s, 10_000, || {
+            run_traced(&rec_on, &ring_on);
+        });
+        // raw ring-push cost, amortized (the spans-only inner loop)
+        let r_push = bench("obs/span_push_x1024", min_s.min(0.1),
+                           10_000, || {
+            for i in 0..1024u32 {
+                rec_on.span(&ring_on,
+                            SpanEvent::new(Phase::Kernel, 0,
+                                           i as f64, 1.0)
+                                .on_wall());
+            }
+        });
+        let push_ns = r_push.p50_ns / 1024.0;
+        let en_pct =
+            (r_on.p50_ns - r_base.p50_ns) / r_base.p50_ns * 100.0;
+        let dis_pct =
+            (r_off.p50_ns - r_base.p50_ns) / r_base.p50_ns * 100.0;
+        // relative gate plus a 50 us absolute epsilon so sub-ms jitter
+        // on a shared host cannot trip it
+        if r_on.p50_ns
+            > r_base.p50_ns * (1.0 + RECORDER_GATE_PCT / 100.0)
+                + 50_000.0
+        {
+            eprintln!(
+                "OVERHEAD FAIL recorder: enabled tracing costs \
+                 {en_pct:.2}% on the kernel loop \
+                 (gate <{RECORDER_GATE_PCT}%)"
+            );
+            return 1;
+        }
+        println!(
+            "recorder  untraced {:>8.2} ms  disabled {:>8.2} ms \
+             ({dis_pct:+.2}%)  enabled {:>8.2} ms ({en_pct:+.2}%)  \
+             push {push_ns:.0} ns/ev  gate <{RECORDER_GATE_PCT}%",
+            r_base.p50_ns / 1e6,
+            r_off.p50_ns / 1e6,
+            r_on.p50_ns / 1e6
+        );
+        (
+            obj(vec![
+                ("shape", s("gemm_1024x128x128")),
+                ("spans_per_iter", num(spans_per_iter as f64)),
+                ("untraced_ms", num(r_base.p50_ns / 1e6)),
+                ("disabled_ms", num(r_off.p50_ns / 1e6)),
+                ("enabled_ms", num(r_on.p50_ns / 1e6)),
+                ("disabled_overhead_pct", num(dis_pct)),
+                ("enabled_overhead_pct", num(en_pct)),
+                ("span_push_ns", num(push_ns)),
+                ("gate_pct", num(RECORDER_GATE_PCT)),
+            ]),
+            obj(vec![
+                ("enabled_pct", num(en_pct)),
+                ("disabled_pct", num(dis_pct)),
+                ("span_push_ns", num(push_ns)),
+            ]),
+        )
+    };
+
     println!(
         "min speedups: gemm {min_gemm_speedup:.2}x, spmm \
          {min_spmm_speedup:.2}x (parity ok at {PARITY_TOL} rel, \
@@ -628,6 +743,7 @@ pub fn cmd(args: &Args) -> i32 {
         ("simd_margin", arr(simd_rows)),
         ("thread_scaling", arr(scaling_rows)),
         ("fog_exec", arr(fog_rows)),
+        ("recorder_overhead", rec_overhead_doc),
         (
             "summary",
             obj(vec![
@@ -674,6 +790,7 @@ pub fn cmd(args: &Args) -> i32 {
         ("gemm_speedups", obj(gentries)),
         ("spmm_speedups", obj(sentries)),
         ("fog_batched_speedup", num(fog_speedup)),
+        ("recorder_overhead", rec_overhead_hist),
         (
             "scaling_at_max_workers",
             obj(vec![

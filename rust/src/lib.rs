@@ -9,6 +9,7 @@ pub mod experiments;
 pub mod fog;
 pub mod graph;
 pub mod net;
+pub mod obs;
 pub mod partition;
 pub mod placement;
 pub mod profile;

@@ -12,26 +12,33 @@
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 use fograph::experiments;
 use fograph::graph::{datasets, io as gio, DatasetSpec, Graph};
 use fograph::net::NetKind;
+use fograph::obs::{self, ClockMode, Recorder};
 use fograph::profile::PerfModel;
 use fograph::runtime::kernels::shard;
 use fograph::runtime::{reference, Engine, EngineKind};
 use fograph::serving::{self, pipeline};
-use fograph::traffic::{doc_json, fabric_json, report_json, run_fabric,
-                       run_loadtest, ArrivalKind, BatchPolicy,
-                       ExecMode, FabricReport, FairPolicy,
-                       LoadtestReport, TenantInput, TenantSpec,
-                       TrafficConfig};
-use fograph::util::cli::Args;
+use fograph::traffic::{doc_json, fabric_json, report_json,
+                       run_fabric_traced, run_loadtest_traced,
+                       ArrivalKind, BatchPolicy, ExecMode,
+                       FabricReport, FairPolicy, LoadtestReport,
+                       TenantInput, TenantSpec, TrafficConfig};
+use fograph::util::cli::{self, Args};
 use fograph::util::json::Json;
 
 fn main() {
     // a bad FOGRAPH_MIN_ROWS_PER_SHARD must be a loud exit-2 before
     // any kernel latches the default, not a silent fallback
     if let Err(e) = shard::min_rows_per_shard_env() {
+        eprintln!("{e}");
+        std::process::exit(2);
+    }
+    // same discipline for the flight-recorder ring capacity override
+    if let Err(e) = obs::trace_buf_env() {
         eprintln!("{e}");
         std::process::exit(2);
     }
@@ -74,6 +81,7 @@ USAGE:
                  [--queue-cap N] [--spill] [--no-background-load]
                  [--scheduler-period SECONDS] [--out BENCH_loadtest.json]
                  [--tenant k=v,... (repeatable)] [--fair drr|fifo]
+                 [--trace-out trace.json]
   repro bench-kernels [--smoke] [--kernel-threads K]
                  [--out BENCH_kernels.json]
                  [--history BENCH_history.jsonl]
@@ -112,6 +120,18 @@ MULTI-TENANT (loadtest only):
   BENCH_loadtest.json.
   Example: --tenant name=hi,model=gcn,arrival=bursty,rps=300,weight=4
            --tenant name=lo,model=sage,rps=50,weight=1
+
+OBSERVABILITY (loadtest only):
+  --trace-out PATH records every request-lifecycle span (arrive →
+  queue → admit/shed → batch → collect → transfer → kernel → sync →
+  reply, plus scheduler replan events) into a Chrome trace-event JSON
+  loadable in Perfetto (ui.perfetto.dev), one track per fog plus
+  wall-clock worker tracks in measured mode, and writes a
+  Prometheus-style metrics snapshot next to it (.prom). The
+  phase_breakdown section of BENCH_loadtest.json is always computed
+  from the same registry, tracing on or off — analytic runs stay
+  bit-reproducible either way. FOGRAPH_TRACE_BUF overrides the
+  per-thread span ring capacity (events; validated at startup).
 
 KERNELS:
   bench-kernels measures the tiled GEMM and blocked SpMM against their
@@ -217,7 +237,7 @@ fn cmd_dataset(args: &Args) -> i32 {
             println!("{n}: already at {}", path.display());
             continue;
         }
-        let t = std::time::Instant::now();
+        let t = fograph::obs::clock::Stopwatch::start();
         let g = match datasets::generate(n) {
             Ok(g) => g,
             Err(e) => {
@@ -232,7 +252,7 @@ fn cmd_dataset(args: &Args) -> i32 {
             g.undirected_edges(),
             spec.feature_dim,
             path.display(),
-            t.elapsed().as_secs_f64()
+            t.elapsed_s()
         );
     }
     0
@@ -342,6 +362,28 @@ fn cmd_loadtest(args: &Args) -> i32 {
         eprintln!("unknown fair policy {fair_name} (expected drr|fifo)");
         return 2;
     };
+    // --trace-out preflight: a bare flag (value eaten by the shell)
+    // or an unwritable path must be a loud exit 2 before any dataset
+    // work, not a silent no-trace run or a failure after the run
+    if args.has("trace-out") {
+        eprintln!(
+            "--trace-out requires a file path (e.g. --trace-out \
+             trace.json)"
+        );
+        return 2;
+    }
+    let trace_out = args.get("trace-out").map(str::to_string);
+    if let Some(p) = &trace_out {
+        if let Err(e) = cli::probe_writable(p) {
+            eprintln!("--trace-out: {e}");
+            return 2;
+        }
+    }
+    let rec = if trace_out.is_some() {
+        Recorder::enabled(ClockMode::Virtual)
+    } else {
+        Recorder::disabled()
+    };
     let mode = args.get_or("mode", "fograph");
     let modes: Vec<&str> = if mode == "all" {
         pipeline::MODES.to_vec()
@@ -376,7 +418,8 @@ fn cmd_loadtest(args: &Args) -> i32 {
             }
         }
         return cmd_loadtest_fabric(args, &traffic, fair, &modes,
-                                   &specs);
+                                   &specs, &rec,
+                                   trace_out.as_deref());
     }
     let (spec, g, model, net) = match resolve_run_inputs(args) {
         Ok(x) => x,
@@ -392,8 +435,9 @@ fn cmd_loadtest(args: &Args) -> i32 {
             return 2;
         };
         let omegas = vec![PerfModel::uncalibrated(); cluster.len()];
-        let r = match run_loadtest(&g, &spec, &cluster, &opts, &traffic,
-                                   &omegas, &mut engine) {
+        let r = match run_loadtest_traced(&g, &spec, &cluster, &opts,
+                                          &traffic, &omegas,
+                                          &mut engine, &rec) {
             Ok(r) => r,
             Err(e) => {
                 eprintln!("loadtest failed: {e}");
@@ -417,15 +461,27 @@ fn cmd_loadtest(args: &Args) -> i32 {
             return 1;
         }
     }
+    if let Some(path) = &trace_out {
+        let names = vec!["default".to_string()];
+        match obs::write_trace_files(&rec, &names, path) {
+            Ok(prom) => println!("wrote {path} (+ {prom})"),
+            Err(e) => {
+                eprintln!("cannot write {path}: {e}");
+                return 1;
+            }
+        }
+    }
     0
 }
 
 /// The multi-tenant loadtest path: resolve every `--tenant` spec
 /// against the legacy flags, load each distinct dataset once, and run
 /// the serving fabric per mode.
+#[allow(clippy::too_many_arguments)]
 fn cmd_loadtest_fabric(args: &Args, traffic: &TrafficConfig,
                        fair: FairPolicy, modes: &[&str],
-                       specs: &[TenantSpec]) -> i32 {
+                       specs: &[TenantSpec], rec: &Arc<Recorder>,
+                       trace_out: Option<&str>) -> i32 {
     let default_model = args.get_or("model", "gcn").to_string();
     let default_dataset = args.get_or("dataset", "siot").to_string();
     let tenants: Vec<fograph::traffic::Tenant> = specs
@@ -488,6 +544,7 @@ fn cmd_loadtest_fabric(args: &Args, traffic: &TrafficConfig,
     }
     let mut engine = make_engine(args);
     let mut runs: Vec<Json> = Vec::new();
+    let mut trace_names: Vec<String> = Vec::new();
     for m in modes {
         let mut inputs: Vec<TenantInput<'_>> = Vec::new();
         let mut cluster = None;
@@ -515,14 +572,18 @@ fn cmd_loadtest_fabric(args: &Args, traffic: &TrafficConfig,
             });
         }
         let cluster = cluster.expect("at least one tenant");
-        let fr = match run_fabric(&cluster, inputs, traffic, fair,
-                                  &mut engine) {
+        let fr = match run_fabric_traced(&cluster, inputs, traffic,
+                                         fair, &mut engine, rec) {
             Ok(fr) => fr,
             Err(e) => {
                 eprintln!("loadtest failed: {e}");
                 return 1;
             }
         };
+        if trace_names.is_empty() {
+            trace_names =
+                fr.tenants.iter().map(|t| t.name.clone()).collect();
+        }
         print_fabric(m, net, traffic, &fr);
         runs.push(fabric_json(m, traffic, &fr));
     }
@@ -545,6 +606,15 @@ fn cmd_loadtest_fabric(args: &Args, traffic: &TrafficConfig,
         Err(e) => {
             eprintln!("cannot write {out}: {e}");
             return 1;
+        }
+    }
+    if let Some(path) = trace_out {
+        match obs::write_trace_files(rec, &trace_names, path) {
+            Ok(prom) => println!("wrote {path} (+ {prom})"),
+            Err(e) => {
+                eprintln!("cannot write {path}: {e}");
+                return 1;
+            }
         }
     }
     0

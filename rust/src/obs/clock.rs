@@ -1,0 +1,84 @@
+//! Clock abstraction for the observability plane. The fabric event
+//! loop advances a *virtual* clock (simulated seconds) in both
+//! analytic and `--exec measured` runs; only kernel workers ever read
+//! the wall clock. Centralizing that distinction here keeps analytic
+//! runs bit-reproducible with tracing on or off: nothing on the
+//! virtual timeline may consult `Instant`.
+
+use std::time::Instant;
+
+/// Which timeline a recorder (and its exported trace) is anchored to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ClockMode {
+    /// Simulated seconds driven by the fabric event loop (analytic
+    /// runs; also the scheduling timeline of measured runs).
+    Virtual,
+    /// Wall clock relative to the recorder's epoch (measured kernel
+    /// execution inside worker threads).
+    Wall,
+}
+
+impl ClockMode {
+    pub fn name(self) -> &'static str {
+        match self {
+            ClockMode::Virtual => "virtual",
+            ClockMode::Wall => "wall",
+        }
+    }
+}
+
+/// The one sanctioned wall-clock primitive: every wall measurement in
+/// the crate (bench harness, serving collection, kernel workers) goes
+/// through a `Stopwatch` so wall-time reads are greppable and the
+/// virtual timeline provably never touches one.
+#[derive(Clone, Copy, Debug)]
+pub struct Stopwatch {
+    t0: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Stopwatch {
+        Stopwatch { t0: Instant::now() }
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed_ns(&self) -> f64 {
+        self.t0.elapsed().as_nanos() as f64
+    }
+
+    /// Elapsed seconds since start (or the last `lap`), resetting the
+    /// origin — for phase-to-phase splits without nested watches.
+    pub fn lap_s(&mut self) -> f64 {
+        let now = Instant::now();
+        let dt = now.duration_since(self.t0).as_secs_f64();
+        self.t0 = now;
+        dt
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_is_monotone() {
+        let mut w = Stopwatch::start();
+        let a = w.elapsed_ns();
+        let b = w.elapsed_ns();
+        assert!(b >= a);
+        assert!(a >= 0.0);
+        let lap = w.lap_s();
+        assert!(lap >= 0.0);
+        // after a lap the origin resets, so elapsed restarts near zero
+        assert!(w.elapsed_s() <= lap + 1.0);
+    }
+
+    #[test]
+    fn clock_mode_names() {
+        assert_eq!(ClockMode::Virtual.name(), "virtual");
+        assert_eq!(ClockMode::Wall.name(), "wall");
+    }
+}

@@ -1,0 +1,224 @@
+//! Exporters: Chrome trace-event JSON (loadable in `chrome://tracing`
+//! and Perfetto) and the text/JSON snapshots built on the registry.
+//!
+//! Track layout: one trace *process* per tenant (pid = canonical
+//! tenant index; the synthetic "control" process carries scheduler
+//! events), one *thread* per track within it — tid 0 is the request
+//! lifecycle, tid `1 + fog` the per-fog virtual timeline, and tid
+//! `1000 + fog` the wall-clock kernel timeline of measured runs (the
+//! offset keeps the two clock domains visually separate).
+
+use std::collections::BTreeMap;
+
+use super::recorder::Recorder;
+use super::span::{SpanEvent, NO_TENANT};
+use crate::util::json::{self, Json};
+
+/// Wall-clock tracks start here so they sort after virtual tracks.
+pub const WALL_TID_BASE: usize = 1000;
+
+fn track_tid(ev: &SpanEvent) -> usize {
+    if ev.wall {
+        // fog -1 (coordinator work like halo sync) gets the base slot
+        WALL_TID_BASE + (ev.fog + 1) as usize
+    } else if ev.fog < 0 {
+        0
+    } else {
+        1 + ev.fog as usize
+    }
+}
+
+fn track_pid(ev: &SpanEvent, n_tenants: usize) -> usize {
+    if ev.tenant == NO_TENANT {
+        n_tenants
+    } else {
+        ev.tenant as usize
+    }
+}
+
+fn meta_event(name: &str, pid: usize, tid: Option<usize>,
+              value: &str) -> Json {
+    let mut fields = vec![
+        ("name", json::s(name)),
+        ("ph", json::s("M")),
+        ("pid", json::num(pid as f64)),
+        ("args", json::obj(vec![("name", json::s(value))])),
+    ];
+    if let Some(tid) = tid {
+        fields.push(("tid", json::num(tid as f64)));
+    }
+    json::obj(fields)
+}
+
+/// Build the Chrome trace-event document for everything the recorder
+/// retained. `tenants` is the canonical (name-sorted) tenant order
+/// the fabric ran with, so pids are stable across runs.
+pub fn chrome_trace(rec: &Recorder, tenants: &[String]) -> Json {
+    let events = rec.events();
+    let mut out: Vec<Json> = Vec::with_capacity(events.len() + 16);
+
+    // process/thread naming metadata
+    for (i, t) in tenants.iter().enumerate() {
+        out.push(meta_event("process_name", i, None, t));
+    }
+    out.push(meta_event("process_name", tenants.len(), None, "control"));
+    let mut tracks: BTreeMap<(usize, usize), String> = BTreeMap::new();
+    for ev in &events {
+        let key = (track_pid(ev, tenants.len()), track_tid(ev));
+        tracks.entry(key).or_insert_with(|| {
+            match (ev.wall, ev.fog < 0) {
+                (false, true) => "lifecycle".to_string(),
+                (false, false) => format!("fog {}", ev.fog),
+                (true, true) => "coordinator (wall)".to_string(),
+                (true, false) => format!("fog {} (wall)", ev.fog),
+            }
+        });
+    }
+    for ((pid, tid), name) in &tracks {
+        out.push(meta_event("thread_name", *pid, Some(*tid), name));
+    }
+
+    for ev in &events {
+        let mut args = vec![("seq", json::num(ev.seq as f64))];
+        if ev.layer >= 0 {
+            args.push(("layer", json::num(f64::from(ev.layer))));
+        }
+        if ev.shard >= 0 {
+            args.push(("shard", json::num(f64::from(ev.shard))));
+        }
+        if ev.n > 0 {
+            args.push(("n", json::num(f64::from(ev.n))));
+        }
+        if let Some(cause) = ev.cause {
+            args.push(("cause", json::s(cause)));
+        }
+        out.push(json::obj(vec![
+            ("name", json::s(ev.phase.name())),
+            (
+                "cat",
+                json::s(if ev.wall { "wall" } else { "virtual" }),
+            ),
+            ("ph", json::s("X")),
+            ("ts", json::num(ev.t_us)),
+            ("dur", json::num(ev.dur_us)),
+            ("pid", json::num(track_pid(ev, tenants.len()) as f64)),
+            ("tid", json::num(track_tid(ev) as f64)),
+            ("args", json::obj(args)),
+        ]));
+    }
+
+    json::obj(vec![
+        ("traceEvents", Json::Arr(out)),
+        ("displayTimeUnit", json::s("ms")),
+        (
+            "otherData",
+            json::obj(vec![
+                ("clock", json::s(rec.mode().name())),
+                ("dropped_events", json::num(rec.dropped() as f64)),
+            ]),
+        ),
+    ])
+}
+
+/// Write the trace document plus the Prometheus snapshot (same stem,
+/// `.prom` extension). Returns the snapshot path.
+pub fn write_trace_files(rec: &Recorder, tenants: &[String],
+                         trace_path: &str) -> std::io::Result<String> {
+    let doc = chrome_trace(rec, tenants);
+    std::fs::write(trace_path, format!("{doc}\n"))?;
+    let prom_path = match trace_path.rsplit_once('.') {
+        Some((stem, _)) => format!("{stem}.prom"),
+        None => format!("{trace_path}.prom"),
+    };
+    std::fs::write(&prom_path, rec.registry().prometheus_text(tenants))?;
+    Ok(prom_path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::clock::ClockMode;
+    use crate::obs::span::Phase;
+
+    #[test]
+    fn trace_parses_and_names_tracks() {
+        let rec = Recorder::with_capacity(ClockMode::Virtual, 64);
+        let ring = rec.ring();
+        rec.span(&ring, SpanEvent::new(Phase::Arrive, 0, 0.0, 0.0));
+        rec.span(
+            &ring,
+            SpanEvent::new(Phase::Kernel, 1, 10.0, 5.0).fog(2).layer(0),
+        );
+        rec.span(
+            &ring,
+            SpanEvent::new(Phase::Kernel, 0, 20.0, 3.0)
+                .fog(1)
+                .on_wall(),
+        );
+        rec.span(
+            &ring,
+            SpanEvent::new(Phase::Replan, NO_TENANT, 30.0, 0.0)
+                .because("iep-replan"),
+        );
+        let tenants = vec!["a".to_string(), "b".to_string()];
+        let doc = chrome_trace(&rec, &tenants);
+        let parsed = Json::parse(&doc.to_string()).unwrap();
+        let evs = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        // metadata + 4 spans
+        assert!(evs.len() >= 4);
+        let spans: Vec<&Json> = evs
+            .iter()
+            .filter(|e| e.get("ph").unwrap().as_str() == Some("X"))
+            .collect();
+        assert_eq!(spans.len(), 4);
+        // wall kernel lands on the offset track
+        let wall = spans
+            .iter()
+            .find(|e| e.get("cat").unwrap().as_str() == Some("wall"))
+            .unwrap();
+        assert_eq!(
+            wall.get("tid").unwrap().as_usize(),
+            Some(WALL_TID_BASE + 2)
+        );
+        // control events live on the synthetic pid
+        let replan = spans
+            .iter()
+            .find(|e| e.get("name").unwrap().as_str() == Some("replan"))
+            .unwrap();
+        assert_eq!(replan.get("pid").unwrap().as_usize(), Some(2));
+        assert_eq!(
+            replan.at(&["args", "cause"]).unwrap().as_str(),
+            Some("iep-replan")
+        );
+        assert_eq!(
+            parsed.at(&["otherData", "clock"]).unwrap().as_str(),
+            Some("virtual")
+        );
+    }
+
+    #[test]
+    fn trace_files_roundtrip_on_disk() {
+        let rec = Recorder::with_capacity(ClockMode::Wall, 16);
+        let ring = rec.ring();
+        rec.span(
+            &ring,
+            SpanEvent::new(Phase::Kernel, 0, 0.0, 2.0).fog(0).on_wall(),
+        );
+        rec.registry().counter("sheds").inc();
+        let dir = std::env::temp_dir().join("fograph_obs_export_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace.json");
+        let prom = write_trace_files(
+            &rec,
+            &["solo".to_string()],
+            path.to_str().unwrap(),
+        )
+        .unwrap();
+        let txt = std::fs::read_to_string(&path).unwrap();
+        assert!(Json::parse(txt.trim()).is_ok());
+        let ptxt = std::fs::read_to_string(&prom).unwrap();
+        assert!(ptxt.contains("fograph_sheds 1"));
+        assert!(prom.ends_with(".prom"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,27 @@
+//! Observability plane: a low-overhead flight recorder threaded
+//! through the serving path, the unified metrics registry that
+//! subsumes the crate's ad-hoc statistics, and the exporters that
+//! turn a run into a Perfetto-loadable trace, a Prometheus snapshot,
+//! and the `phase_breakdown` report section.
+//!
+//! Layering: [`span`] defines the taxonomy, [`clock`] the two
+//! timelines, [`recorder`] the lock-free per-thread rings plus the
+//! always-on [`registry`], and [`export`] the output formats. The
+//! fabric, measured executor, kernel pool and scheduler record into
+//! this plane; the roadmap's fault-detection, pipelining-occupancy
+//! and autoscaling items consume it.
+
+pub mod clock;
+pub mod export;
+pub mod recorder;
+pub mod registry;
+pub mod span;
+
+pub use clock::{ClockMode, Stopwatch};
+pub use export::{chrome_trace, write_trace_files, WALL_TID_BASE};
+pub use recorder::{
+    active_trace_buf, parse_trace_buf, trace_buf_env, Recorder, Ring,
+    DEFAULT_TRACE_BUF, MAX_TRACE_BUF, TRACE_BUF_ENV,
+};
+pub use registry::{Counter, Histogram, Registry};
+pub use span::{Phase, SpanEvent, NO_TENANT};

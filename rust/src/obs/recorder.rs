@@ -1,0 +1,304 @@
+//! Flight recorder: per-thread ring buffers of sequence-stamped
+//! `SpanEvent`s plus an always-on metrics `Registry`.
+//!
+//! Design constraints, in order:
+//! 1. **Analytic runs stay bit-reproducible with tracing on or off.**
+//!    Recording is strictly write-only — nothing recorded ever feeds
+//!    back into event-loop arithmetic, and the virtual timeline never
+//!    reads the wall clock.
+//! 2. **The hot path takes no locks.** Each producer thread owns one
+//!    `Ring` (single-writer); a push is one relaxed load, one slot
+//!    write, one release store, plus one relaxed fetch-add for the
+//!    global sequence stamp. The only mutex in the recorder guards
+//!    ring *registration*, which happens once per producer at setup.
+//! 3. **Disabled costs one predictable branch.** `span()` returns
+//!    immediately when the recorder is disabled; `bench-kernels
+//!    --smoke` gates the enabled overhead (<2%) and reports the
+//!    disabled delta in its `recorder_overhead` section.
+//!
+//! Ring capacity comes from `FOGRAPH_TRACE_BUF` (events per ring),
+//! validated at startup exactly like `FOGRAPH_MIN_ROWS_PER_SHARD`.
+//! When a ring wraps, the oldest spans are overwritten — the registry
+//! keeps exact phase totals regardless, so `phase_breakdown` never
+//! loses time even when the trace does.
+
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+use super::clock::ClockMode;
+use super::registry::Registry;
+use super::span::SpanEvent;
+use crate::util::cli::parse_bounded_usize;
+
+/// Default events per ring (~4.6 MB at 72 B/event across 16 rings —
+/// plenty for a smoke loadtest, bounded for long runs).
+pub const DEFAULT_TRACE_BUF: usize = 65_536;
+/// Environment override for the per-ring event capacity.
+pub const TRACE_BUF_ENV: &str = "FOGRAPH_TRACE_BUF";
+/// Upper bound on the override: 2^24 events per ring (~1.2 GB across
+/// a 16-fog pool) — anything larger is a typo, not a tuning.
+pub const MAX_TRACE_BUF: usize = 1 << 24;
+
+/// Parse a `FOGRAPH_TRACE_BUF` value: a positive integer in
+/// `1..=MAX_TRACE_BUF`, same contract as `FOGRAPH_MIN_ROWS_PER_SHARD`
+/// (and sharing its parser, so the two can never drift).
+pub fn parse_trace_buf(v: &str) -> Result<usize, String> {
+    parse_bounded_usize(TRACE_BUF_ENV, v, 1, MAX_TRACE_BUF)
+}
+
+/// Read and validate the env override; `Ok(DEFAULT_TRACE_BUF)` when
+/// unset. `main` calls this at startup and turns `Err` into exit 2.
+pub fn trace_buf_env() -> Result<usize, String> {
+    match std::env::var(TRACE_BUF_ENV) {
+        Ok(v) => parse_trace_buf(&v),
+        Err(_) => Ok(DEFAULT_TRACE_BUF),
+    }
+}
+
+static ACTIVE_TRACE_BUF: OnceLock<usize> = OnceLock::new();
+
+/// The ring capacity in effect, latched on first use (invalid env
+/// values fall back to the default here; startup validation already
+/// rejected them for the CLI).
+pub fn active_trace_buf() -> usize {
+    *ACTIVE_TRACE_BUF
+        .get_or_init(|| trace_buf_env().unwrap_or(DEFAULT_TRACE_BUF))
+}
+
+/// A single-producer wraparound span buffer. Exactly one thread may
+/// `push` (the owning producer); `snapshot` is only meaningful at
+/// quiescence — after the producer finished or between dispatch
+/// barriers — which the release/acquire pair on `head` makes safe.
+pub struct Ring {
+    buf: UnsafeCell<Box<[SpanEvent]>>,
+    head: AtomicU64,
+}
+
+// SAFETY: the single-writer contract above. `head` is the only shared
+// cursor; slots are published by the release store and read after the
+// matching acquire load, and readers only run at producer quiescence.
+unsafe impl Send for Ring {}
+unsafe impl Sync for Ring {}
+
+impl Ring {
+    pub fn new(cap: usize) -> Ring {
+        let cap = cap.max(1);
+        Ring {
+            buf: UnsafeCell::new(
+                vec![SpanEvent::empty(); cap].into_boxed_slice(),
+            ),
+            head: AtomicU64::new(0),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        // SAFETY: length is immutable after construction.
+        unsafe { (*self.buf.get()).len() }
+    }
+
+    /// Total events ever pushed (≥ retained when wrapped).
+    pub fn pushed(&self) -> u64 {
+        self.head.load(Ordering::Acquire)
+    }
+
+    /// Write one event. Single-producer: only the owning thread.
+    #[inline]
+    pub fn push(&self, ev: SpanEvent) {
+        let h = self.head.load(Ordering::Relaxed);
+        // SAFETY: single-writer contract; readers wait for the
+        // release store below.
+        let buf = unsafe { &mut *self.buf.get() };
+        let cap = buf.len();
+        buf[(h as usize) % cap] = ev;
+        self.head.store(h + 1, Ordering::Release);
+    }
+
+    /// Copy out the retained events, oldest first. Call only at
+    /// producer quiescence.
+    pub fn snapshot(&self) -> Vec<SpanEvent> {
+        let h = self.head.load(Ordering::Acquire) as usize;
+        // SAFETY: quiescence contract — no concurrent writer.
+        let buf = unsafe { &*self.buf.get() };
+        let cap = buf.len();
+        let n = h.min(cap);
+        ((h - n)..h).map(|i| buf[i % cap]).collect()
+    }
+}
+
+/// The recorder: owns the sequence counter, the ring directory, and
+/// the metrics registry. Cheap to share (`Arc`); one per run.
+///
+/// The registry is *always* live — phase totals and queue-depth
+/// gauges feed `phase_breakdown` in every report, traced or not, so
+/// enabling tracing cannot change report bytes. The `enabled` flag
+/// gates only span recording into rings.
+pub struct Recorder {
+    enabled: bool,
+    mode: ClockMode,
+    epoch: Instant,
+    ring_cap: usize,
+    seq: AtomicU64,
+    rings: Mutex<Vec<Arc<Ring>>>,
+    registry: Registry,
+}
+
+impl Recorder {
+    fn build(enabled: bool, mode: ClockMode, ring_cap: usize) -> Recorder {
+        Recorder {
+            enabled,
+            mode,
+            epoch: Instant::now(),
+            ring_cap: ring_cap.max(1),
+            seq: AtomicU64::new(0),
+            rings: Mutex::new(Vec::new()),
+            registry: Registry::new(),
+        }
+    }
+
+    /// A recorder that records no spans but still accumulates the
+    /// registry — the default for untraced runs.
+    pub fn disabled() -> Arc<Recorder> {
+        Arc::new(Recorder::build(false, ClockMode::Virtual, 1))
+    }
+
+    /// An enabled recorder with ring capacity from the (validated)
+    /// environment.
+    pub fn enabled(mode: ClockMode) -> Arc<Recorder> {
+        Arc::new(Recorder::build(true, mode, active_trace_buf()))
+    }
+
+    /// An enabled recorder with an explicit ring capacity (tests and
+    /// benches).
+    pub fn with_capacity(mode: ClockMode, cap: usize) -> Arc<Recorder> {
+        Arc::new(Recorder::build(true, mode, cap))
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    pub fn mode(&self) -> ClockMode {
+        self.mode
+    }
+
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    /// Register and return a fresh ring for one producer thread.
+    /// Disabled recorders hand out capacity-1 rings so producers keep
+    /// a uniform code path at negligible memory cost.
+    pub fn ring(&self) -> Arc<Ring> {
+        let cap = if self.enabled { self.ring_cap } else { 1 };
+        let r = Arc::new(Ring::new(cap));
+        self.rings.lock().unwrap().push(Arc::clone(&r));
+        r
+    }
+
+    /// Microseconds since the recorder epoch on the wall clock — the
+    /// timebase of `wall` spans. Virtual-timeline code must not call
+    /// this.
+    pub fn wall_now_us(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64() * 1e6
+    }
+
+    /// Record one span into `ring`, stamping the global sequence.
+    /// No-op (one branch) when disabled.
+    #[inline]
+    pub fn span(&self, ring: &Ring, mut ev: SpanEvent) {
+        if !self.enabled {
+            return;
+        }
+        ev.seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        ring.push(ev);
+    }
+
+    /// All retained events across rings, in sequence order. Call at
+    /// quiescence (after the run's pools and loops finished).
+    pub fn events(&self) -> Vec<SpanEvent> {
+        let rings = self.rings.lock().unwrap();
+        let mut out: Vec<SpanEvent> =
+            rings.iter().flat_map(|r| r.snapshot()).collect();
+        out.sort_by_key(|e| e.seq);
+        out
+    }
+
+    /// Events pushed but overwritten by ring wraparound.
+    pub fn dropped(&self) -> u64 {
+        let rings = self.rings.lock().unwrap();
+        rings
+            .iter()
+            .map(|r| r.pushed().saturating_sub(r.capacity() as u64))
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::span::Phase;
+
+    #[test]
+    fn ring_wraps_and_keeps_newest() {
+        let r = Ring::new(4);
+        for i in 0..10u64 {
+            let mut ev = SpanEvent::new(Phase::Queue, 0, i as f64, 0.0);
+            ev.seq = i;
+            r.push(ev);
+        }
+        let got = r.snapshot();
+        assert_eq!(got.len(), 4);
+        assert_eq!(
+            got.iter().map(|e| e.seq).collect::<Vec<_>>(),
+            vec![6, 7, 8, 9]
+        );
+        assert_eq!(r.pushed(), 10);
+    }
+
+    #[test]
+    fn disabled_recorder_records_nothing() {
+        let rec = Recorder::disabled();
+        let ring = rec.ring();
+        for _ in 0..100 {
+            rec.span(&ring, SpanEvent::new(Phase::Kernel, 0, 0.0, 1.0));
+        }
+        assert!(rec.events().is_empty());
+        assert_eq!(ring.pushed(), 0);
+        // the registry is still live
+        rec.registry().record_phase(0, -1, Phase::Queue, 0.5);
+        assert!(rec.registry().phase_seconds(0, -1, Phase::Queue) > 0.0);
+    }
+
+    #[test]
+    fn sequence_stamps_order_across_rings() {
+        let rec = Recorder::with_capacity(ClockMode::Virtual, 16);
+        let a = rec.ring();
+        let b = rec.ring();
+        rec.span(&a, SpanEvent::new(Phase::Arrive, 0, 0.0, 0.0));
+        rec.span(&b, SpanEvent::new(Phase::Queue, 0, 1.0, 2.0));
+        rec.span(&a, SpanEvent::new(Phase::Reply, 0, 3.0, 0.0));
+        let evs = rec.events();
+        assert_eq!(evs.len(), 3);
+        assert_eq!(
+            evs.iter().map(|e| e.seq).collect::<Vec<_>>(),
+            vec![0, 1, 2]
+        );
+        assert_eq!(evs[1].phase, Phase::Queue);
+        assert_eq!(rec.dropped(), 0);
+    }
+
+    #[test]
+    fn trace_buf_parse_matches_min_rows_contract() {
+        assert_eq!(parse_trace_buf("1"), Ok(1));
+        assert_eq!(parse_trace_buf(" 4096 "), Ok(4096));
+        assert!(parse_trace_buf("0").is_err());
+        assert!(parse_trace_buf("-3").is_err());
+        assert!(parse_trace_buf("abc").is_err());
+        assert!(parse_trace_buf("").is_err());
+        assert!(parse_trace_buf(&format!("{}", MAX_TRACE_BUF + 1)).is_err());
+        assert_eq!(parse_trace_buf(&format!("{MAX_TRACE_BUF}")),
+                   Ok(MAX_TRACE_BUF));
+    }
+}

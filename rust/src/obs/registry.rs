@@ -1,0 +1,585 @@
+//! Unified metrics registry: named counters, log-linear histograms,
+//! exact per-(tenant, fog, phase) time accumulators, and per-(tenant,
+//! fog) queue-depth gauges.
+//!
+//! The registry is clock-agnostic — callers hand it durations from
+//! whichever timeline they run on — and always live, so analytic and
+//! measured runs share one accounting path and reports carry a
+//! `phase_breakdown` whether or not span tracing is enabled. Phase
+//! totals are exact f64 sums updated in event order by the (single
+//! threaded) fabric loop, so they are bit-reproducible; histograms
+//! and counters are atomic and may additionally be fed from worker
+//! threads.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::span::{Phase, NO_TENANT};
+use crate::util::json::{self, Json};
+
+/// A monotonic atomic counter.
+#[derive(Default)]
+pub struct Counter {
+    v: AtomicU64,
+}
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.v.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// Sub-buckets per power-of-two octave.
+pub const HIST_SUB: usize = 4;
+/// Octaves covered: values in `[1, 2^40)` units resolve log-linearly;
+/// smaller values land in bucket 0, larger saturate the top bucket.
+pub const HIST_OCTAVES: usize = 40;
+/// Total bucket count (one underflow bucket + the log-linear grid).
+pub const HIST_BUCKETS: usize = 1 + HIST_SUB * HIST_OCTAVES;
+
+/// A lock-free log-linear histogram: each power-of-two octave is
+/// split into `HIST_SUB` equal sub-buckets, giving ≤ ~12% relative
+/// error over 12 decades with a fixed 161-slot table. Units are the
+/// caller's choice (the crate records microseconds).
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_bits: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: (0..HIST_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_bits: AtomicU64::new(0f64.to_bits()),
+        }
+    }
+
+    /// Bucket index for a value (non-finite and sub-1 values underflow
+    /// to bucket 0; values past the top octave saturate).
+    pub fn bucket_index(v: f64) -> usize {
+        if !v.is_finite() || v < 1.0 {
+            return 0;
+        }
+        let l = (v.log2().floor() as usize).min(HIST_OCTAVES - 1);
+        let base = (1u64 << l) as f64;
+        let sub = (((v / base) - 1.0) * HIST_SUB as f64) as usize;
+        1 + l * HIST_SUB + sub.min(HIST_SUB - 1)
+    }
+
+    /// Upper edge of bucket `i` (inclusive-exclusive grid; bucket 0 is
+    /// `< 1`).
+    pub fn bucket_upper(i: usize) -> f64 {
+        if i == 0 {
+            return 1.0;
+        }
+        let k = i - 1;
+        let (l, sub) = (k / HIST_SUB, k % HIST_SUB);
+        (1u64 << l) as f64 * (1.0 + (sub + 1) as f64 / HIST_SUB as f64)
+    }
+
+    pub fn record(&self, v: f64) {
+        self.buckets[Self::bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        let mut cur = self.sum_bits.load(Ordering::Relaxed);
+        loop {
+            let new = (f64::from_bits(cur) + v).to_bits();
+            match self.sum_bits.compare_exchange_weak(
+                cur,
+                new,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.sum_bits.load(Ordering::Relaxed))
+    }
+
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Fold `other` into `self` — the cross-thread aggregation path,
+    /// tested against a single-threaded oracle.
+    pub fn merge(&self, other: &Histogram) {
+        for (i, b) in other.buckets.iter().enumerate() {
+            let n = b.load(Ordering::Relaxed);
+            if n > 0 {
+                self.buckets[i].fetch_add(n, Ordering::Relaxed);
+            }
+        }
+        self.count.fetch_add(other.count(), Ordering::Relaxed);
+        let add = other.sum();
+        let mut cur = self.sum_bits.load(Ordering::Relaxed);
+        loop {
+            let new = (f64::from_bits(cur) + add).to_bits();
+            match self.sum_bits.compare_exchange_weak(
+                cur,
+                new,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// Approximate percentile: the upper edge of the bucket holding
+    /// the p-th sample (0 when empty).
+    pub fn percentile(&self, p: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target =
+            ((p / 100.0) * total as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return Self::bucket_upper(i);
+            }
+        }
+        Self::bucket_upper(HIST_BUCKETS - 1)
+    }
+}
+
+#[derive(Clone, Copy, Default)]
+struct PhaseAcc {
+    seconds: f64,
+    count: u64,
+}
+
+#[derive(Clone, Copy, Default)]
+struct MeanMax {
+    sum: f64,
+    max: f64,
+    n: u64,
+}
+
+/// The registry proper. Interior-mutable so one `&Registry` can be
+/// shared everywhere a `Recorder` travels.
+#[derive(Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    hists: Mutex<BTreeMap<String, Arc<Histogram>>>,
+    phases: Mutex<BTreeMap<(u32, i32, u8), PhaseAcc>>,
+    queue_depth: Mutex<BTreeMap<(u32, u32), MeanMax>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Get-or-create a named counter. Callers cache the handle; the
+    /// lock is a setup cost, not a hot-path one.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        Arc::clone(
+            self.counters
+                .lock()
+                .unwrap()
+                .entry(name.to_string())
+                .or_default(),
+        )
+    }
+
+    /// Get-or-create a named histogram.
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        Arc::clone(
+            self.hists
+                .lock()
+                .unwrap()
+                .entry(name.to_string())
+                .or_default(),
+        )
+    }
+
+    /// Accumulate time-in-phase. `fog = -1` means tenant-level (the
+    /// lifecycle track); per-fog rows carry the kernel/sync split.
+    pub fn record_phase(&self, tenant: u32, fog: i32, phase: Phase,
+                        seconds: f64) {
+        let mut m = self.phases.lock().unwrap();
+        let acc = m.entry((tenant, fog, phase as u8)).or_default();
+        acc.seconds += seconds;
+        acc.count += 1;
+    }
+
+    pub fn phase_seconds(&self, tenant: u32, fog: i32,
+                         phase: Phase) -> f64 {
+        self.phases
+            .lock()
+            .unwrap()
+            .get(&(tenant, fog, phase as u8))
+            .map_or(0.0, |a| a.seconds)
+    }
+
+    pub fn phase_count(&self, tenant: u32, fog: i32,
+                       phase: Phase) -> u64 {
+        self.phases
+            .lock()
+            .unwrap()
+            .get(&(tenant, fog, phase as u8))
+            .map_or(0, |a| a.count)
+    }
+
+    /// Sample one tenant's backlog on one fog (work-seconds), feeding
+    /// the per-fog queue timelines every tenant now reports.
+    pub fn record_queue_depth(&self, tenant: u32, fog: u32, depth: f64) {
+        let mut m = self.queue_depth.lock().unwrap();
+        let g = m.entry((tenant, fog)).or_default();
+        g.sum += depth;
+        g.n += 1;
+        if depth > g.max {
+            g.max = depth;
+        }
+    }
+
+    /// `(mean, max)` queue depth per fog for one tenant; zero-filled
+    /// up to `n_fogs` so reports stay rectangular.
+    pub fn queue_depth_stats(&self, tenant: u32,
+                             n_fogs: usize) -> (Vec<f64>, Vec<f64>) {
+        let m = self.queue_depth.lock().unwrap();
+        let mut mean = vec![0.0; n_fogs];
+        let mut max = vec![0.0; n_fogs];
+        for ((t, fog), g) in m.iter() {
+            if *t == tenant && (*fog as usize) < n_fogs && g.n > 0 {
+                mean[*fog as usize] = g.sum / g.n as f64;
+                max[*fog as usize] = g.max;
+            }
+        }
+        (mean, max)
+    }
+
+    /// Highest fog index seen (+1) across phase and queue records —
+    /// the fog dimension of the breakdown.
+    fn n_fogs_seen(&self) -> usize {
+        let p = self.phases.lock().unwrap();
+        let q = self.queue_depth.lock().unwrap();
+        let a = p.keys().map(|(_, f, _)| *f + 1).max().unwrap_or(0);
+        let b = q.keys().map(|(_, f)| *f as i32 + 1).max().unwrap_or(0);
+        a.max(b).max(0) as usize
+    }
+
+    /// The `phase_breakdown` report section: per tenant, tenant-level
+    /// time-in-phase (seconds, count, fraction of the tenant's total
+    /// accounted time), per-fog kernel/sync/queue-depth rows, and the
+    /// headline queue-wait vs. kernel split.
+    pub fn phase_breakdown(&self, tenants: &[String]) -> Json {
+        let n_fogs = self.n_fogs_seen();
+        let mut out = BTreeMap::new();
+        for (ti, name) in tenants.iter().enumerate() {
+            let ti = ti as u32;
+            let mut total = 0.0;
+            for ph in Phase::ALL {
+                total += self.phase_seconds(ti, -1, ph);
+            }
+            for fog in 0..n_fogs {
+                for ph in [Phase::Kernel, Phase::Sync] {
+                    total += self.phase_seconds(ti, fog as i32, ph);
+                }
+            }
+            let mut phases = BTreeMap::new();
+            for ph in Phase::ALL {
+                let mut secs = self.phase_seconds(ti, -1, ph);
+                let mut count = self.phase_count(ti, -1, ph);
+                // kernel/sync live on per-fog rows; fold them up
+                if matches!(ph, Phase::Kernel | Phase::Sync) {
+                    for fog in 0..n_fogs {
+                        secs += self.phase_seconds(ti, fog as i32, ph);
+                        count += self.phase_count(ti, fog as i32, ph);
+                    }
+                }
+                if count == 0 && secs == 0.0 {
+                    continue;
+                }
+                phases.insert(
+                    ph.name().to_string(),
+                    json::obj(vec![
+                        ("seconds", json::num(secs)),
+                        ("count", json::num(count as f64)),
+                        (
+                            "fraction",
+                            json::num(if total > 0.0 {
+                                secs / total
+                            } else {
+                                0.0
+                            }),
+                        ),
+                    ]),
+                );
+            }
+            let (qd_mean, qd_max) = self.queue_depth_stats(ti, n_fogs);
+            let per_fog = (0..n_fogs)
+                .map(|fog| {
+                    json::obj(vec![
+                        ("fog", json::num(fog as f64)),
+                        (
+                            "kernel_s",
+                            json::num(self.phase_seconds(
+                                ti,
+                                fog as i32,
+                                Phase::Kernel,
+                            )),
+                        ),
+                        (
+                            "sync_s",
+                            json::num(self.phase_seconds(
+                                ti,
+                                fog as i32,
+                                Phase::Sync,
+                            )),
+                        ),
+                        ("queue_depth_mean_s", json::num(qd_mean[fog])),
+                        ("queue_depth_max_s", json::num(qd_max[fog])),
+                    ])
+                })
+                .collect::<Vec<_>>();
+            let kernel_s: f64 = (0..n_fogs)
+                .map(|f| self.phase_seconds(ti, f as i32, Phase::Kernel))
+                .sum();
+            out.insert(
+                name.clone(),
+                json::obj(vec![
+                    ("total_s", json::num(total)),
+                    ("phases", Json::Obj(phases)),
+                    ("per_fog", Json::Arr(per_fog)),
+                    (
+                        "queue_wait_s",
+                        json::num(self.phase_seconds(ti, -1, Phase::Queue)),
+                    ),
+                    ("kernel_s", json::num(kernel_s)),
+                ]),
+            );
+        }
+        Json::Obj(out)
+    }
+
+    /// Prometheus text-exposition snapshot of everything the registry
+    /// holds.
+    pub fn prometheus_text(&self, tenants: &[String]) -> String {
+        let tenant_label = |t: u32| -> String {
+            if t == NO_TENANT {
+                "control".to_string()
+            } else {
+                tenants
+                    .get(t as usize)
+                    .cloned()
+                    .unwrap_or_else(|| format!("tenant{t}"))
+            }
+        };
+        let mut out = String::new();
+        out.push_str("# TYPE fograph_phase_seconds gauge\n");
+        for ((t, fog, ph), acc) in self.phases.lock().unwrap().iter() {
+            let ph = Phase::from_u8(*ph).map_or("unknown", |p| p.name());
+            out.push_str(&format!(
+                "fograph_phase_seconds{{tenant=\"{}\",fog=\"{}\",\
+                 phase=\"{}\"}} {}\n",
+                tenant_label(*t),
+                fog,
+                ph,
+                acc.seconds
+            ));
+            out.push_str(&format!(
+                "fograph_phase_count{{tenant=\"{}\",fog=\"{}\",\
+                 phase=\"{}\"}} {}\n",
+                tenant_label(*t),
+                fog,
+                ph,
+                acc.count
+            ));
+        }
+        out.push_str("# TYPE fograph_queue_depth_mean_s gauge\n");
+        for ((t, fog), g) in self.queue_depth.lock().unwrap().iter() {
+            if g.n == 0 {
+                continue;
+            }
+            out.push_str(&format!(
+                "fograph_queue_depth_mean_s{{tenant=\"{}\",fog=\"{}\"}} \
+                 {}\n",
+                tenant_label(*t),
+                fog,
+                g.sum / g.n as f64
+            ));
+            out.push_str(&format!(
+                "fograph_queue_depth_max_s{{tenant=\"{}\",fog=\"{}\"}} \
+                 {}\n",
+                tenant_label(*t),
+                fog,
+                g.max
+            ));
+        }
+        for (name, c) in self.counters.lock().unwrap().iter() {
+            let n = sanitize(name);
+            out.push_str(&format!("# TYPE fograph_{n} counter\n"));
+            out.push_str(&format!("fograph_{n} {}\n", c.get()));
+        }
+        for (name, h) in self.hists.lock().unwrap().iter() {
+            let n = sanitize(name);
+            out.push_str(&format!("# TYPE fograph_{n} histogram\n"));
+            let mut cum = 0u64;
+            for (i, b) in h.bucket_counts().into_iter().enumerate() {
+                if b == 0 {
+                    continue;
+                }
+                cum += b;
+                out.push_str(&format!(
+                    "fograph_{n}_bucket{{le=\"{}\"}} {cum}\n",
+                    Histogram::bucket_upper(i)
+                ));
+            }
+            out.push_str(&format!(
+                "fograph_{n}_bucket{{le=\"+Inf\"}} {}\n",
+                h.count()
+            ));
+            out.push_str(&format!("fograph_{n}_sum {}\n", h.sum()));
+            out.push_str(&format!("fograph_{n}_count {}\n", h.count()));
+        }
+        out
+    }
+}
+
+fn sanitize(name: &str) -> String {
+    name.chars()
+        .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn counters_count() {
+        let reg = Registry::new();
+        let c = reg.counter("sheds");
+        c.inc();
+        c.add(4);
+        assert_eq!(reg.counter("sheds").get(), 5);
+        assert_eq!(reg.counter("other").get(), 0);
+    }
+
+    #[test]
+    fn histogram_buckets_are_monotone_and_cover() {
+        let mut last = 0.0;
+        for i in 0..HIST_BUCKETS {
+            let u = Histogram::bucket_upper(i);
+            assert!(u > last, "bucket {i} upper {u} <= {last}");
+            last = u;
+        }
+        // every bucketed value falls below its bucket's upper edge
+        for v in [0.0, 0.5, 1.0, 1.49, 3.0, 7.9, 1000.0, 1e9] {
+            let i = Histogram::bucket_index(v);
+            assert!(v <= Histogram::bucket_upper(i) + 1e-9,
+                    "v={v} i={i}");
+            if i > 0 {
+                assert!(v >= Histogram::bucket_upper(i - 1) * 0.999,
+                        "v={v} i={i}");
+            }
+        }
+        assert_eq!(Histogram::bucket_index(f64::NAN), 0);
+        assert_eq!(Histogram::bucket_index(f64::INFINITY), 0);
+    }
+
+    #[test]
+    fn histogram_merge_matches_single_threaded_oracle() {
+        let mut rng = Rng::new(7);
+        let oracle = Histogram::new();
+        let shards: Vec<Histogram> =
+            (0..4).map(|_| Histogram::new()).collect();
+        for i in 0..4000 {
+            let v = rng.f64() * 1e7;
+            oracle.record(v);
+            shards[i % 4].record(v);
+        }
+        let merged = Histogram::new();
+        for s in &shards {
+            merged.merge(s);
+        }
+        assert_eq!(merged.bucket_counts(), oracle.bucket_counts());
+        assert_eq!(merged.count(), oracle.count());
+        assert!((merged.sum() - oracle.sum()).abs()
+                <= 1e-6 * oracle.sum().abs());
+        for p in [50.0, 95.0, 99.0] {
+            assert_eq!(merged.percentile(p), oracle.percentile(p));
+        }
+    }
+
+    #[test]
+    fn phase_accumulation_and_breakdown() {
+        let reg = Registry::new();
+        reg.record_phase(0, -1, Phase::Queue, 2.0);
+        reg.record_phase(0, -1, Phase::Collect, 1.0);
+        reg.record_phase(0, 0, Phase::Kernel, 3.0);
+        reg.record_phase(0, 1, Phase::Kernel, 1.0);
+        reg.record_phase(0, 1, Phase::Sync, 0.5);
+        reg.record_queue_depth(0, 0, 4.0);
+        reg.record_queue_depth(0, 0, 2.0);
+        let bd = reg.phase_breakdown(&["t0".to_string()]);
+        let t0 = bd.get("t0").unwrap();
+        assert_eq!(t0.get("total_s").unwrap().as_f64(), Some(7.5));
+        assert_eq!(t0.get("kernel_s").unwrap().as_f64(), Some(4.0));
+        assert_eq!(t0.get("queue_wait_s").unwrap().as_f64(), Some(2.0));
+        let kr = t0.at(&["phases", "kernel", "fraction"]).unwrap();
+        assert!((kr.as_f64().unwrap() - 4.0 / 7.5).abs() < 1e-12);
+        let pf = t0.get("per_fog").unwrap().as_arr().unwrap();
+        assert_eq!(pf.len(), 2);
+        assert_eq!(pf[0].get("kernel_s").unwrap().as_f64(), Some(3.0));
+        assert_eq!(
+            pf[0].get("queue_depth_mean_s").unwrap().as_f64(),
+            Some(3.0)
+        );
+        assert_eq!(
+            pf[0].get("queue_depth_max_s").unwrap().as_f64(),
+            Some(4.0)
+        );
+        // deterministic serialization (bit-reproducibility contract)
+        assert_eq!(bd.to_string(),
+                   reg.phase_breakdown(&["t0".to_string()]).to_string());
+    }
+
+    #[test]
+    fn prometheus_text_mentions_everything() {
+        let reg = Registry::new();
+        reg.counter("sheds").add(2);
+        reg.histogram("kernel_us").record(12.0);
+        reg.record_phase(0, -1, Phase::Queue, 1.0);
+        reg.record_queue_depth(0, 1, 2.5);
+        let txt = reg.prometheus_text(&["hi".to_string()]);
+        assert!(txt.contains("fograph_sheds 2"));
+        assert!(txt.contains("fograph_kernel_us_count 1"));
+        assert!(txt.contains(
+            "fograph_phase_seconds{tenant=\"hi\",fog=\"-1\",\
+             phase=\"queue\"} 1"
+        ));
+        assert!(txt.contains("fograph_queue_depth_mean_s"));
+        assert!(txt.contains("le=\"+Inf\""));
+    }
+}

@@ -1,0 +1,200 @@
+//! Span taxonomy for the request lifecycle. One `SpanEvent` is a
+//! fixed-size, `Copy` record — cheap enough to write into a ring
+//! buffer on the hot path — covering the full serving pipeline of the
+//! paper's cost model: `arrive → queue → admit/shed → batch → collect
+//! → compress → transfer → kernel[layer, fog, shard] → sync → reply`,
+//! plus `replan` control events carrying their trigger cause.
+//!
+//! Timestamps are microseconds on one of two timelines, selected by
+//! the `wall` flag: the fabric's virtual clock (both analytic and
+//! measured runs schedule on simulated seconds) or the wall clock of
+//! a worker thread (measured kernel execution only). The two never
+//! mix on one track; the exporter places them on separate tracks.
+
+/// A lifecycle phase. Discriminants are stable and used as compact
+/// registry keys; `ALL` and `name()` keep exporters and the docs table
+/// in one place.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Phase {
+    /// Request entered the fabric (instant).
+    Arrive = 0,
+    /// Time spent waiting in a tenant's admission queue.
+    Queue = 1,
+    /// Request admitted past the queue bound (instant).
+    Admit = 2,
+    /// Request shed or spilled at admission (instant, cause-tagged).
+    Shed = 3,
+    /// Micro-batch formed (instant; `n` = batch size).
+    Batch = 4,
+    /// Feature collection window for a released batch.
+    Collect = 5,
+    /// Degree-aware compression share of the collection window.
+    Compress = 6,
+    /// Wire-transfer share of the collection window.
+    Transfer = 7,
+    /// Per-fog kernel execution (layer/fog/shard-tagged).
+    Kernel = 8,
+    /// BSP halo-synchronization barrier.
+    Sync = 9,
+    /// Batch results handed back to clients (instant; `n` = count).
+    Reply = 10,
+    /// Scheduler intervention (instant, cause-tagged).
+    Replan = 11,
+}
+
+impl Phase {
+    pub const ALL: [Phase; 12] = [
+        Phase::Arrive,
+        Phase::Queue,
+        Phase::Admit,
+        Phase::Shed,
+        Phase::Batch,
+        Phase::Collect,
+        Phase::Compress,
+        Phase::Transfer,
+        Phase::Kernel,
+        Phase::Sync,
+        Phase::Reply,
+        Phase::Replan,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Arrive => "arrive",
+            Phase::Queue => "queue",
+            Phase::Admit => "admit",
+            Phase::Shed => "shed",
+            Phase::Batch => "batch",
+            Phase::Collect => "collect",
+            Phase::Compress => "compress",
+            Phase::Transfer => "transfer",
+            Phase::Kernel => "kernel",
+            Phase::Sync => "sync",
+            Phase::Reply => "reply",
+            Phase::Replan => "replan",
+        }
+    }
+
+    pub fn from_u8(d: u8) -> Option<Phase> {
+        Phase::ALL.get(d as usize).copied()
+    }
+}
+
+/// Tenant index meaning "no tenant" — control-plane events (scheduler
+/// replans on a shared service) land on a dedicated exporter track.
+pub const NO_TENANT: u32 = u32::MAX;
+
+/// One recorded span. `dur_us == 0` marks an instant event. `fog`,
+/// `layer` and `shard` are `-1` when not applicable; `n` is a free
+/// count (batch size, shed count). `cause` is a static tag for
+/// shed/replan triggers so recording never allocates.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SpanEvent {
+    pub seq: u64,
+    pub phase: Phase,
+    /// `false`: virtual (simulated-seconds) timeline; `true`: wall
+    /// clock of the recording thread, relative to the recorder epoch.
+    pub wall: bool,
+    pub tenant: u32,
+    pub fog: i32,
+    pub layer: i32,
+    pub shard: i32,
+    pub n: u32,
+    pub t_us: f64,
+    pub dur_us: f64,
+    pub cause: Option<&'static str>,
+}
+
+impl SpanEvent {
+    /// A zeroed placeholder used to pre-fill ring storage.
+    pub const fn empty() -> SpanEvent {
+        SpanEvent {
+            seq: 0,
+            phase: Phase::Arrive,
+            wall: false,
+            tenant: NO_TENANT,
+            fog: -1,
+            layer: -1,
+            shard: -1,
+            n: 0,
+            t_us: 0.0,
+            dur_us: 0.0,
+            cause: None,
+        }
+    }
+
+    /// Start a span description; the recorder stamps `seq` on write.
+    pub fn new(phase: Phase, tenant: u32, t_us: f64,
+               dur_us: f64) -> SpanEvent {
+        SpanEvent { phase, tenant, t_us, dur_us, ..SpanEvent::empty() }
+    }
+
+    pub fn on_wall(mut self) -> SpanEvent {
+        self.wall = true;
+        self
+    }
+
+    pub fn fog(mut self, fog: usize) -> SpanEvent {
+        self.fog = fog as i32;
+        self
+    }
+
+    pub fn layer(mut self, layer: usize) -> SpanEvent {
+        self.layer = layer as i32;
+        self
+    }
+
+    pub fn shard(mut self, shard: usize) -> SpanEvent {
+        self.shard = shard as i32;
+        self
+    }
+
+    pub fn count(mut self, n: usize) -> SpanEvent {
+        self.n = n as u32;
+        self
+    }
+
+    pub fn because(mut self, cause: &'static str) -> SpanEvent {
+        self.cause = Some(cause);
+        self
+    }
+
+    pub fn end_us(&self) -> f64 {
+        self.t_us + self.dur_us
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phase_names_are_unique_and_roundtrip() {
+        let mut seen: Vec<&str> = Vec::new();
+        for (i, p) in Phase::ALL.iter().enumerate() {
+            assert_eq!(*p as u8 as usize, i);
+            assert_eq!(Phase::from_u8(*p as u8), Some(*p));
+            assert!(!seen.contains(&p.name()), "dup {:?}", p.name());
+            seen.push(p.name());
+        }
+        assert_eq!(Phase::from_u8(200), None);
+    }
+
+    #[test]
+    fn builder_sets_fields() {
+        let ev = SpanEvent::new(Phase::Kernel, 2, 10.0, 5.0)
+            .fog(3)
+            .layer(1)
+            .shard(0)
+            .count(8)
+            .on_wall()
+            .because("test");
+        assert_eq!(ev.phase, Phase::Kernel);
+        assert_eq!((ev.tenant, ev.fog, ev.layer, ev.shard), (2, 3, 1, 0));
+        assert_eq!(ev.n, 8);
+        assert!(ev.wall);
+        assert_eq!(ev.cause, Some("test"));
+        assert_eq!(ev.end_us(), 15.0);
+    }
+}

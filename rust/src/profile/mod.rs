@@ -7,4 +7,4 @@ pub mod model;
 pub mod online;
 
 pub use model::{Cardinality, PerfModel, Sample};
-pub use online::OnlineProfiler;
+pub use online::{Observation, OnlineProfiler};

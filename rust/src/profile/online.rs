@@ -6,6 +6,26 @@
 
 use super::model::{Cardinality, PerfModel};
 
+/// One recorder-sourced measurement: the per-request kernel seconds a
+/// fog's wall `kernel` spans amounted to at cardinality `c`. The
+/// measured executor derives these from the same seconds the obs
+/// plane records (`obs::span::Phase::Kernel`), so the profiler is a
+/// consumer of flight-recorder observations rather than a parallel
+/// timing authority.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Observation {
+    /// Partition cardinality ⟨|V|, |N_V|⟩ the measurement was taken at.
+    pub c: Cardinality,
+    /// Per-request kernel seconds (batch-amortized).
+    pub real_s: f64,
+}
+
+impl Observation {
+    pub fn new(c: Cardinality, real_s: f64) -> Observation {
+        Observation { c, real_s }
+    }
+}
+
 /// Rolling online state for one fog node.
 #[derive(Clone, Debug)]
 pub struct OnlineProfiler {
@@ -28,6 +48,12 @@ impl OnlineProfiler {
             last_real_s: 0.0,
             observations: 0,
         }
+    }
+
+    /// Consume one flight-recorder observation (the serving-loop
+    /// entry point; `observe` is the underlying primitive).
+    pub fn consume(&mut self, obs: Observation) {
+        self.observe(obs.c, obs.real_s);
     }
 
     /// Record a measured execution of cardinality `c` taking `real_s`.
@@ -90,6 +116,17 @@ mod tests {
         p.observe(c, base * 1.0);
         assert!(p.eta > 1.0 && p.eta < 4.0);
         assert_eq!(p.observations, 2);
+    }
+
+    #[test]
+    fn consume_matches_observe() {
+        let mut a = OnlineProfiler::new(base_model());
+        let mut b = OnlineProfiler::new(base_model());
+        let c = Cardinality::new(1500, 6000);
+        a.observe(c, 0.004);
+        b.consume(Observation::new(c, 0.004));
+        assert_eq!(a.eta, b.eta);
+        assert_eq!(a.observations, b.observations);
     }
 
     #[test]

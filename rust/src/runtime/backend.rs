@@ -16,9 +16,8 @@
 //! numerics (tiled GEMM, blocked SpMM) live in `runtime::kernels` —
 //! backends own structure and scratch, kernels own the loops.
 
-use std::time::Instant;
-
 use crate::graph::LocalGraph;
+use crate::obs::clock::Stopwatch;
 
 use super::engine::{EngineError, LayerOut};
 use super::pad::{self, EdgeArrays};
@@ -89,10 +88,10 @@ impl ExecBackend for ReferenceBackend {
 
     fn run_layer(&mut self, ctx: &LayerCtx<'_>, h: &[f32],
                  edges: &EdgeArrays) -> Result<LayerOut, EngineError> {
-        let t = Instant::now();
+        let t = Stopwatch::start();
         let out = reference::run_layer(ctx.model, ctx.layer, ctx.weights,
                                        h, ctx.f_in, edges, ctx.last)?;
-        let host = t.elapsed().as_secs_f64();
+        let host = t.elapsed_s();
         let out_dim = out.len() / edges.n_local.max(1);
         Ok(LayerOut { h: out, out_dim, host_seconds: host })
     }
@@ -100,9 +99,9 @@ impl ExecBackend for ReferenceBackend {
     fn run_astgcn(&mut self, ctx: &LayerCtx<'_>, x: &[f32], n: usize,
                   sub: &LocalGraph) -> Result<LayerOut, EngineError> {
         let adj = pad::dense_norm_adj(sub, n)?;
-        let t = Instant::now();
+        let t = Stopwatch::start();
         let out = reference::run_astgcn(ctx.weights, x, n, ctx.f_in, &adj);
-        let host = t.elapsed().as_secs_f64();
+        let host = t.elapsed_s();
         let out_dim = out.len() / n.max(1);
         Ok(LayerOut { h: out, out_dim, host_seconds: host })
     }

@@ -19,9 +19,9 @@
 
 use std::collections::HashMap;
 use std::sync::Arc;
-use std::time::Instant;
 
 use crate::graph::LocalGraph;
+use crate::obs::clock::Stopwatch;
 
 use super::backend::{ExecBackend, LayerCtx};
 use super::engine::{EngineError, LayerOut};
@@ -910,20 +910,20 @@ impl ExecBackend for CsrBackend {
                          -> Result<LayerOut, EngineError> {
         let CsrBackend { cache, scratch } = self;
         let csr = CsrBackend::partition(cache, edges);
-        let t = Instant::now();
+        let t = Stopwatch::start();
         let out = run_layer_csr_with(ctx.model, ctx.layer, ctx.weights,
                                      h, ctx.f_in, csr, ctx.last, batch,
                                      scratch)?;
-        let host = t.elapsed().as_secs_f64();
+        let host = t.elapsed_s();
         let out_dim = out.len() / (batch * csr.n_local).max(1);
         Ok(LayerOut { h: out, out_dim, host_seconds: host })
     }
 
     fn run_astgcn(&mut self, ctx: &LayerCtx<'_>, x: &[f32], n: usize,
                   sub: &LocalGraph) -> Result<LayerOut, EngineError> {
-        let t = Instant::now();
+        let t = Stopwatch::start();
         let out = run_astgcn_csr(ctx.weights, x, n, ctx.f_in, sub);
-        let host = t.elapsed().as_secs_f64();
+        let host = t.elapsed_s();
         let out_dim = out.len() / n.max(1);
         Ok(LayerOut { h: out, out_dim, host_seconds: host })
     }

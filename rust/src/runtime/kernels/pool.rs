@@ -31,6 +31,13 @@
 //! parallelism is visible here) from `queue_wait_s` (send-to-dequeue
 //! latency on the job channel), so the per-bucket timings fed to
 //! `OnlineProfiler` reflect kernel cost, not queueing.
+//!
+//! Observability: a job may carry a [`JobTrace`] — the flight
+//! recorder's per-worker ring for this fog plus identity tags. The
+//! worker then records wall-clock `queue` and `kernel` spans around
+//! the existing measurements (generalizing the queue-wait/kernel
+//! split the replies always carried) with a lock-free ring push; an
+//! untraced job pays exactly one `Option` check.
 
 use std::cell::Cell;
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -39,6 +46,8 @@ use std::thread::JoinHandle;
 use std::time::Instant;
 
 use crate::graph::LocalGraph;
+use crate::obs::recorder::{Recorder, Ring};
+use crate::obs::span::{Phase, SpanEvent};
 use crate::runtime::csr_backend::{run_astgcn_csr_cached,
                                   run_astgcn_csr_sharded,
                                   run_layer_csr_sharded,
@@ -60,6 +69,17 @@ pub enum FogKernel {
     Astgcn { ft: usize },
 }
 
+/// Flight-recorder context a traced job carries to its worker: the
+/// ring is dedicated to this (plan, fog) pair and fog j's jobs only
+/// ever reach worker j, so the ring keeps its single-producer
+/// contract by construction.
+pub struct JobTrace {
+    pub rec: Arc<Recorder>,
+    pub ring: Arc<Ring>,
+    pub tenant: u32,
+    pub layer: i32,
+}
+
 /// One unit of per-fog work, self-contained: the kernel selector plus
 /// `Arc` handles to everything it computes over. `state` moves in and
 /// the output moves back through the result channel — no shared
@@ -79,6 +99,8 @@ pub struct FogJob {
     pub csr: Option<Arc<CsrPartition>>,
     /// In-neighbor lists for astgcn; `None` otherwise.
     pub nbr: Option<Arc<InNbrLists>>,
+    /// Flight-recorder context; `None` = untraced (the default).
+    pub trace: Option<JobTrace>,
 }
 
 impl FogJob {
@@ -92,7 +114,7 @@ impl FogJob {
     pub fn run(self, scratch: &mut KernelScratch,
                shards: &ShardExec<'_>) -> (Vec<f32>, f64) {
         let FogJob { kernel, model, batch, state, weights, sub, csr,
-                     nbr } = self;
+                     nbr, .. } = self;
         match kernel {
             FogKernel::Layer { layer, dim, last } => {
                 let csr =
@@ -329,8 +351,10 @@ fn worker_loop(
     } else {
         None
     };
-    while let Ok((sent, job)) = jobs.recv() {
+    while let Ok((sent, mut job)) = jobs.recv() {
         let queue_wait_s = sent.elapsed().as_secs_f64();
+        let trace = job.trace.take();
+        let batch = job.batch;
         let exec = match &group {
             Some(g) => ShardExec::Group(g),
             None => ShardExec::Inline(1),
@@ -345,6 +369,36 @@ fn worker_loop(
         );
         match ran {
             Ok((out, seconds)) => {
+                if let Some(tr) = &trace {
+                    // wall-clock spans on this worker's dedicated
+                    // ring: kernel just finished, so its start is
+                    // now - seconds, preceded by the channel wait
+                    let end_us = tr.rec.wall_now_us();
+                    let start_us = end_us - seconds * 1e6;
+                    let wait_us = queue_wait_s * 1e6;
+                    tr.rec.span(
+                        &tr.ring,
+                        SpanEvent::new(
+                            Phase::Queue,
+                            tr.tenant,
+                            start_us - wait_us,
+                            wait_us,
+                        )
+                        .fog(fog)
+                        .on_wall(),
+                    );
+                    let mut kernel_ev = SpanEvent::new(
+                        Phase::Kernel,
+                        tr.tenant,
+                        start_us,
+                        seconds * 1e6,
+                    )
+                    .fog(fog)
+                    .count(batch)
+                    .on_wall();
+                    kernel_ev.layer = tr.layer;
+                    tr.rec.span(&tr.ring, kernel_ev);
+                }
                 let reply = Reply {
                     fog,
                     out,
@@ -447,6 +501,7 @@ mod tests {
                     sub: subs[j].clone(),
                     csr: Some(csrs[j].clone()),
                     nbr: None,
+                    trace: None,
                 })
             })
             .collect()
@@ -550,6 +605,43 @@ mod tests {
         assert_eq!(group_widths(&[300, 150], 4), vec![4, 2]);
         assert_eq!(group_widths(&[10, 20], 1), vec![1, 1]);
         assert_eq!(group_widths(&[], 4), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn traced_jobs_record_wall_spans() {
+        use crate::obs::clock::ClockMode;
+        let (subs, csrs, wb, states, f_in) = two_fog_setup();
+        let pool = FogWorkerPool::new(2);
+        let rec = Recorder::with_capacity(ClockMode::Wall, 64);
+        let rings: Vec<Arc<Ring>> =
+            (0..2).map(|_| rec.ring()).collect();
+        let mut jobs = layer_jobs(&subs, &csrs, &states, &wb, f_in, 2);
+        for (j, job) in jobs.iter_mut().enumerate() {
+            job.as_mut().unwrap().trace = Some(JobTrace {
+                rec: Arc::clone(&rec),
+                ring: Arc::clone(&rings[j]),
+                tenant: 0,
+                layer: 0,
+            });
+        }
+        let (outs, _, _) = pool.dispatch(jobs);
+        assert!(!outs[0].is_empty());
+        // the reply barrier orders worker pushes before this read
+        let evs = rec.events();
+        let kernels: Vec<_> =
+            evs.iter().filter(|e| e.phase == Phase::Kernel).collect();
+        assert_eq!(kernels.len(), 2);
+        assert!(kernels.iter().all(|e| e.wall && e.dur_us >= 0.0));
+        assert!(kernels.iter().any(|e| e.fog == 0));
+        assert!(kernels.iter().any(|e| e.fog == 1));
+        assert_eq!(
+            evs.iter().filter(|e| e.phase == Phase::Queue).count(),
+            2
+        );
+        // traced and untraced dispatch compute identical outputs
+        let (plain, _, _) = pool.dispatch(
+            layer_jobs(&subs, &csrs, &states, &wb, f_in, 2));
+        assert_eq!(outs, plain);
     }
 
     #[test]

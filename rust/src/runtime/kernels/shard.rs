@@ -28,6 +28,8 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::OnceLock;
 use std::thread::JoinHandle;
 
+use crate::util::cli::parse_bounded_usize;
+
 /// A unit of row-range work: runs on a helper (or inline) and returns
 /// its shard's output rows.
 pub type ShardClosure = Box<dyn FnOnce() -> Vec<f32> + Send + 'static>;
@@ -52,15 +54,11 @@ pub const MAX_MIN_ROWS_PER_SHARD: usize = 1 << 24;
 static ACTIVE_MIN_ROWS: OnceLock<usize> = OnceLock::new();
 
 /// Parse one candidate floor value (pure; unit-testable without
-/// touching process environment).
+/// touching process environment). Delegates to the shared bounded
+/// parser in `util::cli`, the same one `FOGRAPH_TRACE_BUF` uses, so
+/// every env knob is validated identically by construction.
 pub fn parse_min_rows_per_shard(v: &str) -> Result<usize, String> {
-    match v.trim().parse::<usize>() {
-        Ok(k) if (1..=MAX_MIN_ROWS_PER_SHARD).contains(&k) => Ok(k),
-        _ => Err(format!(
-            "{MIN_ROWS_ENV} must be an integer in \
-             1..={MAX_MIN_ROWS_PER_SHARD} (got {v:?})"
-        )),
-    }
+    parse_bounded_usize(MIN_ROWS_ENV, v, 1, MAX_MIN_ROWS_PER_SHARD)
 }
 
 /// Read + validate the environment override (`Ok(default)` when

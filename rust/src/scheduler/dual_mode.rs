@@ -39,6 +39,18 @@ pub enum SchedulerDecision {
     Replanned,
 }
 
+impl SchedulerDecision {
+    /// Static trigger tag for `replan` flight-recorder spans (`None`
+    /// for `Keep`, which records no control event).
+    pub fn cause(&self) -> Option<&'static str> {
+        match self {
+            SchedulerDecision::Keep => None,
+            SchedulerDecision::Diffused(_) => Some("diffusion"),
+            SchedulerDecision::Replanned => Some("iep-replan"),
+        }
+    }
+}
+
 /// One scheduling step (Algorithm 2). `real_times` are the latest per-fog
 /// measured execution times (from the online profilers via the metadata
 /// server); `omegas` their η-scaled models. Mutates `assignment` in place
@@ -119,6 +131,15 @@ mod tests {
                          &[0.1, 0.1, 0.1, 0.1], &omegas,
                          &SchedulerConfig::default());
         assert_eq!(d, SchedulerDecision::Keep);
+        assert_eq!(d.cause(), None);
+    }
+
+    #[test]
+    fn decision_causes_are_stable_tags() {
+        assert_eq!(SchedulerDecision::Diffused(7).cause(),
+                   Some("diffusion"));
+        assert_eq!(SchedulerDecision::Replanned.cause(),
+                   Some("iep-replan"));
     }
 
     #[test]

@@ -7,12 +7,11 @@
 //! scaled to device/fog capability); the TRANSFER times are analytic from
 //! the calibrated network model.
 
-use std::time::Instant;
-
 use crate::compress::{self, Codec};
 use crate::fog::Cluster;
 use crate::graph::Graph;
 use crate::net;
+use crate::obs::clock::Stopwatch;
 
 /// End devices (Raspberry-Pi class) are markedly slower than this host at
 /// the packing arithmetic.
@@ -90,17 +89,17 @@ pub fn collect(
             .collect();
         let degs: Vec<u64> =
             verts.iter().map(|&v| degrees[v as usize] as u64).collect();
-        let t_pack = Instant::now();
+        let t_pack = Stopwatch::start();
         let packed = compress::pack(&rows, &degs, codec);
-        let pack_host = t_pack.elapsed().as_secs_f64();
+        let pack_host = t_pack.elapsed_s();
         // devices pack their shards in parallel; per-device share
         let pack_device_s = pack_host * DEVICE_COMPUTE_MULT
             / devices_per_fog as f64;
 
-        let t_unpack = Instant::now();
+        let t_unpack = Stopwatch::start();
         let mut rows_out: Vec<Vec<f32>> = Vec::new();
         compress::unpack(&packed, &mut rows_out).expect("unpack");
-        let unpack_host = t_unpack.elapsed().as_secs_f64();
+        let unpack_host = t_unpack.elapsed_s();
         let fog_mult = cluster.nodes[j].effective_multiplier();
         unpack_s = unpack_s
             .max(unpack_host * fog_mult * UNPACK_PIPELINE_SHARE);

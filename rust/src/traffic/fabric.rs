@@ -40,9 +40,12 @@
 //! BENCH_loadtest.json.
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use crate::fog::{Cluster, LoadTrace};
 use crate::graph::{DatasetSpec, Graph};
+use crate::obs::recorder::Recorder;
+use crate::obs::span::{Phase, SpanEvent, NO_TENANT};
 use crate::profile::PerfModel;
 use crate::runtime::{Engine, EngineError};
 use crate::scheduler::diffusion::estimate_times;
@@ -94,6 +97,12 @@ pub struct TenantReport {
     pub latencies: Vec<f64>,
     pub queue_len_max: usize,
     pub queue_len_mean: f64,
+    /// Per-fog mean queue backlog (seconds of work), from the obs
+    /// registry's per-second sampler — reported uniformly for EVERY
+    /// tenant, not just the aggregate.
+    pub per_fog_queue_depth_mean_s: Vec<f64>,
+    /// Per-fog peak queue backlog (seconds of work).
+    pub per_fog_queue_depth_max_s: Vec<f64>,
 }
 
 /// One plan-cache key's accounting: a `(model, dataset)` service is
@@ -301,6 +310,27 @@ pub fn run_fabric<'a>(
     fair: FairPolicy,
     engine: &mut Engine,
 ) -> Result<FabricReport, EngineError> {
+    run_fabric_traced(cluster, inputs, base, fair, engine,
+                      &Recorder::disabled())
+}
+
+/// `run_fabric` with a flight recorder attached. Span emission is
+/// gated on the recorder being enabled, but every emission is paired
+/// with an unconditional fold into the recorder's ALWAYS-live metrics
+/// registry — the report's `phase_breakdown` and per-tenant queue
+/// timelines come from the registry, so analytic reports are
+/// bit-identical with tracing on or off. All fabric spans carry the
+/// VIRTUAL clock (simulated seconds → µs); only the measured
+/// executor's worker-pool spans (attached here via
+/// `MeasuredExec::attach_recorder`) are wall-clock.
+pub fn run_fabric_traced<'a>(
+    cluster: &Cluster,
+    inputs: Vec<TenantInput<'a>>,
+    base: &TrafficConfig,
+    fair: FairPolicy,
+    engine: &mut Engine,
+    rec: &Arc<Recorder>,
+) -> Result<FabricReport, EngineError> {
     assert!(!inputs.is_empty(), "fabric needs at least one tenant");
     assert!(base.duration_s > 0.0);
     let n = cluster.len();
@@ -440,6 +470,14 @@ pub fn run_fabric<'a>(
     // note: services are created in canonical TENANT order, which
     // makes service creation order itself declaration-independent
 
+    // lifecycle spans are emitted from this single-threaded event loop
+    // only, so one single-producer ring holds them all; the registry
+    // fold (`reg`) runs unconditionally so phase accounting exists
+    // even when span recording is off
+    let ring = rec.ring();
+    let reg = rec.registry();
+    let us = |t: f64| t * 1e6;
+
     // ---- ground every service with one real pipeline run ----------------
     let mut aggregate = LoadtestReport {
         exec_mode: base.exec,
@@ -491,7 +529,7 @@ pub fn run_fabric<'a>(
         }
         if base.exec == ExecMode::Measured {
             let kt = base.kernel_threads.max(1);
-            let m = match &shared_pool {
+            let mut m = match &shared_pool {
                 // every (model, dataset) plan shares the first
                 // service's worker pool: one --kernel-threads thread
                 // budget for the whole fabric
@@ -510,6 +548,12 @@ pub fn run_fabric<'a>(
             if shared_pool.is_none() {
                 shared_pool = Some(m.pool_handle());
             }
+            // wall-clock kernel/sync spans for this plan; retagged per
+            // batch with the tenant actually served
+            m.attach_recorder(
+                rec,
+                svc.tenants.first().copied().unwrap_or(0) as u32,
+            );
             svc.measured = Some(m);
         }
         svc.host_times =
@@ -528,11 +572,17 @@ pub fn run_fabric<'a>(
             fairness_jain: 1.0,
             ..Default::default()
         };
-        for t in &tenants {
+        for (ti, t) in tenants.iter().enumerate() {
             let mut tr = tenant_report_base(t);
             tr.slo.oom = services[t.service].oom;
+            let (qmean, qmax) = reg.queue_depth_stats(ti as u32, n);
+            tr.per_fog_queue_depth_mean_s = qmean;
+            tr.per_fog_queue_depth_max_s = qmax;
             out.tenants.push(tr);
         }
+        let names: Vec<String> =
+            out.tenants.iter().map(|t| t.name.clone()).collect();
+        out.aggregate.phase_breakdown = reg.phase_breakdown(&names);
         return Ok(out);
     }
 
@@ -633,11 +683,17 @@ pub fn run_fabric<'a>(
             for svc in services.iter() {
                 let per_fog = exec_per_fog(&svc.host_times, &node_mult,
                                            &trace, next_sample);
-                let depth: f64 = svc
-                    .tenants
-                    .iter()
-                    .map(|&ti| tenants[ti].batcher.len())
-                    .sum::<usize>() as f64;
+                let mut depth = 0f64;
+                for &ti in &svc.tenants {
+                    let d = tenants[ti].batcher.len() as f64;
+                    depth += d;
+                    // per-tenant per-fog backlog sample, so the report
+                    // can surface fog timelines for EVERY tenant
+                    for (j, &e) in per_fog.iter().enumerate() {
+                        reg.record_queue_depth(ti as u32, j as u32,
+                                               d * e);
+                    }
+                }
                 for (r, &e) in row.iter_mut().zip(&per_fog) {
                     *r += depth * e;
                 }
@@ -682,6 +738,13 @@ pub fn run_fabric<'a>(
                     svc.g, &svc.spec, cluster, &svc.opts,
                     &mut svc.assignment, &real_times, &scaled, &cfg,
                 );
+                if let Some(cause) = decision.cause() {
+                    rec.span(&ring, SpanEvent::new(Phase::Replan,
+                                                   NO_TENANT,
+                                                   us(next_sched), 0.0)
+                        .because(cause));
+                    reg.record_phase(NO_TENANT, -1, Phase::Replan, 0.0);
+                }
                 let moved = match decision {
                     SchedulerDecision::Keep => false,
                     SchedulerDecision::Diffused(_) => {
@@ -714,18 +777,33 @@ pub fn run_fabric<'a>(
 
         if t_arr <= t_next {
             // admission: one request of the earliest-arriving tenant
+            let tid = arr_tenant as u32;
+            rec.span(&ring,
+                     SpanEvent::new(Phase::Arrive, tid, us(t_arr), 0.0));
+            reg.record_phase(tid, -1, Phase::Arrive, 0.0);
             let t = &mut tenants[arr_tenant];
             t.next_arrival += 1;
             if t.batcher.len() >= t.queue_cap {
-                if base.spill {
+                let cause = if base.spill {
                     t.slo.spilled += 1;
                     aggregate.slo.spilled += 1;
+                    "queue-full-spill"
                 } else {
                     t.slo.shed += 1;
                     aggregate.slo.shed += 1;
-                }
+                    "queue-full-shed"
+                };
+                rec.span(&ring,
+                         SpanEvent::new(Phase::Shed, tid, us(t_arr),
+                                        0.0)
+                             .because(cause));
+                reg.record_phase(tid, -1, Phase::Shed, 0.0);
             } else {
                 t.batcher.push(t_arr);
+                rec.span(&ring,
+                         SpanEvent::new(Phase::Admit, tid, us(t_arr),
+                                        0.0));
+                reg.record_phase(tid, -1, Phase::Admit, 0.0);
             }
         } else {
             // release one micro-batch at t_form: the fair-admission
@@ -779,32 +857,105 @@ pub fn run_fabric<'a>(
                         / base.batch.max_batch as f64);
             let coll_done = t_form + coll_time;
             let start_exec = coll_done.max(exec_free);
+            let tid = sel as u32;
+            let oldest = batch.first().copied().unwrap_or(t_form);
+            let qwait = (t_form - oldest).max(0.0);
+            rec.span(&ring, SpanEvent::new(Phase::Queue, tid,
+                                           us(oldest), us(qwait))
+                .count(b));
+            reg.record_phase(tid, -1, Phase::Queue, qwait);
+            rec.span(&ring,
+                     SpanEvent::new(Phase::Batch, tid, us(t_form), 0.0)
+                         .count(b));
+            reg.record_phase(tid, -1, Phase::Batch, 0.0);
+            rec.span(&ring, SpanEvent::new(Phase::Collect, tid,
+                                           us(t_form), us(coll_time))
+                .count(b));
+            reg.record_phase(tid, -1, Phase::Collect, coll_time);
+            // the collect window's critical path is pure wire transfer
+            // (packing pipelines off-path, see collection_transfer_s);
+            // emit the sub-span for trace nesting but account only
+            // `collect`, keeping phase totals free of double counting
+            rec.span(&ring, SpanEvent::new(Phase::Transfer, tid,
+                                           us(t_form), us(coll_time))
+                .count(b));
             let exec_time = if let Some(m) = svc.measured.as_mut() {
                 // real batched kernels at the padded bucket size; scale
                 // each fog's measured host time by its capability and
                 // current background load, BSP barrier per layer
+                m.set_trace_tenant(tid);
                 let step = start_exec.max(0.0) as usize;
+                let mut t_cursor = start_exec;
                 let mut total = 0f64;
-                for layer_times in m.run_batch(slot) {
+                for (layer, layer_times) in
+                    m.run_batch(slot).into_iter().enumerate()
+                {
                     let mut mx = 0f64;
                     for (j, &h) in layer_times.iter().enumerate() {
                         let load = trace.at(step, j).clamp(0.0, 0.85);
-                        mx = mx.max(h * node_mult[j] / (1.0 - load));
+                        let scaled = h * node_mult[j] / (1.0 - load);
+                        mx = mx.max(scaled);
+                        if scaled > 0.0 {
+                            let mut ev = SpanEvent::new(
+                                Phase::Kernel, tid, us(t_cursor),
+                                us(scaled),
+                            )
+                            .fog(j)
+                            .count(b);
+                            ev.layer = layer as i32;
+                            rec.span(&ring, ev);
+                            reg.record_phase(tid, j as i32,
+                                             Phase::Kernel, scaled);
+                        }
                     }
+                    t_cursor += mx;
                     total += mx;
                 }
                 // the block-diagonal batch ships `slot` copies of the
                 // halo rows, so the (bandwidth-dominated) sync share
                 // scales with the bucket
-                total + svc.base_sync_s * slot as f64
+                let sync_t = svc.base_sync_s * slot as f64;
+                for j in 0..n {
+                    rec.span(&ring, SpanEvent::new(Phase::Sync, tid,
+                                                   us(t_cursor),
+                                                   us(sync_t))
+                        .fog(j)
+                        .count(b));
+                    reg.record_phase(tid, j as i32, Phase::Sync,
+                                     sync_t);
+                }
+                total + sync_t
             } else {
                 let per_fog = exec_per_fog(&svc.host_times, &node_mult,
                                            &trace, start_exec);
                 let slowest =
                     per_fog.iter().cloned().fold(0f64, f64::max);
-                (slowest + svc.base_sync_s)
-                    * (EXEC_FIXED_FRAC
-                        + (1.0 - EXEC_FIXED_FRAC) * slot as f64)
+                let scale = EXEC_FIXED_FRAC
+                    + (1.0 - EXEC_FIXED_FRAC) * slot as f64;
+                for (j, &h) in per_fog.iter().enumerate() {
+                    let k = h * scale;
+                    if k > 0.0 {
+                        rec.span(&ring,
+                                 SpanEvent::new(Phase::Kernel, tid,
+                                                us(start_exec), us(k))
+                                     .fog(j)
+                                     .count(b));
+                        reg.record_phase(tid, j as i32, Phase::Kernel,
+                                         k);
+                    }
+                }
+                let sync_t = svc.base_sync_s * scale;
+                let barrier_end = start_exec + slowest * scale;
+                for j in 0..n {
+                    rec.span(&ring, SpanEvent::new(Phase::Sync, tid,
+                                                   us(barrier_end),
+                                                   us(sync_t))
+                        .fog(j)
+                        .count(b));
+                    reg.record_phase(tid, j as i32, Phase::Sync,
+                                     sync_t);
+                }
+                (slowest + svc.base_sync_s) * scale
             };
             let finish = start_exec + exec_time;
             coll_free = coll_done;
@@ -821,6 +972,10 @@ pub fn run_fabric<'a>(
                 latencies.push(finish - a);
                 t.latencies.push(finish - a);
             }
+            rec.span(&ring,
+                     SpanEvent::new(Phase::Reply, tid, us(finish), 0.0)
+                         .count(b));
+            reg.record_phase(tid, -1, Phase::Reply, 0.0);
         }
     }
 
@@ -858,7 +1013,7 @@ pub fn run_fabric<'a>(
         plan_cache: plan_cache_entries(&services),
         ..Default::default()
     };
-    for t in tenants.iter_mut() {
+    for (ti, t) in tenants.iter_mut().enumerate() {
         // tenant_report_base already carries the final slo counters
         let mut tr = tenant_report_base(t);
         tr.slo.mean_batch = if t.slo.batches > 0 {
@@ -874,8 +1029,14 @@ pub fn run_fabric<'a>(
         } else {
             0.0
         };
+        let (qmean, qmax) = reg.queue_depth_stats(ti as u32, n);
+        tr.per_fog_queue_depth_mean_s = qmean;
+        tr.per_fog_queue_depth_max_s = qmax;
         report.tenants.push(tr);
     }
+    let names: Vec<String> =
+        report.tenants.iter().map(|t| t.name.clone()).collect();
+    report.aggregate.phase_breakdown = reg.phase_breakdown(&names);
     // the aggregate SLO attainment honors each tenant's OWN objective
     // (a request that misses its tenant's SLO must not count as
     // goodput just because the run-level --slo-ms is looser); for one
@@ -993,6 +1154,16 @@ pub fn fabric_json(label: &str, base: &TrafficConfig,
                 ("mean_batch", num(t.slo.mean_batch)),
                 ("queue_len_max", num(t.queue_len_max as f64)),
                 ("queue_len_mean", num(t.queue_len_mean)),
+                ("per_fog_queue_depth_mean_s",
+                 arr(t.per_fog_queue_depth_mean_s
+                     .iter()
+                     .map(|&v| num(v))
+                     .collect::<Vec<_>>())),
+                ("per_fog_queue_depth_max_s",
+                 arr(t.per_fog_queue_depth_max_s
+                     .iter()
+                     .map(|&v| num(v))
+                     .collect::<Vec<_>>())),
                 ("oom", Json::Bool(t.slo.oom)),
             ])
         })

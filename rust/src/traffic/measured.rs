@@ -12,9 +12,11 @@
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
-use crate::exec::BatchedBspPlan;
+use crate::exec::{BatchedBspPlan, ExecTrace};
 use crate::graph::Graph;
-use crate::profile::{Cardinality, OnlineProfiler, PerfModel};
+use crate::obs::recorder::Recorder;
+use crate::profile::{Cardinality, Observation, OnlineProfiler,
+                     PerfModel};
 use crate::runtime::{Engine, EngineError, WeightBundle};
 
 /// Accumulated wall-clock for one padded bucket size. Kernel seconds
@@ -71,6 +73,9 @@ pub struct MeasuredExec {
     kernel_threads: usize,
     profilers: Vec<OnlineProfiler>,
     bucket_stats: BTreeMap<usize, BucketStat>,
+    /// Flight-recorder context (`attach_recorder`); `None` keeps the
+    /// executor on the identical untraced path.
+    trace: Option<ExecTrace>,
 }
 
 impl MeasuredExec {
@@ -158,7 +163,29 @@ impl MeasuredExec {
                 .map(|m| OnlineProfiler::new(m.clone()))
                 .collect(),
             bucket_stats: BTreeMap::new(),
+            trace: None,
         })
+    }
+
+    /// Attach the flight recorder: subsequent batches record per-fog
+    /// wall `kernel`/`queue` spans (attributed to canonical tenant
+    /// index `tenant`) plus kernel-barrier / queue-wait histograms in
+    /// the registry. Numerically a no-op — tracing only observes the
+    /// seconds `run_batch` already reports.
+    pub fn attach_recorder(&mut self, rec: &Arc<Recorder>,
+                           tenant: u32) {
+        self.trace =
+            Some(ExecTrace::new(rec, self.plan.n_fogs(), tenant));
+    }
+
+    /// Retag subsequent wall spans with the tenant about to be served —
+    /// a shared-service plan executes batches for several tenants, and
+    /// attribution must follow the admission arbiter's pick. No-op when
+    /// no recorder is attached.
+    pub fn set_trace_tenant(&mut self, tenant: u32) {
+        if let Some(tr) = self.trace.as_mut() {
+            tr.tenant = tenant;
+        }
     }
 
     pub fn engine_name(&self) -> &'static str {
@@ -177,8 +204,13 @@ impl MeasuredExec {
     /// so kernel timings — and the profiler observations — never fold
     /// in channel queueing.
     pub fn run_batch(&mut self, bucket: usize) -> Vec<Vec<f64>> {
-        let res = self.plan.execute_timings(&self.features, self.f_in,
-                                            &self.wb, bucket);
+        let res = self.plan.execute_timings_traced(
+            &self.features,
+            self.f_in,
+            &self.wb,
+            bucket,
+            self.trace.as_ref(),
+        );
         let mut barrier = 0f64;
         for layer_times in &res.layer_host_seconds {
             barrier +=
@@ -188,6 +220,13 @@ impl MeasuredExec {
         for layer_waits in &res.layer_queue_wait_seconds {
             wait_barrier +=
                 layer_waits.iter().cloned().fold(0f64, f64::max);
+        }
+        if let Some(tr) = &self.trace {
+            let reg = tr.rec.registry();
+            reg.histogram("measured_kernel_barrier_ms")
+                .record(barrier * 1e3);
+            reg.histogram("measured_queue_wait_ms")
+                .record(wait_barrier * 1e3);
         }
         let stat = self.bucket_stats.entry(bucket).or_default();
         stat.total_host_s += barrier;
@@ -204,9 +243,12 @@ impl MeasuredExec {
                 .map(|lt| lt[j])
                 .sum();
             // ω predicts single-inference latency; the batch amortizes
-            // fixed costs, so observe the per-request share
-            self.profilers[j].observe(Cardinality::new(v, ne),
-                                      total_j / bucket as f64);
+            // fixed costs, so consume the per-request share (the same
+            // seconds the recorder's wall kernel spans carry)
+            self.profilers[j].consume(Observation::new(
+                Cardinality::new(v, ne),
+                total_j / bucket as f64,
+            ));
         }
         res.layer_host_seconds
     }
@@ -244,6 +286,14 @@ impl MeasuredExec {
                 pool,
             )?
         };
+        // fresh rings for the new plan: keeps each ring single-writer
+        // even when a poisoned pool forced a worker respawn
+        if let Some(tr) = &self.trace {
+            let rec = tr.rec.clone();
+            let tenant = tr.tenant;
+            self.trace =
+                Some(ExecTrace::new(&rec, self.plan.n_fogs(), tenant));
+        }
         Ok(())
     }
 
@@ -306,6 +356,62 @@ mod tests {
         let scaled = me.scaled_omegas();
         assert_eq!(scaled.len(), 2);
         assert!(scaled.iter().all(|m| m.beta_v >= 0.0));
+    }
+
+    #[test]
+    fn attached_recorder_captures_kernel_spans() {
+        use crate::obs::clock::ClockMode;
+        use crate::obs::span::Phase;
+        let (mut g, _) = generate::sbm(120, 500, 3, 0.85, 3);
+        let f_in = 8;
+        let mut rng = crate::util::rng::Rng::new(23);
+        g.features =
+            (0..120 * f_in).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        g.feature_dim = f_in;
+        let dir = std::env::temp_dir().join("measured_exec_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut eng = Engine::new(EngineKind::Csr, &dir).unwrap();
+        let assignment: Vec<u32> =
+            (0..120).map(|v| (v % 2) as u32).collect();
+        let omegas = vec![PerfModel::uncalibrated(); 2];
+        let mut me = MeasuredExec::new(
+            &g, &assignment, 2, "gcn", "tiny", &g.features, f_in, 3,
+            &omegas, &mut eng, 1,
+        )
+        .unwrap();
+        let rec = Recorder::enabled(ClockMode::Wall);
+        me.attach_recorder(&rec, 0);
+        me.run_batch(4);
+        let evs = rec.events();
+        // 2 gcn layers × 2 fogs
+        let kernels = evs
+            .iter()
+            .filter(|e| e.phase == Phase::Kernel && e.wall)
+            .count();
+        assert_eq!(kernels, 4);
+        let syncs = evs
+            .iter()
+            .filter(|e| e.phase == Phase::Sync && e.wall)
+            .count();
+        assert_eq!(syncs, 2, "one halo-sync span per layer");
+        assert!(evs
+            .iter()
+            .all(|e| e.dur_us >= 0.0 && e.tenant == 0));
+        assert_eq!(
+            rec.registry()
+                .histogram("measured_kernel_barrier_ms")
+                .count(),
+            1
+        );
+        // rebuild keeps tracing alive on fresh rings
+        me.rebuild(&g, &assignment, "gcn").unwrap();
+        me.run_batch(4);
+        let kernels2 = rec
+            .events()
+            .iter()
+            .filter(|e| e.phase == Phase::Kernel && e.wall)
+            .count();
+        assert_eq!(kernels2, 8);
     }
 
     #[test]

@@ -26,10 +26,12 @@ pub mod tenant;
 
 pub use arrival::{ArrivalKind, ArrivalProcess};
 pub use batcher::{bucket, BatchPolicy, MicroBatcher};
-pub use fabric::{fabric_json, jain_index, run_fabric, FabricReport,
-                 PlanCacheEntry, TenantInput, TenantReport};
+pub use fabric::{fabric_json, jain_index, run_fabric,
+                 run_fabric_traced, FabricReport, PlanCacheEntry,
+                 TenantInput, TenantReport};
 pub use measured::{BucketRow, MeasuredExec};
-pub use sim::{doc_json, report_json, run_loadtest, ExecMode,
-              LoadtestReport, TrafficConfig};
+pub use sim::{doc_json, report_json, run_loadtest,
+              run_loadtest_traced, ExecMode, LoadtestReport,
+              TrafficConfig};
 pub use slo::{LatencySummary, QueueTimeline, SloReport};
 pub use tenant::{FairPolicy, Tenant, TenantSpec};

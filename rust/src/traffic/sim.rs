@@ -40,8 +40,11 @@
 //! * the two stations pipeline with depth 2 (collection of batch k
 //!   overlaps execution of batch k-1), the paper's throughput model.
 
+use std::sync::Arc;
+
 use crate::fog::Cluster;
 use crate::graph::{DatasetSpec, Graph};
+use crate::obs::recorder::Recorder;
 use crate::profile::PerfModel;
 use crate::runtime::{Engine, EngineError};
 use crate::serving::pipeline::ServeOpts;
@@ -50,7 +53,7 @@ use crate::util::provenance::{git_rev, utc_date_string};
 
 use super::arrival::ArrivalKind;
 use super::batcher::BatchPolicy;
-use super::fabric::{run_fabric, TenantInput};
+use super::fabric::{run_fabric_traced, TenantInput};
 use super::measured::BucketRow;
 use super::slo::SloReport;
 use super::tenant::{FairPolicy, Tenant};
@@ -169,6 +172,11 @@ pub struct LoadtestReport {
     /// SIMD path the one-time kernel dispatcher picked
     /// ("avx2+fma" | "sse2-baseline").
     pub simd: String,
+    /// Per-tenant, per-fog time-in-phase accounting from the obs
+    /// registry (`Registry::phase_breakdown`). Always populated — the
+    /// registry is live even with span tracing off, so this section is
+    /// bit-identical with `--trace-out` on or off in analytic mode.
+    pub phase_breakdown: Json,
 }
 
 /// Drive the serving stack under a sustained request stream: the
@@ -185,6 +193,24 @@ pub fn run_loadtest(
     omegas: &[PerfModel],
     engine: &mut Engine,
 ) -> Result<LoadtestReport, EngineError> {
+    run_loadtest_traced(g, spec, cluster, opts, traffic, omegas,
+                        engine, &Recorder::disabled())
+}
+
+/// `run_loadtest` with a flight recorder attached (`--trace-out`).
+/// With a disabled recorder this IS `run_loadtest` — the one-tenant
+/// fabric threads the recorder through the whole serving path.
+#[allow(clippy::too_many_arguments)]
+pub fn run_loadtest_traced(
+    g: &Graph,
+    spec: &DatasetSpec,
+    cluster: &Cluster,
+    opts: &ServeOpts,
+    traffic: &TrafficConfig,
+    omegas: &[PerfModel],
+    engine: &mut Engine,
+    rec: &Arc<Recorder>,
+) -> Result<LoadtestReport, EngineError> {
     assert!(traffic.rps > 0.0 && traffic.duration_s > 0.0);
     assert_eq!(omegas.len(), cluster.len());
     let input = TenantInput {
@@ -194,8 +220,8 @@ pub fn run_loadtest(
         opts: opts.clone(),
         omegas: omegas.to_vec(),
     };
-    let fabric = run_fabric(cluster, vec![input], traffic,
-                            FairPolicy::Drr, engine)?;
+    let fabric = run_fabric_traced(cluster, vec![input], traffic,
+                                   FairPolicy::Drr, engine, rec)?;
     Ok(fabric.aggregate)
 }
 
@@ -251,6 +277,7 @@ pub fn report_json(label: &str, traffic: &TrafficConfig,
         ("engine", s(&r.engine)),
         ("kernel_threads", num(r.kernel_threads as f64)),
         ("simd", s(&r.simd)),
+        ("phase_breakdown", r.phase_breakdown.clone()),
         (
             "measured_buckets",
             arr(r.bucket_host_ms.iter().map(|row| {

@@ -86,6 +86,37 @@ impl Args {
 /// host core count while still catching typos like 5000.
 pub const MAX_KERNEL_THREADS: usize = 64;
 
+/// Shared validator for bounded positive-integer knobs
+/// (`FOGRAPH_MIN_ROWS_PER_SHARD`, `FOGRAPH_TRACE_BUF`): trimmed
+/// integer in `lo..=hi`, everything else an error naming the knob —
+/// one parser, so every env override is validated "the same way" by
+/// construction.
+pub fn parse_bounded_usize(what: &str, v: &str, lo: usize,
+                           hi: usize) -> Result<usize, String> {
+    match v.trim().parse::<usize>() {
+        Ok(n) if (lo..=hi).contains(&n) => Ok(n),
+        _ => Err(format!(
+            "{what} must be an integer in {lo}..={hi} (got {v:?})"
+        )),
+    }
+}
+
+/// Probe that `path` is writable by opening it in append/create mode
+/// — the `--trace-out` preflight, so a bad path fails at argument
+/// time (exit 2) instead of after a multi-second run. Leaves existing
+/// file contents untouched.
+pub fn probe_writable(path: &str) -> Result<(), String> {
+    if path.is_empty() {
+        return Err("path is empty".to_string());
+    }
+    std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(path)
+        .map(|_| ())
+        .map_err(|e| format!("cannot open {path:?} for writing: {e}"))
+}
+
 /// Validated `--kernel-threads` (default 1 = no intra-fog sharding).
 /// 0, non-numeric and absurd values are errors, so callers can exit
 /// with CLI code 2 instead of silently falling back to a default.
@@ -152,6 +183,29 @@ mod tests {
     fn equals_form_always_has_value() {
         let a = Args::parse(&v(&["--x=--weird"]), &[]);
         assert_eq!(a.get("x"), Some("--weird"));
+    }
+
+    #[test]
+    fn bounded_usize_validation() {
+        assert_eq!(parse_bounded_usize("X", "4", 1, 64), Ok(4));
+        assert_eq!(parse_bounded_usize("X", " 64 ", 1, 64), Ok(64));
+        for bad in ["0", "65", "-1", "abc", "", "4.5"] {
+            let e = parse_bounded_usize("KNOB", bad, 1, 64);
+            assert!(e.is_err(), "{bad:?} accepted");
+            assert!(e.unwrap_err().contains("KNOB"));
+        }
+    }
+
+    #[test]
+    fn probe_writable_accepts_tmp_and_rejects_bad_dirs() {
+        let dir = std::env::temp_dir().join("fograph_cli_probe_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let ok = dir.join("trace.json");
+        assert!(probe_writable(ok.to_str().unwrap()).is_ok());
+        assert!(probe_writable("").is_err());
+        let bad = dir.join("no_such_subdir").join("trace.json");
+        assert!(probe_writable(bad.to_str().unwrap()).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -15,6 +15,12 @@ pub enum Json {
     Obj(BTreeMap<String, Json>),
 }
 
+impl Default for Json {
+    fn default() -> Json {
+        Json::Null
+    }
+}
+
 #[derive(Debug)]
 pub struct ParseError {
     pub pos: usize,

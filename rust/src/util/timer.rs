@@ -1,8 +1,9 @@
 //! Measurement substrate for the custom bench harness (no criterion
 //! offline): warmup + repeated timing with mean/p50/p95 summaries.
+//! All wall reads go through `obs::clock::Stopwatch`, the crate's one
+//! sanctioned wall-clock primitive.
 
-use std::time::Instant;
-
+use crate::obs::clock::Stopwatch;
 use crate::util::stats;
 
 #[derive(Debug, Clone)]
@@ -56,27 +57,24 @@ pub fn fmt_ns(ns: f64) -> String {
 pub fn bench<F: FnMut()>(name: &str, min_time_s: f64, max_iters: usize,
                          mut f: F) -> BenchResult {
     // warmup
-    let warm_start = Instant::now();
+    let warm_start = Stopwatch::start();
     let mut warm_iters = 0usize;
-    while warm_start.elapsed().as_secs_f64() < min_time_s * 0.2
-        && warm_iters < 3
-    {
+    while warm_start.elapsed_s() < min_time_s * 0.2 && warm_iters < 3 {
         f();
         warm_iters += 1;
     }
     let mut samples_ns: Vec<f64> = Vec::new();
-    let start = Instant::now();
-    while start.elapsed().as_secs_f64() < min_time_s
-        && samples_ns.len() < max_iters
+    let start = Stopwatch::start();
+    while start.elapsed_s() < min_time_s && samples_ns.len() < max_iters
     {
-        let t = Instant::now();
+        let t = Stopwatch::start();
         f();
-        samples_ns.push(t.elapsed().as_nanos() as f64);
+        samples_ns.push(t.elapsed_ns());
     }
     if samples_ns.is_empty() {
-        let t = Instant::now();
+        let t = Stopwatch::start();
         f();
-        samples_ns.push(t.elapsed().as_nanos() as f64);
+        samples_ns.push(t.elapsed_ns());
     }
     BenchResult {
         name: name.to_string(),

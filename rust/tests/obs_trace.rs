@@ -1,0 +1,324 @@
+//! Observability-plane integration tests: the analytic loadtest report
+//! must be bit-identical with span tracing on or off, the Chrome trace
+//! must parse and nest sanely (no negative durations, children inside
+//! parents, non-overlapping per-fog execution), the virtual span sums
+//! must reconcile with the registry's `phase_breakdown` within 1%, a
+//! measured run must land real wall-clock kernel spans, and histogram
+//! aggregation across real threads must match a single-threaded oracle.
+
+use std::sync::Arc;
+
+use fograph::fog::Cluster;
+use fograph::graph::{generate, DatasetSpec, Graph};
+use fograph::net::NetKind;
+use fograph::obs::{chrome_trace, ClockMode, Histogram, Recorder,
+                   WALL_TID_BASE};
+use fograph::profile::PerfModel;
+use fograph::runtime::{Engine, EngineKind};
+use fograph::serving::pipeline::{Placement, ServeOpts};
+use fograph::traffic::{report_json, run_loadtest_traced, ExecMode,
+                       LoadtestReport, TrafficConfig};
+use fograph::util::json::Json;
+use fograph::util::rng::Rng;
+
+fn tiny() -> (Graph, DatasetSpec) {
+    let (mut g, _) = generate::sbm(400, 2000, 8, 0.85, 3);
+    let mut rng = Rng::new(5);
+    g.feature_dim = 16;
+    g.features = (0..400 * 16)
+        .map(|_| if rng.bool(0.15) { 1.0 } else { 0.0 })
+        .collect();
+    let spec = DatasetSpec {
+        name: "tiny",
+        vertices: 400,
+        edges: 2000,
+        feature_dim: 16,
+        classes: 3,
+        duration: 1,
+        window: 1,
+        seed: 1,
+    };
+    (g, spec)
+}
+
+fn engine(tag: &str) -> Engine {
+    let dir = std::env::temp_dir().join(format!("obs_trace_{tag}"));
+    std::fs::create_dir_all(&dir).unwrap();
+    Engine::new(EngineKind::Reference, &dir).unwrap()
+}
+
+fn fog_setup(g: &Graph) -> (Cluster, ServeOpts, Vec<PerfModel>) {
+    let cluster = Cluster::case_study(NetKind::Wifi);
+    let opts =
+        ServeOpts::new("gcn", Placement::Iep, ServeOpts::co_codec(g));
+    let omegas = vec![PerfModel::uncalibrated(); cluster.len()];
+    (cluster, opts, omegas)
+}
+
+fn quick_traffic() -> TrafficConfig {
+    TrafficConfig {
+        rps: 60.0,
+        duration_s: 6.0,
+        seed: 42,
+        ..Default::default()
+    }
+}
+
+fn run_with(rec: &Arc<Recorder>, tag: &str) -> LoadtestReport {
+    let (g, spec) = tiny();
+    let (cluster, opts, omegas) = fog_setup(&g);
+    let mut eng = engine(tag);
+    run_loadtest_traced(&g, &spec, &cluster, &opts, &quick_traffic(),
+                        &omegas, &mut eng, rec)
+        .unwrap()
+}
+
+/// The tentpole invariant: enabling span tracing must not change a
+/// single byte of the analytic report — the registry is always live,
+/// and recording is write-only with respect to the event loop.
+#[test]
+fn analytic_report_is_bit_identical_with_tracing_on_and_off() {
+    let off = run_with(&Recorder::disabled(), "onoff");
+    let rec = Recorder::with_capacity(ClockMode::Virtual, 1 << 20);
+    let on = run_with(&rec, "onoff");
+    assert!(!rec.events().is_empty(), "tracing recorded no spans");
+    assert_eq!(off.latencies, on.latencies);
+    assert_eq!(off.slo.offered, on.slo.offered);
+    assert_eq!(off.slo.shed, on.slo.shed);
+    let t = quick_traffic();
+    assert_eq!(
+        report_json("bitrepro", &t, &off).to_string(),
+        report_json("bitrepro", &t, &on).to_string(),
+        "report bytes changed when tracing was enabled"
+    );
+}
+
+/// Extract `(name, cat, pid, tid, ts, dur)` for every `ph: "X"` event.
+fn spans_of(doc: &Json)
+            -> Vec<(String, String, usize, usize, f64, f64)> {
+    doc.get("traceEvents")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .filter(|e| e.get("ph").unwrap().as_str() == Some("X"))
+        .map(|e| {
+            (
+                e.get("name").unwrap().as_str().unwrap().to_string(),
+                e.get("cat").unwrap().as_str().unwrap().to_string(),
+                e.get("pid").unwrap().as_usize().unwrap(),
+                e.get("tid").unwrap().as_usize().unwrap(),
+                e.get("ts").unwrap().as_f64().unwrap(),
+                e.get("dur").unwrap().as_f64().unwrap(),
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn chrome_trace_parses_and_spans_nest() {
+    let rec = Recorder::with_capacity(ClockMode::Virtual, 1 << 20);
+    run_with(&rec, "nest");
+    assert_eq!(rec.dropped(), 0, "ring wrapped; grow the capacity");
+    let doc = chrome_trace(&rec, &["default".to_string()]);
+    let parsed = Json::parse(&doc.to_string()).unwrap();
+    let spans = spans_of(&parsed);
+    assert!(!spans.is_empty());
+
+    let eps = 1e-6; // µs
+    for (name, _, _, _, ts, dur) in &spans {
+        assert!(ts.is_finite() && *ts >= 0.0, "{name}: bad ts {ts}");
+        assert!(dur.is_finite() && *dur >= 0.0,
+                "{name}: negative duration {dur}");
+    }
+    let kernels: Vec<_> = spans
+        .iter()
+        .filter(|s| s.0 == "kernel" && s.1 == "virtual")
+        .collect();
+    assert!(!kernels.is_empty(), "no kernel spans in the trace");
+
+    // child within parent: every transfer sub-span sits inside a
+    // collect span of the same tenant
+    let collects: Vec<_> =
+        spans.iter().filter(|s| s.0 == "collect").collect();
+    for t in spans.iter().filter(|s| s.0 == "transfer") {
+        assert!(
+            collects.iter().any(|c| {
+                c.2 == t.2
+                    && c.4 <= t.4 + eps
+                    && t.4 + t.5 <= c.4 + c.5 + eps
+            }),
+            "transfer span at {} escapes every collect window",
+            t.4
+        );
+    }
+    // kernel spans stay inside the batch lifecycle: at or after the
+    // first collect window opened, done by the last reply
+    let first_collect =
+        collects.iter().map(|c| c.4).fold(f64::INFINITY, f64::min);
+    let last_reply = spans
+        .iter()
+        .filter(|s| s.0 == "reply")
+        .map(|s| s.4)
+        .fold(0.0, f64::max);
+    for k in &kernels {
+        assert!(k.4 >= first_collect - eps);
+        assert!(k.4 + k.5 <= last_reply + eps,
+                "kernel span past the last reply");
+    }
+    // per-fog virtual execution is serial: spans on one fog track
+    // never overlap (BSP batches run back to back)
+    let mut tracks: std::collections::BTreeMap<(usize, usize),
+                                               Vec<(f64, f64)>> =
+        std::collections::BTreeMap::new();
+    for s in &spans {
+        if s.1 == "virtual" && s.3 >= 1 && s.3 < WALL_TID_BASE {
+            tracks.entry((s.2, s.3)).or_default().push((s.4, s.5));
+        }
+    }
+    assert!(!tracks.is_empty());
+    for ((pid, tid), mut evs) in tracks {
+        evs.sort_by(|a, b| a.0.total_cmp(&b.0));
+        for w in evs.windows(2) {
+            assert!(
+                w[1].0 + eps >= w[0].0 + w[0].1,
+                "overlap on fog track pid={pid} tid={tid}: \
+                 [{}, +{}] then [{}, +{}]",
+                w[0].0, w[0].1, w[1].0, w[1].1
+            );
+        }
+    }
+}
+
+/// Acceptance check from the issue: per-phase time summed from the
+/// trace's virtual spans must reconcile with the registry's
+/// `phase_breakdown` within 1% (and exactly on counts) — same events,
+/// two independent accounting paths. `transfer` is span-only by
+/// convention (it shadows `collect` for nesting) so the breakdown
+/// never lists it.
+#[test]
+fn virtual_span_sums_reconcile_with_phase_breakdown() {
+    let rec = Recorder::with_capacity(ClockMode::Virtual, 1 << 20);
+    let r = run_with(&rec, "reconcile");
+    assert_eq!(rec.dropped(), 0);
+
+    let mut span_secs: std::collections::BTreeMap<String, f64> =
+        std::collections::BTreeMap::new();
+    let mut span_count: std::collections::BTreeMap<String, u64> =
+        std::collections::BTreeMap::new();
+    for ev in rec.events() {
+        if ev.wall || ev.tenant != 0 {
+            continue;
+        }
+        *span_secs.entry(ev.phase.name().to_string()).or_default() +=
+            ev.dur_us / 1e6;
+        *span_count.entry(ev.phase.name().to_string()).or_default() += 1;
+    }
+
+    let phases = match r.phase_breakdown.at(&["default", "phases"]) {
+        Some(Json::Obj(m)) => m,
+        other => panic!("phase_breakdown malformed: {other:?}"),
+    };
+    assert!(phases.contains_key("kernel"));
+    assert!(phases.contains_key("collect"));
+    assert!(!phases.contains_key("transfer"),
+            "transfer must stay span-only");
+    for (name, entry) in phases {
+        let secs = entry.get("seconds").unwrap().as_f64().unwrap();
+        let count =
+            entry.get("count").unwrap().as_f64().unwrap() as u64;
+        let got = span_secs.get(name).copied().unwrap_or(0.0);
+        if secs > 0.0 {
+            let rel = (got - secs).abs() / secs;
+            assert!(rel < 0.01,
+                    "{name}: spans sum to {got}s, breakdown says \
+                     {secs}s ({:.3}% off)",
+                    rel * 100.0);
+        } else {
+            assert_eq!(got, 0.0, "{name}: spans carry time the \
+                                  breakdown lacks");
+        }
+        assert_eq!(span_count.get(name).copied().unwrap_or(0), count,
+                   "{name}: span count != breakdown count");
+    }
+}
+
+#[test]
+fn measured_trace_records_wall_kernel_spans() {
+    let (g, spec) = tiny();
+    let (cluster, opts, omegas) = fog_setup(&g);
+    let mut eng = engine("measured");
+    let traffic = TrafficConfig {
+        rps: 60.0,
+        duration_s: 1.5,
+        seed: 42,
+        exec: ExecMode::Measured,
+        ..Default::default()
+    };
+    let rec = Recorder::with_capacity(ClockMode::Wall, 1 << 20);
+    let r = run_loadtest_traced(&g, &spec, &cluster, &opts, &traffic,
+                                &omegas, &mut eng, &rec)
+        .unwrap();
+    assert!(r.slo.completed > 0);
+    let evs = rec.events();
+    let wall_kernels = evs
+        .iter()
+        .filter(|e| {
+            e.wall && e.phase == fograph::obs::Phase::Kernel
+        })
+        .count();
+    assert!(wall_kernels > 0, "measured run recorded no wall kernels");
+    let virt_kernels = evs
+        .iter()
+        .filter(|e| {
+            !e.wall && e.phase == fograph::obs::Phase::Kernel
+        })
+        .count();
+    assert!(virt_kernels > 0, "virtual timeline lost its kernels");
+    for e in &evs {
+        assert!(e.dur_us >= 0.0 && e.t_us.is_finite());
+    }
+    // wall spans land on the offset track block in the exporter
+    let doc = chrome_trace(&rec, &["default".to_string()]);
+    let parsed = Json::parse(&doc.to_string()).unwrap();
+    assert!(spans_of(&parsed)
+        .iter()
+        .any(|s| s.1 == "wall" && s.3 >= WALL_TID_BASE));
+}
+
+/// Cross-thread histogram aggregation: four producer threads record
+/// into private histograms that are then merged; the result must match
+/// a single-threaded oracle fed the same values.
+#[test]
+fn histogram_merge_across_threads_matches_oracle() {
+    let shards: Vec<Histogram> =
+        (0..4).map(|_| Histogram::new()).collect();
+    std::thread::scope(|scope| {
+        for (i, h) in shards.iter().enumerate() {
+            scope.spawn(move || {
+                let mut rng = Rng::new(100 + i as u64);
+                for _ in 0..5000 {
+                    h.record(rng.f64() * 1e7);
+                }
+            });
+        }
+    });
+    let oracle = Histogram::new();
+    for i in 0..4u64 {
+        let mut rng = Rng::new(100 + i);
+        for _ in 0..5000 {
+            oracle.record(rng.f64() * 1e7);
+        }
+    }
+    let merged = Histogram::new();
+    for s in &shards {
+        merged.merge(s);
+    }
+    assert_eq!(merged.count(), oracle.count());
+    assert_eq!(merged.bucket_counts(), oracle.bucket_counts());
+    assert!((merged.sum() - oracle.sum()).abs()
+            <= 1e-6 * oracle.sum().abs());
+    for p in [50.0, 90.0, 99.0] {
+        assert_eq!(merged.percentile(p), oracle.percentile(p));
+    }
+}
