@@ -16,7 +16,8 @@ use fograph::serving::{Placement, ServeOpts};
 fn main() {
     let data_dir = std::path::Path::new("data");
     println!("== dual-mode adaptive scheduling on a load ramp ==\n");
-    let g = datasets::load_or_generate(data_dir, "siot");
+    let g = datasets::load_or_generate(data_dir, "siot")
+        .expect("siot is a known dataset");
     let spec = datasets::SIOT;
     let cluster = Cluster::case_study(NetKind::Wifi);
     let n = cluster.len();

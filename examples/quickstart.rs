@@ -19,7 +19,8 @@ fn main() {
     let artifacts = std::path::Path::new("artifacts");
 
     println!("== Fograph quickstart: GCN on the SIoT twin ==\n");
-    let g = datasets::load_or_generate(data_dir, "siot");
+    let g = datasets::load_or_generate(data_dir, "siot")
+        .expect("siot is a known dataset");
     let spec = datasets::SIOT;
     println!(
         "graph: {} vertices, {} edges, {}-dim features",

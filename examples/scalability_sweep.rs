@@ -15,7 +15,8 @@ fn main() {
     let data_dir = std::path::Path::new("data");
     let artifacts = std::path::Path::new("artifacts");
     println!("== scalability: RMAT-20K across growing type-B clusters ==\n");
-    let g = datasets::load_or_generate(data_dir, "rmat20k");
+    let g = datasets::load_or_generate(data_dir, "rmat20k")
+        .expect("rmat20k is a known dataset");
     let spec = datasets::spec_by_name("rmat20k").unwrap();
     let mut engine =
         Engine::new(EngineKind::Reference, artifacts).unwrap();

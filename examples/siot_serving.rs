@@ -23,7 +23,8 @@ fn main() {
 
     println!("== SIoT service classification: cloud vs fog vs Fograph \
               ({}) ==\n", net.name());
-    let g = datasets::load_or_generate(data_dir, "siot");
+    let g = datasets::load_or_generate(data_dir, "siot")
+        .expect("siot is a known dataset");
     let spec = datasets::SIOT;
     let mut engine = Engine::new(EngineKind::Pjrt, artifacts)
         .unwrap_or_else(|e| {

@@ -18,7 +18,8 @@ fn main() {
     let data_dir = std::path::Path::new("data");
     let artifacts = std::path::Path::new("artifacts");
     println!("== PeMS traffic flow forecasting with ASTGCN ==\n");
-    let g = datasets::load_or_generate(data_dir, "pems");
+    let g = datasets::load_or_generate(data_dir, "pems")
+        .expect("pems is a known dataset");
     let spec = datasets::PEMS;
     println!(
         "sensor network: {} loop detectors, {} road segments, {} days of \

@@ -18,6 +18,8 @@
 //! multiplier and takes the per-layer max (the BSP barrier).
 
 use std::borrow::Borrow;
+use std::collections::VecDeque;
+use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 
 use crate::graph::{subgraph, ExchangePlan, Graph, LocalGraph};
@@ -28,7 +30,7 @@ use crate::runtime::csr_backend::{in_neighbor_lists, CsrPartition,
                                   InNbrLists};
 use crate::runtime::kernels::{group_widths, FogJob, FogKernel,
                               FogWorkerPool, JobTrace, KernelScratch,
-                              ShardExec};
+                              Reply, ShardExec};
 use crate::runtime::{engine::EngineError, EdgeArrays, Engine,
                      WeightBundle};
 
@@ -453,6 +455,21 @@ impl BatchedBspPlan {
         self.subs[fog].cardinality()
     }
 
+    /// Largest per-fog outbound halo row count — the per-layer
+    /// serialization-buffer high-water mark (`sync_max_out` is this
+    /// times row bytes).
+    fn max_out_vertices(&self) -> usize {
+        (0..self.n_fogs)
+            .map(|owner| {
+                self.plan.transfers[owner]
+                    .iter()
+                    .map(|t| t.len())
+                    .sum::<usize>()
+            })
+            .max()
+            .unwrap_or(0)
+    }
+
     /// Execute a block-diagonal batch of `batch` identical-snapshot
     /// requests. Per-fog layer compute runs on the persistent worker
     /// pool — one long-lived thread per fog, mirroring the
@@ -712,6 +729,512 @@ impl BatchedBspPlan {
     }
 }
 
+/// Input-assembly state for one layer of one in-flight batch: per-fog
+/// buffers being filled by the owner's rebuild plus incoming halo
+/// messages, and the dependency counters that decide when a fog's job
+/// can dispatch without a global barrier.
+struct LayerSlot {
+    /// Per-fog input buffer; `None` before the fog's previous-layer
+    /// reply created it and again after its job took it.
+    bufs: Vec<Option<Vec<f32>>>,
+    /// Fog's own previous-layer output was rebuilt into `bufs` (for
+    /// layer 0: set at submit).
+    own_done: Vec<bool>,
+    /// Halo messages delivered into this fog's buffer so far.
+    copies_in: Vec<usize>,
+    dispatched: Vec<bool>,
+    /// Halo messages that arrived before the destination fog's buffer
+    /// existed: `(src_fog, staged_rows)`, delivered at creation.
+    staged: Vec<Vec<(usize, Vec<f32>)>>,
+}
+
+impl LayerSlot {
+    fn new(n_fogs: usize) -> LayerSlot {
+        LayerSlot {
+            bufs: (0..n_fogs).map(|_| None).collect(),
+            own_done: vec![false; n_fogs],
+            copies_in: vec![0; n_fogs],
+            dispatched: vec![false; n_fogs],
+            staged: (0..n_fogs).map(|_| Vec::new()).collect(),
+        }
+    }
+}
+
+/// One batch moving through the pipeline.
+struct InflightBatch {
+    seq: u64,
+    batch: usize,
+    f_in: usize,
+    wb: Arc<WeightBundle>,
+    num_layers: usize,
+    /// Which fogs hold vertices (the rest never receive jobs).
+    active: Vec<bool>,
+    n_active: usize,
+    /// Incoming-halo source count per fog (static per plan).
+    n_in: Vec<usize>,
+    layers: Vec<LayerSlot>,
+    /// Final-layer outputs in local space (owned rows valid).
+    final_states: Vec<Vec<f32>>,
+    done_last: usize,
+    complete: bool,
+    /// Input dim per layer; `dims[L]` set when layer L's first input
+    /// exists (`dims[0] = f_in`), `dims[num_layers]` = output dim.
+    dims: Vec<usize>,
+    layer_host: Vec<Vec<f64>>,
+    layer_wait: Vec<Vec<f64>>,
+    sync_bytes: Vec<usize>,
+    sync_max_out: Vec<usize>,
+}
+
+/// Pipelined BSP executor: up to `depth` micro-batches in flight over
+/// one `BatchedBspPlan`, with the global per-layer barrier of
+/// `execute_inner` replaced by dependency-driven dispatch — fog j's
+/// layer-L job launches as soon as (a) fog j's own layer-(L-1) output
+/// is rebuilt and (b) every halo message destined for j at that
+/// boundary has been delivered. The halo exchange therefore overlaps
+/// straggler compute (layer-level double buffering: each layer's input
+/// buffers assemble while the previous layer still runs elsewhere),
+/// and a fog that finished batch N's last layer immediately starts
+/// batch N+1's first — the per-fog request/reply channels of the
+/// worker pool carry both without a single coordinator join.
+///
+/// Every value a task consumes is identical to the barrier executor's
+/// (halo messages are plain row copies, kernels are
+/// row-decomposition invariant), so final features are bit-identical
+/// to `execute` for any depth and any reply order; only the measured
+/// per-task wall seconds differ. `tests/backend_parity.rs` asserts
+/// the bit-identity across models and depths.
+///
+/// The pipeline owns a private reply channel (`FogJob::reply_to`), so
+/// plans sharing one worker pool can each run their own pipeline —
+/// and interleave with barrier `dispatch` calls from other plans —
+/// without reply cross-talk. Replies are mapped back to
+/// (batch, layer) via per-fog FIFO tag queues, which is sound because
+/// each fog worker processes its jobs in submission order.
+pub struct BspPipeline {
+    depth: usize,
+    assemble: bool,
+    tx: Sender<Reply>,
+    rx: Receiver<Reply>,
+    /// Per-fog (batch seq, layer) tags in submission order.
+    tags: Vec<VecDeque<(u64, usize)>>,
+    inflight: VecDeque<InflightBatch>,
+    next_seq: u64,
+}
+
+impl BspPipeline {
+    /// `depth` ≥ 1 in-flight batches (1 = submit/collect lockstep,
+    /// still barrier-free within the batch); `assemble` controls
+    /// global-output gathering exactly like `execute` vs
+    /// `execute_timings`.
+    pub fn new(n_fogs: usize, depth: usize,
+               assemble: bool) -> BspPipeline {
+        assert!(depth >= 1, "pipeline depth must be at least 1");
+        let (tx, rx) = channel::<Reply>();
+        BspPipeline {
+            depth,
+            assemble,
+            tx,
+            rx,
+            tags: (0..n_fogs).map(|_| VecDeque::new()).collect(),
+            inflight: VecDeque::new(),
+            next_seq: 0,
+        }
+    }
+
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// Batches submitted but not yet collected.
+    pub fn pending(&self) -> usize {
+        self.inflight.len()
+    }
+
+    /// Enqueue one block-diagonal micro-batch. The caller must keep
+    /// `pending() < depth` (collect first — that blocking wait is the
+    /// backpressure stall the fabric accounts as `pipeline_stall`).
+    /// Layer-0 inputs and their halo exchange are built here, so the
+    /// first jobs dispatch before this returns.
+    pub fn submit(&mut self, plan: &BatchedBspPlan, features: &[f32],
+                  f_in: usize, wb: &Arc<WeightBundle>, batch: usize,
+                  trace: Option<&ExecTrace>) {
+        assert!(batch >= 1);
+        assert!(
+            self.pending() < self.depth,
+            "pipeline full: collect() before submitting (depth {})",
+            self.depth
+        );
+        // opportunistically advance in-flight batches first
+        self.pump(plan, trace);
+        let n_fogs = plan.n_fogs;
+        let model: &str = &plan.model;
+        let num_layers = crate::runtime::reference::model_layers(model);
+        let active: Vec<bool> =
+            plan.subs.iter().map(|s| s.n_total() > 0).collect();
+        let n_active = active.iter().filter(|&&a| a).count();
+        let n_in: Vec<usize> = (0..n_fogs)
+            .map(|d| {
+                (0..n_fogs)
+                    .filter(|&s| {
+                        s != d && !plan.plan.transfers[s][d].is_empty()
+                    })
+                    .count()
+            })
+            .collect();
+        let mut dims = vec![0usize; num_layers + 1];
+        dims[0] = f_in;
+        let mut b = InflightBatch {
+            seq: self.next_seq,
+            batch,
+            f_in,
+            wb: wb.clone(),
+            num_layers,
+            active,
+            n_active,
+            n_in,
+            layers: (0..num_layers)
+                .map(|_| LayerSlot::new(n_fogs))
+                .collect(),
+            final_states: vec![Vec::new(); n_fogs],
+            done_last: 0,
+            complete: n_active == 0,
+            dims,
+            layer_host: vec![vec![0.0; n_fogs]; num_layers],
+            layer_wait: vec![vec![0.0; n_fogs]; num_layers],
+            sync_bytes: vec![0; num_layers],
+            sync_max_out: vec![0; num_layers],
+        };
+        self.next_seq += 1;
+
+        // layer-0 inputs: snapshot rows per block, halo slots zeroed,
+        // then the full initial exchange (all buffers exist, so every
+        // message delivers immediately) — byte-equal to execute()'s
+        // initial states + first sync_halo round.
+        for (j, sub) in plan.subs.iter().enumerate() {
+            if !b.active[j] {
+                b.layers[0].own_done[j] = true;
+                continue;
+            }
+            let n = sub.n_total();
+            let mut h = vec![0f32; batch * n * f_in];
+            for (row, &gid) in
+                sub.vertices[..sub.n_local].iter().enumerate()
+            {
+                let src = &features[gid as usize * f_in
+                    ..(gid as usize + 1) * f_in];
+                for bk in 0..batch {
+                    let at = (bk * n + row) * f_in;
+                    h[at..at + f_in].copy_from_slice(src);
+                }
+            }
+            b.layers[0].bufs[j] = Some(h);
+            b.layers[0].own_done[j] = true;
+        }
+        if num_layers > 0 {
+            b.sync_max_out[0] =
+                plan.max_out_vertices() * f_in * 4 * batch;
+        }
+        self.inflight.push_back(b);
+        let idx = self.inflight.len() - 1;
+        for src in 0..n_fogs {
+            self.ship_halo(plan, idx, 0, src, trace);
+        }
+        for j in 0..n_fogs {
+            self.maybe_dispatch(plan, idx, 0, j, trace);
+        }
+    }
+
+    /// Drain every reply that is already waiting (non-blocking), so
+    /// workers stay fed between submit/collect calls.
+    pub fn pump(&mut self, plan: &BatchedBspPlan,
+                trace: Option<&ExecTrace>) {
+        while let Ok(r) = self.rx.try_recv() {
+            self.process_reply(plan, r, trace);
+        }
+    }
+
+    /// Block until the OLDEST in-flight batch completes, then return
+    /// its result (replies for younger batches are processed along the
+    /// way — that is the overlap).
+    pub fn collect(&mut self, plan: &BatchedBspPlan,
+                   trace: Option<&ExecTrace>) -> BspResult {
+        assert!(
+            !self.inflight.is_empty(),
+            "collect() with no batch in flight"
+        );
+        while !self.inflight.front().unwrap().complete {
+            let r = self.rx.recv().expect("fog worker reply");
+            self.process_reply(plan, r, trace);
+        }
+        let b = self.inflight.pop_front().unwrap();
+        self.finish_batch(plan, b)
+    }
+
+    /// Stage fog `src`'s freshly-rebuilt layer-`layer` owned rows into
+    /// halo messages and deliver each to its destination (or park it
+    /// until the destination's buffer exists). Pure row copies — the
+    /// same bytes `sync_halo` moves, just per-source instead of
+    /// all-at-once — accounted into `sync_bytes[layer]`.
+    fn ship_halo(&mut self, plan: &BatchedBspPlan, idx: usize,
+                 layer: usize, src: usize,
+                 trace: Option<&ExecTrace>) {
+        let b = &mut self.inflight[idx];
+        let dim = b.dims[layer];
+        let batch = b.batch;
+        let sw = trace.map(|_| Stopwatch::start());
+        let n_src = plan.subs[src].n_total();
+        let mut shipped = false;
+        for dst in 0..plan.n_fogs {
+            let wanted = &plan.plan.transfers[src][dst];
+            if dst == src || wanted.is_empty() {
+                continue;
+            }
+            b.sync_bytes[layer] += wanted.len() * dim * 4 * batch;
+            // compact wire message: rows [w][bk][dim]
+            let mut msg =
+                Vec::with_capacity(wanted.len() * batch * dim);
+            {
+                let sb = b.layers[layer].bufs[src]
+                    .as_ref()
+                    .expect("source buffer live while shipping");
+                for &owner_local in wanted {
+                    for bk in 0..batch {
+                        let s0 =
+                            (bk * n_src + owner_local as usize) * dim;
+                        msg.extend_from_slice(&sb[s0..s0 + dim]);
+                    }
+                }
+            }
+            shipped = true;
+            if b.layers[layer].own_done[dst] {
+                Self::deliver(plan, b, layer, src, dst, &msg);
+                b.layers[layer].copies_in[dst] += 1;
+            } else {
+                b.layers[layer].staged[dst].push((src, msg));
+            }
+        }
+        if let (Some(tr), Some(sw)) = (trace, sw) {
+            if shipped {
+                let dur_us = sw.elapsed_s() * 1e6;
+                let end_us = tr.rec.wall_now_us();
+                let mut ev = SpanEvent::new(Phase::Sync, tr.tenant,
+                                            end_us - dur_us, dur_us)
+                    .fog(src)
+                    .count(batch)
+                    .on_wall();
+                ev.layer = layer as i32;
+                tr.rec.span(&tr.coord, ev);
+            }
+        }
+    }
+
+    /// Write one staged halo message into the destination buffer.
+    fn deliver(plan: &BatchedBspPlan, b: &mut InflightBatch,
+               layer: usize, src: usize, dst: usize, msg: &[f32]) {
+        let dim = b.dims[layer];
+        let batch = b.batch;
+        let n_dst = plan.subs[dst].n_total();
+        let wanted = &plan.plan.transfers[src][dst];
+        let db = b.layers[layer].bufs[dst]
+            .as_mut()
+            .expect("destination buffer live while delivering");
+        for (w, &owner_local) in wanted.iter().enumerate() {
+            let gid = plan.subs[src].vertices[owner_local as usize];
+            let pos = *plan.halo_index[dst]
+                .get(&gid)
+                .expect("halo row for shipped vertex");
+            for bk in 0..batch {
+                let m0 = (w * batch + bk) * dim;
+                let d0 = (bk * n_dst + pos) * dim;
+                db[d0..d0 + dim]
+                    .copy_from_slice(&msg[m0..m0 + dim]);
+            }
+        }
+    }
+
+    /// Dispatch fog `j`'s layer job once its buffer is fully
+    /// assembled (own rebuild + all incoming halo messages).
+    fn maybe_dispatch(&mut self, plan: &BatchedBspPlan, idx: usize,
+                      layer: usize, j: usize,
+                      trace: Option<&ExecTrace>) {
+        let seq = {
+            let b = &mut self.inflight[idx];
+            if !b.active[j]
+                || b.layers[layer].dispatched[j]
+                || !b.layers[layer].own_done[j]
+                || b.layers[layer].copies_in[j] < b.n_in[j]
+            {
+                return;
+            }
+            b.layers[layer].dispatched[j] = true;
+            b.seq
+        };
+        let b = &mut self.inflight[idx];
+        let state = b.layers[layer].bufs[j]
+            .take()
+            .expect("dispatch takes a live buffer");
+        let last = layer + 1 == b.num_layers;
+        let kernel = if &*plan.model == "astgcn" {
+            FogKernel::Astgcn { ft: b.f_in }
+        } else {
+            FogKernel::Layer { layer, dim: b.dims[layer], last }
+        };
+        let job = FogJob {
+            kernel,
+            model: plan.model.clone(),
+            batch: b.batch,
+            state,
+            weights: b.wb.clone(),
+            sub: plan.subs[j].clone(),
+            csr: plan.csrs.get(j).cloned(),
+            nbr: plan.nbrs.get(j).cloned(),
+            trace: trace.map(|tr| JobTrace {
+                rec: tr.rec.clone(),
+                ring: tr.rings[j].clone(),
+                tenant: tr.tenant,
+                layer: layer as i32,
+            }),
+            reply_to: Some(self.tx.clone()),
+        };
+        self.tags[j].push_back((seq, layer));
+        plan.pool.submit(j, job);
+    }
+
+    /// Advance the dependency graph with one worker reply.
+    fn process_reply(&mut self, plan: &BatchedBspPlan, r: Reply,
+                     trace: Option<&ExecTrace>) {
+        if r.panicked {
+            plan.pool.poison();
+            panic!(
+                "fog worker {} panicked during pipelined kernel \
+                 execution",
+                r.fog
+            );
+        }
+        let (seq, layer) = self.tags[r.fog]
+            .pop_front()
+            .expect("reply matches a submitted job");
+        let front_seq =
+            self.inflight.front().expect("batch in flight").seq;
+        let idx = (seq - front_seq) as usize;
+        let j = r.fog;
+        let next = layer + 1;
+        {
+            let b = &mut self.inflight[idx];
+            b.layer_host[layer][j] = r.seconds;
+            b.layer_wait[layer][j] = r.queue_wait_s;
+            let l = plan.subs[j].n_local;
+            let n = plan.subs[j].n_total();
+            let out = r.out;
+            // rebuild fog j's full local-space state exactly as the
+            // barrier executor does: astgcn emits all rows; the
+            // message-passing models emit owned rows only, halo slots
+            // zeroed until their owners' messages arrive.
+            let (st, out_dim) = if &*plan.model == "astgcn" {
+                let out_dim = out.len() / (b.batch * n);
+                (out, out_dim)
+            } else {
+                let out_dim = out.len() / (b.batch * l);
+                let mut st = vec![0f32; b.batch * n * out_dim];
+                for bk in 0..b.batch {
+                    st[bk * n * out_dim..(bk * n + l) * out_dim]
+                        .copy_from_slice(
+                            &out[bk * l * out_dim
+                                ..(bk + 1) * l * out_dim],
+                        );
+                }
+                (st, out_dim)
+            };
+            if b.dims[next] == 0 {
+                b.dims[next] = out_dim;
+                if next < b.num_layers {
+                    b.sync_max_out[next] = plan.max_out_vertices()
+                        * out_dim
+                        * 4
+                        * b.batch;
+                }
+            }
+            debug_assert_eq!(b.dims[next], out_dim,
+                             "fogs disagree on layer output dim");
+            if next == b.num_layers {
+                b.final_states[j] = st;
+                b.done_last += 1;
+                if b.done_last == b.n_active {
+                    b.complete = true;
+                }
+                return;
+            }
+            let slot = &mut b.layers[next];
+            slot.bufs[j] = Some(st);
+            slot.own_done[j] = true;
+            // deliver messages that arrived before this buffer existed
+            let staged = std::mem::take(&mut slot.staged[j]);
+            for (src, msg) in staged {
+                Self::deliver(plan, b, next, src, j, &msg);
+                b.layers[next].copies_in[j] += 1;
+            }
+        }
+        // ship j's fresh rows to its dependents, then re-check
+        // dispatch readiness for j and everyone j feeds
+        self.ship_halo(plan, idx, next, j, trace);
+        self.maybe_dispatch(plan, idx, next, j, trace);
+        for dst in 0..plan.n_fogs {
+            if dst != j && !plan.plan.transfers[j][dst].is_empty() {
+                self.maybe_dispatch(plan, idx, next, dst, trace);
+            }
+        }
+    }
+
+    /// Build the `BspResult` for a completed batch (same shape and —
+    /// when `assemble` — the same bytes as `execute`).
+    fn finish_batch(&self, plan: &BatchedBspPlan,
+                    b: InflightBatch) -> BspResult {
+        let out_dim = if b.num_layers > 0 && b.n_active > 0 {
+            b.dims[b.num_layers]
+        } else {
+            b.f_in
+        };
+        let mut outputs = if self.assemble {
+            vec![0f32; b.batch * plan.nv * out_dim]
+        } else {
+            Vec::new()
+        };
+        if self.assemble {
+            for (j, sub) in plan.subs.iter().enumerate() {
+                let n = sub.n_total();
+                for bk in 0..b.batch {
+                    for (row, &gid) in
+                        sub.vertices[..sub.n_local].iter().enumerate()
+                    {
+                        let at =
+                            (bk * plan.nv + gid as usize) * out_dim;
+                        let from = (bk * n + row) * out_dim;
+                        outputs[at..at + out_dim].copy_from_slice(
+                            &b.final_states[j][from..from + out_dim],
+                        );
+                    }
+                }
+            }
+        }
+        BspResult {
+            outputs,
+            out_dim,
+            layer_host_seconds: b.layer_host,
+            layer_queue_wait_seconds: b.layer_wait,
+            sync_bytes: b.sync_bytes,
+            sync_max_out: b.sync_max_out,
+            fog_vertices:
+                plan.subs.iter().map(|s| s.n_local).collect(),
+            fog_cardinality: plan
+                .subs
+                .iter()
+                .map(|s| s.cardinality())
+                .collect(),
+        }
+    }
+}
+
 /// One-shot measured batched run: extract + execute. The outputs stack
 /// [batch * V, out_dim]; every block is a forward over the same
 /// snapshot, so blocks are numerically identical (asserted by
@@ -955,6 +1478,98 @@ mod tests {
                 .iter()
                 .flatten()
                 .all(|&w| w == 0.0));
+        }
+    }
+
+    /// The pipelined executor must be a pure scheduling change: for
+    /// every model and depth, every in-flight batch's outputs are
+    /// bit-identical to the barrier executor's, and the metadata
+    /// (sync bytes, layer/fog shapes) matches too.
+    #[test]
+    fn pipelined_executor_is_bit_identical_to_barrier() {
+        let (mut g, _) = generate::sbm(240, 960, 4, 0.85, 3);
+        let f_in = 8;
+        let mut rng = crate::util::rng::Rng::new(41);
+        g.features =
+            (0..240 * f_in).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        g.feature_dim = f_in;
+        let dir = std::env::temp_dir().join("bsp_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut eng = Engine::new(EngineKind::Csr, &dir).unwrap();
+        let assignment: Vec<u32> =
+            (0..240).map(|v| (v % 3) as u32).collect();
+        let batch = 4;
+        for model in ["gcn", "sage", "gat"] {
+            let wb = std::sync::Arc::new(
+                eng.weights(model, "tiny", f_in, 3).clone(),
+            );
+            let plan = BatchedBspPlan::with_threads(&g, &assignment, 3,
+                                                    model, 2)
+                .unwrap();
+            let want = plan.execute(&g.features, f_in, &wb, batch);
+            for depth in [1usize, 2, 4] {
+                let mut pipe = BspPipeline::new(plan.n_fogs(), depth,
+                                                true);
+                // keep the window full, then drain: 6 batches of the
+                // same snapshot exercise cross-batch overlap
+                let total = 6;
+                let mut got = Vec::new();
+                for _ in 0..total {
+                    if pipe.pending() == depth {
+                        got.push(pipe.collect(&plan, None));
+                    }
+                    pipe.submit(&plan, &g.features, f_in, &wb, batch,
+                                None);
+                }
+                while pipe.pending() > 0 {
+                    got.push(pipe.collect(&plan, None));
+                }
+                assert_eq!(got.len(), total);
+                for r in &got {
+                    assert_eq!(r.outputs, want.outputs,
+                               "{model} depth {depth}: pipelined \
+                                outputs deviate from barrier");
+                    assert_eq!(r.out_dim, want.out_dim);
+                    assert_eq!(r.sync_bytes, want.sync_bytes);
+                    assert_eq!(r.sync_max_out, want.sync_max_out);
+                    assert_eq!(r.fog_vertices, want.fog_vertices);
+                    assert_eq!(r.layer_host_seconds.len(),
+                               want.layer_host_seconds.len());
+                }
+            }
+        }
+    }
+
+    /// Same contract for the single-layer spatio-temporal model, whose
+    /// rebuild path (full-row emission) differs from message passing.
+    #[test]
+    fn pipelined_executor_matches_barrier_for_astgcn() {
+        let (mut g, _) = generate::sbm(60, 200, 3, 0.8, 7);
+        let ft = 36;
+        let mut rng = crate::util::rng::Rng::new(42);
+        g.features =
+            (0..60 * ft).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        g.feature_dim = ft;
+        let dir = std::env::temp_dir().join("bsp_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut eng = Engine::new(EngineKind::Csr, &dir).unwrap();
+        let assignment: Vec<u32> =
+            (0..60).map(|v| (v % 2) as u32).collect();
+        let wb = std::sync::Arc::new(
+            eng.weights("astgcn", "tinypems", ft, 0).clone(),
+        );
+        let plan =
+            BatchedBspPlan::new(&g, &assignment, 2, "astgcn").unwrap();
+        let want = plan.execute(&g.features, ft, &wb, 2);
+        let mut pipe = BspPipeline::new(plan.n_fogs(), 3, true);
+        for _ in 0..3 {
+            pipe.submit(&plan, &g.features, ft, &wb, 2, None);
+        }
+        for _ in 0..3 {
+            let r = pipe.collect(&plan, None);
+            assert_eq!(r.outputs, want.outputs,
+                       "astgcn pipelined outputs deviate");
+            assert_eq!(r.out_dim, want.out_dim);
         }
     }
 }

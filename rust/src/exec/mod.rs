@@ -8,5 +8,5 @@
 
 pub mod bsp;
 
-pub use bsp::{run as run_bsp, run_parallel, BatchedBspPlan, BspResult,
-              ExecTrace};
+pub use bsp::{run as run_bsp, run_parallel, BatchedBspPlan, BspPipeline,
+              BspResult, ExecTrace};

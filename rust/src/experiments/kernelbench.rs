@@ -30,7 +30,9 @@ use crate::obs::clock::ClockMode;
 use crate::obs::recorder::{Recorder, Ring};
 use crate::obs::span::{Phase, SpanEvent};
 use crate::runtime::csr_backend::CsrPartition;
-use crate::runtime::kernels::shard::{min_rows_per_shard, split_rows,
+use crate::runtime::kernels::shard::{min_rows_per_shard,
+                                     min_rows_per_shard_source,
+                                     split_rows,
                                      ShardClosure, ShardExec,
                                      ShardGroup};
 use crate::runtime::kernels::{gemm, simd, spmm};
@@ -129,12 +131,14 @@ pub fn cmd(args: &Args) -> i32 {
     };
     // smoke keeps CI turnaround low; full runs settle the timings
     let min_s = if smoke { 0.08 } else { 0.5 };
-    // the active shard floor (FOGRAPH_MIN_ROWS_PER_SHARD override or
-    // the default); main() has already rejected invalid values
+    // the active shard floor (FOGRAPH_MIN_ROWS_PER_SHARD override, or
+    // the one-shot micro-probe value); main() has already rejected
+    // invalid override values
     let min_rows = min_rows_per_shard();
+    let min_rows_source = min_rows_per_shard_source();
     println!(
         "== kernel bench ({}, simd={}, kernel-threads<={max_threads}, \
-         min-rows-per-shard={min_rows}) ==",
+         min-rows-per-shard={min_rows} [{min_rows_source}]) ==",
         if smoke { "smoke" } else { "full" },
         simd::name()
     );
@@ -738,6 +742,7 @@ pub fn cmd(args: &Args) -> i32 {
         ("simd", s(simd::name())),
         ("kernel_threads", num(max_threads as f64)),
         ("min_rows_per_shard", num(min_rows as f64)),
+        ("min_rows_per_shard_source", s(min_rows_source)),
         ("gemm", arr(gemm_rows)),
         ("spmm", arr(spmm_rows)),
         ("simd_margin", arr(simd_rows)),
@@ -787,6 +792,7 @@ pub fn cmd(args: &Args) -> i32 {
         ("simd", s(simd::name())),
         ("kernel_threads", num(max_threads as f64)),
         ("min_rows_per_shard", num(min_rows as f64)),
+        ("min_rows_per_shard_source", s(min_rows_source)),
         ("gemm_speedups", obj(gentries)),
         ("spmm_speedups", obj(sentries)),
         ("fog_batched_speedup", num(fog_speedup)),

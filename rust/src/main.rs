@@ -75,6 +75,7 @@ USAGE:
                  [--mode cloud|single-fog|multi-fog|fograph|all]
                  [--net 4g|5g|wifi] [--engine pjrt|ref|csr]
                  [--exec analytic|measured] [--kernel-threads K]
+                 [--pipeline-depth D]
                  [--arrival poisson|bursty|diurnal] [--rps R]
                  [--duration SECONDS] [--seed N] [--slo-ms MS]
                  [--batch-max N] [--batch-deadline-ms MS]
@@ -104,7 +105,15 @@ EXEC MODES (loadtest only):
             largest fog a K-wide row-parallel shard group, smaller fogs
             proportionally fewer workers) and feed measured per-fog
             timings into the online profiler, so mid-run replans use
-            observed costs; all models incl. astgcn
+            observed costs; all models incl. astgcn.
+            --pipeline-depth D (default 1) keeps up to D micro-batches
+            in flight: batch N+1's collection/compression overlaps
+            batch N's kernels, with layer-level double buffering inside
+            the BSP plan (halo exchange overlaps straggler compute).
+            Depth 1 is the serial station model with bit-identical
+            reports; window-full waits are accounted as the distinct
+            pipeline_stall phase and per-fog pipeline_occupancy lands
+            in BENCH_loadtest.json
 
 MULTI-TENANT (loadtest only):
   each repeatable --tenant declares one workload sharing the fog
@@ -139,9 +148,12 @@ KERNELS:
   1/2/4-worker intra-fog thread scaling, the dispatched SIMD path) and
   writes BENCH_kernels.json plus a one-line summary appended to
   BENCH_history.jsonl; --smoke runs a fast parity-checked subset for CI,
-  --kernel-threads caps the scaling curve. FOGRAPH_MIN_ROWS_PER_SHARD
-  overrides the intra-fog shard floor (rows per shard; validated, the
-  active value is recorded in BENCH_kernels.json/BENCH_history.jsonl)"
+  --kernel-threads caps the scaling curve. The intra-fog shard floor
+  (rows per shard) is derived per host by a one-shot micro-probe
+  (channel round-trip vs. per-row kernel cost, clamped to a power of
+  two in [64, 4096]); FOGRAPH_MIN_ROWS_PER_SHARD overrides it
+  (validated at startup, exit 2 on junk). The active value and its
+  source are recorded in BENCH_kernels.json/BENCH_history.jsonl"
     );
 }
 
@@ -326,6 +338,14 @@ fn cmd_loadtest(args: &Args) -> i32 {
             return 2;
         }
     };
+    let pipeline_depth =
+        match fograph::util::cli::parse_pipeline_depth(args) {
+            Ok(d) => d,
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        };
     let traffic = TrafficConfig {
         arrival,
         rps: args.get_f64("rps", 100.0),
@@ -342,6 +362,7 @@ fn cmd_loadtest(args: &Args) -> i32 {
         background_load: !args.has("no-background-load"),
         exec,
         kernel_threads,
+        pipeline_depth,
     };
     let positive = |x: f64| x.is_finite() && x > 0.0;
     if !positive(traffic.rps) || !positive(traffic.duration_s) {
@@ -764,6 +785,16 @@ fn print_loadtest(mode: &str, spec: &DatasetSpec, model: &str,
             .collect();
         println!("  measured   per-bucket batch host time: {}",
                  buckets.join(", "));
+    }
+    if let Some(p) = &r.pipeline {
+        let occ: Vec<String> =
+            p.occupancy.iter().map(|o| format!("{o:.2}")).collect();
+        println!(
+            "  pipeline   depth={} occupancy=[{}] stall={:.1} ms",
+            p.depth,
+            occ.join(", "),
+            p.stall_s * 1e3
+        );
     }
 }
 

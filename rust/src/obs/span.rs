@@ -41,10 +41,16 @@ pub enum Phase {
     Reply = 10,
     /// Scheduler intervention (instant, cause-tagged).
     Replan = 11,
+    /// Backpressure stall: the pipelined executor's in-flight window
+    /// is full, so a release blocks until the oldest batch drains.
+    /// Kept distinct from `Queue` (admission wait) and from the pool's
+    /// job-channel queue-wait so OnlineProfiler observations stay
+    /// queueing-free.
+    PipelineStall = 12,
 }
 
 impl Phase {
-    pub const ALL: [Phase; 12] = [
+    pub const ALL: [Phase; 13] = [
         Phase::Arrive,
         Phase::Queue,
         Phase::Admit,
@@ -57,6 +63,7 @@ impl Phase {
         Phase::Sync,
         Phase::Reply,
         Phase::Replan,
+        Phase::PipelineStall,
     ];
 
     pub fn name(self) -> &'static str {
@@ -73,6 +80,7 @@ impl Phase {
             Phase::Sync => "sync",
             Phase::Reply => "reply",
             Phase::Replan => "replan",
+            Phase::PipelineStall => "pipeline_stall",
         }
     }
 

@@ -39,8 +39,9 @@ pub mod spmm;
 pub use gemm::{gemm_bias, gemm_bias_into, gemm_bias_naive,
                gemm_bias_rows};
 pub use pool::{group_widths, FogJob, FogKernel, FogWorkerPool,
-               JobTrace};
+               JobTrace, Reply};
 pub use shard::{min_rows_per_shard, min_rows_per_shard_env,
+                min_rows_per_shard_source, probe_min_rows_per_shard,
                 split_rows, ShardClosure, ShardExec, ShardGroup};
 pub use spmm::{csr_spmm, csr_spmm_into, csr_spmm_naive,
                csr_spmm_rows};

@@ -101,6 +101,12 @@ pub struct FogJob {
     pub nbr: Option<Arc<InNbrLists>>,
     /// Flight-recorder context; `None` = untraced (the default).
     pub trace: Option<JobTrace>,
+    /// Private reply channel for pipelined submission: `Some` routes
+    /// this job's reply there instead of the pool's shared results
+    /// channel, so concurrent pipelines (one per plan sharing the
+    /// pool) never interleave replies with each other or with a
+    /// barrier `dispatch`. `None` = classic barrier dispatch.
+    pub reply_to: Option<Sender<Reply>>,
 }
 
 impl FogJob {
@@ -173,17 +179,21 @@ impl FogJob {
     }
 }
 
-struct Reply {
-    fog: usize,
-    out: Vec<f32>,
+/// One worker reply. A fog's replies arrive on its channel in job
+/// submission order (workers are per-fog FIFO), which is what lets a
+/// pipelined coordinator map replies back to (batch, layer) with a
+/// per-fog tag queue instead of a wire-format identity.
+pub struct Reply {
+    pub fog: usize,
+    pub out: Vec<f32>,
     /// Pure kernel wall-clock (shard parallelism included).
-    seconds: f64,
+    pub seconds: f64,
     /// Send-to-dequeue latency on the job channel — reported apart
     /// from `seconds` so profiler observations stay queueing-free.
-    queue_wait_s: f64,
+    pub queue_wait_s: f64,
     /// The worker's job panicked; `dispatch` re-raises on the caller's
     /// thread (the pool equivalent of `thread::scope`'s join-propagate).
-    panicked: bool,
+    pub panicked: bool,
 }
 
 /// Per-fog worker-group widths from partition volume: the largest
@@ -326,6 +336,34 @@ impl FogWorkerPool {
         }
         (outs, secs, waits)
     }
+
+    /// Asynchronous submission for the pipelined executor: hand fog
+    /// `j` one job *without* waiting at a barrier. The job must carry
+    /// a `reply_to` channel (enforced) — the caller owns reply
+    /// collection and ordering, the pool only guarantees per-fog FIFO
+    /// processing. Sends never block (job channels are unbounded), so
+    /// a single-threaded coordinator can keep every fog fed while it
+    /// processes earlier replies.
+    pub fn submit(&self, fog: usize, job: FogJob) {
+        assert!(
+            !self.poisoned.get(),
+            "fog worker pool poisoned by an earlier worker panic; \
+             rebuild the plan"
+        );
+        assert!(
+            job.reply_to.is_some(),
+            "pipelined submission requires a reply_to channel"
+        );
+        self.senders[fog]
+            .send((Instant::now(), job))
+            .expect("fog worker alive while pool exists");
+    }
+
+    /// Mark the pool poisoned (a pipelined caller saw a `panicked`
+    /// reply on its private channel and is about to re-raise).
+    pub fn poison(&self) {
+        self.poisoned.set(true);
+    }
 }
 
 impl Drop for FogWorkerPool {
@@ -354,6 +392,7 @@ fn worker_loop(
     while let Ok((sent, mut job)) = jobs.recv() {
         let queue_wait_s = sent.elapsed().as_secs_f64();
         let trace = job.trace.take();
+        let reply_to = job.reply_to.take();
         let batch = job.batch;
         let exec = match &group {
             Some(g) => ShardExec::Group(g),
@@ -406,18 +445,35 @@ fn worker_loop(
                     queue_wait_s,
                     panicked: false,
                 };
-                if results.send(reply).is_err() {
-                    break; // pool dropped mid-flight
+                match &reply_to {
+                    // a dropped pipeline (caller unwound mid-flight)
+                    // just discards the reply; the worker lives on
+                    Some(tx) => {
+                        let _ = tx.send(reply);
+                    }
+                    None => {
+                        if results.send(reply).is_err() {
+                            break; // pool dropped mid-flight
+                        }
+                    }
                 }
             }
             Err(_) => {
-                let _ = results.send(Reply {
+                let reply = Reply {
                     fog,
                     out: Vec::new(),
                     seconds: 0.0,
                     queue_wait_s,
                     panicked: true,
-                });
+                };
+                match &reply_to {
+                    Some(tx) => {
+                        let _ = tx.send(reply);
+                    }
+                    None => {
+                        let _ = results.send(reply);
+                    }
+                }
                 break;
             }
         }
@@ -502,6 +558,7 @@ mod tests {
                     csr: Some(csrs[j].clone()),
                     nbr: None,
                     trace: None,
+                    reply_to: None,
                 })
             })
             .collect()

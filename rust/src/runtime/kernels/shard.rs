@@ -20,13 +20,19 @@
 //!
 //! Helpers are long-lived threads with channel handoff (same rationale
 //! as the per-fog pool itself: spawning costs tens of microseconds,
-//! comparable to a small shard's entire kernel time). Work below
-//! `MIN_ROWS_PER_SHARD` rows is not split at all — the round trip
-//! would cost more than the parallelism buys.
+//! comparable to a small shard's entire kernel time). Work below the
+//! active shard floor is not split at all — the round trip would cost
+//! more than the parallelism buys. The floor itself is a property of
+//! the host (channel round-trip latency vs. per-row kernel cost), so
+//! when `FOGRAPH_MIN_ROWS_PER_SHARD` is unset it is **derived** by a
+//! one-shot micro-probe (`probe_min_rows_per_shard`) rather than
+//! hard-coded; the env override still wins and is still exit-2
+//! validated at CLI startup.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::OnceLock;
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 use crate::util::cli::parse_bounded_usize;
 
@@ -34,12 +40,23 @@ use crate::util::cli::parse_bounded_usize;
 /// its shard's output rows.
 pub type ShardClosure = Box<dyn FnOnce() -> Vec<f32> + Send + 'static>;
 
-/// Default minimum row-blocks of work per shard: below this, the
-/// channel round trip and per-shard buffers outweigh the parallel win,
-/// so the pass runs unsplit. Overridable per-host via
-/// [`MIN_ROWS_ENV`] (the right floor is a property of the channel
-/// round-trip vs. per-row kernel cost, which varies across hosts).
+/// Fallback minimum row-blocks of work per shard: below the active
+/// floor, the channel round trip and per-shard buffers outweigh the
+/// parallel win, so the pass runs unsplit. This constant is used only
+/// when the micro-probe cannot produce a sane measurement (degenerate
+/// clock, probe thread failure); the normal unset-env path derives the
+/// floor per host via [`probe_min_rows_per_shard`]. Overridable via
+/// [`MIN_ROWS_ENV`], which always wins over the probe.
 pub const MIN_ROWS_PER_SHARD: usize = 256;
+
+/// Clamp bounds for the probed floor. Below 64 rows the per-shard
+/// output buffers dominate regardless of channel latency; above 4096
+/// the probe is claiming handoff costs so high that sharding would
+/// never fire on realistic partitions, which is more likely a noisy
+/// measurement than a real machine property.
+pub const PROBE_FLOOR_MIN: usize = 64;
+/// Upper clamp for the probed floor (see [`PROBE_FLOOR_MIN`]).
+pub const PROBE_FLOOR_MAX: usize = 4096;
 
 /// Environment override for the shard floor. Must parse to an integer
 /// in `1..=MAX_MIN_ROWS_PER_SHARD`; CLI entry points validate it at
@@ -61,9 +78,12 @@ pub fn parse_min_rows_per_shard(v: &str) -> Result<usize, String> {
     parse_bounded_usize(MIN_ROWS_ENV, v, 1, MAX_MIN_ROWS_PER_SHARD)
 }
 
-/// Read + validate the environment override (`Ok(default)` when
-/// unset). CLI entry points call this once at startup so a bad value
-/// is a loud exit-2, not a silent fallback.
+/// Read + validate the environment override (`Ok(fallback)` when
+/// unset — validation only; the *active* unset-env value is the
+/// probed one from [`min_rows_per_shard`]). CLI entry points call
+/// this once at startup so a bad value is a loud exit-2, not a silent
+/// fallback; keeping it probe-free means startup validation never
+/// pays the measurement.
 pub fn min_rows_per_shard_env() -> Result<usize, String> {
     match std::env::var(MIN_ROWS_ENV) {
         Ok(v) => parse_min_rows_per_shard(&v),
@@ -71,15 +91,124 @@ pub fn min_rows_per_shard_env() -> Result<usize, String> {
     }
 }
 
-/// The active shard floor: the validated environment override, or the
-/// built-in default. Latched on first use (library callers may race
-/// threads through `effective_shards`; the floor must not change
-/// mid-run). Invalid values fall back to the default here — the CLI
-/// has already rejected them before any kernel runs.
+/// The active shard floor: the validated environment override when
+/// set, otherwise the micro-probe-derived per-host value. Latched on
+/// first use (library callers may race threads through
+/// `effective_shards`; the floor must not change mid-run). Invalid
+/// override values fall back to the probe here — the CLI has already
+/// rejected them before any kernel runs.
 pub fn min_rows_per_shard() -> usize {
-    *ACTIVE_MIN_ROWS.get_or_init(|| {
-        min_rows_per_shard_env().unwrap_or(MIN_ROWS_PER_SHARD)
+    *ACTIVE_MIN_ROWS.get_or_init(|| match std::env::var(MIN_ROWS_ENV) {
+        Ok(v) => parse_min_rows_per_shard(&v)
+            .unwrap_or_else(|_| probe_min_rows_per_shard()),
+        Err(_) => probe_min_rows_per_shard(),
     })
+}
+
+/// Where the active floor came from: `"env-override"` when the
+/// operator set [`MIN_ROWS_ENV`], `"micro-probe"` otherwise. Reported
+/// next to the value in `BENCH_kernels.json` so benchmark numbers
+/// carry their provenance.
+pub fn min_rows_per_shard_source() -> &'static str {
+    if std::env::var(MIN_ROWS_ENV).is_ok() {
+        "env-override"
+    } else {
+        "micro-probe"
+    }
+}
+
+static PROBED_MIN_ROWS: OnceLock<usize> = OnceLock::new();
+
+/// Number of row-blocks the timing probe streams per repetition —
+/// large enough that the `Instant` read amortises to noise.
+const PROBE_ROWS: usize = 8192;
+/// Floats per probe row-block: the order of a small per-vertex feature
+/// slice, the granularity `split_rows` actually divides.
+const PROBE_ROW_WIDTH: usize = 32;
+/// Repetitions per measurement; the minimum is kept (least-preempted).
+const PROBE_REPS: usize = 5;
+/// Two-shard handoffs timed against the probe helper group.
+const PROBE_HANDOFFS: usize = 64;
+
+/// One-shot micro-probe: derive the break-even shard floor for this
+/// host as `handoff round-trip seconds / per-row kernel seconds`,
+/// rounded up to a power of two and clamped to
+/// `[PROBE_FLOOR_MIN, PROBE_FLOOR_MAX]`. Cached for the process — the
+/// probe spawns one short-lived helper thread and runs ~1 ms of
+/// arithmetic, so it must not re-run per plan build. Falls back to
+/// [`MIN_ROWS_PER_SHARD`] when either measurement is degenerate
+/// (zero / non-finite, e.g. a coarse clock or a failed spawn).
+pub fn probe_min_rows_per_shard() -> usize {
+    *PROBED_MIN_ROWS.get_or_init(|| {
+        derive_floor(probe_per_row_seconds(), probe_handoff_seconds())
+    })
+}
+
+/// Pure derivation step, split out so tests can pin the arithmetic
+/// without timing anything.
+pub fn derive_floor(per_row_s: f64, handoff_s: f64) -> usize {
+    if !per_row_s.is_finite()
+        || !handoff_s.is_finite()
+        || per_row_s <= 0.0
+        || handoff_s <= 0.0
+    {
+        return MIN_ROWS_PER_SHARD;
+    }
+    let breakeven = (handoff_s / per_row_s).ceil();
+    if !breakeven.is_finite() || breakeven < 1.0 {
+        return MIN_ROWS_PER_SHARD;
+    }
+    let rows = (breakeven as usize).max(1).next_power_of_two();
+    rows.clamp(PROBE_FLOOR_MIN, PROBE_FLOOR_MAX)
+}
+
+/// Seconds per row-block of representative kernel work: a fused
+/// multiply-add reduction over [`PROBE_ROW_WIDTH`] floats, the same
+/// shape as one output row of the dense micro-kernels.
+fn probe_per_row_seconds() -> f64 {
+    let src: Vec<f32> = (0..PROBE_ROWS * PROBE_ROW_WIDTH)
+        .map(|i| ((i % 97) as f32) * 0.03125 + 0.5)
+        .collect();
+    let mut out = vec![0f32; PROBE_ROWS];
+    let mut best = f64::INFINITY;
+    for _ in 0..PROBE_REPS {
+        let t = Instant::now();
+        for (r, o) in out.iter_mut().enumerate() {
+            let row = &src[r * PROBE_ROW_WIDTH..(r + 1) * PROBE_ROW_WIDTH];
+            let mut acc = 0f32;
+            for &v in row {
+                acc = v.mul_add(1.0009765, acc);
+            }
+            *o = acc;
+        }
+        best = best.min(t.elapsed().as_secs_f64());
+        std::hint::black_box(&out);
+    }
+    best / PROBE_ROWS as f64
+}
+
+/// Seconds per two-shard handoff round trip through a real
+/// [`ShardGroup`]: send + recv + per-shard buffer return, exactly the
+/// overhead `effective_shards` trades against kernel time.
+fn probe_handoff_seconds() -> f64 {
+    let group = ShardGroup::new(1, "floor-probe");
+    let tiny = || {
+        vec![
+            Box::new(|| vec![1.0f32]) as ShardClosure,
+            Box::new(|| vec![2.0f32]) as ShardClosure,
+        ]
+    };
+    // warm the helper (first dispatch pays thread wake-up)
+    std::hint::black_box(group.run(tiny()));
+    let mut best = f64::INFINITY;
+    for _ in 0..PROBE_REPS {
+        let t = Instant::now();
+        for _ in 0..PROBE_HANDOFFS {
+            std::hint::black_box(group.run(tiny()));
+        }
+        best = best.min(t.elapsed().as_secs_f64());
+    }
+    best / PROBE_HANDOFFS as f64
 }
 
 struct HelperTask {
@@ -343,23 +472,54 @@ mod tests {
     }
 
     #[test]
-    fn active_floor_defaults_when_env_unset() {
+    fn active_floor_is_probed_when_env_unset() {
         // the test runner does not set the override, so the latched
-        // value is the compiled default (also pins the env contract:
-        // `min_rows_per_shard_env` is Ok when unset)
+        // value is the micro-probe result: a power of two inside the
+        // clamp band, stable across calls (OnceLock), and labelled
+        // with probe provenance. The env contract stays Ok when unset
+        // (validation-only path, never probes).
         if std::env::var(MIN_ROWS_ENV).is_err() {
-            assert_eq!(min_rows_per_shard(), MIN_ROWS_PER_SHARD);
+            let floor = min_rows_per_shard();
+            assert_eq!(floor, probe_min_rows_per_shard());
+            assert!((PROBE_FLOOR_MIN..=PROBE_FLOOR_MAX)
+                        .contains(&floor),
+                    "probed floor {floor} outside clamp band");
+            assert!(floor.is_power_of_two()
+                        || floor == MIN_ROWS_PER_SHARD,
+                    "floor {floor} neither pow2 nor fallback");
+            assert_eq!(min_rows_per_shard(), floor, "latched");
+            assert_eq!(min_rows_per_shard_source(), "micro-probe");
             assert_eq!(min_rows_per_shard_env(),
                        Ok(MIN_ROWS_PER_SHARD));
         }
     }
 
     #[test]
+    fn derive_floor_arithmetic_and_fallbacks() {
+        // break-even rounds up to pow2: 100 rows of 1µs vs 100µs
+        // handoff → 100 → 128
+        assert_eq!(derive_floor(1e-6, 100e-6), 128);
+        // clamps: tiny handoff floors at PROBE_FLOOR_MIN, huge
+        // handoff ceils at PROBE_FLOOR_MAX
+        assert_eq!(derive_floor(1e-6, 1e-9), PROBE_FLOOR_MIN);
+        assert_eq!(derive_floor(1e-9, 1.0), PROBE_FLOOR_MAX);
+        // exact pow2 stays put
+        assert_eq!(derive_floor(1e-6, 512e-6), 512);
+        // degenerate measurements fall back to the static default
+        for (r, h) in [(0.0, 1e-6), (1e-6, 0.0), (-1.0, 1e-6),
+                       (f64::NAN, 1e-6), (1e-6, f64::INFINITY)] {
+            assert_eq!(derive_floor(r, h), MIN_ROWS_PER_SHARD,
+                       "({r}, {h}) should fall back");
+        }
+    }
+
+    #[test]
     fn effective_shards_respects_min_rows() {
+        let floor = min_rows_per_shard();
         let exec = ShardExec::Inline(4);
-        assert_eq!(exec.effective_shards(10), 1);
-        assert_eq!(exec.effective_shards(MIN_ROWS_PER_SHARD), 1);
-        assert_eq!(exec.effective_shards(2 * MIN_ROWS_PER_SHARD), 2);
-        assert_eq!(exec.effective_shards(100 * MIN_ROWS_PER_SHARD), 4);
+        assert_eq!(exec.effective_shards(floor / 2), 1);
+        assert_eq!(exec.effective_shards(floor), 1);
+        assert_eq!(exec.effective_shards(2 * floor), 2);
+        assert_eq!(exec.effective_shards(100 * floor), 4);
     }
 }

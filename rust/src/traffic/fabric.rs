@@ -18,9 +18,19 @@
 //!   once per key. All measured plans execute on ONE persistent
 //!   worker-pool handle (`--kernel-threads` budget), shared across
 //!   plans and survived by replans.
-//! * **Stations** — collection and BSP execution, pipelined depth 2 —
-//!   are shared: the whole point of the fabric is contention between
-//!   tenants on real shared fog resources.
+//! * **Stations** — collection and BSP execution — are shared: the
+//!   whole point of the fabric is contention between tenants on real
+//!   shared fog resources. The stations pipeline with configurable
+//!   depth (`--pipeline-depth`): collection/compression of batch N+1
+//!   overlaps the kernels of up to `depth` earlier batches. Depth 1
+//!   (default) is the classic two-station overlap and keeps reports
+//!   bit-identical to the pre-pipeline fabric; at depth > 1 in
+//!   measured mode, released batches are SUBMITTED into the pipelined
+//!   executor (`MeasuredExec::submit_batch` over `exec::BspPipeline`)
+//!   and their timeline/SLO accounting is deferred to collection, in
+//!   submission order. Window-full waits are accounted as the
+//!   distinct `pipeline_stall` phase, never as queueing or kernel
+//!   time.
 //! * **Admission arbitration** — when several tenants have releasable
 //!   batches, deficit-round-robin weighted-fair queuing (`FairPolicy::
 //!   Drr`) picks who runs: each tenant earns credit in proportion to
@@ -39,12 +49,13 @@
 //! goodput and the plan-cache hit counts, all surfaced in
 //! BENCH_loadtest.json.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::Arc;
+use std::time::Instant;
 
 use crate::fog::{Cluster, LoadTrace};
 use crate::graph::{DatasetSpec, Graph};
-use crate::obs::recorder::Recorder;
+use crate::obs::recorder::{Recorder, Ring};
 use crate::obs::span::{Phase, SpanEvent, NO_TENANT};
 use crate::profile::PerfModel;
 use crate::runtime::{Engine, EngineError};
@@ -52,12 +63,14 @@ use crate::scheduler::diffusion::estimate_times;
 use crate::scheduler::{schedule, SchedulerConfig, SchedulerDecision};
 use crate::serving::collection;
 use crate::serving::pipeline::{self, Placement, ServeOpts};
+use crate::util::cli::MAX_PIPELINE_DEPTH;
 use crate::util::json::{arr, num, obj, s, Json};
 
 use super::arrival::ArrivalProcess;
 use super::batcher::{bucket, MicroBatcher};
 use super::measured::{BucketRow, MeasuredExec};
-use super::sim::{report_json, ExecMode, LoadtestReport, TrafficConfig};
+use super::sim::{report_json, ExecMode, LoadtestReport,
+                 PipelineReport, TrafficConfig};
 use super::slo::{QueueTimeline, SloReport};
 use super::tenant::{FairPolicy, Tenant};
 
@@ -67,8 +80,126 @@ const EXEC_FIXED_FRAC: f64 = 0.85;
 /// Fixed share of the per-window collection cost; the rest grows with
 /// batch fill (larger windows admit marginally more device traffic).
 const COLL_FIXED_FRAC: f64 = 0.85;
-/// Collection of batch k may overlap execution of batch k-1.
-const PIPELINE_DEPTH: usize = 2;
+/// One micro-batch released but not yet accounted into the simulation
+/// timeline: at `--pipeline-depth` > 1 the measured fabric submits
+/// batches into the pipelined executor (`MeasuredExec::submit_batch`)
+/// and defers all timeline/SLO accounting to collection time, in
+/// strict submission order, so the deferred path stays deterministic
+/// given the measured kernel seconds.
+struct DeferredBatch {
+    service: usize,
+    /// Canonical tenant index the batch belongs to.
+    tenant: usize,
+    /// Request arrival times in the batch (for latency accounting).
+    arrivals: Vec<f64>,
+    /// Actual batch fill and its padded power-of-two bucket.
+    b: usize,
+    slot: usize,
+    t_form: f64,
+    coll_done: f64,
+}
+
+/// Account one collected pipelined batch into the simulation timeline
+/// — the exact accounting the depth-1 measured branch performs inline
+/// at release time, deferred to collection: virtual Kernel/Sync spans
+/// from the measured layer seconds, admission gate
+/// `start_exec = coll_done.max(finish(N - depth))`, SLO counters and
+/// per-request latencies. The blocking wait inside
+/// `MeasuredExec::collect_batch` is the pipeline's backpressure stall;
+/// it is measured in wall time and accounted as `Phase::PipelineStall`
+/// — NOT `Queue` or `Kernel` — so OnlineProfiler observations and the
+/// headline queue-wait stay queueing-free (the profiler consumed pure
+/// worker-measured kernel seconds already).
+#[allow(clippy::too_many_arguments)]
+fn account_pipelined_batch(
+    meta: DeferredBatch,
+    services: &mut [Service<'_>],
+    tenants: &mut [TenantState],
+    aggregate: &mut LoadtestReport,
+    finishes: &mut Vec<f64>,
+    exec_free: &mut f64,
+    exec_busy: &mut f64,
+    batch_total: &mut usize,
+    latencies: &mut Vec<f64>,
+    depth: usize,
+    node_mult: &[f64],
+    load_trace: &LoadTrace,
+    rec: &Arc<Recorder>,
+    ring: &Arc<Ring>,
+    stall_total: &mut f64,
+) {
+    let tid = meta.tenant as u32;
+    let reg = rec.registry();
+    let us = |t: f64| t * 1e6;
+    let sw = Instant::now();
+    let layer_seconds = services[meta.service]
+        .measured
+        .as_mut()
+        .expect("deferred batch on a measured service")
+        .collect_batch();
+    let stall = sw.elapsed().as_secs_f64();
+    *stall_total += stall;
+    reg.record_phase(tid, -1, Phase::PipelineStall, stall);
+    rec.span(ring,
+             SpanEvent::new(Phase::PipelineStall, tid,
+                            us(meta.t_form), stall * 1e6)
+                 .count(meta.b)
+                 .on_wall());
+    let start_exec = meta.coll_done.max(if finishes.len() >= depth {
+        finishes[finishes.len() - depth]
+    } else {
+        0.0
+    });
+    let step = start_exec.max(0.0) as usize;
+    let mut t_cursor = start_exec;
+    let mut total = 0f64;
+    for (layer, layer_times) in layer_seconds.into_iter().enumerate() {
+        let mut mx = 0f64;
+        for (j, &h) in layer_times.iter().enumerate() {
+            let load = load_trace.at(step, j).clamp(0.0, 0.85);
+            let scaled = h * node_mult[j] / (1.0 - load);
+            mx = mx.max(scaled);
+            if scaled > 0.0 {
+                let mut ev = SpanEvent::new(Phase::Kernel, tid,
+                                            us(t_cursor), us(scaled))
+                    .fog(j)
+                    .count(meta.b);
+                ev.layer = layer as i32;
+                rec.span(ring, ev);
+                reg.record_phase(tid, j as i32, Phase::Kernel, scaled);
+            }
+        }
+        t_cursor += mx;
+        total += mx;
+    }
+    let sync_t =
+        services[meta.service].base_sync_s * meta.slot as f64;
+    for j in 0..node_mult.len() {
+        rec.span(ring, SpanEvent::new(Phase::Sync, tid, us(t_cursor),
+                                      us(sync_t))
+            .fog(j)
+            .count(meta.b));
+        reg.record_phase(tid, j as i32, Phase::Sync, sync_t);
+    }
+    let exec_time = total + sync_t;
+    let finish = start_exec + exec_time;
+    *exec_free = exec_free.max(finish);
+    *exec_busy += exec_time;
+    finishes.push(finish);
+    aggregate.slo.batches += 1;
+    *batch_total += meta.b;
+    aggregate.slo.completed += meta.b;
+    let t = &mut tenants[meta.tenant];
+    t.slo.batches += 1;
+    t.slo.completed += meta.b;
+    for &a in &meta.arrivals {
+        latencies.push(finish - a);
+        t.latencies.push(finish - a);
+    }
+    rec.span(ring, SpanEvent::new(Phase::Reply, tid, us(finish), 0.0)
+        .count(meta.b));
+    reg.record_phase(tid, -1, Phase::Reply, 0.0);
+}
 
 /// One tenant plus the workload inputs it runs against. `opts` must be
 /// built for this tenant's model (`pipeline::mode_setup`); tenants
@@ -334,6 +465,23 @@ pub fn run_fabric_traced<'a>(
     assert!(!inputs.is_empty(), "fabric needs at least one tenant");
     assert!(base.duration_s > 0.0);
     let n = cluster.len();
+    // same recoverable-error contract as kernel_threads: a zero or
+    // absurd depth is an input error, not a panic (CLI exits 2 on it)
+    if base.pipeline_depth == 0
+        || base.pipeline_depth > MAX_PIPELINE_DEPTH
+    {
+        return Err(EngineError::Unsupported(format!(
+            "pipeline depth must be in 1..={MAX_PIPELINE_DEPTH} (got \
+             {})",
+            base.pipeline_depth
+        )));
+    }
+    // depth D: collection/compression of batch N+1 overlaps the
+    // kernels of up to D earlier batches; D = 1 is the classic
+    // two-station overlap (collect k over execute k-1), bit-identical
+    // to the pre-pipeline fabric
+    let pd = base.pipeline_depth;
+    let gate_depth = pd + 1;
     // recoverable input errors on the library path too (same contract
     // as BatchedBspPlan's kernel_threads validation), not panics —
     // callers constructing Tenants directly bypass TenantSpec::parse
@@ -554,6 +702,10 @@ pub fn run_fabric_traced<'a>(
                 rec,
                 svc.tenants.first().copied().unwrap_or(0) as u32,
             );
+            if pd > 1 {
+                m.set_pipeline_depth(pd)
+                    .map_err(EngineError::Unsupported)?;
+            }
             svc.measured = Some(m);
         }
         svc.host_times =
@@ -626,6 +778,10 @@ pub fn run_fabric_traced<'a>(
     let mut latencies: Vec<f64> = Vec::new();
     let mut batch_total = 0usize;
     let mut exec_busy = 0f64;
+    // released-but-uncollected pipelined batches (measured, depth > 1;
+    // empty otherwise) and total wall seconds blocked on a full window
+    let mut deferred: VecDeque<DeferredBatch> = VecDeque::new();
+    let mut stall_total = 0f64;
     let mut qlen_sum = 0usize;
     let mut qlen_ticks = 0usize;
     let mut queue = QueueTimeline::default();
@@ -656,9 +812,12 @@ pub fn run_fabric_traced<'a>(
                 arr_tenant = i;
             }
         }
-        // pipeline-depth gate: batch k waits for batch k-PIPELINE_DEPTH
-        let gate = if finishes.len() >= PIPELINE_DEPTH {
-            finishes[finishes.len() - PIPELINE_DEPTH]
+        // pipeline-depth gate: batch k's release waits for batch
+        // k-(depth+1) to finish — at most depth+1 batches occupy the
+        // two stations at once (deferred batches count as released)
+        let released = finishes.len() + deferred.len();
+        let gate = if released >= gate_depth {
+            finishes[released - gate_depth]
         } else {
             0.0
         };
@@ -716,6 +875,17 @@ pub fn run_fabric_traced<'a>(
         // replan pass per service: per-model ω — or that service's
         // η-scaled OBSERVED ω′ in measured mode — drive its decisions
         while next_sched <= t_next && next_sched <= base.duration_s {
+            // replan barrier: drain the pipelined window first, so a
+            // migration rebuild sees a quiesced plan and the replan
+            // prices fully-observed profilers (documented flush point)
+            while let Some(meta) = deferred.pop_front() {
+                account_pipelined_batch(
+                    meta, &mut services, &mut tenants, &mut aggregate,
+                    &mut finishes, &mut exec_free, &mut exec_busy,
+                    &mut batch_total, &mut latencies, pd, &node_mult,
+                    &trace, rec, &ring, &mut stall_total,
+                );
+            }
             let step = next_sched as usize;
             for svc in services.iter_mut() {
                 if !svc.scheduler_on {
@@ -850,13 +1020,29 @@ pub fn run_fabric_traced<'a>(
             // the executable only exists at power-of-two shapes; a
             // 17..=32 batch really pays for the 32 bucket
             let slot = bucket(b);
+            // pipelined measured path: backpressure first — drain the
+            // oldest in-flight batches until the window has room (the
+            // blocking waits are accounted as `pipeline_stall`)
+            let pipelined =
+                pd > 1 && base.exec == ExecMode::Measured;
+            if pipelined {
+                while deferred.len() >= pd {
+                    account_pipelined_batch(
+                        deferred.pop_front().unwrap(), &mut services,
+                        &mut tenants, &mut aggregate, &mut finishes,
+                        &mut exec_free, &mut exec_busy,
+                        &mut batch_total, &mut latencies, pd,
+                        &node_mult, &trace, rec, &ring,
+                        &mut stall_total,
+                    );
+                }
+            }
             let svc = &mut services[svc_idx];
             let coll_time = svc.coll_s
                 * (COLL_FIXED_FRAC
                     + (1.0 - COLL_FIXED_FRAC) * b as f64
                         / base.batch.max_batch as f64);
             let coll_done = t_form + coll_time;
-            let start_exec = coll_done.max(exec_free);
             let tid = sel as u32;
             let oldest = batch.first().copied().unwrap_or(t_form);
             let qwait = (t_form - oldest).max(0.0);
@@ -879,6 +1065,37 @@ pub fn run_fabric_traced<'a>(
             rec.span(&ring, SpanEvent::new(Phase::Transfer, tid,
                                            us(t_form), us(coll_time))
                 .count(b));
+            if pipelined {
+                // submit into the pipelined executor and return to the
+                // event loop — the NEXT batch's collection/compression
+                // (and arrival admission) now overlaps these kernels;
+                // timeline/SLO accounting happens at collection
+                let m = svc.measured.as_mut().expect(
+                    "measured mode builds an executor per service",
+                );
+                m.set_trace_tenant(tid);
+                m.submit_batch(slot);
+                deferred.push_back(DeferredBatch {
+                    service: svc_idx,
+                    tenant: sel,
+                    arrivals: batch,
+                    b,
+                    slot,
+                    t_form,
+                    coll_done,
+                });
+                coll_free = coll_done;
+                continue;
+            }
+            // exec admission: a batch may start once the batch `depth`
+            // places ahead of it has finished (depth 1 = the classic
+            // single-station serialization, bit-identical to the
+            // pre-pipeline `exec_free` gate)
+            let start_exec = coll_done.max(if finishes.len() >= pd {
+                finishes[finishes.len() - pd]
+            } else {
+                0.0
+            });
             let exec_time = if let Some(m) = svc.measured.as_mut() {
                 // real batched kernels at the padded bucket size; scale
                 // each fog's measured host time by its capability and
@@ -959,7 +1176,7 @@ pub fn run_fabric_traced<'a>(
             };
             let finish = start_exec + exec_time;
             coll_free = coll_done;
-            exec_free = finish;
+            exec_free = exec_free.max(finish);
             exec_busy += exec_time;
             finishes.push(finish);
             aggregate.slo.batches += 1;
@@ -977,6 +1194,17 @@ pub fn run_fabric_traced<'a>(
                          .count(b));
             reg.record_phase(tid, -1, Phase::Reply, 0.0);
         }
+    }
+
+    // flush the pipelined window: every released batch is collected
+    // and accounted before the run summarizes
+    while let Some(meta) = deferred.pop_front() {
+        account_pipelined_batch(
+            meta, &mut services, &mut tenants, &mut aggregate,
+            &mut finishes, &mut exec_free, &mut exec_busy,
+            &mut batch_total, &mut latencies, pd, &node_mult, &trace,
+            rec, &ring, &mut stall_total,
+        );
     }
 
     // ---- summaries -------------------------------------------------------
@@ -1005,6 +1233,30 @@ pub fn run_fabric_traced<'a>(
             aggregate.engine = m.engine_name().to_string();
         }
         aggregate.bucket_host_ms = merged_bucket_rows(&services);
+        // per-fog occupancy merged across the services sharing the
+        // run: summed busy-kernel seconds over the longest service
+        // window (services run interleaved on one wall clock)
+        let mut busy = vec![0f64; n];
+        let mut window = 0f64;
+        for svc in &services {
+            if let Some(m) = &svc.measured {
+                let (b, w) = m.busy_window();
+                for (acc, &x) in busy.iter_mut().zip(b) {
+                    *acc += x;
+                }
+                window = window.max(w);
+            }
+        }
+        let occupancy: Vec<f64> = if window > 0.0 {
+            busy.iter().map(|&x| (x / window).min(1.0)).collect()
+        } else {
+            vec![0.0; n]
+        };
+        aggregate.pipeline = Some(PipelineReport {
+            depth: pd,
+            occupancy,
+            stall_s: stall_total,
+        });
     }
 
     let mut report = FabricReport {

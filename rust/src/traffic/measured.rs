@@ -9,15 +9,17 @@
 //! edge-serving cost models argue for. Covers every model, astgcn
 //! included.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::Arc;
+use std::time::Instant;
 
-use crate::exec::{BatchedBspPlan, ExecTrace};
+use crate::exec::{BatchedBspPlan, BspPipeline, BspResult, ExecTrace};
 use crate::graph::Graph;
 use crate::obs::recorder::Recorder;
 use crate::profile::{Cardinality, Observation, OnlineProfiler,
                      PerfModel};
 use crate::runtime::{Engine, EngineError, WeightBundle};
+use crate::util::cli::MAX_PIPELINE_DEPTH;
 
 /// Accumulated wall-clock for one padded bucket size. Kernel seconds
 /// and pool queue waits are accumulated separately, so the per-bucket
@@ -76,6 +78,20 @@ pub struct MeasuredExec {
     /// Flight-recorder context (`attach_recorder`); `None` keeps the
     /// executor on the identical untraced path.
     trace: Option<ExecTrace>,
+    /// `--pipeline-depth`; 1 keeps the classic barrier `run_batch`
+    /// path bit-identical.
+    pipeline_depth: usize,
+    /// Pipelined executor, present iff `pipeline_depth > 1`.
+    pipeline: Option<BspPipeline>,
+    /// Bucket sizes of in-flight pipelined batches, submission order.
+    inflight_buckets: VecDeque<usize>,
+    /// Per-fog cumulative measured kernel seconds (both exec paths) —
+    /// the numerator of `pipeline_occupancy`.
+    busy_s: Vec<f64>,
+    /// Wall window from first batch submission to last collection —
+    /// the denominator of `pipeline_occupancy`.
+    window_start: Option<Instant>,
+    window_s: f64,
 }
 
 impl MeasuredExec {
@@ -164,6 +180,12 @@ impl MeasuredExec {
                 .collect(),
             bucket_stats: BTreeMap::new(),
             trace: None,
+            pipeline_depth: 1,
+            pipeline: None,
+            inflight_buckets: VecDeque::new(),
+            busy_s: vec![0.0; n_fogs],
+            window_start: None,
+            window_s: 0.0,
         })
     }
 
@@ -204,6 +226,7 @@ impl MeasuredExec {
     /// so kernel timings — and the profiler observations — never fold
     /// in channel queueing.
     pub fn run_batch(&mut self, bucket: usize) -> Vec<Vec<f64>> {
+        self.mark_window_start();
         let res = self.plan.execute_timings_traced(
             &self.features,
             self.f_in,
@@ -211,6 +234,14 @@ impl MeasuredExec {
             bucket,
             self.trace.as_ref(),
         );
+        self.account(res, bucket)
+    }
+
+    /// Shared post-execution accounting for both execution paths
+    /// (barrier `run_batch` and pipelined `collect_batch`): histograms,
+    /// bucket stats, profiler observations and occupancy bookkeeping.
+    fn account(&mut self, res: BspResult,
+               bucket: usize) -> Vec<Vec<f64>> {
         let mut barrier = 0f64;
         for layer_times in &res.layer_host_seconds {
             barrier +=
@@ -242,6 +273,7 @@ impl MeasuredExec {
                 .iter()
                 .map(|lt| lt[j])
                 .sum();
+            self.busy_s[j] += total_j;
             // ω predicts single-inference latency; the batch amortizes
             // fixed costs, so consume the per-request share (the same
             // seconds the recorder's wall kernel spans carry)
@@ -250,7 +282,115 @@ impl MeasuredExec {
                 total_j / bucket as f64,
             ));
         }
+        if let Some(t0) = self.window_start {
+            self.window_s = t0.elapsed().as_secs_f64();
+        }
         res.layer_host_seconds
+    }
+
+    fn mark_window_start(&mut self) {
+        if self.window_start.is_none() {
+            self.window_start = Some(Instant::now());
+        }
+    }
+
+    /// Switch the executor to pipelined submission with up to `depth`
+    /// micro-batches in flight (`--pipeline-depth`). Depth 1 keeps the
+    /// classic barrier path (`run_batch`) and is bit-identical to not
+    /// calling this at all; 0 and absurd depths are errors so the CLI
+    /// can exit 2. Must not be called with batches in flight.
+    pub fn set_pipeline_depth(&mut self,
+                              depth: usize) -> Result<(), String> {
+        if depth == 0 || depth > MAX_PIPELINE_DEPTH {
+            return Err(format!(
+                "pipeline depth must be in 1..={MAX_PIPELINE_DEPTH} \
+                 (got {depth})"
+            ));
+        }
+        assert!(
+            self.inflight_buckets.is_empty(),
+            "cannot change pipeline depth with batches in flight"
+        );
+        self.pipeline_depth = depth;
+        self.pipeline = if depth > 1 {
+            Some(BspPipeline::new(self.plan.n_fogs(), depth, false))
+        } else {
+            None
+        };
+        Ok(())
+    }
+
+    /// The configured `--pipeline-depth`.
+    pub fn pipeline_depth(&self) -> usize {
+        self.pipeline_depth
+    }
+
+    /// Batches submitted but not yet collected (0 on the barrier
+    /// path).
+    pub fn pending(&self) -> usize {
+        self.inflight_buckets.len()
+    }
+
+    /// Submit one micro-batch into the pipeline without waiting for
+    /// its result — batch N+1's collection/compression on the fabric
+    /// thread overlaps batch N's kernels. The caller must keep
+    /// `pending() < pipeline_depth()` by collecting (the blocking wait
+    /// is the backpressure the fabric accounts as `pipeline_stall`).
+    pub fn submit_batch(&mut self, bucket: usize) {
+        self.mark_window_start();
+        let pipe = self
+            .pipeline
+            .as_mut()
+            .expect("submit_batch requires pipeline depth > 1");
+        pipe.submit(&self.plan, &self.features, self.f_in, &self.wb,
+                    bucket, self.trace.as_ref());
+        self.inflight_buckets.push_back(bucket);
+    }
+
+    /// Drain worker replies that are already waiting (non-blocking),
+    /// keeping the workers fed while the fabric thread is between
+    /// batches.
+    pub fn pump(&mut self) {
+        if let Some(pipe) = self.pipeline.as_mut() {
+            pipe.pump(&self.plan, self.trace.as_ref());
+        }
+    }
+
+    /// Block until the OLDEST in-flight batch completes and account it
+    /// exactly like `run_batch` does; returns its measured
+    /// `layer_host_seconds[layer][fog]`.
+    pub fn collect_batch(&mut self) -> Vec<Vec<f64>> {
+        let bucket = self
+            .inflight_buckets
+            .pop_front()
+            .expect("collect_batch with no batch in flight");
+        let pipe = self
+            .pipeline
+            .as_mut()
+            .expect("pipelined batch in flight without a pipeline");
+        let res = pipe.collect(&self.plan, self.trace.as_ref());
+        self.account(res, bucket)
+    }
+
+    /// Per-fog pipeline occupancy: cumulative measured kernel seconds
+    /// divided by the wall window from first batch submission to last
+    /// collection. Near 1.0 means the fog's kernels never starved
+    /// while the run was in progress; empty fogs report 0.
+    pub fn pipeline_occupancy(&self) -> Vec<f64> {
+        if self.window_s <= 0.0 {
+            return vec![0.0; self.busy_s.len()];
+        }
+        self.busy_s
+            .iter()
+            .map(|&b| (b / self.window_s).min(1.0))
+            .collect()
+    }
+
+    /// Per-fog cumulative kernel seconds and the occupancy wall
+    /// window, for merging occupancy across services that share a
+    /// run (the fabric sums busy over a common window).
+    pub fn busy_window(&self) -> (&[f64], f64) {
+        (&self.busy_s, self.window_s)
     }
 
     /// η-scaled ω′ per fog — what diffusion / IEP replans consume in
@@ -267,6 +407,11 @@ impl MeasuredExec {
     /// pool ("rebuild the plan" stays the documented recovery path).
     pub fn rebuild(&mut self, g: &Graph, assignment: &[u32],
                    model: &str) -> Result<(), EngineError> {
+        assert!(
+            self.inflight_buckets.is_empty(),
+            "drain the pipeline (collect all batches) before a replan \
+             rebuild"
+        );
         let pool = self.plan.pool_handle();
         self.plan = if pool.is_poisoned() {
             BatchedBspPlan::with_threads(
@@ -293,6 +438,15 @@ impl MeasuredExec {
             let tenant = tr.tenant;
             self.trace =
                 Some(ExecTrace::new(&rec, self.plan.n_fogs(), tenant));
+        }
+        // fresh pipeline over the new plan (tag queues and reply
+        // channel must not straddle a re-extraction)
+        if self.pipeline_depth > 1 {
+            self.pipeline = Some(BspPipeline::new(
+                self.plan.n_fogs(),
+                self.pipeline_depth,
+                false,
+            ));
         }
         Ok(())
     }
@@ -438,5 +592,70 @@ mod tests {
         assert_eq!(lhs[0].len(), 2, "one timing per fog");
         assert!(lhs.iter().flatten().all(|&s| s >= 0.0));
         assert_eq!(me.bucket_summary().len(), 1);
+    }
+
+    /// The pipelined submission path must account batches exactly like
+    /// `run_batch` (bucket stats, profilers, occupancy window) while
+    /// keeping up to `depth` batches in flight.
+    #[test]
+    fn pipelined_submission_accounts_like_run_batch() {
+        let (mut g, _) = generate::sbm(200, 900, 4, 0.85, 3);
+        let f_in = 8;
+        let mut rng = crate::util::rng::Rng::new(19);
+        g.features =
+            (0..200 * f_in).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        g.feature_dim = f_in;
+        let dir = std::env::temp_dir().join("measured_exec_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut eng = Engine::new(EngineKind::Csr, &dir).unwrap();
+        let assignment: Vec<u32> =
+            (0..200).map(|v| (v % 2) as u32).collect();
+        let omegas = vec![PerfModel::uncalibrated(); 2];
+        let mut me = MeasuredExec::new(
+            &g, &assignment, 2, "gcn", "tiny", &g.features, f_in, 3,
+            &omegas, &mut eng, 1,
+        )
+        .unwrap();
+        assert!(me.set_pipeline_depth(0).is_err());
+        assert!(me.set_pipeline_depth(99).is_err());
+        me.set_pipeline_depth(2).unwrap();
+        assert_eq!(me.pipeline_depth(), 2);
+        // window full → collect before each further submit
+        let total = 5;
+        let mut collected = Vec::new();
+        for _ in 0..total {
+            if me.pending() == 2 {
+                collected.push(me.collect_batch());
+            }
+            me.submit_batch(4);
+            me.pump();
+        }
+        while me.pending() > 0 {
+            collected.push(me.collect_batch());
+        }
+        assert_eq!(collected.len(), total);
+        for lhs in &collected {
+            assert_eq!(lhs.len(), 2, "gcn has 2 layers");
+            assert_eq!(lhs[0].len(), 2, "one timing per fog");
+        }
+        let summary = me.bucket_summary();
+        assert_eq!(summary.len(), 1);
+        assert_eq!(summary[0].bucket, 4);
+        assert_eq!(summary[0].batches, total);
+        let occ = me.pipeline_occupancy();
+        assert_eq!(occ.len(), 2);
+        assert!(occ.iter().all(|&o| (0.0..=1.0).contains(&o)));
+        let (busy, window) = me.busy_window();
+        assert_eq!(busy.len(), 2);
+        assert!(window > 0.0);
+        // rebuild with a drained pipeline recreates it cleanly
+        me.rebuild(&g, &assignment, "gcn").unwrap();
+        me.submit_batch(4);
+        me.collect_batch();
+        assert_eq!(me.bucket_summary()[0].batches, total + 1);
+        // depth 1 reverts to the barrier path
+        me.set_pipeline_depth(1).unwrap();
+        me.run_batch(4);
+        assert_eq!(me.bucket_summary()[0].batches, total + 2);
     }
 }

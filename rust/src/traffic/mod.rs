@@ -32,6 +32,6 @@ pub use fabric::{fabric_json, jain_index, run_fabric,
 pub use measured::{BucketRow, MeasuredExec};
 pub use sim::{doc_json, report_json, run_loadtest,
               run_loadtest_traced, ExecMode, LoadtestReport,
-              TrafficConfig};
+              PipelineReport, TrafficConfig};
 pub use slo::{LatencySummary, QueueTimeline, SloReport};
 pub use tenant::{FairPolicy, Tenant, TenantSpec};

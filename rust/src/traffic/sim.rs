@@ -37,8 +37,12 @@
 //!   slowest fog finishes. Batching amortizes the per-inference fixed
 //!   overhead; a batch pays for its padded power-of-two *bucket*
 //!   (`batcher::bucket`), mirroring the lowered-artifact shapes.
-//! * the two stations pipeline with depth 2 (collection of batch k
-//!   overlaps execution of batch k-1), the paper's throughput model.
+//! * the two stations pipeline with configurable depth
+//!   (`--pipeline-depth`): at the default depth 1, collection of
+//!   batch k overlaps execution of batch k-1 — the paper's throughput
+//!   model; deeper windows let collection/compression of batch N+1
+//!   overlap the kernels of up to `depth` earlier batches (measured
+//!   mode runs them through the real pipelined executor).
 
 use std::sync::Arc;
 
@@ -112,6 +116,12 @@ pub struct TrafficConfig {
     /// mode (`--kernel-threads`; 1 = no intra-fog sharding). Analytic
     /// pricing ignores it.
     pub kernel_threads: usize,
+    /// In-flight micro-batch window of the pipelined executor
+    /// (`--pipeline-depth`): batch N+1's collection/compression
+    /// overlaps batch N's kernels, up to `depth` batches deep. 1 (the
+    /// default) keeps the serial measured path and bit-identical
+    /// reports; analytic pricing models the overlap in its timeline.
+    pub pipeline_depth: usize,
 }
 
 impl TrafficConfig {
@@ -139,8 +149,26 @@ impl Default for TrafficConfig {
             background_load: true,
             exec: ExecMode::Analytic,
             kernel_threads: 1,
+            pipeline_depth: 1,
         }
     }
+}
+
+/// Pipelined-executor outcome of a measured run (`--pipeline-depth`).
+/// `None` on analytic runs and absent from their JSON, so analytic
+/// reports stay byte-identical to the pre-pipeline schema.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PipelineReport {
+    /// The `--pipeline-depth` the run used (1 = serial barrier path).
+    pub depth: usize,
+    /// Per-fog occupancy: cumulative busy-kernel seconds divided by
+    /// the wall window between the first submitted and last collected
+    /// batch.
+    pub occupancy: Vec<f64>,
+    /// Wall seconds the fabric thread spent blocked because the
+    /// in-flight window was full (accounted as the `pipeline_stall`
+    /// phase, apart from admission queueing).
+    pub stall_s: f64,
 }
 
 /// Outcome of one loadtest run.
@@ -172,6 +200,9 @@ pub struct LoadtestReport {
     /// SIMD path the one-time kernel dispatcher picked
     /// ("avx2+fma" | "sse2-baseline").
     pub simd: String,
+    /// Pipelined-executor accounting — `Some` exactly for measured
+    /// runs (any depth), `None` for analytic runs.
+    pub pipeline: Option<PipelineReport>,
     /// Per-tenant, per-fog time-in-phase accounting from the obs
     /// registry (`Registry::phase_breakdown`). Always populated — the
     /// registry is live even with span tracing off, so this section is
@@ -230,7 +261,7 @@ pub fn run_loadtest_traced(
 pub fn report_json(label: &str, traffic: &TrafficConfig,
                    r: &LoadtestReport) -> Json {
     let slo = &r.slo;
-    obj(vec![
+    let mut fields = vec![
         ("label", s(label)),
         ("arrival", s(traffic.arrival.name())),
         ("rps", num(traffic.rps)),
@@ -277,22 +308,33 @@ pub fn report_json(label: &str, traffic: &TrafficConfig,
         ("engine", s(&r.engine)),
         ("kernel_threads", num(r.kernel_threads as f64)),
         ("simd", s(&r.simd)),
-        ("phase_breakdown", r.phase_breakdown.clone()),
-        (
-            "measured_buckets",
-            arr(r.bucket_host_ms.iter().map(|row| {
-                obj(vec![
-                    ("bucket", num(row.bucket as f64)),
-                    ("mean_host_ms", num(row.mean_host_ms)),
-                    (
-                        "mean_queue_wait_ms",
-                        num(row.mean_queue_wait_ms),
-                    ),
-                    ("batches", num(row.batches as f64)),
-                ])
-            })),
-        ),
-    ])
+    ];
+    // measured runs only — analytic reports stay byte-identical to
+    // the pre-pipeline schema (no keys added)
+    if let Some(p) = &r.pipeline {
+        fields.push(("pipeline_depth", num(p.depth as f64)));
+        fields.push((
+            "pipeline_occupancy",
+            arr(p.occupancy.iter().copied().map(num)),
+        ));
+        fields.push(("pipeline_stall_s", num(p.stall_s)));
+    }
+    fields.push(("phase_breakdown", r.phase_breakdown.clone()));
+    fields.push((
+        "measured_buckets",
+        arr(r.bucket_host_ms.iter().map(|row| {
+            obj(vec![
+                ("bucket", num(row.bucket as f64)),
+                ("mean_host_ms", num(row.mean_host_ms)),
+                (
+                    "mean_queue_wait_ms",
+                    num(row.mean_queue_wait_ms),
+                ),
+                ("batches", num(row.batches as f64)),
+            ])
+        })),
+    ));
+    obj(fields)
 }
 
 /// Top-level loadtest document shared by the CLI's BENCH_loadtest.json,

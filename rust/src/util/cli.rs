@@ -133,6 +133,29 @@ pub fn parse_kernel_threads(args: &Args) -> Result<usize, String> {
     }
 }
 
+/// Upper bound for `--pipeline-depth`: enough to drown any realistic
+/// collection/compute overlap while still catching typos. Depth is an
+/// in-flight *batch* window, not a thread count, so the ceiling is
+/// deliberately small.
+pub const MAX_PIPELINE_DEPTH: usize = 32;
+
+/// Validated `--pipeline-depth` (default 1 = today's fully serial
+/// measured executor, bit-identical reports). 0, non-numeric and
+/// absurd values are errors so callers can exit with CLI code 2, the
+/// same contract as `--kernel-threads`.
+pub fn parse_pipeline_depth(args: &Args) -> Result<usize, String> {
+    match args.get("pipeline-depth") {
+        None => Ok(1),
+        Some(v) => match v.parse::<usize>() {
+            Ok(d) if (1..=MAX_PIPELINE_DEPTH).contains(&d) => Ok(d),
+            _ => Err(format!(
+                "--pipeline-depth must be an integer in \
+                 1..={MAX_PIPELINE_DEPTH} (got {v})"
+            )),
+        },
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -219,5 +242,19 @@ mod tests {
         assert!(ok(&["--kernel-threads", "65"]).is_err());
         assert!(ok(&["--kernel-threads", "many"]).is_err());
         assert!(ok(&["--kernel-threads", "-2"]).is_err());
+    }
+
+    #[test]
+    fn pipeline_depth_validation() {
+        let ok = |xs: &[&str]| parse_pipeline_depth(&Args::parse(
+            &v(xs), &[]));
+        assert_eq!(ok(&[]), Ok(1));
+        assert_eq!(ok(&["--pipeline-depth", "1"]), Ok(1));
+        assert_eq!(ok(&["--pipeline-depth", "4"]), Ok(4));
+        assert_eq!(ok(&["--pipeline-depth=32"]), Ok(32));
+        assert!(ok(&["--pipeline-depth", "0"]).is_err());
+        assert!(ok(&["--pipeline-depth", "33"]).is_err());
+        assert!(ok(&["--pipeline-depth", "deep"]).is_err());
+        assert!(ok(&["--pipeline-depth", "-1"]).is_err());
     }
 }

@@ -550,6 +550,109 @@ fn avx2_kernels_match_scalar_within_tolerance() {
     }
 }
 
+/// The pipelined executor (`BspPipeline`) must reproduce the barrier
+/// path bit-for-bit at every depth, for every model, across seeds —
+/// the dependency-driven dispatch changes WHEN each (layer, fog) task
+/// runs, never WHAT it computes: identical closures over identical
+/// row ranges, halo bytes staged instead of barrier-copied, ordered
+/// reassembly. Re-running the same window must also be deterministic.
+#[test]
+fn pipelined_bsp_bitwise_equals_barrier_across_models_and_depths() {
+    let base = seeded_graph();
+    let f_in = base.feature_dim;
+    let nv = base.num_vertices();
+    let assignment: Vec<u32> =
+        (0..nv).map(|v| (v % 3) as u32).collect();
+    let batch = 4;
+    for model in ["gcn", "sage", "gat"] {
+        let wb = Arc::new(synth_weights(model, f_in));
+        let plan =
+            BatchedBspPlan::with_threads(&base, &assignment, 3, model, 2)
+                .unwrap();
+        for seed in [11u64, 23] {
+            let mut rng = Rng::new(seed);
+            let feats: Vec<f32> = (0..nv * f_in)
+                .map(|_| rng.normal_f32(0.0, 1.0))
+                .collect();
+            let barrier = plan.execute(&feats, f_in, &wb, batch);
+            for depth in [2usize, 4] {
+                let run = |n_batches: usize| -> Vec<exec::BspResult> {
+                    let mut pipe =
+                        exec::BspPipeline::new(3, depth, true);
+                    let mut out = Vec::new();
+                    for _ in 0..n_batches {
+                        if pipe.pending() == depth {
+                            out.push(pipe.collect(&plan, None));
+                        }
+                        pipe.submit(&plan, &feats, f_in, &wb, batch,
+                                    None);
+                    }
+                    while pipe.pending() > 0 {
+                        out.push(pipe.collect(&plan, None));
+                    }
+                    out
+                };
+                let first = run(depth + 2);
+                for (i, r) in first.iter().enumerate() {
+                    assert_eq!(r.out_dim, barrier.out_dim);
+                    assert_eq!(
+                        r.outputs, barrier.outputs,
+                        "{model} seed={seed} depth={depth}: \
+                         pipelined batch {i} != barrier"
+                    );
+                    assert_eq!(r.sync_bytes, barrier.sync_bytes);
+                }
+                // deterministic re-run: same window, same bytes
+                let again = run(depth + 2);
+                for (a, b) in first.iter().zip(&again) {
+                    assert_eq!(a.outputs, b.outputs,
+                               "{model} depth={depth}: re-run drifted");
+                }
+            }
+        }
+    }
+}
+
+/// Same bit-identity for the single-layer ASTGCN block through the
+/// pipelined executor, interleaving two distinct feature sets in one
+/// window so cross-batch isolation is exercised, not just throughput.
+#[test]
+fn pipelined_bsp_bitwise_equals_barrier_for_astgcn() {
+    let (mut g, _) = generate::sbm(60, 220, 3, 0.8, 9);
+    let ft = 36;
+    let mut rng = Rng::new(0xB0B);
+    g.features = (0..60 * ft).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    g.feature_dim = ft;
+    let assignment: Vec<u32> = (0..60).map(|v| (v % 2) as u32).collect();
+    let wb = Arc::new(
+        engine(EngineKind::Reference)
+            .weights("astgcn", "tinypems", ft, 0)
+            .clone(),
+    );
+    let plan =
+        BatchedBspPlan::with_threads(&g, &assignment, 2, "astgcn", 2)
+            .unwrap();
+    let alt: Vec<f32> =
+        (0..60 * ft).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let batch = 3;
+    let want_a = plan.execute(&g.features, ft, &wb, batch);
+    let want_b = plan.execute(&alt, ft, &wb, batch);
+    let mut pipe = exec::BspPipeline::new(2, 2, true);
+    pipe.submit(&plan, &g.features, ft, &wb, batch, None);
+    pipe.submit(&plan, &alt, ft, &wb, batch, None);
+    let got_a = pipe.collect(&plan, None);
+    pipe.submit(&plan, &g.features, ft, &wb, batch, None);
+    let got_b = pipe.collect(&plan, None);
+    let got_a2 = pipe.collect(&plan, None);
+    assert_eq!(got_a.outputs, want_a.outputs,
+               "astgcn pipelined batch 0 != barrier");
+    assert_eq!(got_b.outputs, want_b.outputs,
+               "astgcn pipelined batch 1 (distinct features) != barrier");
+    assert_eq!(got_a2.outputs, want_a.outputs,
+               "astgcn pipelined batch 2 != barrier");
+    assert_eq!(pipe.pending(), 0);
+}
+
 /// Random row-split points stitched back together must equal the
 /// full-matrix kernels bit-for-bit (the direct statement of
 /// row-decomposition invariance, independent of `split_rows`).

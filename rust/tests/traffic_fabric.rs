@@ -12,7 +12,12 @@
 //!   control under identical streams (scenario rates derived from a
 //!   capacity probe so the contrast holds on any host);
 //! * the plan cache builds exactly one plan per distinct
-//!   `(model, dataset)` and counts tenant bindings as hits.
+//!   `(model, dataset)` and counts tenant bindings as hits;
+//! * `--pipeline-depth`: analytic runs ignore it bit-for-bit (no
+//!   pipeline report keys), measured depth-2 runs account every
+//!   offered request and report per-fog occupancy + stall time, and
+//!   out-of-range depths are library-level errors (the CLI maps them
+//!   to exit 2).
 
 use std::path::Path;
 
@@ -387,6 +392,125 @@ fn plan_cache_builds_each_measured_plan_once() {
     for t in &fr.tenants {
         assert!(t.slo.completed > 0, "tenant {} served nothing",
                 t.name);
+    }
+}
+
+#[test]
+fn pipelined_measured_fabric_accounts_every_request() {
+    let (g, spec) = tiny();
+    let (cluster, opts, omegas) = setup(&g);
+    let cfg = |depth: usize| TrafficConfig {
+        rps: 60.0,
+        duration_s: 2.0,
+        seed: 42,
+        exec: ExecMode::Measured,
+        kernel_threads: 2,
+        pipeline_depth: depth,
+        ..Default::default()
+    };
+    let mut eng = engine();
+    let mut run = |depth: usize| {
+        let traffic = cfg(depth);
+        let input = TenantInput {
+            tenant: Tenant::legacy(&traffic, "gcn", "tiny"),
+            g: &g,
+            spec,
+            opts: opts.clone(),
+            omegas: omegas.clone(),
+        };
+        run_fabric(&cluster, vec![input], &traffic, FairPolicy::Drr,
+                   &mut eng)
+            .unwrap()
+    };
+    let d1 = run(1);
+    let d2 = run(2);
+    // the offered stream is a pure function of the seed, so depth
+    // must not change WHAT arrives — only when it executes
+    assert_eq!(d1.aggregate.slo.offered, d2.aggregate.slo.offered);
+    for (label, fr) in [("depth1", &d1), ("depth2", &d2)] {
+        let a = &fr.aggregate;
+        assert_eq!(
+            a.slo.offered,
+            a.slo.completed + a.slo.shed + a.slo.spilled,
+            "{label}: requests leaked through the deferred queue"
+        );
+        assert!(a.slo.completed > 0, "{label}: nothing served");
+        assert!(a.latencies.iter().all(|&l| l > 0.0), "{label}");
+        // every measured run carries the pipeline report
+        let p = a.pipeline.as_ref().expect("measured pipeline report");
+        assert_eq!(p.occupancy.len(), cluster.len(),
+                   "{label}: occupancy is per-fog");
+        assert!(
+            p.occupancy.iter().all(|&o| (0.0..=1.0).contains(&o)),
+            "{label}: occupancy out of [0,1]: {:?}",
+            p.occupancy
+        );
+        assert!(p.stall_s >= 0.0, "{label}");
+    }
+    let p1 = d1.aggregate.pipeline.as_ref().unwrap();
+    let p2 = d2.aggregate.pipeline.as_ref().unwrap();
+    assert_eq!(p1.depth, 1);
+    assert_eq!(p2.depth, 2);
+    // a serial window never blocks on a full pipeline
+    assert_eq!(p1.stall_s, 0.0);
+}
+
+#[test]
+fn analytic_runs_ignore_pipeline_depth_bit_for_bit() {
+    let (g, spec) = tiny();
+    let (cluster, opts, omegas) = setup(&g);
+    let cfg = |depth: usize| TrafficConfig {
+        rps: 80.0,
+        duration_s: 4.0,
+        seed: 0xFA3,
+        pipeline_depth: depth,
+        ..Default::default()
+    };
+    let mut eng = engine();
+    let mut run = |depth: usize| {
+        let traffic = cfg(depth);
+        let input = TenantInput {
+            tenant: Tenant::legacy(&traffic, "gcn", "tiny"),
+            g: &g,
+            spec,
+            opts: opts.clone(),
+            omegas: omegas.clone(),
+        };
+        run_fabric(&cluster, vec![input], &traffic, FairPolicy::Drr,
+                   &mut eng)
+            .unwrap()
+    };
+    let d1 = run(1);
+    let d4 = run(4);
+    // analytic pricing never builds a pipeline: identical timelines,
+    // and no pipeline keys to perturb the committed report bytes
+    assert_eq!(d1.aggregate.latencies, d4.aggregate.latencies);
+    assert_eq!(d1.aggregate.slo.offered, d4.aggregate.slo.offered);
+    assert_eq!(d1.aggregate.slo.completed, d4.aggregate.slo.completed);
+    assert_eq!(d1.aggregate.slo.shed, d4.aggregate.slo.shed);
+    assert_eq!(d1.fairness_jain, d4.fairness_jain);
+    assert!(d1.aggregate.pipeline.is_none());
+    assert!(d4.aggregate.pipeline.is_none());
+}
+
+#[test]
+fn pipeline_depth_out_of_range_is_rejected() {
+    let (g, spec) = tiny();
+    let (cluster, _, _) = setup(&g);
+    for bad in [0usize, fograph::util::cli::MAX_PIPELINE_DEPTH + 1] {
+        let traffic = TrafficConfig {
+            pipeline_depth: bad,
+            ..Default::default()
+        };
+        let input = input_for(Tenant::legacy(&traffic, "gcn", "tiny"),
+                              &g, spec, cluster.len());
+        let mut eng = engine();
+        assert!(
+            run_fabric(&cluster, vec![input], &traffic,
+                       FairPolicy::Drr, &mut eng)
+                .is_err(),
+            "pipeline_depth={bad} accepted"
+        );
     }
 }
 
