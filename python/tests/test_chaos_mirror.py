@@ -1,0 +1,244 @@
+"""Numpy mirror of the PR 8 chaos plane's straggler detector
+(rust/src/traffic/chaos.rs ``EwmaDetector``) and the fault-window
+damage accounting (``window_damage``).
+
+The build container has no Rust toolchain (see ROADMAP.md caveat), so
+this mirror replicates the shipped arithmetic statement-for-statement
+— priming (first sample sets mean = x, dev = x/2), the
+dev-before-mean EWMA update order against the PREVIOUS mean, the
+``max(mean + beta * dev, floor)`` deadline, and the outstanding-task
+overdue rule — and checks the claims the Rust unit tests make:
+
+* the worked example shared with chaos.rs: durations 0.5/0.7/0.8 at
+  alpha=0.25 give mean=0.6125, dev=0.240625, deadline=1.334375; an
+  outstanding task is not overdue at elapsed 1.0 and overdue at 1.4;
+* the floor keeps microsecond-scale services from hair-trigger
+  deadlines;
+* under a stationary random workload the deadline converges above the
+  p99 duration (few false alarms) while a 10x straggler is flagged;
+* ``window_damage``'s p99-delta / goodput-dip / shed counts agree
+  with a direct recomputation on random sample sets.
+
+Everything is float64, matching the Rust f64 arithmetic exactly, so
+comparisons are ``==`` where the op order is mirrored and 1e-12
+otherwise.
+"""
+
+import numpy as np
+
+EWMA_ALPHA = 0.25
+EWMA_BETA = 3.0
+EWMA_FLOOR_S = 0.05
+
+
+class EwmaDetectorMirror:
+    """chaos.rs EwmaDetector: per-fog EWMA of task durations with a
+    mean-absolute-deviation band. ``start`` only records the OLDEST
+    outstanding task (a silent fog's first unanswered task keeps
+    aging); ``complete`` clears it and feeds the duration, updating
+    dev against the previous mean, then the mean."""
+
+    def __init__(self, n_fogs, alpha=EWMA_ALPHA, beta=EWMA_BETA,
+                 floor_s=EWMA_FLOOR_S):
+        self.alpha = alpha
+        self.beta = beta
+        self.floor_s = floor_s
+        self.mean = [0.0] * n_fogs
+        self.dev = [0.0] * n_fogs
+        self.primed = [False] * n_fogs
+        self.started = [None] * n_fogs
+
+    def start(self, fog, now):
+        if self.started[fog] is None:
+            self.started[fog] = now
+
+    def complete(self, fog, dur):
+        self.started[fog] = None
+        if not self.primed[fog]:
+            self.mean[fog] = dur
+            self.dev[fog] = dur / 2.0
+            self.primed[fog] = True
+        else:
+            # dev first, against the mean that existed when the
+            # sample arrived — the exact Rust update order
+            self.dev[fog] = (
+                self.alpha * abs(dur - self.mean[fog])
+                + (1.0 - self.alpha) * self.dev[fog]
+            )
+            self.mean[fog] = (
+                self.alpha * dur + (1.0 - self.alpha) * self.mean[fog]
+            )
+
+    def deadline(self, fog):
+        return max(
+            self.mean[fog] + self.beta * self.dev[fog], self.floor_s
+        )
+
+    def overdue(self, fog, now):
+        return (
+            self.primed[fog]
+            and self.started[fog] is not None
+            and now - self.started[fog] > self.deadline(fog)
+        )
+
+
+def _p99(lats):
+    """chaos.rs p99: nearest-rank, ceil(0.99 n) 1-based, clamped."""
+    xs = sorted(lats)
+    idx = min(max(int(np.ceil(len(xs) * 0.99)), 1), len(xs)) - 1
+    return xs[idx]
+
+
+def window_damage_mirror(samples, shed, t0, t1, duration_s):
+    """chaos.rs window_damage: SLO damage over the HALF-OPEN fault
+    window [t0, t1). samples = (finish, latency, ok) triples; shed =
+    shed times. Returns (p99_delta_ms, goodput_dip, shed_during)."""
+    t1 = max(min(t1, duration_s), t0)
+    lat_in, lat_out = [], []
+    good_in = good_out = 0
+    for ft, lat, ok in samples:
+        if t0 <= ft < t1:
+            lat_in.append(lat)
+            good_in += bool(ok)
+        else:
+            lat_out.append(lat)
+            good_out += bool(ok)
+    # the delta is defined only when both sides have completions
+    p99_delta_ms = (
+        (_p99(lat_in) - _p99(lat_out)) * 1e3
+        if lat_in and lat_out
+        else 0.0
+    )
+    win = t1 - t0
+    rest = max(duration_s - win, 0.0)
+    rate_in = good_in / win if win > 0.0 else 0.0
+    rate_out = good_out / rest if rest > 0.0 else 0.0
+    dip = (
+        min(max(1.0 - rate_in / rate_out, 0.0), 1.0)
+        if rate_out > 0.0
+        else 0.0
+    )
+    shed_during = sum(1 for t in shed if t0 <= t < t1)
+    return p99_delta_ms, dip, shed_during
+
+
+# ---------------------------------------------------------------------------
+# tests: the worked example shared with the Rust unit tests
+# ---------------------------------------------------------------------------
+
+
+def test_worked_example_matches_rust_unit_case():
+    det = EwmaDetectorMirror(1)
+    for d in (0.5, 0.7, 0.8):
+        det.complete(0, d)
+    # priming: mean=0.5, dev=0.25; then two EWMA steps with
+    # dev-before-mean ordering (1e-12: the algebraic values round in
+    # the last ulp, identically in Rust f64 and numpy float64)
+    assert det.mean[0] == 0.6125
+    assert abs(det.dev[0] - 0.240625) < 1e-12
+    assert abs(det.deadline(0) - 1.334375) < 1e-12
+    # an outstanding task ages against that deadline
+    det.start(0, 10.0)
+    assert not det.overdue(0, 11.0)  # elapsed 1.0 < 1.334375
+    assert det.overdue(0, 11.4)  # elapsed 1.4 > 1.334375
+
+
+def test_update_order_is_dev_before_mean():
+    # same samples, opposite order: mean-first would give a different
+    # deviation, so this pins the statement order
+    det = EwmaDetectorMirror(1)
+    det.complete(0, 1.0)  # mean=1.0 dev=0.5
+    det.complete(0, 2.0)
+    # dev against PREVIOUS mean 1.0: 0.25*1.0 + 0.75*0.5 = 0.625
+    assert det.dev[0] == 0.625
+    assert det.mean[0] == 1.25
+    # mean-first would have been 0.25*|2-1.25| + 0.75*0.5 = 0.5625
+    assert det.dev[0] != 0.5625
+
+
+def test_priming_and_outstanding_task_semantics():
+    det = EwmaDetectorMirror(2)
+    # never fires before the first completed sample primes the fog
+    det.start(0, 0.0)
+    assert not det.overdue(0, 1e9)
+    # the floor bounds hair-trigger deadlines from fast services
+    det.complete(0, 1e-4)
+    assert det.deadline(0) == EWMA_FLOOR_S
+    # start() keeps the OLDEST outstanding task (a silent fog's first
+    # unanswered task keeps aging while later batches pile up)
+    det.start(1, 5.0)
+    det.start(1, 9.0)
+    assert det.started[1] == 5.0
+    # completion clears the outstanding marker
+    det.complete(1, 0.1)
+    assert det.started[1] is None
+
+
+def test_deadline_tracks_stationary_load_and_flags_straggler():
+    rng = np.random.default_rng(0xC4A0)
+    det = EwmaDetectorMirror(1)
+    durs = np.abs(rng.normal(0.2, 0.02, 400))
+    for d in durs:
+        det.complete(0, float(d))
+    dl = det.deadline(0)
+    # converged deadline sits above the p99 duration (few false
+    # alarms) but within a small multiple of the mean (responsive)
+    assert dl > float(np.quantile(durs[200:], 0.99))
+    assert dl < 4.0 * float(np.mean(durs[200:]))
+    # a 10x straggler blows straight through it
+    assert 10.0 * float(np.mean(durs)) > dl
+    det.start(0, 100.0)
+    assert det.overdue(0, 100.0 + 10.0 * float(np.mean(durs)))
+
+
+def test_crash_detection_latency_is_one_deadline():
+    # a fog that stops replying is flagged exactly one deadline after
+    # its oldest outstanding task started — the time-to-detect model
+    # the faults report is built on
+    det = EwmaDetectorMirror(1)
+    for _ in range(50):
+        det.complete(0, 0.1)
+    dl = det.deadline(0)
+    t0 = 42.0
+    det.start(0, t0)
+    eps = 1e-9
+    assert not det.overdue(0, t0 + dl)  # strict inequality
+    assert det.overdue(0, t0 + dl + eps)
+
+
+# ---------------------------------------------------------------------------
+# tests: window damage accounting
+# ---------------------------------------------------------------------------
+
+
+def test_window_damage_on_a_synthetic_fault_hole():
+    # 0..10s run, fault window [4, 6): latencies triple and half the
+    # inside completions bust the SLO
+    samples = []
+    for i in range(1000):
+        t = 10.0 * i / 1000.0
+        inside = 4.0 <= t < 6.0
+        lat = 0.3 if inside else 0.1
+        ok = (i % 2 == 0) if inside else True
+        samples.append((t, lat, ok))
+    shed = [4.5, 5.0, 5.5, 9.0]
+    p99_delta_ms, dip, shed_during = window_damage_mirror(
+        samples, shed, 4.0, 6.0, 10.0
+    )
+    assert abs(p99_delta_ms - 200.0) < 1e-9  # 300ms inside - 100ms out
+    assert abs(dip - 0.5) < 1e-9  # exactly half the goodput rate
+    assert shed_during == 3  # 9.0 is outside the window
+
+
+def test_window_damage_clamps_and_degenerates():
+    # dip clamps into [0, 1] even when the window is BETTER than the
+    # rest of the run, and t1 clamps to the run end
+    samples = [(t, 0.1, True) for t in np.linspace(0.0, 10.0, 200)]
+    _, dip, _ = window_damage_mirror(samples, [], 2.0, 4.0, 10.0)
+    assert 0.0 <= dip <= 1.0
+    p99d, dip2, shed = window_damage_mirror(
+        samples, [9.5], 8.0, 50.0, 10.0
+    )
+    assert 0.0 <= dip2 <= 1.0
+    assert shed == 1
+    assert np.isfinite(p99d)

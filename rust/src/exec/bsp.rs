@@ -18,9 +18,10 @@
 //! multiplier and takes the per-layer max (the BSP barrier).
 
 use std::borrow::Borrow;
-use std::collections::VecDeque;
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::collections::{HashMap, VecDeque};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use crate::graph::{subgraph, ExchangePlan, Graph, LocalGraph};
 use crate::obs::clock::Stopwatch;
@@ -29,8 +30,9 @@ use crate::obs::span::{Phase, SpanEvent};
 use crate::runtime::csr_backend::{in_neighbor_lists, CsrPartition,
                                   InNbrLists};
 use crate::runtime::kernels::{group_widths, FogJob, FogKernel,
-                              FogWorkerPool, JobTrace, KernelScratch,
-                              Reply, ShardExec};
+                              FogWorkerPool, Inject, JobTrace,
+                              KernelScratch, Reply, ShardExec,
+                              DEFAULT_TASK_DEADLINE_S};
 use crate::runtime::{engine::EngineError, EdgeArrays, Engine,
                      WeightBundle};
 
@@ -549,6 +551,9 @@ impl BatchedBspPlan {
                         tenant: tr.tenant,
                         layer: layer as i32,
                     }),
+                    reply_to: None,
+                    task: 0,
+                    inject: None,
                 })
             })
             .collect()
@@ -820,6 +825,49 @@ pub struct BspPipeline {
     tags: Vec<VecDeque<(u64, usize)>>,
     inflight: VecDeque<InflightBatch>,
     next_seq: u64,
+    /// Chaos configuration (per-fog crash/speed masks); `None` = the
+    /// fault-free pipeline, byte-identical to pre-chaos behavior.
+    chaos: Option<PipelineChaos>,
+    /// In-flight tagged tasks (chaos mode only), keyed by task id.
+    /// Fault-free pipelines map replies by per-fog FIFO tags instead;
+    /// hedging breaks that ordering contract (the same logical task
+    /// may race on two workers), hence explicit identity.
+    pending: HashMap<u64, PendingTask>,
+    /// Next task id; 0 is reserved for "untagged".
+    next_task: u64,
+    /// Hedged tasks whose replica's reply arrived first.
+    hedge_wins: u64,
+    /// Late loser replies discarded after the race was decided.
+    hedge_waste: u64,
+    /// Wall-clock per-task deadline: past it, `collect` hedges (chaos)
+    /// or poisons the pool (a genuinely hung worker) instead of
+    /// blocking forever.
+    task_deadline_s: f64,
+}
+
+/// Per-fog fault masks the measured executor derives from the run's
+/// `ChaosPlan` at each batch's formation time.
+#[derive(Clone, Debug)]
+pub struct PipelineChaos {
+    /// Fog's worker withholds every reply (dead node).
+    pub crashed: Vec<bool>,
+    /// Fog speed multiplier in (0, 1]; < 1 injects a straggler.
+    pub speed: Vec<f64>,
+}
+
+/// A tagged task awaiting its (first) reply: everything needed to
+/// re-submit the identical job to another fog's worker if the
+/// deadline passes.
+struct PendingTask {
+    seq: u64,
+    layer: usize,
+    /// Logical fog — the partition the task computes, regardless of
+    /// which worker ends up running it.
+    fog: usize,
+    /// Input snapshot kept for hedged re-dispatch (taken when hedged).
+    state: Vec<f32>,
+    submitted: Instant,
+    hedged: bool,
 }
 
 impl BspPipeline {
@@ -839,11 +887,43 @@ impl BspPipeline {
             tags: (0..n_fogs).map(|_| VecDeque::new()).collect(),
             inflight: VecDeque::new(),
             next_seq: 0,
+            chaos: None,
+            pending: HashMap::new(),
+            next_task: 1,
+            hedge_wins: 0,
+            hedge_waste: 0,
+            task_deadline_s: DEFAULT_TASK_DEADLINE_S,
         }
     }
 
     pub fn depth(&self) -> usize {
         self.depth
+    }
+
+    /// Install (or clear) the per-fog fault masks. With masks set,
+    /// every job is tagged with an explicit task id and tracked for
+    /// deadline-based hedged re-dispatch; `None` restores the
+    /// fault-free FIFO-tag path bit-for-bit.
+    pub fn set_chaos(&mut self, chaos: Option<PipelineChaos>) {
+        if let Some(c) = &chaos {
+            assert_eq!(c.crashed.len(), self.tags.len());
+            assert_eq!(c.speed.len(), self.tags.len());
+        }
+        self.chaos = chaos;
+    }
+
+    /// Per-task wall deadline (seconds, positive finite) before
+    /// `collect` hedges or gives up on a silent fog.
+    pub fn set_task_deadline(&mut self, s: f64) {
+        assert!(s.is_finite() && s > 0.0, "task deadline must be > 0");
+        self.task_deadline_s = s;
+    }
+
+    /// (hedge wins, hedge waste) accumulated by this pipeline: wins =
+    /// hedged tasks whose replica replied first; waste = late loser
+    /// replies discarded after the race was decided.
+    pub fn hedge_stats(&self) -> (u64, u64) {
+        (self.hedge_wins, self.hedge_waste)
     }
 
     /// Batches submitted but not yet collected.
@@ -956,7 +1036,9 @@ impl BspPipeline {
 
     /// Block until the OLDEST in-flight batch completes, then return
     /// its result (replies for younger batches are processed along the
-    /// way — that is the overlap).
+    /// way — that is the overlap). A task that never replies within
+    /// the deadline is hedged onto a healthy fog (chaos mode) or
+    /// surfaces as a poisoned pool — the coordinator never wedges.
     pub fn collect(&mut self, plan: &BatchedBspPlan,
                    trace: Option<&ExecTrace>) -> BspResult {
         assert!(
@@ -964,11 +1046,121 @@ impl BspPipeline {
             "collect() with no batch in flight"
         );
         while !self.inflight.front().unwrap().complete {
-            let r = self.rx.recv().expect("fog worker reply");
-            self.process_reply(plan, r, trace);
+            // wake at the earliest un-hedged task's deadline so an
+            // overdue task is hedged even while other fogs' replies
+            // keep the channel busy
+            let dl = self.task_deadline_s;
+            let wait = self
+                .pending
+                .values()
+                .filter(|p| !p.hedged)
+                .map(|p| {
+                    (dl - p.submitted.elapsed().as_secs_f64()).max(0.0)
+                })
+                .fold(dl, f64::min);
+            match self
+                .rx
+                .recv_timeout(Duration::from_secs_f64(wait.max(1e-3)))
+            {
+                Ok(r) => self.process_reply(plan, r, trace),
+                Err(RecvTimeoutError::Timeout) => {
+                    let hedged = if self.chaos.is_some() {
+                        self.hedge_overdue(plan)
+                    } else {
+                        0
+                    };
+                    if hedged == 0 && wait >= dl {
+                        // a full deadline passed with nothing to hedge:
+                        // a genuinely hung worker (or a wedged hedge)
+                        plan.pool.poison();
+                        panic!(
+                            "fog task exceeded the {dl:.3}s pipeline \
+                             deadline; pool poisoned — rebuild the plan"
+                        );
+                    }
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    plan.pool.poison();
+                    panic!("all fog workers died mid-pipeline");
+                }
+            }
         }
         let b = self.inflight.pop_front().unwrap();
         self.finish_batch(plan, b)
+    }
+
+    /// Hedged re-dispatch: every un-hedged task past the deadline is
+    /// re-submitted — same task id, same input bytes — to the next
+    /// non-crashed fog's worker queue. Workers are structure-free
+    /// (the job carries its partition's structures) and the kernels
+    /// are row-decomposition invariant, so the replica's output is
+    /// bit-identical to what the silent fog would have produced; only
+    /// timing changes. First reply wins; the loser's late reply is
+    /// discarded by task id in `process_reply`. Returns how many
+    /// tasks were hedged.
+    fn hedge_overdue(&mut self, plan: &BatchedBspPlan) -> usize {
+        let dl = self.task_deadline_s;
+        let (crashed, speed) = {
+            let c = self.chaos.as_ref().expect("chaos mode");
+            (c.crashed.clone(), c.speed.clone())
+        };
+        let mut overdue: Vec<u64> = self
+            .pending
+            .iter()
+            .filter(|(_, p)| {
+                !p.hedged && p.submitted.elapsed().as_secs_f64() > dl
+            })
+            .map(|(&t, _)| t)
+            .collect();
+        overdue.sort_unstable();
+        let n_hedged = overdue.len();
+        for t in overdue {
+            let (seq, layer, fog, state) = {
+                let p = self.pending.get_mut(&t).expect("pending task");
+                p.hedged = true;
+                (p.seq, p.layer, p.fog, std::mem::take(&mut p.state))
+            };
+            let target = (1..=plan.n_fogs)
+                .map(|k| (fog + k) % plan.n_fogs)
+                .find(|&cand| !crashed[cand])
+                .unwrap_or_else(|| {
+                    plan.pool.poison();
+                    panic!(
+                        "every fog is crashed; cannot hedge task {t}"
+                    )
+                });
+            let front_seq =
+                self.inflight.front().expect("batch in flight").seq;
+            let b = &self.inflight[(seq - front_seq) as usize];
+            let last = layer + 1 == b.num_layers;
+            let kernel = if &*plan.model == "astgcn" {
+                FogKernel::Astgcn { ft: b.f_in }
+            } else {
+                FogKernel::Layer { layer, dim: b.dims[layer], last }
+            };
+            let job = FogJob {
+                kernel,
+                model: plan.model.clone(),
+                batch: b.batch,
+                state,
+                weights: b.wb.clone(),
+                sub: plan.subs[fog].clone(),
+                csr: plan.csrs.get(fog).cloned(),
+                nbr: plan.nbrs.get(fog).cloned(),
+                // no trace: the replica runs on another fog's worker,
+                // whose ring this task has no claim on
+                trace: None,
+                reply_to: Some(self.tx.clone()),
+                task: t,
+                inject: if speed[target] < 1.0 {
+                    Some(Inject::Slow { speed: speed[target] })
+                } else {
+                    None
+                },
+            };
+            plan.pool.submit(target, job);
+        }
+        n_hedged
     }
 
     /// Stage fog `src`'s freshly-rebuilt layer-`layer` owned rows into
@@ -1080,6 +1272,27 @@ impl BspPipeline {
         } else {
             FogKernel::Layer { layer, dim: b.dims[layer], last }
         };
+        // chaos mode tags the task and stamps the fog's fault; the
+        // fault-free path stays untagged and FIFO-mapped, bit-for-bit
+        let (task, inject) = match &self.chaos {
+            Some(c) => {
+                let t = self.next_task;
+                self.next_task += 1;
+                let inj = if c.crashed[j] {
+                    Some(Inject::DropReply)
+                } else if c.speed[j] < 1.0 {
+                    Some(Inject::Slow { speed: c.speed[j] })
+                } else {
+                    None
+                };
+                (t, inj)
+            }
+            None => (0, None),
+        };
+        // keep a copy of the input bytes so an overdue task can be
+        // hedged with the identical job (chaos mode only)
+        let pending_state =
+            if task != 0 { state.clone() } else { Vec::new() };
         let job = FogJob {
             kernel,
             model: plan.model.clone(),
@@ -1096,8 +1309,21 @@ impl BspPipeline {
                 layer: layer as i32,
             }),
             reply_to: Some(self.tx.clone()),
+            task,
+            inject,
         };
-        self.tags[j].push_back((seq, layer));
+        if task != 0 {
+            self.pending.insert(task, PendingTask {
+                seq,
+                layer,
+                fog: j,
+                state: pending_state,
+                submitted: Instant::now(),
+                hedged: false,
+            });
+        } else {
+            self.tags[j].push_back((seq, layer));
+        }
         plan.pool.submit(j, job);
     }
 
@@ -1112,13 +1338,32 @@ impl BspPipeline {
                 r.fog
             );
         }
-        let (seq, layer) = self.tags[r.fog]
-            .pop_front()
-            .expect("reply matches a submitted job");
+        let (seq, layer, j) = if r.task != 0 {
+            // tagged (chaos) reply: map by task id, never by r.fog —
+            // a hedged replica runs on another fog's worker
+            match self.pending.remove(&r.task) {
+                None => {
+                    // the race was already decided by the other
+                    // replica; discard the loser's late reply
+                    self.hedge_waste += 1;
+                    return;
+                }
+                Some(p) => {
+                    if p.hedged && r.fog != p.fog {
+                        self.hedge_wins += 1;
+                    }
+                    (p.seq, p.layer, p.fog)
+                }
+            }
+        } else {
+            let (seq, layer) = self.tags[r.fog]
+                .pop_front()
+                .expect("reply matches a submitted job");
+            (seq, layer, r.fog)
+        };
         let front_seq =
             self.inflight.front().expect("batch in flight").seq;
         let idx = (seq - front_seq) as usize;
-        let j = r.fog;
         let next = layer + 1;
         {
             let b = &mut self.inflight[idx];

@@ -9,4 +9,4 @@
 pub mod bsp;
 
 pub use bsp::{run as run_bsp, run_parallel, BatchedBspPlan, BspPipeline,
-              BspResult, ExecTrace};
+              BspResult, ExecTrace, PipelineChaos};

@@ -20,16 +20,27 @@
 //! provenance-stamped line appended to BENCH_history.jsonl per
 //! regenerated sweep.
 //!
+//! A fourth section is the chaos sweep: one seeded fault per class
+//! (fog crash+rejoin, a 0.3x straggler, a 0.1x link collapse) injected
+//! at t=4 of a 12 s analytic run at the probed saturation rate, with
+//! per-class time-to-detect / time-to-recover / SLO damage appended to
+//! BENCH_history.jsonl — the resilience headline next to the
+//! throughput one.
+//!
 //! ω models are left uncalibrated on purpose: the analytic sections
-//! are then a pure function of the seed, so regenerated tables are
-//! reproducible (the measured depth sweep is wall-clock by design).
+//! (the chaos sweep included) are then a pure function of the seed, so
+//! regenerated tables are reproducible (the measured depth sweep is
+//! wall-clock by design).
 
 use crate::net::NetKind;
+use crate::obs::Recorder;
 use crate::profile::PerfModel;
+use crate::runtime::kernels::DEFAULT_TASK_DEADLINE_S;
 use crate::serving::pipeline;
 use crate::traffic::{doc_json, fabric_json, report_json, run_fabric,
-                     run_loadtest, ArrivalKind, ExecMode, FairPolicy,
-                     TenantInput, TrafficConfig};
+                     run_loadtest, run_loadtest_chaos, ArrivalKind,
+                     ExecMode, FairPolicy, FaultSpec, TenantInput,
+                     TrafficConfig};
 use crate::util::json::{arr, num, obj, s};
 use crate::util::provenance::{git_rev, utc_date_string};
 
@@ -239,6 +250,83 @@ pub fn run(ctx: &mut Ctx) -> String {
         runs.push(report_json(
             &format!("fograph-measured-depth{depth}"), &t, &r));
     }
+    // ---- chaos sweep: one fault per class at saturation -------------
+    // analytic mode, so the whole sweep is a pure function of the
+    // seed: same fault schedule, same detection times, same damage on
+    // every host. Rate = the probed analytic capacity (the fault hits
+    // a saturated system, which is where recovery is hardest).
+    let chaos_traffic = TrafficConfig {
+        arrival: ArrivalKind::Poisson,
+        rps: cap,
+        duration_s: 12.0,
+        seed: 0x70AD,
+        ..Default::default()
+    };
+    let mut fault_table = Table::new(&[
+        "fault",
+        "onset (s)",
+        "detect (s)",
+        "recover (s)",
+        "p99 delta (ms)",
+        "goodput dip",
+        "shed",
+        "hedges",
+    ]);
+    let mut fault_rows = Vec::new();
+    let fmt_t =
+        |x: f64| if x < 0.0 { "never".to_string() } else { f1(x) };
+    for spec_str in [
+        "crash@t=4,fog=1,rejoin=8",
+        "slow@t=4,fog=0,factor=0.3,until=8",
+        "link@t=4,src=0,dst=1,bw=0.1x,until=8",
+    ] {
+        let fault = FaultSpec::parse(spec_str).expect("sweep spec");
+        let r = {
+            let engine = ctx.engine(kind);
+            run_loadtest_chaos(&g, &spec, &cluster, &opts,
+                               &chaos_traffic, &omegas, engine,
+                               &Recorder::disabled(),
+                               std::slice::from_ref(&fault),
+                               DEFAULT_TASK_DEADLINE_S)
+                .expect("chaos sweep run")
+        };
+        let cr = r.faults.clone().expect("chaos runs report faults");
+        let o = cr.outcomes.first().expect("one fault per run").clone();
+        fault_table.row(vec![
+            o.class.to_string(),
+            f1(o.t_fault_s),
+            fmt_t(o.time_to_detect_s),
+            fmt_t(o.time_to_recover_s),
+            f1(o.p99_delta_ms),
+            pct(o.goodput_dip),
+            o.shed_during.to_string(),
+            o.hedges.to_string(),
+        ]);
+        fault_rows.push(obj(vec![
+            ("class", s(o.class)),
+            ("t_fault_s", num(o.t_fault_s)),
+            ("time_to_detect_s", num(o.time_to_detect_s)),
+            ("time_to_recover_s", num(o.time_to_recover_s)),
+            ("p99_delta_ms", num(o.p99_delta_ms)),
+            ("goodput_dip", num(o.goodput_dip)),
+            ("shed_during", num(o.shed_during as f64)),
+            ("hedges", num(o.hedges as f64)),
+            ("recovered", crate::util::json::Json::Bool(o.recovered)),
+        ]));
+        runs.push(report_json(
+            &format!("fograph-fault-{}", o.class),
+            &chaos_traffic, &r));
+    }
+    let fault_hist_line = obj(vec![
+        ("date", s(&utc_date_string())),
+        ("rev", s(&git_rev())),
+        ("benchmark", s("loadtest-fault-sweep")),
+        ("exec", s("analytic")),
+        ("rate_rps", num(cap)),
+        ("duration_s", num(chaos_traffic.duration_s)),
+        ("faults", arr(fault_rows)),
+    ]);
+
     // one line per regenerated sweep, in the same committed history
     // file the kernel bench appends to
     let hist_line = obj(vec![
@@ -258,6 +346,7 @@ pub fn run(ctx: &mut Ctx) -> String {
     {
         Ok(mut f) => {
             let _ = writeln!(f, "{hist_line}");
+            let _ = writeln!(f, "{fault_hist_line}");
         }
         Err(e) => eprintln!("cannot append BENCH_history.jsonl: {e}"),
     }
@@ -302,7 +391,14 @@ pub fn run(ctx: &mut Ctx) -> String {
          on a full submission window (accounted as the pipeline_stall \
          phase, not queueing). Wall-clock numbers are host-specific; \
          each regenerated sweep appends a provenance-stamped line to \
-         BENCH_history.jsonl.\n",
+         BENCH_history.jsonl.\n\n\
+         ### Chaos — one seeded fault per class at saturation \
+         ({cap:.0} req/s analytic, fault at t=4 of 12 s)\n\n{}\n\
+         detect = onset to EWMA-deadline flag; recover = onset to \
+         evacuation-done/rejoin/expiry (never = not within the run); \
+         p99 delta and goodput dip are measured over the fault window \
+         vs the rest of the run. The sweep is seed-deterministic and \
+         appends a loadtest-fault-sweep line to BENCH_history.jsonl.\n",
         traffic.arrival.name(),
         traffic.rps,
         traffic.duration_s,
@@ -310,5 +406,6 @@ pub fn run(ctx: &mut Ctx) -> String {
         table.to_markdown(),
         fair_table.to_markdown(),
         depth_table.to_markdown(),
+        fault_table.to_markdown(),
     )
 }

@@ -19,14 +19,15 @@ use fograph::graph::{datasets, io as gio, DatasetSpec, Graph};
 use fograph::net::NetKind;
 use fograph::obs::{self, ClockMode, Recorder};
 use fograph::profile::PerfModel;
-use fograph::runtime::kernels::shard;
+use fograph::runtime::kernels::{shard, DEFAULT_TASK_DEADLINE_S};
 use fograph::runtime::{reference, Engine, EngineKind};
 use fograph::serving::{self, pipeline};
 use fograph::traffic::{doc_json, fabric_json, report_json,
-                       run_fabric_traced, run_loadtest_traced,
-                       ArrivalKind, BatchPolicy, ExecMode,
-                       FabricReport, FairPolicy, LoadtestReport,
-                       TenantInput, TenantSpec, TrafficConfig};
+                       run_fabric_chaos, run_loadtest_chaos,
+                       ArrivalKind, BatchPolicy, ChaosReport,
+                       ExecMode, FabricReport, FairPolicy, FaultSpec,
+                       LoadtestReport, TenantInput, TenantSpec,
+                       TrafficConfig};
 use fograph::util::cli::{self, Args};
 use fograph::util::json::Json;
 
@@ -83,6 +84,7 @@ USAGE:
                  [--scheduler-period SECONDS] [--out BENCH_loadtest.json]
                  [--tenant k=v,... (repeatable)] [--fair drr|fifo]
                  [--trace-out trace.json]
+                 [--fault SPEC (repeatable)] [--task-deadline SECONDS]
   repro bench-kernels [--smoke] [--kernel-threads K]
                  [--out BENCH_kernels.json]
                  [--history BENCH_history.jsonl]
@@ -141,6 +143,31 @@ OBSERVABILITY (loadtest only):
   from the same registry, tracing on or off — analytic runs stay
   bit-reproducible either way. FOGRAPH_TRACE_BUF overrides the
   per-thread span ring capacity (events; validated at startup).
+
+CHAOS (loadtest only):
+  each repeatable --fault injects one seeded, repeatable fog fault;
+  the schedule is drawn from its own RNG stream so runs stay
+  bit-deterministic for a fixed --seed and invariant under the order
+  the faults are declared. Specs (times in seconds from run start):
+    crash@t=T,fog=J[,rejoin=T2]   fog J stops replying at ~T; with
+                                  rejoin= it comes back at T2
+    slow@t=T,fog=J,factor=F[,until=T2]  fog J runs at speed F in (0,1]
+    link@t=T,src=A,dst=B,bw=Fx[,until=T2]  inter-fog sync bandwidth
+                                  drops to fraction F (e.g. bw=0.1x)
+  Recovery: an EWMA straggler detector flags a fog whose tasks stop
+  completing within mean + 3*dev of its history; overdue measured
+  tasks are hedged to another fog (first reply wins, late loser
+  discarded — outputs stay bit-identical to the fault-free path); a
+  detected-dead fog's partitions are evacuated through the dual-mode
+  rescheduler at the next drain barrier, accounted as the recovery
+  phase. --task-deadline SECONDS bounds the per-task wait before
+  hedging (and backstops a hung worker with a loud panic instead of a
+  wedged run). Per fault class, time-to-detect, time-to-recover and
+  SLO damage (p99 delta, goodput dip, requests shed in the hole) land
+  in the faults section of BENCH_loadtest.json; fault-free runs emit
+  byte-identical reports with no faults key.
+  Example: --fault crash@t=5,fog=2,rejoin=15 \\
+           --fault slow@t=10,fog=0,factor=0.3,until=20
 
 KERNELS:
   bench-kernels measures the tiled GEMM and blocked SpMM against their
@@ -346,6 +373,36 @@ fn cmd_loadtest(args: &Args) -> i32 {
                 return 2;
             }
         };
+    let task_deadline_s = match fograph::util::cli::parse_task_deadline(
+        args, DEFAULT_TASK_DEADLINE_S) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    // repeatable --fault specs: grammar and range errors are a loud
+    // exit 2 before any dataset work. A bare `--fault` (value missing
+    // or eaten by the shell) parses as a switch — reject it too.
+    // Fog-id / run-end validation needs the mode's cluster size and
+    // happens below, once per mode, with the same exit code.
+    if args.has("fault") {
+        eprintln!(
+            "--fault requires a spec value (e.g. --fault \
+             crash@t=5,fog=2,rejoin=15)"
+        );
+        return 2;
+    }
+    let mut faults: Vec<FaultSpec> = Vec::new();
+    for raw in args.get_all("fault") {
+        match FaultSpec::parse(raw) {
+            Ok(f) => faults.push(f),
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        }
+    }
     let traffic = TrafficConfig {
         arrival,
         rps: args.get_f64("rps", 100.0),
@@ -440,7 +497,8 @@ fn cmd_loadtest(args: &Args) -> i32 {
         }
         return cmd_loadtest_fabric(args, &traffic, fair, &modes,
                                    &specs, &rec,
-                                   trace_out.as_deref());
+                                   trace_out.as_deref(), &faults,
+                                   task_deadline_s);
     }
     let (spec, g, model, net) = match resolve_run_inputs(args) {
         Ok(x) => x,
@@ -455,10 +513,18 @@ fn cmd_loadtest(args: &Args) -> i32 {
             eprintln!("unknown mode {m}");
             return 2;
         };
+        for f in &faults {
+            if let Err(e) = f.validate(cluster.len(),
+                                       traffic.duration_s) {
+                eprintln!("{e}");
+                return 2;
+            }
+        }
         let omegas = vec![PerfModel::uncalibrated(); cluster.len()];
-        let r = match run_loadtest_traced(&g, &spec, &cluster, &opts,
-                                          &traffic, &omegas,
-                                          &mut engine, &rec) {
+        let r = match run_loadtest_chaos(&g, &spec, &cluster, &opts,
+                                         &traffic, &omegas,
+                                         &mut engine, &rec, &faults,
+                                         task_deadline_s) {
             Ok(r) => r,
             Err(e) => {
                 eprintln!("loadtest failed: {e}");
@@ -466,6 +532,7 @@ fn cmd_loadtest(args: &Args) -> i32 {
             }
         };
         print_loadtest(m, &spec, &model, net, &traffic, &r);
+        print_faults(&r.faults);
         runs.push(report_json(m, &traffic, &r));
     }
     let out = args.get_or("out", "BENCH_loadtest.json");
@@ -502,7 +569,8 @@ fn cmd_loadtest(args: &Args) -> i32 {
 fn cmd_loadtest_fabric(args: &Args, traffic: &TrafficConfig,
                        fair: FairPolicy, modes: &[&str],
                        specs: &[TenantSpec], rec: &Arc<Recorder>,
-                       trace_out: Option<&str>) -> i32 {
+                       trace_out: Option<&str>, faults: &[FaultSpec],
+                       task_deadline_s: f64) -> i32 {
     let default_model = args.get_or("model", "gcn").to_string();
     let default_dataset = args.get_or("dataset", "siot").to_string();
     let tenants: Vec<fograph::traffic::Tenant> = specs
@@ -593,8 +661,16 @@ fn cmd_loadtest_fabric(args: &Args, traffic: &TrafficConfig,
             });
         }
         let cluster = cluster.expect("at least one tenant");
-        let fr = match run_fabric_traced(&cluster, inputs, traffic,
-                                         fair, &mut engine, rec) {
+        for f in faults {
+            if let Err(e) = f.validate(cluster.len(),
+                                       traffic.duration_s) {
+                eprintln!("{e}");
+                return 2;
+            }
+        }
+        let fr = match run_fabric_chaos(&cluster, inputs, traffic,
+                                        fair, &mut engine, rec,
+                                        faults, task_deadline_s) {
             Ok(fr) => fr,
             Err(e) => {
                 eprintln!("loadtest failed: {e}");
@@ -606,6 +682,7 @@ fn cmd_loadtest_fabric(args: &Args, traffic: &TrafficConfig,
                 fr.tenants.iter().map(|t| t.name.clone()).collect();
         }
         print_fabric(m, net, traffic, &fr);
+        print_faults(&fr.aggregate.faults);
         runs.push(fabric_json(m, traffic, &fr));
     }
     let out = args.get_or("out", "BENCH_loadtest.json");
@@ -709,6 +786,47 @@ fn print_fabric(mode: &str, net: NetKind, traffic: &TrafficConfig,
             .collect();
         println!("  measured   per-bucket batch host time: {}",
                  buckets.join(", "));
+    }
+}
+
+/// Console summary of a chaos run's `faults` section: the hedge
+/// accounting plus one line per injected fault. No-op (no output at
+/// all) for fault-free runs.
+fn print_faults(faults: &Option<ChaosReport>) {
+    let Some(c) = faults else { return };
+    println!(
+        "  chaos      task-deadline {:.0} ms; hedges {} won, {} wasted",
+        c.task_deadline_s * 1e3,
+        c.hedge_wins,
+        c.hedge_waste
+    );
+    let fmt_t = |t: f64| {
+        if t < 0.0 {
+            "never".to_string()
+        } else {
+            format!("{:.2}s", t)
+        }
+    };
+    for o in &c.outcomes {
+        let target = if o.peer >= 0 {
+            format!("link {}->{}", o.fog, o.peer)
+        } else {
+            format!("fog {}", o.fog)
+        };
+        println!(
+            "    {:<5} {} @t={:.2}s: detect {} recover {} ({}) | \
+             p99 {:+.1} ms, goodput dip {:.0}%, {} shed, {} hedges",
+            o.class,
+            target,
+            o.t_fault_s,
+            fmt_t(o.time_to_detect_s),
+            fmt_t(o.time_to_recover_s),
+            if o.recovered { "recovered" } else { "unrecovered" },
+            o.p99_delta_ms,
+            o.goodput_dip * 100.0,
+            o.shed_during,
+            o.hedges
+        );
     }
 }
 

@@ -47,10 +47,15 @@ pub enum Phase {
     /// job-channel queue-wait so OnlineProfiler observations stay
     /// queueing-free.
     PipelineStall = 12,
+    /// Emergency fault recovery: evacuating a dead fog's partitions
+    /// through the rescheduler and re-grounding the plan. Kept
+    /// distinct from `Replan` (steady-state skew replans) so profiler
+    /// observations and the phase breakdown stay clean under chaos.
+    Recovery = 13,
 }
 
 impl Phase {
-    pub const ALL: [Phase; 13] = [
+    pub const ALL: [Phase; 14] = [
         Phase::Arrive,
         Phase::Queue,
         Phase::Admit,
@@ -64,6 +69,7 @@ impl Phase {
         Phase::Reply,
         Phase::Replan,
         Phase::PipelineStall,
+        Phase::Recovery,
     ];
 
     pub fn name(self) -> &'static str {
@@ -81,6 +87,7 @@ impl Phase {
             Phase::Reply => "reply",
             Phase::Replan => "replan",
             Phase::PipelineStall => "pipeline_stall",
+            Phase::Recovery => "recovery",
         }
     }
 

@@ -39,7 +39,7 @@ pub mod spmm;
 pub use gemm::{gemm_bias, gemm_bias_into, gemm_bias_naive,
                gemm_bias_rows};
 pub use pool::{group_widths, FogJob, FogKernel, FogWorkerPool,
-               JobTrace, Reply};
+               Inject, JobTrace, Reply, DEFAULT_TASK_DEADLINE_S};
 pub use shard::{min_rows_per_shard, min_rows_per_shard_env,
                 min_rows_per_shard_source, probe_min_rows_per_shard,
                 split_rows, ShardClosure, ShardExec, ShardGroup};

@@ -40,10 +40,10 @@
 //! untraced job pays exactly one `Option` check.
 
 use std::cell::Cell;
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::graph::LocalGraph;
 use crate::obs::recorder::{Recorder, Ring};
@@ -57,6 +57,28 @@ use crate::runtime::weights::WeightBundle;
 
 use super::shard::{ShardExec, ShardGroup};
 use super::KernelScratch;
+
+/// Default wall-clock deadline for one fog task. Generous on purpose:
+/// the barrier path treats a miss as a fatal hang (poison + panic),
+/// so only a genuinely wedged worker should ever trip it. Chaos runs
+/// lower it per-pipeline to make injected crashes detectable fast.
+pub const DEFAULT_TASK_DEADLINE_S: f64 = 30.0;
+
+/// A worker-side fault injected into one job by the chaos plane. The
+/// measured executor stamps these from the run's `ChaosPlan`, so
+/// faults act where real ones would — inside the worker, after the
+/// coordinator has already committed the dispatch.
+#[derive(Clone, Copy, Debug)]
+pub enum Inject {
+    /// Crashed fog: the worker withholds the reply forever. The
+    /// coordinator sees a task that never completes — exactly the
+    /// signature of a dead node.
+    DropReply,
+    /// Straggler at `speed`× (in (0, 1)): the kernel result stands,
+    /// but the reply reports `1/speed`× the measured kernel time and
+    /// the worker wall-waits (capped) so hedging actually races it.
+    Slow { speed: f64 },
+}
 
 /// Which kernel a `FogJob` runs.
 #[derive(Clone, Copy, Debug)]
@@ -107,6 +129,14 @@ pub struct FogJob {
     /// pool) never interleave replies with each other or with a
     /// barrier `dispatch`. `None` = classic barrier dispatch.
     pub reply_to: Option<Sender<Reply>>,
+    /// Coordinator-assigned task identity, echoed back on the reply.
+    /// `0` = untagged (barrier dispatch and the fault-free pipeline,
+    /// which map replies by per-fog FIFO order instead). Hedged
+    /// re-dispatch needs explicit identity because the same logical
+    /// task may race on two workers and only the first reply counts.
+    pub task: u64,
+    /// Chaos fault to apply inside the worker; `None` = healthy.
+    pub inject: Option<Inject>,
 }
 
 impl FogJob {
@@ -185,6 +215,11 @@ impl FogJob {
 /// per-fog tag queue instead of a wire-format identity.
 pub struct Reply {
     pub fog: usize,
+    /// Echo of `FogJob::task` (0 = untagged). Note `fog` is the index
+    /// of the *worker* that ran the job — for a hedged task that is
+    /// not the logical fog, which is why tagged replies are mapped by
+    /// `task`, never by `fog`.
+    pub task: u64,
     pub out: Vec<f32>,
     /// Pure kernel wall-clock (shard parallelism included).
     pub seconds: f64,
@@ -239,6 +274,10 @@ pub struct FogWorkerPool {
     /// still hold that round's other replies, so further dispatches
     /// would mis-attribute them. A poisoned pool refuses to dispatch.
     poisoned: Cell<bool>,
+    /// Wall-clock deadline for one task at the `dispatch` barrier: a
+    /// fog that never replies surfaces as a poisoned pool instead of
+    /// a wedged run.
+    task_deadline_s: Cell<f64>,
 }
 
 impl FogWorkerPool {
@@ -270,7 +309,20 @@ impl FogWorkerPool {
             handles,
             widths,
             poisoned: Cell::new(false),
+            task_deadline_s: Cell::new(DEFAULT_TASK_DEADLINE_S),
         }
+    }
+
+    /// Wall-clock deadline for one task at the barrier (and the
+    /// default a `BspPipeline` on this pool starts from).
+    pub fn task_deadline_s(&self) -> f64 {
+        self.task_deadline_s.get()
+    }
+
+    /// Set the per-task deadline (seconds; must be positive finite).
+    pub fn set_task_deadline(&self, s: f64) {
+        assert!(s.is_finite() && s > 0.0, "task deadline must be > 0");
+        self.task_deadline_s.set(s);
     }
 
     pub fn len(&self) -> usize {
@@ -320,10 +372,28 @@ impl FogWorkerPool {
                 pending += 1;
             }
         }
+        let deadline =
+            Duration::from_secs_f64(self.task_deadline_s.get());
         for _ in 0..pending {
-            // recv fails only if every worker died; individual worker
-            // panics arrive as `panicked` replies and re-raise here
-            let r = self.results.recv().expect("fog worker reply");
+            // individual worker panics arrive as `panicked` replies
+            // and re-raise here; a task that never replies at all (a
+            // hung or chaos-crashed fog) trips the deadline instead of
+            // wedging the barrier forever
+            let r = match self.results.recv_timeout(deadline) {
+                Ok(r) => r,
+                Err(RecvTimeoutError::Timeout) => {
+                    self.poisoned.set(true);
+                    panic!(
+                        "fog task exceeded the {:.3}s deadline at the \
+                         BSP barrier; pool poisoned — rebuild the plan",
+                        self.task_deadline_s.get()
+                    );
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    self.poisoned.set(true);
+                    panic!("all fog workers died before replying");
+                }
+            };
             if r.panicked {
                 self.poisoned.set(true);
                 panic!("fog worker {} panicked during kernel \
@@ -393,7 +463,15 @@ fn worker_loop(
         let queue_wait_s = sent.elapsed().as_secs_f64();
         let trace = job.trace.take();
         let reply_to = job.reply_to.take();
+        let inject = job.inject.take();
+        let task = job.task;
         let batch = job.batch;
+        if matches!(inject, Some(Inject::DropReply)) {
+            // chaos-crashed fog: swallow the job whole — no kernel
+            // run, no reply — so the coordinator sees the exact
+            // signature of a dead node (a task that never completes)
+            continue;
+        }
         let exec = match &group {
             Some(g) => ShardExec::Group(g),
             None => ShardExec::Inline(1),
@@ -407,7 +485,21 @@ fn worker_loop(
             }),
         );
         match ran {
-            Ok((out, seconds)) => {
+            Ok((out, mut seconds)) => {
+                if let Some(Inject::Slow { speed }) = inject {
+                    // straggler: the bit-exact result stands, but the
+                    // task reports 1/speed× its kernel time and waits
+                    // a capped slice of that extra wall time so a
+                    // hedged healthy replica can actually win the race
+                    let slowed = seconds / speed.clamp(1e-3, 1.0);
+                    let wait = (slowed - seconds).min(0.25);
+                    if wait > 0.0 {
+                        std::thread::sleep(Duration::from_secs_f64(
+                            wait,
+                        ));
+                    }
+                    seconds = slowed;
+                }
                 if let Some(tr) = &trace {
                     // wall-clock spans on this worker's dedicated
                     // ring: kernel just finished, so its start is
@@ -440,6 +532,7 @@ fn worker_loop(
                 }
                 let reply = Reply {
                     fog,
+                    task,
                     out,
                     seconds,
                     queue_wait_s,
@@ -461,6 +554,7 @@ fn worker_loop(
             Err(_) => {
                 let reply = Reply {
                     fog,
+                    task,
                     out: Vec::new(),
                     seconds: 0.0,
                     queue_wait_s,
@@ -559,6 +653,8 @@ mod tests {
                     nbr: None,
                     trace: None,
                     reply_to: None,
+                    task: 0,
+                    inject: None,
                 })
             })
             .collect()
@@ -708,5 +804,70 @@ mod tests {
         assert!(outs[0].is_empty());
         assert_eq!(secs[0], 0.0);
         assert_eq!(waits[0], 0.0);
+    }
+
+    #[test]
+    fn slow_inject_keeps_outputs_and_inflates_seconds() {
+        let (subs, csrs, wb, states, f_in) = two_fog_setup();
+        let pool = FogWorkerPool::new(2);
+        let (base, base_secs, _) = pool.dispatch(
+            layer_jobs(&subs, &csrs, &states, &wb, f_in, 1));
+        let mut jobs = layer_jobs(&subs, &csrs, &states, &wb, f_in, 1);
+        jobs[1].as_mut().unwrap().inject =
+            Some(Inject::Slow { speed: 0.25 });
+        let (slow, slow_secs, _) = pool.dispatch(jobs);
+        // the straggler's result is bit-identical — only time changes
+        assert_eq!(base, slow);
+        assert!(base_secs[1] >= 0.0);
+        assert!(
+            slow_secs[1] >= base_secs[1],
+            "slowed task reports at least its healthy kernel time"
+        );
+    }
+
+    #[test]
+    fn drop_reply_inject_withholds_the_reply() {
+        // distinguish "reply withheld" from "reply lost" via task
+        // tags on a private channel: the healthy task's reply arrives,
+        // the crashed task's never does
+        let (subs, csrs, wb, states, f_in) = two_fog_setup();
+        let pool = FogWorkerPool::new(2);
+        let (tx, rx) = channel::<Reply>();
+        let mut jobs: Vec<FogJob> =
+            layer_jobs(&subs, &csrs, &states, &wb, f_in, 1)
+                .into_iter()
+                .map(|j| j.unwrap())
+                .collect();
+        for (i, j) in jobs.iter_mut().enumerate() {
+            j.reply_to = Some(tx.clone());
+            j.task = i as u64 + 1;
+        }
+        jobs[0].inject = Some(Inject::DropReply);
+        let mut it = jobs.into_iter();
+        pool.submit(0, it.next().unwrap());
+        pool.submit(1, it.next().unwrap());
+        let r = rx
+            .recv_timeout(Duration::from_secs(10))
+            .expect("healthy fog replies");
+        assert_eq!(r.task, 2, "only the healthy task replies");
+        assert!(
+            rx.recv_timeout(Duration::from_millis(200)).is_err(),
+            "crashed fog's reply is withheld forever"
+        );
+    }
+
+    #[test]
+    fn dispatch_deadline_surfaces_a_dead_fog() {
+        let (subs, csrs, wb, states, f_in) = two_fog_setup();
+        let pool = FogWorkerPool::new(2);
+        pool.set_task_deadline(0.2);
+        assert_eq!(pool.task_deadline_s(), 0.2);
+        let mut jobs = layer_jobs(&subs, &csrs, &states, &wb, f_in, 1);
+        jobs[0].as_mut().unwrap().inject = Some(Inject::DropReply);
+        let hung = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| pool.dispatch(jobs)),
+        );
+        assert!(hung.is_err(), "barrier must not wedge on a dead fog");
+        assert!(pool.is_poisoned());
     }
 }

@@ -1,0 +1,762 @@
+//! Chaos serving plane — seeded, repeatable fault injection plus the
+//! detection and recovery arithmetic the fabric uses to survive it.
+//!
+//! Fault specs arrive as repeatable `--fault` CLI strings:
+//!
+//! ```text
+//!   crash@t=4,fog=1[,rejoin=8]          fog stops replying at ~t
+//!   slow@t=4,fog=2,factor=0.3[,until=9] fog runs at factor× speed
+//!   link@t=4,src=0,dst=3,bw=0.1x[,until=9]  uplink bandwidth collapse
+//! ```
+//!
+//! A `ChaosPlan` canonicalizes the declared faults (sorted by onset
+//! time, then class, then ids) and then draws a small onset jitter for
+//! each from a dedicated RNG stream (`seed ^ CHAOS_SALT`), so runs
+//! stay bit-deterministic for a fixed seed and invariant under
+//! `--fault` declaration order, and an empty fault list leaves every
+//! other seeded stream untouched.
+//!
+//! The `EwmaDetector` tracks per-fog task *durations* (not completion
+//! intervals: in a BSP fabric every fog finishes each batch at the
+//! same virtual time, so intervals only see batch cadence). A fog is
+//! overdue when its oldest outstanding task has been running past
+//! `mean + beta·dev`, the same deadline the fabric prices hedged
+//! analytic dispatch with.
+
+use crate::util::json::{arr, num, obj, s, Json};
+use crate::util::rng::{mix64, Rng};
+
+/// Salt for the dedicated chaos RNG stream: fault-onset jitter must
+/// not perturb the arrival/load-trace streams, so an identical run
+/// with no faults declared stays bit-identical.
+const CHAOS_SALT: u64 = 0xC4A0_5EED;
+
+/// Max onset jitter (seconds) added to each fault's declared time.
+const ONSET_JITTER_S: f64 = 0.1;
+
+// EWMA deadline constants: alpha is the observation weight, beta the
+// deviation multiplier (mean + beta·dev), floor_s a lower bound so a
+// few fast samples cannot produce a hair-trigger deadline.
+const EWMA_ALPHA: f64 = 0.25;
+const EWMA_BETA: f64 = 3.0;
+const EWMA_FLOOR_S: f64 = 0.05;
+
+/// One fault class with its class-specific parameters. Times are
+/// absolute run seconds; `factor`/`bw` are ratios in (0, 1].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultKind {
+    /// Fog stops completing tasks at onset; optionally rejoins later.
+    Crash { fog: usize, rejoin: Option<f64> },
+    /// Fog executes at `factor`× speed until `until` (or forever).
+    Slow { fog: usize, factor: f64, until: Option<f64> },
+    /// The src→dst uplink drops to `bw`× bandwidth until `until`.
+    Link { src: usize, dst: usize, bw: f64, until: Option<f64> },
+}
+
+impl FaultKind {
+    pub fn class(&self) -> &'static str {
+        match self {
+            FaultKind::Crash { .. } => "crash",
+            FaultKind::Slow { .. } => "slow",
+            FaultKind::Link { .. } => "link",
+        }
+    }
+
+    fn class_rank(&self) -> u8 {
+        match self {
+            FaultKind::Crash { .. } => 0,
+            FaultKind::Slow { .. } => 1,
+            FaultKind::Link { .. } => 2,
+        }
+    }
+
+    fn ids(&self) -> (usize, usize) {
+        match *self {
+            FaultKind::Crash { fog, .. } => (fog, 0),
+            FaultKind::Slow { fog, .. } => (fog, 0),
+            FaultKind::Link { src, dst, .. } => (src, dst),
+        }
+    }
+}
+
+/// One declared fault: class parameters plus the onset time `t`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultSpec {
+    pub t: f64,
+    pub kind: FaultKind,
+}
+
+fn parse_kv<'a>(
+    rest: &'a str,
+    spec: &str,
+) -> Result<Vec<(&'a str, &'a str)>, String> {
+    let mut out: Vec<(&str, &str)> = Vec::new();
+    for part in rest.split(',') {
+        let (k, v) = part.split_once('=').ok_or_else(|| {
+            format!("fault spec '{spec}': expected key=value, got '{part}'")
+        })?;
+        let (k, v) = (k.trim(), v.trim());
+        if k.is_empty() || v.is_empty() {
+            return Err(format!(
+                "fault spec '{spec}': empty key or value in '{part}'"
+            ));
+        }
+        if out.iter().any(|(ek, _)| *ek == k) {
+            return Err(format!("fault spec '{spec}': duplicate key '{k}'"));
+        }
+        out.push((k, v));
+    }
+    Ok(out)
+}
+
+fn take<'a>(kv: &mut Vec<(&'a str, &'a str)>, key: &str) -> Option<&'a str> {
+    kv.iter()
+        .position(|(k, _)| *k == key)
+        .map(|i| kv.remove(i).1)
+}
+
+fn need<'a>(
+    kv: &mut Vec<(&'a str, &'a str)>,
+    key: &str,
+    spec: &str,
+) -> Result<&'a str, String> {
+    take(kv, key)
+        .ok_or_else(|| format!("fault spec '{spec}': missing '{key}='"))
+}
+
+fn parse_time(v: &str, key: &str, spec: &str) -> Result<f64, String> {
+    let t: f64 = v.parse().map_err(|_| {
+        format!("fault spec '{spec}': '{key}={v}' is not a number")
+    })?;
+    if !t.is_finite() || t < 0.0 {
+        return Err(format!(
+            "fault spec '{spec}': '{key}={v}' must be a finite time >= 0"
+        ));
+    }
+    Ok(t)
+}
+
+fn parse_id(v: &str, key: &str, spec: &str) -> Result<usize, String> {
+    v.parse().map_err(|_| {
+        format!("fault spec '{spec}': '{key}={v}' is not a fog index")
+    })
+}
+
+/// A speed/bandwidth ratio: a number in (0, 1], optionally suffixed
+/// with `x` (`0.1x` == `0.1`).
+fn parse_ratio(v: &str, key: &str, spec: &str) -> Result<f64, String> {
+    let body = v
+        .strip_suffix('x')
+        .or_else(|| v.strip_suffix('X'))
+        .unwrap_or(v);
+    let r: f64 = body.parse().map_err(|_| {
+        format!("fault spec '{spec}': '{key}={v}' is not a ratio")
+    })?;
+    if !r.is_finite() || r <= 0.0 || r > 1.0 {
+        return Err(format!(
+            "fault spec '{spec}': '{key}={v}' must be in (0, 1]"
+        ));
+    }
+    Ok(r)
+}
+
+impl FaultSpec {
+    /// Parse one `--fault` spec (`class@k=v,k=v,...`). Errors name the
+    /// offending spec and field so the CLI can exit 2 with a usable
+    /// message.
+    pub fn parse(spec: &str) -> Result<FaultSpec, String> {
+        let (class, rest) = spec.split_once('@').ok_or_else(|| {
+            format!(
+                "fault spec '{spec}': expected class@k=v,... \
+                 (classes: crash, slow, link)"
+            )
+        })?;
+        let mut kv = parse_kv(rest, spec)?;
+        let t = parse_time(need(&mut kv, "t", spec)?, "t", spec)?;
+        let kind = match class.trim() {
+            "crash" => {
+                let fog = parse_id(need(&mut kv, "fog", spec)?, "fog", spec)?;
+                let rejoin = match take(&mut kv, "rejoin") {
+                    Some(v) => {
+                        let r = parse_time(v, "rejoin", spec)?;
+                        if r <= t {
+                            return Err(format!(
+                                "fault spec '{spec}': rejoin must be \
+                                 after t"
+                            ));
+                        }
+                        Some(r)
+                    }
+                    None => None,
+                };
+                FaultKind::Crash { fog, rejoin }
+            }
+            "slow" => {
+                let fog = parse_id(need(&mut kv, "fog", spec)?, "fog", spec)?;
+                let factor = parse_ratio(
+                    need(&mut kv, "factor", spec)?,
+                    "factor",
+                    spec,
+                )?;
+                let until = parse_until(&mut kv, t, spec)?;
+                FaultKind::Slow { fog, factor, until }
+            }
+            "link" => {
+                let src = parse_id(need(&mut kv, "src", spec)?, "src", spec)?;
+                let dst = parse_id(need(&mut kv, "dst", spec)?, "dst", spec)?;
+                if src == dst {
+                    return Err(format!(
+                        "fault spec '{spec}': src and dst must differ"
+                    ));
+                }
+                let bw =
+                    parse_ratio(need(&mut kv, "bw", spec)?, "bw", spec)?;
+                let until = parse_until(&mut kv, t, spec)?;
+                FaultKind::Link { src, dst, bw, until }
+            }
+            other => {
+                return Err(format!(
+                    "fault spec '{spec}': unknown class '{other}' \
+                     (classes: crash, slow, link)"
+                ))
+            }
+        };
+        if let Some((k, _)) = kv.first() {
+            return Err(format!("fault spec '{spec}': unknown key '{k}'"));
+        }
+        Ok(FaultSpec { t, kind })
+    }
+
+    /// Check a parsed spec against a concrete run: every fog id must
+    /// exist and the onset must land inside the run.
+    pub fn validate(
+        &self,
+        n_fogs: usize,
+        duration_s: f64,
+    ) -> Result<(), String> {
+        let (a, b) = self.kind.ids();
+        for id in [a, b] {
+            if id >= n_fogs {
+                return Err(format!(
+                    "{} fault references fog {id} but the cluster has \
+                     {n_fogs} fogs",
+                    self.kind.class()
+                ));
+            }
+        }
+        if self.t >= duration_s {
+            return Err(format!(
+                "{} fault at t={} is past the run end ({duration_s}s)",
+                self.kind.class(),
+                self.t
+            ));
+        }
+        Ok(())
+    }
+
+    fn sort_key(&self) -> (f64, u8, usize, usize) {
+        let (a, b) = self.kind.ids();
+        (self.t, self.kind.class_rank(), a, b)
+    }
+}
+
+fn parse_until(
+    kv: &mut Vec<(&str, &str)>,
+    t: f64,
+    spec: &str,
+) -> Result<Option<f64>, String> {
+    match take(kv, "until") {
+        Some(v) => {
+            let u = parse_time(v, "until", spec)?;
+            if u <= t {
+                return Err(format!(
+                    "fault spec '{spec}': until must be after t"
+                ));
+            }
+            Ok(Some(u))
+        }
+        None => Ok(None),
+    }
+}
+
+/// A declared fault with its jittered onset time.
+#[derive(Clone, Copy, Debug)]
+pub struct ActiveFault {
+    pub spec: FaultSpec,
+    /// Actual onset: declared `t` plus a seeded jitter in
+    /// `[0, ONSET_JITTER_S)`.
+    pub t_on: f64,
+}
+
+/// The canonical, seeded fault schedule for one run. Jitter is drawn
+/// *after* sorting into canonical order, so the plan is invariant
+/// under `--fault` declaration order.
+#[derive(Clone, Debug, Default)]
+pub struct ChaosPlan {
+    pub faults: Vec<ActiveFault>,
+}
+
+impl ChaosPlan {
+    pub fn new(specs: &[FaultSpec], seed: u64) -> ChaosPlan {
+        let mut sorted = specs.to_vec();
+        // spec times are finite by construction (parse rejects
+        // NaN/inf), so the partial order is total here
+        sorted.sort_by(|a, b| {
+            a.sort_key().partial_cmp(&b.sort_key()).unwrap()
+        });
+        let mut rng = Rng::new(mix64(seed ^ CHAOS_SALT));
+        let faults = sorted
+            .into_iter()
+            .map(|spec| ActiveFault {
+                t_on: spec.t + rng.range_f64(0.0, ONSET_JITTER_S),
+                spec,
+            })
+            .collect();
+        ChaosPlan { faults }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    /// Is `fog` dead at virtual time `t`? (Rejoin is un-jittered: the
+    /// operator said when the node comes back.)
+    pub fn crashed(&self, fog: usize, t: f64) -> bool {
+        self.faults.iter().any(|f| match f.spec.kind {
+            FaultKind::Crash { fog: g, rejoin } => {
+                g == fog && t >= f.t_on && rejoin.map_or(true, |r| t < r)
+            }
+            _ => false,
+        })
+    }
+
+    /// Speed multiplier for `fog` at `t`: the product of every active
+    /// slow fault's factor (1.0 when healthy).
+    pub fn slow_factor(&self, fog: usize, t: f64) -> f64 {
+        let mut k = 1.0;
+        for f in &self.faults {
+            if let FaultKind::Slow { fog: g, factor, until } = f.spec.kind {
+                if g == fog && t >= f.t_on && until.map_or(true, |u| t < u)
+                {
+                    k *= factor;
+                }
+            }
+        }
+        k
+    }
+
+    /// Bandwidth multiplier for collection/sync transfers at `t`: the
+    /// worst (minimum) active link fault (1.0 when healthy). The
+    /// fabric's transfer model prices the whole collection window, so
+    /// one degraded uplink throttles that window's wire share.
+    pub fn link_factor(&self, t: f64) -> f64 {
+        let mut bw: f64 = 1.0;
+        for f in &self.faults {
+            if let FaultKind::Link { bw: b, until, .. } = f.spec.kind {
+                if t >= f.t_on && until.map_or(true, |u| t < u) {
+                    bw = bw.min(b);
+                }
+            }
+        }
+        bw
+    }
+}
+
+/// Straggler/crash detector: an EWMA of per-fog task durations with a
+/// mean + beta·dev deadline. `start` marks the *oldest* outstanding
+/// task (later starts while one is pending are ignored, so a crashed
+/// fog's first unanswered task keeps aging); `complete` clears it and
+/// feeds the duration. Deviation is updated against the previous mean
+/// — the estimate that existed when the sample arrived.
+#[derive(Clone, Debug)]
+pub struct EwmaDetector {
+    alpha: f64,
+    beta: f64,
+    floor_s: f64,
+    mean: Vec<f64>,
+    dev: Vec<f64>,
+    primed: Vec<bool>,
+    started: Vec<Option<f64>>,
+}
+
+impl EwmaDetector {
+    pub fn new(n_fogs: usize) -> EwmaDetector {
+        EwmaDetector {
+            alpha: EWMA_ALPHA,
+            beta: EWMA_BETA,
+            floor_s: EWMA_FLOOR_S,
+            mean: vec![0.0; n_fogs],
+            dev: vec![0.0; n_fogs],
+            primed: vec![false; n_fogs],
+            started: vec![None; n_fogs],
+        }
+    }
+
+    /// Mark a task outstanding on `fog` since `now` (no-op while an
+    /// older one is still pending).
+    pub fn start(&mut self, fog: usize, now: f64) {
+        if self.started[fog].is_none() {
+            self.started[fog] = Some(now);
+        }
+    }
+
+    /// A task on `fog` completed after running `dur` seconds.
+    pub fn complete(&mut self, fog: usize, dur: f64) {
+        self.started[fog] = None;
+        if !self.primed[fog] {
+            self.mean[fog] = dur;
+            self.dev[fog] = dur / 2.0;
+            self.primed[fog] = true;
+        } else {
+            self.dev[fog] = self.alpha * (dur - self.mean[fog]).abs()
+                + (1.0 - self.alpha) * self.dev[fog];
+            self.mean[fog] = self.alpha * dur
+                + (1.0 - self.alpha) * self.mean[fog];
+        }
+    }
+
+    /// The duration past which a task on `fog` counts as overdue.
+    pub fn deadline(&self, fog: usize) -> f64 {
+        (self.mean[fog] + self.beta * self.dev[fog]).max(self.floor_s)
+    }
+
+    pub fn primed(&self, fog: usize) -> bool {
+        self.primed[fog]
+    }
+
+    /// Is `fog`'s oldest outstanding task past its deadline at `now`?
+    /// Never fires before the first completed observation primes the
+    /// estimate.
+    pub fn overdue(&self, fog: usize, now: f64) -> bool {
+        self.primed[fog]
+            && self.started[fog]
+                .map(|s0| now - s0 > self.deadline(fog))
+                .unwrap_or(false)
+    }
+}
+
+/// Per-fault recovery record in the `faults` report section. Times
+/// are seconds relative to the fault's (jittered) onset; `-1.0` means
+/// "never happened during the run".
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultOutcome {
+    pub class: &'static str,
+    pub fog: i32,
+    /// Link faults: the dst fog; -1 otherwise.
+    pub peer: i32,
+    pub t_fault_s: f64,
+    pub time_to_detect_s: f64,
+    pub time_to_recover_s: f64,
+    /// p99 latency over the fault window minus the rest-of-run p99.
+    pub p99_delta_ms: f64,
+    /// 1 - (goodput rate inside the window / rate outside), in [0, 1].
+    pub goodput_dip: f64,
+    /// Requests shed while the fault window was open.
+    pub shed_during: usize,
+    /// Hedged/evacuated dispatches attributed to this fault.
+    pub hedges: u64,
+    pub recovered: bool,
+}
+
+/// The `faults` section of a chaos run's report.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ChaosReport {
+    pub task_deadline_s: f64,
+    pub hedge_wins: u64,
+    pub hedge_waste: u64,
+    pub outcomes: Vec<FaultOutcome>,
+}
+
+pub fn chaos_json(r: &ChaosReport) -> Json {
+    obj(vec![
+        ("task_deadline_s", num(r.task_deadline_s)),
+        ("hedge_wins", num(r.hedge_wins as f64)),
+        ("hedge_waste", num(r.hedge_waste as f64)),
+        (
+            "outcomes",
+            arr(r.outcomes.iter().map(|o| {
+                obj(vec![
+                    ("class", s(o.class)),
+                    ("fog", num(o.fog as f64)),
+                    ("peer", num(o.peer as f64)),
+                    ("t_fault_s", num(o.t_fault_s)),
+                    ("time_to_detect_s", num(o.time_to_detect_s)),
+                    ("time_to_recover_s", num(o.time_to_recover_s)),
+                    ("p99_delta_ms", num(o.p99_delta_ms)),
+                    ("goodput_dip", num(o.goodput_dip)),
+                    ("shed_during", num(o.shed_during as f64)),
+                    ("hedges", num(o.hedges as f64)),
+                    ("recovered", Json::Bool(o.recovered)),
+                ])
+            })),
+        ),
+    ])
+}
+
+fn p99(lat: &mut Vec<f64>) -> f64 {
+    if lat.is_empty() {
+        return 0.0;
+    }
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((lat.len() as f64 * 0.99).ceil() as usize)
+        .clamp(1, lat.len())
+        - 1;
+    lat[idx]
+}
+
+/// SLO damage over one fault window `[t0, t1)`: the p99 delta and
+/// goodput dip of completions inside the window vs. the rest of the
+/// run, plus the shed count inside the window. `samples` are
+/// `(finish_t, latency_s, within_slo)` completion records;
+/// `duration_s` is the full run length.
+pub fn window_damage(
+    samples: &[(f64, f64, bool)],
+    shed: &[f64],
+    t0: f64,
+    t1: f64,
+    duration_s: f64,
+) -> (f64, f64, usize) {
+    let t1 = t1.min(duration_s).max(t0);
+    let mut lat_in = Vec::new();
+    let mut lat_out = Vec::new();
+    let (mut good_in, mut good_out) = (0usize, 0usize);
+    for &(ft, lat, ok) in samples {
+        if ft >= t0 && ft < t1 {
+            lat_in.push(lat);
+            good_in += ok as usize;
+        } else {
+            lat_out.push(lat);
+            good_out += ok as usize;
+        }
+    }
+    let p99_delta_ms = if lat_in.is_empty() || lat_out.is_empty() {
+        0.0
+    } else {
+        (p99(&mut lat_in) - p99(&mut lat_out)) * 1e3
+    };
+    let win = t1 - t0;
+    let rest = (duration_s - win).max(0.0);
+    let rate_in = if win > 0.0 { good_in as f64 / win } else { 0.0 };
+    let rate_out =
+        if rest > 0.0 { good_out as f64 / rest } else { 0.0 };
+    let dip = if rate_out > 0.0 {
+        (1.0 - rate_in / rate_out).clamp(0.0, 1.0)
+    } else {
+        0.0
+    };
+    let shed_during =
+        shed.iter().filter(|&&t| t >= t0 && t < t1).count();
+    (p99_delta_ms, dip, shed_during)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_crash_with_rejoin() {
+        let f = FaultSpec::parse("crash@t=4,fog=1,rejoin=8").unwrap();
+        assert_eq!(f.t, 4.0);
+        assert_eq!(
+            f.kind,
+            FaultKind::Crash { fog: 1, rejoin: Some(8.0) }
+        );
+        let f = FaultSpec::parse("crash@t=4,fog=1").unwrap();
+        assert_eq!(f.kind, FaultKind::Crash { fog: 1, rejoin: None });
+    }
+
+    #[test]
+    fn parses_slow_and_link() {
+        let f = FaultSpec::parse("slow@t=2.5,fog=0,factor=0.3").unwrap();
+        assert_eq!(
+            f.kind,
+            FaultKind::Slow { fog: 0, factor: 0.3, until: None }
+        );
+        let f =
+            FaultSpec::parse("link@t=1,src=0,dst=3,bw=0.1x,until=9")
+                .unwrap();
+        assert_eq!(
+            f.kind,
+            FaultKind::Link { src: 0, dst: 3, bw: 0.1, until: Some(9.0) }
+        );
+    }
+
+    #[test]
+    fn rejects_missing_class_separator() {
+        assert!(FaultSpec::parse("crash,t=4,fog=1").is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_class() {
+        assert!(FaultSpec::parse("explode@t=4,fog=1").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_pair_and_empty_value() {
+        assert!(FaultSpec::parse("crash@t=4,fog").is_err());
+        assert!(FaultSpec::parse("crash@t=4,fog=").is_err());
+    }
+
+    #[test]
+    fn rejects_duplicate_key() {
+        assert!(FaultSpec::parse("crash@t=4,fog=1,fog=2").is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_key() {
+        assert!(FaultSpec::parse("crash@t=4,fog=1,bw=0.5").is_err());
+    }
+
+    #[test]
+    fn rejects_missing_required_key() {
+        assert!(FaultSpec::parse("crash@t=4").is_err());
+        assert!(FaultSpec::parse("slow@t=4,fog=1").is_err());
+        assert!(FaultSpec::parse("link@t=4,src=0,dst=1").is_err());
+    }
+
+    #[test]
+    fn rejects_factor_outside_unit_interval() {
+        assert!(FaultSpec::parse("slow@t=4,fog=1,factor=0").is_err());
+        assert!(FaultSpec::parse("slow@t=4,fog=1,factor=1.5").is_err());
+        assert!(FaultSpec::parse("slow@t=4,fog=1,factor=-0.3").is_err());
+        assert!(FaultSpec::parse("slow@t=4,fog=1,factor=fast").is_err());
+        // 1.0 is the no-op boundary and legal
+        assert!(FaultSpec::parse("slow@t=4,fog=1,factor=1.0x").is_ok());
+    }
+
+    #[test]
+    fn rejects_bad_times() {
+        assert!(FaultSpec::parse("crash@t=-1,fog=1").is_err());
+        assert!(FaultSpec::parse("crash@t=nan,fog=1").is_err());
+        assert!(FaultSpec::parse("crash@t=4,fog=1,rejoin=3").is_err());
+        assert!(
+            FaultSpec::parse("slow@t=4,fog=1,factor=0.5,until=4").is_err()
+        );
+    }
+
+    #[test]
+    fn rejects_self_link() {
+        assert!(
+            FaultSpec::parse("link@t=1,src=2,dst=2,bw=0.5").is_err()
+        );
+    }
+
+    #[test]
+    fn validate_rejects_unknown_fog_and_late_onset() {
+        let f = FaultSpec::parse("crash@t=4,fog=9").unwrap();
+        assert!(f.validate(3, 10.0).is_err());
+        let f = FaultSpec::parse("link@t=1,src=0,dst=7,bw=0.5").unwrap();
+        assert!(f.validate(3, 10.0).is_err());
+        let f = FaultSpec::parse("crash@t=12,fog=0").unwrap();
+        assert!(f.validate(3, 10.0).is_err());
+        assert!(f.validate(3, 15.0).is_ok());
+    }
+
+    #[test]
+    fn plan_is_deterministic_and_declaration_order_invariant() {
+        let a = FaultSpec::parse("crash@t=4,fog=1").unwrap();
+        let b = FaultSpec::parse("slow@t=2,fog=0,factor=0.5").unwrap();
+        let c =
+            FaultSpec::parse("link@t=4,src=0,dst=2,bw=0.2x").unwrap();
+        let p1 = ChaosPlan::new(&[a, b, c], 7);
+        let p2 = ChaosPlan::new(&[c, a, b], 7);
+        let p3 = ChaosPlan::new(&[b, c, a], 7);
+        let key = |p: &ChaosPlan| {
+            p.faults
+                .iter()
+                .map(|f| (f.t_on, f.spec.kind.class(), f.spec.kind.ids()))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(key(&p1), key(&p2));
+        assert_eq!(key(&p1), key(&p3));
+        // canonical order: by onset time first
+        assert_eq!(p1.faults[0].spec.kind.class(), "slow");
+        // jitter is small and nonnegative
+        for f in &p1.faults {
+            assert!(f.t_on >= f.spec.t);
+            assert!(f.t_on < f.spec.t + ONSET_JITTER_S);
+        }
+        // different seed → different jitter
+        let p4 = ChaosPlan::new(&[a, b, c], 8);
+        assert_ne!(key(&p1), key(&p4));
+    }
+
+    #[test]
+    fn plan_queries_respect_windows() {
+        let crash =
+            FaultSpec::parse("crash@t=4,fog=1,rejoin=8").unwrap();
+        let slow =
+            FaultSpec::parse("slow@t=2,fog=0,factor=0.5,until=6")
+                .unwrap();
+        let link =
+            FaultSpec::parse("link@t=3,src=0,dst=2,bw=0.25,until=5")
+                .unwrap();
+        let p = ChaosPlan::new(&[crash, slow, link], 11);
+        // before any onset everything is healthy
+        assert!(!p.crashed(1, 0.0));
+        assert_eq!(p.slow_factor(0, 0.0), 1.0);
+        assert_eq!(p.link_factor(0.0), 1.0);
+        // mid-window (jitter < 0.1 so t=4.5 is inside the crash)
+        assert!(p.crashed(1, 4.5));
+        assert!(!p.crashed(0, 4.5));
+        assert_eq!(p.slow_factor(0, 4.5), 0.5);
+        assert_eq!(p.link_factor(4.5), 0.25);
+        // after rejoin/until everything heals
+        assert!(!p.crashed(1, 8.0));
+        assert_eq!(p.slow_factor(0, 6.0), 1.0);
+        assert_eq!(p.link_factor(5.0), 1.0);
+    }
+
+    // Worked example shared with python/tests/test_chaos_mirror.py:
+    // durations 0.5, 0.7, 0.8 at alpha=0.25, beta=3.0.
+    #[test]
+    fn detector_matches_worked_example() {
+        let mut d = EwmaDetector::new(2);
+        assert!(!d.primed(0));
+        assert!(!d.overdue(0, 100.0)); // unprimed never fires
+        d.start(0, 0.0);
+        d.complete(0, 0.5); // primes: mean=0.5, dev=0.25
+        d.complete(0, 0.7);
+        d.complete(0, 0.8);
+        assert!((d.deadline(0) - 1.334375).abs() < 1e-12);
+        d.start(0, 10.0);
+        d.start(0, 10.7); // ignored: an older task is outstanding
+        assert!(!d.overdue(0, 11.0)); // elapsed 1.0 < deadline
+        assert!(d.overdue(0, 11.4)); // elapsed 1.4 > deadline
+        d.complete(0, 0.6);
+        assert!(!d.overdue(0, 20.0)); // nothing outstanding
+        // fog 1 untouched
+        assert!(!d.primed(1));
+    }
+
+    #[test]
+    fn detector_deadline_has_a_floor() {
+        let mut d = EwmaDetector::new(1);
+        d.complete(0, 0.001);
+        assert_eq!(d.deadline(0), EWMA_FLOOR_S);
+    }
+
+    #[test]
+    fn window_damage_measures_the_hole() {
+        // 10s run; healthy completions every 0.5s at 10ms latency,
+        // except a hole in [4, 6) where only one slow completion lands
+        let mut samples = Vec::new();
+        let mut t = 0.25;
+        while t < 10.0 {
+            if !(4.0..6.0).contains(&t) {
+                samples.push((t, 0.010, true));
+            }
+            t += 0.5;
+        }
+        samples.push((5.5, 0.300, true));
+        let shed = vec![4.2, 4.7, 8.0];
+        let (dp99, dip, shed_n) =
+            window_damage(&samples, &shed, 4.0, 6.0, 10.0);
+        assert!(dp99 > 200.0, "p99 delta {dp99}");
+        assert!(dip > 0.5 && dip <= 1.0, "dip {dip}");
+        assert_eq!(shed_n, 2);
+        // empty window → no damage
+        let (z1, z2, z3) = window_damage(&samples, &[], 0.0, 0.0, 10.0);
+        assert_eq!((z1, z2, z3), (0.0, 0.0, 0));
+    }
+}

@@ -58,6 +58,7 @@ use crate::graph::{DatasetSpec, Graph};
 use crate::obs::recorder::{Recorder, Ring};
 use crate::obs::span::{Phase, SpanEvent, NO_TENANT};
 use crate::profile::PerfModel;
+use crate::runtime::kernels::DEFAULT_TASK_DEADLINE_S;
 use crate::runtime::{Engine, EngineError};
 use crate::scheduler::diffusion::estimate_times;
 use crate::scheduler::{schedule, SchedulerConfig, SchedulerDecision};
@@ -68,6 +69,8 @@ use crate::util::json::{arr, num, obj, s, Json};
 
 use super::arrival::ArrivalProcess;
 use super::batcher::{bucket, MicroBatcher};
+use super::chaos::{window_damage, ChaosPlan, ChaosReport,
+                   EwmaDetector, FaultKind, FaultOutcome, FaultSpec};
 use super::measured::{BucketRow, MeasuredExec};
 use super::sim::{report_json, ExecMode, LoadtestReport,
                  PipelineReport, TrafficConfig};
@@ -97,6 +100,158 @@ struct DeferredBatch {
     slot: usize,
     t_form: f64,
     coll_done: f64,
+    /// 1 / link bandwidth factor at formation time (1.0 when no link
+    /// fault was active): the deferred sync share is priced with the
+    /// conditions the batch was released under, not collection-time
+    /// conditions, so the deferred path stays order-deterministic.
+    link_inv: f64,
+}
+
+/// Live chaos state for one fabric run: the seeded fault schedule, the
+/// EWMA straggler/crash detector, per-fault detection and recovery
+/// marks, and the completion/shed samples SLO damage is computed from
+/// when the run summarizes.
+struct ChaosRuntime {
+    plan: ChaosPlan,
+    det: EwmaDetector,
+    /// Per fault (canonical plan order): virtual detection time.
+    det_t: Vec<Option<f64>>,
+    /// Per fault: virtual recovery time.
+    rec_t: Vec<Option<f64>>,
+    /// Per fault: the emergency replan already evacuated this crash.
+    evacuated: Vec<bool>,
+    /// Per fault: batches that needed a hedged/detoured dispatch while
+    /// the fault was active.
+    hedge_per_fault: Vec<u64>,
+    /// Completion records `(finish_t, latency_s, within_slo)`.
+    samples: Vec<(f64, f64, bool)>,
+    /// Arrival times of requests shed while queues were full.
+    shed_times: Vec<f64>,
+    /// Masks last pushed into the measured executors, so the fabric
+    /// only quiesces the pipelined window when the masks change.
+    applied: Option<(Vec<bool>, Vec<f64>)>,
+    /// Latest accounted batch finish (virtual) — the "now" emergency
+    /// recovery decisions run at.
+    last_finish: f64,
+    task_deadline_s: f64,
+}
+
+impl ChaosRuntime {
+    fn new(plan: ChaosPlan, n_fogs: usize,
+           task_deadline_s: f64) -> ChaosRuntime {
+        let nf = plan.faults.len();
+        ChaosRuntime {
+            plan,
+            det: EwmaDetector::new(n_fogs),
+            det_t: vec![None; nf],
+            rec_t: vec![None; nf],
+            evacuated: vec![false; nf],
+            hedge_per_fault: vec![0; nf],
+            samples: Vec::new(),
+            shed_times: Vec::new(),
+            applied: None,
+            last_finish: 0.0,
+            task_deadline_s,
+        }
+    }
+
+    /// Has some crash fault on `fog` already been evacuated? (Its
+    /// partitions are gone, so the fog prices at zero afterwards.)
+    fn evacuated_fog(&self, fog: usize) -> bool {
+        self.plan.faults.iter().enumerate().any(|(fi, f)| {
+            matches!(f.spec.kind, FaultKind::Crash { fog: g, .. }
+                     if g == fog)
+                && self.evacuated[fi]
+        })
+    }
+
+    /// Feed one accounted batch into the detector and run per-class
+    /// detection/recovery bookkeeping at the batch's finish time.
+    /// `per_fog` is the batch's per-fog virtual execution seconds (0 =
+    /// no work on that fog).
+    fn observe_batch(&mut self, start_exec: f64, finish: f64,
+                     per_fog: &[f64]) {
+        self.last_finish = self.last_finish.max(finish);
+        for (j, &d) in per_fog.iter().enumerate() {
+            if d <= 0.0 {
+                continue;
+            }
+            self.det.start(j, start_exec);
+            if self.plan.crashed(j, start_exec) {
+                // a dead fog never answers: leave the task outstanding
+                // so it keeps aging toward the EWMA deadline, and
+                // attribute the hedged dispatch to the fault
+                for (fi, f) in self.plan.faults.iter().enumerate() {
+                    if matches!(f.spec.kind,
+                                FaultKind::Crash { fog: g, .. }
+                                if g == j)
+                        && start_exec >= f.t_on
+                    {
+                        self.hedge_per_fault[fi] += 1;
+                    }
+                }
+                continue;
+            }
+            // straggler detection compares the sample against the
+            // deadline that existed BEFORE the sample updates it
+            if self.det.primed(j) && d > self.det.deadline(j) {
+                for (fi, f) in self.plan.faults.iter().enumerate() {
+                    if self.det_t[fi].is_none()
+                        && finish >= f.t_on
+                        && matches!(f.spec.kind,
+                                    FaultKind::Slow { fog: g, .. }
+                                    if g == j)
+                    {
+                        self.det_t[fi] = Some(finish);
+                    }
+                }
+            }
+            self.det.complete(j, d);
+        }
+        for fi in 0..self.plan.faults.len() {
+            let f = self.plan.faults[fi];
+            match f.spec.kind {
+                FaultKind::Crash { fog, rejoin } => {
+                    if self.det_t[fi].is_none()
+                        && finish >= f.t_on
+                        && self.det.overdue(fog, finish)
+                    {
+                        self.det_t[fi] = Some(finish);
+                    }
+                    if self.rec_t[fi].is_none() {
+                        if let Some(r) = rejoin {
+                            if finish >= r {
+                                self.rec_t[fi] = Some(finish);
+                            }
+                        }
+                    }
+                }
+                FaultKind::Slow { until, .. } => {
+                    if self.rec_t[fi].is_none() {
+                        if let Some(u) = until {
+                            if finish >= u {
+                                self.rec_t[fi] = Some(finish);
+                            }
+                        }
+                    }
+                }
+                FaultKind::Link { until, .. } => {
+                    // a degraded uplink is visible the moment a batch
+                    // priced under it completes
+                    if self.det_t[fi].is_none() && finish >= f.t_on {
+                        self.det_t[fi] = Some(finish);
+                    }
+                    if self.rec_t[fi].is_none() {
+                        if let Some(u) = until {
+                            if finish >= u {
+                                self.rec_t[fi] = Some(finish);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
 }
 
 /// Account one collected pipelined batch into the simulation timeline
@@ -127,6 +282,7 @@ fn account_pipelined_batch(
     rec: &Arc<Recorder>,
     ring: &Arc<Ring>,
     stall_total: &mut f64,
+    chaos: Option<&mut ChaosRuntime>,
 ) {
     let tid = meta.tenant as u32;
     let reg = rec.registry();
@@ -153,12 +309,31 @@ fn account_pipelined_batch(
     let step = start_exec.max(0.0) as usize;
     let mut t_cursor = start_exec;
     let mut total = 0f64;
+    let n = node_mult.len();
+    let mut fog_dur: Vec<f64> = if chaos.is_some() {
+        vec![0.0; n]
+    } else {
+        Vec::new()
+    };
     for (layer, layer_times) in layer_seconds.into_iter().enumerate() {
         let mut mx = 0f64;
         for (j, &h) in layer_times.iter().enumerate() {
             let load = load_trace.at(step, j).clamp(0.0, 0.85);
-            let scaled = h * node_mult[j] / (1.0 - load);
+            let mut scaled = h * node_mult[j] / (1.0 - load);
+            if let Some(c) = &chaos {
+                // a dead fog's task ages to the EWMA deadline on the
+                // virtual timeline before its hedge's result (already
+                // attributed to this fog by task tag) lands
+                if c.plan.crashed(j, start_exec)
+                    && !c.evacuated_fog(j)
+                {
+                    scaled += c.det.deadline(j);
+                }
+            }
             mx = mx.max(scaled);
+            if !fog_dur.is_empty() {
+                fog_dur[j] += scaled;
+            }
             if scaled > 0.0 {
                 let mut ev = SpanEvent::new(Phase::Kernel, tid,
                                             us(t_cursor), us(scaled))
@@ -172,8 +347,9 @@ fn account_pipelined_batch(
         t_cursor += mx;
         total += mx;
     }
-    let sync_t =
-        services[meta.service].base_sync_s * meta.slot as f64;
+    let sync_t = services[meta.service].base_sync_s
+        * meta.slot as f64
+        * meta.link_inv;
     for j in 0..node_mult.len() {
         rec.span(ring, SpanEvent::new(Phase::Sync, tid, us(t_cursor),
                                       us(sync_t))
@@ -196,9 +372,157 @@ fn account_pipelined_batch(
         latencies.push(finish - a);
         t.latencies.push(finish - a);
     }
+    if let Some(c) = chaos {
+        let slo = t.slo.slo_s;
+        for &a in &meta.arrivals {
+            let l = finish - a;
+            c.samples.push((finish, l, l <= slo));
+        }
+        c.observe_batch(start_exec, finish, &fog_dur);
+    }
     rec.span(ring, SpanEvent::new(Phase::Reply, tid, us(finish), 0.0)
         .count(meta.b));
     reg.record_phase(tid, -1, Phase::Reply, 0.0);
+}
+
+/// Emergency replan: once a crash is DETECTED and the fog is still
+/// dead (no rejoin yet), evacuate its partitions through the existing
+/// dual-mode rescheduler — the dead fog's ω is priced prohibitively so
+/// diffusion/IEP moves everything off it — and charge the evacuation
+/// transfer as the distinct `Phase::Recovery` on the collection
+/// station. The pipelined window was already drained by the caller
+/// (replan barrier), so rebuilds see a quiesced plan.
+#[allow(clippy::too_many_arguments)]
+fn evacuate_detected_crashes(
+    c: &mut ChaosRuntime,
+    services: &mut [Service<'_>],
+    aggregate: &mut LoadtestReport,
+    cluster: &Cluster,
+    cfg: &SchedulerConfig,
+    coll_free: &mut f64,
+    rec: &Arc<Recorder>,
+    ring: &Arc<Ring>,
+) -> Result<(), EngineError> {
+    let now = c.last_finish;
+    // a fog that rejoined before we got to evacuate needs no replan;
+    // close the fault out so pipelined callers stop forcing barriers
+    for (fi, f) in c.plan.faults.iter().enumerate() {
+        if let FaultKind::Crash { rejoin: Some(r), .. } = f.spec.kind {
+            if c.det_t[fi].is_some() && !c.evacuated[fi] && now >= r {
+                c.evacuated[fi] = true;
+            }
+        }
+    }
+    let todo: Vec<(usize, usize)> = c
+        .plan
+        .faults
+        .iter()
+        .enumerate()
+        .filter_map(|(fi, f)| match f.spec.kind {
+            FaultKind::Crash { fog, rejoin }
+                if c.det_t[fi].is_some()
+                    && !c.evacuated[fi]
+                    && rejoin.map_or(true, |r| now < r) =>
+            {
+                Some((fi, fog))
+            }
+            _ => None,
+        })
+        .collect();
+    if todo.is_empty() {
+        return Ok(());
+    }
+    let n = cluster.len();
+    let us = |t: f64| t * 1e6;
+    let reg = rec.registry();
+    for (fi, dead) in todo {
+        let mut evac_s = 0f64;
+        let mut moved_any = false;
+        for svc in services.iter_mut() {
+            if n <= 1
+                || matches!(svc.opts.placement,
+                            Placement::SingleNode(_))
+            {
+                continue;
+            }
+            let eff: Vec<PerfModel> = match &svc.measured {
+                Some(m) => m.scaled_omegas(),
+                None => svc.omegas.clone(),
+            };
+            // price every currently-dead fog out of the placement; the
+            // detector's deadline is the evidence, the rescheduler is
+            // the mechanism
+            let scaled: Vec<PerfModel> = (0..n)
+                .map(|j| {
+                    if j == dead || c.plan.crashed(j, now) {
+                        scaled_model(&eff[j], 1e6)
+                    } else {
+                        scaled_model(&eff[j], 1.0)
+                    }
+                })
+                .collect();
+            let real_times =
+                estimate_times(svc.g, &svc.assignment, n, &scaled);
+            let decision = schedule(
+                svc.g, &svc.spec, cluster, &svc.opts,
+                &mut svc.assignment, &real_times, &scaled, cfg,
+            );
+            rec.span(ring, SpanEvent::new(Phase::Replan, NO_TENANT,
+                                          us(now), 0.0)
+                .because("fault-evacuation"));
+            reg.record_phase(NO_TENANT, -1, Phase::Replan, 0.0);
+            let moved = match decision {
+                SchedulerDecision::Keep => false,
+                SchedulerDecision::Diffused(_) => {
+                    svc.diffusions += 1;
+                    aggregate.slo.diffusions += 1;
+                    true
+                }
+                SchedulerDecision::Replanned => {
+                    svc.replans += 1;
+                    aggregate.slo.replans += 1;
+                    true
+                }
+            };
+            if moved {
+                moved_any = true;
+                if let Some(m) = svc.measured.as_mut() {
+                    m.rebuild(svc.g, &svc.assignment, &svc.model)?;
+                    svc.rebuilds += 1;
+                }
+                svc.host_times =
+                    estimate_times(svc.g, &svc.assignment, n, &eff);
+                svc.coll_s = collection_transfer_s(
+                    svc.g, &svc.payload, svc.dims, &svc.assignment,
+                    cluster, &svc.opts,
+                );
+                evac_s += svc.coll_s;
+                rec.span(ring,
+                         SpanEvent::new(Phase::Recovery, NO_TENANT,
+                                        us(now), us(svc.coll_s))
+                             .fog(dead)
+                             .because("evacuate-dead-fog"));
+                reg.record_phase(NO_TENANT, dead as i32,
+                                 Phase::Recovery, svc.coll_s);
+            }
+        }
+        // only a replan that actually moved work counts as evacuated —
+        // `evacuated_fog` prices the fog at zero afterwards, which is
+        // only sound once its partitions are gone
+        c.evacuated[fi] = moved_any;
+        if moved_any {
+            // the evacuation transfer occupies the collection station
+            let done = now + evac_s;
+            *coll_free = coll_free.max(done);
+            if c.rec_t[fi].is_none() {
+                c.rec_t[fi] = Some(done);
+            }
+        }
+    }
+    // measured executors were rebuilt: force a mask re-push so the new
+    // pipelines learn the crashed/slow state before the next batch
+    c.applied = None;
+    Ok(())
 }
 
 /// One tenant plus the workload inputs it runs against. `opts` must be
@@ -462,9 +786,54 @@ pub fn run_fabric_traced<'a>(
     engine: &mut Engine,
     rec: &Arc<Recorder>,
 ) -> Result<FabricReport, EngineError> {
+    run_fabric_chaos(cluster, inputs, base, fair, engine, rec, &[],
+                     DEFAULT_TASK_DEADLINE_S)
+}
+
+/// `run_fabric_traced` plus the chaos plane: a seeded fault schedule
+/// (`--fault` specs, canonicalized and jittered by `ChaosPlan` so runs
+/// are bit-deterministic and invariant under declaration order) is
+/// applied to the run — crashed fogs withhold replies (measured mode
+/// injects `Inject::DropReply` into the worker; the pipeline hedges
+/// the task to a healthy fog after `task_deadline_s`), slow fogs price
+/// and execute at `factor`× speed, and degraded links inflate
+/// collection/sync transfer shares. An EWMA detector over per-fog
+/// task durations flags dead/straggling fogs; a detected crash
+/// triggers an emergency evacuation replan (`Phase::Recovery`).
+/// Outcomes land in the report's `faults` section: per fault,
+/// time-to-detect, time-to-recover and SLO damage over the fault
+/// window. With `faults` empty this is exactly `run_fabric_traced` —
+/// every chaos hook is gated, so reports stay byte-identical.
+#[allow(clippy::too_many_arguments)]
+pub fn run_fabric_chaos<'a>(
+    cluster: &Cluster,
+    inputs: Vec<TenantInput<'a>>,
+    base: &TrafficConfig,
+    fair: FairPolicy,
+    engine: &mut Engine,
+    rec: &Arc<Recorder>,
+    faults: &[FaultSpec],
+    task_deadline_s: f64,
+) -> Result<FabricReport, EngineError> {
     assert!(!inputs.is_empty(), "fabric needs at least one tenant");
     assert!(base.duration_s > 0.0);
     let n = cluster.len();
+    if !(task_deadline_s.is_finite() && task_deadline_s > 0.0) {
+        return Err(EngineError::Unsupported(format!(
+            "task deadline must be positive and finite (got \
+             {task_deadline_s})"
+        )));
+    }
+    for f in faults {
+        f.validate(n, base.duration_s)
+            .map_err(EngineError::Unsupported)?;
+    }
+    let mut chaos = if faults.is_empty() {
+        None
+    } else {
+        Some(ChaosRuntime::new(ChaosPlan::new(faults, base.seed), n,
+                               task_deadline_s))
+    };
     // same recoverable-error contract as kernel_threads: a zero or
     // absurd depth is an input error, not a panic (CLI exits 2 on it)
     if base.pipeline_depth == 0
@@ -706,6 +1075,9 @@ pub fn run_fabric_traced<'a>(
                 m.set_pipeline_depth(pd)
                     .map_err(EngineError::Unsupported)?;
             }
+            // the hung-worker backstop (`--task-deadline`) applies to
+            // the shared pool's barrier dispatch too, chaos or not
+            m.pool_handle().set_task_deadline(task_deadline_s);
             svc.measured = Some(m);
         }
         svc.host_times =
@@ -884,7 +1256,14 @@ pub fn run_fabric_traced<'a>(
                     &mut finishes, &mut exec_free, &mut exec_busy,
                     &mut batch_total, &mut latencies, pd, &node_mult,
                     &trace, rec, &ring, &mut stall_total,
+                    chaos.as_mut(),
                 );
+            }
+            if let Some(c) = chaos.as_mut() {
+                evacuate_detected_crashes(
+                    c, &mut services, &mut aggregate, cluster, &cfg,
+                    &mut coll_free, rec, &ring,
+                )?;
             }
             let step = next_sched as usize;
             for svc in services.iter_mut() {
@@ -898,8 +1277,16 @@ pub fn run_fabric_traced<'a>(
                 let scaled: Vec<PerfModel> = (0..n)
                     .map(|j| {
                         let load = trace.at(step, j).clamp(0.0, 0.85);
-                        scaled_model(&eff_omegas[j],
-                                     node_mult[j] / (1.0 - load))
+                        let mut k = node_mult[j] / (1.0 - load);
+                        // a periodic replan must not move work back
+                        // onto a fog the chaos plan currently holds
+                        // dead — price it out, like the evacuation does
+                        if let Some(c) = &chaos {
+                            if c.plan.crashed(j, next_sched) {
+                                k *= 1e6;
+                            }
+                        }
+                        scaled_model(&eff_omegas[j], k)
                     })
                     .collect();
                 let real_times =
@@ -961,6 +1348,9 @@ pub fn run_fabric_traced<'a>(
                 } else {
                     t.slo.shed += 1;
                     aggregate.slo.shed += 1;
+                    if let Some(c) = chaos.as_mut() {
+                        c.shed_times.push(t_arr);
+                    }
                     "queue-full-shed"
                 };
                 rec.span(&ring,
@@ -1033,15 +1423,88 @@ pub fn run_fabric_traced<'a>(
                         &mut exec_free, &mut exec_busy,
                         &mut batch_total, &mut latencies, pd,
                         &node_mult, &trace, rec, &ring,
-                        &mut stall_total,
+                        &mut stall_total, chaos.as_mut(),
                     );
                 }
             }
+            // chaos: a crash detected while draining forces the full
+            // replan barrier NOW — the evacuation rebuild must see a
+            // quiesced pipeline, and waiting for the next scheduler
+            // tick would leave the dead fog timing out every batch
+            if pipelined {
+                let need_evac = chaos.as_ref().map_or(false, |c| {
+                    c.plan.faults.iter().enumerate().any(|(fi, f)| {
+                        matches!(f.spec.kind, FaultKind::Crash { .. })
+                            && c.det_t[fi].is_some()
+                            && !c.evacuated[fi]
+                    })
+                });
+                if need_evac {
+                    while let Some(meta) = deferred.pop_front() {
+                        account_pipelined_batch(
+                            meta, &mut services, &mut tenants,
+                            &mut aggregate, &mut finishes,
+                            &mut exec_free, &mut exec_busy,
+                            &mut batch_total, &mut latencies, pd,
+                            &node_mult, &trace, rec, &ring,
+                            &mut stall_total, chaos.as_mut(),
+                        );
+                    }
+                    if let Some(c) = chaos.as_mut() {
+                        evacuate_detected_crashes(
+                            c, &mut services, &mut aggregate, cluster,
+                            &cfg, &mut coll_free, rec, &ring,
+                        )?;
+                    }
+                }
+            }
+            // chaos: push the fault masks as of this batch's formation
+            // into the measured executors; a mask CHANGE (fault onset
+            // or rejoin) first quiesces the pipelined window so no
+            // in-flight batch straddles two fault states
+            if base.exec == ExecMode::Measured {
+                if let Some(c) = chaos.as_mut() {
+                    let cur = (
+                        (0..n)
+                            .map(|j| c.plan.crashed(j, t_form))
+                            .collect::<Vec<_>>(),
+                        (0..n)
+                            .map(|j| c.plan.slow_factor(j, t_form))
+                            .collect::<Vec<_>>(),
+                    );
+                    if c.applied.as_ref() != Some(&cur) {
+                        while let Some(meta) = deferred.pop_front() {
+                            account_pipelined_batch(
+                                meta, &mut services, &mut tenants,
+                                &mut aggregate, &mut finishes,
+                                &mut exec_free, &mut exec_busy,
+                                &mut batch_total, &mut latencies, pd,
+                                &node_mult, &trace, rec, &ring,
+                                &mut stall_total, Some(&mut *c),
+                            );
+                        }
+                        for svc in services.iter_mut() {
+                            if let Some(m) = svc.measured.as_mut() {
+                                m.set_chaos(cur.0.clone(),
+                                            cur.1.clone(),
+                                            c.task_deadline_s);
+                            }
+                        }
+                        c.applied = Some(cur);
+                    }
+                }
+            }
             let svc = &mut services[svc_idx];
+            // a degraded uplink throttles this batch's collection
+            // window and its sync share (1.0 — exact — when healthy)
+            let link_inv = chaos
+                .as_ref()
+                .map_or(1.0, |c| 1.0 / c.plan.link_factor(t_form));
             let coll_time = svc.coll_s
                 * (COLL_FIXED_FRAC
                     + (1.0 - COLL_FIXED_FRAC) * b as f64
-                        / base.batch.max_batch as f64);
+                        / base.batch.max_batch as f64)
+                * link_inv;
             let coll_done = t_form + coll_time;
             let tid = sel as u32;
             let oldest = batch.first().copied().unwrap_or(t_form);
@@ -1083,6 +1546,7 @@ pub fn run_fabric_traced<'a>(
                     slot,
                     t_form,
                     coll_done,
+                    link_inv,
                 });
                 coll_free = coll_done;
                 continue;
@@ -1096,6 +1560,13 @@ pub fn run_fabric_traced<'a>(
             } else {
                 0.0
             });
+            // per-fog virtual exec seconds for the chaos detector
+            // (empty — and never touched — on fault-free runs)
+            let mut fog_dur: Vec<f64> = if chaos.is_some() {
+                vec![0.0; n]
+            } else {
+                Vec::new()
+            };
             let exec_time = if let Some(m) = svc.measured.as_mut() {
                 // real batched kernels at the padded bucket size; scale
                 // each fog's measured host time by its capability and
@@ -1110,8 +1581,23 @@ pub fn run_fabric_traced<'a>(
                     let mut mx = 0f64;
                     for (j, &h) in layer_times.iter().enumerate() {
                         let load = trace.at(step, j).clamp(0.0, 0.85);
-                        let scaled = h * node_mult[j] / (1.0 - load);
+                        let mut scaled =
+                            h * node_mult[j] / (1.0 - load);
+                        if let Some(c) = &chaos {
+                            // a dead fog's task ages to the EWMA
+                            // deadline on the virtual timeline before
+                            // its hedge's reply (attributed to this
+                            // fog by task tag) lands
+                            if c.plan.crashed(j, start_exec)
+                                && !c.evacuated_fog(j)
+                            {
+                                scaled += c.det.deadline(j);
+                            }
+                        }
                         mx = mx.max(scaled);
+                        if !fog_dur.is_empty() {
+                            fog_dur[j] += scaled;
+                        }
                         if scaled > 0.0 {
                             let mut ev = SpanEvent::new(
                                 Phase::Kernel, tid, us(t_cursor),
@@ -1131,7 +1617,7 @@ pub fn run_fabric_traced<'a>(
                 // the block-diagonal batch ships `slot` copies of the
                 // halo rows, so the (bandwidth-dominated) sync share
                 // scales with the bucket
-                let sync_t = svc.base_sync_s * slot as f64;
+                let sync_t = svc.base_sync_s * slot as f64 * link_inv;
                 for j in 0..n {
                     rec.span(&ring, SpanEvent::new(Phase::Sync, tid,
                                                    us(t_cursor),
@@ -1143,14 +1629,50 @@ pub fn run_fabric_traced<'a>(
                 }
                 total + sync_t
             } else {
-                let per_fog = exec_per_fog(&svc.host_times, &node_mult,
-                                           &trace, start_exec);
+                let mut per_fog = exec_per_fog(&svc.host_times,
+                                               &node_mult, &trace,
+                                               start_exec);
+                if let Some(c) = &chaos {
+                    // slow fogs price at 1/factor; a crashed fog's
+                    // shard waits out the detector deadline and is
+                    // then re-dispatched to the fastest healthy fog
+                    // (first-reply-wins — the dead original never
+                    // answers), unless it was already evacuated
+                    for (j, v) in per_fog.iter_mut().enumerate() {
+                        let sf = c.plan.slow_factor(j, start_exec);
+                        if sf < 1.0 {
+                            *v /= sf;
+                        }
+                    }
+                    let healthy_min = per_fog
+                        .iter()
+                        .enumerate()
+                        .filter(|&(j, _)| {
+                            !c.plan.crashed(j, start_exec)
+                        })
+                        .map(|(_, &v)| v)
+                        .fold(f64::INFINITY, f64::min);
+                    for (j, v) in per_fog.iter_mut().enumerate() {
+                        if c.plan.crashed(j, start_exec) {
+                            *v = if c.evacuated_fog(j) {
+                                0.0
+                            } else if healthy_min.is_finite() {
+                                c.det.deadline(j) + healthy_min
+                            } else {
+                                c.det.deadline(j)
+                            };
+                        }
+                    }
+                }
                 let slowest =
                     per_fog.iter().cloned().fold(0f64, f64::max);
                 let scale = EXEC_FIXED_FRAC
                     + (1.0 - EXEC_FIXED_FRAC) * slot as f64;
                 for (j, &h) in per_fog.iter().enumerate() {
                     let k = h * scale;
+                    if !fog_dur.is_empty() {
+                        fog_dur[j] = k;
+                    }
                     if k > 0.0 {
                         rec.span(&ring,
                                  SpanEvent::new(Phase::Kernel, tid,
@@ -1161,7 +1683,7 @@ pub fn run_fabric_traced<'a>(
                                          k);
                     }
                 }
-                let sync_t = svc.base_sync_s * scale;
+                let sync_t = svc.base_sync_s * scale * link_inv;
                 let barrier_end = start_exec + slowest * scale;
                 for j in 0..n {
                     rec.span(&ring, SpanEvent::new(Phase::Sync, tid,
@@ -1172,7 +1694,12 @@ pub fn run_fabric_traced<'a>(
                     reg.record_phase(tid, j as i32, Phase::Sync,
                                      sync_t);
                 }
-                (slowest + svc.base_sync_s) * scale
+                if link_inv == 1.0 {
+                    // bit-identical to the pre-chaos arithmetic
+                    (slowest + svc.base_sync_s) * scale
+                } else {
+                    slowest * scale + sync_t
+                }
             };
             let finish = start_exec + exec_time;
             coll_free = coll_done;
@@ -1193,6 +1720,20 @@ pub fn run_fabric_traced<'a>(
                      SpanEvent::new(Phase::Reply, tid, us(finish), 0.0)
                          .count(b));
             reg.record_phase(tid, -1, Phase::Reply, 0.0);
+            if let Some(c) = chaos.as_mut() {
+                let slo = tenants[sel].tenant.slo_s;
+                for &a in &batch {
+                    let l = finish - a;
+                    c.samples.push((finish, l, l <= slo));
+                }
+                c.observe_batch(start_exec, finish, &fog_dur);
+                // non-pipelined path: nothing is in flight, so a
+                // detection can evacuate immediately
+                evacuate_detected_crashes(
+                    c, &mut services, &mut aggregate, cluster, &cfg,
+                    &mut coll_free, rec, &ring,
+                )?;
+            }
         }
     }
 
@@ -1203,7 +1744,7 @@ pub fn run_fabric_traced<'a>(
             meta, &mut services, &mut tenants, &mut aggregate,
             &mut finishes, &mut exec_free, &mut exec_busy,
             &mut batch_total, &mut latencies, pd, &node_mult, &trace,
-            rec, &ring, &mut stall_total,
+            rec, &ring, &mut stall_total, chaos.as_mut(),
         );
     }
 
@@ -1307,6 +1848,60 @@ pub fn run_fabric_traced<'a>(
         .map(|t| t.slo.goodput_rps / t.weight.max(1e-12))
         .collect();
     report.fairness_jain = jain_index(&weighted);
+    if let Some(c) = chaos {
+        // hedge totals: measured mode reads the pipelines' task-tag
+        // accounting (wins = replica replied first, waste = late loser
+        // discarded); analytic mode counts the priced re-dispatches
+        let (mut hw, mut hl) = (0u64, 0u64);
+        if base.exec == ExecMode::Measured {
+            for svc in &services {
+                if let Some(m) = &svc.measured {
+                    let (w, l) = m.hedge_stats();
+                    hw += w;
+                    hl += l;
+                }
+            }
+        } else {
+            hw = c.hedge_per_fault.iter().sum();
+        }
+        let mut outcomes = Vec::new();
+        for (fi, f) in c.plan.faults.iter().enumerate() {
+            // SLO damage over the fault's open window: onset until
+            // recovery (or end of run if it never recovered)
+            let t1 = c.rec_t[fi].unwrap_or(base.duration_s);
+            let (p99_delta_ms, goodput_dip, shed_during) =
+                window_damage(&c.samples, &c.shed_times, f.t_on, t1,
+                              base.duration_s);
+            let (fog, peer) = match f.spec.kind {
+                FaultKind::Crash { fog, .. }
+                | FaultKind::Slow { fog, .. } => (fog as i32, -1),
+                FaultKind::Link { src, dst, .. } => {
+                    (src as i32, dst as i32)
+                }
+            };
+            outcomes.push(FaultOutcome {
+                class: f.spec.kind.class(),
+                fog,
+                peer,
+                t_fault_s: f.t_on,
+                time_to_detect_s: c.det_t[fi]
+                    .map_or(-1.0, |d| d - f.t_on),
+                time_to_recover_s: c.rec_t[fi]
+                    .map_or(-1.0, |r| r - f.t_on),
+                p99_delta_ms,
+                goodput_dip,
+                shed_during,
+                hedges: c.hedge_per_fault[fi],
+                recovered: c.rec_t[fi].is_some(),
+            });
+        }
+        report.aggregate.faults = Some(ChaosReport {
+            task_deadline_s: c.task_deadline_s,
+            hedge_wins: hw,
+            hedge_waste: hl,
+            outcomes,
+        });
+    }
     Ok(report)
 }
 

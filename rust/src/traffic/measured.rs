@@ -13,7 +13,8 @@ use std::collections::{BTreeMap, VecDeque};
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::exec::{BatchedBspPlan, BspPipeline, BspResult, ExecTrace};
+use crate::exec::{BatchedBspPlan, BspPipeline, BspResult, ExecTrace,
+                  PipelineChaos};
 use crate::graph::Graph;
 use crate::obs::recorder::Recorder;
 use crate::profile::{Cardinality, Observation, OnlineProfiler,
@@ -92,6 +93,14 @@ pub struct MeasuredExec {
     /// the denominator of `pipeline_occupancy`.
     window_start: Option<Instant>,
     window_s: f64,
+    /// Chaos masks currently applied to the pipeline: per-fog crashed
+    /// flags, per-fog speed multipliers, and the task deadline that
+    /// triggers hedged re-dispatch. `None` keeps every execution path
+    /// bit-identical to the fault-free executor.
+    chaos_cfg: Option<(Vec<bool>, Vec<f64>, f64)>,
+    /// Hedge (wins, waste) carried over from pipelines retired by
+    /// `rebuild`, so run totals survive mid-run replans.
+    hedge_acc: (u64, u64),
 }
 
 impl MeasuredExec {
@@ -186,6 +195,8 @@ impl MeasuredExec {
             busy_s: vec![0.0; n_fogs],
             window_start: None,
             window_s: 0.0,
+            chaos_cfg: None,
+            hedge_acc: (0, 0),
         })
     }
 
@@ -226,6 +237,16 @@ impl MeasuredExec {
     /// so kernel timings — and the profiler observations — never fold
     /// in channel queueing.
     pub fn run_batch(&mut self, bucket: usize) -> Vec<Vec<f64>> {
+        // Under chaos the barrier path would wedge on a crashed fog
+        // (its worker withholds the reply), so route the batch through
+        // the tagged pipeline: hedged re-dispatch and the task
+        // deadline live in `BspPipeline::collect`. Submitting then
+        // immediately collecting keeps barrier semantics (one batch in
+        // flight), so accounting is unchanged.
+        if self.chaos_cfg.is_some() {
+            self.submit_batch(bucket);
+            return self.collect_batch();
+        }
         self.mark_window_start();
         let res = self.plan.execute_timings_traced(
             &self.features,
@@ -323,6 +344,47 @@ impl MeasuredExec {
     /// The configured `--pipeline-depth`.
     pub fn pipeline_depth(&self) -> usize {
         self.pipeline_depth
+    }
+
+    /// Apply (or refresh) chaos masks: per-fog `crashed` flags (the
+    /// worker withholds its reply — the exact dead-node signature),
+    /// per-fog `speed` multipliers in (0, 1] (1.0 = healthy), and the
+    /// task deadline in seconds after which an unanswered `(batch,
+    /// layer, fog)` task is hedged to another fog. Lazily creates a
+    /// depth-1 pipeline when the executor is still on the barrier
+    /// path, because fault injection needs tagged tasks. Must not be
+    /// called with batches in flight.
+    pub fn set_chaos(&mut self, crashed: Vec<bool>, speed: Vec<f64>,
+                     task_deadline_s: f64) {
+        assert!(
+            self.inflight_buckets.is_empty(),
+            "cannot change chaos masks with batches in flight"
+        );
+        let n = self.plan.n_fogs();
+        assert_eq!(crashed.len(), n, "crashed mask length");
+        assert_eq!(speed.len(), n, "speed mask length");
+        if self.pipeline.is_none() {
+            self.pipeline = Some(BspPipeline::new(n, 1, false));
+        }
+        let pipe = self.pipeline.as_mut().unwrap();
+        pipe.set_chaos(Some(PipelineChaos {
+            crashed: crashed.clone(),
+            speed: speed.clone(),
+        }));
+        pipe.set_task_deadline(task_deadline_s);
+        self.chaos_cfg = Some((crashed, speed, task_deadline_s));
+    }
+
+    /// Cumulative hedge (wins, waste) across the whole run, including
+    /// pipelines retired by replan rebuilds.
+    pub fn hedge_stats(&self) -> (u64, u64) {
+        let (mut w, mut l) = self.hedge_acc;
+        if let Some(pipe) = &self.pipeline {
+            let (pw, pl) = pipe.hedge_stats();
+            w += pw;
+            l += pl;
+        }
+        (w, l)
     }
 
     /// Batches submitted but not yet collected (0 on the barrier
@@ -440,13 +502,26 @@ impl MeasuredExec {
                 Some(ExecTrace::new(&rec, self.plan.n_fogs(), tenant));
         }
         // fresh pipeline over the new plan (tag queues and reply
-        // channel must not straddle a re-extraction)
-        if self.pipeline_depth > 1 {
+        // channel must not straddle a re-extraction); hedge totals
+        // from the retired pipeline survive in the accumulator
+        if let Some(pipe) = &self.pipeline {
+            let (w, l) = pipe.hedge_stats();
+            self.hedge_acc.0 += w;
+            self.hedge_acc.1 += l;
+        }
+        if self.pipeline_depth > 1 || self.chaos_cfg.is_some() {
             self.pipeline = Some(BspPipeline::new(
                 self.plan.n_fogs(),
-                self.pipeline_depth,
+                self.pipeline_depth.max(1),
                 false,
             ));
+        } else {
+            self.pipeline = None;
+        }
+        if let Some((crashed, speed, dl)) = self.chaos_cfg.clone() {
+            let pipe = self.pipeline.as_mut().unwrap();
+            pipe.set_chaos(Some(PipelineChaos { crashed, speed }));
+            pipe.set_task_deadline(dl);
         }
         Ok(())
     }

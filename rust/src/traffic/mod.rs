@@ -15,9 +15,17 @@
 //! `(model, dataset)`, all sharing one persistent worker pool — with
 //! the observations fed back into profiler calibration (see
 //! `measured`).
+//!
+//! The chaos plane (`chaos`) injects seeded, repeatable fog faults
+//! (`--fault crash@.. / slow@.. / link@..`) and drives the recovery
+//! machinery: an EWMA straggler detector, hedged re-dispatch on the
+//! measured path, and emergency evacuation of a dead fog's partitions
+//! through the dual-mode rescheduler. Outcomes (time-to-detect,
+//! time-to-recover, SLO damage) land in the report's `faults` section.
 
 pub mod arrival;
 pub mod batcher;
+pub mod chaos;
 pub mod fabric;
 pub mod measured;
 pub mod sim;
@@ -26,12 +34,14 @@ pub mod tenant;
 
 pub use arrival::{ArrivalKind, ArrivalProcess};
 pub use batcher::{bucket, BatchPolicy, MicroBatcher};
+pub use chaos::{chaos_json, ChaosPlan, ChaosReport, EwmaDetector,
+                FaultKind, FaultOutcome, FaultSpec};
 pub use fabric::{fabric_json, jain_index, run_fabric,
-                 run_fabric_traced, FabricReport, PlanCacheEntry,
-                 TenantInput, TenantReport};
+                 run_fabric_chaos, run_fabric_traced, FabricReport,
+                 PlanCacheEntry, TenantInput, TenantReport};
 pub use measured::{BucketRow, MeasuredExec};
 pub use sim::{doc_json, report_json, run_loadtest,
-              run_loadtest_traced, ExecMode, LoadtestReport,
-              PipelineReport, TrafficConfig};
+              run_loadtest_chaos, run_loadtest_traced, ExecMode,
+              LoadtestReport, PipelineReport, TrafficConfig};
 pub use slo::{LatencySummary, QueueTimeline, SloReport};
 pub use tenant::{FairPolicy, Tenant, TenantSpec};

@@ -57,7 +57,8 @@ use crate::util::provenance::{git_rev, utc_date_string};
 
 use super::arrival::ArrivalKind;
 use super::batcher::BatchPolicy;
-use super::fabric::{run_fabric_traced, TenantInput};
+use super::chaos::{chaos_json, ChaosReport, FaultSpec};
+use super::fabric::{run_fabric_chaos, run_fabric_traced, TenantInput};
 use super::measured::BucketRow;
 use super::slo::SloReport;
 use super::tenant::{FairPolicy, Tenant};
@@ -208,6 +209,10 @@ pub struct LoadtestReport {
     /// registry is live even with span tracing off, so this section is
     /// bit-identical with `--trace-out` on or off in analytic mode.
     pub phase_breakdown: Json,
+    /// Chaos outcome — `Some` exactly when the run declared `--fault`
+    /// specs; `None` (and absent from the JSON) otherwise, so
+    /// fault-free reports stay byte-identical to the pre-chaos schema.
+    pub faults: Option<ChaosReport>,
 }
 
 /// Drive the serving stack under a sustained request stream: the
@@ -253,6 +258,37 @@ pub fn run_loadtest_traced(
     };
     let fabric = run_fabric_traced(cluster, vec![input], traffic,
                                    FairPolicy::Drr, engine, rec)?;
+    Ok(fabric.aggregate)
+}
+
+/// `run_loadtest_traced` under a seeded fault schedule: the one-tenant
+/// mapping onto `fabric::run_fabric_chaos`. With `faults` empty this
+/// is exactly `run_loadtest_traced`.
+#[allow(clippy::too_many_arguments)]
+pub fn run_loadtest_chaos(
+    g: &Graph,
+    spec: &DatasetSpec,
+    cluster: &Cluster,
+    opts: &ServeOpts,
+    traffic: &TrafficConfig,
+    omegas: &[PerfModel],
+    engine: &mut Engine,
+    rec: &Arc<Recorder>,
+    faults: &[FaultSpec],
+    task_deadline_s: f64,
+) -> Result<LoadtestReport, EngineError> {
+    assert!(traffic.rps > 0.0 && traffic.duration_s > 0.0);
+    assert_eq!(omegas.len(), cluster.len());
+    let input = TenantInput {
+        tenant: Tenant::legacy(traffic, &opts.model, spec.name),
+        g,
+        spec: *spec,
+        opts: opts.clone(),
+        omegas: omegas.to_vec(),
+    };
+    let fabric = run_fabric_chaos(cluster, vec![input], traffic,
+                                  FairPolicy::Drr, engine, rec,
+                                  faults, task_deadline_s)?;
     Ok(fabric.aggregate)
 }
 
@@ -318,6 +354,11 @@ pub fn report_json(label: &str, traffic: &TrafficConfig,
             arr(p.occupancy.iter().copied().map(num)),
         ));
         fields.push(("pipeline_stall_s", num(p.stall_s)));
+    }
+    // chaos runs only — fault-free reports keep the pre-chaos schema
+    // byte-for-byte (no keys added)
+    if let Some(f) = &r.faults {
+        fields.push(("faults", chaos_json(f)));
     }
     fields.push(("phase_breakdown", r.phase_breakdown.clone()));
     fields.push((

@@ -156,6 +156,26 @@ pub fn parse_pipeline_depth(args: &Args) -> Result<usize, String> {
     }
 }
 
+/// Validated `--task-deadline` seconds (default = the pool's
+/// `DEFAULT_TASK_DEADLINE_S`, passed in by the caller so this module
+/// stays runtime-free). The deadline bounds how long the measured
+/// executor waits on any single fog task before hedging (chaos runs)
+/// or declaring the worker hung — zero, negative, non-finite and
+/// non-numeric values are errors so callers can exit with CLI code 2.
+pub fn parse_task_deadline(args: &Args,
+                           default_s: f64) -> Result<f64, String> {
+    match args.get("task-deadline") {
+        None => Ok(default_s),
+        Some(v) => match v.parse::<f64>() {
+            Ok(s) if s.is_finite() && s > 0.0 => Ok(s),
+            _ => Err(format!(
+                "--task-deadline must be a positive number of \
+                 seconds (got {v})"
+            )),
+        },
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -242,6 +262,20 @@ mod tests {
         assert!(ok(&["--kernel-threads", "65"]).is_err());
         assert!(ok(&["--kernel-threads", "many"]).is_err());
         assert!(ok(&["--kernel-threads", "-2"]).is_err());
+    }
+
+    #[test]
+    fn task_deadline_validation() {
+        let ok = |xs: &[&str]| parse_task_deadline(
+            &Args::parse(&v(xs), &[]), 30.0);
+        assert_eq!(ok(&[]), Ok(30.0));
+        assert_eq!(ok(&["--task-deadline", "0.1"]), Ok(0.1));
+        assert_eq!(ok(&["--task-deadline=5"]), Ok(5.0));
+        assert!(ok(&["--task-deadline", "0"]).is_err());
+        assert!(ok(&["--task-deadline", "-1"]).is_err());
+        assert!(ok(&["--task-deadline", "inf"]).is_err());
+        assert!(ok(&["--task-deadline", "nan"]).is_err());
+        assert!(ok(&["--task-deadline", "soon"]).is_err());
     }
 
     #[test]

@@ -10,7 +10,10 @@
 //! unsharded path for ANY shard width / batch size (row-decomposition
 //! invariance), and the runtime-dispatched AVX2+FMA micro-kernels must
 //! agree with the portable scalar kernels within 1e-5 when the feature
-//! is detected.
+//! is detected. Chaos mode adds the recovery parity oracle: a crashed
+//! fog's hedged re-dispatch and a slowed fog's delayed replies must
+//! reproduce the fault-free barrier outputs bit-for-bit — faults may
+//! only ever change timing, never bytes.
 
 use std::sync::Arc;
 
@@ -651,6 +654,78 @@ fn pipelined_bsp_bitwise_equals_barrier_for_astgcn() {
     assert_eq!(got_a2.outputs, want_a.outputs,
                "astgcn pipelined batch 2 != barrier");
     assert_eq!(pipe.pending(), 0);
+}
+
+/// A crashed fog withholds every reply (`Inject::DropReply` — the
+/// exact dead-node signature), so each of its tasks must be hedged to
+/// a healthy fog after the task deadline. The replica runs the
+/// identical job over identical row ranges, so the assembled outputs
+/// equal the fault-free barrier oracle bit-for-bit — only timing and
+/// the hedge counters change.
+#[test]
+fn hedged_pipeline_bitwise_equals_barrier_under_crash() {
+    let g = seeded_graph();
+    let f_in = g.feature_dim;
+    let assignment: Vec<u32> =
+        (0..g.num_vertices()).map(|v| (v % 3) as u32).collect();
+    let batch = 2;
+    for model in ["gcn", "sage"] {
+        let wb = Arc::new(synth_weights(model, f_in));
+        let plan =
+            BatchedBspPlan::new(&g, &assignment, 3, model).unwrap();
+        let barrier = plan.execute(&g.features, f_in, &wb, batch);
+        let mut pipe = exec::BspPipeline::new(3, 2, true);
+        pipe.set_chaos(Some(exec::PipelineChaos {
+            crashed: vec![false, true, false],
+            speed: vec![1.0; 3],
+        }));
+        // short deadline so the dead fog's tasks hedge quickly
+        pipe.set_task_deadline(0.05);
+        let mut outs = Vec::new();
+        for _ in 0..3 {
+            pipe.submit(&plan, &g.features, f_in, &wb, batch, None);
+            outs.push(pipe.collect(&plan, None));
+        }
+        for (i, r) in outs.iter().enumerate() {
+            assert_eq!(r.out_dim, barrier.out_dim);
+            assert_eq!(r.outputs, barrier.outputs,
+                       "{model}: hedged batch {i} != barrier");
+            assert_eq!(r.sync_bytes, barrier.sync_bytes);
+        }
+        let (wins, _) = pipe.hedge_stats();
+        assert!(wins > 0,
+                "{model}: crashed fog's tasks were never hedged");
+    }
+}
+
+/// A slowed fog still computes and replies — late, never wrong. The
+/// worker returns unchanged bytes with only its reported seconds
+/// inflated, so outputs stay bitwise equal to the barrier oracle and
+/// no hedge fires under the default (generous) task deadline.
+#[test]
+fn slowed_pipeline_bitwise_equals_barrier() {
+    let g = seeded_graph();
+    let f_in = g.feature_dim;
+    let assignment: Vec<u32> =
+        (0..g.num_vertices()).map(|v| (v % 3) as u32).collect();
+    let batch = 2;
+    let wb = Arc::new(synth_weights("gcn", f_in));
+    let plan =
+        BatchedBspPlan::new(&g, &assignment, 3, "gcn").unwrap();
+    let barrier = plan.execute(&g.features, f_in, &wb, batch);
+    let mut pipe = exec::BspPipeline::new(3, 2, true);
+    pipe.set_chaos(Some(exec::PipelineChaos {
+        crashed: vec![false; 3],
+        speed: vec![1.0, 0.25, 1.0],
+    }));
+    for i in 0..2 {
+        pipe.submit(&plan, &g.features, f_in, &wb, batch, None);
+        let r = pipe.collect(&plan, None);
+        assert_eq!(r.outputs, barrier.outputs,
+                   "slowed batch {i} != barrier");
+    }
+    assert_eq!(pipe.hedge_stats(), (0, 0),
+               "a merely slow fog must not trigger hedging");
 }
 
 /// Random row-split points stitched back together must equal the

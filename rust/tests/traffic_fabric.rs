@@ -17,7 +17,14 @@
 //!   pipeline report keys), measured depth-2 runs account every
 //!   offered request and report per-fog occupancy + stall time, and
 //!   out-of-range depths are library-level errors (the CLI maps them
-//!   to exit 2).
+//!   to exit 2);
+//! * the chaos plane: `run_fabric_chaos` with no faults is bitwise
+//!   the fault-free path, fault schedules are bit-deterministic for a
+//!   fixed seed and invariant under `--fault` declaration order, a
+//!   seeded crash is detected + evacuated + reported without wedging
+//!   the run, slow/link faults recover at their `until`, and
+//!   malformed specs / out-of-range ids / bad task deadlines are
+//!   loud errors.
 
 use std::path::Path;
 
@@ -27,10 +34,12 @@ use fograph::net::NetKind;
 use fograph::profile::PerfModel;
 use fograph::runtime::{Engine, EngineKind};
 use fograph::serving::pipeline::{mode_setup, ServeOpts};
-use fograph::traffic::{jain_index, run_fabric, run_loadtest,
-                       ArrivalKind, ExecMode, FabricReport,
-                       FairPolicy, Tenant, TenantInput, TenantSpec,
-                       TrafficConfig};
+use fograph::obs::Recorder;
+use fograph::runtime::kernels::DEFAULT_TASK_DEADLINE_S;
+use fograph::traffic::{jain_index, run_fabric, run_fabric_chaos,
+                       run_loadtest, ArrivalKind, ExecMode,
+                       FabricReport, FairPolicy, FaultSpec, Tenant,
+                       TenantInput, TenantSpec, TrafficConfig};
 
 fn tiny() -> (Graph, DatasetSpec) {
     let (mut g, _) = generate::sbm(400, 2000, 8, 0.85, 3);
@@ -537,5 +546,246 @@ fn malformed_tenant_specs_are_cli_errors() {
     for bad in ["weight=0", "rps=-5", "arrival=sometimes",
                 "weight=", "slo-ms=nan,weight=1", "rps"] {
         assert!(TenantSpec::parse(bad).is_err(), "{bad:?} accepted");
+    }
+}
+
+// ----- chaos plane ------------------------------------------------
+
+/// One-tenant analytic fabric run through the chaos entry point.
+fn chaos_run(g: &Graph, spec: DatasetSpec, cluster: &Cluster,
+             opts: &ServeOpts, omegas: &[PerfModel],
+             traffic: &TrafficConfig, faults: &[FaultSpec],
+             eng: &mut Engine) -> FabricReport {
+    let input = TenantInput {
+        tenant: Tenant::legacy(traffic, "gcn", "tiny"),
+        g,
+        spec,
+        opts: opts.clone(),
+        omegas: omegas.to_vec(),
+    };
+    run_fabric_chaos(cluster, vec![input], traffic, FairPolicy::Drr,
+                     eng, &Recorder::disabled(), faults,
+                     DEFAULT_TASK_DEADLINE_S)
+        .unwrap()
+}
+
+#[test]
+fn chaos_plane_with_no_faults_is_bitwise_fault_free() {
+    let (g, spec) = tiny();
+    let (cluster, opts, omegas) = setup(&g);
+    let traffic = TrafficConfig {
+        rps: 100.0,
+        duration_s: 5.0,
+        seed: 0xC0,
+        ..Default::default()
+    };
+    let mut eng = engine();
+    let input = TenantInput {
+        tenant: Tenant::legacy(&traffic, "gcn", "tiny"),
+        g: &g,
+        spec,
+        opts: opts.clone(),
+        omegas: omegas.clone(),
+    };
+    let plain = run_fabric(&cluster, vec![input], &traffic,
+                           FairPolicy::Drr, &mut eng)
+        .unwrap();
+    let chaosless = chaos_run(&g, spec, &cluster, &opts, &omegas,
+                              &traffic, &[], &mut eng);
+    // the chaos plane compiled in but unarmed must not perturb a
+    // single bit of the fault-free timeline or its report
+    assert_eq!(plain.aggregate.latencies,
+               chaosless.aggregate.latencies);
+    assert_eq!(plain.aggregate.slo.offered,
+               chaosless.aggregate.slo.offered);
+    assert_eq!(plain.aggregate.slo.goodput_rps,
+               chaosless.aggregate.slo.goodput_rps);
+    assert_eq!(plain.aggregate.slo.shed, chaosless.aggregate.slo.shed);
+    assert_eq!(plain.aggregate.exec_utilization,
+               chaosless.aggregate.exec_utilization);
+    assert!(plain.aggregate.faults.is_none());
+    assert!(chaosless.aggregate.faults.is_none());
+}
+
+#[test]
+fn chaos_run_is_deterministic_and_order_invariant() {
+    let (g, spec) = tiny();
+    let (cluster, opts, omegas) = setup(&g);
+    assert!(cluster.len() >= 2, "chaos scenario needs >= 2 fogs");
+    let traffic = TrafficConfig {
+        rps: 90.0,
+        duration_s: 6.0,
+        seed: 0xC1,
+        ..Default::default()
+    };
+    let specs = [
+        "crash@t=2,fog=1,rejoin=4",
+        "slow@t=1,fog=0,factor=0.5,until=5",
+        "link@t=3,src=0,dst=1,bw=0.5x,until=5",
+    ];
+    let parse_all = |order: &[usize]| -> Vec<FaultSpec> {
+        order
+            .iter()
+            .map(|&i| FaultSpec::parse(specs[i]).unwrap())
+            .collect()
+    };
+    let mut eng = engine();
+    let a = chaos_run(&g, spec, &cluster, &opts, &omegas, &traffic,
+                      &parse_all(&[0, 1, 2]), &mut eng);
+    let b = chaos_run(&g, spec, &cluster, &opts, &omegas, &traffic,
+                      &parse_all(&[0, 1, 2]), &mut eng);
+    let c = chaos_run(&g, spec, &cluster, &opts, &omegas, &traffic,
+                      &parse_all(&[2, 1, 0]), &mut eng);
+    // (a) bit-deterministic for a fixed seed
+    assert_eq!(a.aggregate.latencies, b.aggregate.latencies);
+    assert_eq!(a.aggregate.faults, b.aggregate.faults);
+    // (b) the schedule is canonicalized before jitter is drawn, so
+    // declaration order cannot change a single bit either
+    assert_eq!(a.aggregate.latencies, c.aggregate.latencies);
+    assert_eq!(a.aggregate.faults, c.aggregate.faults);
+    assert_eq!(a.aggregate.slo.goodput_rps,
+               c.aggregate.slo.goodput_rps);
+    let f = a.aggregate.faults.as_ref().expect("chaos report");
+    // outcomes come back in canonical (t, class) order
+    let classes: Vec<&str> =
+        f.outcomes.iter().map(|o| o.class).collect();
+    assert_eq!(classes, vec!["slow", "crash", "link"]);
+}
+
+#[test]
+fn analytic_crash_is_detected_evacuated_and_reported() {
+    let (g, spec) = tiny();
+    let (cluster, opts, omegas) = setup(&g);
+    assert!(cluster.len() >= 2);
+    let traffic = TrafficConfig {
+        rps: 120.0,
+        duration_s: 6.0,
+        seed: 42,
+        ..Default::default()
+    };
+    let faults = [FaultSpec::parse("crash@t=2,fog=1").unwrap()];
+    let mut eng = engine();
+    let fr = chaos_run(&g, spec, &cluster, &opts, &omegas, &traffic,
+                       &faults, &mut eng);
+    let a = &fr.aggregate;
+    // the headline: a dead fog does not wedge the run
+    assert!(a.slo.completed > 0);
+    let c = a.faults.as_ref().expect("chaos report");
+    assert_eq!(c.outcomes.len(), 1);
+    let o = &c.outcomes[0];
+    assert_eq!(o.class, "crash");
+    assert_eq!(o.fog, 1);
+    assert_eq!(o.peer, -1);
+    assert!(o.t_fault_s >= 2.0 && o.t_fault_s < 2.1,
+            "jittered onset out of band: {}", o.t_fault_s);
+    // detected by the EWMA deadline, then evacuated (recovered) —
+    // both within the run, recovery no earlier than detection
+    assert!(o.time_to_detect_s >= 0.0, "undetected: {o:?}");
+    assert!(o.recovered, "unrecovered: {o:?}");
+    assert!(o.time_to_recover_s >= o.time_to_detect_s, "{o:?}");
+    // the dead fog was priced/attributed at least once in the hole
+    assert!(o.hedges >= 1, "{o:?}");
+    assert!((0.0..=1.0).contains(&o.goodput_dip), "{o:?}");
+    assert!(o.p99_delta_ms.is_finite());
+    // evacuation rides the dual-mode rescheduler
+    assert!(a.slo.replans >= 1, "no evacuation replan recorded");
+}
+
+#[test]
+fn slow_and_link_faults_recover_at_until() {
+    let (g, spec) = tiny();
+    let (cluster, opts, omegas) = setup(&g);
+    assert!(cluster.len() >= 2);
+    let traffic = TrafficConfig {
+        rps: 100.0,
+        duration_s: 6.0,
+        seed: 7,
+        ..Default::default()
+    };
+    let faults = [
+        FaultSpec::parse("slow@t=1,fog=0,factor=0.3,until=3").unwrap(),
+        FaultSpec::parse("link@t=2,src=0,dst=1,bw=0.2x,until=4")
+            .unwrap(),
+    ];
+    let mut eng = engine();
+    let fr = chaos_run(&g, spec, &cluster, &opts, &omegas, &traffic,
+                       &faults, &mut eng);
+    let c = fr.aggregate.faults.as_ref().expect("chaos report");
+    assert_eq!(c.outcomes.len(), 2);
+    let slow = &c.outcomes[0];
+    assert_eq!(slow.class, "slow");
+    assert_eq!((slow.fog, slow.peer), (0, -1));
+    let link = &c.outcomes[1];
+    assert_eq!(link.class, "link");
+    assert_eq!((link.fog, link.peer), (0, 1));
+    // both fault classes clear on their own at `until` — recovery is
+    // the first batch finish past it
+    for o in [slow, link] {
+        assert!(o.recovered, "{o:?}");
+        assert!(o.time_to_recover_s > 0.0, "{o:?}");
+    }
+    assert!(fr.aggregate.slo.completed > 0);
+}
+
+#[test]
+fn malformed_fault_specs_are_cli_errors() {
+    // the exit-2 surface, one rejection per grammar rule
+    for bad in [
+        "crash",                          // no class@... split
+        "crash@t=2",                      // missing fog
+        "crash@fog=1",                    // missing t
+        "crash@t=-1,fog=0",               // negative onset
+        "crash@t=2,fog=1,rejoin=1",       // rejoin before t
+        "crash@t=2,fog=1,color=red",      // unknown key
+        "crash@t=2,fog=1,t=3",            // duplicate key
+        "slow@t=1,fog=0,factor=0",        // factor out of (0,1]
+        "slow@t=1,fog=0,factor=1.5",      // factor out of (0,1]
+        "slow@t=1,fog=0,factor=fast",     // non-numeric factor
+        "slow@t=1,fog=0,factor=0.5,until=0.5", // until before t
+        "link@t=1,src=0,dst=0,bw=0.5x",   // src == dst
+        "link@t=1,src=0,dst=1",           // missing bw
+        "meteor@t=1,fog=0",               // unknown class
+    ] {
+        assert!(FaultSpec::parse(bad).is_err(), "{bad:?} accepted");
+    }
+}
+
+#[test]
+fn out_of_range_faults_and_deadlines_are_rejected() {
+    let (g, spec) = tiny();
+    let (cluster, opts, omegas) = setup(&g);
+    let n = cluster.len();
+    // fog ids past the cluster and onsets past the run end fail spec
+    // validation...
+    let dead = FaultSpec::parse(&format!("crash@t=2,fog={n}")).unwrap();
+    assert!(dead.validate(n, 6.0).is_err());
+    let late = FaultSpec::parse("crash@t=50,fog=0").unwrap();
+    assert!(late.validate(n, 6.0).is_err());
+    // ...and the library entry point enforces the same checks plus a
+    // sane task deadline, so no caller can skip them
+    let traffic = TrafficConfig {
+        duration_s: 6.0,
+        ..Default::default()
+    };
+    let mk_input = || TenantInput {
+        tenant: Tenant::legacy(&traffic, "gcn", "tiny"),
+        g: &g,
+        spec,
+        opts: opts.clone(),
+        omegas: omegas.clone(),
+    };
+    let mut eng = engine();
+    assert!(run_fabric_chaos(&cluster, vec![mk_input()], &traffic,
+                             FairPolicy::Drr, &mut eng,
+                             &Recorder::disabled(), &[dead],
+                             DEFAULT_TASK_DEADLINE_S)
+        .is_err());
+    let ok = FaultSpec::parse("crash@t=2,fog=0").unwrap();
+    for bad_deadline in [0.0, -1.0, f64::NAN, f64::INFINITY] {
+        assert!(run_fabric_chaos(&cluster, vec![mk_input()], &traffic,
+                                 FairPolicy::Drr, &mut eng,
+                                 &Recorder::disabled(), &[ok],
+                                 bad_deadline)
+            .is_err(), "task deadline {bad_deadline} accepted");
     }
 }
