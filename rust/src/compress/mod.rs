@@ -1,7 +1,8 @@
 //! Communication optimizer substrate (paper §III-D): degree-aware
 //! quantization, byte-plane shuffling, a from-scratch LZ4 block codec, and
-//! the end-to-end pack/unpack pipeline (plus DEFLATE/zstd comparators for
-//! the ablation benches).
+//! the end-to-end pack/unpack pipeline (plus whole-payload comparators
+//! for the ablation benches — real DEFLATE/zstd behind the
+//! `ext-comparators` feature, an in-tree LZ4 stand-in otherwise).
 
 pub mod bitshuffle;
 pub mod lz4;

@@ -92,7 +92,8 @@ pub struct BspResult {
 /// Per-fog receiver index: global id -> halo row slot. A pure function
 /// of the partition, so the batched plan precomputes it once and the
 /// per-batch sync pays no structure rebuild.
-type HaloIndex = Vec<std::collections::HashMap<u32, usize>>;
+/// Per-fog map from halo global id → local row (n_local..n_total).
+pub type HaloIndex = Vec<std::collections::HashMap<u32, usize>>;
 
 /// Shared plan-construction validation: known model, sane width. The
 /// width bound holds on the library path too, not just CLI parsing —
@@ -117,7 +118,10 @@ fn validate_plan_inputs(model: &str, kernel_threads: usize)
     Ok(())
 }
 
-fn build_halo_index<S: Borrow<LocalGraph>>(subs: &[S]) -> HaloIndex {
+/// Build the per-fog halo lookup once per grounding (public together
+/// with [`sync_halo`] so integration tests can drive an exchange round
+/// without standing up a worker pool).
+pub fn build_halo_index<S: Borrow<LocalGraph>>(subs: &[S]) -> HaloIndex {
     subs.iter()
         .map(|s| {
             let s = s.borrow();
@@ -135,8 +139,12 @@ fn build_halo_index<S: Borrow<LocalGraph>>(subs: &[S]) -> HaloIndex {
 /// [batch * n_total, dim] block-major). Returns total bytes moved
 /// between fogs across all blocks. Generic over the sub container so
 /// the engine path (`Vec<LocalGraph>`) and the shared-ownership plan
-/// path (`Vec<Arc<LocalGraph>>`) use the same implementation.
-fn sync_halo<S: Borrow<LocalGraph>>(
+/// path (`Vec<Arc<LocalGraph>>`) use the same implementation. The row
+/// copies are allocation-free: one split borrow per (owner, requester)
+/// pair yields disjoint fog slices, and every row moves with a direct
+/// `copy_from_slice` (tests/alloc_regression.rs holds this at zero
+/// allocations per round).
+pub fn sync_halo<S: Borrow<LocalGraph>>(
     subs: &[S],
     plan: &ExchangePlan,
     halo_index: &HaloIndex,
@@ -151,37 +159,31 @@ fn sync_halo<S: Borrow<LocalGraph>>(
             if wanted.is_empty() {
                 continue;
             }
+            // a fog never requests its own rows, so the split below is
+            // always between two distinct fogs
+            debug_assert_ne!(owner, req, "no self transfers in plan");
             bytes += wanted.len() * dim * 4 * batch;
             let n_owner = subs[owner].borrow().n_total();
             let n_req = subs[req].borrow().n_total();
+            let (src, dst) = if owner < req {
+                let (lo, hi) = states.split_at_mut(req);
+                (&lo[owner], &mut hi[0])
+            } else {
+                let (lo, hi) = states.split_at_mut(owner);
+                (&hi[0], &mut lo[req])
+            };
             for &owner_local in wanted {
                 let gid =
                     subs[owner].borrow().vertices[owner_local as usize];
                 let pos = *halo_index[req]
                     .get(&gid)
                     .expect("halo row for shipped vertex");
-                let (src, dst) = if owner == req {
-                    unreachable!("no self transfers in plan");
-                } else {
-                    // split borrow
-                    let (a, b) = if owner < req {
-                        let (lo, hi) = states.split_at_mut(req);
-                        (&lo[owner], &mut hi[0])
-                    } else {
-                        let (lo, hi) = states.split_at_mut(owner);
-                        (&hi[0], &mut lo[req])
-                    };
-                    (a, b)
-                };
                 for bk in 0..batch {
                     let src0 =
                         (bk * n_owner + owner_local as usize) * dim;
                     let dst0 = (bk * n_req + pos) * dim;
-                    // SAFETY NOTE: plain copy via temporaries to keep
-                    // the borrow checker happy would clone; use index
-                    // math on the split slices instead.
-                    let tmp: Vec<f32> = src[src0..src0 + dim].to_vec();
-                    dst[dst0..dst0 + dim].copy_from_slice(&tmp);
+                    dst[dst0..dst0 + dim]
+                        .copy_from_slice(&src[src0..src0 + dim]);
                 }
             }
         }

@@ -8,5 +8,6 @@
 
 pub mod bsp;
 
-pub use bsp::{run as run_bsp, run_parallel, BatchedBspPlan, BspPipeline,
-              BspResult, ExecTrace, PipelineChaos};
+pub use bsp::{build_halo_index, run as run_bsp, run_parallel, sync_halo,
+              BatchedBspPlan, BspPipeline, BspResult, ExecTrace,
+              HaloIndex, PipelineChaos};

@@ -67,10 +67,11 @@ pub fn run(ctx: &mut Ctx) -> String {
             .collect();
         let d = compress::pipeline::deflate_size(&raw);
         let z = compress::pipeline::zstd_size(&raw);
-        t.row(vec![ds.into(), "DEFLATE (whole payload)".into(),
+        let [dl, zl] = compress::pipeline::COMPARATOR_LABELS;
+        t.row(vec![ds.into(), dl.into(),
                    format!("{:.4}", d as f64 / raw.len() as f64),
                    f2(d as f64 / 1e6)]);
-        t.row(vec![ds.into(), "zstd-1 (whole payload)".into(),
+        t.row(vec![ds.into(), zl.into(),
                    format!("{:.4}", z as f64 / raw.len() as f64),
                    f2(z as f64 / 1e6)]);
     }

@@ -39,7 +39,8 @@ use crate::runtime::kernels::{gemm, simd, spmm};
 use crate::runtime::{pad, Engine, EngineKind};
 use crate::util::cli::{parse_kernel_threads, Args};
 use crate::util::json::{arr, num, obj, s, Json};
-use crate::util::provenance::{git_rev, utc_date_string};
+use crate::util::provenance::{git_rev, peak_rss_bytes,
+                              utc_date_string};
 use crate::util::rng::Rng;
 use crate::util::timer::{bench, black_box};
 
@@ -766,6 +767,10 @@ pub fn cmd(args: &Args) -> i32 {
                 ("parity_tol_rel", num(PARITY_TOL as f64)),
             ]),
         ),
+        (
+            "peak_rss_bytes",
+            peak_rss_bytes().map_or(Json::Null, |b| num(b as f64)),
+        ),
     ]);
     if let Err(e) = std::fs::write(out_path, format!("{doc}\n")) {
         eprintln!("cannot write {out_path}: {e}");
@@ -803,6 +808,10 @@ pub fn cmd(args: &Args) -> i32 {
                 ("gemm", num_or_null(gemm_scaling_max)),
                 ("spmm", num_or_null(spmm_scaling_max)),
             ]),
+        ),
+        (
+            "peak_rss_bytes",
+            peak_rss_bytes().map_or(Json::Null, |b| num(b as f64)),
         ),
     ]);
     let appended = std::fs::OpenOptions::new()

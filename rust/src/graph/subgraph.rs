@@ -7,13 +7,23 @@
 //! every in-neighbor of L_j that lives elsewhere — the *halo* H_j. The
 //! local index space is `[locals..., halo...]`, and the edge list contains
 //! every edge whose destination is local (sources may be halo).
+//!
+//! Two grounding paths produce bit-identical results:
+//!
+//! * [`GroundingStream`] (the scale tier, and what [`extract`] uses) —
+//!   grounds ONE fog's sub-CSR at a time against two flat O(V) scratch
+//!   arrays, so peak memory is one sub-CSR plus scratch rather than all
+//!   sub-CSRs plus per-fog remap `HashMap`s at once.
+//! * [`extract_materialized`] — the original materialize-everything
+//!   reference, kept for the parity gate and for the scale bench's
+//!   peak-memory comparison.
 
 use std::collections::HashMap;
 
 use super::csr::Graph;
 
 /// One fog's executable view of its partition.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct LocalGraph {
     /// Global vertex ids; first `n_local` entries are owned, rest is halo.
     pub vertices: Vec<u32>,
@@ -44,11 +54,22 @@ impl LocalGraph {
     pub fn cardinality(&self) -> (usize, usize) {
         (self.n_local, self.num_edges())
     }
+
+    /// Heap bytes held by this sub-CSR — the deterministic logical
+    /// memory metric the scale bench compares across grounding paths
+    /// (`VmHWM` is a process-wide high-water mark and cannot compare
+    /// two phases within one run).
+    pub fn heap_bytes(&self) -> usize {
+        4 * (self.vertices.len()
+            + self.src.len()
+            + self.dst.len()
+            + self.global_degree.len())
+    }
 }
 
 /// Cross-fog halo exchange plan for one layer boundary: for each
 /// (owner, requester) pair, which owner-local vertices to ship.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct ExchangePlan {
     /// transfers[owner][requester] = owner-local indices (usize into the
     /// owner's `vertices[..n_local]`) that the requester needs.
@@ -63,12 +84,166 @@ impl ExchangePlan {
             .flat_map(|row| row.iter().map(|v| v.len()))
             .sum()
     }
+
+    /// Heap bytes held by the plan rows (see `LocalGraph::heap_bytes`).
+    pub fn heap_bytes(&self) -> usize {
+        self.transfers
+            .iter()
+            .flat_map(|row| row.iter().map(|v| v.len() * 4))
+            .sum()
+    }
+}
+
+/// Streamed grounding: yields one fog's [`LocalGraph`] at a time, then
+/// the completed [`ExchangePlan`]. Instead of per-fog remap `HashMap`s,
+/// two flat arrays index the whole graph:
+///
+/// * `owner_rank[v]` — v's position within its owner's local list
+///   (what the materialized path recomputes as `owner_index` maps);
+/// * `local_of[v]` — v's index in the CURRENT fog's local space
+///   (`u32::MAX` = absent), reset between fogs by touching only the
+///   vertices the finished fog saw.
+///
+/// Halo vertices are appended in first-encounter order over the owned
+/// vertices' CSR-sorted neighbor lists — exactly the insertion order of
+/// the materialized path's `HashMap::entry` calls — and each discovery
+/// pushes `owner_rank[v]` onto `transfers[owner][fog]` immediately, so
+/// both sub-CSRs and the plan are bit-identical to
+/// [`extract_materialized`].
+pub struct GroundingStream<'a> {
+    g: &'a Graph,
+    assignment: &'a [u32],
+    n_fogs: usize,
+    /// Owned vertex lists not yet emitted; each is moved out (not
+    /// cloned) when its fog is grounded.
+    owned: Vec<Vec<u32>>,
+    owner_rank: Vec<u32>,
+    local_of: Vec<u32>,
+    transfers: Vec<Vec<Vec<u32>>>,
+    next: usize,
+}
+
+impl<'a> GroundingStream<'a> {
+    /// One O(V) pass: owned lists + owner ranks. No per-fog state yet.
+    pub fn new(g: &'a Graph, assignment: &'a [u32], n_fogs: usize)
+               -> GroundingStream<'a> {
+        let nv = g.num_vertices();
+        assert_eq!(assignment.len(), nv);
+        let mut owned: Vec<Vec<u32>> = vec![Vec::new(); n_fogs];
+        let mut owner_rank = vec![0u32; nv];
+        for v in 0..nv {
+            let j = assignment[v] as usize;
+            owner_rank[v] = owned[j].len() as u32;
+            owned[j].push(v as u32);
+        }
+        GroundingStream {
+            g,
+            assignment,
+            n_fogs,
+            owned,
+            owner_rank,
+            local_of: vec![u32::MAX; nv],
+            transfers: vec![vec![Vec::new(); n_fogs]; n_fogs],
+            next: 0,
+        }
+    }
+
+    /// Ground the next fog's sub-CSR, or `None` when all fogs are done.
+    /// The caller owns the result and may drop it before asking for the
+    /// next one — that is the point.
+    pub fn next_fog(&mut self) -> Option<LocalGraph> {
+        if self.next == self.n_fogs {
+            return None;
+        }
+        let j = self.next;
+        self.next += 1;
+        let g = self.g;
+        let mut vertices = std::mem::take(&mut self.owned[j]);
+        let n_local = vertices.len();
+        for (i, &v) in vertices.iter().enumerate() {
+            self.local_of[v as usize] = i as u32;
+        }
+        let mut src = Vec::new();
+        let mut dst = Vec::new();
+        // in-edges of owned vertices: graph is symmetric, so
+        // in-neighbors == out-neighbors
+        let mut li = 0;
+        while li < n_local {
+            let v = vertices[li];
+            for &u in g.neighbors(v as usize) {
+                let mut si = self.local_of[u as usize];
+                if si == u32::MAX {
+                    si = vertices.len() as u32;
+                    vertices.push(u);
+                    self.local_of[u as usize] = si;
+                    let owner = self.assignment[u as usize] as usize;
+                    self.transfers[owner][j]
+                        .push(self.owner_rank[u as usize]);
+                }
+                src.push(si);
+                dst.push(li as u32);
+            }
+            li += 1;
+        }
+        let global_degree = vertices
+            .iter()
+            .map(|&v| g.degree(v as usize) as u32)
+            .collect();
+        // reset the scratch for the next fog: touch only this fog's
+        // entries, not all V
+        for &v in &vertices {
+            self.local_of[v as usize] = u32::MAX;
+        }
+        Some(LocalGraph { vertices, n_local, src, dst, global_degree })
+    }
+
+    /// The completed exchange plan. Must only be called after every fog
+    /// has been grounded — requester rows are filled as each requester
+    /// discovers its halo.
+    pub fn finish(self) -> ExchangePlan {
+        assert_eq!(
+            self.next, self.n_fogs,
+            "finish() before all fogs were grounded"
+        );
+        ExchangePlan { transfers: self.transfers }
+    }
+
+    /// Heap bytes of the stream's own state right now: the two flat
+    /// V-sized arrays, not-yet-emitted owned lists, and the plan rows
+    /// accumulated so far. Peak streamed grounding memory is
+    /// `max over fogs (scratch_bytes + that fog's sub heap_bytes)`.
+    pub fn scratch_bytes(&self) -> usize {
+        let owned: usize = self.owned.iter().map(|v| v.len() * 4).sum();
+        let plan: usize = self
+            .transfers
+            .iter()
+            .flat_map(|row| row.iter().map(|v| v.len() * 4))
+            .sum();
+        self.owner_rank.len() * 4 + self.local_of.len() * 4 + owned + plan
+    }
 }
 
 /// Extract per-fog local graphs + the exchange plan from an assignment
-/// (assignment[v] = fog index, must be < n_fogs).
+/// (assignment[v] = fog index, must be < n_fogs). Runs the streamed
+/// path; callers that cannot hold every sub-CSR at once should drive
+/// [`GroundingStream`] directly and drop each sub as they go.
 pub fn extract(g: &Graph, assignment: &[u32], n_fogs: usize)
                -> (Vec<LocalGraph>, ExchangePlan) {
+    let mut stream = GroundingStream::new(g, assignment, n_fogs);
+    let mut subs = Vec::with_capacity(n_fogs);
+    while let Some(sub) = stream.next_fog() {
+        subs.push(sub);
+    }
+    (subs, stream.finish())
+}
+
+/// The original materialize-everything grounding: per-fog remap
+/// `HashMap`s, cloned owned lists, and a global-id `needed` table
+/// translated through per-owner index maps at the end. Kept as the
+/// reference implementation for the streamed-parity gate and as the
+/// "materialize all" arm of the scale bench's peak-memory comparison.
+pub fn extract_materialized(g: &Graph, assignment: &[u32], n_fogs: usize)
+                            -> (Vec<LocalGraph>, ExchangePlan) {
     let nv = g.num_vertices();
     assert_eq!(assignment.len(), nv);
 
@@ -149,6 +324,7 @@ pub fn extract_one(g: &Graph, vertex_set: &[u32]) -> LocalGraph {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::graph::generate;
 
     /// 0-1-2-3-4 path + edge 0-4, split {0,1},{2,3,4}
     fn setup() -> (Graph, Vec<LocalGraph>, ExchangePlan) {
@@ -235,5 +411,67 @@ mod tests {
         let mut halo = sub.vertices[sub.n_local..].to_vec();
         halo.sort_unstable();
         assert_eq!(halo, vec![0, 3]);
+    }
+
+    /// The parity gate on the hand-checkable fixture; the seeded
+    /// rmat/sbm/road sweep lives in tests/grounding_parity.rs.
+    #[test]
+    fn streamed_matches_materialized_on_fixture() {
+        let g = Graph::from_undirected_edges(
+            5,
+            &[(0, 1), (1, 2), (2, 3), (3, 4), (0, 4)],
+        );
+        let assignment = vec![0, 0, 1, 1, 1];
+        let (s_subs, s_plan) = extract(&g, &assignment, 2);
+        let (m_subs, m_plan) = extract_materialized(&g, &assignment, 2);
+        assert_eq!(s_subs, m_subs);
+        assert_eq!(s_plan, m_plan);
+    }
+
+    #[test]
+    fn empty_fog_grounds_to_empty_sub() {
+        let g = Graph::from_undirected_edges(3, &[(0, 1), (1, 2)]);
+        // fog 1 owns nothing
+        let (subs, plan) = extract(&g, &[0, 0, 2], 3);
+        assert_eq!(subs.len(), 3);
+        assert_eq!(subs[1].n_total(), 0);
+        assert_eq!(subs[1].num_edges(), 0);
+        let (m_subs, m_plan) = extract_materialized(&g, &[0, 0, 2], 3);
+        assert_eq!(subs, m_subs);
+        assert_eq!(plan, m_plan);
+    }
+
+    #[test]
+    fn stream_accounting_is_consistent() {
+        let (g, _) = generate::sbm(300, 1200, 3, 0.8, 11);
+        let assignment: Vec<u32> =
+            (0..300).map(|v| (v % 3) as u32).collect();
+        let mut stream = GroundingStream::new(&g, &assignment, 3);
+        // scratch starts at two V-sized arrays + all owned lists
+        let base = stream.scratch_bytes();
+        assert!(base >= 300 * 4 * 3);
+        let mut peak_one_sub = 0usize;
+        while let Some(sub) = stream.next_fog() {
+            assert!(sub.heap_bytes()
+                >= 4 * (sub.n_total() + 2 * sub.num_edges()));
+            peak_one_sub = peak_one_sub.max(sub.heap_bytes());
+        }
+        let plan = stream.finish();
+        assert_eq!(plan.heap_bytes(), plan.total_vertices() * 4);
+        // materialized-all holds every sub at once: strictly more than
+        // any single streamed sub on a 3-way split
+        let (m_subs, _) = extract_materialized(&g, &assignment, 3);
+        let all: usize = m_subs.iter().map(|s| s.heap_bytes()).sum();
+        assert!(all > peak_one_sub);
+    }
+
+    #[test]
+    #[should_panic(expected = "before all fogs")]
+    fn finish_requires_all_fogs() {
+        let g = Graph::from_undirected_edges(3, &[(0, 1), (1, 2)]);
+        let assignment = vec![0, 0, 1];
+        let mut stream = GroundingStream::new(&g, &assignment, 2);
+        let _ = stream.next_fog();
+        let _ = stream.finish();
     }
 }

@@ -7,6 +7,7 @@
 //!   loadtest       sustained request-level load generation + online
 //!                  serving
 //!   bench-kernels  naive-vs-tiled kernel benchmark -> BENCH_kernels.json
+//!   scale          million-vertex scale-tier sweep -> BENCH_scale.json
 //!   exp            regenerate a paper table/figure (see experiments/)
 //!   list           list datasets, artifacts and experiments
 
@@ -53,6 +54,7 @@ fn main() {
         "serve" => cmd_serve(&args),
         "loadtest" => cmd_loadtest(&args),
         "bench-kernels" => experiments::kernelbench::cmd(&args),
+        "scale" => experiments::scale::cmd(&args),
         "exp" => experiments::cmd_exp(&args),
         "list" => cmd_list(&args),
         _ => {
@@ -87,6 +89,9 @@ USAGE:
                  [--fault SPEC (repeatable)] [--task-deadline SECONDS]
   repro bench-kernels [--smoke] [--kernel-threads K]
                  [--out BENCH_kernels.json]
+                 [--history BENCH_history.jsonl]
+  repro scale    [--smoke] [--fogs N] [--fog-mem-mb MB]
+                 [--out BENCH_scale.json]
                  [--history BENCH_history.jsonl]
   repro exp      <fig3|fig4|fig8|fig11|fig12|table4|fig13|table5|fig14|
                   fig15|fig16|fig17|fig18|loadtest|all>
@@ -180,7 +185,20 @@ KERNELS:
   (channel round-trip vs. per-row kernel cost, clamped to a power of
   two in [64, 4096]); FOGRAPH_MIN_ROWS_PER_SHARD overrides it
   (validated at startup, exit 2 on junk). The active value and its
-  source are recorded in BENCH_kernels.json/BENCH_history.jsonl"
+  source are recorded in BENCH_kernels.json/BENCH_history.jsonl
+
+SCALE TIER:
+  scale sweeps seeded rmat/road graphs (to 1M+ vertices; --smoke runs
+  a small sweep for CI) through streamed one-fog-at-a-time grounding,
+  a bounded per-fog feature store that spills cold blocks through the
+  quantize-off LZ4 pipeline (--fog-mem-mb MB; default = 3/4 of the
+  largest point's per-fog features so the top of the sweep must
+  spill), and the indexed collection path. Gates: streamed/materialized
+  exchange-plan parity, streamed peak logical bytes below
+  materialize-all, zero bit-mismatches on spill-rehydrate access, and
+  spills > 0 whenever the budget is infeasible. Writes BENCH_scale.json
+  (vertices/sec/fog, grounding times, spill counters, peak_rss_bytes)
+  and appends a provenance line to BENCH_history.jsonl"
     );
 }
 

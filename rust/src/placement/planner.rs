@@ -44,17 +44,23 @@ pub struct Plan {
     pub edge_cut: u64,
 }
 
-/// Compute partition statistics via halo extraction.
+/// Compute partition statistics via halo extraction. Drives the
+/// streamed grounding path directly: each sub-CSR is dropped as soon
+/// as its three counters are read, so planning never holds more than
+/// one partition's sub-CSR — at million-vertex scale the planner would
+/// otherwise materialize the full grounding just to size partitions.
 pub fn partition_stats(g: &Graph, assignment: &[u32], n: usize)
                        -> Vec<PartStats> {
-    let (subs, _) = subgraph::extract(g, assignment, n);
-    subs.iter()
-        .map(|s| PartStats {
+    let mut stream = subgraph::GroundingStream::new(g, assignment, n);
+    let mut parts = Vec::with_capacity(n);
+    while let Some(s) = stream.next_fog() {
+        parts.push(PartStats {
             n_vertices: s.n_local,
             n_edges: s.num_edges(),
             n_halo: s.n_halo(),
-        })
-        .collect()
+        });
+    }
+    parts
 }
 
 /// Run the full IEP: BGP partitioning + the chosen mapping strategy.

@@ -20,6 +20,59 @@ pub const DEVICE_COMPUTE_MULT: f64 = 6.0;
 /// (§III-D "Deployment of CO"); only this share lands on the critical path.
 pub const UNPACK_PIPELINE_SHARE: f64 = 0.25;
 
+/// Placement-static collection state: per-fog vertex lists and degree
+/// rows, built ONCE per layout instead of re-sweeping all V vertices
+/// (plus a fresh `g.degrees()` allocation) on every collection call.
+/// The traffic fabric rebuilds it only when a diffusion / replan /
+/// evacuation actually moves the assignment; the scale tier reuses it
+/// across every access round.
+#[derive(Clone, Debug)]
+pub struct CollectionIndex {
+    n_fogs: usize,
+    /// Fog → owned vertex ids, ascending (global order within a fog).
+    pub by_fog: Vec<Vec<u32>>,
+    /// Fog → owned vertices' FULL-graph degrees, aligned with `by_fog`.
+    pub degrees: Vec<Vec<u64>>,
+    /// Fogs that actually receive data (AP-contention input).
+    pub active_fogs: usize,
+}
+
+impl CollectionIndex {
+    /// One O(V) sweep over the assignment.
+    pub fn build(g: &Graph, assignment: &[u32], n_fogs: usize)
+                 -> CollectionIndex {
+        let nv = g.num_vertices();
+        assert_eq!(assignment.len(), nv);
+        let mut by_fog: Vec<Vec<u32>> = vec![Vec::new(); n_fogs];
+        for v in 0..nv {
+            by_fog[assignment[v] as usize].push(v as u32);
+        }
+        let degrees: Vec<Vec<u64>> = by_fog
+            .iter()
+            .map(|verts| {
+                verts
+                    .iter()
+                    .map(|&v| g.degree(v as usize) as u64)
+                    .collect()
+            })
+            .collect();
+        let active_fogs =
+            by_fog.iter().filter(|v| !v.is_empty()).count();
+        CollectionIndex { n_fogs, by_fog, degrees, active_fogs }
+    }
+
+    /// Placeholder before the first placement exists (no fog owns
+    /// anything; `build` replaces it as soon as a layout lands).
+    pub fn empty(n_fogs: usize) -> CollectionIndex {
+        CollectionIndex {
+            n_fogs,
+            by_fog: vec![Vec::new(); n_fogs],
+            degrees: vec![Vec::new(); n_fogs],
+            active_fogs: 0,
+        }
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct CollectionResult {
     /// Per-fog collection latency (transfer + device-side packing).
@@ -55,10 +108,28 @@ pub fn collect(
     devices: usize,
     wan: bool,
 ) -> CollectionResult {
+    let idx = CollectionIndex::build(g, assignment, cluster.len());
+    collect_indexed(g, &idx, window_features, dims, cluster, codec,
+                    devices, wan)
+}
+
+/// `collect` against a prebuilt [`CollectionIndex`] — the per-request
+/// hot path. Identical arithmetic and iteration order to building the
+/// index inline, so results are bit-identical to `collect`.
+pub fn collect_indexed(
+    g: &Graph,
+    idx: &CollectionIndex,
+    window_features: &[f32],
+    dims: usize,
+    cluster: &Cluster,
+    codec: &Codec,
+    devices: usize,
+    wan: bool,
+) -> CollectionResult {
     let nv = g.num_vertices();
     assert_eq!(window_features.len(), nv * dims);
     let n_fogs = cluster.len();
-    let degrees = g.degrees();
+    assert_eq!(idx.n_fogs, n_fogs, "index built for another cluster");
 
     let mut per_fog_s = vec![0f64; n_fogs];
     let mut per_fog_transfer_s = vec![0f64; n_fogs];
@@ -67,17 +138,12 @@ pub fn collect(
     let mut raw_total = 0usize;
     let mut features = vec![0f32; nv * dims];
 
-    // partition vertex ids by fog
-    let mut by_fog: Vec<Vec<u32>> = vec![Vec::new(); n_fogs];
-    for v in 0..nv {
-        by_fog[assignment[v] as usize].push(v as u32);
-    }
     // contention spreads over the fogs that actually receive data (a
     // single-fog placement concentrates every device on one AP)
-    let active_fogs = by_fog.iter().filter(|v| !v.is_empty()).count();
-    let devices_per_fog = devices.div_ceil(active_fogs.max(1)).max(1);
+    let devices_per_fog =
+        devices.div_ceil(idx.active_fogs.max(1)).max(1);
 
-    for (j, verts) in by_fog.iter().enumerate() {
+    for (j, verts) in idx.by_fog.iter().enumerate() {
         if verts.is_empty() {
             continue;
         }
@@ -87,10 +153,9 @@ pub fn collect(
                 &window_features[v as usize * dims..(v as usize + 1) * dims]
             })
             .collect();
-        let degs: Vec<u64> =
-            verts.iter().map(|&v| degrees[v as usize] as u64).collect();
+        let degs = &idx.degrees[j];
         let t_pack = Stopwatch::start();
-        let packed = compress::pack(&rows, &degs, codec);
+        let packed = compress::pack(&rows, degs, codec);
         let pack_host = t_pack.elapsed_s();
         // devices pack their shards in parallel; per-device share
         let pack_device_s = pack_host * DEVICE_COMPUTE_MULT
@@ -224,6 +289,46 @@ mod tests {
             assert!(t <= full);
             assert!(*t > 0.0);
         }
+    }
+
+    #[test]
+    fn indexed_collect_matches_unindexed_bitwise() {
+        let (g, feats) = setup();
+        let cluster = Cluster::testbed(NetKind::Wifi);
+        let assignment: Vec<u32> =
+            (0..400).map(|v| (v % 6) as u32).collect();
+        let idx = CollectionIndex::build(&g, &assignment, cluster.len());
+        let full = collect(&g, &feats, 16, &assignment, &cluster,
+                           &Codec::None, 8, false);
+        let fast = collect_indexed(&g, &idx, &feats, 16, &cluster,
+                                   &Codec::None, 8, false);
+        // the analytic shares are pure functions of the inputs — the
+        // indexed path must be bit-identical, not merely close
+        assert_eq!(full.per_fog_transfer_s, fast.per_fog_transfer_s);
+        assert_eq!(full.wire_bytes, fast.wire_bytes);
+        assert_eq!(full.raw_bytes, fast.raw_bytes);
+        assert_eq!(full.features, fast.features);
+    }
+
+    #[test]
+    fn index_partitions_and_degrees_are_consistent() {
+        let (g, _) = setup();
+        let assignment: Vec<u32> =
+            (0..400).map(|v| (v % 3) as u32).collect();
+        let idx = CollectionIndex::build(&g, &assignment, 5);
+        let total: usize = idx.by_fog.iter().map(|v| v.len()).sum();
+        assert_eq!(total, 400);
+        assert_eq!(idx.active_fogs, 3);
+        for (verts, degs) in idx.by_fog.iter().zip(&idx.degrees) {
+            assert_eq!(verts.len(), degs.len());
+            assert!(verts.windows(2).all(|w| w[0] < w[1]));
+            for (&v, &d) in verts.iter().zip(degs) {
+                assert_eq!(d, g.degree(v as usize) as u64);
+            }
+        }
+        let empty = CollectionIndex::empty(5);
+        assert_eq!(empty.active_fogs, 0);
+        assert_eq!(empty.by_fog.len(), 5);
     }
 
     #[test]

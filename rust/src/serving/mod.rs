@@ -1,12 +1,16 @@
 //! Serving layer: data-collection simulation, end-to-end pipelines
 //! (cloud / single-fog / straw-man multi-fog / Fograph / ablations),
-//! latency+throughput metrics, and inference-quality evaluation.
+//! latency+throughput metrics, inference-quality evaluation, and the
+//! scale tier's spill-aware feature store.
 
 pub mod accuracy;
 pub mod collection;
 pub mod metrics;
 pub mod pipeline;
+pub mod store;
 
+pub use collection::CollectionIndex;
 pub use metrics::ServingReport;
 pub use pipeline::{mode_setup, serve, serve_with_assignment, Placement,
                    ServeOpts, MODES};
+pub use store::{FeatureStore, StoreStats};

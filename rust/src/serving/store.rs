@@ -1,0 +1,349 @@
+//! Spill-aware per-partition feature storage for the scale tier
+//! (ROADMAP item 3): a fog's feature blocks live in a [`FeatureStore`]
+//! with a bounded resident budget (`--fog-mem-mb`). Hot blocks stay
+//! resident as flat f32 rows; cold blocks are spilled through the
+//! existing `compress/` pipeline (quantize + shuffle + LZ4) and
+//! transparently rehydrated on access.
+//!
+//! With the quantizer off (`Codec::Lz4Only`, the default spill codec)
+//! the round-trip is BIT-exact: 64-bit "quantization" ships the f64
+//! widening of each f32, which narrows back losslessly. Lossy codecs
+//! (`Daq`, `Uniform`) trade fidelity for a smaller spill footprint and
+//! are opt-in. `Codec::None` cannot back a spill (its unpack returns
+//! no rows) and is rejected for bounded stores.
+//!
+//! With no budget (`budget = None`) the store is a pure passthrough —
+//! nothing is ever packed, `get` returns exactly the inserted rows —
+//! so small-graph runs take the exact pre-spill code path.
+
+use crate::compress::{self, Codec, Packed};
+
+/// Spill/rehydrate counters and resident-memory accounting. All sizes
+/// are logical heap bytes of the stored rows (deterministic, unlike
+/// process RSS).
+#[derive(Clone, Debug, Default)]
+pub struct StoreStats {
+    /// Blocks packed out of residency.
+    pub spills: usize,
+    /// Blocks unpacked back on access.
+    pub rehydrates: usize,
+    /// Resident row bytes right now.
+    pub resident_bytes: usize,
+    /// High-water mark of `resident_bytes`.
+    pub peak_resident_bytes: usize,
+    /// Cumulative packed bytes written by spills.
+    pub spilled_wire_bytes: usize,
+}
+
+enum Slot {
+    Vacant,
+    Resident { rows: Vec<f32>, degrees: Vec<u64> },
+    Spilled { packed: Packed, degrees: Vec<u64>, n_rows: usize },
+}
+
+/// Bounded-residency feature block store; see the module docs.
+pub struct FeatureStore {
+    dims: usize,
+    codec: Codec,
+    budget_bytes: Option<usize>,
+    slots: Vec<Slot>,
+    /// Block ids in recency order, least-recently-touched first.
+    lru: Vec<usize>,
+    stats: StoreStats,
+}
+
+impl FeatureStore {
+    /// `budget_mb` is the `--fog-mem-mb` knob: `None` = unbounded
+    /// passthrough.
+    pub fn new(n_blocks: usize, dims: usize, budget_mb: Option<usize>,
+               codec: Codec) -> FeatureStore {
+        FeatureStore::with_budget_bytes(
+            n_blocks,
+            dims,
+            budget_mb.map(|mb| mb * (1 << 20)),
+            codec,
+        )
+    }
+
+    /// Byte-granular constructor (tests and callers that size budgets
+    /// from data rather than a CLI flag).
+    pub fn with_budget_bytes(n_blocks: usize, dims: usize,
+                             budget_bytes: Option<usize>,
+                             codec: Codec) -> FeatureStore {
+        assert!(dims > 0, "feature dims must be positive");
+        assert!(
+            budget_bytes.is_none() || codec != Codec::None,
+            "a bounded store needs a spill codec that round-trips \
+             rows; Codec::None does not"
+        );
+        FeatureStore {
+            dims,
+            codec,
+            budget_bytes,
+            slots: (0..n_blocks).map(|_| Slot::Vacant).collect(),
+            lru: Vec::with_capacity(n_blocks),
+            stats: StoreStats::default(),
+        }
+    }
+
+    pub fn stats(&self) -> &StoreStats {
+        &self.stats
+    }
+
+    pub fn is_resident(&self, block: usize) -> bool {
+        matches!(self.slots[block], Slot::Resident { .. })
+    }
+
+    /// Insert (or replace) a block: `rows` is row-major `[n, dims]`,
+    /// `degrees` the rows' full-graph degrees (the degree-aware spill
+    /// codecs key bitwidths off them; `Lz4Only` ignores them). The
+    /// block becomes the hottest entry; colder blocks may spill to
+    /// honor the budget.
+    pub fn insert(&mut self, block: usize, rows: Vec<f32>,
+                  degrees: Vec<u64>) {
+        assert_eq!(rows.len(), degrees.len() * self.dims);
+        if let Slot::Resident { rows: old, .. } = &self.slots[block] {
+            self.stats.resident_bytes -= old.len() * 4;
+        }
+        self.stats.resident_bytes += rows.len() * 4;
+        self.stats.peak_resident_bytes = self
+            .stats
+            .peak_resident_bytes
+            .max(self.stats.resident_bytes);
+        self.slots[block] = Slot::Resident { rows, degrees };
+        self.touch(block);
+        self.enforce(block);
+    }
+
+    /// Access a block's rows, rehydrating a spilled block in place.
+    /// The touched block becomes the hottest entry and is never the
+    /// spill victim of its own access — even when it alone exceeds
+    /// the budget (serving needs the rows resident), in which case
+    /// every OTHER block spills and the budget is overshot by exactly
+    /// this block.
+    pub fn get(&mut self, block: usize) -> &[f32] {
+        if matches!(self.slots[block], Slot::Spilled { .. }) {
+            self.rehydrate(block);
+        }
+        self.touch(block);
+        self.enforce(block);
+        match &self.slots[block] {
+            Slot::Resident { rows, .. } => rows,
+            Slot::Vacant => panic!("get() on never-inserted block"),
+            Slot::Spilled { .. } => {
+                unreachable!("block resident after rehydrate")
+            }
+        }
+    }
+
+    fn touch(&mut self, block: usize) {
+        self.lru.retain(|&b| b != block);
+        self.lru.push(block);
+    }
+
+    /// Spill least-recently-touched resident blocks (never `protect`)
+    /// until the budget holds or nothing else can move.
+    fn enforce(&mut self, protect: usize) {
+        let Some(budget) = self.budget_bytes else { return };
+        while self.stats.resident_bytes > budget {
+            let victim = self.lru.iter().copied().find(|&b| {
+                b != protect
+                    && matches!(self.slots[b], Slot::Resident { .. })
+            });
+            match victim {
+                Some(v) => self.spill(v),
+                None => break,
+            }
+        }
+    }
+
+    fn spill(&mut self, block: usize) {
+        let slot =
+            std::mem::replace(&mut self.slots[block], Slot::Vacant);
+        let Slot::Resident { rows, degrees } = slot else {
+            unreachable!("spill victim must be resident")
+        };
+        let refs: Vec<&[f32]> = rows.chunks(self.dims).collect();
+        let packed = compress::pack(&refs, &degrees, &self.codec);
+        self.stats.spills += 1;
+        self.stats.spilled_wire_bytes += packed.wire_bytes;
+        self.stats.resident_bytes -= rows.len() * 4;
+        let n_rows = degrees.len();
+        self.slots[block] = Slot::Spilled { packed, degrees, n_rows };
+    }
+
+    fn rehydrate(&mut self, block: usize) {
+        let slot =
+            std::mem::replace(&mut self.slots[block], Slot::Vacant);
+        let Slot::Spilled { packed, degrees, n_rows } = slot else {
+            unreachable!("rehydrate target must be spilled")
+        };
+        let mut rows_out: Vec<Vec<f32>> = Vec::new();
+        compress::unpack(&packed, &mut rows_out)
+            .expect("spill blob must rehydrate");
+        assert_eq!(rows_out.len(), n_rows, "rehydrated row count");
+        let mut rows = Vec::with_capacity(n_rows * self.dims);
+        for r in &rows_out {
+            assert_eq!(r.len(), self.dims);
+            rows.extend_from_slice(r);
+        }
+        self.stats.rehydrates += 1;
+        self.stats.resident_bytes += rows.len() * 4;
+        self.stats.peak_resident_bytes = self
+            .stats
+            .peak_resident_bytes
+            .max(self.stats.resident_bytes);
+        self.slots[block] = Slot::Resident { rows, degrees };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn block(n: usize, dims: usize, seed: u64) -> (Vec<f32>, Vec<u64>) {
+        let mut rng = Rng::new(seed);
+        let rows: Vec<f32> =
+            (0..n * dims).map(|_| rng.normal_f32(0.0, 3.0)).collect();
+        let degrees: Vec<u64> =
+            (0..n).map(|i| 1 + (i as u64 % 17)).collect();
+        (rows, degrees)
+    }
+
+    fn bits(xs: &[f32]) -> Vec<u32> {
+        xs.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn unbounded_store_is_pure_passthrough() {
+        let mut st = FeatureStore::with_budget_bytes(
+            3, 8, None, Codec::Lz4Only);
+        let blocks: Vec<_> =
+            (0..3).map(|i| block(20 + i, 8, i as u64)).collect();
+        for (i, (rows, degs)) in blocks.iter().enumerate() {
+            st.insert(i, rows.clone(), degs.clone());
+        }
+        for round in 0..3 {
+            for i in 0..3 {
+                assert!(st.is_resident(i), "round {round} block {i}");
+                assert_eq!(bits(st.get(i)), bits(&blocks[i].0));
+            }
+        }
+        assert_eq!(st.stats().spills, 0);
+        assert_eq!(st.stats().rehydrates, 0);
+        let expect: usize =
+            blocks.iter().map(|(r, _)| r.len() * 4).sum();
+        assert_eq!(st.stats().resident_bytes, expect);
+    }
+
+    #[test]
+    fn spill_roundtrip_is_bit_exact_with_quantizer_off() {
+        // 4 blocks of 4 KiB under a 10 KiB budget: at least one must
+        // spill, and every access must still be bit-identical
+        let dims = 32;
+        let n = 32; // 32 rows * 32 dims * 4 B = 4 KiB
+        let mut st = FeatureStore::with_budget_bytes(
+            4, dims, Some(10 * 1024), Codec::Lz4Only);
+        let blocks: Vec<_> =
+            (0..4).map(|i| block(n, dims, 100 + i as u64)).collect();
+        for (i, (rows, degs)) in blocks.iter().enumerate() {
+            st.insert(i, rows.clone(), degs.clone());
+        }
+        assert!(st.stats().spills > 0, "budget never forced a spill");
+        assert!(st.stats().resident_bytes <= 10 * 1024);
+        let mut rehydrated = 0;
+        for round in 0..3 {
+            for i in 0..4 {
+                let was_spilled = !st.is_resident(i);
+                rehydrated += usize::from(was_spilled);
+                assert_eq!(
+                    bits(st.get(i)),
+                    bits(&blocks[i].0),
+                    "round {round} block {i} (spilled={was_spilled})"
+                );
+            }
+        }
+        assert!(rehydrated > 0);
+        assert_eq!(st.stats().rehydrates, rehydrated);
+        assert!(st.stats().spilled_wire_bytes > 0);
+    }
+
+    #[test]
+    fn lru_keeps_the_hot_block_resident() {
+        let dims = 16;
+        let n = 16; // 1 KiB per block
+        let mut st = FeatureStore::with_budget_bytes(
+            3, dims, Some(2 * 1024), Codec::Lz4Only);
+        for i in 0..3 {
+            let (rows, degs) = block(n, dims, i as u64);
+            st.insert(i, rows, degs);
+        }
+        // 3 KiB inserted under 2 KiB: the coldest (block 0) spilled
+        assert!(!st.is_resident(0));
+        assert!(st.is_resident(2));
+        // touching 0 rehydrates it and evicts the now-coldest (1)
+        let _ = st.get(0);
+        assert!(st.is_resident(0));
+        assert!(!st.is_resident(1));
+    }
+
+    #[test]
+    fn oversized_hot_block_stays_resident() {
+        let dims = 16;
+        let mut st = FeatureStore::with_budget_bytes(
+            2, dims, Some(512), Codec::Lz4Only);
+        let (big, degs) = block(64, dims, 9); // 4 KiB > 512 B budget
+        st.insert(0, big.clone(), degs);
+        let (small, sdegs) = block(4, dims, 10);
+        st.insert(1, small, sdegs);
+        // serving needs the accessed rows resident even over budget
+        assert_eq!(bits(st.get(0)), bits(&big));
+        assert!(st.is_resident(0));
+        assert!(!st.is_resident(1), "everything else spilled");
+    }
+
+    #[test]
+    fn zero_and_one_row_blocks_survive_spill() {
+        let dims = 8;
+        let mut st = FeatureStore::with_budget_bytes(
+            3, dims, Some(256), Codec::Lz4Only);
+        st.insert(0, Vec::new(), Vec::new());
+        let (one, odegs) = block(1, dims, 5);
+        st.insert(1, one.clone(), odegs);
+        let (filler, fdegs) = block(32, dims, 6); // 1 KiB: evicts 0+1
+        st.insert(2, filler, fdegs);
+        assert!(st.get(0).is_empty());
+        assert_eq!(bits(st.get(1)), bits(&one));
+    }
+
+    #[test]
+    fn lossy_spill_codec_is_close_but_not_exact() {
+        let dims = 16;
+        let mut st = FeatureStore::with_budget_bytes(
+            2, dims, Some(1024), Codec::Uniform(8));
+        let mut rng = Rng::new(3);
+        let rows: Vec<f32> =
+            (0..32 * dims).map(|_| rng.f64() as f32).collect();
+        let degs: Vec<u64> = vec![4; 32];
+        st.insert(0, rows.clone(), degs); // 2 KiB > 1 KiB but hot
+        let (other, odegs) = block(16, dims, 4);
+        st.insert(1, other, odegs); // block 0 spills (lossily)
+        assert!(!st.is_resident(0));
+        let back = st.get(0).to_vec();
+        let max_err = rows
+            .iter()
+            .zip(&back)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0f32, f32::max);
+        assert!(max_err > 0.0, "uniform-8 cannot be exact here");
+        assert!(max_err < 0.05, "max err {max_err}");
+    }
+
+    #[test]
+    #[should_panic(expected = "spill codec")]
+    fn bounded_store_rejects_codec_none() {
+        let _ = FeatureStore::with_budget_bytes(
+            1, 4, Some(1024), Codec::None);
+    }
+}

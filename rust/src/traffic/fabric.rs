@@ -62,7 +62,7 @@ use crate::runtime::kernels::DEFAULT_TASK_DEADLINE_S;
 use crate::runtime::{Engine, EngineError};
 use crate::scheduler::diffusion::estimate_times;
 use crate::scheduler::{schedule, SchedulerConfig, SchedulerDecision};
-use crate::serving::collection;
+use crate::serving::collection::{self, CollectionIndex};
 use crate::serving::pipeline::{self, Placement, ServeOpts};
 use crate::util::cli::MAX_PIPELINE_DEPTH;
 use crate::util::json::{arr, num, obj, s, Json};
@@ -492,8 +492,10 @@ fn evacuate_detected_crashes(
                 }
                 svc.host_times =
                     estimate_times(svc.g, &svc.assignment, n, &eff);
+                svc.coll_index =
+                    CollectionIndex::build(svc.g, &svc.assignment, n);
                 svc.coll_s = collection_transfer_s(
-                    svc.g, &svc.payload, svc.dims, &svc.assignment,
+                    svc.g, &svc.payload, svc.dims, &svc.coll_index,
                     cluster, &svc.opts,
                 );
                 evac_s += svc.coll_s;
@@ -626,12 +628,13 @@ fn collection_transfer_s(
     g: &Graph,
     payload: &[f32],
     dims: usize,
-    assignment: &[u32],
+    idx: &CollectionIndex,
     cluster: &Cluster,
     opts: &ServeOpts,
 ) -> f64 {
-    let coll = collection::collect(g, payload, dims, assignment, cluster,
-                                   &opts.codec, opts.devices, opts.wan);
+    let coll = collection::collect_indexed(g, idx, payload, dims, cluster,
+                                           &opts.codec, opts.devices,
+                                           opts.wan);
     coll.per_fog_transfer_s.iter().cloned().fold(0f64, f64::max)
 }
 
@@ -664,6 +667,9 @@ struct Service<'a> {
     opts: ServeOpts,
     omegas: Vec<PerfModel>,
     assignment: Vec<u32>,
+    /// Placement-static collection index, rebuilt only when a
+    /// diffusion / replan / evacuation moves `assignment`.
+    coll_index: CollectionIndex,
     payload: Vec<f32>,
     dims: usize,
     coll_s: f64,
@@ -941,6 +947,7 @@ pub fn run_fabric_chaos<'a>(
                     opts: inp.opts,
                     omegas: inp.omegas,
                     assignment: Vec::new(),
+                    coll_index: CollectionIndex::empty(cluster.len()),
                     payload: Vec::new(),
                     dims: 0,
                     coll_s: 0.0,
@@ -1028,8 +1035,10 @@ pub fn run_fabric_chaos<'a>(
         )?;
         svc.payload = payload;
         svc.dims = dims;
+        svc.coll_index =
+            CollectionIndex::build(svc.g, &svc.assignment, n);
         svc.coll_s = collection_transfer_s(
-            svc.g, &svc.payload, svc.dims, &svc.assignment, cluster,
+            svc.g, &svc.payload, svc.dims, &svc.coll_index, cluster,
             &svc.opts,
         );
         svc.base_sync_s = ground.sync_s;
@@ -1323,9 +1332,11 @@ pub fn run_fabric_chaos<'a>(
                     }
                     svc.host_times = estimate_times(
                         svc.g, &svc.assignment, n, &eff_omegas);
+                    svc.coll_index = CollectionIndex::build(
+                        svc.g, &svc.assignment, n);
                     svc.coll_s = collection_transfer_s(
                         svc.g, &svc.payload, svc.dims,
-                        &svc.assignment, cluster, &svc.opts,
+                        &svc.coll_index, cluster, &svc.opts,
                     );
                 }
             }

@@ -53,7 +53,8 @@ use crate::profile::PerfModel;
 use crate::runtime::{Engine, EngineError};
 use crate::serving::pipeline::ServeOpts;
 use crate::util::json::{arr, num, obj, s, Json};
-use crate::util::provenance::{git_rev, utc_date_string};
+use crate::util::provenance::{git_rev, peak_rss_bytes,
+                              utc_date_string};
 
 use super::arrival::ArrivalKind;
 use super::batcher::BatchPolicy;
@@ -397,6 +398,10 @@ pub fn doc_json(dataset: &str, model: &str, net: &str, engine: &str,
         ("engine", s(engine)),
         ("runs", arr(runs)),
         ("kernel_benches", arr(kernels)),
+        (
+            "peak_rss_bytes",
+            peak_rss_bytes().map_or(Json::Null, |b| num(b as f64)),
+        ),
     ])
 }
 

@@ -176,6 +176,33 @@ pub fn parse_task_deadline(args: &Args,
     }
 }
 
+/// Upper bound for `--fog-mem-mb`: 1 TiB of per-fog feature budget is
+/// far beyond any single fog while still catching pasted byte counts.
+pub const MAX_FOG_MEM_MB: usize = 1 << 20;
+
+/// Validated `--fog-mem-mb` per-fog feature-memory budget in MiB
+/// (default `None` = unbounded, the exact pre-spill resident path).
+/// A bare `--fog-mem-mb` with no value, 0, non-numeric and absurd
+/// values are errors so callers can exit with CLI code 2, the same
+/// contract as `--kernel-threads`.
+pub fn parse_fog_mem_mb(args: &Args) -> Result<Option<usize>, String> {
+    if args.has("fog-mem-mb") {
+        return Err("--fog-mem-mb requires a value in MiB \
+                    (e.g. --fog-mem-mb 64)"
+            .to_string());
+    }
+    match args.get("fog-mem-mb") {
+        None => Ok(None),
+        Some(v) => match v.parse::<usize>() {
+            Ok(mb) if (1..=MAX_FOG_MEM_MB).contains(&mb) => Ok(Some(mb)),
+            _ => Err(format!(
+                "--fog-mem-mb must be an integer in \
+                 1..={MAX_FOG_MEM_MB} MiB (got {v})"
+            )),
+        },
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -276,6 +303,22 @@ mod tests {
         assert!(ok(&["--task-deadline", "inf"]).is_err());
         assert!(ok(&["--task-deadline", "nan"]).is_err());
         assert!(ok(&["--task-deadline", "soon"]).is_err());
+    }
+
+    #[test]
+    fn fog_mem_mb_validation() {
+        let ok = |xs: &[&str]| parse_fog_mem_mb(&Args::parse(
+            &v(xs), &["smoke"]));
+        assert_eq!(ok(&[]), Ok(None));
+        assert_eq!(ok(&["--fog-mem-mb", "64"]), Ok(Some(64)));
+        assert_eq!(ok(&["--fog-mem-mb=1"]), Ok(Some(1)));
+        assert!(ok(&["--fog-mem-mb", "0"]).is_err());
+        assert!(ok(&["--fog-mem-mb", "abc"]).is_err());
+        assert!(ok(&["--fog-mem-mb", "-4"]).is_err());
+        assert!(ok(&["--fog-mem-mb", "1048577"]).is_err());
+        // bare flag: the value was eaten by the shell or forgotten
+        assert!(ok(&["--fog-mem-mb"]).is_err());
+        assert!(ok(&["--fog-mem-mb", "--smoke"]).is_err());
     }
 
     #[test]

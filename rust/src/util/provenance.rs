@@ -1,9 +1,10 @@
-//! Run provenance for committed artifacts: the short git revision and
-//! the UTC civil date. Every benchmark artifact that outlives a PR
-//! (BENCH_kernels.json, BENCH_history.jsonl, BENCH_loadtest.json)
-//! stamps both, so a number in a working tree is always traceable to
-//! the code that produced it — regressions are attributable ACROSS
-//! runs, not just within one artifact.
+//! Run provenance for committed artifacts: the short git revision, the
+//! UTC civil date, and the process peak RSS. Every benchmark artifact
+//! that outlives a PR (BENCH_kernels.json, BENCH_history.jsonl,
+//! BENCH_loadtest.json, BENCH_scale.json) stamps all three, so a
+//! number in a working tree is always traceable to the code that
+//! produced it — and memory regressions are attributable ACROSS runs
+//! with one shared metric, not just within one artifact.
 
 /// Short git revision, or "unknown" outside a work tree.
 pub fn git_rev() -> String {
@@ -37,6 +38,23 @@ pub fn utc_date_string() -> String {
     format!("{y:04}-{m:02}-{d:02}")
 }
 
+/// Peak resident-set size of this process in bytes (`VmHWM` from
+/// `/proc/self/status`), or `None` where procfs is unavailable
+/// (non-Linux hosts). A monotone high-water mark: it never decreases
+/// within a process, so artifacts record it once at write time and
+/// within-run comparisons use logical-bytes accounting instead.
+pub fn peak_rss_bytes() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let kb: u64 =
+                rest.trim().trim_end_matches("kB").trim().parse().ok()?;
+            return Some(kb * 1024);
+        }
+    }
+    None
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -53,6 +71,20 @@ mod tests {
         let day: u32 = d[8..10].parse().unwrap();
         assert!((1..=12).contains(&month));
         assert!((1..=31).contains(&day));
+    }
+
+    #[test]
+    fn peak_rss_is_positive_and_monotone_on_linux() {
+        let first = peak_rss_bytes();
+        if cfg!(target_os = "linux") {
+            let a = first.expect("procfs VmHWM on linux");
+            assert!(a > 0);
+            // touching memory can only raise the high-water mark
+            let sink = vec![1u8; 1 << 20];
+            std::hint::black_box(&sink);
+            let b = peak_rss_bytes().unwrap();
+            assert!(b >= a, "VmHWM decreased: {a} -> {b}");
+        }
     }
 
     #[test]

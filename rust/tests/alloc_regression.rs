@@ -1,0 +1,134 @@
+//! Allocation-count regression gates for the scale tier's hot paths.
+//!
+//! A counting `#[global_allocator]` wraps `System` and the suite runs
+//! as ONE test (separate `#[test]`s would race on the shared counter):
+//!
+//!   A. streamed grounding (`subgraph::extract`) allocates strictly
+//!      less than the materialize-everything reference path;
+//!   B. `collect_indexed` with a prebuilt [`CollectionIndex`] allocates
+//!      strictly less than `collect`, which rebuilds the index per
+//!      request;
+//!   C. `sync_halo` performs ZERO allocations once the halo index and
+//!      state buffers exist — the split-borrow + `copy_from_slice`
+//!      rewrite must never regress back to per-row temporaries.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use fograph::compress::Codec;
+use fograph::exec::{build_halo_index, sync_halo};
+use fograph::fog::Cluster;
+use fograph::graph::{generate, subgraph};
+use fograph::net::NetKind;
+use fograph::serving::collection::{self, CollectionIndex};
+use fograph::util::rng::Rng;
+
+struct CountingAlloc;
+
+static ALLOC_CALLS: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize)
+                      -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// Allocation calls made while running `f` (alloc + realloc +
+/// alloc_zeroed; frees are not counted).
+fn allocs_during<R>(f: impl FnOnce() -> R) -> (usize, R) {
+    let before = ALLOC_CALLS.load(Ordering::Relaxed);
+    let out = f();
+    (ALLOC_CALLS.load(Ordering::Relaxed) - before, out)
+}
+
+#[test]
+fn hot_paths_hold_their_allocation_budgets() {
+    let n_fogs = 4usize;
+    let g = generate::rmat(2048, 8192, 9, (0.57, 0.19, 0.19, 0.05));
+    let assignment: Vec<u32> =
+        (0..g.num_vertices()).map(|v| (v % n_fogs) as u32).collect();
+
+    // -- A: streamed grounding beats materialize-everything ----------
+    // Warm both paths once so lazy runtime setup does not skew either.
+    let _ = subgraph::extract(&g, &assignment, n_fogs);
+    let _ = subgraph::extract_materialized(&g, &assignment, n_fogs);
+    let (streamed_allocs, (subs, plan)) =
+        allocs_during(|| subgraph::extract(&g, &assignment, n_fogs));
+    let (materialized_allocs, _) = allocs_during(|| {
+        subgraph::extract_materialized(&g, &assignment, n_fogs)
+    });
+    assert!(
+        streamed_allocs < materialized_allocs,
+        "streamed grounding must allocate less than the materialized \
+         path ({streamed_allocs} vs {materialized_allocs})"
+    );
+
+    // -- B: prebuilt collection index beats per-request rebuild ------
+    let dims = 16usize;
+    let cluster = Cluster::testbed(NetKind::Wifi);
+    let asn_c: Vec<u32> = (0..g.num_vertices())
+        .map(|v| (v % cluster.len()) as u32)
+        .collect();
+    let mut rng = Rng::new(41);
+    let feats: Vec<f32> = (0..g.num_vertices() * dims)
+        .map(|_| rng.normal_f32(0.0, 1.0))
+        .collect();
+    let idx = CollectionIndex::build(&g, &asn_c, cluster.len());
+    // Warm both entry points (thread-locals, lazy tables).
+    let _ = collection::collect(&g, &feats, dims, &asn_c, &cluster,
+                                &Codec::None, 64, false);
+    let _ = collection::collect_indexed(&g, &idx, &feats, dims, &cluster,
+                                        &Codec::None, 64, false);
+    let (indexed_allocs, _) = allocs_during(|| {
+        collection::collect_indexed(&g, &idx, &feats, dims, &cluster,
+                                    &Codec::None, 64, false)
+    });
+    let (unindexed_allocs, _) = allocs_during(|| {
+        collection::collect(&g, &feats, dims, &asn_c, &cluster,
+                            &Codec::None, 64, false)
+    });
+    assert!(
+        indexed_allocs < unindexed_allocs,
+        "indexed collection must allocate less than the index-per-call \
+         path ({indexed_allocs} vs {unindexed_allocs})"
+    );
+
+    // -- C: halo sync is allocation-free once buffers exist ----------
+    let dim = 8usize;
+    let batch = 2usize;
+    let halo_index = build_halo_index(&subs);
+    let mut states: Vec<Vec<f32>> = subs
+        .iter()
+        .map(|s| vec![0.5f32; batch * s.n_total() * dim])
+        .collect();
+    let warm =
+        sync_halo(&subs, &plan, &halo_index, &mut states, dim, batch);
+    assert!(warm > 0, "fixture must actually exchange halo rows");
+    let (sync_allocs, bytes) = allocs_during(|| {
+        sync_halo(&subs, &plan, &halo_index, &mut states, dim, batch)
+    });
+    assert_eq!(
+        sync_allocs, 0,
+        "sync_halo must not allocate on the steady-state path"
+    );
+    assert_eq!(bytes, warm, "byte accounting is deterministic");
+}

@@ -1,0 +1,118 @@
+//! Streamed-vs-materialized grounding parity (scale tier, satellite
+//! of the streamed-grounding tentpole): across seeded rmat / sbm /
+//! road topologies and several assignment families, the streamed
+//! [`GroundingStream`] path must reproduce the original materialize-
+//! everything extractor bit for bit — same sub-CSRs (vertex order,
+//! edge order, degrees) and the same transfer plan. The in-crate
+//! fixture test covers one hand-built graph; this suite covers the
+//! generator zoo the `repro scale` sweep actually runs on.
+
+use fograph::graph::{generate, subgraph, Graph};
+
+/// Assignment families the serving planners actually produce:
+/// contiguous blocks (scale sweep), modulo striping (worst-case halo),
+/// and a seeded pseudo-random map (replan churn).
+fn assignments(nv: usize, n_fogs: usize) -> Vec<(&'static str, Vec<u32>)> {
+    let contiguous: Vec<u32> = (0..nv)
+        .map(|v| (v as u64 * n_fogs as u64 / nv as u64) as u32)
+        .collect();
+    let modulo: Vec<u32> =
+        (0..nv).map(|v| (v % n_fogs) as u32).collect();
+    // LCG scramble: deterministic, hits every fog, no util deps.
+    let scrambled: Vec<u32> = (0..nv as u64)
+        .map(|v| {
+            let h = v
+                .wrapping_mul(6364136223846793005)
+                .wrapping_add(1442695040888963407);
+            ((h >> 33) % n_fogs as u64) as u32
+        })
+        .collect();
+    vec![
+        ("contiguous", contiguous),
+        ("modulo", modulo),
+        ("scrambled", scrambled),
+    ]
+}
+
+fn assert_parity(tag: &str, g: &Graph, n_fogs: usize) {
+    for (name, asn) in assignments(g.num_vertices(), n_fogs) {
+        let (subs_s, plan_s) = subgraph::extract(g, &asn, n_fogs);
+        let (subs_m, plan_m) =
+            subgraph::extract_materialized(g, &asn, n_fogs);
+        assert_eq!(subs_s.len(), subs_m.len(), "{tag}/{name}: sub count");
+        for (j, (s, m)) in subs_s.iter().zip(&subs_m).enumerate() {
+            assert_eq!(s, m, "{tag}/{name}: fog {j} sub-CSR differs");
+        }
+        assert_eq!(plan_s, plan_m, "{tag}/{name}: exchange plan differs");
+        // The plan must be internally coherent too: every transfer
+        // index addresses an owned vertex of the sending fog.
+        for (owner, row) in plan_s.transfers.iter().enumerate() {
+            let n_owned = subs_s[owner].n_local;
+            for cell in row {
+                for &idx in cell {
+                    assert!(
+                        (idx as usize) < n_owned,
+                        "{tag}/{name}: transfer index out of range"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn rmat_parity_across_fog_counts() {
+    for &(nv, ne, seed) in
+        &[(512usize, 2048usize, 7u64), (2000, 9000, 21), (4096, 16384, 99)]
+    {
+        let g = generate::rmat(nv, ne, seed, (0.57, 0.19, 0.19, 0.05));
+        for &k in &[2usize, 3, 7] {
+            assert_parity("rmat", &g, k);
+        }
+    }
+}
+
+#[test]
+fn sbm_parity_matches_community_structure() {
+    for &(nv, ne, comms, seed) in
+        &[(600usize, 2400usize, 4usize, 5u64), (1500, 7500, 6, 31)]
+    {
+        let (g, _) = generate::sbm(nv, ne, comms, 0.8, seed);
+        for &k in &[2usize, comms, comms + 1] {
+            assert_parity("sbm", &g, k);
+        }
+    }
+}
+
+#[test]
+fn road_parity_on_lane_graphs() {
+    for &(nv, ne, lanes, seed) in
+        &[(800usize, 1000usize, 4usize, 13u64), (3000, 3750, 8, 47)]
+    {
+        let (g, _) = generate::road_network(nv, ne, lanes, seed);
+        for &k in &[2usize, 5] {
+            assert_parity("road", &g, k);
+        }
+    }
+}
+
+#[test]
+fn degenerate_assignments_stay_bit_identical() {
+    let g = generate::rmat(1024, 4096, 3, (0.45, 0.22, 0.22, 0.11));
+    // All vertices on one fog of several (empty peers), and a fog
+    // count of 1 (no halo at all).
+    let all_on_two: Vec<u32> = vec![2; g.num_vertices()];
+    let (subs_s, plan_s) = subgraph::extract(&g, &all_on_two, 5);
+    let (subs_m, plan_m) =
+        subgraph::extract_materialized(&g, &all_on_two, 5);
+    assert_eq!(subs_s, subs_m);
+    assert_eq!(plan_s, plan_m);
+    assert_eq!(plan_s.total_vertices(), 0, "no cross-fog traffic");
+
+    let solo: Vec<u32> = vec![0; g.num_vertices()];
+    let (subs_s, plan_s) = subgraph::extract(&g, &solo, 1);
+    let (subs_m, plan_m) = subgraph::extract_materialized(&g, &solo, 1);
+    assert_eq!(subs_s, subs_m);
+    assert_eq!(plan_s, plan_m);
+    assert_eq!(subs_s[0].n_halo(), 0);
+}
