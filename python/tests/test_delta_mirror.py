@@ -1,0 +1,527 @@
+"""Pure-python mirror of the PR 10 incremental topology engine's
+mutation substrate (rust/src/graph/delta.rs): the ``DeltaCsr``
+(tombstoned base CSR + per-vertex sorted overflow + periodic
+compaction), the seeded ``ChurnPlan`` mutation stream, and the
+``Rng``/``mix64`` PRNG substrate it draws from (rust/src/util/rng.rs,
+SplitMix64-seeded Xoshiro256++ with Lemire's multiply-shift bound).
+
+The build container has no Rust toolchain (see ROADMAP.md caveat), so
+this mirror replicates the shipped arithmetic statement-for-statement
+— 64-bit wrapping ops masked by hand — and checks the central claims
+the Rust suites (delta.rs unit tests + tests/churn_parity.rs) make:
+
+* a CSR mutated in place through any seeded churn trace stays
+  IDENTICAL to a from-scratch rebuild of its live topology: same
+  ascending neighbor walks, same live-edge pairs, same witnesses;
+* compaction fires when tombstones + overflow exceed half the stored
+  arcs, and is invisible to every neighbor walk;
+* ``targets = max(1, floor(rate x live))`` — a trickle rate of 1e-7
+  yields exactly one mutation per round (the partial re-ground gate
+  in ``repro churn`` depends on this);
+* spec canonicalization (sort by op rank) makes the mutation stream
+  invariant under --churn declaration order;
+* one edge delta touches at most the two endpoint owners — the upper
+  bound the partition-scoped invalidation plane is built on;
+* vertex deletion leaves a dead degree-0 id that the next add-vertex
+  revives (smallest-first), keeping the id space dense.
+"""
+
+MASK = (1 << 64) - 1
+
+CHURN_SALT = 0xDE17A5EE
+TOMBSTONE = (1 << 32) - 1
+OP_RETRIES = 64
+
+# op -> canonical rank (delta.rs ChurnOp::rank)
+RANK = {"add-edge": 0, "del-edge": 1, "add-vertex": 2, "del-vertex": 3}
+
+
+def _mul(a, b):
+    return (a * b) & MASK
+
+
+def _add(a, b):
+    return (a + b) & MASK
+
+
+def _rotl(x, k):
+    return ((x << k) | (x >> (64 - k))) & MASK
+
+
+def mix64(x):
+    """util/rng.rs mix64: stateless SplitMix64 finalizer."""
+    z = _add(x, 0x9E3779B97F4A7C15)
+    z = _mul(z ^ (z >> 30), 0xBF58476D1CE4E5B9)
+    z = _mul(z ^ (z >> 27), 0x94D049BB133111EB)
+    return z ^ (z >> 31)
+
+
+class SplitMix64:
+    def __init__(self, seed):
+        self.state = seed & MASK
+
+    def next_u64(self):
+        self.state = _add(self.state, 0x9E3779B97F4A7C15)
+        z = self.state
+        z = _mul(z ^ (z >> 30), 0xBF58476D1CE4E5B9)
+        z = _mul(z ^ (z >> 27), 0x94D049BB133111EB)
+        return z ^ (z >> 31)
+
+
+class Rng:
+    """util/rng.rs Rng: Xoshiro256++ seeded from SplitMix64."""
+
+    def __init__(self, seed):
+        sm = SplitMix64(seed)
+        self.s = [sm.next_u64() for _ in range(4)]
+
+    def next_u64(self):
+        s = self.s
+        out = _add(_rotl(_add(s[0], s[3]), 23), s[0])
+        t = (s[1] << 17) & MASK
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = _rotl(s[3], 45)
+        return out
+
+    def below(self, n):
+        """Lemire multiply-shift: (next * n) >> 64."""
+        assert n > 0
+        return (self.next_u64() * n) >> 64
+
+
+# ---------------------------------------------------------------------------
+# DeltaCsr mirror
+# ---------------------------------------------------------------------------
+
+
+def csr_from_undirected(num_vertices, edges):
+    """graph/csr.rs from_undirected_edges: counting sort, then each
+    adjacency row sorted ascending."""
+    adj = [[] for _ in range(num_vertices)]
+    for a, b in edges:
+        assert a != b
+        adj[a].append(b)
+        adj[b].append(a)
+    indptr = [0]
+    indices = []
+    for row in adj:
+        indices.extend(sorted(row))
+        indptr.append(len(indices))
+    return indptr, indices
+
+
+class DeltaCsr:
+    """delta.rs DeltaCsr: symmetric CSR with TOMBSTONE holes for
+    deletions, per-vertex sorted overflow for insertions, periodic
+    compaction, and incremental staleness witnesses."""
+
+    def __init__(self, num_vertices, edges):
+        self.indptr, self.indices = csr_from_undirected(
+            num_vertices, edges
+        )
+        nv = num_vertices
+        self.extra = [[] for _ in range(nv)]
+        self.live_deg = [
+            self.indptr[v + 1] - self.indptr[v] for v in range(nv)
+        ]
+        self.alive = [True] * nv
+        self.dead = set()
+        self.epoch = 0
+        self.n_dead_slots = 0
+        self.n_extra = 0
+        self.n_live_vertices = nv
+        self.n_live_dir_edges = len(self.indices)
+        self.compactions = 0
+
+    def num_vertices(self):
+        return len(self.indptr) - 1
+
+    def n_live_undirected(self):
+        return self.n_live_dir_edges // 2
+
+    def base_row(self, v):
+        return self.indices[self.indptr[v]:self.indptr[v + 1]]
+
+    def neighbors(self, v):
+        """Sorted merge of live base entries and the overflow row —
+        ascending, exactly delta.rs for_neighbors."""
+        base = [x for x in self.base_row(v) if x != TOMBSTONE]
+        ex = self.extra[v]
+        out, bi, ei = [], 0, 0
+        while bi < len(base) or ei < len(ex):
+            if bi < len(base) and (
+                ei >= len(ex) or base[bi] <= ex[ei]
+            ):
+                out.append(base[bi])
+                bi += 1
+            else:
+                out.append(ex[ei])
+                ei += 1
+        return out
+
+    def has_edge(self, u, v):
+        return v in self.base_row(u) or v in self.extra[u]
+
+    def _insert_arc(self, u, v):
+        row = self.extra[u]
+        pos = 0
+        while pos < len(row) and row[pos] < v:
+            pos += 1
+        row.insert(pos, v)
+        self.n_extra += 1
+
+    def _remove_arc(self, u, v):
+        lo, hi = self.indptr[u], self.indptr[u + 1]
+        for slot in range(lo, hi):
+            if self.indices[slot] == v:
+                self.indices[slot] = TOMBSTONE
+                self.n_dead_slots += 1
+                return
+        self.extra[u].remove(v)
+        self.n_extra -= 1
+
+    def add_edge(self, u, v):
+        assert u != v and self.alive[u] and self.alive[v]
+        assert not self.has_edge(u, v)
+        self._insert_arc(u, v)
+        self._insert_arc(v, u)
+        self.live_deg[u] += 1
+        self.live_deg[v] += 1
+        self.n_live_dir_edges += 2
+        self.epoch += 1
+
+    def del_edge(self, u, v):
+        self._remove_arc(u, v)
+        self._remove_arc(v, u)
+        self.live_deg[u] -= 1
+        self.live_deg[v] -= 1
+        self.n_live_dir_edges -= 2
+        self.epoch += 1
+
+    def add_vertex(self):
+        self.epoch += 1
+        self.n_live_vertices += 1
+        if self.dead:
+            v = min(self.dead)  # revive the smallest dead id
+            self.dead.remove(v)
+            self.alive[v] = True
+            return v, True
+        v = self.num_vertices()
+        self.indptr.append(self.indptr[-1])
+        self.extra.append([])
+        self.live_deg.append(0)
+        self.alive.append(True)
+        return v, False
+
+    def del_vertex(self, v):
+        assert self.alive[v]
+        nbrs = self.neighbors(v)
+        for u in nbrs:
+            self.del_edge(v, u)
+        self.alive[v] = False
+        self.dead.add(v)
+        self.n_live_vertices -= 1
+        self.epoch += 1
+        return nbrs
+
+    def maybe_compact(self):
+        if (self.n_dead_slots + self.n_extra) * 2 <= max(
+            len(self.indices), 64
+        ):
+            return False
+        indptr, indices = [0], []
+        for v in range(self.num_vertices()):
+            indices.extend(self.neighbors(v))
+            indptr.append(len(indices))
+        self.indptr, self.indices = indptr, indices
+        self.extra = [[] for _ in range(self.num_vertices())]
+        self.n_dead_slots = 0
+        self.n_extra = 0
+        self.compactions += 1
+        return True
+
+    def live_edge_pairs(self):
+        pairs = []
+        for v in range(self.num_vertices()):
+            for u in self.neighbors(v):
+                if u > v:
+                    pairs.append((v, u))
+        return pairs
+
+    def check_witnesses(self):
+        """delta.rs check_witnesses: recount everything against the
+        incremental counters; every row strictly ascending; dead
+        vertices have no edges."""
+        assert (
+            sum(self.alive) == self.n_live_vertices
+        ), "live-vertex witness"
+        assert len(self.dead) == self.num_vertices() - sum(self.alive)
+        dir_edges = 0
+        for v in range(self.num_vertices()):
+            row = self.neighbors(v)
+            assert row == sorted(set(row)), f"row {v} not ascending"
+            assert len(row) == self.live_deg[v], f"live_deg[{v}]"
+            if not self.alive[v]:
+                assert not row, f"dead vertex {v} has edges"
+            dir_edges += len(row)
+        assert dir_edges == self.n_live_dir_edges, "edge witness"
+        dead_slots = sum(
+            1 for x in self.indices if x == TOMBSTONE
+        )
+        assert dead_slots == self.n_dead_slots, "tombstone witness"
+        assert (
+            sum(len(r) for r in self.extra) == self.n_extra
+        ), "overflow witness"
+
+
+# ---------------------------------------------------------------------------
+# ChurnPlan mirror
+# ---------------------------------------------------------------------------
+
+
+def targets(rate, live):
+    """delta.rs ChurnPlan::targets: max(1, floor(rate x live))."""
+    import math
+
+    return max(1, int(math.floor(rate * live)))
+
+
+class ChurnPlan:
+    """delta.rs ChurnPlan: canonicalized specs (sorted by op rank)
+    plus a dedicated Rng stream. Specs are (op, rate, degree)."""
+
+    def __init__(self, specs, seed):
+        self.specs = sorted(specs, key=lambda s: RANK[s[0]])
+        self.rng = Rng(mix64((seed ^ CHURN_SALT) & MASK))
+
+    def pick_live(self, csr):
+        nv = csr.num_vertices()
+        for _ in range(OP_RETRIES):
+            v = self.rng.below(nv)
+            if csr.alive[v]:
+                return v
+        return None
+
+    def round(self, csr):
+        deltas = []
+        for op, rate, degree in self.specs:
+            if op == "add-edge":
+                n = targets(rate, max(csr.n_live_undirected(), 1))
+                for _ in range(n):
+                    for _ in range(OP_RETRIES):
+                        u = self.pick_live(csr)
+                        v = self.pick_live(csr)
+                        if u is None or v is None:
+                            break
+                        if u == v or csr.has_edge(u, v):
+                            continue
+                        csr.add_edge(u, v)
+                        deltas.append(
+                            ("add-edge", min(u, v), max(u, v))
+                        )
+                        break
+            elif op == "del-edge":
+                n = targets(rate, max(csr.n_live_undirected(), 1))
+                for _ in range(n):
+                    for _ in range(OP_RETRIES):
+                        u = self.pick_live(csr)
+                        if u is None:
+                            break
+                        d = csr.live_deg[u]
+                        if d == 0:
+                            continue
+                        k = self.rng.below(d)
+                        v = csr.neighbors(u)[k]
+                        csr.del_edge(u, v)
+                        deltas.append(
+                            ("del-edge", min(u, v), max(u, v))
+                        )
+                        break
+            elif op == "add-vertex":
+                n = targets(rate, csr.n_live_vertices)
+                for _ in range(n):
+                    v, revived = csr.add_vertex()
+                    nbrs = []
+                    for _ in range(degree):
+                        for _ in range(OP_RETRIES):
+                            u = self.pick_live(csr)
+                            if u is None:
+                                break
+                            if (
+                                u == v
+                                or u in nbrs
+                                or csr.has_edge(v, u)
+                            ):
+                                continue
+                            csr.add_edge(v, u)
+                            nbrs.append(u)
+                            break
+                    deltas.append(("add-vertex", v, revived, nbrs))
+            elif op == "del-vertex":
+                n = targets(rate, csr.n_live_vertices)
+                for _ in range(n):
+                    if csr.n_live_vertices <= 2:
+                        break
+                    v = self.pick_live(csr)
+                    if v is None:
+                        break
+                    nbrs = csr.del_vertex(v)
+                    deltas.append(("del-vertex", v, nbrs))
+        return deltas
+
+
+def seed_graph(nv=240, ne=900, seed=0xF09):
+    """Seeded random simple graph through the mirrored Rng, so the
+    fixture itself is reproducible."""
+    rng = Rng(seed)
+    edges = set()
+    while len(edges) < ne:
+        u = rng.below(nv)
+        v = rng.below(nv)
+        if u != v:
+            edges.add((min(u, v), max(u, v)))
+    return nv, sorted(edges)
+
+
+MIXED = [
+    ("add-edge", 0.01, 2),
+    ("del-edge", 0.008, 2),
+    ("add-vertex", 0.004, 3),
+    ("del-vertex", 0.002, 2),
+]
+
+
+# ---------------------------------------------------------------------------
+# tests
+# ---------------------------------------------------------------------------
+
+
+def test_rng_mirror_is_deterministic_and_bounded():
+    a, b = Rng(42), Rng(42)
+    assert [a.next_u64() for _ in range(100)] == [
+        b.next_u64() for _ in range(100)
+    ]
+    assert Rng(1).next_u64() != Rng(2).next_u64()
+    r = Rng(7)
+    seen = set()
+    for _ in range(1000):
+        x = r.below(10)
+        assert 0 <= x < 10
+        seen.add(x)
+    assert seen == set(range(10))
+    # mix64 of the shared salt is how every per-service churn stream
+    # is derived — stateless, so equal inputs give equal streams
+    assert mix64(CHURN_SALT) == mix64(CHURN_SALT)
+    assert mix64(0) != mix64(1)
+
+
+def test_mutated_csr_equals_from_scratch_rebuild():
+    nv, edges = seed_graph()
+    csr = DeltaCsr(nv, edges)
+    plan = ChurnPlan(MIXED, seed=17)
+    for _ in range(6):
+        plan.round(csr)
+        csr.maybe_compact()
+        csr.check_witnesses()
+        # the parity contract: live adjacency after in-place mutation
+        # == a from-scratch CSR rebuilt from the live edge pairs
+        rb_indptr, rb_indices = csr_from_undirected(
+            csr.num_vertices(), csr.live_edge_pairs()
+        )
+        for v in range(csr.num_vertices()):
+            assert (
+                csr.neighbors(v)
+                == rb_indices[rb_indptr[v]:rb_indptr[v + 1]]
+            ), f"vertex {v} diverges from the rebuilt CSR"
+
+
+def test_compaction_fires_under_heavy_deletion_and_is_invisible():
+    nv, edges = seed_graph(160, 1200, seed=5)
+    csr = DeltaCsr(nv, edges)
+    plan = ChurnPlan(
+        [("del-edge", 0.4, 2), ("add-edge", 0.1, 2)], seed=31
+    )
+    for _ in range(10):
+        plan.round(csr)
+        before = [csr.neighbors(v) for v in range(csr.num_vertices())]
+        csr.maybe_compact()
+        after = [csr.neighbors(v) for v in range(csr.num_vertices())]
+        assert before == after, "compaction changed a neighbor walk"
+        csr.check_witnesses()
+    assert csr.compactions > 0, (
+        "a 40%-per-round deletion trace must trip the half-stored-"
+        "arcs compaction threshold"
+    )
+
+
+def test_trickle_rate_yields_exactly_one_mutation_per_round():
+    assert targets(1e-7, 10**6) == 1
+    assert targets(0.5, 10) == 5
+    assert targets(0.0049, 1000) == 4  # floor, not round
+    nv, edges = seed_graph()
+    csr = DeltaCsr(nv, edges)
+    plan = ChurnPlan([("del-edge", 1e-7, 2)], seed=91)
+    for _ in range(4):
+        deltas = plan.round(csr)
+        assert len(deltas) == 1
+        csr.check_witnesses()
+
+
+def test_spec_declaration_order_is_canonicalized_away():
+    fwd = [("add-edge", 0.02, 2), ("del-vertex", 0.005, 2)]
+    rev = list(reversed(fwd))
+
+    def run(specs):
+        nv, edges = seed_graph(180, 700, seed=3)
+        csr = DeltaCsr(nv, edges)
+        plan = ChurnPlan(specs, seed=55)
+        trace = []
+        for _ in range(4):
+            trace.append(plan.round(csr))
+        return trace, csr.live_edge_pairs()
+
+    assert run(fwd) == run(rev)
+
+
+def test_edge_delta_touches_at_most_two_owners():
+    # the invalidation plane's upper bound: one edge delta can dirty
+    # only the owners of its two endpoints — every other fog's
+    # grounding is untouched by construction
+    nv, edges = seed_graph()
+    n_fogs = 8
+    owner = [
+        (mix64(v) % n_fogs) for v in range(nv + 64)
+    ]  # slack for appended ids
+    csr = DeltaCsr(nv, edges)
+    plan = ChurnPlan([("del-edge", 1e-7, 2)], seed=91)
+    for _ in range(5):
+        deltas = plan.round(csr)
+        (kind, u, v) = deltas[0]
+        assert kind == "del-edge"
+        touched = {owner[u], owner[v]}
+        assert len(touched) <= 2
+        assert n_fogs - len(touched) >= n_fogs - 2
+
+
+def test_vertex_delete_then_revive_keeps_id_space_dense():
+    nv, edges = seed_graph(120, 400, seed=9)
+    csr = DeltaCsr(nv, edges)
+    # delete two vertices, revive one: smallest dead id comes back
+    a, b = 7, 3
+    csr.del_vertex(a)
+    csr.del_vertex(b)
+    assert not csr.alive[a] and not csr.alive[b]
+    assert csr.live_deg[a] == 0 and csr.live_deg[b] == 0
+    v, revived = csr.add_vertex()
+    assert (v, revived) == (min(a, b), True)
+    # a second add with no dead ids left appends a fresh one
+    v2, revived2 = csr.add_vertex()
+    assert (v2, revived2) == (max(a, b), True)
+    v3, revived3 = csr.add_vertex()
+    assert (v3, revived3) == (nv, False)
+    assert csr.num_vertices() == nv + 1
+    csr.check_witnesses()

@@ -1,0 +1,503 @@
+//! `repro churn` — the streaming-graph tier (ROADMAP item 2): sweeps
+//! seeded rmat / road graphs under a mixed topology-mutation trace and
+//! races the incremental topology engine against the full-rebuild
+//! baseline a static-topology system would have to run:
+//!
+//! * **headline phase** (~1% churn per round) — every round applies
+//!   the deltas in place ([`TopologyEngine::churn_round`]: tombstoned
+//!   CSR edits, boundary-only refinement, partition-scoped
+//!   re-grounding) and then times the baseline doing the same round's
+//!   work from scratch (rebuild the CSR, multilevel repartition,
+//!   re-ground every fog, rebuild the collection index). The recorded
+//!   speedup must clear [`SPEEDUP_GATE`]x at the top tier (non-smoke).
+//! * **trickle phase** (a single delta per round) — proves the
+//!   invalidation is actually partition-scoped: every round must
+//!   leave fogs bit-identical (`preserved > 0`), and the per-fog
+//!   feature-store blocks refreshed ONLY for dirty fogs must still
+//!   match the engine's state for every fog afterwards.
+//!
+//! Both phases run the full bit-parity gate each round
+//! ([`TopologyEngine::parity_check`]: sub-CSRs, exchange plan,
+//! fingerprints vs a from-scratch rebuild) plus a served-output gate
+//! (one BSP neighbor-sum round, bitwise f32 comparison) and a
+//! collection-index parity gate. Results land in BENCH_churn.json plus
+//! a provenance-stamped line in BENCH_history.jsonl; any gate
+//! violation fails the command.
+
+use std::io::Write;
+
+use crate::compress::Codec;
+use crate::graph::delta::{bsp_aggregate, ChurnPlan, ChurnSpec,
+                          TopologyEngine};
+use crate::graph::subgraph;
+use crate::graph::{generate, Graph};
+use crate::obs::clock::Stopwatch;
+use crate::partition::{partition, MultilevelParams};
+use crate::serving::collection::CollectionIndex;
+use crate::serving::store::FeatureStore;
+use crate::util::cli::Args;
+use crate::util::json::{arr, num, obj, s, Json};
+use crate::util::provenance::{git_rev, peak_rss_bytes,
+                              utc_date_string};
+use crate::util::rng::Rng;
+
+/// Feature width for the served-output gate (small: topology, not
+/// payload, is this tier's axis).
+const DIMS: usize = 8;
+/// Headline churn rounds per point.
+const ROUNDS: usize = 2;
+/// Trickle rounds per point.
+const TRICKLE_ROUNDS: usize = 3;
+/// Required incremental-over-rebuild speedup at the top tier.
+const SPEEDUP_GATE: f64 = 10.0;
+
+/// ~1% of live vertices mutated per round, mixed across all four ops.
+fn headline_specs() -> Vec<ChurnSpec> {
+    ["add-edge@rate=0.004", "del-edge@rate=0.003",
+     "add-vertex@rate=0.002,degree=3", "del-vertex@rate=0.001"]
+        .iter()
+        .map(|t| ChurnSpec::parse(t).expect("static spec"))
+        .collect()
+}
+
+/// One delta per round: floor(rate * live) clamps to 1, so each round
+/// touches the minimum possible fog set.
+fn trickle_specs() -> Vec<ChurnSpec> {
+    vec![ChurnSpec::parse("del-edge@rate=0.0000001")
+        .expect("static spec")]
+}
+
+struct Point {
+    topology: &'static str,
+    vertices: usize,
+    edges: usize,
+}
+
+fn sweep(smoke: bool) -> Vec<Point> {
+    let mut pts = Vec::new();
+    let rmat_v: &[usize] = if smoke {
+        &[16_384, 32_768]
+    } else {
+        &[262_144, 1_048_576]
+    };
+    for &v in rmat_v {
+        pts.push(Point { topology: "rmat", vertices: v, edges: 4 * v });
+    }
+    let road_v: &[usize] =
+        if smoke { &[16_384] } else { &[524_288] };
+    for &v in road_v {
+        pts.push(Point {
+            topology: "road",
+            vertices: v,
+            edges: v + v / 4,
+        });
+    }
+    pts
+}
+
+fn generate_graph(p: &Point) -> Graph {
+    match p.topology {
+        "rmat" => generate::rmat(p.vertices, p.edges, 11,
+                                 (0.57, 0.19, 0.19, 0.05)),
+        "road" => generate::road_network(p.vertices, p.edges, 4, 13).0,
+        other => unreachable!("unknown topology {other}"),
+    }
+}
+
+fn rss_json() -> Json {
+    match peak_rss_bytes() {
+        Some(b) => num(b as f64),
+        None => Json::Null,
+    }
+}
+
+/// Grow the global feature table to the engine's universe (appended
+/// vertices read zero rows, deterministically).
+fn grow_features(features: &mut Vec<f32>, nv: usize) {
+    if features.len() < nv * DIMS {
+        features.resize(nv * DIMS, 0.0);
+    }
+}
+
+/// The full-rebuild baseline for one round: rebuild the live CSR from
+/// scratch, multilevel-repartition it, re-ground every fog, rebuild
+/// the collection index. Returns wall seconds.
+fn rebuild_round_s(engine: &TopologyEngine, fogs: usize) -> f64 {
+    let t = Stopwatch::start();
+    let rebuilt = engine.csr.to_graph();
+    let part = partition(&rebuilt, fogs, &MultilevelParams::default());
+    let (subs, plan) =
+        subgraph::extract_materialized(&rebuilt, &part.assignment,
+                                       fogs);
+    let idx =
+        CollectionIndex::build(&rebuilt, &part.assignment, fogs);
+    let s = t.elapsed_s();
+    // keep the arms honest: the baseline's outputs must not be
+    // optimized away, and a rebuild that lost vertices is a bug
+    assert_eq!(subs.len(), fogs);
+    assert!(plan.total_vertices() < usize::MAX);
+    assert_eq!(
+        idx.by_fog.iter().map(Vec::len).sum::<usize>(),
+        rebuilt.num_vertices()
+    );
+    s
+}
+
+/// Every-round correctness gates: full bit parity (subs, plan,
+/// fingerprints), collection-index parity, and one bitwise-compared
+/// BSP round over the current features.
+fn round_gates(engine: &TopologyEngine, features: &[f32], fogs: usize,
+               what: &str) -> Result<(), String> {
+    engine
+        .parity_check()
+        .map_err(|e| format!("{what}: {e}"))?;
+    let rebuilt = engine.csr.to_graph();
+    let ref_idx =
+        CollectionIndex::build(&rebuilt, &engine.assignment, fogs);
+    let (by_fog, degrees) = engine.collection_rows();
+    if ref_idx.by_fog != by_fog || ref_idx.degrees != degrees {
+        return Err(format!(
+            "{what}: incremental collection rows != rebuilt index"
+        ));
+    }
+    let (ref_subs, ref_plan) =
+        subgraph::extract_materialized(&rebuilt, &engine.assignment,
+                                       fogs);
+    let served = bsp_aggregate(&engine.subs, &engine.plan,
+                               &engine.assignment, features, DIMS);
+    let ref_served = bsp_aggregate(&ref_subs, &ref_plan,
+                                   &engine.assignment, features, DIMS);
+    let bitwise = served.len() == ref_served.len()
+        && served
+            .iter()
+            .zip(&ref_served)
+            .all(|(a, b)| a.to_bits() == b.to_bits());
+    if !bitwise {
+        return Err(format!(
+            "{what}: served outputs differ from rebuilt (bitwise f32)"
+        ));
+    }
+    Ok(())
+}
+
+/// Refresh per-fog feature-store blocks for the fogs a round dirtied
+/// (one block per fog: owned rows + live degrees), then demand every
+/// fog's stored block — refreshed or untouched — matches the engine.
+fn store_gate(stores: &mut [FeatureStore], engine: &TopologyEngine,
+              features: &[f32], dirty: &[u32], what: &str)
+              -> Result<usize, String> {
+    let (by_fog, degrees) = engine.collection_rows();
+    let mut refreshed = 0usize;
+    for &j in dirty {
+        let j = j as usize;
+        let mut rows =
+            Vec::with_capacity(by_fog[j].len() * DIMS);
+        for &v in &by_fog[j] {
+            let v = v as usize;
+            rows.extend_from_slice(
+                &features[v * DIMS..(v + 1) * DIMS]);
+        }
+        stores[j].insert(0, rows, degrees[j].clone());
+        refreshed += 1;
+    }
+    for (j, store) in stores.iter_mut().enumerate() {
+        let rows = store.get(0);
+        let want_rows = by_fog[j].len() * DIMS;
+        if rows.len() != want_rows {
+            return Err(format!(
+                "{what}: fog {j} store holds {} rows-bytes, engine \
+                 owns {want_rows}",
+                rows.len()
+            ));
+        }
+        for (i, &v) in by_fog[j].iter().enumerate() {
+            let v = v as usize;
+            let got = &rows[i * DIMS..(i + 1) * DIMS];
+            let want = &features[v * DIMS..(v + 1) * DIMS];
+            if got
+                .iter()
+                .zip(want)
+                .any(|(a, b)| a.to_bits() != b.to_bits())
+            {
+                return Err(format!(
+                    "{what}: fog {j} stale store row for vertex {v} \
+                     (partition-scoped store invalidation missed it)"
+                ));
+            }
+        }
+    }
+    Ok(refreshed)
+}
+
+struct PointOutcome {
+    row: Json,
+    speedup: f64,
+    trickle_preserved: u64,
+}
+
+fn run_point(p: &Point, fogs: usize) -> Result<PointOutcome, String> {
+    let g = generate_graph(p);
+    let nv = g.num_vertices();
+    let mut rng = Rng::new(29 + nv as u64);
+    let mut features: Vec<f32> =
+        (0..nv * DIMS).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let part = partition(&g, fogs, &MultilevelParams::default());
+
+    // ---- headline phase: ~1% churn, incremental vs full rebuild -----
+    let mut engine = TopologyEngine::new(&g, &part.assignment, fogs);
+    let mut plan = ChurnPlan::new(&headline_specs(), 41 + nv as u64);
+    let mut incr_s = 0f64;
+    let mut rebuild_s = 0f64;
+    let mut deltas = 0usize;
+    for round in 0..ROUNDS {
+        let rep = engine.churn_round(&mut plan);
+        let t = Stopwatch::start();
+        let (by_fog, degrees) = engine.collection_rows();
+        let _idx = CollectionIndex::from_parts(by_fog, degrees);
+        incr_s += rep.apply_s + t.elapsed_s();
+        deltas += rep.deltas;
+        grow_features(&mut features, engine.csr.num_vertices());
+        rebuild_s += rebuild_round_s(&engine, fogs);
+        round_gates(&engine, &features, fogs,
+                    &format!("{} V={nv} headline round {round}",
+                             p.topology))?;
+    }
+    let speedup = rebuild_s / incr_s.max(1e-12);
+    let headline = engine.summary();
+
+    // ---- trickle phase: one delta per round, preservation gates -----
+    let mut engine = TopologyEngine::new(&g, &part.assignment, fogs);
+    let mut plan = ChurnPlan::new(&trickle_specs(), 43 + nv as u64);
+    let mut features: Vec<f32> =
+        (0..nv * DIMS).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let mut stores: Vec<FeatureStore> = (0..fogs)
+        .map(|_| FeatureStore::new(1, DIMS, None, Codec::Lz4Only))
+        .collect();
+    // seed every store from the grounded state (round "-1": all dirty)
+    let all: Vec<u32> = (0..fogs as u32).collect();
+    store_gate(&mut stores, &engine, &features, &all,
+               &format!("{} V={nv} trickle seed", p.topology))?;
+    let mut trickle_preserved = 0u64;
+    let mut blocks_refreshed = 0usize;
+    for round in 0..TRICKLE_ROUNDS {
+        let what =
+            format!("{} V={nv} trickle round {round}", p.topology);
+        let rep = engine.churn_round(&mut plan);
+        if rep.preserved == 0 {
+            return Err(format!(
+                "{what}: single-delta round preserved no fog — \
+                 invalidation is not partition-scoped"
+            ));
+        }
+        trickle_preserved += rep.preserved as u64;
+        grow_features(&mut features, engine.csr.num_vertices());
+        // stores: refresh exactly the structurally-dirty fogs (owned
+        // rows/degrees only move there), then verify all of them
+        blocks_refreshed += store_gate(&mut stores, &engine,
+                                       &features, &rep.dirty, &what)?;
+        round_gates(&engine, &features, fogs, &what)?;
+    }
+    let trickle = engine.summary();
+    if trickle.stats.partial_rounds != TRICKLE_ROUNDS as u64 {
+        return Err(format!(
+            "{} V={nv}: {} of {TRICKLE_ROUNDS} trickle rounds were \
+             partial",
+            p.topology, trickle.stats.partial_rounds
+        ));
+    }
+
+    println!(
+        "{:>4} V={nv:>8} E={:>8}  incr {:>8.4}s vs rebuild \
+         {:>8.3}s  ({speedup:>6.1}x)  trickle preserved \
+         {trickle_preserved}/{} fog-rounds",
+        p.topology,
+        g.num_edges(),
+        incr_s,
+        rebuild_s,
+        TRICKLE_ROUNDS * fogs,
+    );
+
+    let row = obj(vec![
+        ("topology", s(p.topology)),
+        ("vertices", num(nv as f64)),
+        ("edges", num(g.num_edges() as f64)),
+        ("fogs", num(fogs as f64)),
+        ("dims", num(DIMS as f64)),
+        ("rounds", num(ROUNDS as f64)),
+        ("deltas", num(deltas as f64)),
+        ("incremental_s", num(incr_s)),
+        ("rebuild_s", num(rebuild_s)),
+        ("speedup", num(speedup)),
+        ("headline_churn", headline.json()),
+        ("trickle_rounds", num(TRICKLE_ROUNDS as f64)),
+        (
+            "trickle_preserved_fog_rounds",
+            num(trickle_preserved as f64),
+        ),
+        (
+            "trickle_store_blocks_refreshed",
+            num(blocks_refreshed as f64),
+        ),
+        ("trickle_churn", trickle.json()),
+    ]);
+    Ok(PointOutcome { row, speedup, trickle_preserved })
+}
+
+pub fn cmd(args: &Args) -> i32 {
+    let smoke = args.has("smoke");
+    let out_path = args.get_or("out", "BENCH_churn.json");
+    let history_path = args.get_or("history", "BENCH_history.jsonl");
+    let fogs = match args.get("fogs") {
+        None => 6,
+        Some(v) => match crate::util::cli::parse_bounded_usize(
+            "--fogs", v, 2, 64) {
+            Ok(n) => n,
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        },
+    };
+    if let Err(e) = crate::util::cli::probe_writable(out_path) {
+        eprintln!("--out: {e}");
+        return 2;
+    }
+    if let Err(e) = crate::util::cli::probe_writable(history_path) {
+        eprintln!("--history: {e}");
+        return 2;
+    }
+
+    let points = sweep(smoke);
+    let top_v =
+        points.iter().map(|p| p.vertices).max().unwrap_or(0);
+    println!(
+        "churn sweep: {} points, {fogs} fogs, dims {DIMS}, \
+         {ROUNDS} headline + {TRICKLE_ROUNDS} trickle rounds",
+        points.len()
+    );
+
+    let mut rows = Vec::new();
+    let mut top_outcome: Option<PointOutcome> = None;
+    for p in &points {
+        match run_point(p, fogs) {
+            Ok(out) => {
+                let is_top =
+                    p.topology == "rmat" && p.vertices == top_v;
+                rows.push(out.row.clone());
+                if is_top {
+                    top_outcome = Some(out);
+                }
+            }
+            Err(e) => {
+                eprintln!("CHURN GATE FAIL: {e}");
+                return 1;
+            }
+        }
+    }
+    let top = top_outcome.expect("sweep always has the rmat top");
+    // the headline perf gate holds at the top tier only on the full
+    // sweep: smoke graphs are too small for the rebuild arm's
+    // asymptotics to dominate timer noise
+    if !smoke && top.speedup < SPEEDUP_GATE {
+        eprintln!(
+            "CHURN GATE FAIL: top-tier incremental speedup {:.1}x \
+             below the {SPEEDUP_GATE}x gate",
+            top.speedup
+        );
+        return 1;
+    }
+
+    let date = utc_date_string();
+    let rev = git_rev();
+    let doc = obj(vec![
+        ("benchmark", s("churn")),
+        ("generated_by", s("repro churn")),
+        ("rev", s(&rev)),
+        ("date", s(&date)),
+        ("smoke", Json::Bool(smoke)),
+        ("fogs", num(fogs as f64)),
+        ("dims", num(DIMS as f64)),
+        ("speedup_gate", num(SPEEDUP_GATE)),
+        ("sweep", arr(rows)),
+        ("peak_rss_bytes", rss_json()),
+    ]);
+    if let Err(e) = std::fs::write(out_path, format!("{doc}\n")) {
+        eprintln!("cannot write {out_path}: {e}");
+        return 1;
+    }
+    println!("wrote {out_path}");
+
+    let line = obj(vec![
+        ("date", s(&date)),
+        ("rev", s(&rev)),
+        ("benchmark", s("churn")),
+        ("smoke", Json::Bool(smoke)),
+        ("fogs", num(fogs as f64)),
+        ("top_vertices", num(top_v as f64)),
+        ("top_speedup", num(top.speedup)),
+        (
+            "top_trickle_preserved_fog_rounds",
+            num(top.trickle_preserved as f64),
+        ),
+        ("peak_rss_bytes", rss_json()),
+    ]);
+    let appended = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(history_path)
+        .and_then(|mut fh| writeln!(fh, "{line}"));
+    match appended {
+        Ok(()) => {
+            println!("appended {history_path}");
+            0
+        }
+        Err(e) => {
+            eprintln!("cannot append {history_path}: {e}");
+            1
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_is_monotone_and_reaches_a_million() {
+        for smoke in [true, false] {
+            let pts = sweep(smoke);
+            for topo in ["rmat", "road"] {
+                let vs: Vec<usize> = pts
+                    .iter()
+                    .filter(|p| p.topology == topo)
+                    .map(|p| p.vertices)
+                    .collect();
+                assert!(!vs.is_empty());
+                assert!(vs.windows(2).all(|w| w[0] < w[1]), "{topo}");
+            }
+            if !smoke {
+                assert!(pts.iter().any(|p| p.vertices >= 1_000_000));
+            }
+        }
+    }
+
+    #[test]
+    fn static_specs_parse() {
+        assert_eq!(headline_specs().len(), 4);
+        assert_eq!(trickle_specs().len(), 1);
+    }
+
+    #[test]
+    fn micro_point_end_to_end_gates_hold() {
+        // a micro point through the exact sweep path: every parity,
+        // collection, served-output, store and preservation gate
+        let p = Point {
+            topology: "rmat",
+            vertices: 4_096,
+            edges: 4 * 4_096,
+        };
+        let out = run_point(&p, 4).expect("gates hold");
+        assert!(out.trickle_preserved > 0);
+        assert!(out.speedup > 0.0);
+    }
+}

@@ -100,6 +100,21 @@ impl Graph {
         }
     }
 
+    /// Undirected edge pairs (u < v), ascending — the canonical input
+    /// `from_undirected_edges` round-trips through, and the seed the
+    /// delta CSR's rebuild-from-scratch parity arm compares against.
+    pub fn undirected_edge_pairs(&self) -> Vec<(u32, u32)> {
+        let mut pairs = Vec::with_capacity(self.undirected_edges());
+        for v in 0..self.num_vertices() {
+            for &u in self.neighbors(v) {
+                if u > v as u32 {
+                    pairs.push((v as u32, u));
+                }
+            }
+        }
+        pairs
+    }
+
     /// COO (src, dst) edge list, mirroring fgio.Graph.edge_list().
     pub fn edge_list(&self) -> (Vec<u32>, Vec<u32>) {
         let mut src = Vec::with_capacity(self.num_edges());

@@ -1,0 +1,1646 @@
+//! Incremental topology engine — seeded churn streams, an in-place
+//! delta CSR, and partition-scoped invalidation (ROADMAP item 2).
+//!
+//! Churn specs arrive as repeatable `--churn` CLI strings:
+//!
+//! ```text
+//!   add-edge@rate=0.01            add ~1% of live edges per round
+//!   del-edge@rate=0.005           delete ~0.5% of live edges per round
+//!   add-vertex@rate=0.001,degree=3  new vertices, 3 attachments each
+//!   del-vertex@rate=0.001         remove vertices with their edges
+//! ```
+//!
+//! A [`ChurnPlan`] canonicalizes the declared specs (sorted by op) and
+//! draws every mutation from a dedicated RNG stream
+//! (`seed ^ CHURN_SALT`), so runs stay bit-deterministic for a fixed
+//! seed, invariant under `--churn` declaration order, and an empty
+//! churn list leaves every other seeded stream untouched — a
+//! churn-free run is byte-identical to one on a build without this
+//! module.
+//!
+//! [`DeltaCsr`] applies deltas in place: deleted arcs become
+//! `TOMBSTONE` holes in the base CSR, added arcs go to per-vertex
+//! sorted overflow rows, and periodic compaction folds both back into
+//! a clean base. Live entries of a base row stay sorted, so the merged
+//! neighbor walk visits neighbors in exactly the order a from-scratch
+//! [`Graph::from_undirected_edges`] rebuild would store them — the
+//! foundation of the engine's bit-parity contract. The
+//! `n_source_edges`-style staleness witnesses (`n_dead_slots`,
+//! `n_extra`, live counters, `epoch`) stay coherent through every op
+//! and are re-checkable via [`DeltaCsr::check_witnesses`].
+//!
+//! [`TopologyEngine`] keeps the serving state — per-fog sub-CSRs, the
+//! exchange plan, owner ranks, fingerprints — and after each churn
+//! round re-grounds ONLY the fogs a delta actually touched
+//! (structurally dirty), patches stale halo degrees on fogs that
+//! merely *see* a touched vertex, reindexes only the plan rows whose
+//! owner ranks moved, and leaves every other fog's state bit-preserved.
+//! The parity contract: after any churn history,
+//! `extract(csr.to_graph(), assignment)` equals the engine's subs and
+//! plan bit-for-bit ([`TopologyEngine::parity_check`]).
+
+use std::collections::{BTreeSet, HashMap};
+use std::time::Instant;
+
+use crate::partition::refine::{refine_boundary, BoundaryParams};
+use crate::util::cli::{parse_churn_degree, parse_churn_rate};
+use crate::util::json::{num, obj, Json};
+use crate::util::rng::{mix64, Rng};
+
+use super::csr::Graph;
+use super::subgraph::{extract, ExchangePlan, LocalGraph};
+
+/// Salt for the dedicated churn RNG stream: topology mutations must
+/// not perturb the arrival/load/chaos streams, so an identical run
+/// with no churn declared stays bit-identical.
+pub const CHURN_SALT: u64 = 0xDE17_A5EE;
+
+/// Tombstone marker for a deleted arc slot in the base CSR.
+pub const TOMBSTONE: u32 = u32::MAX;
+
+/// Bounded retries for rejection-sampled picks (live vertex, fresh
+/// edge): a failed budget skips that mutation rather than spinning.
+const OP_RETRIES: usize = 64;
+
+/// Default attachment degree for `add-vertex` specs without `degree=`.
+const DEFAULT_ATTACH_DEGREE: usize = 2;
+
+// ---------------------------------------------------------------- specs
+
+/// One churn operation class.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChurnOp {
+    AddEdge,
+    DelEdge,
+    AddVertex,
+    DelVertex,
+}
+
+impl ChurnOp {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ChurnOp::AddEdge => "add-edge",
+            ChurnOp::DelEdge => "del-edge",
+            ChurnOp::AddVertex => "add-vertex",
+            ChurnOp::DelVertex => "del-vertex",
+        }
+    }
+
+    fn rank(&self) -> u8 {
+        match self {
+            ChurnOp::AddEdge => 0,
+            ChurnOp::DelEdge => 1,
+            ChurnOp::AddVertex => 2,
+            ChurnOp::DelVertex => 3,
+        }
+    }
+}
+
+/// One declared churn spec: op class, per-round rate, and (for
+/// `add-vertex`) the attachment degree.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ChurnSpec {
+    pub op: ChurnOp,
+    /// Fraction of the live population (vertices for vertex ops, live
+    /// undirected edges for edge ops) mutated per scheduler round.
+    pub rate: f64,
+    /// Attachment edges per new vertex (`add-vertex` only).
+    pub degree: usize,
+}
+
+impl ChurnSpec {
+    /// Parse one `--churn` spec (`op@rate=R[,degree=D]`). Errors name
+    /// the offending spec and field so the CLI can exit 2 with a
+    /// usable message, mirroring `FaultSpec::parse`.
+    pub fn parse(spec: &str) -> Result<ChurnSpec, String> {
+        let what = format!("churn spec '{spec}'");
+        let (op_s, rest) = spec.split_once('@').ok_or_else(|| {
+            format!(
+                "{what}: expected op@rate=R[,degree=D] (ops: add-edge, \
+                 del-edge, add-vertex, del-vertex)"
+            )
+        })?;
+        let op = match op_s.trim() {
+            "add-edge" => ChurnOp::AddEdge,
+            "del-edge" => ChurnOp::DelEdge,
+            "add-vertex" => ChurnOp::AddVertex,
+            "del-vertex" => ChurnOp::DelVertex,
+            other => {
+                return Err(format!(
+                    "{what}: unknown op '{other}' (ops: add-edge, \
+                     del-edge, add-vertex, del-vertex)"
+                ))
+            }
+        };
+        let mut rate: Option<f64> = None;
+        let mut degree: Option<usize> = None;
+        for part in rest.split(',') {
+            let (k, v) = part.split_once('=').ok_or_else(|| {
+                format!("{what}: expected key=value, got '{part}'")
+            })?;
+            let (k, v) = (k.trim(), v.trim());
+            match k {
+                "rate" => {
+                    if rate.is_some() {
+                        return Err(format!(
+                            "{what}: duplicate key 'rate'"
+                        ));
+                    }
+                    rate = Some(parse_churn_rate(&what, v)?);
+                }
+                "degree" => {
+                    if op != ChurnOp::AddVertex {
+                        return Err(format!(
+                            "{what}: 'degree=' is only valid for \
+                             add-vertex"
+                        ));
+                    }
+                    if degree.is_some() {
+                        return Err(format!(
+                            "{what}: duplicate key 'degree'"
+                        ));
+                    }
+                    degree = Some(parse_churn_degree(&what, v)?);
+                }
+                other => {
+                    return Err(format!(
+                        "{what}: unknown key '{other}'"
+                    ))
+                }
+            }
+        }
+        let rate =
+            rate.ok_or_else(|| format!("{what}: missing 'rate='"))?;
+        Ok(ChurnSpec {
+            op,
+            rate,
+            degree: degree.unwrap_or(DEFAULT_ATTACH_DEGREE),
+        })
+    }
+}
+
+/// Reject duplicate op classes across a `--churn` spec list: two
+/// specs for the same op are always a typo (their rates would silently
+/// compound), so the CLI exits 2 instead.
+pub fn validate_churn_specs(specs: &[ChurnSpec]) -> Result<(), String> {
+    for (i, a) in specs.iter().enumerate() {
+        if specs[..i].iter().any(|b| b.op == a.op) {
+            return Err(format!(
+                "duplicate --churn op '{}': declare each op at most \
+                 once",
+                a.op.name()
+            ));
+        }
+    }
+    Ok(())
+}
+
+// --------------------------------------------------------------- deltas
+
+/// One applied topology mutation, as recorded by [`ChurnPlan::round`].
+/// Edge endpoints are canonicalized `u < v`; vertex deltas carry the
+/// attachment/removed neighbor lists so the engine can compute dirty
+/// sets without re-deriving them from the CSR.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Delta {
+    AddEdge(u32, u32),
+    DelEdge(u32, u32),
+    AddVertex { v: u32, revived: bool, nbrs: Vec<u32> },
+    DelVertex { v: u32, nbrs: Vec<u32> },
+}
+
+/// Seeded, repeatable churn stream: canonicalized specs plus a
+/// dedicated RNG. `round` draws and applies one scheduler period's
+/// worth of mutations and returns them for the engine to absorb.
+pub struct ChurnPlan {
+    specs: Vec<ChurnSpec>,
+    rng: Rng,
+}
+
+impl ChurnPlan {
+    /// Canonicalize (sort by op class — classes are unique after
+    /// [`validate_churn_specs`]) and seed the dedicated stream, so the
+    /// mutation sequence is invariant under declaration order.
+    pub fn new(specs: &[ChurnSpec], seed: u64) -> ChurnPlan {
+        let mut specs = specs.to_vec();
+        specs.sort_by_key(|s| s.op.rank());
+        ChurnPlan { specs, rng: Rng::new(mix64(seed ^ CHURN_SALT)) }
+    }
+
+    /// Per-spec mutation count for one round: `max(1, floor(rate ×
+    /// live))` — a declared op always fires at least once.
+    fn targets(rate: f64, live: usize) -> usize {
+        ((rate * live as f64).floor() as usize).max(1)
+    }
+
+    /// Pick a live vertex by bounded rejection sampling.
+    fn pick_live(&mut self, csr: &DeltaCsr) -> Option<u32> {
+        let nv = csr.num_vertices() as u64;
+        for _ in 0..OP_RETRIES {
+            let v = self.rng.below(nv) as u32;
+            if csr.is_alive(v) {
+                return Some(v);
+            }
+        }
+        None
+    }
+
+    /// Draw and apply one round of mutations. Every RNG draw comes
+    /// from the plan's own stream; failed rejection budgets skip the
+    /// mutation rather than blocking the round.
+    pub fn round(&mut self, csr: &mut DeltaCsr) -> Vec<Delta> {
+        let mut deltas = Vec::new();
+        for si in 0..self.specs.len() {
+            let spec = self.specs[si];
+            match spec.op {
+                ChurnOp::AddEdge => {
+                    let n = Self::targets(
+                        spec.rate,
+                        csr.n_live_undirected().max(1),
+                    );
+                    for _ in 0..n {
+                        for _ in 0..OP_RETRIES {
+                            let (u, v) = match (
+                                self.pick_live(csr),
+                                self.pick_live(csr),
+                            ) {
+                                (Some(u), Some(v)) => (u, v),
+                                _ => break,
+                            };
+                            if u == v || csr.has_edge(u, v) {
+                                continue;
+                            }
+                            csr.add_edge(u, v);
+                            deltas.push(Delta::AddEdge(
+                                u.min(v),
+                                u.max(v),
+                            ));
+                            break;
+                        }
+                    }
+                }
+                ChurnOp::DelEdge => {
+                    let n = Self::targets(
+                        spec.rate,
+                        csr.n_live_undirected().max(1),
+                    );
+                    for _ in 0..n {
+                        for _ in 0..OP_RETRIES {
+                            let u = match self.pick_live(csr) {
+                                Some(u) => u,
+                                None => break,
+                            };
+                            let d = csr.live_deg(u);
+                            if d == 0 {
+                                continue;
+                            }
+                            let k = self.rng.below(d as u64) as usize;
+                            let v = csr.nth_neighbor(u, k);
+                            csr.del_edge(u, v);
+                            deltas.push(Delta::DelEdge(
+                                u.min(v),
+                                u.max(v),
+                            ));
+                            break;
+                        }
+                    }
+                }
+                ChurnOp::AddVertex => {
+                    let n = Self::targets(
+                        spec.rate,
+                        csr.n_live_vertices(),
+                    );
+                    for _ in 0..n {
+                        let (v, revived) = csr.add_vertex();
+                        let mut nbrs = Vec::new();
+                        for _ in 0..spec.degree {
+                            for _ in 0..OP_RETRIES {
+                                let u = match self.pick_live(csr) {
+                                    Some(u) => u,
+                                    None => break,
+                                };
+                                if u == v
+                                    || nbrs.contains(&u)
+                                    || csr.has_edge(v, u)
+                                {
+                                    continue;
+                                }
+                                csr.add_edge(v, u);
+                                nbrs.push(u);
+                                break;
+                            }
+                        }
+                        deltas.push(Delta::AddVertex {
+                            v,
+                            revived,
+                            nbrs,
+                        });
+                    }
+                }
+                ChurnOp::DelVertex => {
+                    let n = Self::targets(
+                        spec.rate,
+                        csr.n_live_vertices(),
+                    );
+                    for _ in 0..n {
+                        if csr.n_live_vertices() <= 2 {
+                            break;
+                        }
+                        let v = match self.pick_live(csr) {
+                            Some(v) => v,
+                            None => break,
+                        };
+                        let nbrs = csr.del_vertex(v);
+                        deltas.push(Delta::DelVertex { v, nbrs });
+                    }
+                }
+            }
+        }
+        deltas
+    }
+}
+
+// ------------------------------------------------------------ delta CSR
+
+/// Symmetric CSR with in-place mutation: `TOMBSTONE` holes for
+/// deletions, per-vertex sorted overflow rows for insertions, and
+/// periodic compaction. Live base entries of a row stay sorted, so the
+/// merged walk in [`DeltaCsr::for_neighbors`] yields neighbors in
+/// exactly the sorted order of a from-scratch rebuild.
+pub struct DeltaCsr {
+    indptr: Vec<u64>,
+    /// Base adjacency with `TOMBSTONE` holes where arcs were deleted.
+    indices: Vec<u32>,
+    /// Per-vertex sorted overflow of arcs added since last compaction.
+    extra: Vec<Vec<u32>>,
+    live_deg: Vec<u32>,
+    alive: Vec<bool>,
+    /// Dead vertex ids; `add_vertex` revives the smallest first so the
+    /// id space stays dense under sustained join/leave churn.
+    dead: BTreeSet<u32>,
+    /// Mutation counter — the coarse staleness witness: any cached
+    /// view stamped with an older epoch is stale by definition.
+    pub epoch: u64,
+    /// Staleness witnesses (the `n_source_edges` idiom): stored arcs
+    /// minus dead slots plus overflow must equal live directed arcs.
+    pub n_dead_slots: usize,
+    pub n_extra: usize,
+    n_live_vertices: usize,
+    n_live_dir_edges: usize,
+    pub compactions: u64,
+}
+
+impl DeltaCsr {
+    pub fn from_graph(g: &Graph) -> DeltaCsr {
+        let nv = g.num_vertices();
+        DeltaCsr {
+            indptr: g.indptr.clone(),
+            indices: g.indices.clone(),
+            extra: vec![Vec::new(); nv],
+            live_deg: g.degrees(),
+            alive: vec![true; nv],
+            dead: BTreeSet::new(),
+            epoch: 0,
+            n_dead_slots: 0,
+            n_extra: 0,
+            n_live_vertices: nv,
+            n_live_dir_edges: g.num_edges(),
+            compactions: 0,
+        }
+    }
+
+    pub fn num_vertices(&self) -> usize {
+        self.indptr.len() - 1
+    }
+
+    pub fn n_live_vertices(&self) -> usize {
+        self.n_live_vertices
+    }
+
+    pub fn n_live_undirected(&self) -> usize {
+        self.n_live_dir_edges / 2
+    }
+
+    pub fn is_alive(&self, v: u32) -> bool {
+        self.alive[v as usize]
+    }
+
+    pub fn alive_mask(&self) -> &[bool] {
+        &self.alive
+    }
+
+    pub fn live_deg(&self, v: u32) -> u32 {
+        self.live_deg[v as usize]
+    }
+
+    fn base_row(&self, v: u32) -> &[u32] {
+        let vi = v as usize;
+        &self.indices
+            [self.indptr[vi] as usize..self.indptr[vi + 1] as usize]
+    }
+
+    /// Visit v's live neighbors in ascending order: a sorted merge of
+    /// the live base entries (sorted, tombstones skipped) and the
+    /// sorted overflow row.
+    pub fn for_neighbors<F: FnMut(u32)>(&self, v: u32, mut f: F) {
+        let base = self.base_row(v);
+        let ex = &self.extra[v as usize];
+        let (mut bi, mut ei) = (0usize, 0usize);
+        loop {
+            while bi < base.len() && base[bi] == TOMBSTONE {
+                bi += 1;
+            }
+            match (bi < base.len(), ei < ex.len()) {
+                (true, true) => {
+                    if base[bi] <= ex[ei] {
+                        f(base[bi]);
+                        bi += 1;
+                    } else {
+                        f(ex[ei]);
+                        ei += 1;
+                    }
+                }
+                (true, false) => {
+                    f(base[bi]);
+                    bi += 1;
+                }
+                (false, true) => {
+                    f(ex[ei]);
+                    ei += 1;
+                }
+                (false, false) => break,
+            }
+        }
+    }
+
+    /// v's k-th live neighbor in ascending order (k < live_deg(v)).
+    pub fn nth_neighbor(&self, v: u32, k: usize) -> u32 {
+        let mut seen = 0usize;
+        let mut found = TOMBSTONE;
+        self.for_neighbors(v, |u| {
+            if seen == k {
+                found = u;
+            }
+            seen += 1;
+        });
+        assert_ne!(found, TOMBSTONE, "nth_neighbor({v}, {k}) past end");
+        found
+    }
+
+    pub fn has_edge(&self, u: u32, v: u32) -> bool {
+        // scan from the lower-degree endpoint
+        let (a, b) = if self.live_deg(u) <= self.live_deg(v) {
+            (u, v)
+        } else {
+            (v, u)
+        };
+        for &x in self.base_row(a) {
+            if x == b {
+                return true;
+            }
+            if x != TOMBSTONE && x > b {
+                break;
+            }
+        }
+        self.extra[a as usize].binary_search(&b).is_ok()
+    }
+
+    /// One direction of an edge insert: sorted-insert into overflow.
+    fn insert_arc(&mut self, u: u32, v: u32) {
+        let row = &mut self.extra[u as usize];
+        let pos = row.partition_point(|&x| x < v);
+        row.insert(pos, v);
+        self.n_extra += 1;
+    }
+
+    /// One direction of an edge delete: tombstone the base slot or
+    /// remove the overflow entry. Panics if the arc is absent.
+    fn remove_arc(&mut self, u: u32, v: u32) {
+        let vi = u as usize;
+        let lo = self.indptr[vi] as usize;
+        let hi = self.indptr[vi + 1] as usize;
+        for slot in lo..hi {
+            if self.indices[slot] == v {
+                self.indices[slot] = TOMBSTONE;
+                self.n_dead_slots += 1;
+                return;
+            }
+        }
+        let row = &mut self.extra[vi];
+        let pos = row
+            .binary_search(&v)
+            .unwrap_or_else(|_| panic!("remove_arc: no arc {u}->{v}"));
+        row.remove(pos);
+        self.n_extra -= 1;
+    }
+
+    /// Add undirected edge u—v (must be absent, endpoints alive).
+    pub fn add_edge(&mut self, u: u32, v: u32) {
+        debug_assert!(u != v && self.is_alive(u) && self.is_alive(v));
+        debug_assert!(!self.has_edge(u, v));
+        self.insert_arc(u, v);
+        self.insert_arc(v, u);
+        self.live_deg[u as usize] += 1;
+        self.live_deg[v as usize] += 1;
+        self.n_live_dir_edges += 2;
+        self.epoch += 1;
+    }
+
+    /// Delete undirected edge u—v (must be present).
+    pub fn del_edge(&mut self, u: u32, v: u32) {
+        self.remove_arc(u, v);
+        self.remove_arc(v, u);
+        self.live_deg[u as usize] -= 1;
+        self.live_deg[v as usize] -= 1;
+        self.n_live_dir_edges -= 2;
+        self.epoch += 1;
+    }
+
+    /// Add a vertex: revive the smallest dead id if any (keeping the
+    /// id space dense), else append a fresh id. Returns `(id,
+    /// revived)`. The new vertex starts isolated.
+    pub fn add_vertex(&mut self) -> (u32, bool) {
+        self.epoch += 1;
+        self.n_live_vertices += 1;
+        if let Some(&v) = self.dead.iter().next() {
+            self.dead.remove(&v);
+            self.alive[v as usize] = true;
+            return (v, true);
+        }
+        let v = self.num_vertices() as u32;
+        let end = *self.indptr.last().unwrap();
+        self.indptr.push(end);
+        self.extra.push(Vec::new());
+        self.live_deg.push(0);
+        self.alive.push(true);
+        (v, false)
+    }
+
+    /// Delete a live vertex with all its incident edges; returns the
+    /// (ascending) neighbors it was detached from. The id stays in the
+    /// universe as a dead, degree-0 vertex until revived.
+    pub fn del_vertex(&mut self, v: u32) -> Vec<u32> {
+        debug_assert!(self.is_alive(v));
+        let mut nbrs = Vec::with_capacity(self.live_deg(v) as usize);
+        self.for_neighbors(v, |u| nbrs.push(u));
+        for &u in &nbrs {
+            self.del_edge(v, u);
+        }
+        self.alive[v as usize] = false;
+        self.dead.insert(v);
+        self.n_live_vertices -= 1;
+        self.epoch += 1;
+        nbrs
+    }
+
+    /// Fold tombstones and overflow back into a clean base CSR when
+    /// they exceed half the stored arcs. Live structure (and therefore
+    /// every neighbor walk) is unchanged — compaction is invisible to
+    /// the parity contract.
+    pub fn maybe_compact(&mut self) -> bool {
+        if (self.n_dead_slots + self.n_extra) * 2
+            <= self.indices.len().max(64)
+        {
+            return false;
+        }
+        let nv = self.num_vertices();
+        let mut indptr = Vec::with_capacity(nv + 1);
+        indptr.push(0u64);
+        let mut indices = Vec::with_capacity(self.n_live_dir_edges);
+        for v in 0..nv {
+            self.for_neighbors(v as u32, |u| indices.push(u));
+            indptr.push(indices.len() as u64);
+        }
+        self.indptr = indptr;
+        self.indices = indices;
+        for row in &mut self.extra {
+            row.clear();
+        }
+        self.n_dead_slots = 0;
+        self.n_extra = 0;
+        self.compactions += 1;
+        true
+    }
+
+    /// Live undirected edge pairs (u < v), ascending — the exact input
+    /// a from-scratch rebuild consumes.
+    pub fn live_edge_pairs(&self) -> Vec<(u32, u32)> {
+        let mut pairs = Vec::with_capacity(self.n_live_undirected());
+        for v in 0..self.num_vertices() as u32 {
+            self.for_neighbors(v, |u| {
+                if u > v {
+                    pairs.push((v, u));
+                }
+            });
+        }
+        pairs
+    }
+
+    /// Materialize the current live topology as a plain [`Graph`] —
+    /// the from-scratch arm of the parity gate.
+    pub fn to_graph(&self) -> Graph {
+        Graph::from_undirected_edges(
+            self.num_vertices(),
+            &self.live_edge_pairs(),
+        )
+    }
+
+    /// Recount everything and compare against the incremental
+    /// witnesses — O(V+E), for tests and the experiment's gates.
+    pub fn check_witnesses(&self) -> Result<(), String> {
+        let nv = self.num_vertices();
+        let alive_n = self.alive.iter().filter(|&&a| a).count();
+        if alive_n != self.n_live_vertices {
+            return Err(format!(
+                "live-vertex witness {} != recount {alive_n}",
+                self.n_live_vertices
+            ));
+        }
+        if self.dead.len() != nv - alive_n {
+            return Err("dead set size mismatch".into());
+        }
+        let mut dir = 0usize;
+        let mut dead_slots = 0usize;
+        let mut extra_n = 0usize;
+        for v in 0..nv as u32 {
+            let mut deg = 0u32;
+            let mut prev: i64 = -1;
+            self.for_neighbors(v, |u| {
+                deg += 1;
+                assert!(
+                    (u as i64) > prev,
+                    "row {v} not strictly ascending"
+                );
+                prev = u as i64;
+            });
+            if deg != self.live_deg(v) {
+                return Err(format!(
+                    "live_deg[{v}]={} != walk {deg}",
+                    self.live_deg(v)
+                ));
+            }
+            if !self.is_alive(v) && deg != 0 {
+                return Err(format!("dead vertex {v} has edges"));
+            }
+            dir += deg as usize;
+            dead_slots += self
+                .base_row(v)
+                .iter()
+                .filter(|&&x| x == TOMBSTONE)
+                .count();
+            extra_n += self.extra[v as usize].len();
+        }
+        if dir != self.n_live_dir_edges {
+            return Err(format!(
+                "dir-edge witness {} != recount {dir}",
+                self.n_live_dir_edges
+            ));
+        }
+        if dead_slots != self.n_dead_slots || extra_n != self.n_extra {
+            return Err(format!(
+                "slot witnesses ({}, {}) != recount ({dead_slots}, \
+                 {extra_n})",
+                self.n_dead_slots, self.n_extra
+            ));
+        }
+        if self.indices.len() - dead_slots + extra_n != dir {
+            return Err("stored-arc balance violated".into());
+        }
+        Ok(())
+    }
+}
+
+// --------------------------------------------------------------- engine
+
+/// Cumulative invalidation counters — the evidence that untouched
+/// partitions did zero re-grounding work (BENCH_churn.json surfaces
+/// them verbatim).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct InvalidationStats {
+    pub rounds: u64,
+    pub deltas_applied: u64,
+    pub migrations: u64,
+    /// Fog-rounds fully re-grounded (structurally dirty).
+    pub fogs_reground: u64,
+    /// Fog-rounds whose only write was a halo-degree patch.
+    pub fogs_degree_patched: u64,
+    /// Fog-rounds left bit-identical: no re-ground, no patch, no
+    /// plan-row write.
+    pub fogs_preserved: u64,
+    /// Exchange-plan rows recomputed for preserved requesters because
+    /// a dirty owner's local ranks moved.
+    pub plan_rows_reindexed: u64,
+    /// Rounds in which at least one fog was preserved — the partial
+    /// re-ground witness the CI smoke asserts on.
+    pub partial_rounds: u64,
+    pub compactions: u64,
+}
+
+impl InvalidationStats {
+    pub fn json(&self) -> Json {
+        obj(&[
+            ("rounds", num(self.rounds as f64)),
+            ("deltas_applied", num(self.deltas_applied as f64)),
+            ("migrations", num(self.migrations as f64)),
+            ("fogs_reground", num(self.fogs_reground as f64)),
+            (
+                "fogs_degree_patched",
+                num(self.fogs_degree_patched as f64),
+            ),
+            ("fogs_preserved", num(self.fogs_preserved as f64)),
+            (
+                "plan_rows_reindexed",
+                num(self.plan_rows_reindexed as f64),
+            ),
+            ("partial_rounds", num(self.partial_rounds as f64)),
+            ("compactions", num(self.compactions as f64)),
+        ])
+    }
+}
+
+/// What one absorbed round touched.
+#[derive(Clone, Debug, Default)]
+pub struct RoundReport {
+    pub deltas: usize,
+    pub migrations: usize,
+    /// Fogs fully re-grounded this round, ascending.
+    pub dirty: Vec<u32>,
+    /// Fogs whose only write was a halo-degree patch, ascending.
+    pub patched: Vec<u32>,
+    /// Fogs left bit-identical this round.
+    pub preserved: usize,
+    /// Wall seconds spent applying deltas + partial re-grounding.
+    pub apply_s: f64,
+}
+
+/// End-of-run churn summary for loadtest reports: final topology plus
+/// the cumulative invalidation counters. Serialized only when churn
+/// was actually requested, so churn-free reports stay byte-identical.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ChurnSummary {
+    pub final_vertices: usize,
+    pub final_live_vertices: usize,
+    pub final_edges: usize,
+    pub stats: InvalidationStats,
+}
+
+impl ChurnSummary {
+    pub fn json(&self) -> Json {
+        obj(&[
+            ("final_vertices", num(self.final_vertices as f64)),
+            (
+                "final_live_vertices",
+                num(self.final_live_vertices as f64),
+            ),
+            ("final_edges", num(self.final_edges as f64)),
+            ("invalidation", self.stats.json()),
+        ])
+    }
+}
+
+/// The incremental topology engine: a [`DeltaCsr`] plus the serving
+/// state derived from it — per-fog sub-CSRs, the exchange plan, owner
+/// ranks and per-fog topology fingerprints — kept coherent under churn
+/// by partition-scoped invalidation instead of full rebuilds.
+pub struct TopologyEngine {
+    pub csr: DeltaCsr,
+    pub n_fogs: usize,
+    /// Owner fog of every vertex ever created (dead vertices keep
+    /// their last owner, exactly like a from-scratch extract over the
+    /// rebuilt graph, where they appear as isolated owned vertices).
+    pub assignment: Vec<u32>,
+    pub subs: Vec<LocalGraph>,
+    pub plan: ExchangePlan,
+    /// fnv1a64 over each sub's full contents; preserved fogs keep
+    /// their fingerprint bit-for-bit.
+    pub fingerprints: Vec<u64>,
+    pub stats: InvalidationStats,
+    /// Owned vertex ids per fog, ascending — the from-scratch local
+    /// order, maintained incrementally.
+    locals: Vec<Vec<u32>>,
+    owner_rank: Vec<u32>,
+    /// Per fog: halo global id → absolute index into sub.vertices.
+    halo_pos: Vec<HashMap<u32, u32>>,
+    /// Per fog: sorted unique owner fogs of its halo — lets the plan
+    /// reindex skip requesters with no stake in any dirty owner.
+    halo_owners: Vec<Vec<u32>>,
+    /// Scratch: global id → current fog-local index (MAX = absent).
+    local_of: Vec<u32>,
+}
+
+impl TopologyEngine {
+    /// Ground the initial topology. `assignment[v]` must be a valid
+    /// fog index for every vertex.
+    pub fn new(g: &Graph, assignment: &[u32], n_fogs: usize)
+               -> TopologyEngine {
+        let (subs, plan) = extract(g, assignment, n_fogs);
+        let nv = g.num_vertices();
+        let mut locals: Vec<Vec<u32>> = vec![Vec::new(); n_fogs];
+        let mut owner_rank = vec![0u32; nv];
+        for v in 0..nv {
+            let j = assignment[v] as usize;
+            owner_rank[v] = locals[j].len() as u32;
+            locals[j].push(v as u32);
+        }
+        let mut halo_pos = Vec::with_capacity(n_fogs);
+        let mut halo_owners = Vec::with_capacity(n_fogs);
+        for sub in &subs {
+            let mut pos = HashMap::new();
+            let mut owners: Vec<u32> = Vec::new();
+            for (i, &hv) in
+                sub.vertices[sub.n_local..].iter().enumerate()
+            {
+                pos.insert(hv, (sub.n_local + i) as u32);
+                let o = assignment[hv as usize];
+                if let Err(p) = owners.binary_search(&o) {
+                    owners.insert(p, o);
+                }
+            }
+            halo_pos.push(pos);
+            halo_owners.push(owners);
+        }
+        let fingerprints = subs.iter().map(LocalGraph::fingerprint).collect();
+        TopologyEngine {
+            csr: DeltaCsr::from_graph(g),
+            n_fogs,
+            assignment: assignment.to_vec(),
+            subs,
+            plan,
+            fingerprints,
+            stats: InvalidationStats::default(),
+            locals,
+            owner_rank,
+            halo_pos,
+            halo_owners,
+            local_of: vec![u32::MAX; nv],
+        }
+    }
+
+    /// Per-fog ⟨owned vertices, in-edges⟩ — exactly what
+    /// `diffusion::estimate_times` recounts from a static graph, so
+    /// the rescheduler can consume churn-induced skew without one.
+    pub fn cardinalities(&self) -> Vec<(usize, usize)> {
+        (0..self.n_fogs)
+            .map(|j| (self.locals[j].len(), self.subs[j].num_edges()))
+            .collect()
+    }
+
+    /// Draw one churn round from `plan`, apply it in place, and
+    /// re-ground only what it touched.
+    pub fn churn_round(&mut self, plan: &mut ChurnPlan) -> RoundReport {
+        let t0 = Instant::now();
+        let deltas = plan.round(&mut self.csr);
+        let mut report = self.integrate(&deltas);
+        report.apply_s = t0.elapsed().as_secs_f64();
+        report
+    }
+
+    /// Owner for a vertex appended by `add-vertex`: plurality owner of
+    /// its attachment neighbors (tie → lowest fog); with no
+    /// attachments, the lightest fog (tie → lowest fog).
+    fn choose_owner(&self, nbrs: &[u32]) -> u32 {
+        if nbrs.is_empty() {
+            let mut best = 0usize;
+            for j in 1..self.n_fogs {
+                if self.locals[j].len() < self.locals[best].len() {
+                    best = j;
+                }
+            }
+            return best as u32;
+        }
+        let mut count = vec![0usize; self.n_fogs];
+        for &u in nbrs {
+            count[self.assignment[u as usize] as usize] += 1;
+        }
+        let mut best = 0usize;
+        for j in 1..self.n_fogs {
+            if count[j] > count[best] {
+                best = j;
+            }
+        }
+        best as u32
+    }
+
+    /// Absorb a batch of applied deltas: grow the universe, compute
+    /// the structural dirty set, run the boundary-only refinement over
+    /// delta-adjacent vertices, then partial re-ground.
+    pub fn integrate(&mut self, deltas: &[Delta]) -> RoundReport {
+        let mut dirty = vec![false; self.n_fogs];
+        let mut touched: Vec<u32> = Vec::new();
+        let mut cands: Vec<u32> = Vec::new();
+        for d in deltas {
+            match d {
+                Delta::AddVertex { v, revived, nbrs } => {
+                    if !revived {
+                        debug_assert_eq!(
+                            *v as usize,
+                            self.assignment.len()
+                        );
+                        let owner = self.choose_owner(nbrs);
+                        self.assignment.push(owner);
+                        // largest id so far: push keeps the list sorted
+                        self.locals[owner as usize].push(*v);
+                        self.owner_rank.push(
+                            (self.locals[owner as usize].len() - 1)
+                                as u32,
+                        );
+                        self.local_of.push(u32::MAX);
+                    }
+                    dirty[self.assignment[*v as usize] as usize] = true;
+                    touched.push(*v);
+                    cands.push(*v);
+                    for &u in nbrs {
+                        dirty[self.assignment[u as usize] as usize] =
+                            true;
+                        touched.push(u);
+                        cands.push(u);
+                    }
+                }
+                Delta::DelVertex { v, nbrs } => {
+                    dirty[self.assignment[*v as usize] as usize] = true;
+                    for &u in nbrs {
+                        dirty[self.assignment[u as usize] as usize] =
+                            true;
+                        touched.push(u);
+                        cands.push(u);
+                    }
+                }
+                Delta::AddEdge(u, v) | Delta::DelEdge(u, v) => {
+                    dirty[self.assignment[*u as usize] as usize] = true;
+                    dirty[self.assignment[*v as usize] as usize] = true;
+                    touched.push(*u);
+                    touched.push(*v);
+                    cands.push(*u);
+                    cands.push(*v);
+                }
+            }
+        }
+        cands.sort_unstable();
+        cands.dedup();
+        // boundary-only refinement: delta-adjacent vertices may hop
+        // between dirty partitions when that cuts their external edges
+        let csr = &self.csr;
+        let moves = refine_boundary(
+            csr.num_vertices(),
+            |v, buf| {
+                buf.clear();
+                csr.for_neighbors(v, |u| buf.push(u));
+            },
+            csr.alive_mask(),
+            &mut self.assignment,
+            self.n_fogs,
+            &cands,
+            &dirty,
+            &BoundaryParams::default(),
+        );
+        for &(v, from, to) in &moves {
+            debug_assert!(dirty[from as usize] && dirty[to as usize]);
+            let row = &mut self.locals[from as usize];
+            let p = row.binary_search(&v).expect("move src not owned");
+            row.remove(p);
+            let row = &mut self.locals[to as usize];
+            let p = row.binary_search(&v).unwrap_err();
+            row.insert(p, v);
+        }
+        let (dirty_list, patched) = self.refresh(&dirty, &touched);
+        self.csr.maybe_compact();
+        let preserved =
+            self.n_fogs - dirty_list.len() - patched.len();
+        self.stats.rounds += 1;
+        self.stats.deltas_applied += deltas.len() as u64;
+        self.stats.migrations += moves.len() as u64;
+        self.stats.fogs_reground += dirty_list.len() as u64;
+        self.stats.fogs_degree_patched += patched.len() as u64;
+        self.stats.fogs_preserved += preserved as u64;
+        self.stats.partial_rounds += (preserved > 0) as u64;
+        self.stats.compactions = self.csr.compactions;
+        RoundReport {
+            deltas: deltas.len(),
+            migrations: moves.len(),
+            dirty: dirty_list,
+            patched,
+            preserved,
+            apply_s: 0.0,
+        }
+    }
+
+    /// Absorb an assignment produced outside the engine (the
+    /// rescheduler's diffusion moves): diff against the current one,
+    /// mark both ends of every move dirty, and partial re-ground.
+    pub fn sync_assignment(&mut self, new_assignment: &[u32])
+                           -> RoundReport {
+        assert_eq!(new_assignment.len(), self.assignment.len());
+        let mut dirty = vec![false; self.n_fogs];
+        let mut moves = 0usize;
+        for v in 0..new_assignment.len() {
+            let (from, to) =
+                (self.assignment[v], new_assignment[v]);
+            if from == to {
+                continue;
+            }
+            moves += 1;
+            dirty[from as usize] = true;
+            dirty[to as usize] = true;
+            let row = &mut self.locals[from as usize];
+            let p = row
+                .binary_search(&(v as u32))
+                .expect("sync: move src not owned");
+            row.remove(p);
+            let row = &mut self.locals[to as usize];
+            let p = row.binary_search(&(v as u32)).unwrap_err();
+            row.insert(p, v as u32);
+            self.assignment[v] = to;
+        }
+        if moves == 0 {
+            return RoundReport {
+                preserved: self.n_fogs,
+                ..RoundReport::default()
+            };
+        }
+        let (dirty_list, patched) = self.refresh(&dirty, &[]);
+        let preserved =
+            self.n_fogs - dirty_list.len() - patched.len();
+        self.stats.migrations += moves as u64;
+        self.stats.fogs_reground += dirty_list.len() as u64;
+        self.stats.fogs_preserved += preserved as u64;
+        RoundReport {
+            deltas: 0,
+            migrations: moves,
+            dirty: dirty_list,
+            patched,
+            preserved,
+            apply_s: 0.0,
+        }
+    }
+
+    /// Partition-scoped refresh: re-ground dirty fogs (mirroring
+    /// `GroundingStream::next_fog` bit-for-bit over the delta CSR),
+    /// reindex preserved requesters' plan rows whose dirty owners'
+    /// ranks moved, and patch stale halo degrees on fogs that only
+    /// *see* a touched vertex. Returns (dirty, patched) fog lists.
+    fn refresh(&mut self, dirty: &[bool], touched: &[u32])
+               -> (Vec<u32>, Vec<u32>) {
+        let TopologyEngine {
+            csr,
+            n_fogs,
+            assignment,
+            subs,
+            plan,
+            fingerprints,
+            stats,
+            locals,
+            owner_rank,
+            halo_pos,
+            halo_owners,
+            local_of,
+            ..
+        } = self;
+        let n_fogs = *n_fogs;
+        // owner ranks of dirty fogs (preserved lists never change)
+        for j in 0..n_fogs {
+            if dirty[j] {
+                for (i, &v) in locals[j].iter().enumerate() {
+                    owner_rank[v as usize] = i as u32;
+                }
+            }
+        }
+        // dirty requesters rebuild every one of their plan rows
+        for r in 0..n_fogs {
+            if dirty[r] {
+                for o in 0..n_fogs {
+                    plan.transfers[o][r].clear();
+                }
+            }
+        }
+        // re-ground dirty fogs ascending — the from-scratch fog order
+        for j in 0..n_fogs {
+            if !dirty[j] {
+                continue;
+            }
+            let mut vertices = locals[j].clone();
+            let n_local = vertices.len();
+            for (i, &v) in vertices.iter().enumerate() {
+                local_of[v as usize] = i as u32;
+            }
+            let mut src = Vec::new();
+            let mut dst = Vec::new();
+            let mut li = 0usize;
+            while li < n_local {
+                let v = vertices[li];
+                csr.for_neighbors(v, |u| {
+                    let mut si = local_of[u as usize];
+                    if si == u32::MAX {
+                        si = vertices.len() as u32;
+                        vertices.push(u);
+                        local_of[u as usize] = si;
+                        let owner = assignment[u as usize] as usize;
+                        plan.transfers[owner][j]
+                            .push(owner_rank[u as usize]);
+                    }
+                    src.push(si);
+                    dst.push(li as u32);
+                });
+                li += 1;
+            }
+            let global_degree = vertices
+                .iter()
+                .map(|&v| csr.live_deg(v))
+                .collect();
+            for &v in &vertices {
+                local_of[v as usize] = u32::MAX;
+            }
+            let mut pos = HashMap::new();
+            let mut owners: Vec<u32> = Vec::new();
+            for (i, &hv) in vertices[n_local..].iter().enumerate() {
+                pos.insert(hv, (n_local + i) as u32);
+                let o = assignment[hv as usize];
+                if let Err(p) = owners.binary_search(&o) {
+                    owners.insert(p, o);
+                }
+            }
+            halo_pos[j] = pos;
+            halo_owners[j] = owners;
+            subs[j] =
+                LocalGraph { vertices, n_local, src, dst, global_degree };
+        }
+        // preserved requesters: rows owned by dirty fogs must be
+        // recomputed (owner ranks moved); halo order itself is stable
+        for r in 0..n_fogs {
+            if dirty[r]
+                || !halo_owners[r]
+                    .iter()
+                    .any(|&o| dirty[o as usize])
+            {
+                continue;
+            }
+            let sub = &subs[r];
+            let mut rows: Vec<Vec<u32>> = vec![Vec::new(); n_fogs];
+            let mut owners: Vec<u32> = Vec::new();
+            for &hv in &sub.vertices[sub.n_local..] {
+                let o = assignment[hv as usize];
+                rows[o as usize].push(owner_rank[hv as usize]);
+                if let Err(p) = owners.binary_search(&o) {
+                    owners.insert(p, o);
+                }
+            }
+            for o in 0..n_fogs {
+                if dirty[o] {
+                    stats.plan_rows_reindexed += 1;
+                    plan.transfers[o][r] =
+                        std::mem::take(&mut rows[o]);
+                }
+            }
+            halo_owners[r] = owners;
+        }
+        // degree patches: preserved fogs seeing a touched vertex only
+        // in halo update that one u32 in place
+        let mut patched_mask = vec![false; n_fogs];
+        let mut uniq = if dirty.iter().all(|&d| d) {
+            Vec::new() // every fog re-grounds; nothing left to patch
+        } else {
+            touched.to_vec()
+        };
+        uniq.sort_unstable();
+        uniq.dedup();
+        for &u in &uniq {
+            let deg = csr.live_deg(u);
+            csr.for_neighbors(u, |w| {
+                let r = assignment[w as usize] as usize;
+                if !dirty[r] {
+                    if let Some(&p) = halo_pos[r].get(&u) {
+                        if subs[r].global_degree[p as usize] != deg {
+                            subs[r].global_degree[p as usize] = deg;
+                            patched_mask[r] = true;
+                        }
+                    }
+                }
+            });
+        }
+        let dirty_list: Vec<u32> = (0..n_fogs as u32)
+            .filter(|&j| dirty[j as usize])
+            .collect();
+        let patched: Vec<u32> = (0..n_fogs as u32)
+            .filter(|&j| patched_mask[j as usize])
+            .collect();
+        for &j in dirty_list.iter().chain(patched.iter()) {
+            fingerprints[j as usize] =
+                subs[j as usize].fingerprint();
+        }
+        (dirty_list, patched)
+    }
+
+    /// Per-fog owned-vertex and full-graph-degree rows, ascending —
+    /// exactly what `CollectionIndex::build` would recount from the
+    /// rebuilt graph, ready for `CollectionIndex::from_parts`. Dead
+    /// vertices stay in their owner's row with degree 0, matching the
+    /// from-scratch sweep over the rebuilt (isolated-vertex) graph.
+    pub fn collection_rows(&self)
+                           -> (Vec<Vec<u32>>, Vec<Vec<u64>>) {
+        let by_fog = self.locals.clone();
+        let degrees = self
+            .locals
+            .iter()
+            .map(|row| {
+                row.iter()
+                    .map(|&v| self.csr.live_deg(v) as u64)
+                    .collect()
+            })
+            .collect();
+        (by_fog, degrees)
+    }
+
+    /// End-of-run summary for reports.
+    pub fn summary(&self) -> ChurnSummary {
+        ChurnSummary {
+            final_vertices: self.csr.num_vertices(),
+            final_live_vertices: self.csr.n_live_vertices(),
+            final_edges: self.csr.n_live_undirected(),
+            stats: self.stats,
+        }
+    }
+
+    /// The full bit-parity gate: rebuild the live topology from
+    /// scratch, extract with the engine's assignment, and demand
+    /// identical subs, plan, and fingerprints.
+    pub fn parity_check(&self) -> Result<(), String> {
+        self.csr.check_witnesses()?;
+        let rebuilt = self.csr.to_graph();
+        let (subs, plan) =
+            extract(&rebuilt, &self.assignment, self.n_fogs);
+        for j in 0..self.n_fogs {
+            if subs[j] != self.subs[j] {
+                return Err(format!(
+                    "fog {j}: incremental sub != from-scratch sub"
+                ));
+            }
+            if self.fingerprints[j] != subs[j].fingerprint() {
+                return Err(format!("fog {j}: stale fingerprint"));
+            }
+        }
+        if plan != self.plan {
+            return Err(
+                "incremental plan != from-scratch plan".into()
+            );
+        }
+        Ok(())
+    }
+}
+
+/// One deterministic BSP neighbor-sum round over grounded state: local
+/// rows come from `features` (global order), halo rows arrive through
+/// the exchange plan, and each fog accumulates `out[dst] += state[src]`
+/// in stored edge order. Returns per-vertex sums in global order — the
+/// served-output arm of the parity gate (identical subs + plan must
+/// produce bitwise-identical f32 outputs).
+pub fn bsp_aggregate(
+    subs: &[LocalGraph],
+    plan: &ExchangePlan,
+    assignment: &[u32],
+    features: &[f32],
+    dims: usize,
+) -> Vec<f32> {
+    let n_fogs = subs.len();
+    let nv = features.len() / dims;
+    // owned rows, per fog, from the global feature table
+    let owned: Vec<Vec<f32>> = subs
+        .iter()
+        .map(|s| {
+            let mut rows = vec![0.0f32; s.n_local * dims];
+            for (i, &v) in s.vertices[..s.n_local].iter().enumerate() {
+                rows[i * dims..(i + 1) * dims].copy_from_slice(
+                    &features[v as usize * dims..][..dims],
+                );
+            }
+            rows
+        })
+        .collect();
+    let mut out = vec![0.0f32; nv * dims];
+    for (r, sub) in subs.iter().enumerate() {
+        let mut state = vec![0.0f32; sub.n_total() * dims];
+        state[..sub.n_local * dims].copy_from_slice(&owned[r]);
+        // halo rows: consume each owner's plan row in discovery order
+        let mut cursor = vec![0usize; n_fogs];
+        for h in sub.n_local..sub.n_total() {
+            let u = sub.vertices[h] as usize;
+            let o = assignment[u] as usize;
+            let lrank = plan.transfers[o][r][cursor[o]] as usize;
+            cursor[o] += 1;
+            state[h * dims..(h + 1) * dims].copy_from_slice(
+                &owned[o][lrank * dims..(lrank + 1) * dims],
+            );
+        }
+        for e in 0..sub.num_edges() {
+            let s = sub.src[e] as usize;
+            let d = sub.vertices[sub.dst[e] as usize] as usize;
+            for k in 0..dims {
+                out[d * dims + k] += state[s * dims + k];
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate;
+
+    fn spec(s: &str) -> ChurnSpec {
+        ChurnSpec::parse(s).unwrap()
+    }
+
+    #[test]
+    fn parses_valid_specs() {
+        let s = spec("add-edge@rate=0.01");
+        assert_eq!(s.op, ChurnOp::AddEdge);
+        assert_eq!(s.rate, 0.01);
+        let s = spec("add-vertex@rate=0.001,degree=5");
+        assert_eq!(s.op, ChurnOp::AddVertex);
+        assert_eq!(s.degree, 5);
+        assert_eq!(spec("add-vertex@rate=0.1").degree, 2);
+        assert_eq!(spec("del-vertex@rate=0.5").op, ChurnOp::DelVertex);
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        for bad in [
+            "add-edge",                      // no @
+            "grow@rate=0.1",                 // unknown op
+            "add-edge@rate",                 // no key=value
+            "add-edge@rate=0",               // zero rate
+            "add-edge@rate=0.6",             // rate > 0.5
+            "add-edge@rate=nan",             // non-finite
+            "add-edge@rate=0.1,rate=0.2",    // duplicate key
+            "add-edge@rate=0.1,degree=2",    // degree on non-add-vertex
+            "add-vertex@rate=0.1,degree=0",  // zero degree
+            "add-vertex@rate=0.1,degree=65", // absurd degree
+            "add-edge@rate=0.1,burst=2",     // unknown key
+            "add-edge@",                     // empty body
+            "del-edge@degree=2",             // missing rate
+        ] {
+            let e = ChurnSpec::parse(bad);
+            assert!(e.is_err(), "{bad:?} accepted");
+            assert!(e.unwrap_err().contains(bad), "{bad:?} not named");
+        }
+    }
+
+    #[test]
+    fn duplicate_ops_rejected_across_specs() {
+        let a = spec("add-edge@rate=0.1");
+        let b = spec("del-edge@rate=0.1");
+        assert!(validate_churn_specs(&[a, b]).is_ok());
+        let e = validate_churn_specs(&[a, b, spec("add-edge@rate=0.2")]);
+        assert!(e.unwrap_err().contains("add-edge"));
+    }
+
+    fn ring(n: usize) -> Graph {
+        let edges: Vec<(u32, u32)> = (0..n as u32)
+            .map(|v| (v, (v + 1) % n as u32))
+            .map(|(a, b)| (a.min(b), a.max(b)))
+            .collect();
+        Graph::from_undirected_edges(n, &edges)
+    }
+
+    #[test]
+    fn delta_csr_edge_ops_round_trip() {
+        let g = ring(8);
+        let mut csr = DeltaCsr::from_graph(&g);
+        assert!(csr.has_edge(0, 1));
+        assert!(!csr.has_edge(0, 2));
+        csr.add_edge(0, 2);
+        csr.del_edge(0, 1);
+        csr.check_witnesses().unwrap();
+        let rebuilt = csr.to_graph();
+        assert_eq!(rebuilt.neighbors(0), &[2, 7]);
+        assert_eq!(rebuilt.neighbors(2), &[0, 1, 3]);
+        // delete-then-re-add of the same edge restores the original
+        csr.del_edge(0, 2);
+        csr.add_edge(0, 1);
+        csr.check_witnesses().unwrap();
+        let back = csr.to_graph();
+        assert_eq!(back.indptr, g.indptr);
+        assert_eq!(back.indices, g.indices);
+    }
+
+    #[test]
+    fn delta_csr_vertex_ops_and_revival() {
+        let g = ring(6);
+        let mut csr = DeltaCsr::from_graph(&g);
+        let nbrs = csr.del_vertex(2);
+        assert_eq!(nbrs, vec![1, 3]);
+        assert_eq!(csr.n_live_vertices(), 5);
+        assert_eq!(csr.live_deg(2), 0);
+        csr.check_witnesses().unwrap();
+        // revival hands back the smallest dead id
+        let (v, revived) = csr.add_vertex();
+        assert_eq!((v, revived), (2, true));
+        csr.add_edge(2, 1);
+        csr.add_edge(2, 3);
+        csr.check_witnesses().unwrap();
+        let back = csr.to_graph();
+        assert_eq!(back.indptr, g.indptr);
+        assert_eq!(back.indices, g.indices);
+        // appending past the universe grows it
+        let (w, revived) = csr.add_vertex();
+        assert_eq!((w, revived), (6, false));
+        csr.add_edge(6, 0);
+        assert_eq!(csr.num_vertices(), 7);
+        csr.check_witnesses().unwrap();
+    }
+
+    #[test]
+    fn compaction_is_invisible_to_live_structure() {
+        let (g, _) = generate::sbm(120, 480, 3, 0.8, 7);
+        let mut csr = DeltaCsr::from_graph(&g);
+        let mut plan = ChurnPlan::new(
+            &[spec("add-edge@rate=0.2"), spec("del-edge@rate=0.2")],
+            99,
+        );
+        let mut compacted = false;
+        for _ in 0..40 {
+            plan.round(&mut csr);
+            let before = csr.to_graph();
+            if csr.maybe_compact() {
+                compacted = true;
+                let after = csr.to_graph();
+                assert_eq!(before.indptr, after.indptr);
+                assert_eq!(before.indices, after.indices);
+                assert_eq!(csr.n_dead_slots, 0);
+                assert_eq!(csr.n_extra, 0);
+            }
+            csr.check_witnesses().unwrap();
+        }
+        assert!(compacted, "fixture never triggered compaction");
+        assert!(csr.compactions > 0);
+    }
+
+    #[test]
+    fn churn_plan_is_deterministic_and_order_invariant() {
+        let specs_a = [
+            spec("add-edge@rate=0.05"),
+            spec("del-vertex@rate=0.02"),
+            spec("add-vertex@rate=0.02,degree=3"),
+        ];
+        let specs_b = [specs_a[2], specs_a[0], specs_a[1]];
+        let g = generate::rmat(256, 1024, 7, (0.57, 0.19, 0.19, 0.05));
+        let run = |specs: &[ChurnSpec]| {
+            let mut csr = DeltaCsr::from_graph(&g);
+            let mut plan = ChurnPlan::new(specs, 42);
+            let mut all = Vec::new();
+            for _ in 0..5 {
+                all.extend(plan.round(&mut csr));
+            }
+            let final_g = csr.to_graph();
+            (all, final_g.indptr, final_g.indices)
+        };
+        let a = run(&specs_a);
+        let b = run(&specs_b);
+        assert_eq!(a, b, "declaration order leaked into the stream");
+    }
+
+    fn engine_fixture(
+        nv: usize,
+        ne: usize,
+        n_fogs: usize,
+        seed: u64,
+    ) -> TopologyEngine {
+        let g = generate::rmat(nv, ne, 7, (0.57, 0.19, 0.19, 0.05));
+        let assignment: Vec<u32> = (0..nv)
+            .map(|v| {
+                (mix64(seed ^ v as u64) % n_fogs as u64) as u32
+            })
+            .collect();
+        TopologyEngine::new(&g, &assignment, n_fogs)
+    }
+
+    #[test]
+    fn engine_holds_parity_under_mixed_churn() {
+        for &(n_fogs, seed) in &[(3usize, 11u64), (5, 23)] {
+            let mut eng = engine_fixture(200, 800, n_fogs, seed);
+            let mut plan = ChurnPlan::new(
+                &[
+                    spec("add-edge@rate=0.03"),
+                    spec("del-edge@rate=0.03"),
+                    spec("add-vertex@rate=0.02,degree=3"),
+                    spec("del-vertex@rate=0.02"),
+                ],
+                seed,
+            );
+            for round in 0..6 {
+                let rep = eng.churn_round(&mut plan);
+                assert!(rep.deltas > 0);
+                eng.parity_check().unwrap_or_else(|e| {
+                    panic!("round {round} (fogs {n_fogs}): {e}")
+                });
+            }
+            assert!(eng.stats.deltas_applied > 0);
+        }
+    }
+
+    #[test]
+    fn trickle_churn_preserves_untouched_fogs_bitwise() {
+        let mut eng = engine_fixture(400, 1200, 8, 3);
+        let mut plan =
+            ChurnPlan::new(&[spec("del-edge@rate=0.001")], 3);
+        let before_subs = eng.subs.clone();
+        let before_fp = eng.fingerprints.clone();
+        let rep = eng.churn_round(&mut plan);
+        assert!(rep.preserved > 0, "trickle round preserved nothing");
+        for j in 0..8u32 {
+            if !rep.dirty.contains(&j) && !rep.patched.contains(&j) {
+                assert_eq!(
+                    eng.subs[j as usize], before_subs[j as usize],
+                    "preserved fog {j} was touched"
+                );
+                assert_eq!(
+                    eng.fingerprints[j as usize],
+                    before_fp[j as usize]
+                );
+            }
+        }
+        assert_eq!(eng.stats.partial_rounds, 1);
+        eng.parity_check().unwrap();
+    }
+
+    #[test]
+    fn served_outputs_match_rebuilt_bitwise() {
+        let dims = 4usize;
+        let mut eng = engine_fixture(150, 600, 4, 17);
+        let mut plan = ChurnPlan::new(
+            &[
+                spec("add-edge@rate=0.05"),
+                spec("add-vertex@rate=0.03,degree=2"),
+            ],
+            17,
+        );
+        for _ in 0..4 {
+            eng.churn_round(&mut plan);
+        }
+        let mut rng = Rng::new(5);
+        let feats: Vec<f32> = (0..eng.csr.num_vertices() * dims)
+            .map(|_| rng.normal_f32(0.0, 1.0))
+            .collect();
+        let inc = bsp_aggregate(
+            &eng.subs, &eng.plan, &eng.assignment, &feats, dims,
+        );
+        let rebuilt = eng.csr.to_graph();
+        let (subs, plan2) =
+            extract(&rebuilt, &eng.assignment, eng.n_fogs);
+        let full = bsp_aggregate(
+            &subs, &plan2, &eng.assignment, &feats, dims,
+        );
+        assert_eq!(inc.len(), full.len());
+        assert!(
+            inc.iter()
+                .zip(&full)
+                .all(|(a, b)| a.to_bits() == b.to_bits()),
+            "served outputs diverged bitwise"
+        );
+    }
+
+    #[test]
+    fn sync_assignment_absorbs_external_moves() {
+        let mut eng = engine_fixture(120, 480, 4, 29);
+        let mut asn = eng.assignment.clone();
+        // migrate a handful of vertices, fog 3 untouched
+        for v in [0usize, 7, 19, 44] {
+            if asn[v] != 3 {
+                asn[v] = (asn[v] + 1) % 3;
+            }
+        }
+        let fp3 = eng.fingerprints[3];
+        let rep = eng.sync_assignment(&asn);
+        assert!(rep.migrations > 0);
+        assert_eq!(eng.assignment, asn);
+        eng.parity_check().unwrap();
+        if !rep.dirty.contains(&3) && !rep.patched.contains(&3) {
+            assert_eq!(eng.fingerprints[3], fp3);
+        }
+        // idempotent: same assignment again is a no-op
+        let rep2 = eng.sync_assignment(&asn);
+        assert_eq!(rep2.migrations, 0);
+        assert_eq!(rep2.preserved, eng.n_fogs);
+    }
+
+    #[test]
+    fn cardinalities_match_rebuilt_recount() {
+        let mut eng = engine_fixture(100, 400, 3, 31);
+        let mut plan = ChurnPlan::new(
+            &[spec("del-vertex@rate=0.05")],
+            31,
+        );
+        eng.churn_round(&mut plan);
+        let rebuilt = eng.csr.to_graph();
+        let cards = eng.cardinalities();
+        let mut verts = vec![0usize; 3];
+        let mut edges = vec![0usize; 3];
+        for v in 0..rebuilt.num_vertices() {
+            let j = eng.assignment[v] as usize;
+            verts[j] += 1;
+            edges[j] += rebuilt.degree(v);
+        }
+        for j in 0..3 {
+            assert_eq!(cards[j], (verts[j], edges[j]), "fog {j}");
+        }
+    }
+}

@@ -4,10 +4,14 @@
 
 pub mod csr;
 pub mod datasets;
+pub mod delta;
 pub mod generate;
 pub mod io;
 pub mod subgraph;
 
 pub use csr::Graph;
 pub use datasets::DatasetSpec;
+pub use delta::{
+    ChurnPlan, ChurnSpec, ChurnSummary, DeltaCsr, TopologyEngine,
+};
 pub use subgraph::{ExchangePlan, LocalGraph};

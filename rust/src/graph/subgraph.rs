@@ -55,6 +55,33 @@ impl LocalGraph {
         (self.n_local, self.num_edges())
     }
 
+    /// fnv1a64 over the sub-CSR's full contents — the per-partition
+    /// topology fingerprint the incremental engine (graph/delta.rs)
+    /// uses to prove preserved fogs were left bit-identical.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        let mut eat = |x: u32| {
+            for b in x.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x0000_0100_0000_01b3);
+            }
+        };
+        eat(self.n_local as u32);
+        for &v in &self.vertices {
+            eat(v);
+        }
+        for &x in &self.src {
+            eat(x);
+        }
+        for &x in &self.dst {
+            eat(x);
+        }
+        for &x in &self.global_degree {
+            eat(x);
+        }
+        h
+    }
+
     /// Heap bytes held by this sub-CSR — the deterministic logical
     /// memory metric the scale bench compares across grounding paths
     /// (`VmHWM` is a process-wide high-water mark and cannot compare

@@ -8,6 +8,7 @@
 //!                  serving
 //!   bench-kernels  naive-vs-tiled kernel benchmark -> BENCH_kernels.json
 //!   scale          million-vertex scale-tier sweep -> BENCH_scale.json
+//!   churn          incremental-vs-rebuild churn sweep -> BENCH_churn.json
 //!   exp            regenerate a paper table/figure (see experiments/)
 //!   list           list datasets, artifacts and experiments
 
@@ -16,7 +17,9 @@ use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 use fograph::experiments;
-use fograph::graph::{datasets, io as gio, DatasetSpec, Graph};
+use fograph::graph::delta::validate_churn_specs;
+use fograph::graph::{datasets, io as gio, ChurnSpec, DatasetSpec,
+                     Graph};
 use fograph::net::NetKind;
 use fograph::obs::{self, ClockMode, Recorder};
 use fograph::profile::PerfModel;
@@ -24,7 +27,7 @@ use fograph::runtime::kernels::{shard, DEFAULT_TASK_DEADLINE_S};
 use fograph::runtime::{reference, Engine, EngineKind};
 use fograph::serving::{self, pipeline};
 use fograph::traffic::{doc_json, fabric_json, report_json,
-                       run_fabric_chaos, run_loadtest_chaos,
+                       run_fabric_churn, run_loadtest_churn,
                        ArrivalKind, BatchPolicy, ChaosReport,
                        ExecMode, FabricReport, FairPolicy, FaultSpec,
                        LoadtestReport, TenantInput, TenantSpec,
@@ -55,6 +58,7 @@ fn main() {
         "loadtest" => cmd_loadtest(&args),
         "bench-kernels" => experiments::kernelbench::cmd(&args),
         "scale" => experiments::scale::cmd(&args),
+        "churn" => experiments::churn::cmd(&args),
         "exp" => experiments::cmd_exp(&args),
         "list" => cmd_list(&args),
         _ => {
@@ -87,11 +91,15 @@ USAGE:
                  [--tenant k=v,... (repeatable)] [--fair drr|fifo]
                  [--trace-out trace.json]
                  [--fault SPEC (repeatable)] [--task-deadline SECONDS]
+                 [--churn SPEC (repeatable)]
   repro bench-kernels [--smoke] [--kernel-threads K]
                  [--out BENCH_kernels.json]
                  [--history BENCH_history.jsonl]
   repro scale    [--smoke] [--fogs N] [--fog-mem-mb MB]
                  [--out BENCH_scale.json]
+                 [--history BENCH_history.jsonl]
+  repro churn    [--smoke] [--fogs N]
+                 [--out BENCH_churn.json]
                  [--history BENCH_history.jsonl]
   repro exp      <fig3|fig4|fig8|fig11|fig12|table4|fig13|table5|fig14|
                   fig15|fig16|fig17|fig18|loadtest|all>
@@ -174,6 +182,30 @@ CHAOS (loadtest only):
   Example: --fault crash@t=5,fog=2,rejoin=15 \\
            --fault slow@t=10,fog=0,factor=0.3,until=20
 
+STREAMING GRAPHS (loadtest only, analytic exec):
+  each repeatable --churn declares one class of seeded topology
+  mutation, drawn once per scheduler replan barrier and applied IN
+  PLACE on an incremental CSR (tombstoned deletes, periodic
+  compaction) — no full rebuild, no full repartition. Specs:
+    add-edge@rate=R             insert ~R*live_vertices random edges
+    del-edge@rate=R             delete ~R*live_vertices random edges
+    add-vertex@rate=R[,degree=D]  add vertices with D random
+                                  attachments (default 2)
+    del-vertex@rate=R           remove vertices with their edges
+  (rate in (0, 0.5]; one spec per op; streams are bit-deterministic
+  for a fixed --seed and invariant under declaration order.)
+  Only the fogs a round touches are re-grounded; boundary-only
+  refinement migrates dirty-partition border vertices and the
+  dual-mode scheduler consumes the remaining skew at the same
+  barrier (diffusion mode). Untouched fogs keep their sub-CSRs, plan
+  rows and topology fingerprints bit-for-bit — the same structures a
+  from-scratch rebuild would produce, asserted by the parity suite.
+  Final topology and invalidation counters land in the churn section
+  of BENCH_loadtest.json; churn-free runs emit byte-identical
+  reports with no churn key. Requires --scheduler-period > 0, a
+  multi-fog mode, and is exclusive with --fault / --exec measured.
+  Example: --churn add-edge@rate=0.01 --churn del-vertex@rate=0.002
+
 KERNELS:
   bench-kernels measures the tiled GEMM and blocked SpMM against their
   naive baselines (GFLOP/s, effective GB/s, batched-vs-serial fog exec,
@@ -198,7 +230,19 @@ SCALE TIER:
   materialize-all, zero bit-mismatches on spill-rehydrate access, and
   spills > 0 whenever the budget is infeasible. Writes BENCH_scale.json
   (vertices/sec/fog, grounding times, spill counters, peak_rss_bytes)
-  and appends a provenance line to BENCH_history.jsonl"
+  and appends a provenance line to BENCH_history.jsonl
+
+CHURN TIER:
+  churn sweeps seeded rmat/road graphs under a mixed mutation trace
+  and races the incremental topology engine (in-place CSR deltas +
+  partition-scoped re-grounding) against a full rebuild + multilevel
+  repartition + re-ground at every round (--smoke runs a small sweep
+  for CI). Gates: mutated-incrementally == rebuilt-from-scratch
+  bit-for-bit (sub-CSRs, exchange plan, served outputs) at every
+  round, zero re-grounding for untouched partitions in the trickle
+  phase, and >= 10x delta-apply speedup over rebuild at ~1% churn on
+  the top tier (non-smoke). Writes BENCH_churn.json and appends a
+  provenance line to BENCH_history.jsonl"
     );
 }
 
@@ -421,6 +465,44 @@ fn cmd_loadtest(args: &Args) -> i32 {
             }
         }
     }
+    // repeatable --churn specs: same loud exit-2 treatment as --fault
+    // (bare flag, grammar/range junk, duplicate op declarations), all
+    // before any dataset work
+    if args.has("churn") {
+        eprintln!(
+            "--churn requires a spec value (e.g. --churn \
+             add-edge@rate=0.01)"
+        );
+        return 2;
+    }
+    let mut churn: Vec<ChurnSpec> = Vec::new();
+    for raw in args.get_all("churn") {
+        match ChurnSpec::parse(raw) {
+            Ok(c) => churn.push(c),
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        }
+    }
+    if let Err(e) = validate_churn_specs(&churn) {
+        eprintln!("{e}");
+        return 2;
+    }
+    if !churn.is_empty() && !faults.is_empty() {
+        eprintln!(
+            "--churn cannot be combined with --fault: the chaos \
+             evacuation replans against the static grounding graph"
+        );
+        return 2;
+    }
+    if !churn.is_empty() && exec == ExecMode::Measured {
+        eprintln!(
+            "--churn requires --exec analytic: measured plans pin a \
+             fixed topology in the worker pool"
+        );
+        return 2;
+    }
     let traffic = TrafficConfig {
         arrival,
         rps: args.get_f64("rps", 100.0),
@@ -442,6 +524,13 @@ fn cmd_loadtest(args: &Args) -> i32 {
     let positive = |x: f64| x.is_finite() && x > 0.0;
     if !positive(traffic.rps) || !positive(traffic.duration_s) {
         eprintln!("--rps and --duration must be positive finite numbers");
+        return 2;
+    }
+    if !churn.is_empty() && traffic.scheduler_period_s <= 0.0 {
+        eprintln!(
+            "--churn requires a positive --scheduler-period: topology \
+             deltas apply at replan barriers"
+        );
         return 2;
     }
     if !traffic.batch.max_delay_s.is_finite()
@@ -516,7 +605,7 @@ fn cmd_loadtest(args: &Args) -> i32 {
         return cmd_loadtest_fabric(args, &traffic, fair, &modes,
                                    &specs, &rec,
                                    trace_out.as_deref(), &faults,
-                                   task_deadline_s);
+                                   task_deadline_s, &churn);
     }
     let (spec, g, model, net) = match resolve_run_inputs(args) {
         Ok(x) => x,
@@ -539,10 +628,10 @@ fn cmd_loadtest(args: &Args) -> i32 {
             }
         }
         let omegas = vec![PerfModel::uncalibrated(); cluster.len()];
-        let r = match run_loadtest_chaos(&g, &spec, &cluster, &opts,
+        let r = match run_loadtest_churn(&g, &spec, &cluster, &opts,
                                          &traffic, &omegas,
                                          &mut engine, &rec, &faults,
-                                         task_deadline_s) {
+                                         task_deadline_s, &churn) {
             Ok(r) => r,
             Err(e) => {
                 eprintln!("loadtest failed: {e}");
@@ -551,6 +640,7 @@ fn cmd_loadtest(args: &Args) -> i32 {
         };
         print_loadtest(m, &spec, &model, net, &traffic, &r);
         print_faults(&r.faults);
+        print_churn(&r.churn);
         runs.push(report_json(m, &traffic, &r));
     }
     let out = args.get_or("out", "BENCH_loadtest.json");
@@ -588,7 +678,8 @@ fn cmd_loadtest_fabric(args: &Args, traffic: &TrafficConfig,
                        fair: FairPolicy, modes: &[&str],
                        specs: &[TenantSpec], rec: &Arc<Recorder>,
                        trace_out: Option<&str>, faults: &[FaultSpec],
-                       task_deadline_s: f64) -> i32 {
+                       task_deadline_s: f64,
+                       churn: &[ChurnSpec]) -> i32 {
     let default_model = args.get_or("model", "gcn").to_string();
     let default_dataset = args.get_or("dataset", "siot").to_string();
     let tenants: Vec<fograph::traffic::Tenant> = specs
@@ -686,9 +777,10 @@ fn cmd_loadtest_fabric(args: &Args, traffic: &TrafficConfig,
                 return 2;
             }
         }
-        let fr = match run_fabric_chaos(&cluster, inputs, traffic,
+        let fr = match run_fabric_churn(&cluster, inputs, traffic,
                                         fair, &mut engine, rec,
-                                        faults, task_deadline_s) {
+                                        faults, task_deadline_s,
+                                        churn) {
             Ok(fr) => fr,
             Err(e) => {
                 eprintln!("loadtest failed: {e}");
@@ -701,6 +793,7 @@ fn cmd_loadtest_fabric(args: &Args, traffic: &TrafficConfig,
         }
         print_fabric(m, net, traffic, &fr);
         print_faults(&fr.aggregate.faults);
+        print_churn(&fr.aggregate.churn);
         runs.push(fabric_json(m, traffic, &fr));
     }
     let out = args.get_or("out", "BENCH_loadtest.json");
@@ -846,6 +939,26 @@ fn print_faults(faults: &Option<ChaosReport>) {
             o.hedges
         );
     }
+}
+
+/// Console summary of a churn run's `churn` section. No-op (no output
+/// at all) for static-topology runs.
+fn print_churn(churn: &Option<fograph::graph::ChurnSummary>) {
+    let Some(c) = churn else { return };
+    let st = &c.stats;
+    println!(
+        "  churn      {} rounds, {} deltas, {} migrations -> final \
+         {} live vertices / {} edges",
+        st.rounds, st.deltas_applied, st.migrations,
+        c.final_live_vertices, c.final_edges
+    );
+    println!(
+        "             invalidation: {} fogs re-grounded, {} \
+         degree-patched, {} preserved bit-for-bit ({} partial \
+         rounds, {} plan rows reindexed, {} compactions)",
+        st.fogs_reground, st.fogs_degree_patched, st.fogs_preserved,
+        st.partial_rounds, st.plan_rows_reindexed, st.compactions
+    );
 }
 
 fn print_loadtest(mode: &str, spec: &DatasetSpec, model: &str,

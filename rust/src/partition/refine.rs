@@ -96,6 +96,106 @@ pub fn refine(
     total_gain
 }
 
+/// Parameters for the delta-aware boundary pass. The balance cap uses
+/// unit live-vertex weights, mirroring the churn engine's notion of
+/// load (the rescheduler handles compute skew separately).
+pub struct BoundaryParams {
+    pub imbalance: f64,
+}
+
+impl Default for BoundaryParams {
+    fn default() -> Self {
+        Self { imbalance: 1.05 }
+    }
+}
+
+/// Delta-aware boundary refinement: a single deterministic,
+/// ascending-id pass over an explicit `candidates` list (the vertices
+/// a topology delta just touched) that migrates a candidate to the
+/// adjacent part with the strictly highest edge-cut gain — but ONLY
+/// between parts flagged `dirty`, so a move never invalidates a
+/// partition the churn round would otherwise preserve. This replaces a
+/// from-scratch multilevel repartition: cost is O(Σ deg(candidates)),
+/// not O(V+E).
+///
+/// `neighbors(v, buf)` fills `buf` with v's current live neighbors;
+/// `assignment` is updated in place; the applied moves `(v, from, to)`
+/// are returned so the caller can maintain its own per-part state.
+/// No RNG: for a fixed delta batch the result is bit-deterministic.
+pub fn refine_boundary<N: FnMut(u32, &mut Vec<u32>)>(
+    n_vertices: usize,
+    mut neighbors: N,
+    alive: &[bool],
+    assignment: &mut [u32],
+    n_parts: usize,
+    candidates: &[u32],
+    dirty: &[bool],
+    params: &BoundaryParams,
+) -> Vec<(u32, u32, u32)> {
+    debug_assert_eq!(alive.len(), n_vertices);
+    debug_assert_eq!(assignment.len(), n_vertices);
+    let live_total =
+        alive.iter().filter(|&&a| a).count() as f64;
+    let max_w =
+        ((live_total / n_parts as f64) * params.imbalance).ceil()
+            as usize;
+    let mut pw = vec![0usize; n_parts];
+    for v in 0..n_vertices {
+        if alive[v] {
+            pw[assignment[v] as usize] += 1;
+        }
+    }
+    let mut conn = vec![0usize; n_parts];
+    let mut touched: Vec<usize> = Vec::with_capacity(8);
+    let mut nbuf: Vec<u32> = Vec::new();
+    let mut moves = Vec::new();
+    for &v in candidates {
+        let vi = v as usize;
+        if !alive[vi] || !dirty[assignment[vi] as usize] {
+            continue;
+        }
+        let home = assignment[vi] as usize;
+        neighbors(v, &mut nbuf);
+        for &u in &nbuf {
+            let p = assignment[u as usize] as usize;
+            if conn[p] == 0 {
+                touched.push(p);
+            }
+            conn[p] += 1;
+        }
+        let internal = conn[home];
+        let mut best: Option<(usize, usize)> = None;
+        for &p in &touched {
+            if p == home || !dirty[p] || pw[p] + 1 > max_w {
+                continue;
+            }
+            if conn[p] > internal {
+                let gain = conn[p] - internal;
+                // strictly better gain wins; ties keep the lowest
+                // part id (touched order is not deterministic enough)
+                match best {
+                    Some((bp, bg))
+                        if bg > gain || (bg == gain && bp < p) => {}
+                    _ => best = Some((p, gain)),
+                }
+            }
+        }
+        if let Some((p, _)) = best {
+            if pw[home] > 1 {
+                pw[home] -= 1;
+                pw[p] += 1;
+                assignment[vi] = p as u32;
+                moves.push((v, home as u32, p as u32));
+            }
+        }
+        for &p in &touched {
+            conn[p] = 0;
+        }
+        touched.clear();
+    }
+    moves
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -140,5 +240,78 @@ mod tests {
         let max_allowed = (31.0f64 / 2.0 * 1.10).ceil() as u64;
         assert!(pw.iter().all(|&w| w <= max_allowed), "{pw:?}");
         assert!(pw.iter().all(|&w| w > 0));
+    }
+
+    fn adj(g: &Graph) -> impl FnMut(u32, &mut Vec<u32>) + '_ {
+        |v, buf| {
+            buf.clear();
+            buf.extend_from_slice(g.neighbors(v as usize));
+        }
+    }
+
+    /// A vertex sitting in the wrong clique hops home; a vertex whose
+    /// home part is clean stays put even with positive gain.
+    #[test]
+    fn boundary_pass_moves_only_dirty_candidates() {
+        let mut edges = Vec::new();
+        for a in 0..6u32 {
+            for b in a + 1..6 {
+                edges.push((a, b));
+                edges.push((a + 6, b + 6));
+            }
+        }
+        edges.push((0, 6));
+        let g = Graph::from_undirected_edges(12, &edges);
+        let alive = vec![true; 12];
+        // vertex 5 misplaced into part 1, vertex 11 into part 0
+        let mut asn: Vec<u32> =
+            (0..12).map(|v| (v >= 6) as u32).collect();
+        asn[5] = 1;
+        asn[11] = 0;
+        let moves = refine_boundary(
+            12, adj(&g), &alive, &mut asn, 2,
+            &[5, 11], &[true, true],
+            &BoundaryParams { imbalance: 1.5 },
+        );
+        assert_eq!(moves, vec![(5, 1, 0), (11, 0, 1)]);
+        assert_eq!(asn[5], 0);
+        assert_eq!(asn[11], 1);
+
+        // same start, but part 0 is clean: 5 must not move (its home
+        // part 1 is dirty but the only profitable target is clean)
+        let mut asn2: Vec<u32> =
+            (0..12).map(|v| (v >= 6) as u32).collect();
+        asn2[5] = 1;
+        let moves2 = refine_boundary(
+            12, adj(&g), &alive, &mut asn2, 2,
+            &[5], &[false, true],
+            &BoundaryParams { imbalance: 1.5 },
+        );
+        assert!(moves2.is_empty());
+        assert_eq!(asn2[5], 1);
+    }
+
+    /// The balance cap blocks gain moves that would overload a part,
+    /// dead vertices are skipped, and the pass reduces the cut.
+    #[test]
+    fn boundary_pass_respects_balance_and_liveness() {
+        let edges: Vec<(u32, u32)> =
+            (1..8).map(|i| (0u32, i)).collect();
+        let g = Graph::from_undirected_edges(8, &edges);
+        let mut alive = vec![true; 8];
+        alive[7] = false;
+        let mut asn: Vec<u32> = (0..8).map(|v| (v % 2) as u32).collect();
+        // leaves all want to join the hub's part 0; cap forbids most
+        let moves = refine_boundary(
+            8, adj(&g), &alive, &mut asn, 2,
+            &[1, 3, 5, 7], &[true, true],
+            &BoundaryParams { imbalance: 1.2 },
+        );
+        let max_w = ((7.0 / 2.0) * 1.2_f64).ceil() as usize;
+        let p0 = (0..8).filter(|&v| alive[v] && asn[v] == 0).count();
+        assert!(p0 <= max_w, "part 0 has {p0} > cap {max_w}");
+        assert!(moves.iter().all(|&(v, _, _)| v != 7), "dead moved");
+        let wg = WGraph::from_graph(&g);
+        assert!(edge_cut(&wg, &asn) < 7, "no cut improvement");
     }
 }

@@ -71,6 +71,23 @@ impl CollectionIndex {
             active_fogs: 0,
         }
     }
+
+    /// Assemble from precomputed per-fog vertex/degree rows — the
+    /// incremental topology engine's entry point, which maintains both
+    /// under churn instead of re-sweeping a static graph. Rows must be
+    /// ascending per fog and aligned, exactly as `build` produces.
+    pub fn from_parts(by_fog: Vec<Vec<u32>>, degrees: Vec<Vec<u64>>)
+                      -> CollectionIndex {
+        assert_eq!(by_fog.len(), degrees.len());
+        debug_assert!(by_fog
+            .iter()
+            .zip(&degrees)
+            .all(|(v, d)| v.len() == d.len()));
+        let n_fogs = by_fog.len();
+        let active_fogs =
+            by_fog.iter().filter(|v| !v.is_empty()).count();
+        CollectionIndex { n_fogs, by_fog, degrees, active_fogs }
+    }
 }
 
 #[derive(Clone, Debug)]
@@ -126,8 +143,13 @@ pub fn collect_indexed(
     devices: usize,
     wan: bool,
 ) -> CollectionResult {
-    let nv = g.num_vertices();
-    assert_eq!(window_features.len(), nv * dims);
+    // Derive the vertex universe from the payload, not the graph:
+    // under churn the fabric's payload grows past the build-time
+    // `g.num_vertices()` as vertices join. Churn-free callers always
+    // pass exactly `g.num_vertices() * dims`, so nothing changes.
+    assert_eq!(window_features.len() % dims.max(1), 0);
+    let nv = window_features.len() / dims.max(1);
+    assert!(nv >= g.num_vertices(), "payload smaller than graph");
     let n_fogs = cluster.len();
     assert_eq!(idx.n_fogs, n_fogs, "index built for another cluster");
 

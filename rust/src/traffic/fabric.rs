@@ -54,10 +54,12 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::fog::{Cluster, LoadTrace};
+use crate::graph::delta::{validate_churn_specs, ChurnPlan, ChurnSpec,
+                          TopologyEngine, CHURN_SALT};
 use crate::graph::{DatasetSpec, Graph};
 use crate::obs::recorder::{Recorder, Ring};
 use crate::obs::span::{Phase, SpanEvent, NO_TENANT};
-use crate::profile::PerfModel;
+use crate::profile::{Cardinality, PerfModel};
 use crate::runtime::kernels::DEFAULT_TASK_DEADLINE_S;
 use crate::runtime::{Engine, EngineError};
 use crate::scheduler::diffusion::estimate_times;
@@ -66,6 +68,7 @@ use crate::serving::collection::{self, CollectionIndex};
 use crate::serving::pipeline::{self, Placement, ServeOpts};
 use crate::util::cli::MAX_PIPELINE_DEPTH;
 use crate::util::json::{arr, num, obj, s, Json};
+use crate::util::rng::mix64;
 
 use super::arrival::ArrivalProcess;
 use super::batcher::{bucket, MicroBatcher};
@@ -658,6 +661,15 @@ fn exec_per_fog(
         .collect()
 }
 
+/// Per-service incremental-topology state under `--churn`: the
+/// engine owns the evolving delta CSR plus the partition-scoped
+/// serving structures; the plan is that service's seeded mutation
+/// stream (drawn once per replan barrier).
+struct ChurnState {
+    engine: TopologyEngine,
+    plan: ChurnPlan,
+}
+
 /// One `(model, dataset)` plan-cache entry at runtime.
 struct Service<'a> {
     model: String,
@@ -677,6 +689,9 @@ struct Service<'a> {
     base_wire_bytes: usize,
     host_times: Vec<f64>,
     measured: Option<MeasuredExec>,
+    /// `Some` exactly when the run declared `--churn` specs: the
+    /// service's topology then evolves in place at replan barriers.
+    churn: Option<ChurnState>,
     scheduler_on: bool,
     /// Canonical tenant indices bound to this service.
     tenants: Vec<usize>,
@@ -821,9 +836,61 @@ pub fn run_fabric_chaos<'a>(
     faults: &[FaultSpec],
     task_deadline_s: f64,
 ) -> Result<FabricReport, EngineError> {
+    run_fabric_churn(cluster, inputs, base, fair, engine, rec, faults,
+                     task_deadline_s, &[])
+}
+
+/// `run_fabric_chaos` plus the streaming-graph plane: a seeded,
+/// canonicalized topology-mutation stream (`--churn` specs) applied to
+/// every service's graph at each replan barrier. Deltas land in place
+/// on an incremental CSR ([`TopologyEngine`]); only the fogs a round
+/// actually touches are re-grounded (partition-scoped invalidation —
+/// untouched fogs keep their sub-CSRs, plan rows and fingerprints
+/// bit-for-bit), and the dual-mode scheduler consumes the resulting
+/// skew through engine-recounted cardinalities at the same barriers.
+/// With `churn` empty this is exactly `run_fabric_chaos` — every hook
+/// is gated, so churn-free reports stay byte-identical.
+#[allow(clippy::too_many_arguments)]
+pub fn run_fabric_churn<'a>(
+    cluster: &Cluster,
+    inputs: Vec<TenantInput<'a>>,
+    base: &TrafficConfig,
+    fair: FairPolicy,
+    engine: &mut Engine,
+    rec: &Arc<Recorder>,
+    faults: &[FaultSpec],
+    task_deadline_s: f64,
+    churn: &[ChurnSpec],
+) -> Result<FabricReport, EngineError> {
     assert!(!inputs.is_empty(), "fabric needs at least one tenant");
     assert!(base.duration_s > 0.0);
     let n = cluster.len();
+    if !churn.is_empty() {
+        validate_churn_specs(churn)
+            .map_err(EngineError::Unsupported)?;
+        if base.exec == ExecMode::Measured {
+            return Err(EngineError::Unsupported(
+                "--churn requires analytic execution: measured plans \
+                 pin a fixed topology in the worker pool (incremental \
+                 plan rebuilds are ROADMAP item 5 territory)"
+                    .into(),
+            ));
+        }
+        if !faults.is_empty() {
+            return Err(EngineError::Unsupported(
+                "--churn cannot be combined with --fault: the chaos \
+                 evacuation replans against the static grounding graph"
+                    .into(),
+            ));
+        }
+        if base.scheduler_period_s <= 0.0 {
+            return Err(EngineError::Unsupported(
+                "--churn requires a positive --scheduler-period: \
+                 topology deltas apply at replan barriers"
+                    .into(),
+            ));
+        }
+    }
     if !(task_deadline_s.is_finite() && task_deadline_s > 0.0) {
         return Err(EngineError::Unsupported(format!(
             "task deadline must be positive and finite (got \
@@ -955,6 +1022,7 @@ pub fn run_fabric_chaos<'a>(
                     base_wire_bytes: 0,
                     host_times: Vec::new(),
                     measured: None,
+                    churn: None,
                     scheduler_on: false,
                     tenants: Vec::new(),
                     hits: 0,
@@ -1094,6 +1162,26 @@ pub fn run_fabric_chaos<'a>(
         svc.scheduler_on = n > 1
             && base.scheduler_period_s > 0.0
             && !matches!(svc.opts.placement, Placement::SingleNode(_));
+        if !churn.is_empty() {
+            if !svc.scheduler_on {
+                return Err(EngineError::Unsupported(format!(
+                    "--churn requires an active dual-mode scheduler \
+                     for every service (multi-fog cluster, positive \
+                     --scheduler-period, non-pinned placement); \
+                     service ({}, {}) has none",
+                    svc.model, svc.dataset
+                )));
+            }
+            // identity-seeded per service (canonical creation order),
+            // so churn streams are declaration-order invariant and
+            // distinct services never share a draw sequence
+            let churn_seed =
+                mix64(base.seed ^ CHURN_SALT) ^ mix64(si as u64);
+            svc.churn = Some(ChurnState {
+                engine: TopologyEngine::new(svc.g, &svc.assignment, n),
+                plan: ChurnPlan::new(churn, churn_seed),
+            });
+        }
     }
     if aggregate.slo.oom {
         // a service's placement exceeds fog memory: the run is aborted
@@ -1279,6 +1367,25 @@ pub fn run_fabric_chaos<'a>(
                 if !svc.scheduler_on {
                     continue;
                 }
+                // ---- topology churn: draw + apply this barrier's
+                // deltas in place, re-grounding only touched fogs ----
+                if let Some(cs) = svc.churn.as_mut() {
+                    cs.engine.churn_round(&mut cs.plan);
+                    // the engine owns the evolving assignment
+                    // (boundary refinement may migrate vertices;
+                    // vertex appends grow the universe)
+                    svc.assignment.clear();
+                    svc.assignment
+                        .extend_from_slice(&cs.engine.assignment);
+                    // appended vertices read zero feature rows —
+                    // deterministic, and the collection path sizes
+                    // itself off the payload, not the grounding graph
+                    let want =
+                        cs.engine.csr.num_vertices() * svc.dims;
+                    if svc.payload.len() < want {
+                        svc.payload.resize(want, 0.0);
+                    }
+                }
                 let eff_omegas: Vec<PerfModel> = match &svc.measured {
                     Some(m) => m.scaled_omegas(),
                     None => svc.omegas.clone(),
@@ -1298,11 +1405,34 @@ pub fn run_fabric_chaos<'a>(
                         scaled_model(&eff_omegas[j], k)
                     })
                     .collect();
-                let real_times =
-                    estimate_times(svc.g, &svc.assignment, n, &scaled);
+                // churned services price skew off the engine's live
+                // cardinalities — `estimate_times` recounts from the
+                // STALE grounding graph (and would index past it once
+                // adds grew the universe)
+                let real_times: Vec<f64> = match &svc.churn {
+                    Some(cs) => cs
+                        .engine
+                        .cardinalities()
+                        .iter()
+                        .zip(&scaled)
+                        .map(|(&(v, e), m)| {
+                            m.predict(Cardinality::new(v, e))
+                        })
+                        .collect(),
+                    None => estimate_times(svc.g, &svc.assignment, n,
+                                           &scaled),
+                };
+                // under churn a full IEP replan would repartition the
+                // stale grounding graph (shrinking the grown universe);
+                // the barrier consumes skew through diffusion only
+                let scfg = if svc.churn.is_some() {
+                    SchedulerConfig { theta: 1.0, ..cfg }
+                } else {
+                    cfg
+                };
                 let decision = schedule(
                     svc.g, &svc.spec, cluster, &svc.opts,
-                    &mut svc.assignment, &real_times, &scaled, &cfg,
+                    &mut svc.assignment, &real_times, &scaled, &scfg,
                 );
                 if let Some(cause) = decision.cause() {
                     rec.span(&ring, SpanEvent::new(Phase::Replan,
@@ -1325,11 +1455,38 @@ pub fn run_fabric_chaos<'a>(
                     }
                 };
                 if moved {
-                    if let Some(m) = svc.measured.as_mut() {
+                    if let Some(cs) = svc.churn.as_mut() {
+                        // absorb the diffusion's moves into the
+                        // engine: dirties only the fogs on either
+                        // side of a move, re-grounds just those
+                        cs.engine.sync_assignment(&svc.assignment);
+                    } else if let Some(m) = svc.measured.as_mut() {
                         m.rebuild(svc.g, &svc.assignment,
                                   &svc.model)?;
                         svc.rebuilds += 1;
                     }
+                }
+                if let Some(cs) = svc.churn.as_ref() {
+                    // topology moved this barrier even when the
+                    // scheduler kept the placement: re-derive every
+                    // placement-static constant from engine state
+                    svc.host_times = cs
+                        .engine
+                        .cardinalities()
+                        .iter()
+                        .zip(&eff_omegas)
+                        .map(|(&(v, e), m)| {
+                            m.predict(Cardinality::new(v, e))
+                        })
+                        .collect();
+                    let (rows, degs) = cs.engine.collection_rows();
+                    svc.coll_index =
+                        CollectionIndex::from_parts(rows, degs);
+                    svc.coll_s = collection_transfer_s(
+                        svc.g, &svc.payload, svc.dims,
+                        &svc.coll_index, cluster, &svc.opts,
+                    );
+                } else if moved {
                     svc.host_times = estimate_times(
                         svc.g, &svc.assignment, n, &eff_omegas);
                     svc.coll_index = CollectionIndex::build(
@@ -1811,6 +1968,11 @@ pub fn run_fabric_chaos<'a>(
         });
     }
 
+    if let Some(cs) = services.iter().find_map(|s| s.churn.as_ref()) {
+        // like the base_* grounding constants, the aggregate's churn
+        // section describes the canonical-first service
+        aggregate.churn = Some(cs.engine.summary());
+    }
     let mut report = FabricReport {
         aggregate,
         fair,

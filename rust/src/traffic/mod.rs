@@ -22,6 +22,15 @@
 //! measured path, and emergency evacuation of a dead fog's partitions
 //! through the dual-mode rescheduler. Outcomes (time-to-detect,
 //! time-to-recover, SLO damage) land in the report's `faults` section.
+//!
+//! The streaming-graph plane (`--churn add-edge@rate=… / del-edge@… /
+//! add-vertex@… / del-vertex@…`) evolves every service's topology in
+//! place at replan barriers through the incremental topology engine
+//! (`graph::delta`): seeded repeatable mutation streams, in-place CSR
+//! deltas with tombstones, boundary-only repartitioning and
+//! partition-scoped invalidation — only touched fogs re-ground,
+//! untouched fogs stay bit-identical. Outcomes land in the report's
+//! `churn` section.
 
 pub mod arrival;
 pub mod batcher;
@@ -37,11 +46,13 @@ pub use batcher::{bucket, BatchPolicy, MicroBatcher};
 pub use chaos::{chaos_json, ChaosPlan, ChaosReport, EwmaDetector,
                 FaultKind, FaultOutcome, FaultSpec};
 pub use fabric::{fabric_json, jain_index, run_fabric,
-                 run_fabric_chaos, run_fabric_traced, FabricReport,
-                 PlanCacheEntry, TenantInput, TenantReport};
+                 run_fabric_chaos, run_fabric_churn,
+                 run_fabric_traced, FabricReport, PlanCacheEntry,
+                 TenantInput, TenantReport};
 pub use measured::{BucketRow, MeasuredExec};
 pub use sim::{doc_json, report_json, run_loadtest,
-              run_loadtest_chaos, run_loadtest_traced, ExecMode,
-              LoadtestReport, PipelineReport, TrafficConfig};
+              run_loadtest_chaos, run_loadtest_churn,
+              run_loadtest_traced, ExecMode, LoadtestReport,
+              PipelineReport, TrafficConfig};
 pub use slo::{LatencySummary, QueueTimeline, SloReport};
 pub use tenant::{FairPolicy, Tenant, TenantSpec};

@@ -47,6 +47,7 @@
 use std::sync::Arc;
 
 use crate::fog::Cluster;
+use crate::graph::delta::{ChurnSpec, ChurnSummary};
 use crate::graph::{DatasetSpec, Graph};
 use crate::obs::recorder::Recorder;
 use crate::profile::PerfModel;
@@ -59,7 +60,8 @@ use crate::util::provenance::{git_rev, peak_rss_bytes,
 use super::arrival::ArrivalKind;
 use super::batcher::BatchPolicy;
 use super::chaos::{chaos_json, ChaosReport, FaultSpec};
-use super::fabric::{run_fabric_chaos, run_fabric_traced, TenantInput};
+use super::fabric::{run_fabric_chaos, run_fabric_churn,
+                    run_fabric_traced, TenantInput};
 use super::measured::BucketRow;
 use super::slo::SloReport;
 use super::tenant::{FairPolicy, Tenant};
@@ -214,6 +216,12 @@ pub struct LoadtestReport {
     /// specs; `None` (and absent from the JSON) otherwise, so
     /// fault-free reports stay byte-identical to the pre-chaos schema.
     pub faults: Option<ChaosReport>,
+    /// Streaming-graph outcome — `Some` exactly when the run declared
+    /// `--churn` specs: final topology plus the cumulative partition-
+    /// scoped invalidation counters. `None` (and absent from the
+    /// JSON) otherwise, so churn-free reports stay byte-identical to
+    /// the static-topology schema.
+    pub churn: Option<ChurnSummary>,
 }
 
 /// Drive the serving stack under a sustained request stream: the
@@ -293,6 +301,38 @@ pub fn run_loadtest_chaos(
     Ok(fabric.aggregate)
 }
 
+/// `run_loadtest_chaos` plus the streaming-graph plane: the one-tenant
+/// mapping onto `fabric::run_fabric_churn`. With `churn` empty this is
+/// exactly `run_loadtest_chaos`.
+#[allow(clippy::too_many_arguments)]
+pub fn run_loadtest_churn(
+    g: &Graph,
+    spec: &DatasetSpec,
+    cluster: &Cluster,
+    opts: &ServeOpts,
+    traffic: &TrafficConfig,
+    omegas: &[PerfModel],
+    engine: &mut Engine,
+    rec: &Arc<Recorder>,
+    faults: &[FaultSpec],
+    task_deadline_s: f64,
+    churn: &[ChurnSpec],
+) -> Result<LoadtestReport, EngineError> {
+    assert!(traffic.rps > 0.0 && traffic.duration_s > 0.0);
+    assert_eq!(omegas.len(), cluster.len());
+    let input = TenantInput {
+        tenant: Tenant::legacy(traffic, &opts.model, spec.name),
+        g,
+        spec: *spec,
+        opts: opts.clone(),
+        omegas: omegas.to_vec(),
+    };
+    let fabric = run_fabric_churn(cluster, vec![input], traffic,
+                                  FairPolicy::Drr, engine, rec,
+                                  faults, task_deadline_s, churn)?;
+    Ok(fabric.aggregate)
+}
+
 /// JSON record of one loadtest run (everything in here is deterministic
 /// for a fixed seed).
 pub fn report_json(label: &str, traffic: &TrafficConfig,
@@ -360,6 +400,11 @@ pub fn report_json(label: &str, traffic: &TrafficConfig,
     // byte-for-byte (no keys added)
     if let Some(f) = &r.faults {
         fields.push(("faults", chaos_json(f)));
+    }
+    // churn runs only — static-topology reports keep the pre-churn
+    // schema byte-for-byte (no keys added)
+    if let Some(c) = &r.churn {
+        fields.push(("churn", c.json()));
     }
     fields.push(("phase_breakdown", r.phase_breakdown.clone()));
     fields.push((

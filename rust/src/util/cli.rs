@@ -203,6 +203,44 @@ pub fn parse_fog_mem_mb(args: &Args) -> Result<Option<usize>, String> {
     }
 }
 
+/// Upper bound for a churn spec's per-round mutation rate: more than
+/// half the live graph per scheduler period is a rebuild in disguise,
+/// not churn, so the incremental engine refuses it at parse time.
+pub const MAX_CHURN_RATE: f64 = 0.5;
+
+/// Upper bound for `degree=` in `add-vertex` churn specs: how many
+/// attachment edges a newly joined vertex draws. IoT sensors attach to
+/// a handful of gateways, not to half the graph.
+pub const MAX_CHURN_DEGREE: usize = 64;
+
+/// Validated `rate=` field of a `--churn` spec: the fraction of live
+/// vertices (or live edges, for edge ops) mutated per scheduler round.
+/// Zero is an error — a no-op churn spec is always a typo — as are
+/// non-finite, negative and rebuild-scale (> 0.5) values. `what`
+/// names the offending spec in the message so the CLI can exit 2.
+pub fn parse_churn_rate(what: &str, v: &str) -> Result<f64, String> {
+    match v.trim().parse::<f64>() {
+        Ok(r) if r.is_finite() && r > 0.0 && r <= MAX_CHURN_RATE => Ok(r),
+        _ => Err(format!(
+            "{what}: 'rate={v}' must be a number in (0, \
+             {MAX_CHURN_RATE}]"
+        )),
+    }
+}
+
+/// Validated `degree=` field of an `add-vertex` churn spec (attachment
+/// edges per new vertex). 0, non-numeric and absurd values are errors;
+/// the default when the key is absent is the caller's concern.
+pub fn parse_churn_degree(what: &str, v: &str) -> Result<usize, String> {
+    match v.trim().parse::<usize>() {
+        Ok(d) if (1..=MAX_CHURN_DEGREE).contains(&d) => Ok(d),
+        _ => Err(format!(
+            "{what}: 'degree={v}' must be an integer in \
+             1..={MAX_CHURN_DEGREE}"
+        )),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -319,6 +357,29 @@ mod tests {
         // bare flag: the value was eaten by the shell or forgotten
         assert!(ok(&["--fog-mem-mb"]).is_err());
         assert!(ok(&["--fog-mem-mb", "--smoke"]).is_err());
+    }
+
+    #[test]
+    fn churn_rate_validation() {
+        assert_eq!(parse_churn_rate("S", "0.01"), Ok(0.01));
+        assert_eq!(parse_churn_rate("S", " 0.5 "), Ok(0.5));
+        for bad in ["0", "0.0", "-0.1", "0.51", "1", "inf", "nan",
+                    "lots", ""] {
+            let e = parse_churn_rate("SPEC", bad);
+            assert!(e.is_err(), "rate {bad:?} accepted");
+            assert!(e.unwrap_err().contains("SPEC"));
+        }
+    }
+
+    #[test]
+    fn churn_degree_validation() {
+        assert_eq!(parse_churn_degree("S", "1"), Ok(1));
+        assert_eq!(parse_churn_degree("S", "64"), Ok(64));
+        for bad in ["0", "65", "-1", "2.5", "few", ""] {
+            let e = parse_churn_degree("SPEC", bad);
+            assert!(e.is_err(), "degree {bad:?} accepted");
+            assert!(e.unwrap_err().contains("SPEC"));
+        }
     }
 
     #[test]

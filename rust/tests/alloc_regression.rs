@@ -11,6 +11,11 @@
 //!   C. `sync_halo` performs ZERO allocations once the halo index and
 //!      state buffers exist — the split-borrow + `copy_from_slice`
 //!      rewrite must never regress back to per-row temporaries.
+//!   D. an incremental churn round (single-edge delta, partial
+//!      re-ground) allocates strictly less than re-extracting the
+//!      whole grounding from scratch — the partition-scoped
+//!      invalidation plane must never silently fall back to
+//!      rebuild-everything.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -131,4 +136,54 @@ fn hot_paths_hold_their_allocation_budgets() {
         "sync_halo must not allocate on the steady-state path"
     );
     assert_eq!(bytes, warm, "byte accounting is deterministic");
+
+    // -- D: partial re-ground beats a from-scratch extract -----------
+    use fograph::graph::delta::Delta;
+    use fograph::graph::{ChurnPlan, ChurnSpec, TopologyEngine};
+    let mut engine = TopologyEngine::new(&g, &assignment, n_fogs);
+    // warm the engine's round path once (scratch vecs, first deltas)
+    let warm_spec =
+        vec![ChurnSpec::parse("del-edge@rate=0.0000001").unwrap()];
+    let mut warm_plan = ChurnPlan::new(&warm_spec, 3);
+    let rep = engine.churn_round(&mut warm_plan);
+    assert!(rep.deltas <= 1);
+    // measured round: one hand-built edge delta -> partial re-ground
+    let (u, v) = {
+        let mut found = None;
+        'outer: for u in 0..g.num_vertices() as u32 {
+            if !engine.csr.is_alive(u) {
+                continue;
+            }
+            let mut nb = Vec::new();
+            engine.csr.for_neighbors(u, |x| nb.push(x));
+            for &w in &nb {
+                if w > u {
+                    found = Some((u, w));
+                    break 'outer;
+                }
+            }
+        }
+        found.unwrap()
+    };
+    let (churn_allocs, rep) = allocs_during(|| {
+        engine.csr.del_edge(u, v);
+        engine.integrate(&[Delta::DelEdge(u, v)])
+    });
+    assert!(
+        rep.preserved > 0,
+        "a single edge delta must leave some fogs untouched"
+    );
+    let (full_allocs, _) = allocs_during(|| {
+        subgraph::extract_materialized(
+            &engine.csr.to_graph(),
+            &engine.assignment,
+            n_fogs,
+        )
+    });
+    assert!(
+        churn_allocs < full_allocs,
+        "partial re-ground must allocate less than a from-scratch \
+         extract ({churn_allocs} vs {full_allocs})"
+    );
+    engine.parity_check().expect("post-budget parity");
 }

@@ -1,0 +1,213 @@
+//! Incremental-topology parity suite (churn tentpole): across seeded
+//! rmat / sbm / road topologies, mutation traces and fog counts, a
+//! [`TopologyEngine`] mutated in place must stay bit-identical to a
+//! from-scratch rebuild of the live topology — same per-fog sub-CSRs
+//! (vertex order, edge order, degrees), same exchange plan, same
+//! fingerprints, and bitwise-identical served outputs — while rounds
+//! that touch few fogs leave the untouched fogs' structures
+//! physically unmodified. The in-crate unit tests cover hand-built
+//! fixtures; this suite covers the generator zoo and the replay /
+//! compaction behaviors the `repro churn` sweep relies on.
+
+use fograph::graph::delta::bsp_aggregate;
+use fograph::graph::{generate, ChurnPlan, ChurnSpec, Graph,
+                     TopologyEngine};
+
+fn parse_specs(texts: &[&str]) -> Vec<ChurnSpec> {
+    texts
+        .iter()
+        .map(|t| ChurnSpec::parse(t).expect("valid spec"))
+        .collect()
+}
+
+/// Seeded pseudo-random assignment hitting every fog (LCG scramble —
+/// same family the grounding-parity suite uses).
+fn scrambled(nv: usize, n_fogs: usize, salt: u64) -> Vec<u32> {
+    (0..nv as u64)
+        .map(|v| {
+            let h = (v ^ salt)
+                .wrapping_mul(6364136223846793005)
+                .wrapping_add(1442695040888963407);
+            ((h >> 33) % n_fogs as u64) as u32
+        })
+        .collect()
+}
+
+fn graph_zoo() -> Vec<(&'static str, Graph)> {
+    vec![
+        ("rmat",
+         generate::rmat(600, 2400, 7, (0.57, 0.19, 0.19, 0.05))),
+        ("sbm", generate::sbm(500, 2500, 5, 0.8, 11).0),
+        ("road", generate::road_network(400, 500, 3, 13).0),
+    ]
+}
+
+fn mixed_trace() -> Vec<ChurnSpec> {
+    parse_specs(&[
+        "add-edge@rate=0.01",
+        "del-edge@rate=0.008",
+        "add-vertex@rate=0.004,degree=3",
+        "del-vertex@rate=0.002",
+    ])
+}
+
+#[test]
+fn mutated_equals_rebuilt_across_zoo_seeds_and_fog_counts() {
+    for (tag, g) in graph_zoo() {
+        for &n_fogs in &[2usize, 5, 8] {
+            for seed in [3u64, 17] {
+                let asn =
+                    scrambled(g.num_vertices(), n_fogs, seed);
+                let mut engine =
+                    TopologyEngine::new(&g, &asn, n_fogs);
+                let mut plan =
+                    ChurnPlan::new(&mixed_trace(), seed);
+                for round in 0..5 {
+                    engine.churn_round(&mut plan);
+                    engine.parity_check().unwrap_or_else(|e| {
+                        panic!(
+                            "{tag}/f{n_fogs}/s{seed} round \
+                             {round}: {e}"
+                        )
+                    });
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn served_outputs_stay_bitwise_identical_under_churn() {
+    let g = generate::rmat(500, 2000, 9, (0.57, 0.19, 0.19, 0.05));
+    let dims = 4usize;
+    let asn = scrambled(g.num_vertices(), 4, 5);
+    let mut engine = TopologyEngine::new(&g, &asn, 4);
+    let mut plan = ChurnPlan::new(&mixed_trace(), 77);
+    for _ in 0..4 {
+        engine.churn_round(&mut plan);
+    }
+    let nv = engine.csr.num_vertices();
+    let features: Vec<f32> = (0..nv * dims)
+        .map(|i| (i as f32).sin() * 0.25 + 1.0)
+        .collect();
+    let rebuilt = engine.csr.to_graph();
+    let (ref_subs, ref_plan) = fograph::graph::subgraph::extract(
+        &rebuilt, &engine.assignment, 4);
+    let got = bsp_aggregate(&engine.subs, &engine.plan,
+                            &engine.assignment, &features, dims);
+    let want = bsp_aggregate(&ref_subs, &ref_plan,
+                             &engine.assignment, &features, dims);
+    assert_eq!(got.len(), want.len());
+    for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(),
+                   "served output row diverges at {i}");
+    }
+}
+
+#[test]
+fn replay_with_same_seed_is_deterministic() {
+    let g = generate::rmat(400, 1600, 21, (0.57, 0.19, 0.19, 0.05));
+    let asn = scrambled(g.num_vertices(), 5, 9);
+    let run = || {
+        let mut engine = TopologyEngine::new(&g, &asn, 5);
+        let mut plan = ChurnPlan::new(&mixed_trace(), 123);
+        for _ in 0..6 {
+            engine.churn_round(&mut plan);
+        }
+        (
+            engine.fingerprints.clone(),
+            engine.assignment.clone(),
+            engine.stats,
+            engine.summary().final_edges,
+        )
+    };
+    assert_eq!(run(), run(), "same seed must replay bit-for-bit");
+}
+
+#[test]
+fn declaration_order_of_specs_is_irrelevant() {
+    let g = generate::sbm(300, 1500, 3, 0.8, 31).0;
+    let asn = scrambled(g.num_vertices(), 3, 2);
+    let fwd = parse_specs(&["add-edge@rate=0.02",
+                            "del-vertex@rate=0.005"]);
+    let rev = parse_specs(&["del-vertex@rate=0.005",
+                            "add-edge@rate=0.02"]);
+    let run = |specs: &[ChurnSpec]| {
+        let mut engine = TopologyEngine::new(&g, &asn, 3);
+        let mut plan = ChurnPlan::new(specs, 55);
+        for _ in 0..4 {
+            engine.churn_round(&mut plan);
+        }
+        engine.fingerprints.clone()
+    };
+    assert_eq!(run(&fwd), run(&rev));
+}
+
+#[test]
+fn heavy_deletion_triggers_compaction_and_parity_survives() {
+    let g = generate::rmat(300, 3000, 13, (0.57, 0.19, 0.19, 0.05));
+    let asn = scrambled(g.num_vertices(), 3, 4);
+    let mut engine = TopologyEngine::new(&g, &asn, 3);
+    let mut plan = ChurnPlan::new(
+        &parse_specs(&["del-edge@rate=0.4", "add-edge@rate=0.1"]),
+        31,
+    );
+    for round in 0..12 {
+        engine.churn_round(&mut plan);
+        engine
+            .parity_check()
+            .unwrap_or_else(|e| panic!("round {round}: {e}"));
+    }
+    assert!(
+        engine.stats.compactions > 0,
+        "a 40%-per-round deletion trace must trip the tombstone \
+         compaction threshold"
+    );
+}
+
+#[test]
+fn single_delta_rounds_preserve_untouched_subs_physically() {
+    let g = generate::rmat(800, 3200, 15, (0.57, 0.19, 0.19, 0.05));
+    let n_fogs = 8usize;
+    let asn = scrambled(g.num_vertices(), n_fogs, 6);
+    let mut engine = TopologyEngine::new(&g, &asn, n_fogs);
+    // floor(rate * live) clamps to one delta per round
+    let mut plan = ChurnPlan::new(
+        &parse_specs(&["del-edge@rate=0.0000001"]),
+        91,
+    );
+    let mut saw_preserved = false;
+    for round in 0..4 {
+        let before: Vec<_> = engine.subs.to_vec();
+        let fp_before = engine.fingerprints.clone();
+        let rep = engine.churn_round(&mut plan);
+        assert!(
+            rep.preserved > 0,
+            "round {round}: one delta dirtied all {n_fogs} fogs"
+        );
+        saw_preserved = true;
+        let touched: Vec<u32> = rep
+            .dirty
+            .iter()
+            .chain(rep.patched.iter())
+            .copied()
+            .collect();
+        for j in 0..n_fogs {
+            if touched.contains(&(j as u32)) {
+                continue;
+            }
+            assert_eq!(
+                engine.subs[j], before[j],
+                "round {round}: preserved fog {j} sub mutated"
+            );
+            assert_eq!(
+                engine.fingerprints[j], fp_before[j],
+                "round {round}: preserved fog {j} fingerprint moved"
+            );
+        }
+        engine
+            .parity_check()
+            .unwrap_or_else(|e| panic!("round {round}: {e}"));
+    }
+    assert!(saw_preserved);
+}

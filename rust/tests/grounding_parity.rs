@@ -116,3 +116,158 @@ fn degenerate_assignments_stay_bit_identical() {
     assert_eq!(plan_s, plan_m);
     assert_eq!(subs_s[0].n_halo(), 0);
 }
+
+// ---- degenerate churn outcomes (incremental topology engine) --------
+//
+// The engine applies deltas in place and partially re-grounds; these
+// corners — a fog whose every owned vertex dies, a vertex revived
+// after removal, an edge deleted then re-added — must all stay
+// bit-identical to a from-scratch extract over the rebuilt topology.
+
+mod churn_degenerate {
+    use fograph::graph::delta::Delta;
+    use fograph::graph::{generate, TopologyEngine};
+
+    fn scrambled(nv: usize, n_fogs: usize) -> Vec<u32> {
+        (0..nv as u64)
+            .map(|v| {
+                let h = v
+                    .wrapping_mul(6364136223846793005)
+                    .wrapping_add(1442695040888963407);
+                ((h >> 33) % n_fogs as u64) as u32
+            })
+            .collect()
+    }
+
+    #[test]
+    fn fog_emptied_by_deletions_stays_coherent() {
+        let g = generate::rmat(240, 960, 5, (0.57, 0.19, 0.19, 0.05));
+        let nv = g.num_vertices();
+        let asn = scrambled(nv, 3);
+        let mut engine = TopologyEngine::new(&g, &asn, 3);
+        // kill every vertex fog 1 owns in a single batch: victims are
+        // all dead before the boundary-refinement pass runs, and dead
+        // vertices never migrate, so fog 1 keeps its (dead) ids
+        let victims: Vec<u32> = (0..nv as u32)
+            .filter(|&v| asn[v as usize] == 1)
+            .collect();
+        assert!(!victims.is_empty());
+        let mut deltas = Vec::new();
+        for &v in &victims {
+            let nbrs = engine.csr.del_vertex(v);
+            deltas.push(Delta::DelVertex { v, nbrs });
+        }
+        engine.integrate(&deltas);
+        engine.parity_check().expect("parity after full drain");
+        assert!(victims.iter().all(|&v| !engine.csr.is_alive(v)));
+        assert!(victims
+            .iter()
+            .all(|&v| engine.assignment[v as usize] == 1));
+        // dead ids stay as degree-0 owned vertices — exactly what a
+        // from-scratch extract sees for isolated vertices
+        let sub = &engine.subs[1];
+        assert!(sub.n_local >= victims.len());
+        for (i, &gv) in sub.vertices[..sub.n_local].iter().enumerate()
+        {
+            if !engine.csr.is_alive(gv) {
+                assert_eq!(sub.global_degree[i], 0,
+                           "dead vertex {gv} kept edges");
+            }
+        }
+        // a later trickle round over the drained topology still holds
+        let u = (0..nv as u32)
+            .find(|&v| engine.csr.live_deg(v) > 0)
+            .expect("survivors keep edges");
+        let w = {
+            let mut buf = Vec::new();
+            engine.csr.for_neighbors(u, |x| buf.push(x));
+            buf[0]
+        };
+        engine.csr.del_edge(u, w);
+        engine.integrate(&[Delta::DelEdge(u, w)]);
+        engine.parity_check().expect("parity after post-drain delta");
+    }
+
+    #[test]
+    fn vertex_readded_after_removal_keeps_owner_and_parity() {
+        let g = generate::rmat(200, 800, 9, (0.57, 0.19, 0.19, 0.05));
+        let asn = scrambled(g.num_vertices(), 4);
+        let mut engine = TopologyEngine::new(&g, &asn, 4);
+        // pick a vertex with >= 2 same-fog neighbors: after revival
+        // its edges are all internal, so the strictly-positive-gain
+        // boundary pass provably leaves it on its home fog
+        let same_fog = |v: u32| -> Vec<u32> {
+            g.neighbors(v as usize)
+                .iter()
+                .copied()
+                .filter(|&u| {
+                    u != v && asn[u as usize] == asn[v as usize]
+                })
+                .collect::<Vec<u32>>()
+        };
+        let v = (0..g.num_vertices() as u32)
+            .find(|&v| same_fog(v).len() >= 2)
+            .expect("rmat has same-fog adjacent pairs");
+        let home = engine.assignment[v as usize];
+        let nbrs = engine.csr.del_vertex(v);
+        engine.integrate(&[Delta::DelVertex { v, nbrs }]);
+        engine.parity_check().expect("parity after removal");
+        // revival returns the smallest dead id — v is the only one
+        let (rv, revived) = engine.csr.add_vertex();
+        assert_eq!((rv, revived), (v, true));
+        // filter against the engine's CURRENT assignment — the
+        // removal round's boundary pass may have migrated neighbors
+        let attach: Vec<u32> = same_fog(v)
+            .into_iter()
+            .filter(|&u| {
+                engine.csr.is_alive(u)
+                    && engine.assignment[u as usize] == home
+            })
+            .take(2)
+            .collect();
+        assert!(!attach.is_empty());
+        for &u in &attach {
+            engine.csr.add_edge(v, u);
+        }
+        engine.integrate(&[Delta::AddVertex {
+            v,
+            revived: true,
+            nbrs: attach,
+        }]);
+        assert_eq!(
+            engine.assignment[v as usize], home,
+            "revival must keep the vertex's previous owner"
+        );
+        engine.parity_check().expect("parity after revival");
+    }
+
+    #[test]
+    fn edge_delete_then_readd_restores_live_structure() {
+        let g = generate::rmat(180, 720, 3, (0.57, 0.19, 0.19, 0.05));
+        let asn = scrambled(g.num_vertices(), 3);
+        let mut engine = TopologyEngine::new(&g, &asn, 3);
+        // a cross-fog edge: deletion and re-add touch two partitions
+        let (u, v) = {
+            let mut found = None;
+            'outer: for u in 0..g.num_vertices() as u32 {
+                for &w in g.neighbors(u as usize) {
+                    if w > u && asn[u as usize] != asn[w as usize] {
+                        found = Some((u, w));
+                        break 'outer;
+                    }
+                }
+            }
+            found.expect("scrambled assignment has cut edges")
+        };
+        engine.csr.del_edge(u, v);
+        engine.integrate(&[Delta::DelEdge(u, v)]);
+        engine.parity_check().expect("parity after delete");
+        engine.csr.add_edge(u, v);
+        engine.integrate(&[Delta::AddEdge(u, v)]);
+        engine.parity_check().expect("parity after re-add");
+        // the live topology is exactly the original again
+        let rebuilt = engine.csr.to_graph();
+        assert_eq!(rebuilt.indptr, g.indptr);
+        assert_eq!(rebuilt.indices, g.indices);
+    }
+}

@@ -24,7 +24,12 @@
 //!   seeded crash is detected + evacuated + reported without wedging
 //!   the run, slow/link faults recover at their `until`, and
 //!   malformed specs / out-of-range ids / bad task deadlines are
-//!   loud errors.
+//!   loud errors;
+//! * the streaming-graph plane: `run_fabric_churn` with no specs is
+//!   bitwise the churn-free path, churn runs are bit-deterministic
+//!   for a fixed seed, the report carries a `churn` summary with
+//!   partial re-grounds, and measured exec / `--fault` combos / a
+//!   disabled scheduler are loud errors.
 
 use std::path::Path;
 
@@ -36,10 +41,12 @@ use fograph::runtime::{Engine, EngineKind};
 use fograph::serving::pipeline::{mode_setup, ServeOpts};
 use fograph::obs::Recorder;
 use fograph::runtime::kernels::DEFAULT_TASK_DEADLINE_S;
+use fograph::graph::ChurnSpec;
 use fograph::traffic::{jain_index, run_fabric, run_fabric_chaos,
-                       run_loadtest, ArrivalKind, ExecMode,
-                       FabricReport, FairPolicy, FaultSpec, Tenant,
-                       TenantInput, TenantSpec, TrafficConfig};
+                       run_fabric_churn, run_loadtest, ArrivalKind,
+                       ExecMode, FabricReport, FairPolicy, FaultSpec,
+                       Tenant, TenantInput, TenantSpec,
+                       TrafficConfig};
 
 fn tiny() -> (Graph, DatasetSpec) {
     let (mut g, _) = generate::sbm(400, 2000, 8, 0.85, 3);
@@ -788,4 +795,163 @@ fn out_of_range_faults_and_deadlines_are_rejected() {
                                  bad_deadline)
             .is_err(), "task deadline {bad_deadline} accepted");
     }
+}
+
+// ----- streaming-graph plane --------------------------------------
+
+/// One-tenant analytic fabric run through the churn entry point.
+fn churn_run(g: &Graph, spec: DatasetSpec, cluster: &Cluster,
+             opts: &ServeOpts, omegas: &[PerfModel],
+             traffic: &TrafficConfig, churn: &[ChurnSpec],
+             eng: &mut Engine)
+             -> Result<FabricReport, fograph::runtime::EngineError> {
+    let input = TenantInput {
+        tenant: Tenant::legacy(traffic, "gcn", "tiny"),
+        g,
+        spec,
+        opts: opts.clone(),
+        omegas: omegas.to_vec(),
+    };
+    run_fabric_churn(cluster, vec![input], traffic, FairPolicy::Drr,
+                     eng, &Recorder::disabled(), &[],
+                     DEFAULT_TASK_DEADLINE_S, churn)
+}
+
+fn churn_specs(texts: &[&str]) -> Vec<ChurnSpec> {
+    texts
+        .iter()
+        .map(|t| ChurnSpec::parse(t).expect("valid churn spec"))
+        .collect()
+}
+
+#[test]
+fn churn_plumbing_with_no_specs_is_bitwise_churn_free() {
+    let (g, spec) = tiny();
+    let (cluster, opts, omegas) = setup(&g);
+    let traffic = TrafficConfig {
+        rps: 100.0,
+        duration_s: 5.0,
+        seed: 0xD0,
+        ..Default::default()
+    };
+    let mut eng = engine();
+    let input = TenantInput {
+        tenant: Tenant::legacy(&traffic, "gcn", "tiny"),
+        g: &g,
+        spec,
+        opts: opts.clone(),
+        omegas: omegas.clone(),
+    };
+    let plain = run_fabric(&cluster, vec![input], &traffic,
+                           FairPolicy::Drr, &mut eng)
+        .unwrap();
+    let churnless = churn_run(&g, spec, &cluster, &opts, &omegas,
+                              &traffic, &[], &mut eng)
+        .unwrap();
+    // the churn plane compiled in but unarmed must not perturb a
+    // single bit of the static-topology timeline or its report
+    assert_eq!(plain.aggregate.latencies,
+               churnless.aggregate.latencies);
+    assert_eq!(plain.aggregate.slo.offered,
+               churnless.aggregate.slo.offered);
+    assert_eq!(plain.aggregate.slo.goodput_rps,
+               churnless.aggregate.slo.goodput_rps);
+    assert_eq!(plain.aggregate.slo.diffusions,
+               churnless.aggregate.slo.diffusions);
+    assert_eq!(plain.aggregate.slo.replans,
+               churnless.aggregate.slo.replans);
+    assert_eq!(plain.aggregate.exec_utilization,
+               churnless.aggregate.exec_utilization);
+    assert!(plain.aggregate.churn.is_none());
+    assert!(churnless.aggregate.churn.is_none());
+}
+
+#[test]
+fn churn_run_reports_partial_regrounds_and_is_deterministic() {
+    let (g, spec) = tiny();
+    let (cluster, opts, omegas) = setup(&g);
+    assert!(cluster.len() >= 2, "churn scenario needs >= 2 fogs");
+    let traffic = TrafficConfig {
+        rps: 90.0,
+        duration_s: 6.0,
+        seed: 0xD1,
+        scheduler_period_s: 1.0,
+        ..Default::default()
+    };
+    let specs = churn_specs(&[
+        "add-edge@rate=0.01",
+        "del-edge@rate=0.008",
+        "add-vertex@rate=0.004,degree=3",
+        "del-vertex@rate=0.002",
+    ]);
+    let mut eng = engine();
+    let a = churn_run(&g, spec, &cluster, &opts, &omegas, &traffic,
+                      &specs, &mut eng)
+        .unwrap();
+    let b = churn_run(&g, spec, &cluster, &opts, &omegas, &traffic,
+                      &specs, &mut eng)
+        .unwrap();
+    // bit-deterministic for a fixed seed: same latency timeline,
+    // same topology trajectory, same invalidation counters
+    assert_eq!(a.aggregate.latencies, b.aggregate.latencies);
+    assert_eq!(a.aggregate.churn, b.aggregate.churn);
+    let c = a.aggregate.churn.expect("churn summary");
+    assert!(c.stats.rounds > 0, "no churn rounds fired: {c:?}");
+    assert!(c.stats.deltas_applied > 0, "{c:?}");
+    assert!(c.final_live_vertices > 0, "{c:?}");
+    // the mutating run still serves traffic
+    assert!(a.aggregate.slo.completed > 0);
+    // declaration order of specs cannot change a bit either
+    let rev: Vec<ChurnSpec> =
+        specs.iter().rev().cloned().collect();
+    let d = churn_run(&g, spec, &cluster, &opts, &omegas, &traffic,
+                      &rev, &mut eng)
+        .unwrap();
+    assert_eq!(a.aggregate.latencies, d.aggregate.latencies);
+    assert_eq!(a.aggregate.churn, d.aggregate.churn);
+}
+
+#[test]
+fn invalid_churn_combinations_are_loud_errors() {
+    let (g, spec) = tiny();
+    let (cluster, opts, omegas) = setup(&g);
+    let specs = churn_specs(&["add-edge@rate=0.01"]);
+    let mut eng = engine();
+    // measured exec pins the topology in the worker pool
+    let measured = TrafficConfig {
+        duration_s: 2.0,
+        exec: ExecMode::Measured,
+        ..Default::default()
+    };
+    assert!(churn_run(&g, spec, &cluster, &opts, &omegas, &measured,
+                      &specs, &mut eng)
+        .is_err());
+    // a disabled scheduler leaves no replan barriers to churn at
+    let no_sched = TrafficConfig {
+        duration_s: 2.0,
+        scheduler_period_s: 0.0,
+        ..Default::default()
+    };
+    assert!(churn_run(&g, spec, &cluster, &opts, &omegas, &no_sched,
+                      &specs, &mut eng)
+        .is_err());
+    // churn + chaos faults is rejected: the evacuation replans
+    // against the static grounding graph
+    let traffic = TrafficConfig {
+        duration_s: 6.0,
+        ..Default::default()
+    };
+    let input = TenantInput {
+        tenant: Tenant::legacy(&traffic, "gcn", "tiny"),
+        g: &g,
+        spec,
+        opts: opts.clone(),
+        omegas: omegas.clone(),
+    };
+    let fault = [FaultSpec::parse("crash@t=2,fog=0").unwrap()];
+    assert!(run_fabric_churn(&cluster, vec![input], &traffic,
+                             FairPolicy::Drr, &mut eng,
+                             &Recorder::disabled(), &fault,
+                             DEFAULT_TASK_DEADLINE_S, &specs)
+        .is_err());
 }
